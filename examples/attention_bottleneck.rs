@@ -1,0 +1,101 @@
+//! Fig 1 — the attention bottleneck, twice over:
+//!
+//! 1. **Measured** on the real engine at tiny scale: prefill latency per
+//!    bucket and decode latency per cache capacity, full vs 75%-sparse
+//!    (paper App. I.3 random-mask methodology), showing the same
+//!    attention-dominates trend;
+//! 2. **Analytic** H200 / Llama-3.1-8B roofline at the paper's 1K–400K
+//!    range, reproducing Fig 1a-c's attention/other shares.
+
+use anyhow::Result;
+use wgkv::admission::PolicyKind;
+use wgkv::costmodel::{AdmissionPoint, CostModel, H200, LLAMA31_8B};
+use wgkv::engine::{Engine, EngineConfig, SessionOptions};
+use wgkv::model::Sampler;
+use wgkv::util::{Args, Json, Rng};
+use wgkv::workload;
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let dir = args.str("artifacts", "artifacts");
+    let mut engine = Engine::load(&dir, EngineConfig::default())?;
+    let mut rows = Vec::new();
+
+    println!("== measured (wg-tiny on CPU PJRT; full vs 75% random sparsity, App. I.3) ==");
+    println!(
+        "{:<8} {:>14} {:>14} {:>9} | {:>12} {:>12} {:>9}",
+        "N", "prefill-full", "prefill-75%", "speedup", "decode-full", "decode-75%", "speedup"
+    );
+    let mut rng = Rng::new(0);
+    for n in [96usize, 448, 1984] {
+        // Build a prompt of roughly n tokens from filler text.
+        let task = workload::gen_kv(&mut rng, 2, 4);
+        let mut prompt = task.prompt.clone();
+        while prompt.len() < n {
+            prompt.insert_str(0, "the of and to in is was for on that with as it at by from. ");
+        }
+        prompt.truncate(n);
+        let toks = engine.tokenizer.encode(&prompt);
+
+        let mut run = |policy: PolicyKind| -> Result<(f64, f64)> {
+            let mut sampler = Sampler::greedy();
+            let out = engine.generate(
+                &toks,
+                24,
+                SessionOptions::policy(policy),
+                &mut sampler,
+            )?;
+            Ok((out.prefill_us, out.decode_us_mean))
+        };
+        let (pf_full, dec_full) = run(PolicyKind::FullCache)?;
+        let (pf_wg, dec_wg) =
+            run(PolicyKind::RandomSparsity { sparsity: 0.75, seed: 1 })?;
+        println!(
+            "{:<8} {:>11.1} ms {:>11.1} ms {:>8.2}x | {:>9.2} ms {:>9.2} ms {:>8.2}x",
+            n + 1,
+            pf_full / 1e3,
+            pf_wg / 1e3,
+            pf_full / pf_wg,
+            dec_full / 1e3,
+            dec_wg / 1e3,
+            dec_full / dec_wg
+        );
+        rows.push(
+            Json::obj()
+                .set("kind", "measured")
+                .set("n", n + 1)
+                .set("prefill_full_us", pf_full)
+                .set("prefill_wg_us", pf_wg)
+                .set("decode_full_us", dec_full)
+                .set("decode_wg_us", dec_wg),
+        );
+    }
+
+    println!("\n== analytic (Llama-3.1-8B on H200, Fig 1a-c) ==");
+    println!(
+        "{:<9} {:>13} {:>13} {:>13}",
+        "N", "prefill-attn%", "decode-kv%", "memory-kv%"
+    );
+    let m = CostModel::new(LLAMA31_8B, H200);
+    let full = AdmissionPoint::full();
+    for n in [1_000usize, 8_000, 32_000, 100_000, 200_000, 400_000] {
+        let pf = m.prefill(n, full).attention_share() * 100.0;
+        let dec = m.decode_step(n, full).attention_share() * 100.0;
+        let mem = m.memory(n, full).attention_share() * 100.0;
+        println!("{:<9} {:>12.1}% {:>12.1}% {:>12.1}%", n, pf, dec, mem);
+        rows.push(
+            Json::obj()
+                .set("kind", "analytic")
+                .set("n", n)
+                .set("prefill_attn_share", pf / 100.0)
+                .set("decode_kv_share", dec / 100.0)
+                .set("memory_kv_share", mem / 100.0),
+        );
+    }
+    println!("\nAttention's share grows toward 1 with N in all three panels — Fig 1's message.");
+
+    let path = std::path::Path::new(&dir).join("fig01_bottleneck.json");
+    std::fs::write(&path, Json::obj().set("figure", 1).set("rows", Json::Arr(rows)).pretty())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

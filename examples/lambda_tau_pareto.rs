@@ -1,0 +1,69 @@
+//! Fig 11 / Fig 12 — the λ/τ Pareto frontier and the Local-Cache ablation,
+//! rendered from the training sweep (`artifacts/sweep.json`, produced by
+//! `python -m compile.train --sweep` during `make artifacts`).
+//!
+//! Fig 11: distillation loss vs normalized KV cache size as λ sweeps.
+//! Fig 12: the same objective retrained with W_local = 1 ("w/o Local
+//! Cache") degrades sharply at small cache sizes — the transient-utility
+//! hypothesis (paper §2.3, App. G).
+
+use anyhow::{Context, Result};
+use wgkv::util::{Args, Json};
+
+fn rows(j: &Json, key: &str) -> Result<Vec<(f64, f64, f64)>> {
+    Ok(j.req(key)?
+        .as_arr()
+        .context("sweep entries must be an array")?
+        .iter()
+        .map(|e| {
+            (
+                e.get("lam").and_then(Json::as_f64).unwrap_or(0.0),
+                e.get("cache_frac").and_then(Json::as_f64).unwrap_or(0.0),
+                e.get("distill").and_then(Json::as_f64).unwrap_or(0.0),
+            )
+        })
+        .collect())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let dir = args.str("artifacts", "artifacts");
+    let path = std::path::Path::new(&dir).join("sweep.json");
+    let j = Json::parse(&std::fs::read_to_string(&path).with_context(|| {
+        format!("{} missing — run `make artifacts` (train.py --sweep)", path.display())
+    })?)?;
+
+    let with_local = rows(&j, "lambdas")?;
+    let no_local = rows(&j, "no_local")?;
+
+    println!("Fig 11 — λ frontier (held-out distill loss vs cache size, W_local default):");
+    println!("{:>8} {:>10} {:>12}", "λ", "cache", "distill");
+    for (lam, frac, d) in &with_local {
+        println!("{:>8} {:>9.1}% {:>12.5}", lam, frac * 100.0, d);
+    }
+
+    println!("\nFig 12 — ablation: W_local = 1 (no Local Cache):");
+    println!("{:>8} {:>10} {:>12} {:>14}", "λ", "cache", "distill", "vs with-local");
+    for ((lam, frac, d), (_, _, d0)) in no_local.iter().zip(&with_local) {
+        println!(
+            "{:>8} {:>9.1}% {:>12.5} {:>13.1}x",
+            lam,
+            frac * 100.0,
+            d,
+            if *d0 > 0.0 { d / d0 } else { f64::NAN }
+        );
+    }
+
+    // The headline check: at comparable (or smaller) cache sizes the
+    // no-local variant must lose more fidelity.
+    let worst_ratio = no_local
+        .iter()
+        .zip(&with_local)
+        .map(|((_, _, d), (_, _, d0))| d / d0.max(1e-12))
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nmax distill-loss ratio (no-local / with-local) across λ: {:.1}x — the grace period matters.",
+        worst_ratio
+    );
+    Ok(())
+}

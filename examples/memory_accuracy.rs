@@ -1,0 +1,107 @@
+//! Fig 7 / Fig 14 — the memory–accuracy trade-off on the HELMET-analogue
+//! suite: WG-KV (λ sweep over trained gate variants) vs the two static
+//! admission baselines, Local Attention (window sweep) and DuoAttention
+//! (retrieval-head-ratio sweep).
+//!
+//! Prints one row per operating point (policy, normalized cache size, mean
+//! score overall + per category) and writes
+//! `artifacts/fig07_memory_accuracy.json`.
+
+use anyhow::Result;
+use wgkv::admission::PolicyKind;
+use wgkv::engine::{Engine, EngineConfig, SessionOptions};
+use wgkv::util::{Args, Json};
+use wgkv::workload::{self, Category};
+
+const CATS: [Category; 5] = [
+    Category::Rag,
+    Category::Rerank,
+    Category::LongQa,
+    Category::Summ,
+    Category::Icl,
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let dir = args.str("artifacts", "artifacts");
+    let instances = args.usize("instances", 6)?;
+    let seed = args.u64("seed", 0)?;
+    let mut engine = Engine::load(&dir, EngineConfig::default())?;
+    let suite = workload::helmet_suite();
+
+    // Operating points: (label, gate-variant file, policy).
+    let mut points: Vec<(String, Option<String>, PolicyKind)> = Vec::new();
+    for lam in ["0.02", "0.08", "0.32", "1.28", "5.12"] {
+        let file = format!("params_lam{lam}.bin");
+        if std::path::Path::new(&dir).join(&file).exists() {
+            points.push((format!("wg-kv λ={lam}"), Some(file), PolicyKind::WriteGated));
+        }
+    }
+    if points.is_empty() {
+        // Fall back to the default-λ params with a τ sweep.
+        for tau in [0.02f32, 0.1, 0.5, 0.9] {
+            points.push((format!("wg-kv τ={tau}"), None, PolicyKind::WriteGatedTau(tau)));
+        }
+    }
+    for recent in [0usize, 16, 64, 192] {
+        points.push((
+            format!("local r={recent}"),
+            None,
+            PolicyKind::LocalOnly { sink: 4, recent },
+        ));
+    }
+    for ratio in [0.25f32, 0.5, 0.75, 1.0] {
+        points.push((
+            format!("duo ρ={ratio}"),
+            None,
+            PolicyKind::duo_with_ratio(engine.dims(), ratio, 4),
+        ));
+    }
+    points.push(("full".into(), None, PolicyKind::FullCache));
+
+    println!(
+        "{:<16} {:>7} {:>7} | {:>6} {:>6} {:>6} {:>6} {:>6}",
+        "policy", "cache%", "score", "rag", "rerank", "longqa", "summ", "icl"
+    );
+    let mut rows = Vec::new();
+    let mut current_variant: Option<String> = None;
+    for (label, variant, policy) in points {
+        if variant != current_variant {
+            match &variant {
+                Some(f) => engine.load_variant(f)?,
+                None => engine.load_variant("params.bin")?,
+            }
+            current_variant = variant.clone();
+        }
+        let opts = SessionOptions::policy(policy);
+        let results = workload::eval_suite(&mut engine, &opts, seed, instances, &suite)?;
+        let frac = workload::mean_cache_fraction(&results);
+        let score = workload::mean_score(&results, None);
+        let per_cat: Vec<f64> = CATS
+            .iter()
+            .map(|c| workload::mean_score(&results, Some(*c)))
+            .collect();
+        println!(
+            "{:<16} {:>6.1}% {:>7.3} | {:>6.3} {:>6.3} {:>6.3} {:>6.3} {:>6.3}",
+            label, frac * 100.0, score, per_cat[0], per_cat[1], per_cat[2], per_cat[3], per_cat[4]
+        );
+        let mut row = Json::obj()
+            .set("policy", label.as_str())
+            .set("cache_fraction", frac)
+            .set("score", score);
+        for (c, s) in CATS.iter().zip(&per_cat) {
+            row = row.set(c.name(), *s);
+        }
+        rows.push(row);
+    }
+
+    let out = Json::obj()
+        .set("figure", "7/14")
+        .set("instances", instances)
+        .set("seed", seed as i64)
+        .set("rows", Json::Arr(rows));
+    let path = std::path::Path::new(&dir).join("fig07_memory_accuracy.json");
+    std::fs::write(&path, out.pretty())?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,218 @@
+"""AOT export: lower the write-gated model to HLO text artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator loads the
+resulting ``artifacts/*.hlo.txt`` through PJRT and is self-contained from
+then on.
+
+Parameters are *inputs* to the lowered computations (leading arguments, in
+the canonical sorted-name order recorded in manifest.json), not baked
+constants: ``XlaComputation.as_hlo_text()`` elides large constants
+(``{...}``), and passing params lets the Rust side keep them resident as
+PJRT device buffers and reuse one compiled executable across every
+lambda-sweep gate variant (artifacts/params_lam*.bin). Weights ship in
+``params.bin`` (see train.save_params_bin; reader: rust/src/runtime/params.rs).
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts:
+  prefill_{N}.hlo.txt   N in ExportConfig.prefill_buckets
+      (params..., tokens[N] i32, gate_override[L,Hkv,N] f32, flag[] i32)
+      -> (logits[N,V], K[L,Hkv,N,dh], V[L,Hkv,N,dh], G[L,Hkv,N])
+  decode_{C}.hlo.txt    C in ExportConfig.decode_capacities
+      (params..., token[] i32, pos[] i32, kc[L,Hkv,C,dh], vc[L,Hkv,C,dh],
+       mask[L,Hkv,C])
+      -> (logits[V], k_new[L,Hkv,dh], v_new[L,Hkv,dh], g_new[L,Hkv])
+  manifest.json         model config, buckets, param order, file names
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .configs import ExportConfig, ModelConfig, get_config
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_spec(params):
+    """Canonical (name, shape) list — the executable's leading input order."""
+    flat = train.flatten_params(params)
+    return [(name, tuple(flat[name].shape)) for name in sorted(flat)]
+
+
+def _param_shape_structs(spec):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+
+
+def lower_prefill(params, cfg: ModelConfig, n: int, use_pallas: bool = True) -> str:
+    spec = param_spec(params)
+    names = [nm for nm, _ in spec]
+
+    def f(*args):
+        p = train.unflatten_params(dict(zip(names, args[: len(names)])), cfg)
+        tokens, gate_override, flag = args[len(names):]
+        return model.prefill(p, tokens, gate_override, flag, cfg, use_pallas=use_pallas)
+
+    lowered = jax.jit(f).lower(
+        *_param_shape_structs(spec),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, n), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_decode(params, cfg: ModelConfig, c: int, use_pallas: bool = True) -> str:
+    spec = param_spec(params)
+    names = [nm for nm, _ in spec]
+
+    def f(*args):
+        p = train.unflatten_params(dict(zip(names, args[: len(names)])), cfg)
+        token, pos, kc, vc, mask = args[len(names):]
+        return model.decode_step(p, token, pos, kc, vc, mask, cfg, use_pallas=use_pallas)
+
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, c, cfg.d_head), jnp.float32)
+    lowered = jax.jit(f).lower(
+        *_param_shape_structs(spec),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        kv, kv,
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, c), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_decode_sel(params, cfg: ModelConfig, c: int, use_pallas: bool = True) -> str:
+    spec = param_spec(params)
+    names = [nm for nm, _ in spec]
+    n_pages = (c - cfg.w_local) // cfg.page_size
+
+    def f(*args):
+        p = train.unflatten_params(dict(zip(names, args[: len(names)])), cfg)
+        token, pos, kc, vc, mask, pmin, pmax, budget = args[len(names):]
+        return model.decode_step_sel(p, token, pos, kc, vc, mask, pmin, pmax,
+                                     budget, cfg, use_pallas=use_pallas)
+
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, c, cfg.d_head), jnp.float32)
+    pm = jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, n_pages, cfg.d_head), jnp.float32)
+    lowered = jax.jit(f).lower(
+        *_param_shape_structs(spec),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        kv, kv,
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, c), jnp.float32),
+        pm, pm,
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def export_all(params, cfg: ModelConfig, ecfg: ExportConfig, out_dir: str,
+               use_pallas: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    files = {}
+    for n in ecfg.prefill_buckets:
+        name = f"prefill_{n}.hlo.txt"
+        t0 = time.time()
+        text = lower_prefill(params, cfg, n, use_pallas)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        files[f"prefill_{n}"] = name
+        print(f"  {name}: {len(text)/1e3:.0f} KB in {time.time()-t0:.1f}s")
+    for c in ecfg.decode_capacities:
+        name = f"decode_{c}.hlo.txt"
+        t0 = time.time()
+        text = lower_decode(params, cfg, c, use_pallas)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        files[f"decode_{c}"] = name
+        print(f"  {name}: {len(text)/1e3:.0f} KB in {time.time()-t0:.1f}s")
+    for c in ecfg.decode_capacities:
+        if (c - cfg.w_local) % cfg.page_size != 0 or c <= cfg.w_local:
+            continue
+        name = f"decode_sel_{c}.hlo.txt"
+        t0 = time.time()
+        text = lower_decode_sel(params, cfg, c, use_pallas)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        files[f"decode_sel_{c}"] = name
+        print(f"  {name}: {len(text)/1e3:.0f} KB in {time.time()-t0:.1f}s")
+    return files
+
+
+def params_digest(params) -> str:
+    h = hashlib.sha256()
+    for k, v in sorted(train.flatten_params(params).items()):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="wg-tiny")
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--params", default=None,
+                    help="params .npz (default: <out>/params.npz; trains if absent)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead of the "
+                         "Pallas kernels (debug / perf comparison)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    os.makedirs(args.out, exist_ok=True)
+    params_path = args.params or os.path.join(args.out, "params.npz")
+    if not os.path.exists(params_path):
+        print(f"no trained params at {params_path}; running training first")
+        import subprocess, sys
+        subprocess.run(
+            [sys.executable, "-m", "compile.train", "--model", args.model,
+             "--out", args.out, "--sweep"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            check=True,
+        )
+    params = train.load_params(params_path, cfg)
+
+    ecfg = ExportConfig()
+    print(f"exporting {cfg.name} (pallas={not args.no_pallas}) -> {args.out}")
+    files = export_all(params, cfg, ecfg, args.out, use_pallas=not args.no_pallas)
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "prefill_buckets": list(ecfg.prefill_buckets),
+        "decode_capacities": list(ecfg.decode_capacities),
+        "param_order": [
+            {"name": nm, "shape": list(s)} for nm, s in param_spec(params)
+        ],
+        "files": files,
+        "params_sha": params_digest(params),
+        "pallas": not args.no_pallas,
+        "format": "hlo-text/return-tuple/params-as-inputs",
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

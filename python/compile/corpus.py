@@ -1,0 +1,188 @@
+"""Deterministic synthetic corpus for training the tiny write-gated LM.
+
+The paper trains the gate on FineWeb-Edu (+ Nemotron-Math for reasoning
+models). Neither is available here, so we build a generator whose sequences
+have the property the gate learns to exploit (paper §2.3): a small set of
+tokens (keys, needles, markers, givens) carries high *future* utility while
+the bulk (filler prose) does not. Five task families mirror the five HELMET
+categories used in the evaluation; the byte-level formats are mirrored
+exactly by the Rust workload generator (rust/src/workload/) so the served
+model sees the same distribution it was trained on.
+
+Task grammars (all ASCII, newline-separated):
+
+  kv        "doc:\n k<2d> = <3 letters>\n ... q: k<2d>\n a: <3 letters>.\n"
+  needle    filler + "the secret code is <4 digits>." + filler +
+            "q: secret code\n a: <4 digits>.\n"
+  list      "items: w1, w2, ...\n" + filler + "recall: w1, w2, ... .\n"
+  icl       "x: <3 letters> -> L<d>\n" shots, then a repeated query shot
+  reason    "given a=<d> b=<d>.\n t1 = a+b = <v>\n t2 = t1+a = <v> ...\n
+             answer: <v>.\n"  (values mod 100, two digits)
+
+Everything is seeded: corpus generation is reproducible bit-for-bit.
+"""
+
+import numpy as np
+
+from .configs import ModelConfig
+
+WORDS = (
+    "the of and to in is was for on that with as it at by from this be "
+    "are or an have not they which one you were her all she there would "
+    "their we him been has when who will more no if out so said what up "
+    "its about into than them can only other new some could time these "
+    "two may then do first any my now such like our over man me even "
+    "most made after also did many before must through years where much "
+    "way well down should because each just those people how too little "
+    "state good very make world still own see men work long get here "
+    "between both life being under never day same another know while "
+    "last might us great old year off come since against go came right "
+    "used take three"
+).split()
+
+
+def encode(text: str) -> np.ndarray:
+    """Byte-level tokenization (tokens 0..255; specials 256+ added elsewhere)."""
+    return np.frombuffer(text.encode("utf-8", errors="replace"), dtype=np.uint8).astype(np.int32)
+
+
+def decode(tokens) -> str:
+    return bytes(int(t) for t in tokens if int(t) < 256).decode("utf-8", errors="replace")
+
+
+def _filler(rng: np.random.Generator, n_words: int) -> str:
+    return " ".join(rng.choice(WORDS, size=n_words)) + ". "
+
+
+def _letters(rng: np.random.Generator, n: int) -> str:
+    return "".join(chr(ord("a") + int(c)) for c in rng.integers(0, 26, size=n))
+
+
+def gen_kv(rng: np.random.Generator, n_pairs: int = 8, fill: int = 6) -> str:
+    keys = rng.choice(100, size=n_pairs, replace=False)
+    vals = [_letters(rng, 3) for _ in range(n_pairs)]
+    doc = "doc:\n" + "".join(
+        f"k{k:02d} = {v}\n{_filler(rng, fill)}\n" for k, v in zip(keys, vals)
+    )
+    qi = int(rng.integers(0, n_pairs))
+    return doc + f"q: k{keys[qi]:02d}\na: {vals[qi]}.\n"
+
+
+def gen_needle(rng: np.random.Generator, fill: int = 30) -> str:
+    code = f"{int(rng.integers(0, 10000)):04d}"
+    pre = _filler(rng, int(rng.integers(fill // 2, fill)))
+    post = _filler(rng, int(rng.integers(fill // 2, fill)))
+    return f"{pre}the secret code is {code}. {post}\nq: secret code\na: {code}.\n"
+
+
+def gen_list(rng: np.random.Generator, n_items: int = 6, fill: int = 20) -> str:
+    items = list(rng.choice(WORDS, size=n_items, replace=False))
+    return (
+        "items: " + ", ".join(items) + ".\n"
+        + _filler(rng, fill)
+        + "\nrecall: " + ", ".join(items) + ".\n"
+    )
+
+
+def gen_icl(rng: np.random.Generator, n_shots: int = 8, n_classes: int = 4) -> str:
+    pats = [_letters(rng, 3) for _ in range(n_classes)]
+    labels = [f"L{i}" for i in range(n_classes)]
+    shots = []
+    for _ in range(n_shots):
+        ci = int(rng.integers(0, n_classes))
+        shots.append(f"x: {pats[ci]} -> {labels[ci]}\n")
+    ci = int(rng.integers(0, n_classes))
+    shots.append(f"x: {pats[ci]} -> {labels[ci]}\n")
+    return "".join(shots)
+
+
+def gen_reason(rng: np.random.Generator, n_steps: int = 0) -> str:
+    """Chain-style reasoning trace. Step count is randomized (4..12) during
+    training so the model generalizes to the longer chains the AIME-like
+    eviction study (Fig 10/16) generates at evaluation time."""
+    if n_steps <= 0:
+        n_steps = int(rng.integers(4, 13))
+    a, b = int(rng.integers(1, 10)), int(rng.integers(1, 10))
+    text = f"given a={a} b={b}.\n"
+    prev = (a + b) % 100
+    text += f"t1 = a+b = {prev:02d}\n"
+    for i in range(2, n_steps + 1):
+        op = ["a", "b"][int(rng.integers(0, 2))]
+        val = {"a": a, "b": b}[op]
+        prev = (prev + val) % 100
+        text += f"t{i} = t{i-1}+{op} = {prev:02d}\n"
+    return text + f"answer: {prev:02d}.\n"
+
+
+GENERATORS = {
+    "kv": gen_kv,
+    "needle": gen_needle,
+    "list": gen_list,
+    "icl": gen_icl,
+    "reason": gen_reason,
+}
+
+# Task mix: retrieval-style tasks dominate so the tiny model reliably learns
+# induction/copy behaviour within the training budget.
+MIX = [("kv", 0.3), ("needle", 0.2), ("list", 0.2), ("icl", 0.15), ("reason", 0.15)]
+
+
+def sample_document(rng: np.random.Generator) -> str:
+    r = float(rng.random())
+    acc = 0.0
+    for name, p in MIX:
+        acc += p
+        if r < acc:
+            return GENERATORS[name](rng)
+    return GENERATORS[MIX[-1][0]](rng)
+
+
+def token_stream(seed: int, cfg: ModelConfig):
+    """Infinite stream of tokens: BOS doc EOS BOS doc EOS ..."""
+    rng = np.random.default_rng(seed)
+    while True:
+        doc = sample_document(rng)
+        yield np.concatenate(
+            [[cfg.BOS], encode(doc), [cfg.EOS]]
+        ).astype(np.int32)
+
+
+def batches(seed: int, cfg: ModelConfig, batch: int, seq: int,
+            doc_aligned: bool = True):
+    """Infinite stream of [batch, seq+1] token blocks for next-token training.
+
+    With ``doc_aligned=True`` (default) each row packs *whole* documents and
+    pads the remainder — a document is never split across rows, so
+    retrieval-style tasks (kv, needle) always see their key and query in the
+    same context. This matters: the retrieval grammars produce docs of up to
+    ~370 tokens, and naive flat packing at seq<=256 truncates most of them,
+    which prevents the base LM from ever learning long-range copy behaviour.
+    Documents longer than the row are truncated (rare by construction).
+    """
+    stream = token_stream(seed, cfg)
+    if not doc_aligned:
+        buf = np.empty((0,), np.int32)
+        need = batch * (seq + 1)
+        while True:
+            while buf.size < need:
+                buf = np.concatenate([buf, next(stream)])
+            block, buf = buf[:need], buf[need:]
+            yield block.reshape(batch, seq + 1)
+    carry = None
+    while True:
+        rows = np.full((batch, seq + 1), cfg.PAD, np.int32)
+        for b in range(batch):
+            pos = 0
+            while pos < seq + 1:
+                doc = carry if carry is not None else next(stream)
+                carry = None
+                if pos == 0 and len(doc) > seq + 1:
+                    rows[b] = doc[: seq + 1]
+                    pos = seq + 1
+                    break
+                if pos + len(doc) > seq + 1:
+                    carry = doc  # starts the next row
+                    break
+                rows[b, pos : pos + len(doc)] = doc
+                pos += len(doc)
+        yield rows

@@ -1,0 +1,57 @@
+"""Pallas kernel: single-token decode attention over a slotted ragged cache.
+
+This is the paper's decode path (§4.3). Rust maintains the dual Local/Global
+cache as a capacity-C slot buffer per (layer, kv-head) plus a validity mask;
+per-head raggedness is expressed through the mask, mirroring how the paper
+folds the head dimension into the batch dimension to reuse vLLM's
+variable-length PagedAttention kernel (Appendix B). Admission shrinks the
+*capacity* the engine has to allocate and stream — that is the memory and
+bandwidth win — while the mask handles intra-capacity raggedness.
+
+Grid: one program per query head. The cached keys are stored post-RoPE, so
+no position input is needed. The kernel is a masked softmax-weighted sum —
+on TPU a [C, dh] VMEM block with an MXU dot per head; interpret=True here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, m_ref, o_ref):
+    c, dh = k_ref.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q = q_ref[...]  # [dh]
+    s = (k_ref[...] @ q) * scale  # [C]
+    s = jnp.where(m_ref[...] > 0.5, s, NEG_INF)
+    m = jnp.max(s)
+    p = jnp.exp(s - m)
+    o_ref[...] = (p @ v_ref[...]) / jnp.maximum(jnp.sum(p), 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attn(q, k, v, slot_mask, interpret: bool = True):
+    """Masked decode attention. Shapes as in ref.decode_attn_ref.
+
+    q: [Hq, dh]; k, v: [Hkv, C, dh]; slot_mask: [Hkv, C] (1.0 = valid slot).
+    """
+    hq, dh = q.shape
+    hkv, c, _ = k.shape
+    group = hq // hkv
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=(hq,),
+        in_specs=[
+            pl.BlockSpec((None, dh), lambda h: (h, 0)),
+            pl.BlockSpec((None, c, dh), lambda h, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((None, c, dh), lambda h, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((None, c), lambda h, g=group: (h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, dh), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, slot_mask)

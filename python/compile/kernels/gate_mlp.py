@@ -1,0 +1,49 @@
+"""Pallas kernel: fused per-(layer, kv-head) Write-Gate MLP (paper §3.2).
+
+g = sigmoid(W2 . GELU(W1 . [RMSNorm(k_pre); RMSNorm(k_rope)] + b1) + b2)
+
+Grid is one program per KV head; each program normalizes, projects, and
+squashes all N keys of its head in one fused pass. On TPU this keeps the
+whole [N, 2*dh] feature block and both weight matrices resident in VMEM
+(N<=2048, dh<=64, gh<=32 -> < 1.1 MB), and the two matmuls are MXU-shaped.
+On this testbed it runs under interpret=True (see DESIGN.md §4).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm(x, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+
+
+def _gate_mlp_kernel(kpre_ref, krope_ref, w1_ref, b1_ref, w2_ref, b2_ref, g_ref):
+    x = jnp.concatenate([_rmsnorm(kpre_ref[...]), _rmsnorm(krope_ref[...])], axis=-1)
+    h = jax.nn.gelu(x @ w1_ref[...] + b1_ref[...][None, :])
+    out = h @ w2_ref[...] + b2_ref[...][None, :]
+    g_ref[...] = jax.nn.sigmoid(out[:, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gate_mlp(k_pre, k_rope, w1, b1, w2, b2, interpret: bool = True):
+    """Compute admission gates for all heads. Shapes as in ref.gate_mlp_ref."""
+    hkv, n, dh = k_pre.shape
+    gh = w1.shape[-1]
+    return pl.pallas_call(
+        _gate_mlp_kernel,
+        grid=(hkv,),
+        in_specs=[
+            pl.BlockSpec((None, n, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, n, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, 2 * dh, gh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, gh), lambda h: (h, 0)),
+            pl.BlockSpec((None, gh, 1), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, 1), lambda h: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, n), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((hkv, n), k_pre.dtype),
+        interpret=interpret,
+    )(k_pre, k_rope, w1, b1, w2, b2)

@@ -1,0 +1,105 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its oracle to float32 tolerance (pytest + hypothesis sweeps in
+python/tests/). They are also used directly by the soft (training-time)
+write-gated attention, which is differentiable and never exported.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+GATE_EPS = 1e-6
+
+
+def rmsnorm(x, eps: float = 1e-6):
+    """Weightless RMSNorm used to normalize gate-MLP input features."""
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+
+
+def gate_mlp_ref(k_pre, k_rope, w1, b1, w2, b2):
+    """Write-Gate MLP (paper eq. in §3.2), vectorized over heads.
+
+    k_pre, k_rope: [H, N, dh] pre-/post-RoPE keys.
+    w1: [H, 2*dh, gh], b1: [H, gh], w2: [H, gh, 1], b2: [H, 1].
+    Returns gates g in (0, 1), shape [H, N].
+    """
+    x = jnp.concatenate([rmsnorm(k_pre), rmsnorm(k_rope)], axis=-1)  # [H,N,2dh]
+    h = jax.nn.gelu(jnp.einsum("hnf,hfg->hng", x, w1) + b1[:, None, :])
+    out = jnp.einsum("hng,hgo->hno", h, w2) + b2[:, None, :]
+    return jax.nn.sigmoid(out[..., 0])
+
+
+def vertical_slash_mask(n: int, gates, w_local: int, tau: float):
+    """Hard inference-time mask M_ij (paper §4.2).
+
+    M_ij = (1[i-j < w_local] OR 1[g_j >= tau]) AND 1[i >= j].
+    gates: [H, N] -> mask [H, N, N] (bool).
+    """
+    idx = jnp.arange(n)
+    causal = idx[:, None] >= idx[None, :]
+    local = (idx[:, None] - idx[None, :]) < w_local
+    admitted = gates[:, None, :] >= tau  # [H, 1, N]
+    return (local[None] | admitted) & causal[None]
+
+
+def wg_attention_ref(q, k, v, gates, w_local: int, tau: float, scale=None):
+    """Hard vertical-slash masked attention (prefill oracle).
+
+    q: [Hq, N, dh]; k, v: [Hkv, N, dh]; gates: [Hkv, N]. GQA: query head h
+    reads kv head h // (Hq // Hkv). Returns [Hq, N, dh].
+    """
+    hq, n, dh = q.shape
+    hkv = k.shape[0]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(q.dtype)
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    gq = jnp.repeat(gates, group, axis=0)
+    scores = jnp.einsum("hid,hjd->hij", q, kq) * scale
+    mask = vertical_slash_mask(n, gq, w_local, tau)
+    scores = jnp.where(mask, scores, NEG_INF)
+    return jnp.einsum("hij,hjd->hid", jax.nn.softmax(scores, axis=-1), vq)
+
+
+def soft_wg_attention_ref(q, k, v, gates, w_local: int, scale=None):
+    """Soft (training-time) write-gated attention, paper §3.2.
+
+    Multiplicative mask m_ij = 1 inside the local window, g_j outside,
+    realized as a log-space bias so it is differentiable in the gates.
+    """
+    hq, n, dh = q.shape
+    hkv = k.shape[0]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(q.dtype)
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    gq = jnp.repeat(gates, group, axis=0)
+    idx = jnp.arange(n)
+    causal = idx[:, None] >= idx[None, :]
+    local = (idx[:, None] - idx[None, :]) < w_local
+    m = jnp.where(local[None], 1.0, gq[:, None, :])  # [Hq,N,N]
+    bias = jnp.log(m + GATE_EPS)
+    scores = jnp.einsum("hid,hjd->hij", q, kq) * scale + bias
+    scores = jnp.where(causal[None], scores, NEG_INF)
+    return jnp.einsum("hij,hjd->hid", jax.nn.softmax(scores, axis=-1), vq)
+
+
+def decode_attn_ref(q, k, v, slot_mask, scale=None):
+    """Single-token decode attention over a slotted ragged cache (oracle).
+
+    q: [Hq, dh]; k, v: [Hkv, C, dh]; slot_mask: [Hkv, C] (1.0 = valid).
+    Per-head raggedness is expressed through the mask; admission shrinks C
+    itself on the Rust side. Returns [Hq, dh].
+    """
+    hq, dh = q.shape
+    hkv, c, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(q.dtype)
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    mq = jnp.repeat(slot_mask, group, axis=0)
+    scores = jnp.einsum("hd,hcd->hc", q, kq) * scale
+    scores = jnp.where(mq > 0.5, scores, NEG_INF)
+    return jnp.einsum("hc,hcd->hd", jax.nn.softmax(scores, axis=-1), vq)

@@ -1,0 +1,92 @@
+"""Pallas kernel: blockwise write-gated (vertical-slash) prefill attention.
+
+This is the paper's prefill hot spot (§4.2): every query attends to (a) its
+local "slash" band of width w_local and (b) the "vertical" stripes of tokens
+whose admission gate g_j >= tau. We implement it as a FlashAttention-style
+online-softmax kernel:
+
+  * grid: one program per query head (GQA mapping resolved in the BlockSpec
+    index_map: query head h reads KV head h // group);
+  * inside the program, a fori_loop walks key blocks of size BK, keeping the
+    running (max, sum, acc) carry — the [N, N] score matrix is never
+    materialized;
+  * the vertical-slash mask is applied per key block from the gate vector.
+
+TPU adaptation (DESIGN.md §4): the CUDA original uses MInference's
+sparse_attn_func with threadblock-level block skipping. Here each key-block
+contributes through a jnp.where mask; a block whose mask is entirely false
+contributes exp(-inf)=0 to the carry, which XLA's fusion reduces to cheap
+select+exp on a constant block. On a real TPU the same structure becomes a
+VMEM-resident double-buffered pipeline with BK=128 MXU tiles; under
+interpret=True we keep BK=128 but validate numerics only.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _wg_attn_kernel(q_ref, k_ref, v_ref, g_ref, o_ref, *, w_local, tau, bk):
+    n, dh = q_ref.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q = q_ref[...] * scale  # [N, dh]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (n, bk), 0)  # query index per row
+
+    def body(blk, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(k_ref[...], (blk * bk, 0), (bk, dh))
+        v_blk = jax.lax.dynamic_slice(v_ref[...], (blk * bk, 0), (bk, dh))
+        g_blk = jax.lax.dynamic_slice(g_ref[...], (blk * bk,), (bk,))
+        kj = blk * bk + jax.lax.broadcasted_iota(jnp.int32, (n, bk), 1)
+        causal = qi >= kj
+        local = (qi - kj) < w_local
+        admitted = (g_blk >= tau)[None, :]
+        mask = causal & (local | admitted)
+        s = jnp.where(mask, q @ k_blk.T, NEG_INF)  # [N, BK]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((n,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n,), jnp.float32)
+    acc0 = jnp.zeros((n, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n // bk, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("w_local", "tau", "block_k", "interpret")
+)
+def wg_attention(
+    q, k, v, gates, w_local: int, tau: float, block_k: int = 128, interpret: bool = True
+):
+    """Vertical-slash prefill attention. Shapes as in ref.wg_attention_ref.
+
+    q: [Hq, N, dh] (post-RoPE), k/v: [Hkv, N, dh], gates: [Hkv, N].
+    """
+    hq, n, dh = q.shape
+    hkv = k.shape[0]
+    group = hq // hkv
+    bk = min(block_k, n)
+    assert n % bk == 0, f"sequence length {n} must be a multiple of block_k {bk}"
+    kernel = functools.partial(_wg_attn_kernel, w_local=w_local, tau=tau, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(hq,),
+        in_specs=[
+            pl.BlockSpec((None, n, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, n, dh), lambda h, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((None, n, dh), lambda h, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((None, n), lambda h, g=group: (h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, n, dh), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, n, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, gates)

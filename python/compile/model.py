@@ -1,0 +1,374 @@
+"""L2: the write-gated GQA transformer (JAX, build-time only).
+
+Three entry points, all lowered AOT by aot.py and never run at request time:
+
+  * ``prefill``      — hard vertical-slash inference forward over a length-N
+    bucket; returns logits + per-layer K/V/gates for cache population. Takes
+    a ``gate_override`` input so the Rust coordinator can drive Full / Local
+    / DuoAttention / random-sparsity baselines (paper App. E, I.3) through
+    the *same* executable.
+  * ``decode_step``   — one autoregressive step against fixed-capacity
+    slotted caches (the ragged dual cache lives on the Rust side).
+  * ``forward_hidden``— soft write-gated forward used only by train.py for
+    the distillation objective (differentiable in the gates).
+
+The attention/gate hot spots call the Pallas kernels in kernels/ so they
+lower into the same HLO artifact (interpret=True on this CPU testbed).
+"""
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.decode_attn import decode_attn
+from .kernels.gate_mlp import gate_mlp
+from .kernels.wg_attention import wg_attention
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Initialize backbone + Write-Gate parameters (scaled normal init)."""
+
+    def dense(key, fan_in, *shape):
+        return jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    d, dh, hq, hkv = cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads
+    params: Params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, d), jnp.float32) * 0.02,
+        "unembed": dense(keys[1], d, d, cfg.vocab_size),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + li], 12)
+        layer = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense(ks[0], d, d, hq * dh),
+            "wk": dense(ks[1], d, d, hkv * dh),
+            "wv": dense(ks[2], d, d, hkv * dh),
+            "wo": dense(ks[3], hq * dh, hq * dh, d),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w_gate": dense(ks[4], d, d, cfg.d_ff),
+            "w_up": dense(ks[5], d, d, cfg.d_ff),
+            "w_down": dense(ks[6], cfg.d_ff, cfg.d_ff, d),
+            # Write-Gate MLP per KV head. b2 initialized positive so gates
+            # start near "admit everything" (sigmoid(1) ~ 0.73): training
+            # starts from the faithful model and learns what to drop.
+            "gate_w1": dense(ks[7], 2 * dh, hkv, 2 * dh, cfg.gate_hidden),
+            "gate_b1": jnp.zeros((hkv, cfg.gate_hidden), jnp.float32),
+            "gate_w2": dense(ks[8], cfg.gate_hidden, hkv, cfg.gate_hidden, 1),
+            "gate_b2": jnp.full((hkv, 1), 1.0, jnp.float32),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+GATE_PARAM_NAMES = ("gate_w1", "gate_b1", "gate_w2", "gate_b2")
+
+
+def split_gate_params(params: Params):
+    """Split into (base, gates) pytrees for gate-only training (paper §5.1)."""
+    base = {k: v for k, v in params.items() if k != "layers"}
+    base["layers"] = [
+        {k: v for k, v in l.items() if k not in GATE_PARAM_NAMES}
+        for l in params["layers"]
+    ]
+    gates = [
+        {k: v for k, v in l.items() if k in GATE_PARAM_NAMES}
+        for l in params["layers"]
+    ]
+    return base, gates
+
+
+def merge_gate_params(base: Params, gates) -> Params:
+    merged = {k: v for k, v in base.items() if k != "layers"}
+    merged["layers"] = [{**l, **g} for l, g in zip(base["layers"], gates)]
+    return merged
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-6):
+    return w * x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """sin/cos tables for the given integer positions, shape [..., dh/2]."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: [..., dh]; sin/cos broadcastable to [..., dh/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, layer):
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def _qkv(layer, x, cfg: ModelConfig):
+    """Project hidden states to per-head q, k, v. x: [N, d] -> [H, N, dh]."""
+    n = x.shape[0]
+    q = (x @ layer["wq"]).reshape(n, cfg.n_q_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (x @ layer["wk"]).reshape(n, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (x @ layer["wv"]).reshape(n, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    return q, k, v
+
+
+def layer_gates(layer, k_pre, k_rope, use_pallas: bool):
+    if use_pallas:
+        return gate_mlp(
+            k_pre, k_rope,
+            layer["gate_w1"], layer["gate_b1"], layer["gate_w2"], layer["gate_b2"],
+        )
+    return ref.gate_mlp_ref(
+        k_pre, k_rope,
+        layer["gate_w1"], layer["gate_b1"], layer["gate_w2"], layer["gate_b2"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill (inference, hard vertical-slash masking)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, tokens, gate_override, override_flag, cfg: ModelConfig,
+            use_pallas: bool = True):
+    """Inference prefill over a fixed-length bucket.
+
+    tokens: [N] int32 (PAD-padded on the right; causal masking keeps prefix
+      results exact, so the Rust side simply ignores trailing outputs).
+    gate_override: [L, Hkv, N] f32 — used instead of the learned gates when
+      override_flag != 0 (policy baselines and the paper's App. I.3
+      random-sparsity measurement methodology).
+    override_flag: [] int32.
+
+    Returns (logits [N, V], K [L, Hkv, N, dh], V [L, Hkv, N, dh], G [L, Hkv, N]).
+    K is stored post-RoPE, exactly what the decode cache expects.
+    """
+    n = tokens.shape[0]
+    sin, cos = rope_tables(cfg, jnp.arange(n))  # [N, dh/2]
+    x = params["embed"][tokens]
+    ks, vs, gs = [], [], []
+    use_ovr = override_flag != 0
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["ln1"])
+        q, k_pre, v = _qkv(layer, h, cfg)
+        q = apply_rope(q, sin[None], cos[None])
+        k = apply_rope(k_pre, sin[None], cos[None])
+        g_learned = layer_gates(layer, k_pre, k, use_pallas)
+        g = jnp.where(use_ovr, gate_override[li], g_learned)
+        if use_pallas:
+            attn = wg_attention(q, k, v, g, w_local=cfg.w_local, tau=cfg.tau)
+        else:
+            attn = ref.wg_attention_ref(q, k, v, g, cfg.w_local, cfg.tau)
+        attn = attn.transpose(1, 0, 2).reshape(n, cfg.n_q_heads * cfg.d_head)
+        x = x + attn @ layer["wo"]
+        x = x + swiglu(rmsnorm(x, layer["ln2"]), layer)
+        ks.append(k)
+        vs.append(v)
+        gs.append(g)
+    logits = rmsnorm(x, params["ln_f"]) @ params["unembed"]
+    return logits, jnp.stack(ks), jnp.stack(vs), jnp.stack(gs)
+
+
+# ---------------------------------------------------------------------------
+# Decode (inference, slotted ragged cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: Params, token, pos, k_cache, v_cache, slot_mask,
+                cfg: ModelConfig, use_pallas: bool = True):
+    """One autoregressive step against capacity-C slotted caches.
+
+    token: [] int32; pos: [] int32 (absolute position of this token).
+    k_cache, v_cache: [L, Hkv, C, dh] (keys post-RoPE); slot_mask: [L, Hkv, C].
+
+    Returns (logits [V], k_new [L, Hkv, dh] post-RoPE, v_new [L, Hkv, dh],
+    g_new [L, Hkv], q [L, Hq, dh]). Slot placement (ring buffer, lazy
+    promotion, paging) is entirely the Rust coordinator's job. The per-layer
+    queries are exposed so the coordinator can maintain the SnapKV
+    observation window for post-write eviction scoring (paper App. K.1).
+    """
+    sin, cos = rope_tables(cfg, pos)  # [dh/2]
+    x = params["embed"][token]  # [d]
+    k_news, v_news, g_news, qs = [], [], [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["ln1"])[None, :]  # [1, d]
+        q, k_pre, v = _qkv(layer, h, cfg)  # [H, 1, dh]
+        q = apply_rope(q, sin, cos)[:, 0]  # [Hq, dh]
+        k_new = apply_rope(k_pre, sin, cos)[:, 0]  # [Hkv, dh]
+        v_new = v[:, 0]
+        g_new = layer_gates(layer, k_pre, k_new[:, None, :], use_pallas)[:, 0]
+        # The new token always attends to itself: append it as a virtual
+        # slot C (mask=1). This mirrors the paper's decode update where the
+        # fresh token enters the Local Cache before attention.
+        k_all = jnp.concatenate([k_cache[li], k_new[:, None, :]], axis=1)
+        v_all = jnp.concatenate([v_cache[li], v_new[:, None, :]], axis=1)
+        m_all = jnp.concatenate(
+            [slot_mask[li], jnp.ones((cfg.n_kv_heads, 1), slot_mask.dtype)], axis=1
+        )
+        if use_pallas:
+            attn = decode_attn(q, k_all, v_all, m_all)  # [Hq, dh]
+        else:
+            attn = ref.decode_attn_ref(q, k_all, v_all, m_all)
+        x = x + attn.reshape(-1) @ layer["wo"]
+        x = x + swiglu(rmsnorm(x, layer["ln2"])[None, :], layer)[0]
+        k_news.append(k_new)
+        v_news.append(v_new)
+        g_news.append(g_new)
+        qs.append(q)
+    logits = rmsnorm(x, params["ln_f"]) @ params["unembed"]
+    return (logits, jnp.stack(k_news), jnp.stack(v_news), jnp.stack(g_news),
+            jnp.stack(qs))
+
+
+# ---------------------------------------------------------------------------
+# Decode with read-time KV Selection (Quest) fused in — paper §5.4, Fig 9
+# ---------------------------------------------------------------------------
+
+
+def quest_page_mask(q, page_min, page_max, slot_mask, budget_pages, cfg: ModelConfig):
+    """Quest-style query-aware page selection over the *global* region.
+
+    q: [Hq, dh] this layer's queries; page_min/page_max: [Hkv, P, dh]
+    elementwise bounds of the keys stored in each global page (maintained by
+    the Rust coordinator); budget_pages: [] i32 (dynamic). Returns a
+    [Hkv, P] selection mask. Upper bound score per page (Quest, Tang et
+    al. 2024): sum_d max(q_d*min_d, q_d*max_d); for GQA we take the max
+    bound over the query heads in the group, mirroring the paper's per-KV-
+    head treatment.
+    """
+    group = cfg.gqa_group
+    p = page_min.shape[1]
+    qg = q.reshape(cfg.n_kv_heads, group, cfg.d_head)
+    ub = jnp.einsum("hgd,hpd->hgp", qg, page_min)
+    ub2 = jnp.einsum("hgd,hpd->hgp", qg, page_max)
+    score = jnp.max(jnp.maximum(ub, ub2), axis=1)  # [Hkv, P]
+    # Pages with no valid slots must never win a budget slot.
+    page_valid = slot_mask[:, : p * cfg.page_size].reshape(
+        cfg.n_kv_heads, p, cfg.page_size).max(axis=-1)
+    score = jnp.where(page_valid > 0.5, score, -jnp.inf)
+    # rank[j] < budget  <=>  page j is among the top-`budget` scores.
+    order = jnp.argsort(-score, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    return (rank < budget_pages) & (page_valid > 0.5)
+
+
+def decode_step_sel(params: Params, token, pos, k_cache, v_cache, slot_mask,
+                    page_min, page_max, budget_pages, cfg: ModelConfig,
+                    use_pallas: bool = True):
+    """One decode step with Quest read-time selection fused after admission.
+
+    Same contract as decode_step plus page metadata for the global region
+    (first C - w_local slots, page_size tokens per page) and a dynamic page
+    budget. The effective mask is: admission mask AND (selected page OR
+    local-window slot). With an all-ones slot_mask this is the "Quest Only"
+    baseline; with WG-KV's admission mask it is "WG-KV + Quest" (Fig 9).
+    """
+    c = k_cache.shape[2]
+    n_global = c - cfg.w_local
+    sin, cos = rope_tables(cfg, pos)
+    x = params["embed"][token]
+    k_news, v_news, g_news, qs = [], [], [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["ln1"])[None, :]
+        q, k_pre, v = _qkv(layer, h, cfg)
+        q = apply_rope(q, sin, cos)[:, 0]
+        k_new = apply_rope(k_pre, sin, cos)[:, 0]
+        v_new = v[:, 0]
+        g_new = layer_gates(layer, k_pre, k_new[:, None, :], use_pallas)[:, 0]
+        sel = quest_page_mask(q, page_min[li], page_max[li], slot_mask[li],
+                              budget_pages, cfg)  # [Hkv, P]
+        sel_slots = jnp.repeat(sel, cfg.page_size, axis=1).astype(slot_mask.dtype)
+        keep = jnp.concatenate(
+            [sel_slots[:, :n_global],
+             jnp.ones((cfg.n_kv_heads, cfg.w_local), slot_mask.dtype)], axis=1)
+        eff_mask = slot_mask[li] * keep
+        k_all = jnp.concatenate([k_cache[li], k_new[:, None, :]], axis=1)
+        v_all = jnp.concatenate([v_cache[li], v_new[:, None, :]], axis=1)
+        m_all = jnp.concatenate(
+            [eff_mask, jnp.ones((cfg.n_kv_heads, 1), slot_mask.dtype)], axis=1)
+        if use_pallas:
+            attn = decode_attn(q, k_all, v_all, m_all)
+        else:
+            attn = ref.decode_attn_ref(q, k_all, v_all, m_all)
+        x = x + attn.reshape(-1) @ layer["wo"]
+        x = x + swiglu(rmsnorm(x, layer["ln2"])[None, :], layer)[0]
+        k_news.append(k_new)
+        v_news.append(v_new)
+        g_news.append(g_new)
+        qs.append(q)
+    logits = rmsnorm(x, params["ln_f"]) @ params["unembed"]
+    return (logits, jnp.stack(k_news), jnp.stack(v_news), jnp.stack(g_news),
+            jnp.stack(qs))
+
+
+# ---------------------------------------------------------------------------
+# Training forward (soft gating, differentiable — never exported)
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params: Params, tokens, cfg: ModelConfig, soft_gate: bool,
+                   w_local=None):
+    """Batched forward returning final-layer hidden states + gate tensor.
+
+    tokens: [B, N]. With soft_gate=False this is the frozen full-attention
+    teacher; with soft_gate=True the write-gated student (paper §3.2,
+    log-space bias form). Returns (hidden [B, N, d], gates [B, L, Hkv, N]).
+    """
+    w_local = cfg.w_local if w_local is None else w_local
+
+    def single(tokens_1d):
+        n = tokens_1d.shape[0]
+        sin, cos = rope_tables(cfg, jnp.arange(n))
+        x = params["embed"][tokens_1d]
+        gs = []
+        for layer in params["layers"]:
+            h = rmsnorm(x, layer["ln1"])
+            q, k_pre, v = _qkv(layer, h, cfg)
+            q = apply_rope(q, sin[None], cos[None])
+            k = apply_rope(k_pre, sin[None], cos[None])
+            g = ref.gate_mlp_ref(
+                k_pre, k,
+                layer["gate_w1"], layer["gate_b1"],
+                layer["gate_w2"], layer["gate_b2"],
+            )
+            gs.append(g)
+            if soft_gate:
+                attn = ref.soft_wg_attention_ref(q, k, v, g, w_local)
+            else:
+                attn = ref.soft_wg_attention_ref(q, k, v, jnp.ones_like(g), n)
+            attn = attn.transpose(1, 0, 2).reshape(n, -1)
+            x = x + attn @ layer["wo"]
+            x = x + swiglu(rmsnorm(x, layer["ln2"]), layer)
+        return x, jnp.stack(gs)
+
+    return jax.vmap(single)(tokens)
+
+
+def lm_logits(params: Params, tokens, cfg: ModelConfig):
+    """Full-attention LM logits for base-model training. tokens: [B, N]."""
+    hidden, _ = forward_hidden(params, tokens, cfg, soft_gate=False)
+    return rmsnorm(hidden, params["ln_f"]) @ params["unembed"]

@@ -1,0 +1,60 @@
+"""Re-run only the λ sweep (Fig 11/12) against an already-trained backbone.
+
+`train.py --sweep` trains the backbone first; this entry point loads
+artifacts/params.npz and retrains gate variants only — used when the
+backbone is already good and the sweep needs refreshing (or shortening)
+without paying for stage 1 again.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import model, train
+from .configs import TrainConfig, get_config
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="wg-tiny")
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--lambdas", type=float, nargs="+",
+                    default=[0.02, 0.08, 0.32, 1.28])
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    tcfg = TrainConfig()
+    params = train.load_params(os.path.join(args.out, "params.npz"), cfg)
+    base_params, _ = model.split_gate_params(params)
+
+    sweep = {"lambdas": [], "no_local": []}
+    for lam in args.lambdas:
+        fresh = model.merge_gate_params(
+            base_params,
+            model.split_gate_params(model.init_params(cfg, jax.random.PRNGKey(7)))[1])
+        trained, _ = train.train_gates(fresh, cfg, tcfg, lam=lam,
+                                       steps=args.steps, log_every=30)
+        d, frac = train.eval_gate_point(trained, cfg, tcfg, cfg.w_local, n_batches=2)
+        sweep["lambdas"].append({"lam": lam, "distill": d, "cache_frac": frac})
+        train.save_params(os.path.join(args.out, f"params_lam{lam:g}.npz"), trained)
+        # Fig 12 ablation: W_local = 1.
+        fresh = model.merge_gate_params(
+            base_params,
+            model.split_gate_params(model.init_params(cfg, jax.random.PRNGKey(8)))[1])
+        trained_nl, _ = train.train_gates(fresh, cfg, tcfg, lam=lam, w_local=1,
+                                          steps=args.steps, log_every=30)
+        d, frac = train.eval_gate_point(trained_nl, cfg, tcfg, 1, n_batches=2)
+        sweep["no_local"].append({"lam": lam, "distill": d, "cache_frac": frac})
+
+    with open(os.path.join(args.out, "sweep.json"), "w") as f:
+        json.dump(sweep, f, indent=1)
+    print("wrote sweep.json")
+
+
+if __name__ == "__main__":
+    main()

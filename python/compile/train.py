@@ -1,0 +1,322 @@
+"""Two-stage training for the WG-KV reproduction (paper §5.1, App. C).
+
+Stage 1 — base LM: next-token cross-entropy on the synthetic corpus with
+full attention (gates unused). The backbone is then frozen, mirroring the
+paper's setup on Llama/Qwen.
+
+Stage 2 — gate distillation: only the Write-Gate MLPs are trained with
+
+    L_total = L_distill + lambda * L_sparsity
+    L_distill  = mean L2 between student (soft write-gated attention) and
+                 teacher (full attention) final-layer hidden states
+    L_sparsity = mean(g + g(1-g))   # sparsify + binarize (paper §3.3)
+
+``--sweep`` additionally trains short runs over a lambda grid (Fig 11) and a
+W_local=1 ablation (Fig 12, "w/o Local Cache"), writing artifacts/sweep.json.
+
+Optimizer: hand-rolled AdamW + cosine schedule with linear warmup (the paper
+uses AdamW, wd=0.01, peak 1e-3, 10% warmup; optax is not available in this
+image).
+"""
+
+import argparse
+import functools
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .configs import ModelConfig, TrainConfig, get_config
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, wd=0.01, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mh, vh,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, peak, warmup_frac):
+    warmup = max(1, int(total * warmup_frac))
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return peak * 0.5 * (1 + math.cos(math.pi * frac))
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: base LM
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, tokens, cfg: ModelConfig):
+    logits = model.lm_logits(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != cfg.PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_base(cfg: ModelConfig, tcfg: TrainConfig, log_every: int = 25):
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = model.init_params(cfg, key)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(lm_loss)(params, tokens, cfg)
+        params, opt = adamw_update(params, grads, opt, lr, tcfg.weight_decay)
+        return params, opt, loss
+
+    gen = corpus.batches(tcfg.seed, cfg, tcfg.base_batch, tcfg.base_seq)
+    log = []
+    t0 = time.time()
+    for i in range(tcfg.base_steps):
+        lr = cosine_lr(i, tcfg.base_steps, tcfg.base_lr, tcfg.warmup_frac)
+        params, opt, loss = step(params, opt, jnp.asarray(next(gen)), lr)
+        if i % log_every == 0 or i == tcfg.base_steps - 1:
+            log.append({"step": i, "loss": float(loss), "lr": lr,
+                        "elapsed_s": time.time() - t0})
+            print(f"[base] step {i:4d} loss {float(loss):.4f} lr {lr:.2e}")
+    return params, log
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: gate distillation
+# ---------------------------------------------------------------------------
+
+
+def cache_fraction(gates, tau: float, w_local: int):
+    """Expected normalized KV cache size under hard admission at threshold tau.
+
+    gates: [B, L, H, N]. A token is cached iff it is within the trailing
+    local window or its gate clears tau.
+    """
+    n = gates.shape[-1]
+    t = jnp.arange(n)
+    in_local = (n - 1 - t) < w_local  # [N]
+    kept = jnp.maximum((gates >= tau).astype(jnp.float32), in_local[None, None, None, :])
+    return jnp.mean(kept)
+
+
+def gate_losses(gate_params, base_params, tokens, cfg: ModelConfig, lam, w_local):
+    params = model.merge_gate_params(base_params, gate_params)
+    h_teacher, _ = model.forward_hidden(params, tokens, cfg, soft_gate=False)
+    h_student, gates = model.forward_hidden(
+        params, tokens, cfg, soft_gate=True, w_local=w_local
+    )
+    h_teacher = jax.lax.stop_gradient(h_teacher)
+    distill = jnp.mean(jnp.square(h_student - h_teacher))
+    sparsity = jnp.mean(gates + gates * (1.0 - gates))
+    return distill + lam * sparsity, (distill, sparsity, gates)
+
+
+def train_gates(params, cfg: ModelConfig, tcfg: TrainConfig, lam=None,
+                w_local=None, steps=None, seed_offset=1, log_every=25):
+    lam = tcfg.lam if lam is None else lam
+    w_local = cfg.w_local if w_local is None else w_local
+    steps = tcfg.gate_steps if steps is None else steps
+    base_params, gate_params = model.split_gate_params(params)
+    opt = adamw_init(gate_params)
+
+    @functools.partial(jax.jit, static_argnames=("w_local",))
+    def step(gate_params, opt, tokens, lr, w_local):
+        (loss, aux), grads = jax.value_and_grad(gate_losses, has_aux=True)(
+            gate_params, base_params, tokens, cfg, lam, w_local
+        )
+        gate_params, opt = adamw_update(gate_params, grads, opt, lr, tcfg.weight_decay)
+        return gate_params, opt, loss, aux
+
+    gen = corpus.batches(tcfg.seed + seed_offset, cfg, tcfg.gate_batch, tcfg.gate_seq)
+    log = []
+    for i in range(steps):
+        lr = cosine_lr(i, steps, tcfg.gate_lr, tcfg.warmup_frac)
+        gate_params, opt, loss, (distill, sparsity, gates) = step(
+            gate_params, opt, jnp.asarray(next(gen)), lr, w_local
+        )
+        if i % log_every == 0 or i == steps - 1:
+            frac = float(cache_fraction(gates, cfg.tau, w_local))
+            log.append({"step": i, "loss": float(loss), "distill": float(distill),
+                        "sparsity": float(sparsity), "cache_frac": frac})
+            print(f"[gate lam={lam:g} w={w_local}] step {i:4d} "
+                  f"distill {float(distill):.5f} cache {frac:.3f}")
+    return model.merge_gate_params(base_params, gate_params), log
+
+
+def eval_gate_point(params, cfg: ModelConfig, tcfg: TrainConfig, w_local,
+                    n_batches: int = 4, seed: int = 999):
+    """Held-out (distill loss, cache fraction) for the Fig 11/12 frontier."""
+    base_params, gate_params = model.split_gate_params(params)
+    gen = corpus.batches(seed, cfg, tcfg.gate_batch, tcfg.gate_seq)
+    ds, fs = [], []
+    for _ in range(n_batches):
+        _, (distill, _, gates) = gate_losses(
+            gate_params, base_params, jnp.asarray(next(gen)), cfg, 0.0, w_local
+        )
+        ds.append(float(distill))
+        fs.append(float(cache_fraction(gates, cfg.tau, w_local)))
+    return float(np.mean(ds)), float(np.mean(fs))
+
+
+# ---------------------------------------------------------------------------
+# Param (de)serialization
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params):
+    flat = {}
+    for k, v in params.items():
+        if k == "layers":
+            for i, layer in enumerate(v):
+                for lk, lv in layer.items():
+                    flat[f"layers.{i}.{lk}"] = np.asarray(lv)
+        else:
+            flat[k] = np.asarray(v)
+    return flat
+
+
+def unflatten_params(flat, cfg: ModelConfig):
+    params = {"layers": [dict() for _ in range(cfg.n_layers)]}
+    for k, v in flat.items():
+        if k.startswith("layers."):
+            _, i, lk = k.split(".", 2)
+            params["layers"][int(i)][lk] = jnp.asarray(v)
+        else:
+            params[k] = jnp.asarray(v)
+    return params
+
+
+def save_params(path, params):
+    np.savez_compressed(path, **flatten_params(params))
+    # Sibling .bin for the Rust loader (runtime/params.rs): a deliberately
+    # trivial format — magic, count, then (name, dims, f32 LE data) records.
+    bin_path = path[: -len(".npz")] + ".bin" if path.endswith(".npz") else path + ".bin"
+    save_params_bin(bin_path, params)
+
+
+def save_params_bin(path, params):
+    import struct
+
+    flat = flatten_params(params)
+    with open(path, "wb") as f:
+        f.write(b"WGKV")
+        f.write(struct.pack("<II", 1, len(flat)))
+        for name in sorted(flat):
+            arr = np.ascontiguousarray(flat[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_params(path, cfg: ModelConfig):
+    with np.load(path) as z:
+        return unflatten_params(dict(z), cfg)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+SWEEP_LAMBDAS = [0.02, 0.08, 0.32, 1.28]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="wg-tiny")
+    ap.add_argument("--base-steps", type=int, default=None)
+    ap.add_argument("--gate-steps", type=int, default=None)
+    ap.add_argument("--lam", type=float, default=None)
+    ap.add_argument("--sweep", action="store_true",
+                    help="also run the lambda grid + no-local ablation (Fig 11/12)")
+    ap.add_argument("--sweep-steps", type=int, default=100)
+    ap.add_argument("--out", default=ART)
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    tcfg = TrainConfig()
+    if args.base_steps is not None:
+        tcfg = TrainConfig(base_steps=args.base_steps,
+                           gate_steps=tcfg.gate_steps if args.gate_steps is None else args.gate_steps,
+                           lam=tcfg.lam if args.lam is None else args.lam)
+    elif args.gate_steps is not None or args.lam is not None:
+        tcfg = TrainConfig(gate_steps=tcfg.gate_steps if args.gate_steps is None else args.gate_steps,
+                           lam=tcfg.lam if args.lam is None else args.lam)
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    print(f"=== stage 1: base LM ({cfg.name}) ===")
+    params, base_log = train_base(cfg, tcfg)
+    n_base = model.count_params(model.split_gate_params(params)[0])
+    n_gate = model.count_params(model.split_gate_params(params)[1])
+    print(f"params: base {n_base:,} gate {n_gate:,} "
+          f"({100*n_gate/(n_base+n_gate):.2f}% overhead)")
+
+    print(f"=== stage 2: gate distillation (lambda={tcfg.lam}) ===")
+    params, gate_log = train_gates(params, cfg, tcfg)
+    save_params(os.path.join(args.out, "params.npz"), params)
+
+    log = {"model": cfg.to_dict(), "train": {"base": base_log, "gate": gate_log},
+           "param_counts": {"base": n_base, "gate": n_gate},
+           "wall_s": time.time() - t0}
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+
+    if args.sweep:
+        print("=== sweep: lambda grid + no-local ablation ===")
+        sweep = {"lambdas": [], "no_local": [], "taus": {}}
+        base_params, _ = model.split_gate_params(params)
+        for lam in SWEEP_LAMBDAS:
+            fresh = model.merge_gate_params(
+                base_params, model.split_gate_params(
+                    model.init_params(cfg, jax.random.PRNGKey(7)))[1])
+            trained, _ = train_gates(fresh, cfg, tcfg, lam=lam,
+                                     steps=args.sweep_steps, log_every=40)
+            d, frac = eval_gate_point(trained, cfg, tcfg, cfg.w_local)
+            sweep["lambdas"].append({"lam": lam, "distill": d, "cache_frac": frac})
+            save_params(os.path.join(args.out, f"params_lam{lam:g}.npz"), trained)
+            # Fig 12 ablation: same objective, W_local = 1.
+            fresh = model.merge_gate_params(
+                base_params, model.split_gate_params(
+                    model.init_params(cfg, jax.random.PRNGKey(8)))[1])
+            trained_nl, _ = train_gates(fresh, cfg, tcfg, lam=lam, w_local=1,
+                                        steps=args.sweep_steps, log_every=40)
+            d, frac = eval_gate_point(trained_nl, cfg, tcfg, 1)
+            sweep["no_local"].append({"lam": lam, "distill": d, "cache_frac": frac})
+        # Fig 11's tau axis: re-evaluate the default-lambda model at other taus.
+        with open(os.path.join(args.out, "sweep.json"), "w") as f:
+            json.dump(sweep, f, indent=1)
+
+    print(f"done in {time.time()-t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

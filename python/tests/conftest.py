@@ -1,0 +1,45 @@
+"""Shared fixtures: tiny model configs + random params for kernel tests."""
+
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model  # noqa: E402
+from compile.configs import ModelConfig  # noqa: E402
+
+# A deliberately small config so interpret-mode Pallas stays fast.
+MICRO = ModelConfig(
+    name="wg-micro",
+    vocab_size=259,
+    d_model=64,
+    n_layers=2,
+    n_q_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+    d_ff=96,
+    gate_hidden=8,
+    w_local=8,
+)
+
+
+@pytest.fixture(scope="session")
+def micro_cfg():
+    return MICRO
+
+
+@pytest.fixture(scope="session")
+def micro_params(micro_cfg):
+    return model.init_params(micro_cfg, jax.random.PRNGKey(0))
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype="float32")
+
+
+def assert_close(a, b, atol=2e-4, rtol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)

@@ -1,0 +1,138 @@
+"""AOT export contract: HLO text lowering, manifest shape, and the
+param-order convention the Rust runtime depends on."""
+
+import json
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot, model, train
+from compile.configs import ExportConfig
+
+from conftest import MICRO
+
+
+@pytest.fixture(scope="module")
+def micro_params():
+    return model.init_params(MICRO, jax.random.PRNGKey(3))
+
+
+class TestLowering:
+    @staticmethod
+    def entry_param_count(text):
+        """Count parameters of the ENTRY computation only (fused
+        sub-computations declare their own parameter() lines)."""
+        entry = text[text.index("ENTRY "):]
+        return entry.count(" parameter(")
+
+    def test_prefill_lowers_to_hlo_text(self, micro_params):
+        text = aot.lower_prefill(micro_params, MICRO, n=32)
+        assert "HloModule" in text
+        # Tuple return with 4 outputs (logits, K, V, G).
+        assert "ROOT" in text
+        # Parameters must include every trained tensor + 3 call inputs.
+        assert self.entry_param_count(text) == len(aot.param_spec(micro_params)) + 3
+
+    def test_decode_lowers_with_expected_inputs(self, micro_params):
+        text = aot.lower_decode(micro_params, MICRO, c=16)
+        assert self.entry_param_count(text) == len(aot.param_spec(micro_params)) + 5
+
+    def test_decode_sel_lowers(self, micro_params):
+        c = MICRO.w_local + 2 * MICRO.page_size
+        text = aot.lower_decode_sel(micro_params, MICRO, c=c)
+        assert self.entry_param_count(text) == len(aot.param_spec(micro_params)) + 8
+
+    def test_hlo_text_has_no_giant_constants(self, micro_params):
+        """Params ship as inputs, not baked constants — the text must stay
+        small (the whole point of the params-as-inputs design)."""
+        text = aot.lower_prefill(micro_params, MICRO, n=32)
+        assert len(text) < 5_000_000
+
+    def test_param_spec_is_sorted_and_complete(self, micro_params):
+        spec = aot.param_spec(micro_params)
+        names = [n for n, _ in spec]
+        assert names == sorted(names)
+        flat = train.flatten_params(micro_params)
+        assert set(names) == set(flat)
+        for name, shape in spec:
+            assert tuple(shape) == flat[name].shape
+
+
+class TestExportAll:
+    @pytest.fixture(scope="class")
+    def export_dir(self, micro_params):
+        with tempfile.TemporaryDirectory() as d:
+            ecfg = ExportConfig(prefill_buckets=[32], decode_capacities=[24, 40])
+            files = aot.export_all(micro_params, MICRO, ecfg, d)
+            yield d, files
+
+    def test_all_files_written(self, export_dir):
+        d, files = export_dir
+        assert "prefill_32" in files
+        assert "decode_24" in files and "decode_40" in files
+        # 24 = w_local(8) + 16 -> one decode_sel; 40 -> two pages, also ok.
+        assert "decode_sel_24" in files
+        for f in files.values():
+            assert os.path.exists(os.path.join(d, f))
+            assert os.path.getsize(os.path.join(d, f)) > 1000
+
+    def test_manifest_contract(self, micro_params, export_dir):
+        d, files = export_dir
+        manifest = {
+            "model": MICRO.to_dict(),
+            "prefill_buckets": [32],
+            "decode_capacities": [24, 40],
+            "param_order": [
+                {"name": n, "shape": list(s)} for n, s in aot.param_spec(micro_params)
+            ],
+            "files": files,
+            "params_sha": aot.params_digest(micro_params),
+            "pallas": True,
+            "format": "hlo-text/return-tuple/params-as-inputs",
+        }
+        path = os.path.join(d, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        back = json.load(open(path))
+        assert back["model"]["n_layers"] == MICRO.n_layers
+        assert back["model"]["gqa_group"] == MICRO.gqa_group
+        assert back["param_order"][0]["name"] == sorted(
+            n for n, _ in aot.param_spec(micro_params))[0]
+
+    def test_digest_is_stable_and_sensitive(self, micro_params):
+        d1 = aot.params_digest(micro_params)
+        d2 = aot.params_digest(micro_params)
+        assert d1 == d2
+        other = model.init_params(MICRO, jax.random.PRNGKey(4))
+        assert aot.params_digest(other) != d1
+
+
+class TestRoundTripNumerics:
+    def test_lowered_prefill_runs_and_matches_eager(self, micro_params):
+        """Compile the lowered StableHLO back through jax and compare with
+        the eager function — proves lowering didn't change semantics."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        n = 32
+        spec = aot.param_spec(micro_params)
+        names = [nm for nm, _ in spec]
+        flat = train.flatten_params(micro_params)
+        args = [jnp.asarray(flat[nm]) for nm in names]
+        tokens = jnp.asarray(np.arange(n) % 250, jnp.int32)
+        ovr = jnp.ones((MICRO.n_layers, MICRO.n_kv_heads, n), jnp.float32)
+        flag = jnp.asarray(0, jnp.int32)
+
+        def f(*a):
+            p = train.unflatten_params(dict(zip(names, a[: len(names)])), MICRO)
+            t, o, fl = a[len(names):]
+            return model.prefill(p, t, o, fl, MICRO)
+
+        eager = f(*args, tokens, ovr, flag)
+        compiled = jax.jit(f).lower(*args, tokens, ovr, flag).compile()
+        got = compiled(*args, tokens, ovr, flag)
+        for a, b in zip(eager, got):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, rtol=1e-4)

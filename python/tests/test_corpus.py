@@ -1,0 +1,146 @@
+"""Corpus generator invariants: determinism, grammar well-formedness, and
+the skewed-utility structure the gate is supposed to learn from."""
+
+import numpy as np
+
+from compile import corpus
+from compile.configs import TINY
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def test_encode_decode_roundtrip():
+    text = "k07 = abc\nthe secret code is 1234."
+    assert corpus.decode(corpus.encode(text)) == text
+
+
+def test_stream_is_deterministic():
+    a = [next(corpus.token_stream(5, TINY)) for _ in range(3)]
+    b = [next(corpus.token_stream(5, TINY)) for _ in range(3)]
+    for x, y in zip(a, b):
+        assert (x == y).all()
+    c = next(corpus.token_stream(6, TINY))
+    assert not (len(a[0]) == len(c) and (a[0] == c).all())
+
+
+def test_stream_frames_with_bos_eos():
+    doc = next(corpus.token_stream(1, TINY))
+    assert doc[0] == TINY.BOS
+    assert doc[-1] == TINY.EOS
+    assert ((doc[1:-1] >= 0) & (doc[1:-1] < 256)).all()
+
+
+def test_batches_shape_and_range():
+    gen = corpus.batches(0, TINY, batch=4, seq=64)
+    for _ in range(3):
+        b = next(gen)
+        assert b.shape == (4, 65)
+        assert b.dtype == np.int32
+        assert (b >= 0).all() and (b < TINY.vocab_size).all()
+
+
+def test_kv_document_answers_its_query():
+    for seed in range(5):
+        doc = corpus.gen_kv(rng(seed))
+        q = doc[doc.index("q: ") + 3 : doc.index("\na:")]
+        a = doc[doc.index("\na: ") + 4 :].rstrip(".\n")
+        assert f"{q} = {a}\n" in doc, f"key {q} must map to {a}"
+
+
+def test_needle_answer_matches_needle():
+    for seed in range(5):
+        doc = corpus.gen_needle(rng(seed))
+        code = doc.split("the secret code is ")[1][:4]
+        assert doc.rstrip().endswith(f"a: {code}.")
+
+
+def test_list_recalls_items_in_order():
+    doc = corpus.gen_list(rng(2))
+    items = doc[len("items: ") : doc.index(".\n")]
+    assert doc.rstrip().endswith(f"recall: {items}.")
+
+
+def test_icl_final_label_is_consistent():
+    for seed in range(5):
+        doc = corpus.gen_icl(rng(seed))
+        lines = [l for l in doc.strip().split("\n") if l]
+        # Build pattern -> label map from the shots; the last line must obey it.
+        mapping = {}
+        for line in lines[:-1]:
+            pat, label = line[3:].split(" -> ")
+            mapping.setdefault(pat, label)
+        pat, label = lines[-1][3:].split(" -> ")
+        if pat in mapping:
+            assert mapping[pat] == label
+
+
+def test_reason_chain_is_arithmetically_valid():
+    for seed in range(10):
+        doc = corpus.gen_reason(rng(seed))
+        lines = doc.strip().split("\n")
+        given = lines[0]
+        a = int(given.split("a=")[1].split(" ")[0])
+        b = int(given.split("b=")[1].rstrip("."))
+        vals = []
+        for line in lines[1:-1]:
+            vals.append(int(line.split("= ")[-1]))
+        assert vals[0] == (a + b) % 100
+        for prev, cur in zip(vals, vals[1:]):
+            assert (cur - prev) % 100 in (a, b)
+        answer = int(lines[-1].split("answer: ")[1].rstrip("."))
+        assert answer == vals[-1]
+
+
+def test_reason_steps_are_variable():
+    lengths = set()
+    r = rng(3)
+    for _ in range(30):
+        doc = corpus.gen_reason(r)
+        n_steps = sum(1 for l in doc.split("\n") if l.startswith("t"))
+        lengths.add(n_steps)
+        assert 4 <= n_steps <= 12
+    assert len(lengths) > 3, "step count must vary for generalization"
+
+
+def test_mix_probabilities_sum_to_one():
+    assert abs(sum(p for _, p in corpus.MIX) - 1.0) < 1e-9
+    assert set(n for n, _ in corpus.MIX) == set(corpus.GENERATORS)
+
+
+def test_documents_have_sparse_salient_structure():
+    """The corpus must embed few high-utility tokens among filler — the
+    property (paper §2.3) that makes admission learnable. Proxy check: in kv
+    docs the answer-bearing line is a small fraction of the text."""
+    doc = corpus.gen_kv(rng(7))
+    q = doc[doc.index("q: ") + 3 : doc.index("\na:")]
+    key_line = next(l for l in doc.split("\n") if l.startswith(f"{q} ="))
+    assert len(key_line) / len(doc) < 0.1
+
+
+def test_doc_aligned_batches_never_split_documents():
+    """Every row must consist of whole BOS..EOS framed documents + PAD."""
+    gen = corpus.batches(3, TINY, batch=4, seq=384)
+    for _ in range(3):
+        rows = next(gen)
+        for row in rows:
+            # Strip trailing padding.
+            real = row[row != TINY.PAD]
+            if real.size == 0:
+                continue
+            assert real[0] == TINY.BOS
+            # Document boundaries: every EOS is followed by BOS or end.
+            eos_idx = np.where(real == TINY.EOS)[0]
+            for i in eos_idx:
+                if i + 1 < real.size:
+                    assert real[i + 1] == TINY.BOS
+            # If the row wasn't truncated (has padding), it ends with EOS.
+            if real.size < row.size:
+                assert real[-1] == TINY.EOS
+
+
+def test_flat_batches_mode_still_available():
+    gen = corpus.batches(3, TINY, batch=2, seq=64, doc_aligned=False)
+    b = next(gen)
+    assert b.shape == (2, 65)

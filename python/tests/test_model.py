@@ -1,0 +1,254 @@
+"""L2 correctness: the write-gated transformer's prefill/decode contracts.
+
+The decisive test is cross-phase consistency: a full-cache decode step must
+reproduce the prefill logits bit-for-bit (up to float tolerance) — this is
+the invariant the Rust engine relies on when it switches from the prefill
+executable to the decode executable mid-sequence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+from conftest import assert_close
+
+
+def toks(cfg, seed, n):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, 256, size=n).astype(np.int32)
+    t[0] = cfg.BOS
+    return jnp.asarray(t)
+
+
+def ones_override(cfg, n):
+    return jnp.ones((cfg.n_layers, cfg.n_kv_heads, n), jnp.float32)
+
+
+class TestPrefill:
+    def test_shapes(self, micro_cfg, micro_params):
+        n = 32
+        logits, k, v, g = model.prefill(
+            micro_params, toks(micro_cfg, 0, n), ones_override(micro_cfg, n),
+            jnp.asarray(0, jnp.int32), micro_cfg, use_pallas=True,
+        )
+        c = micro_cfg
+        assert logits.shape == (n, c.vocab_size)
+        assert k.shape == (c.n_layers, c.n_kv_heads, n, c.d_head)
+        assert v.shape == (c.n_layers, c.n_kv_heads, n, c.d_head)
+        assert g.shape == (c.n_layers, c.n_kv_heads, n)
+        gg = np.asarray(g)
+        assert (gg > 0).all() and (gg < 1).all()
+
+    def test_pallas_matches_ref_path(self, micro_cfg, micro_params):
+        n = 32
+        t = toks(micro_cfg, 1, n)
+        ovr = ones_override(micro_cfg, n)
+        flag = jnp.asarray(0, jnp.int32)
+        out_p = model.prefill(micro_params, t, ovr, flag, micro_cfg, use_pallas=True)
+        out_r = model.prefill(micro_params, t, ovr, flag, micro_cfg, use_pallas=False)
+        for a, b in zip(out_p, out_r):
+            assert_close(a, b, atol=5e-4, rtol=5e-4)
+
+    def test_gate_override_flag(self, micro_cfg, micro_params):
+        """flag=1 must substitute the override for the learned gates."""
+        n = 32
+        t = toks(micro_cfg, 2, n)
+        ovr = jnp.zeros((micro_cfg.n_layers, micro_cfg.n_kv_heads, n), jnp.float32)
+        _, _, _, g_on = model.prefill(
+            micro_params, t, ovr, jnp.asarray(1, jnp.int32), micro_cfg)
+        assert np.asarray(g_on).max() == 0.0
+        _, _, _, g_off = model.prefill(
+            micro_params, t, ovr, jnp.asarray(0, jnp.int32), micro_cfg)
+        assert np.asarray(g_off).min() > 0.0
+
+    def test_padding_does_not_change_prefix(self, micro_cfg, micro_params):
+        """Causal masking: logits for the first n tokens are unchanged by
+        right-padding — the bucket contract the Rust engine relies on."""
+        n, n_pad = 24, 32
+        t = toks(micro_cfg, 3, n)
+        padded = jnp.concatenate([t, jnp.full((n_pad - n,), micro_cfg.PAD, jnp.int32)])
+        flag = jnp.asarray(1, jnp.int32)
+        l_short, *_ = model.prefill(
+            micro_params, t, ones_override(micro_cfg, n), flag, micro_cfg)
+        l_pad, *_ = model.prefill(
+            micro_params, padded, ones_override(micro_cfg, n_pad), flag, micro_cfg)
+        assert_close(l_short, l_pad[:n], atol=5e-4, rtol=5e-4)
+
+    def test_full_override_equals_dense_attention(self, micro_cfg, micro_params):
+        """All-ones override -> every token globally visible: the learned
+        gates must not affect the output at all."""
+        n = 32
+        t = toks(micro_cfg, 4, n)
+        flag = jnp.asarray(1, jnp.int32)
+        l1, *_ = model.prefill(
+            micro_params, t, ones_override(micro_cfg, n), flag, micro_cfg)
+        # Same but with a *different* gate value that still clears tau.
+        l2, *_ = model.prefill(
+            micro_params, t, 0.7 * ones_override(micro_cfg, n), flag, micro_cfg)
+        assert_close(l1, l2, atol=5e-4, rtol=5e-4)
+
+
+class TestDecode:
+    def test_decode_consistent_with_prefill(self, micro_cfg, micro_params):
+        """Full-cache decode at position n-1 == prefill logits at n-1."""
+        c = micro_cfg
+        n, cap = 24, 32
+        t = toks(c, 5, n)
+        flag = jnp.asarray(1, jnp.int32)
+        logits_p, k, v, _ = model.prefill(
+            micro_params, t, ones_override(c, n), flag, c)
+        # Cache = tokens 0..n-2 in slots 0..n-2.
+        kc = jnp.zeros((c.n_layers, c.n_kv_heads, cap, c.d_head))
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, : n - 1].set(k[:, :, : n - 1])
+        vc = vc.at[:, :, : n - 1].set(v[:, :, : n - 1])
+        mask = jnp.zeros((c.n_layers, c.n_kv_heads, cap)).at[:, :, : n - 1].set(1.0)
+        logits_d, k_new, v_new, g_new, q = model.decode_step(
+            micro_params, t[n - 1], jnp.asarray(n - 1, jnp.int32), kc, vc, mask, c)
+        assert_close(logits_d, logits_p[n - 1], atol=1e-3, rtol=1e-3)
+        # The freshly computed K/V must match prefill's row n-1.
+        assert_close(k_new, k[:, :, n - 1], atol=5e-4, rtol=5e-4)
+        assert_close(v_new, v[:, :, n - 1], atol=5e-4, rtol=5e-4)
+        assert q.shape == (c.n_layers, c.n_q_heads, c.d_head)
+        assert g_new.shape == (c.n_layers, c.n_kv_heads)
+
+    def test_decode_slot_order_invariance(self, micro_cfg, micro_params):
+        """The engine stores global + ring tokens in arbitrary slot order;
+        logits must only depend on the slot *set*."""
+        c = micro_cfg
+        n, cap = 16, 24
+        t = toks(c, 6, n)
+        flag = jnp.asarray(1, jnp.int32)
+        _, k, v, _ = model.prefill(micro_params, t, ones_override(c, n), flag, c)
+        kc = jnp.zeros((c.n_layers, c.n_kv_heads, cap, c.d_head))
+        vc = jnp.zeros_like(kc)
+        mask = jnp.zeros((c.n_layers, c.n_kv_heads, cap))
+        kc1 = kc.at[:, :, :n].set(k)
+        vc1 = vc.at[:, :, :n].set(v)
+        m1 = mask.at[:, :, :n].set(1.0)
+        perm = np.random.default_rng(1).permutation(n)
+        kc2 = kc.at[:, :, 4 : 4 + n].set(k[:, :, perm])
+        vc2 = vc.at[:, :, 4 : 4 + n].set(v[:, :, perm])
+        m2 = mask.at[:, :, 4 : 4 + n].set(1.0)
+        pos = jnp.asarray(n, jnp.int32)
+        l1, *_ = model.decode_step(micro_params, jnp.asarray(65), pos, kc1, vc1, m1, c)
+        l2, *_ = model.decode_step(micro_params, jnp.asarray(65), pos, kc2, vc2, m2, c)
+        assert_close(l1, l2, atol=1e-3, rtol=1e-3)
+
+    def test_decode_pallas_matches_ref(self, micro_cfg, micro_params):
+        c = micro_cfg
+        cap = 16
+        kc = jax.random.normal(jax.random.PRNGKey(0),
+                               (c.n_layers, c.n_kv_heads, cap, c.d_head))
+        vc = jax.random.normal(jax.random.PRNGKey(1), kc.shape)
+        mask = (jax.random.uniform(jax.random.PRNGKey(2),
+                                   (c.n_layers, c.n_kv_heads, cap)) < 0.5).astype(jnp.float32)
+        args = (micro_params, jnp.asarray(70), jnp.asarray(20, jnp.int32), kc, vc, mask, c)
+        out_p = model.decode_step(*args, use_pallas=True)
+        out_r = model.decode_step(*args, use_pallas=False)
+        for a, b in zip(out_p, out_r):
+            assert_close(a, b, atol=5e-4, rtol=5e-4)
+
+
+class TestDecodeSel:
+    def test_full_budget_matches_plain_decode(self, micro_cfg, micro_params):
+        """Quest with budget >= all pages must equal unselected decode."""
+        c = micro_cfg
+        cap = c.w_local + 4 * c.page_size  # 4 global pages
+        n_pages = 4
+        kc = jax.random.normal(jax.random.PRNGKey(3),
+                               (c.n_layers, c.n_kv_heads, cap, c.d_head))
+        vc = jax.random.normal(jax.random.PRNGKey(4), kc.shape)
+        mask = jnp.ones((c.n_layers, c.n_kv_heads, cap), jnp.float32)
+        # Page bounds that genuinely contain the keys.
+        kg = kc[:, :, : n_pages * c.page_size].reshape(
+            c.n_layers, c.n_kv_heads, n_pages, c.page_size, c.d_head)
+        pmin, pmax = kg.min(axis=3), kg.max(axis=3)
+        pos = jnp.asarray(cap, jnp.int32)
+        l_sel, *_ = model.decode_step_sel(
+            micro_params, jnp.asarray(66), pos, kc, vc, mask, pmin, pmax,
+            jnp.asarray(n_pages, jnp.int32), c)
+        l_all, *_ = model.decode_step(micro_params, jnp.asarray(66), pos, kc, vc, mask, c)
+        assert_close(l_sel, l_all, atol=1e-3, rtol=1e-3)
+
+    def test_zero_budget_keeps_local_window_only(self, micro_cfg, micro_params):
+        """budget=0 -> only the trailing w_local slots + self are attended."""
+        c = micro_cfg
+        n_pages = 2
+        cap = c.w_local + n_pages * c.page_size
+        kc = jax.random.normal(jax.random.PRNGKey(5),
+                               (c.n_layers, c.n_kv_heads, cap, c.d_head))
+        vc = jax.random.normal(jax.random.PRNGKey(6), kc.shape)
+        mask = jnp.ones((c.n_layers, c.n_kv_heads, cap), jnp.float32)
+        kg = kc[:, :, : n_pages * c.page_size].reshape(
+            c.n_layers, c.n_kv_heads, n_pages, c.page_size, c.d_head)
+        pmin, pmax = kg.min(axis=3), kg.max(axis=3)
+        pos = jnp.asarray(cap, jnp.int32)
+        l0, *_ = model.decode_step_sel(
+            micro_params, jnp.asarray(67), pos, kc, vc, mask, pmin, pmax,
+            jnp.asarray(0, jnp.int32), c)
+        # Equivalent: plain decode with the global slots masked out.
+        m_local = mask.at[:, :, : n_pages * c.page_size].set(0.0)
+        l_want, *_ = model.decode_step(
+            micro_params, jnp.asarray(67), pos, kc, vc, m_local, c)
+        assert_close(l0, l_want, atol=1e-3, rtol=1e-3)
+
+    def test_selection_respects_budget(self, micro_cfg):
+        """quest_page_mask selects exactly `budget` valid pages per head."""
+        c = micro_cfg
+        n_pages, cap = 4, c.w_local + 4 * c.page_size
+        q = jax.random.normal(jax.random.PRNGKey(7), (c.n_q_heads, c.d_head))
+        pmin = jax.random.normal(jax.random.PRNGKey(8),
+                                 (c.n_kv_heads, n_pages, c.d_head))
+        pmax = pmin + 1.0
+        mask = jnp.ones((c.n_kv_heads, cap), jnp.float32)
+        sel = model.quest_page_mask(q, pmin, pmax, mask, jnp.asarray(2, jnp.int32), c)
+        assert sel.shape == (c.n_kv_heads, n_pages)
+        assert (np.asarray(sel).sum(axis=1) == 2).all()
+
+
+class TestTrainingForward:
+    def test_teacher_student_identical_when_gates_one(self, micro_cfg, micro_params):
+        """If every gate were 1, soft-gated == full attention. We test via
+        the log-bias formulation with unit gates injected."""
+        c = micro_cfg
+        t = toks(c, 8, 40)[None, :]
+        # Teacher path (soft_gate=False) ignores gates entirely.
+        h_t, _ = model.forward_hidden(micro_params, t, c, soft_gate=False)
+        assert h_t.shape == (1, 40, c.d_model)
+        assert np.isfinite(np.asarray(h_t)).all()
+
+    def test_gate_gradients_flow(self, micro_cfg, micro_params):
+        c = micro_cfg
+        base, gates = model.split_gate_params(micro_params)
+        t = toks(c, 9, 32)[None, :]
+
+        def loss(gp):
+            p = model.merge_gate_params(base, gp)
+            h, g = model.forward_hidden(p, t, c, soft_gate=True)
+            return jnp.mean(h**2) + jnp.mean(g)
+
+        grads = jax.grad(loss)(gates)
+        leaves = jax.tree_util.tree_leaves(grads)
+        assert all(np.isfinite(np.asarray(x)).all() for x in leaves)
+        assert any(np.abs(np.asarray(x)).max() > 0 for x in leaves)
+
+    def test_split_merge_roundtrip(self, micro_cfg, micro_params):
+        base, gates = model.split_gate_params(micro_params)
+        merged = model.merge_gate_params(base, gates)
+        for k in micro_params:
+            if k == "layers":
+                continue
+            assert (np.asarray(merged[k]) == np.asarray(micro_params[k])).all()
+        for l0, l1 in zip(micro_params["layers"], merged["layers"]):
+            assert set(l0) == set(l1)
+            for kk in l0:
+                assert (np.asarray(l0[kk]) == np.asarray(l1[kk])).all()
+
+    def test_gate_param_count_is_small(self, micro_cfg, micro_params):
+        base, gates = model.split_gate_params(micro_params)
+        nb, ng = model.count_params(base), model.count_params(gates)
+        assert ng / (nb + ng) < 0.02, "gate overhead must be ~0.4%-ish (paper §5.3)"

@@ -1,0 +1,154 @@
+"""Training smoke tests: the base LM learns, the sparsity objective bites,
+and the parameter (de)serialization formats round-trip (npz + the .bin the
+Rust loader reads)."""
+
+import os
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model, train
+from compile.configs import TrainConfig
+
+from conftest import MICRO
+
+
+def micro_tcfg(**kw):
+    defaults = dict(base_steps=30, base_batch=4, base_seq=64,
+                    gate_steps=12, gate_batch=2, gate_seq=96)
+    defaults.update(kw)
+    return TrainConfig(**defaults)
+
+
+@pytest.fixture(scope="module")
+def trained_base():
+    params, log = train.train_base(MICRO, micro_tcfg(), log_every=10)
+    return params, log
+
+
+class TestBaseTraining:
+    def test_loss_decreases(self, trained_base):
+        _, log = trained_base
+        assert log[-1]["loss"] < log[0]["loss"] * 0.8, (
+            f"loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
+
+    def test_loss_is_finite_throughout(self, trained_base):
+        _, log = trained_base
+        assert all(np.isfinite(e["loss"]) for e in log)
+
+    def test_lm_loss_masks_padding(self):
+        params = model.init_params(MICRO, jax.random.PRNGKey(0))
+        t = np.full((2, 33), MICRO.PAD, np.int32)
+        t[:, :4] = 65
+        # All-pad targets beyond 4 tokens: loss only counts real positions.
+        loss = train.lm_loss(params, np.asarray(t), MICRO)
+        assert np.isfinite(float(loss))
+
+
+class TestGateTraining:
+    def test_sparsity_increases_with_lambda(self, trained_base):
+        params, _ = trained_base
+        _, log_lo = train.train_gates(params, MICRO, micro_tcfg(), lam=0.0,
+                                      steps=10, log_every=5)
+        _, log_hi = train.train_gates(params, MICRO, micro_tcfg(), lam=8.0,
+                                      steps=10, log_every=5)
+        assert log_hi[-1]["cache_frac"] < log_lo[-1]["cache_frac"], (
+            "higher lambda must shrink the cache")
+
+    def test_gate_training_leaves_backbone_frozen(self, trained_base):
+        params, _ = trained_base
+        before = np.asarray(params["embed"]).copy()
+        trained, _ = train.train_gates(params, MICRO, micro_tcfg(), lam=1.0,
+                                       steps=5, log_every=5)
+        after = np.asarray(trained["embed"])
+        assert (before == after).all(), "backbone must stay frozen (paper §5.1)"
+        # But the gate params must have moved.
+        g0 = np.asarray(params["layers"][0]["gate_b2"])
+        g1 = np.asarray(trained["layers"][0]["gate_b2"])
+        assert not (g0 == g1).all()
+
+    def test_cache_fraction_definition(self):
+        gates = np.zeros((1, 1, 1, 10), np.float32)
+        gates[..., 3] = 0.9  # one admitted token outside the window
+        frac = float(train.cache_fraction(np.asarray(gates), tau=0.1, w_local=2))
+        # Window = last 2 tokens + 1 admitted = 3 of 10.
+        assert abs(frac - 0.3) < 1e-6
+
+    def test_eval_gate_point_returns_finite(self, trained_base):
+        params, _ = trained_base
+        d, frac = train.eval_gate_point(params, MICRO, micro_tcfg(), MICRO.w_local,
+                                        n_batches=1)
+        assert np.isfinite(d) and 0.0 < frac <= 1.0
+
+
+class TestSerialization:
+    def test_npz_roundtrip(self, trained_base):
+        params, _ = trained_base
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "p.npz")
+            train.save_params(path, params)
+            back = train.load_params(path, MICRO)
+        for k, v in train.flatten_params(params).items():
+            got = train.flatten_params(back)[k]
+            assert (np.asarray(v) == np.asarray(got)).all(), k
+
+    def test_bin_format_matches_spec(self, trained_base):
+        """The .bin layout must match what rust/src/runtime/params.rs reads:
+        magic 'WGKV', version, count, then sorted (name, ndim, dims, f32)."""
+        params, _ = trained_base
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "p.bin")
+            train.save_params_bin(path, params)
+            blob = open(path, "rb").read()
+        assert blob[:4] == b"WGKV"
+        version, count = struct.unpack_from("<II", blob, 4)
+        assert version == 1
+        flat = train.flatten_params(params)
+        assert count == len(flat)
+        # Walk every record and compare against the source tensors.
+        off = 12
+        for name in sorted(flat):
+            (nlen,) = struct.unpack_from("<H", blob, off)
+            off += 2
+            got_name = blob[off : off + nlen].decode()
+            off += nlen
+            assert got_name == name
+            (ndim,) = struct.unpack_from("<B", blob, off)
+            off += 1
+            dims = struct.unpack_from(f"<{ndim}I", blob, off)
+            off += 4 * ndim
+            arr = np.ascontiguousarray(flat[name], np.float32)
+            assert tuple(dims) == arr.shape
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(blob, np.float32, count=n, offset=off)
+            off += 4 * n
+            assert (data == arr.reshape(-1)).all(), name
+        assert off == len(blob), "no trailing bytes"
+
+    def test_flatten_unflatten_roundtrip(self, trained_base):
+        params, _ = trained_base
+        back = train.unflatten_params(train.flatten_params(params), MICRO)
+        assert set(back) == set(params)
+        assert len(back["layers"]) == MICRO.n_layers
+
+
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        params = {"x": np.asarray([3.0, -2.0], np.float32)}
+        opt = train.adamw_init(params)
+        x = params
+        for step in range(200):
+            grads = {"x": 2.0 * x["x"]}
+            x, opt = train.adamw_update(x, grads, opt, lr=0.05, wd=0.0)
+        assert float(np.abs(np.asarray(x["x"])).max()) < 0.05
+
+    def test_cosine_schedule_shape(self):
+        peak = 1e-3
+        lrs = [train.cosine_lr(s, 100, peak, 0.1) for s in range(100)]
+        assert lrs[0] < lrs[9]  # warmup rises
+        assert abs(lrs[9] - peak) < 1e-9  # peak at warmup end
+        assert lrs[-1] < 0.01 * peak  # decays to ~0
+        assert all(l >= 0 for l in lrs)

@@ -1,0 +1,148 @@
+//! Bench: L3 coordinator hot-path micro-benchmarks (no PJRT required).
+//!
+//! Covers every host-side operation on the decode critical path — ring
+//! insert + lazy promotion, exec-view maintenance, Quest page metadata,
+//! eviction scoring/compaction, capacity re-layout — plus the substrate
+//! (JSON codec, RNG). These are the operations the §Perf pass optimizes:
+//! the PJRT execute dominates a decode step, and the coordinator must stay
+//! well under it.
+
+use wgkv::eviction::{SnapKvConfig, SnapKvEvictor};
+use wgkv::kvcache::{dual::CacheDims, SequenceKvCache};
+use wgkv::runtime::tensor::Tensor;
+use wgkv::util::{Bench, Json, Rng};
+
+fn dims() -> CacheDims {
+    // wg-tiny's real dims.
+    CacheDims { n_layers: 4, n_kv_heads: 4, d_head: 32, w_local: 32, page_size: 16 }
+}
+
+fn decoded(rng: &mut Rng, d: CacheDims) -> (Tensor, Tensor, Tensor) {
+    let mut k = Tensor::zeros(&[d.n_layers, d.n_kv_heads, d.d_head]);
+    let mut v = Tensor::zeros(&[d.n_layers, d.n_kv_heads, d.d_head]);
+    for x in k.data.iter_mut().chain(v.data.iter_mut()) {
+        *x = rng.f32();
+    }
+    let g = Tensor::full(&[d.n_layers, d.n_kv_heads], 0.5);
+    (k, v, g)
+}
+
+fn main() {
+    let b = Bench::default();
+    let d = dims();
+    println!("# coordinator hot path (dims: L={} H={} dh={} w={})",
+             d.n_layers, d.n_kv_heads, d.d_head, d.w_local);
+
+    // --- insert_decoded (ring overwrite + lazy promotion), the per-token op.
+    {
+        let mut rng = Rng::new(0);
+        let mut cache = SequenceKvCache::new(d, 1024).unwrap();
+        let (k, v, g) = decoded(&mut rng, d);
+        let mut pos = 0i64;
+        b.run("insert_decoded/promote-half", || {
+            cache
+                .insert_decoded(&k, &v, &g, pos, |_, _, gate| gate >= 0.5 && pos % 2 == 0)
+                .unwrap();
+            pos += 1;
+            if pos % 1500 == 0 {
+                cache = SequenceKvCache::new(d, 1024).unwrap(); // reset before overflow
+            }
+        });
+    }
+
+    // --- populate_from_prefill at bucket 512.
+    {
+        let mut rng = Rng::new(1);
+        let n = 512;
+        let mut k = Tensor::zeros(&[d.n_layers, d.n_kv_heads, n, d.d_head]);
+        let mut v = Tensor::zeros(&[d.n_layers, d.n_kv_heads, n, d.d_head]);
+        for x in k.data.iter_mut().chain(v.data.iter_mut()) {
+            *x = rng.f32();
+        }
+        let mut g = Tensor::zeros(&[d.n_layers, d.n_kv_heads, n]);
+        for x in g.data.iter_mut() {
+            *x = rng.f32();
+        }
+        b.run("populate_from_prefill/n=512/keep~25%", || {
+            let mut cache = SequenceKvCache::new(d, 512).unwrap();
+            cache
+                .populate_from_prefill(&k, &v, &g, n, |_, _, _, gate| gate >= 0.75)
+                .unwrap();
+            std::hint::black_box(cache.slot_mask());
+        });
+    }
+
+    // --- Quest page metadata assembly.
+    {
+        let mut rng = Rng::new(2);
+        let mut cache = SequenceKvCache::new(d, 1024).unwrap();
+        let (k, v, g) = decoded(&mut rng, d);
+        for pos in 0..800 {
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+        }
+        b.run("page_meta_tensors/768-global", || {
+            let (pmin, pmax) = cache.page_meta_tensors();
+            std::hint::black_box((pmin.data.len(), pmax.data.len()));
+        });
+    }
+
+    // --- SnapKV scoring + eviction.
+    {
+        let mut rng = Rng::new(3);
+        let (k, v, g) = decoded(&mut rng, d);
+        b.run("snapkv/score+evict/256-global", || {
+            let mut cache = SequenceKvCache::new(d, 512).unwrap();
+            for pos in 0..288 {
+                cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+            }
+            let mut ev = SnapKvEvictor::new(SnapKvConfig {
+                budget_per_head: 128,
+                ..SnapKvConfig::default()
+            });
+            let mut q = Tensor::zeros(&[d.n_layers, 8, d.d_head]);
+            for x in q.data.iter_mut() {
+                *x = rng.f32();
+            }
+            for _ in 0..4 {
+                ev.observe(q.clone());
+            }
+            let fired = ev.maybe_evict(&mut cache, 2).unwrap();
+            std::hint::black_box(fired);
+        });
+    }
+
+    // --- capacity re-layout (the growth path).
+    {
+        let mut rng = Rng::new(4);
+        let (k, v, g) = decoded(&mut rng, d);
+        b.run("ensure_capacity/256->1024", || {
+            let mut cache = SequenceKvCache::new(d, 256).unwrap();
+            for pos in 0..200 {
+                cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+            }
+            cache.ensure_capacity(1024).unwrap();
+            std::hint::black_box(cache.capacity());
+        });
+    }
+
+    // --- substrate: JSON codec + RNG (server protocol budget).
+    {
+        let payload = Json::obj()
+            .set("op", "generate")
+            .set("prompt", "q: k07\na: ")
+            .set("max_new", 32)
+            .set("policy", "wg-kv")
+            .dump();
+        b.run("json/parse-request", || {
+            std::hint::black_box(Json::parse(&payload).unwrap());
+        });
+        let mut rng = Rng::new(5);
+        b.run("rng/u64x64", || {
+            let mut acc = 0u64;
+            for _ in 0..64 {
+                acc ^= rng.next_u64();
+            }
+            std::hint::black_box(acc);
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! Bench: Fig 1 — attention's share of prefill/decode latency and memory
+//! as context grows.
+//!
+//! Two parts:
+//! * analytic H200 sweep over the paper's 1K–500K range (always runs);
+//! * measured wg-tiny sweep over the exported buckets/capacities (runs
+//!   when artifacts exist): attention share is isolated by differencing
+//!   full-visibility against zero-visibility gate overrides, which keeps
+//!   the projection/MLP work constant while ablating attention reads.
+
+use wgkv::costmodel::{AdmissionPoint, CostModel, H200, LLAMA31_8B, QWEN3_4B};
+use wgkv::runtime::tensor::Tensor;
+use wgkv::runtime::ModelRuntime;
+use wgkv::util::{Bench, Rng};
+
+fn analytic() {
+    for llm in [LLAMA31_8B, QWEN3_4B] {
+        let m = CostModel::new(llm, H200);
+        let full = AdmissionPoint::full();
+        println!("# Fig 1 analytic — {} on {}", llm.name, H200.name);
+        println!(
+            "{:>8} {:>12} {:>13} {:>12} {:>12}",
+            "N", "prefill_s", "attn_share", "decode_ms", "kv_share"
+        );
+        for n in [1_000usize, 4_000, 16_000, 64_000, 128_000, 256_000, 500_000] {
+            let pf = m.prefill(n, full);
+            let dec = m.decode_step(n, full);
+            println!(
+                "{:>8} {:>12.3} {:>12.1}% {:>12.3} {:>11.1}%",
+                n,
+                pf.total(),
+                pf.attention_share() * 100.0,
+                dec.total() * 1e3,
+                dec.attention_share() * 100.0
+            );
+        }
+    }
+}
+
+fn measured() {
+    let dir = std::env::var("WGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = match ModelRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("fig01 measured: skipping — artifacts unavailable ({e:#})");
+            return;
+        }
+    };
+    let m = rt.manifest.model.clone();
+    let b = Bench::quick();
+    let mut rng = Rng::new(0);
+    println!("# Fig 1 measured — {} prefill per bucket (full vs local-only gates)", m.name);
+    for &n in &rt.prefill_buckets() {
+        let tokens: Vec<i32> = (0..n).map(|_| rng.usize(0, 250) as i32).collect();
+        let full = Tensor::full(&[m.n_layers, m.n_kv_heads, n], 1.0);
+        let none = Tensor::zeros(&[m.n_layers, m.n_kv_heads, n]);
+        let r_full = b.run(&format!("prefill/n={n}/full-attn"), || {
+            std::hint::black_box(rt.prefill(n, &tokens, &full, true).unwrap());
+        });
+        let r_none = b.run(&format!("prefill/n={n}/local-only"), || {
+            std::hint::black_box(rt.prefill(n, &tokens, &none, true).unwrap());
+        });
+        let share = 1.0 - r_none.median_ns / r_full.median_ns;
+        println!("  -> n={n}: distant-attention share of prefill ≈ {:.0}%", share * 100.0);
+    }
+    println!("# Fig 1 measured — decode per capacity (mask density ablation)");
+    for &c in &rt.decode_capacities() {
+        let kc = Tensor::zeros(&[m.n_layers, m.n_kv_heads, c, m.d_head]);
+        let vc = Tensor::zeros(&[m.n_layers, m.n_kv_heads, c, m.d_head]);
+        let mask = Tensor::full(&[m.n_layers, m.n_kv_heads, c], 1.0);
+        b.run(&format!("decode/cap={c}"), || {
+            std::hint::black_box(rt.decode(c, 65, c as i32, &kc, &vc, &mask).unwrap());
+        });
+    }
+}
+
+fn main() {
+    analytic();
+    measured();
+}

@@ -1,0 +1,69 @@
+//! Bench: PJRT executable micro-latency — one prefill execution per bucket
+//! and one decode execution per capacity, isolated from the coordinator.
+//! This is the L1/L2 wall-clock floor the engine-level numbers decompose
+//! against (EXPERIMENTS.md §Perf).
+//!
+//! Skips gracefully when `artifacts/` has not been built yet.
+
+use wgkv::runtime::tensor::Tensor;
+use wgkv::runtime::ModelRuntime;
+use wgkv::util::{Bench, Rng};
+
+fn main() {
+    let dir = std::env::var("WGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = match ModelRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("kernel_micro: skipping — artifacts unavailable ({e:#})");
+            return;
+        }
+    };
+    let m = rt.manifest.model.clone();
+    let b = Bench::quick();
+    let mut rng = Rng::new(0);
+
+    println!("# PJRT executable micro-latency ({})", m.name);
+
+    for &n in &rt.prefill_buckets() {
+        let tokens: Vec<i32> = (0..n).map(|_| rng.usize(0, 250) as i32).collect();
+        let ovr = Tensor::full(&[m.n_layers, m.n_kv_heads, n], 1.0);
+        b.run(&format!("prefill/n={n}/learned-gates"), || {
+            std::hint::black_box(rt.prefill(n, &tokens, &ovr, false).unwrap());
+        });
+        b.run(&format!("prefill/n={n}/override"), || {
+            std::hint::black_box(rt.prefill(n, &tokens, &ovr, true).unwrap());
+        });
+    }
+
+    for &c in &rt.decode_capacities() {
+        let mut kc = Tensor::zeros(&[m.n_layers, m.n_kv_heads, c, m.d_head]);
+        let mut vc = Tensor::zeros(&[m.n_layers, m.n_kv_heads, c, m.d_head]);
+        for x in kc.data.iter_mut().chain(vc.data.iter_mut()) {
+            *x = rng.f32();
+        }
+        let mask = Tensor::full(&[m.n_layers, m.n_kv_heads, c], 1.0);
+        b.run(&format!("decode/cap={c}/full-mask"), || {
+            std::hint::black_box(rt.decode(c, 65, c as i32, &kc, &vc, &mask).unwrap());
+        });
+        // Quarter-density mask: admission's effect at the kernel level is a
+        // smaller capacity, but mask density also matters for the interpret
+        // path — measure both.
+        let mut sparse = Tensor::zeros(&[m.n_layers, m.n_kv_heads, c]);
+        for x in sparse.data.iter_mut() {
+            *x = if rng.f32() < 0.25 { 1.0 } else { 0.0 };
+        }
+        b.run(&format!("decode/cap={c}/25%-mask"), || {
+            std::hint::black_box(rt.decode(c, 65, c as i32, &kc, &vc, &sparse).unwrap());
+        });
+        if rt.has_decode_sel(c) {
+            let p = (c - m.w_local) / m.page_size;
+            let pmin = Tensor::full(&[m.n_layers, m.n_kv_heads, p, m.d_head], -1.0);
+            let pmax = Tensor::full(&[m.n_layers, m.n_kv_heads, p, m.d_head], 1.0);
+            b.run(&format!("decode_sel/cap={c}/budget=4pages"), || {
+                std::hint::black_box(
+                    rt.decode_sel(c, 65, c as i32, &kc, &vc, &mask, &pmin, &pmax, 4).unwrap(),
+                );
+            });
+        }
+    }
+}

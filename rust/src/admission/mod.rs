@@ -1,0 +1,253 @@
+//! KV Admission policies (the paper's contribution + its §5.2 baselines).
+//!
+//! An [`AdmissionPolicy`] decides, per (layer, KV-head, token), whether a
+//! KV pair is worth persisting to the Global Cache *before* it is written —
+//! the pre-write primitive of Table 1. The engine consults it twice:
+//!
+//! 1. **Prefill** — the policy may supply a gate-override tensor that the
+//!    prefill executable uses instead of the learned Write-Gate MLP scores
+//!    (paper App. E baselines; App. I.3 random-sparsity measurement), and
+//!    the resulting gates decide Global admission for tokens outside the
+//!    local window.
+//! 2. **Decode / Lazy Promotion** — when a ring victim exits the Local
+//!    Cache, the policy decides promotion from the victim's stored gate.
+//!
+//! Policies:
+//! * [`PolicyKind::WriteGated`] — WG-KV: learned gates, threshold `tau`.
+//! * [`PolicyKind::FullCache`] — standard attention (admit everything).
+//! * [`PolicyKind::LocalOnly`] — StreamingLLM-style static policy: attention
+//!   sinks (first `sink` tokens) + sliding window only.
+//! * [`PolicyKind::DuoAttention`] — static per-head split into retrieval
+//!   heads (full cache) and streaming heads (sinks + window).
+//! * [`PolicyKind::RandomSparsity`] — admit with probability `1 - sparsity`,
+//!   the paper's App. I.3 methodology for measuring system efficiency at an
+//!   exact operating point.
+
+use crate::runtime::manifest::ModelDims;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Which admission policy to run (CLI/API surface).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// WG-KV learned admission at the manifest's tau.
+    WriteGated,
+    /// WG-KV with an explicit threshold override.
+    WriteGatedTau(f32),
+    /// Admit everything (full-attention baseline).
+    FullCache,
+    /// Sinks + sliding window only (Xiao et al., 2024). `recent` admits the
+    /// last `recent` prompt tokens in addition to the engine's `w_local`
+    /// window — sweeping it reproduces the paper's Local Attention
+    /// window-size axis (Fig 7) without re-exporting executables.
+    LocalOnly { sink: usize, recent: usize },
+    /// Static head split: `retrieval[l][h]` heads keep the full cache,
+    /// streaming heads keep sinks + window (Xiao et al., 2025).
+    DuoAttention { retrieval: Vec<Vec<bool>>, sink: usize },
+    /// Admit uniformly at random with probability `1 - sparsity` (App. I.3).
+    RandomSparsity { sparsity: f32, seed: u64 },
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::WriteGated | PolicyKind::WriteGatedTau(_) => "wg-kv",
+            PolicyKind::FullCache => "full",
+            PolicyKind::LocalOnly { .. } => "local",
+            PolicyKind::DuoAttention { .. } => "duo",
+            PolicyKind::RandomSparsity { .. } => "random",
+        }
+    }
+
+    /// Build the stateful evaluator for a model.
+    pub fn build(&self, dims: &ModelDims) -> AdmissionPolicy {
+        AdmissionPolicy { kind: self.clone(), tau: match self {
+            PolicyKind::WriteGatedTau(t) => *t,
+            _ => dims.tau,
+        }, dims: dims.clone() }
+    }
+
+    /// A DuoAttention policy with the given fraction of retrieval heads,
+    /// assigned deterministically (paper profiles offline; we take the
+    /// first `ratio * H` KV heads of every layer, matching the official
+    /// config format's per-layer head lists).
+    pub fn duo_with_ratio(dims: &ModelDims, ratio: f32, sink: usize) -> Self {
+        let n_ret = ((dims.n_kv_heads as f32) * ratio).round() as usize;
+        let retrieval = (0..dims.n_layers)
+            .map(|_| (0..dims.n_kv_heads).map(|h| h < n_ret).collect())
+            .collect();
+        PolicyKind::DuoAttention { retrieval, sink }
+    }
+}
+
+/// Stateful admission evaluator bound to one model's dimensions.
+#[derive(Debug, Clone)]
+pub struct AdmissionPolicy {
+    pub kind: PolicyKind,
+    pub tau: f32,
+    dims: ModelDims,
+}
+
+impl AdmissionPolicy {
+    /// Gate override for a prefill bucket: `Some(tensor)` to force the
+    /// executable to use policy gates, `None` for the learned gates.
+    /// The tensor is `[L, Hkv, n]` with 1.0 = admit, 0.0 = local-only.
+    /// `n_real` is the un-padded prompt length (positions `>= n_real` are
+    /// PAD and causally invisible to real queries).
+    pub fn prefill_override(&self, n: usize, n_real: usize) -> Option<Tensor> {
+        let (l, h) = (self.dims.n_layers, self.dims.n_kv_heads);
+        match &self.kind {
+            PolicyKind::WriteGated | PolicyKind::WriteGatedTau(_) => None,
+            PolicyKind::FullCache => Some(Tensor::full(&[l, h, n], 1.0)),
+            PolicyKind::LocalOnly { sink, recent } => {
+                let mut t = Tensor::zeros(&[l, h, n]);
+                let lo = n_real.saturating_sub(*recent);
+                for li in 0..l {
+                    for hi in 0..h {
+                        let s = t.slice_at_mut(&[li, hi]);
+                        for p in 0..(*sink).min(n) {
+                            s[p] = 1.0;
+                        }
+                        for p in lo..n_real {
+                            s[p] = 1.0;
+                        }
+                    }
+                }
+                Some(t)
+            }
+            PolicyKind::DuoAttention { retrieval, sink } => {
+                let mut t = Tensor::zeros(&[l, h, n]);
+                for li in 0..l {
+                    for hi in 0..h {
+                        let s = t.slice_at_mut(&[li, hi]);
+                        if retrieval[li][hi] {
+                            s.fill(1.0);
+                        } else {
+                            for p in 0..(*sink).min(n) {
+                                s[p] = 1.0;
+                            }
+                        }
+                    }
+                }
+                Some(t)
+            }
+            PolicyKind::RandomSparsity { sparsity, seed } => {
+                let mut rng = Rng::new(*seed);
+                let mut t = Tensor::zeros(&[l, h, n]);
+                for x in t.data.iter_mut() {
+                    *x = if rng.f32() >= *sparsity { 1.0 } else { 0.0 };
+                }
+                Some(t)
+            }
+        }
+    }
+
+    /// Global-cache admission decision for a prefill token outside the
+    /// local window, given the gate the executable reported.
+    pub fn admit_prefill(&self, _l: usize, _h: usize, _pos: usize, gate: f32) -> bool {
+        // For every policy the executable's effective gates (learned or
+        // override) already encode the decision; thresholding unifies them.
+        gate >= self.tau
+    }
+
+    /// Lazy-promotion decision for a decode ring victim (Fig 6d).
+    pub fn promote_decode(&self, l: usize, h: usize, gate: f32) -> bool {
+        match &self.kind {
+            PolicyKind::WriteGated | PolicyKind::WriteGatedTau(_) => gate >= self.tau,
+            PolicyKind::FullCache => true,
+            // Decoded tokens are never sinks; streaming heads drop them.
+            PolicyKind::LocalOnly { .. } => false,
+            PolicyKind::DuoAttention { retrieval, .. } => retrieval[l][h],
+            PolicyKind::RandomSparsity { sparsity, seed } => {
+                // Deterministic per-(l, h, gate-bits) hash coin.
+                let mut x = *seed ^ ((l as u64) << 32) ^ ((h as u64) << 16)
+                    ^ gate.to_bits() as u64;
+                x ^= x >> 33;
+                x = x.wrapping_mul(0xff51afd7ed558ccd);
+                x ^= x >> 33;
+                ((x >> 11) as f32 / (1u64 << 53) as f32) >= *sparsity
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(), vocab_size: 259, d_model: 64, n_layers: 2,
+            n_q_heads: 4, n_kv_heads: 2, d_head: 16, d_ff: 128,
+            rope_theta: 1e4, gate_hidden: 8, w_local: 4, tau: 0.1,
+            page_size: 4, bos: 256, eos: 257, pad: 258, gqa_group: 2,
+        }
+    }
+
+    #[test]
+    fn wg_uses_learned_gates() {
+        let p = PolicyKind::WriteGated.build(&dims());
+        assert!(p.prefill_override(8, 8).is_none());
+        assert!(p.promote_decode(0, 0, 0.5));
+        assert!(!p.promote_decode(0, 0, 0.05));
+    }
+
+    #[test]
+    fn full_admits_everything() {
+        let p = PolicyKind::FullCache.build(&dims());
+        let t = p.prefill_override(8, 8).unwrap();
+        assert!(t.data.iter().all(|&x| x == 1.0));
+        assert!(p.promote_decode(1, 1, 0.0));
+    }
+
+    #[test]
+    fn local_keeps_only_sinks() {
+        let p = PolicyKind::LocalOnly { sink: 2, recent: 0 }.build(&dims());
+        let t = p.prefill_override(8, 8).unwrap();
+        let s = t.slice_at(&[0, 0]);
+        assert_eq!(&s[..4], &[1.0, 1.0, 0.0, 0.0]);
+        assert!(!p.promote_decode(0, 0, 0.99));
+    }
+
+    #[test]
+    fn local_recent_window_tracks_real_length() {
+        // Bucket 8, real prompt 6, recent 2 -> positions 4, 5 admitted;
+        // PAD positions 6, 7 untouched.
+        let p = PolicyKind::LocalOnly { sink: 1, recent: 2 }.build(&dims());
+        let t = p.prefill_override(8, 6).unwrap();
+        let s = t.slice_at(&[1, 1]);
+        assert_eq!(s, &[1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn duo_splits_heads() {
+        let kind = PolicyKind::duo_with_ratio(&dims(), 0.5, 1);
+        let p = kind.build(&dims());
+        let t = p.prefill_override(4, 4).unwrap();
+        assert!(t.slice_at(&[0, 0]).iter().all(|&x| x == 1.0)); // retrieval head
+        assert_eq!(t.slice_at(&[0, 1]), &[1.0, 0.0, 0.0, 0.0]); // streaming head
+        assert!(p.promote_decode(0, 0, 0.0));
+        assert!(!p.promote_decode(0, 1, 0.99));
+    }
+
+    #[test]
+    fn random_hits_target_sparsity() {
+        let p = PolicyKind::RandomSparsity { sparsity: 0.75, seed: 42 }.build(&dims());
+        let t = p.prefill_override(4096, 4096).unwrap();
+        let frac = t.data.iter().filter(|&&x| x > 0.5).count() as f32 / t.data.len() as f32;
+        assert!((frac - 0.25).abs() < 0.02, "admit fraction {frac}");
+        let n = 10_000;
+        let kept = (0..n)
+            .filter(|&i| p.promote_decode(0, 0, i as f32 / n as f32))
+            .count();
+        let frac = kept as f32 / n as f32;
+        assert!((frac - 0.25).abs() < 0.03, "promote fraction {frac}");
+    }
+
+    #[test]
+    fn tau_override_applies() {
+        let p = PolicyKind::WriteGatedTau(0.5).build(&dims());
+        assert!(!p.promote_decode(0, 0, 0.3));
+        assert!(p.admit_prefill(0, 0, 0, 0.6));
+    }
+}

@@ -1,0 +1,458 @@
+//! The inference engine: glues the PJRT runtime, the dual paged KV cache,
+//! and the three KV-management primitives into a serving loop.
+//!
+//! Per-request flow (paper §4):
+//!
+//! 1. **Prefill** — the prompt runs through the smallest fitting bucket
+//!    executable; the admission policy may override the learned gates
+//!    (baselines, App. E / I.3). Tokens in the trailing `w_local` window go
+//!    to the Local Cache; earlier tokens enter the Global Cache iff
+//!    admitted ("Initial Cache Population", §4.2).
+//! 2. **Decode** — each step runs the fixed-capacity decode executable over
+//!    the cache's execution view, then applies **Lazy Promotion** (Fig 6d):
+//!    the ring victim is promoted iff its stored gate clears `tau`.
+//!    Optionally Quest read-time selection runs fused in the executable
+//!    (§5.4) and SnapKV post-write eviction bounds the global region
+//!    (App. K) — the three primitives compose.
+//!
+//! The engine is synchronous and single-sequence per call; concurrency is
+//! the scheduler's job ([`crate::scheduler`]).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::admission::{AdmissionPolicy, PolicyKind};
+use crate::eviction::{SnapKvConfig, SnapKvEvictor};
+use crate::kvcache::{dual::CacheDims, CacheStats, SequenceKvCache};
+use crate::metrics::EngineMetrics;
+use crate::model::{ByteTokenizer, Sampler};
+use crate::runtime::manifest::ModelDims;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::ModelRuntime;
+use crate::selection::QuestConfig;
+
+/// Engine-level configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Extra decode slots requested beyond the post-prefill requirement, to
+    /// avoid early capacity re-layouts during decode.
+    pub capacity_headroom: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { capacity_headroom: 16 }
+    }
+}
+
+/// Per-session options: which admission policy runs, and which optional
+/// primitives compose with it.
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    pub policy: PolicyKind,
+    /// Read-time selection (paper §5.4, Fig 9).
+    pub quest: Option<QuestConfig>,
+    /// Post-write eviction under a hard budget (paper App. K, Fig 10/16).
+    pub snapkv: Option<SnapKvConfig>,
+}
+
+impl SessionOptions {
+    pub fn policy(policy: PolicyKind) -> Self {
+        Self { policy, quest: None, snapkv: None }
+    }
+}
+
+/// One in-flight sequence: dual cache + composition state.
+pub struct Session {
+    policy: AdmissionPolicy,
+    quest: Option<QuestConfig>,
+    evictor: Option<SnapKvEvictor>,
+    cache: Option<SequenceKvCache>,
+    /// Absolute position of the next token.
+    pos: usize,
+    /// Prompt length (for normalized cache-size reporting).
+    prompt_len: usize,
+    /// Logits for the next token (set by prefill and every decode step).
+    pub last_logits: Vec<f32>,
+    /// Per-head gates of the prompt, `[L, Hkv, n_bucket]` (Fig 13 analysis).
+    pub prefill_gates: Option<Tensor>,
+    /// Queries from the most recent decode step, `[L, Hq, dh]` — feeds the
+    /// host-side Quest fallback (one-step-stale selection) and analysis
+    /// examples.
+    pub last_q: Option<Tensor>,
+}
+
+impl Session {
+    /// Resident KV tokens across all (layer, head) caches.
+    pub fn resident_tokens(&self) -> usize {
+        let Some(c) = &self.cache else { return 0 };
+        let d = c.dims();
+        (0..d.n_layers)
+            .flat_map(|l| (0..d.n_kv_heads).map(move |h| (l, h)))
+            .map(|(l, h)| c.head_len(l, h))
+            .sum()
+    }
+
+    /// Normalized KV cache size vs a full cache at the current position
+    /// (the x-axis of Fig 7 / 14).
+    pub fn cache_fraction(&self) -> f64 {
+        let Some(c) = &self.cache else { return 0.0 };
+        let d = c.dims();
+        let denom = (self.pos * d.n_heads_total()).max(1);
+        self.resident_tokens() as f64 / denom as f64
+    }
+
+    /// Per-head resident sizes normalized by the sequence length
+    /// (Fig 13's heatmap values), `[L][Hkv]`.
+    pub fn head_cache_fractions(&self) -> Vec<Vec<f64>> {
+        let Some(c) = &self.cache else { return Vec::new() };
+        let d = c.dims();
+        (0..d.n_layers)
+            .map(|l| {
+                (0..d.n_kv_heads)
+                    .map(|h| c.head_len(l, h) as f64 / self.pos.max(1) as f64)
+                    .collect()
+            })
+            .collect()
+    }
+
+    pub fn cache(&self) -> Option<&SequenceKvCache> {
+        self.cache.as_ref()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats).unwrap_or_default()
+    }
+
+    pub fn eviction_triggers(&self) -> u64 {
+        self.evictor.as_ref().map(|e| e.triggers).unwrap_or(0)
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn policy_kind(&self) -> &PolicyKind {
+        &self.policy.kind
+    }
+}
+
+/// Result of a full `generate` call.
+#[derive(Debug, Clone)]
+pub struct GenOut {
+    /// Decoded continuation text (prompt excluded).
+    pub text: String,
+    /// Generated token ids (EOS excluded).
+    pub tokens: Vec<i32>,
+    /// Prefill wall-clock, microseconds.
+    pub prefill_us: f64,
+    /// Mean decode-step wall-clock, microseconds.
+    pub decode_us_mean: f64,
+    /// Cache lifetime counters.
+    pub stats: CacheStats,
+    /// Final normalized cache size (Fig 7 x-axis).
+    pub cache_fraction: f64,
+    /// Resident KV tokens at the end of generation.
+    pub resident_tokens: usize,
+    /// Eviction triggers fired (Fig 16).
+    pub eviction_triggers: u64,
+    /// Physical KV bytes allocated in the paged pool at the end.
+    pub kv_bytes: usize,
+}
+
+/// The serving engine. See module docs.
+pub struct Engine {
+    runtime: ModelRuntime,
+    pub tokenizer: ByteTokenizer,
+    pub metrics: EngineMetrics,
+    cfg: EngineConfig,
+}
+
+impl Engine {
+    /// Load artifacts (manifest + params + executables) from `dir`.
+    pub fn load(dir: impl AsRef<Path>, cfg: EngineConfig) -> Result<Self> {
+        let runtime = ModelRuntime::load(dir).context("loading model runtime")?;
+        let tokenizer = ByteTokenizer::from_dims(&runtime.manifest.model);
+        Ok(Self { runtime, tokenizer, metrics: EngineMetrics::new(), cfg })
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.runtime.manifest.model
+    }
+
+    /// Swap in a different trained-gate variant (λ sweep, Fig 7/10).
+    pub fn load_variant(&mut self, file: &str) -> Result<()> {
+        self.runtime.load_variant(file)
+    }
+
+    /// Largest prompt the exported buckets can hold.
+    pub fn max_prompt_len(&self) -> usize {
+        self.runtime.prefill_buckets().last().copied().unwrap_or(0)
+    }
+
+    /// Largest decode capacity exported.
+    pub fn max_capacity(&self) -> usize {
+        self.runtime.decode_capacities().last().copied().unwrap_or(0)
+    }
+
+    fn cache_dims(&self) -> CacheDims {
+        let m = self.dims();
+        CacheDims {
+            n_layers: m.n_layers,
+            n_kv_heads: m.n_kv_heads,
+            d_head: m.d_head,
+            w_local: m.w_local,
+            page_size: m.page_size,
+        }
+    }
+
+    /// Open a session. The KV cache is allocated at prefill time, when the
+    /// post-admission occupancy is known.
+    pub fn start_session(&self, opts: SessionOptions) -> Session {
+        let m = self.dims();
+        Session {
+            policy: opts.policy.build(m),
+            quest: opts.quest,
+            evictor: opts.snapkv.map(SnapKvEvictor::new),
+            cache: None,
+            pos: 0,
+            prompt_len: 0,
+            last_logits: Vec::new(),
+            prefill_gates: None,
+            last_q: None,
+        }
+    }
+
+    /// Run prefill for `tokens`, populating the session's dual cache and
+    /// leaving next-token logits in `session.last_logits`.
+    ///
+    /// Prompts longer than the largest exported bucket are handled by
+    /// *chunked prefill*: the first `max_bucket` tokens go through the
+    /// parallel prefill executable, the remainder is teacher-forced through
+    /// the decode path (each token subject to the same lazy-promotion
+    /// admission) — exactly what a serving engine with admission does when
+    /// a prompt outgrows its longest kernel.
+    pub fn prefill(&mut self, sess: &mut Session, tokens: &[i32]) -> Result<()> {
+        let n = tokens.len();
+        if n == 0 {
+            bail!("empty prompt");
+        }
+        let max_bucket = self.max_prompt_len();
+        if n > max_bucket {
+            let (head, tail) = tokens.split_at(max_bucket);
+            self.prefill(sess, head)?;
+            for &t in tail {
+                self.decode_step(sess, t)?;
+            }
+            sess.prompt_len = n;
+            return Ok(());
+        }
+        let m = self.dims().clone();
+        let bucket = self.runtime.pick_prefill_bucket(n)?;
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, m.pad);
+
+        let t0 = Instant::now();
+        let (override_t, flag) = match sess.policy.prefill_override(bucket, n) {
+            Some(t) => (t, true),
+            None => (Tensor::zeros(&[m.n_layers, m.n_kv_heads, bucket]), false),
+        };
+        let out = self.runtime.prefill(bucket, &padded, &override_t, flag)?;
+
+        // Size the execution view: fullest head's admitted count decides
+        // the decode capacity (per-head raggedness lives in the mask).
+        let window_start = n.saturating_sub(m.w_local);
+        let mut max_admitted = 0usize;
+        for l in 0..m.n_layers {
+            for h in 0..m.n_kv_heads {
+                let g = out.gates.slice_at(&[l, h]);
+                let admitted = (0..window_start)
+                    .filter(|&t| sess.policy.admit_prefill(l, h, t, g[t]))
+                    .count();
+                max_admitted = max_admitted.max(admitted);
+            }
+        }
+        let required = max_admitted + 1 + m.w_local + self.cfg.capacity_headroom;
+        let cap = self
+            .runtime
+            .pick_decode_capacity(required)
+            .map_err(|e| anyhow!("KV OOM at prefill: {e}"))?;
+
+        let mut cache = SequenceKvCache::new(self.cache_dims(), cap)?;
+        let policy = &sess.policy;
+        cache.populate_from_prefill(&out.k, &out.v, &out.gates, n, |l, h, t, g| {
+            policy.admit_prefill(l, h, t, g)
+        })?;
+
+        sess.cache = Some(cache);
+        sess.pos = n;
+        sess.prompt_len = n;
+        let logits_row = out.logits.slice_at(&[n - 1]).to_vec();
+        sess.last_logits = logits_row;
+        sess.prefill_gates = Some(out.gates);
+
+        let dt = t0.elapsed();
+        self.metrics.prefill.record(dt);
+        self.metrics.prompt_tokens += n as u64;
+        Ok(())
+    }
+
+    /// Run one decode step: execute the model on `token`, apply Lazy
+    /// Promotion, then (optionally) SnapKV eviction. Leaves the next
+    /// token's logits in `session.last_logits`.
+    pub fn decode_step(&mut self, sess: &mut Session, token: i32) -> Result<()> {
+        let m = self.dims().clone();
+        let t0 = Instant::now();
+        {
+            let cache = sess.cache.as_mut().context("decode before prefill")?;
+            // Grow the execution view when the fullest head approaches the
+            // current executable's capacity.
+            let required = cache.required_slots();
+            if required > cache.capacity() {
+                let cap = self
+                    .runtime
+                    .pick_decode_capacity(required)
+                    .map_err(|e| anyhow!("KV OOM at decode (pos {}): {e}", sess.pos))?;
+                cache.ensure_capacity(cap)?;
+            }
+        }
+        let cache = sess.cache.as_ref().unwrap();
+        let cap = cache.capacity();
+        let out = if let Some(q) = &sess.quest {
+            if self.runtime.has_decode_sel(cap) {
+                // Fused path: selection runs inside the executable against
+                // the *current* token's queries.
+                let (pmin, pmax) = cache.page_meta_tensors();
+                self.runtime.decode_sel(
+                    cap,
+                    token,
+                    sess.pos as i32,
+                    cache.k_exec(),
+                    cache.v_exec(),
+                    cache.slot_mask(),
+                    &pmin,
+                    &pmax,
+                    q.budget_pages(m.page_size),
+                )?
+            } else if let Some(prev_q) = &sess.last_q {
+                // Host fallback: select with the previous step's queries
+                // (one-token-stale, see selection::host_selected_mask).
+                let (pmin, pmax) = cache.page_meta_tensors();
+                let masked = crate::selection::host_selected_mask(
+                    cache.slot_mask(),
+                    prev_q,
+                    &pmin,
+                    &pmax,
+                    m.gqa_group,
+                    m.page_size,
+                    m.w_local,
+                    q.budget_pages(m.page_size) as usize,
+                );
+                self.runtime.decode(
+                    cap,
+                    token,
+                    sess.pos as i32,
+                    cache.k_exec(),
+                    cache.v_exec(),
+                    &masked,
+                )?
+            } else {
+                // First decode step with no query history: read everything.
+                self.runtime.decode(
+                    cap,
+                    token,
+                    sess.pos as i32,
+                    cache.k_exec(),
+                    cache.v_exec(),
+                    cache.slot_mask(),
+                )?
+            }
+        } else {
+            self.runtime.decode(
+                cap,
+                token,
+                sess.pos as i32,
+                cache.k_exec(),
+                cache.v_exec(),
+                cache.slot_mask(),
+            )?
+        };
+
+        let t1 = Instant::now();
+        let cache = sess.cache.as_mut().unwrap();
+        let policy = &sess.policy;
+        cache.insert_decoded(&out.k_new, &out.v_new, &out.g_new, sess.pos as i64, |l, h, g| {
+            policy.promote_decode(l, h, g)
+        })?;
+        if let Some(ev) = &mut sess.evictor {
+            ev.observe(out.q.clone());
+            let fired = ev.maybe_evict(cache, m.gqa_group)?;
+            if fired > 0 {
+                self.metrics.eviction_triggers += 1;
+            }
+        }
+        self.metrics.cache_update.record(t1.elapsed());
+
+        sess.last_q = Some(out.q);
+        sess.last_logits = out.logits;
+        sess.pos += 1;
+        self.metrics.decode_step.record(t0.elapsed());
+        self.metrics.generated_tokens += 1;
+        Ok(())
+    }
+
+    /// Prefill + autoregressive decode until EOS or `max_new` tokens.
+    pub fn generate(
+        &mut self,
+        prompt_tokens: &[i32],
+        max_new: usize,
+        opts: SessionOptions,
+        sampler: &mut Sampler,
+    ) -> Result<GenOut> {
+        let mut sess = self.start_session(opts);
+        let t0 = Instant::now();
+        self.prefill(&mut sess, prompt_tokens)?;
+        let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let eos = self.dims().eos;
+        let mut tokens = Vec::with_capacity(max_new);
+        let t1 = Instant::now();
+        for _ in 0..max_new {
+            let tok = sampler.sample(&sess.last_logits);
+            if tok == eos {
+                break;
+            }
+            tokens.push(tok);
+            self.decode_step(&mut sess, tok)?;
+        }
+        let steps = tokens.len().max(1);
+        let decode_us_mean = t1.elapsed().as_secs_f64() * 1e6 / steps as f64;
+
+        self.metrics.requests_done += 1;
+        Ok(GenOut {
+            text: self.tokenizer.decode(&tokens),
+            tokens,
+            prefill_us,
+            decode_us_mean,
+            stats: sess.cache_stats(),
+            cache_fraction: sess.cache_fraction(),
+            resident_tokens: sess.resident_tokens(),
+            eviction_triggers: sess.eviction_triggers(),
+            kv_bytes: sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0),
+        })
+    }
+
+    /// Convenience wrapper: greedy generation from a text prompt.
+    pub fn generate_text(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        policy: PolicyKind,
+    ) -> Result<GenOut> {
+        let toks = self.tokenizer.encode(prompt);
+        let mut sampler = Sampler::greedy();
+        self.generate(&toks, max_new, SessionOptions::policy(policy), &mut sampler)
+    }
+}

@@ -1,0 +1,230 @@
+//! Post-write KV Eviction (SnapKV-like, paper App. K.1 / Fig 10, 16).
+//!
+//! Eviction bounds the cache under a hard per-head budget: when a head's
+//! Global Cache exceeds the budget, the bottom `evict_frac` of tokens by
+//! importance are removed. Importance follows the paper's three-step recipe:
+//!
+//! 1. **Attention computation** — post-softmax scores of the last `w_obs`
+//!    observed queries (per query head of the GQA group) against the head's
+//!    global keys;
+//! 2. **Score aggregation** — `S_raw[j] = sum_i max_h A[h][i][j]`;
+//! 3. **Local smoothing** — max-pool over `j` with kernel `w_pool`.
+//!
+//! Queries are captured from the decode executable's `q` output into a
+//! [`QueryRing`] observation window. Eviction never touches the Local
+//! Cache (the window is the paper's protected observation region).
+
+use anyhow::Result;
+
+use crate::kvcache::SequenceKvCache;
+use crate::runtime::tensor::Tensor;
+
+/// SnapKV-style eviction configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnapKvConfig {
+    /// Hard Global Cache budget per (layer, head), in tokens (paper: 4096
+    /// average per head at 32K ctx; scale to the deployment).
+    pub budget_per_head: usize,
+    /// Fraction of the head's cache evicted per trigger (paper: 10%).
+    pub evict_frac: f32,
+    /// Observation window length (paper: 256 queries).
+    pub w_obs: usize,
+    /// Max-pool smoothing kernel (paper: 5).
+    pub w_pool: usize,
+}
+
+impl Default for SnapKvConfig {
+    fn default() -> Self {
+        Self { budget_per_head: 4096, evict_frac: 0.10, w_obs: 32, w_pool: 5 }
+    }
+}
+
+/// Ring buffer of recent per-layer queries (`[L, Hq, dh]` each).
+pub struct QueryRing {
+    window: Vec<Tensor>,
+    cap: usize,
+    next: usize,
+    len: usize,
+}
+
+impl QueryRing {
+    pub fn new(cap: usize) -> Self {
+        Self { window: Vec::with_capacity(cap), cap: cap.max(1), next: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, q: Tensor) {
+        if self.window.len() < self.cap {
+            self.window.push(q);
+        } else {
+            self.window[self.next] = q;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Iterate over the stored queries (order irrelevant for scoring).
+    pub fn iter(&self) -> impl Iterator<Item = &Tensor> {
+        self.window.iter().take(self.len)
+    }
+}
+
+/// Stateful evictor for one session.
+pub struct SnapKvEvictor {
+    pub cfg: SnapKvConfig,
+    pub queries: QueryRing,
+    /// Number of times eviction fired (Fig 16's "# Eviction Triggers").
+    pub triggers: u64,
+    /// Total tokens evicted.
+    pub evicted_tokens: u64,
+}
+
+impl SnapKvEvictor {
+    pub fn new(cfg: SnapKvConfig) -> Self {
+        Self { cfg, queries: QueryRing::new(cfg.w_obs), triggers: 0, evicted_tokens: 0 }
+    }
+
+    /// Record the decode step's `[L, Hq, dh]` queries.
+    pub fn observe(&mut self, q: Tensor) {
+        self.queries.push(q);
+    }
+
+    /// Importance scores for (l, h)'s global tokens (paper K.1 steps 1-3).
+    pub fn score_head(
+        &self,
+        cache: &SequenceKvCache,
+        l: usize,
+        h: usize,
+        gqa_group: usize,
+    ) -> Result<Vec<f32>> {
+        let n = cache.global_len(l, h);
+        let dh = cache.dims().d_head;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut s_raw = vec![0.0f32; n];
+        if n == 0 {
+            return Ok(s_raw);
+        }
+        // Gather keys once.
+        let keys: Vec<&[f32]> = (0..n).map(|i| cache.global_key(l, h, i).unwrap()).collect();
+        for q_t in self.queries.iter() {
+            // max over the query heads of this KV head's group.
+            let mut best = vec![f32::NEG_INFINITY; n];
+            for g in 0..gqa_group {
+                let qh = h * gqa_group + g;
+                let qv = &q_t.slice_at(&[l, qh])[..dh];
+                // softmax over the global keys.
+                let mut scores: Vec<f32> = keys
+                    .iter()
+                    .map(|k| k.iter().zip(qv).map(|(a, b)| a * b).sum::<f32>() * scale)
+                    .collect();
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0;
+                for s in scores.iter_mut() {
+                    *s = (*s - m).exp();
+                    sum += *s;
+                }
+                for (j, s) in scores.iter().enumerate() {
+                    best[j] = best[j].max(s / sum.max(1e-30));
+                }
+            }
+            for j in 0..n {
+                s_raw[j] += best[j];
+            }
+        }
+        Ok(max_pool_1d(&s_raw, self.cfg.w_pool))
+    }
+
+    /// Check every head; evict where the global region exceeds the budget.
+    /// Returns the number of heads evicted this call.
+    pub fn maybe_evict(&mut self, cache: &mut SequenceKvCache, gqa_group: usize) -> Result<usize> {
+        if self.queries.is_empty() {
+            return Ok(0);
+        }
+        let dims = cache.dims();
+        let mut fired = 0;
+        for l in 0..dims.n_layers {
+            for h in 0..dims.n_kv_heads {
+                let n = cache.global_len(l, h);
+                if n <= self.cfg.budget_per_head {
+                    continue;
+                }
+                let scores = self.score_head(cache, l, h, gqa_group)?;
+                let n_evict = ((n as f32) * self.cfg.evict_frac).ceil() as usize;
+                let keep = bottom_k_mask(&scores, n_evict);
+                let evicted = cache.evict_global(l, h, &keep)?;
+                self.evicted_tokens += evicted as u64;
+                fired += 1;
+            }
+        }
+        if fired > 0 {
+            self.triggers += 1;
+        }
+        Ok(fired)
+    }
+}
+
+/// Max-pool with kernel `w` (odd preferred), same-length output.
+pub fn max_pool_1d(xs: &[f32], w: usize) -> Vec<f32> {
+    let n = xs.len();
+    let half = w / 2;
+    (0..n)
+        .map(|i| {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(n);
+            xs[lo..hi].iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        })
+        .collect()
+}
+
+/// Keep-mask that drops the `n_evict` lowest-scoring entries.
+pub fn bottom_k_mask(scores: &[f32], n_evict: usize) -> Vec<bool> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut keep = vec![true; scores.len()];
+    for &i in idx.iter().take(n_evict.min(scores.len())) {
+        keep[i] = false;
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_smooths_neighborhood() {
+        let xs = vec![0.0, 5.0, 0.0, 0.0, 0.0, 1.0];
+        let p = max_pool_1d(&xs, 3);
+        assert_eq!(p, vec![5.0, 5.0, 5.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn max_pool_kernel_one_is_identity() {
+        let xs = vec![3.0, 1.0, 2.0];
+        assert_eq!(max_pool_1d(&xs, 1), xs);
+    }
+
+    #[test]
+    fn bottom_k_drops_lowest() {
+        let keep = bottom_k_mask(&[0.5, 0.1, 0.9, 0.2], 2);
+        assert_eq!(keep, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn query_ring_wraps() {
+        let mut r = QueryRing::new(2);
+        for i in 0..3 {
+            r.push(Tensor::full(&[1], i as f32));
+        }
+        assert_eq!(r.len(), 2);
+        let vals: Vec<f32> = r.iter().map(|t| t.data[0]).collect();
+        assert!(vals.contains(&1.0) && vals.contains(&2.0));
+    }
+}

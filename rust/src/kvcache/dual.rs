@@ -1,0 +1,669 @@
+//! Per-sequence dual Local/Global cache with Lazy Promotion (paper §4.1/§4.3).
+//!
+//! Every (layer, KV-head) owns:
+//! * a **Local Cache** — a `w_local`-slot ring buffer of the most recent
+//!   tokens, unconditionally retained (the "grace period" of §2.3). Token at
+//!   absolute position `p` maps to ring index `p % w_local`, so the slot a
+//!   new token overwrites always holds the oldest resident — the promotion
+//!   "victim" of Fig 6d;
+//! * a **Global Cache** — an append-only (modulo eviction) page-table-backed
+//!   region of admitted tokens.
+//!
+//! **Lazy Promotion** (Fig 6d): when a new token claims a ring slot, the
+//! victim is inspected; if its stored gate `g >= tau` it is promoted into
+//! the Global Cache, otherwise it is discarded permanently.
+//!
+//! The struct also maintains the *execution view* consumed by the
+//! fixed-shape decode executable: capacity-`cap` K/V slot buffers plus a
+//! validity mask, updated incrementally (O(d_head) per token) so the decode
+//! hot path never re-gathers the whole cache. Layout: global tokens at
+//! slots `[0, cap - w_local)`, the ring at `[cap - w_local, cap)`.
+//! Quest page metadata (elementwise key min/max per global page, §5.4) is
+//! maintained on the same writes.
+
+use anyhow::{bail, Result};
+
+use super::pool::{KvPool, PageId, PageTable};
+use crate::runtime::tensor::Tensor;
+
+/// Static dimensions of a cache instance.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheDims {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub w_local: usize,
+    pub page_size: usize,
+}
+
+impl CacheDims {
+    pub fn n_heads_total(&self) -> usize {
+        self.n_layers * self.n_kv_heads
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct LocalEntry {
+    occupied: bool,
+    gate: f32,
+    pos: i64,
+}
+
+/// One (layer, head)'s logical caches + Quest page metadata.
+struct HeadCache {
+    global: PageTable,
+    /// Fixed pages backing the ring buffer (ceil(w_local / page_size)).
+    local_pages: Vec<PageId>,
+    local: Vec<LocalEntry>,
+    /// Per-global-page elementwise key bounds, `num_pages * d_head` each.
+    kmin: Vec<f32>,
+    kmax: Vec<f32>,
+}
+
+/// Lifetime counters for one sequence (paper Fig 16 reports these).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Tokens admitted to Global at prefill.
+    pub prefill_admitted: u64,
+    /// Tokens dropped at prefill (outside window, gate below tau).
+    pub prefill_discarded: u64,
+    /// Ring victims promoted to Global during decode.
+    pub promotions: u64,
+    /// Ring victims discarded during decode.
+    pub discards: u64,
+    /// Tokens removed by eviction.
+    pub evicted: u64,
+}
+
+/// Per-sequence dual-cache state + execution view.
+pub struct SequenceKvCache {
+    dims: CacheDims,
+    pool: KvPool,
+    heads: Vec<HeadCache>,
+    cap: usize,
+    k_exec: Tensor,
+    v_exec: Tensor,
+    mask: Tensor,
+    pub stats: CacheStats,
+}
+
+impl SequenceKvCache {
+    /// Create an empty cache with execution capacity `cap` (must be at
+    /// least `w_local + 1` and match an exported decode executable).
+    pub fn new(dims: CacheDims, cap: usize) -> Result<Self> {
+        if cap < dims.w_local {
+            bail!("capacity {cap} < w_local {}", dims.w_local);
+        }
+        let mut pool = KvPool::new(dims.page_size, dims.d_head);
+        let local_page_count = dims.w_local.div_ceil(dims.page_size);
+        let heads = (0..dims.n_heads_total())
+            .map(|_| HeadCache {
+                global: PageTable::new(dims.page_size),
+                local_pages: (0..local_page_count).map(|_| pool.alloc()).collect(),
+                local: vec![LocalEntry::default(); dims.w_local],
+                kmin: Vec::new(),
+                kmax: Vec::new(),
+            })
+            .collect();
+        let (l, h, dh) = (dims.n_layers, dims.n_kv_heads, dims.d_head);
+        Ok(Self {
+            dims,
+            pool,
+            heads,
+            cap,
+            k_exec: Tensor::zeros(&[l, h, cap, dh]),
+            v_exec: Tensor::zeros(&[l, h, cap, dh]),
+            mask: Tensor::zeros(&[l, h, cap]),
+            stats: CacheStats::default(),
+        })
+    }
+
+    pub fn dims(&self) -> CacheDims {
+        self.dims
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    fn head_idx(&self, l: usize, h: usize) -> usize {
+        debug_assert!(l < self.dims.n_layers && h < self.dims.n_kv_heads);
+        l * self.dims.n_kv_heads + h
+    }
+
+    /// Number of global-region slots at the current capacity.
+    pub fn n_global_slots(&self) -> usize {
+        self.cap - self.dims.w_local
+    }
+
+    pub fn global_len(&self, l: usize, h: usize) -> usize {
+        self.heads[self.head_idx(l, h)].global.len()
+    }
+
+    pub fn local_len(&self, l: usize, h: usize) -> usize {
+        self.heads[self.head_idx(l, h)]
+            .local
+            .iter()
+            .filter(|e| e.occupied)
+            .count()
+    }
+
+    /// Tokens resident for (l, h) — the per-head KV cache size of Fig 13.
+    pub fn head_len(&self, l: usize, h: usize) -> usize {
+        self.global_len(l, h) + self.local_len(l, h)
+    }
+
+    /// Exec slots needed to run a decode step right now: the fullest head's
+    /// occupancy must fit after up to one promotion per head.
+    pub fn required_slots(&self) -> usize {
+        let max_global = (0..self.dims.n_layers)
+            .flat_map(|l| (0..self.dims.n_kv_heads).map(move |h| (l, h)))
+            .map(|(l, h)| self.global_len(l, h))
+            .max()
+            .unwrap_or(0);
+        max_global + 1 + self.dims.w_local
+    }
+
+    pub fn k_exec(&self) -> &Tensor {
+        &self.k_exec
+    }
+
+    pub fn v_exec(&self) -> &Tensor {
+        &self.v_exec
+    }
+
+    pub fn slot_mask(&self) -> &Tensor {
+        &self.mask
+    }
+
+    /// Physical KV bytes currently allocated in the paged pool.
+    pub fn allocated_kv_bytes(&self) -> usize {
+        self.pool.allocated_kv_bytes()
+    }
+
+    /// Pool-level stats (fragmentation analysis).
+    pub fn pool_stats(&self) -> super::pool::PoolStats {
+        self.pool.stats()
+    }
+
+    /// Internal fragmentation across global page tables, in token slots.
+    pub fn slack_slots(&self) -> usize {
+        self.heads.iter().map(|hc| hc.global.slack_slots()).sum()
+    }
+
+    // -- exec-view helpers ---------------------------------------------------
+
+    fn write_exec(&mut self, l: usize, h: usize, slot: usize, k: &[f32], v: &[f32]) {
+        let dh = self.dims.d_head;
+        let kdst = self.k_exec.slice_at_mut(&[l, h]);
+        kdst[slot * dh..(slot + 1) * dh].copy_from_slice(k);
+        let vdst = self.v_exec.slice_at_mut(&[l, h]);
+        vdst[slot * dh..(slot + 1) * dh].copy_from_slice(v);
+        self.mask.slice_at_mut(&[l, h])[slot] = 1.0;
+    }
+
+    fn ring_exec_slot(&self, ring_idx: usize) -> usize {
+        self.cap - self.dims.w_local + ring_idx
+    }
+
+    // -- Quest metadata --------------------------------------------------------
+
+    fn update_page_meta(hc: &mut HeadCache, dh: usize, global_idx: usize, k: &[f32], page_size: usize) {
+        let page = global_idx / page_size;
+        if hc.kmin.len() < (page + 1) * dh {
+            hc.kmin.resize((page + 1) * dh, f32::INFINITY);
+            hc.kmax.resize((page + 1) * dh, f32::NEG_INFINITY);
+        }
+        let mn = &mut hc.kmin[page * dh..(page + 1) * dh];
+        let mx = &mut hc.kmax[page * dh..(page + 1) * dh];
+        for d in 0..dh {
+            mn[d] = mn[d].min(k[d]);
+            mx[d] = mx[d].max(k[d]);
+        }
+    }
+
+    /// Assemble `[L, Hkv, P, dh]` Quest page bounds for the current
+    /// capacity (P = n_global_slots / page_size). Pages beyond a head's
+    /// occupancy get +inf/-inf bounds (they are masked out in-kernel).
+    pub fn page_meta_tensors(&self) -> (Tensor, Tensor) {
+        let dims = self.dims;
+        let p = self.n_global_slots() / dims.page_size;
+        let dh = dims.d_head;
+        let mut pmin = Tensor::full(&[dims.n_layers, dims.n_kv_heads, p, dh], f32::INFINITY);
+        let mut pmax = Tensor::full(&[dims.n_layers, dims.n_kv_heads, p, dh], f32::NEG_INFINITY);
+        for l in 0..dims.n_layers {
+            for h in 0..dims.n_kv_heads {
+                let hc = &self.heads[self.head_idx(l, h)];
+                let n = (hc.kmin.len() / dh).min(p);
+                pmin.slice_at_mut(&[l, h])[..n * dh].copy_from_slice(&hc.kmin[..n * dh]);
+                pmax.slice_at_mut(&[l, h])[..n * dh].copy_from_slice(&hc.kmax[..n * dh]);
+            }
+        }
+        (pmin, pmax)
+    }
+
+    // -- writes ----------------------------------------------------------------
+
+    /// Append a token to (l, h)'s Global Cache: pool write, exec-view write,
+    /// Quest metadata update.
+    fn global_append(
+        &mut self,
+        l: usize,
+        h: usize,
+        k: &[f32],
+        v: &[f32],
+        gate: f32,
+        pos: i64,
+    ) -> Result<()> {
+        let hi = self.head_idx(l, h);
+        let idx = self.heads[hi].global.len();
+        if idx >= self.n_global_slots() {
+            bail!(
+                "global region overflow at (l={l}, h={h}): {idx} >= {} — \
+                 caller must ensure_capacity first",
+                self.n_global_slots()
+            );
+        }
+        let (page, slot) = self.heads[hi].global.append(&mut self.pool);
+        self.pool.write_token(page, slot, k, v, gate, pos);
+        let (dh, ps) = (self.dims.d_head, self.dims.page_size);
+        Self::update_page_meta(&mut self.heads[hi], dh, idx, k, ps);
+        self.write_exec(l, h, idx, k, v);
+        Ok(())
+    }
+
+    /// Write a token into (l, h)'s ring slot (pool + exec view).
+    fn local_write(
+        &mut self,
+        l: usize,
+        h: usize,
+        ring_idx: usize,
+        k: &[f32],
+        v: &[f32],
+        gate: f32,
+        pos: i64,
+    ) {
+        let hi = self.head_idx(l, h);
+        let ps = self.dims.page_size;
+        let (page, slot) = (
+            self.heads[hi].local_pages[ring_idx / ps],
+            ring_idx % ps,
+        );
+        self.pool.write_token(page, slot, k, v, gate, pos);
+        self.heads[hi].local[ring_idx] = LocalEntry { occupied: true, gate, pos };
+        let exec_slot = self.ring_exec_slot(ring_idx);
+        self.write_exec(l, h, exec_slot, k, v);
+    }
+
+    /// Populate from prefill outputs. `k`/`v`: `[L, Hkv, n_bucket, dh]`,
+    /// `gates`: `[L, Hkv, n_bucket]`; only the first `n_tokens` positions
+    /// are real. `admit(l, h, pos, gate)` decides Global admission for
+    /// tokens that fall outside the trailing local window (paper §4.2
+    /// "Initial Cache Population").
+    pub fn populate_from_prefill(
+        &mut self,
+        k: &Tensor,
+        v: &Tensor,
+        gates: &Tensor,
+        n_tokens: usize,
+        mut admit: impl FnMut(usize, usize, usize, f32) -> bool,
+    ) -> Result<()> {
+        let dims = self.dims;
+        let dh = dims.d_head;
+        let window_start = n_tokens.saturating_sub(dims.w_local);
+        for l in 0..dims.n_layers {
+            for h in 0..dims.n_kv_heads {
+                let ksrc = k.slice_at(&[l, h]);
+                let vsrc = v.slice_at(&[l, h]);
+                let gsrc = gates.slice_at(&[l, h]);
+                for t in 0..n_tokens {
+                    let kt = &ksrc[t * dh..(t + 1) * dh];
+                    let vt = &vsrc[t * dh..(t + 1) * dh];
+                    let g = gsrc[t];
+                    if t >= window_start {
+                        self.local_write(l, h, t % dims.w_local, kt, vt, g, t as i64);
+                    } else if admit(l, h, t, g) {
+                        self.global_append(l, h, kt, vt, g, t as i64)?;
+                        self.stats.prefill_admitted += 1;
+                    } else {
+                        self.stats.prefill_discarded += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Insert a decoded token (Fig 6d): inspect the ring victim, promote it
+    /// to Global iff `promote(l, h, victim_gate)`, then overwrite the slot.
+    /// `k_new`/`v_new`: `[L, Hkv, dh]`; `g_new`: `[L, Hkv]`.
+    pub fn insert_decoded(
+        &mut self,
+        k_new: &Tensor,
+        v_new: &Tensor,
+        g_new: &Tensor,
+        pos: i64,
+        mut promote: impl FnMut(usize, usize, f32) -> bool,
+    ) -> Result<()> {
+        let dims = self.dims;
+        let dh = dims.d_head;
+        let ring_idx = (pos as usize) % dims.w_local;
+        for l in 0..dims.n_layers {
+            for h in 0..dims.n_kv_heads {
+                let hi = self.head_idx(l, h);
+                let victim = self.heads[hi].local[ring_idx];
+                if victim.occupied {
+                    if promote(l, h, victim.gate) {
+                        let ps = dims.page_size;
+                        let (page, slot) = (
+                            self.heads[hi].local_pages[ring_idx / ps],
+                            ring_idx % ps,
+                        );
+                        let kvic: Vec<f32> = self.pool.k_at(page, slot).to_vec();
+                        let vvic: Vec<f32> = self.pool.v_at(page, slot).to_vec();
+                        self.global_append(l, h, &kvic, &vvic, victim.gate, victim.pos)?;
+                        self.stats.promotions += 1;
+                    } else {
+                        self.stats.discards += 1;
+                    }
+                }
+                let kt = &k_new.slice_at(&[l, h])[..dh];
+                let vt = &v_new.slice_at(&[l, h])[..dh];
+                let g = g_new.at(&[l, h]);
+                self.local_write(l, h, ring_idx, kt, vt, g, pos);
+            }
+        }
+        Ok(())
+    }
+
+    // -- eviction support --------------------------------------------------------
+
+    /// Key vector of global token `i` at (l, h) (eviction scoring input).
+    pub fn global_key(&self, l: usize, h: usize, i: usize) -> Result<&[f32]> {
+        let hi = self.head_idx(l, h);
+        let (page, slot) = self.heads[hi].global.locate(i)?;
+        Ok(self.pool.k_at(page, slot))
+    }
+
+    /// Absolute position of global token `i` at (l, h).
+    pub fn global_pos(&self, l: usize, h: usize, i: usize) -> Result<i64> {
+        let hi = self.head_idx(l, h);
+        let (page, slot) = self.heads[hi].global.locate(i)?;
+        Ok(self.pool.pos_at(page, slot))
+    }
+
+    /// Compact (l, h)'s Global Cache to the tokens where `keep[i]` is true
+    /// (post-write eviction, paper App. K.1). Frees pages, rebuilds the
+    /// exec view and Quest metadata for the head. Returns evicted count.
+    pub fn evict_global(&mut self, l: usize, h: usize, keep: &[bool]) -> Result<usize> {
+        let hi = self.head_idx(l, h);
+        let len = self.heads[hi].global.len();
+        if keep.len() != len {
+            bail!("keep mask length {} != global len {len}", keep.len());
+        }
+        let dh = self.dims.d_head;
+        // Snapshot survivors.
+        let mut survivors: Vec<(Vec<f32>, Vec<f32>, f32, i64)> = Vec::new();
+        for (i, &kp) in keep.iter().enumerate() {
+            if kp {
+                let (page, slot) = self.heads[hi].global.locate(i)?;
+                survivors.push((
+                    self.pool.k_at(page, slot).to_vec(),
+                    self.pool.v_at(page, slot).to_vec(),
+                    self.pool.gate_at(page, slot),
+                    self.pool.pos_at(page, slot),
+                ));
+            }
+        }
+        let evicted = len - survivors.len();
+        // Reset the head's global region.
+        {
+            let hc = &mut self.heads[hi];
+            hc.global.clear(&mut self.pool);
+            hc.kmin.clear();
+            hc.kmax.clear();
+        }
+        // Zero the head's exec global region + mask.
+        let n_global = self.n_global_slots();
+        self.k_exec.slice_at_mut(&[l, h])[..n_global * dh].fill(0.0);
+        self.v_exec.slice_at_mut(&[l, h])[..n_global * dh].fill(0.0);
+        self.mask.slice_at_mut(&[l, h])[..n_global].fill(0.0);
+        // Re-append survivors.
+        for (k, v, g, p) in survivors {
+            self.global_append(l, h, &k, &v, g, p)?;
+        }
+        self.stats.evicted += evicted as u64;
+        Ok(evicted)
+    }
+
+    /// Re-layout the execution view for a new capacity (e.g. after the
+    /// global region outgrows the current decode executable, or to shrink
+    /// for a cheaper one). Pool state is untouched.
+    pub fn ensure_capacity(&mut self, new_cap: usize) -> Result<()> {
+        if new_cap == self.cap {
+            return Ok(());
+        }
+        if new_cap < self.required_slots() {
+            bail!(
+                "capacity {new_cap} < required {} slots",
+                self.required_slots()
+            );
+        }
+        let dims = self.dims;
+        let (l, h, dh) = (dims.n_layers, dims.n_kv_heads, dims.d_head);
+        self.cap = new_cap;
+        self.k_exec = Tensor::zeros(&[l, h, new_cap, dh]);
+        self.v_exec = Tensor::zeros(&[l, h, new_cap, dh]);
+        self.mask = Tensor::zeros(&[l, h, new_cap]);
+        for li in 0..l {
+            for hi_ in 0..h {
+                let hi = self.head_idx(li, hi_);
+                // Global region.
+                for i in 0..self.heads[hi].global.len() {
+                    let (page, slot) = self.heads[hi].global.locate(i)?;
+                    let k = self.pool.k_at(page, slot).to_vec();
+                    let v = self.pool.v_at(page, slot).to_vec();
+                    self.write_exec(li, hi_, i, &k, &v);
+                }
+                // Ring region.
+                let ps = dims.page_size;
+                for r in 0..dims.w_local {
+                    if self.heads[hi].local[r].occupied {
+                        let (page, slot) = (self.heads[hi].local_pages[r / ps], r % ps);
+                        let k = self.pool.k_at(page, slot).to_vec();
+                        let v = self.pool.v_at(page, slot).to_vec();
+                        let es = self.ring_exec_slot(r);
+                        self.write_exec(li, hi_, es, &k, &v);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> CacheDims {
+        CacheDims { n_layers: 2, n_kv_heads: 2, d_head: 4, w_local: 4, page_size: 4 }
+    }
+
+    fn filled_tensor(shape: &[usize], f: impl Fn(usize) -> f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(f).collect()).unwrap()
+    }
+
+    fn prefill_tensors(n: usize) -> (Tensor, Tensor, Tensor) {
+        let d = dims();
+        let k = filled_tensor(&[d.n_layers, d.n_kv_heads, n, d.d_head], |i| i as f32);
+        let v = filled_tensor(&[d.n_layers, d.n_kv_heads, n, d.d_head], |i| i as f32 + 0.5);
+        // Gate pattern: token t has gate 0.9 when t % 3 == 0 else 0.01.
+        let mut g = Tensor::zeros(&[d.n_layers, d.n_kv_heads, n]);
+        for i in 0..g.data.len() {
+            let t = i % n;
+            g.data[i] = if t % 3 == 0 { 0.9 } else { 0.01 };
+        }
+        (k, v, g)
+    }
+
+    #[test]
+    fn prefill_splits_window_and_global() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        let n = 12;
+        let (k, v, g) = prefill_tensors(n);
+        c.populate_from_prefill(&k, &v, &g, n, |_, _, _, gate| gate >= 0.1).unwrap();
+        // Window = last 4 tokens (8..11); tokens 0..8 with t%3==0 admitted: 0,3,6.
+        assert_eq!(c.global_len(0, 0), 3);
+        assert_eq!(c.local_len(0, 0), 4);
+        assert_eq!(c.head_len(1, 1), 7);
+        // Mask: 3 global + 4 ring slots set.
+        let m = c.slot_mask().slice_at(&[0, 0]);
+        assert_eq!(m.iter().filter(|&&x| x > 0.5).count(), 7);
+        assert_eq!(c.stats.prefill_admitted, 3 * 4);
+        assert_eq!(c.stats.prefill_discarded, 5 * 4);
+    }
+
+    #[test]
+    fn short_prefill_fills_partial_ring() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 8).unwrap();
+        let (k, v, g) = prefill_tensors(2);
+        c.populate_from_prefill(&k, &v, &g, 2, |_, _, _, _| true).unwrap();
+        assert_eq!(c.global_len(0, 0), 0);
+        assert_eq!(c.local_len(0, 0), 2);
+    }
+
+    fn decoded_tensors(val: f32, gate: f32) -> (Tensor, Tensor, Tensor) {
+        let d = dims();
+        let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], val);
+        let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], val + 0.5);
+        let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+        (k, v, g)
+    }
+
+    #[test]
+    fn lazy_promotion_follows_gate() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        let n = 8; // fills ring with pos 4..7 (gates: 6 -> 0.9, rest 0.01)
+        let (k, v, g) = prefill_tensors(n);
+        c.populate_from_prefill(&k, &v, &g, n, |_, _, _, gate| gate >= 0.1).unwrap();
+        let g0 = c.global_len(0, 0);
+        // Decode 4 tokens: victims are pos 4 (g=.01), 5 (.01), 6 (.9!), 7 (.01).
+        for step in 0..4 {
+            let (kn, vn, gn) = decoded_tensors(100.0 + step as f32, 0.01);
+            c.insert_decoded(&kn, &vn, &gn, (n + step) as i64, |_, _, gate| gate >= 0.1)
+                .unwrap();
+        }
+        assert_eq!(c.global_len(0, 0), g0 + 1, "only pos-6 victim promoted");
+        assert_eq!(c.stats.promotions, 1 * 4);
+        assert_eq!(c.stats.discards, 3 * 4);
+        // Promoted key must be the original pos-6 key, findable in global.
+        let last = c.global_len(0, 0) - 1;
+        assert_eq!(c.global_pos(0, 0, last).unwrap(), 6);
+    }
+
+    #[test]
+    fn ring_victim_order_is_fifo() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        // Insert decoded tokens pos 0.. with all-promote; ring size 4 means
+        // promotions start at pos 4 and go in FIFO order 0,1,2,3,...
+        for pos in 0..7 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+        }
+        assert_eq!(c.global_len(0, 0), 3); // victims pos 0, 1, 2
+        for i in 0..3 {
+            assert_eq!(c.global_pos(0, 0, i).unwrap(), i as i64);
+        }
+    }
+
+    #[test]
+    fn overflow_is_detected() {
+        let d = dims();
+        // cap 8 => 4 global slots.
+        let mut c = SequenceKvCache::new(d, 8).unwrap();
+        for pos in 0..8 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            let r = c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true);
+            if pos < 8 - 1 {
+                r.unwrap();
+            }
+        }
+        // 5th promotion (pos 8 victim=4) would need slot 4 -> error.
+        let (kn, vn, gn) = decoded_tensors(9.0, 0.9);
+        assert!(c.insert_decoded(&kn, &vn, &gn, 8, |_, _, _| true).is_err());
+    }
+
+    #[test]
+    fn capacity_upgrade_preserves_exec_view() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 8).unwrap();
+        let (k, v, g) = prefill_tensors(8);
+        c.populate_from_prefill(&k, &v, &g, 8, |_, _, _, gate| gate >= 0.1).unwrap();
+        let before_mask: Vec<f32> = c.slot_mask().slice_at(&[1, 1]).to_vec();
+        let before_k: Vec<f32> = c.k_exec().slice_at(&[1, 1]).to_vec();
+        c.ensure_capacity(16).unwrap();
+        let after_mask = c.slot_mask().slice_at(&[1, 1]);
+        let after_k = c.k_exec().slice_at(&[1, 1]);
+        // Global region identical prefix.
+        let g_len = c.global_len(1, 1);
+        assert_eq!(&before_k[..g_len * 4], &after_k[..g_len * 4]);
+        // Ring moved from slots [4..8) to [12..16).
+        assert_eq!(&before_mask[4..8], &after_mask[12..16]);
+        assert_eq!(&before_k[4 * 4..8 * 4], &after_k[12 * 4..16 * 4]);
+    }
+
+    #[test]
+    fn eviction_compacts_and_frees_pages() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 32).unwrap();
+        // Fill global with 10 tokens on head (0,0) via all-promote decode.
+        for pos in 0..14 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+        }
+        assert_eq!(c.global_len(0, 0), 10);
+        let pages_before = c.pool_stats().allocated_pages;
+        // Keep even logical indices only.
+        let keep: Vec<bool> = (0..10).map(|i| i % 2 == 0).collect();
+        let evicted = c.evict_global(0, 0, &keep).unwrap();
+        assert_eq!(evicted, 5);
+        assert_eq!(c.global_len(0, 0), 5);
+        // Order preserved: positions 0,2,4,6,8.
+        for (i, want) in [0i64, 2, 4, 6, 8].iter().enumerate() {
+            assert_eq!(c.global_pos(0, 0, i).unwrap(), *want);
+        }
+        assert!(c.pool_stats().allocated_pages <= pages_before);
+        // Mask matches new occupancy.
+        let m = c.slot_mask().slice_at(&[0, 0]);
+        assert_eq!(m[..c.n_global_slots()].iter().filter(|&&x| x > 0.5).count(), 5);
+    }
+
+    #[test]
+    fn quest_meta_bounds_contain_keys() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        for pos in 0..10 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+        }
+        let (pmin, pmax) = c.page_meta_tensors();
+        assert_eq!(pmin.shape, vec![2, 2, 3, 4]); // (16-4)/4 = 3 pages
+        // 6 globals => pages 0 (tokens 0-3) and 1 (tokens 4-5).
+        for i in 0..c.global_len(0, 0) {
+            let k = c.global_key(0, 0, i).unwrap().to_vec();
+            let page = i / d.page_size;
+            for dd in 0..d.d_head {
+                assert!(pmin.at(&[0, 0, page, dd]) <= k[dd]);
+                assert!(pmax.at(&[0, 0, page, dd]) >= k[dd]);
+            }
+        }
+        // Untouched page 2 must be +inf/-inf.
+        assert_eq!(pmin.at(&[0, 0, 2, 0]), f32::INFINITY);
+    }
+}

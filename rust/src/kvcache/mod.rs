@@ -1,0 +1,31 @@
+//! The paper's §4: dual-cache paged KV memory management.
+//!
+//! Admission produces a *ragged* cache — every (layer, KV-head) retains a
+//! different number of tokens (paper §2.4, Fig 4). A naive dense layout
+//! either fragments memory or pre-allocates worst-case buffers. Following
+//! §4.1 we decouple the logical view from physical storage:
+//!
+//! * [`pool::KvPool`] — the unified physical **KV Pool**: fixed-size pages
+//!   (16 tokens each by default) holding K/V vectors plus per-token gate
+//!   and position metadata, with a free list;
+//! * [`pool::PageTable`] — a per-head ordered list of physical pages backing
+//!   one logical region (Local or Global), growing without contiguous
+//!   reallocation;
+//! * [`dual::SequenceKvCache`] — per-sequence coordinator state: for every
+//!   (layer, head) a **Local Cache** ring buffer of `w_local` recent tokens
+//!   and a growing **Global Cache** of admitted tokens, the **Lazy
+//!   Promotion** update of §4.3/Fig 6d, Quest page metadata (min/max key
+//!   bounds), and the incrementally-maintained execution-buffer view that
+//!   the fixed-shape PJRT decode executable consumes.
+//!
+//! The execution view mirrors Appendix B: per-head raggedness is expressed
+//! as validity masks over a capacity-`C` slot buffer (the analogue of
+//! folding heads into the batch dimension for vLLM's varlen kernel), and
+//! admission's saving shows up as a smaller `C` — the engine picks the
+//! smallest exported capacity that fits the fullest head.
+
+pub mod dual;
+pub mod pool;
+
+pub use dual::{CacheStats, SequenceKvCache};
+pub use pool::{KvPool, PageId, PageTable, PoolStats};

@@ -1,0 +1,300 @@
+//! Physical paged KV storage (paper §4.1, Fig 6b-c).
+//!
+//! One pool is shared by all (layer, head) logical regions of an engine;
+//! each page stores `page_size` token slots of `d_head`-dim K and V vectors
+//! plus per-token admission gate and absolute position. Pages are recycled
+//! through a free list, so ragged per-head growth never fragments host
+//! memory and eviction returns pages for reuse.
+
+use anyhow::{bail, Result};
+
+/// Index of a physical page in the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageId(pub u32);
+
+/// Aggregate pool occupancy counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    /// Pages currently allocated to some page table.
+    pub allocated_pages: usize,
+    /// Pages ever created (high-water mark).
+    pub total_pages: usize,
+    /// Pages sitting in the free list.
+    pub free_pages: usize,
+}
+
+/// Unified physical KV pool.
+pub struct KvPool {
+    page_size: usize,
+    d_head: usize,
+    /// K data: `total_pages * page_size * d_head` f32, page-major.
+    k: Vec<f32>,
+    /// V data, same layout.
+    v: Vec<f32>,
+    /// Per token-slot admission gate.
+    gates: Vec<f32>,
+    /// Per token-slot absolute sequence position (-1 = empty).
+    pos: Vec<i64>,
+    free: Vec<PageId>,
+    allocated: usize,
+}
+
+impl KvPool {
+    pub fn new(page_size: usize, d_head: usize) -> Self {
+        assert!(page_size > 0 && d_head > 0);
+        Self {
+            page_size,
+            d_head,
+            k: Vec::new(),
+            v: Vec::new(),
+            gates: Vec::new(),
+            pos: Vec::new(),
+            free: Vec::new(),
+            allocated: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    fn total_pages(&self) -> usize {
+        self.gates.len() / self.page_size
+    }
+
+    /// Allocate a page (recycled or fresh). Fresh pages are zeroed.
+    pub fn alloc(&mut self) -> PageId {
+        self.allocated += 1;
+        if let Some(p) = self.free.pop() {
+            // Scrub recycled page metadata so stale positions can't leak.
+            let base = p.0 as usize * self.page_size;
+            self.gates[base..base + self.page_size].fill(0.0);
+            self.pos[base..base + self.page_size].fill(-1);
+            return p;
+        }
+        let id = PageId(self.total_pages() as u32);
+        self.k.extend(std::iter::repeat(0.0).take(self.page_size * self.d_head));
+        self.v.extend(std::iter::repeat(0.0).take(self.page_size * self.d_head));
+        self.gates.extend(std::iter::repeat(0.0).take(self.page_size));
+        self.pos.extend(std::iter::repeat(-1).take(self.page_size));
+        id
+    }
+
+    /// Return a page to the free list.
+    pub fn free(&mut self, page: PageId) {
+        debug_assert!((page.0 as usize) < self.total_pages());
+        debug_assert!(!self.free.contains(&page), "double free of {page:?}");
+        self.allocated -= 1;
+        self.free.push(page);
+    }
+
+    fn kv_base(&self, page: PageId, slot: usize) -> usize {
+        debug_assert!(slot < self.page_size);
+        (page.0 as usize * self.page_size + slot) * self.d_head
+    }
+
+    fn meta_base(&self, page: PageId, slot: usize) -> usize {
+        page.0 as usize * self.page_size + slot
+    }
+
+    /// Write one token's K/V + metadata into a page slot.
+    pub fn write_token(
+        &mut self,
+        page: PageId,
+        slot: usize,
+        k: &[f32],
+        v: &[f32],
+        gate: f32,
+        position: i64,
+    ) {
+        debug_assert_eq!(k.len(), self.d_head);
+        debug_assert_eq!(v.len(), self.d_head);
+        let b = self.kv_base(page, slot);
+        self.k[b..b + self.d_head].copy_from_slice(k);
+        self.v[b..b + self.d_head].copy_from_slice(v);
+        let m = self.meta_base(page, slot);
+        self.gates[m] = gate;
+        self.pos[m] = position;
+    }
+
+    pub fn k_at(&self, page: PageId, slot: usize) -> &[f32] {
+        let b = self.kv_base(page, slot);
+        &self.k[b..b + self.d_head]
+    }
+
+    pub fn v_at(&self, page: PageId, slot: usize) -> &[f32] {
+        let b = self.kv_base(page, slot);
+        &self.v[b..b + self.d_head]
+    }
+
+    pub fn gate_at(&self, page: PageId, slot: usize) -> f32 {
+        self.gates[self.meta_base(page, slot)]
+    }
+
+    pub fn pos_at(&self, page: PageId, slot: usize) -> i64 {
+        self.pos[self.meta_base(page, slot)]
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            allocated_pages: self.allocated,
+            total_pages: self.total_pages(),
+            free_pages: self.free.len(),
+        }
+    }
+
+    /// Physical bytes held by allocated pages (K + V payloads only — what
+    /// the paper's Fig 8c memory axis counts).
+    pub fn allocated_kv_bytes(&self) -> usize {
+        self.allocated * self.page_size * self.d_head * 2 * std::mem::size_of::<f32>()
+    }
+}
+
+/// Ordered list of physical pages backing one logical token range
+/// (paper Fig 6c). Logical token `i` lives at page `i / page_size`,
+/// slot `i % page_size`.
+#[derive(Debug, Clone, Default)]
+pub struct PageTable {
+    pages: Vec<PageId>,
+    /// Number of valid tokens in the logical range.
+    len: usize,
+    page_size: usize,
+}
+
+impl PageTable {
+    pub fn new(page_size: usize) -> Self {
+        Self { pages: Vec::new(), len: 0, page_size }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    /// Physical (page, slot) of logical token `i`.
+    pub fn locate(&self, i: usize) -> Result<(PageId, usize)> {
+        if i >= self.len {
+            bail!("logical index {i} out of range (len {})", self.len);
+        }
+        Ok((self.pages[i / self.page_size], i % self.page_size))
+    }
+
+    /// Append one logical slot, allocating a page from `pool` when the last
+    /// page is full. Returns the physical location to write.
+    pub fn append(&mut self, pool: &mut KvPool) -> (PageId, usize) {
+        let slot = self.len % self.page_size;
+        if slot == 0 {
+            self.pages.push(pool.alloc());
+        }
+        let page = *self.pages.last().unwrap();
+        self.len += 1;
+        (page, slot)
+    }
+
+    /// Drop all pages back to the pool and reset.
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        for p in self.pages.drain(..) {
+            pool.free(p);
+        }
+        self.len = 0;
+    }
+
+    /// Internal fragmentation: allocated-but-unused token slots.
+    pub fn slack_slots(&self) -> usize {
+        self.pages.len() * self.page_size - self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_recycles() {
+        let mut pool = KvPool::new(4, 2);
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_eq!(pool.stats().allocated_pages, 2);
+        pool.free(a);
+        assert_eq!(pool.stats().free_pages, 1);
+        let c = pool.alloc();
+        assert_eq!(c, a, "free list must recycle");
+        assert_ne!(b, c);
+        assert_eq!(pool.stats().total_pages, 2);
+    }
+
+    #[test]
+    fn recycled_page_is_scrubbed() {
+        let mut pool = KvPool::new(2, 2);
+        let a = pool.alloc();
+        pool.write_token(a, 1, &[1.0, 2.0], &[3.0, 4.0], 0.9, 42);
+        pool.free(a);
+        let b = pool.alloc();
+        assert_eq!(b, a);
+        assert_eq!(pool.gate_at(b, 1), 0.0);
+        assert_eq!(pool.pos_at(b, 1), -1);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut pool = KvPool::new(4, 3);
+        let p = pool.alloc();
+        pool.write_token(p, 2, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], 0.5, 7);
+        assert_eq!(pool.k_at(p, 2), &[1.0, 2.0, 3.0]);
+        assert_eq!(pool.v_at(p, 2), &[4.0, 5.0, 6.0]);
+        assert_eq!(pool.gate_at(p, 2), 0.5);
+        assert_eq!(pool.pos_at(p, 2), 7);
+    }
+
+    #[test]
+    fn page_table_append_and_locate() {
+        let mut pool = KvPool::new(4, 2);
+        let mut pt = PageTable::new(4);
+        for i in 0..10 {
+            let (page, slot) = pt.append(&mut pool);
+            pool.write_token(page, slot, &[i as f32, 0.0], &[0.0, 0.0], 1.0, i as i64);
+        }
+        assert_eq!(pt.len(), 10);
+        assert_eq!(pt.num_pages(), 3);
+        assert_eq!(pt.slack_slots(), 2);
+        let (page, slot) = pt.locate(9).unwrap();
+        assert_eq!(pool.k_at(page, slot)[0], 9.0);
+        assert!(pt.locate(10).is_err());
+    }
+
+    #[test]
+    fn page_table_clear_returns_pages() {
+        let mut pool = KvPool::new(4, 2);
+        let mut pt = PageTable::new(4);
+        for _ in 0..9 {
+            pt.append(&mut pool);
+        }
+        assert_eq!(pool.stats().allocated_pages, 3);
+        pt.clear(&mut pool);
+        assert_eq!(pool.stats().allocated_pages, 0);
+        assert_eq!(pool.stats().free_pages, 3);
+        assert!(pt.is_empty());
+    }
+
+    #[test]
+    fn kv_bytes_accounting() {
+        let mut pool = KvPool::new(16, 32);
+        let _ = pool.alloc();
+        assert_eq!(pool.allocated_kv_bytes(), 16 * 32 * 2 * 4);
+    }
+}

@@ -1,0 +1,52 @@
+//! # WG-KV — learned KV-cache admission for long-context LLM serving
+//!
+//! Reproduction of *"KV Admission: Learning What to Write for Efficient
+//! Long-Context Inference"* (Huang, Hsiu, Fang, Chen). The paper formalizes
+//! three KV-cache management primitives — **Admission** (pre-write),
+//! **Selection** (read-time), **Eviction** (post-write) — and contributes
+//! Write-Gated KV (WG-KV), a learned admission mechanism.
+//!
+//! This crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (write-gated flash attention, gate MLP, masked
+//!   decode attention) authored in `python/compile/kernels/`;
+//! * **L2** — a JAX GQA transformer calling those kernels, AOT-lowered to
+//!   HLO-text artifacts (`make artifacts`);
+//! * **L3** — this crate: loads the artifacts through PJRT ([`runtime`]),
+//!   owns the paper's dual Local/Global paged cache with lazy promotion
+//!   ([`kvcache`]), the admission policies ([`admission`]), read-time
+//!   selection ([`selection`]), post-write eviction ([`eviction`]), the
+//!   serving engine ([`engine`]), continuous batching ([`scheduler`]), a
+//!   tokio server ([`server`]), workload generators ([`workload`]), and the
+//!   H200 analytic cost model used to reproduce the paper's latency/memory
+//!   figures ([`costmodel`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the binary
+//! is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use wgkv::engine::{Engine, EngineConfig};
+//! use wgkv::admission::PolicyKind;
+//!
+//! let mut engine = Engine::load("artifacts", EngineConfig::default()).unwrap();
+//! let out = engine.generate_text("q: secret code\na:", 16, PolicyKind::WriteGated).unwrap();
+//! println!("{}", out.text);
+//! ```
+
+pub mod admission;
+pub mod costmodel;
+pub mod engine;
+pub mod eviction;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod selection;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+pub use engine::{Engine, EngineConfig};

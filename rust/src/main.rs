@@ -1,0 +1,218 @@
+//! `wgkv` — CLI for the WG-KV serving stack.
+//!
+//! Subcommands:
+//! * `serve`     — start the JSON-lines TCP server over an engine thread;
+//! * `generate`  — one-shot generation from the command line;
+//! * `eval`      — run the HELMET-analogue suite under a policy;
+//! * `costmodel` — print the analytic H200 tables (Fig 1 / 8 / 15);
+//! * `info`      — dump the artifact manifest;
+//! * `client`    — send a prompt to a running server.
+
+use anyhow::{bail, Result};
+
+use wgkv::costmodel::{AdmissionPoint, CostModel, H200, LLAMA31_8B, QWEN3_4B};
+use wgkv::engine::{Engine, EngineConfig};
+use wgkv::model::Sampler;
+use wgkv::scheduler::SchedulerConfig;
+use wgkv::server::{self, GenerateParams};
+use wgkv::util::Args;
+use wgkv::workload;
+
+const USAGE: &str = "\
+wgkv — learned KV-cache admission for long-context serving
+
+USAGE:
+  wgkv serve     [--artifacts DIR] [--addr HOST:PORT] [--max-active N] [--kv-budget BYTES]
+  wgkv generate  [--artifacts DIR] --prompt TEXT [--max-new N] [--variant FILE] [POLICY]
+  wgkv eval      [--artifacts DIR] [--instances N] [--seed S] [--variant FILE] [POLICY]
+  wgkv costmodel [--model llama|qwen]
+  wgkv info      [--artifacts DIR]
+  wgkv client    [--addr HOST:PORT] --prompt TEXT [--max-new N] [POLICY]
+
+POLICY flags:
+  --policy wg-kv|full|local|duo|random   (default wg-kv)
+  --tau F           gate-threshold override (wg-kv)
+  --sink N          attention sinks (local/duo, default 4)
+  --recent N        extra recent admissions (local window sweep)
+  --duo-ratio F     retrieval-head ratio (duo, default 0.5)
+  --sparsity F      target sparsity (random, default 0.75)
+  --quest-budget N  enable Quest read-time selection (token budget)
+  --snapkv-budget N enable SnapKV eviction (per-head budget)
+  --temperature F   sampling temperature (default greedy)
+";
+
+fn policy_params(args: &Args, prompt: String, max_new: usize) -> Result<GenerateParams> {
+    Ok(GenerateParams {
+        prompt,
+        max_new,
+        policy: args.str("policy", "wg-kv"),
+        tau: args.f32_opt("tau")?,
+        sink: args.usize("sink", 4)?,
+        recent: args.usize("recent", 0)?,
+        duo_ratio: args.f32("duo-ratio", 0.5)?,
+        sparsity: args.f32("sparsity", 0.75)?,
+        quest_budget_tokens: args.usize_opt("quest-budget")?,
+        snapkv_budget: args.usize_opt("snapkv-budget")?,
+        temperature: args.f32_opt("temperature")?,
+        seed: args.u64("seed", 0)?,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.subcommand() {
+        Some("serve") => serve(&args),
+        Some("generate") => generate(&args),
+        Some("eval") => eval(&args),
+        Some("costmodel") => costmodel(&args),
+        Some("info") => info(&args),
+        Some("client") => client(&args),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let artifacts = args.str("artifacts", "artifacts");
+    let addr = args.str("addr", "127.0.0.1:7077");
+    let cfg = SchedulerConfig {
+        max_active: args.usize("max-active", 8)?,
+        kv_byte_budget: args.usize("kv-budget", 256 << 20)?,
+        ..SchedulerConfig::default()
+    };
+    let (cmds, _handle) = server::spawn_engine_thread(artifacts, EngineConfig::default(), cfg);
+    server::serve(&addr, cmds)
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let artifacts = args.str("artifacts", "artifacts");
+    let prompt = args
+        .str_opt("prompt")
+        .ok_or_else(|| anyhow::anyhow!("--prompt is required"))?;
+    let mut engine = Engine::load(&artifacts, EngineConfig::default())?;
+    if let Some(v) = args.str_opt("variant") {
+        engine.load_variant(&v)?;
+    }
+    let params = policy_params(args, prompt, args.usize("max-new", 32)?)?;
+    let opts = params.session_options(engine.dims())?;
+    let toks = engine.tokenizer.encode(&params.prompt);
+    let mut sampler = Sampler::new(params.sampler_kind(), params.seed);
+    let out = engine.generate(&toks, params.max_new, opts, &mut sampler)?;
+    println!("{}", out.text);
+    eprintln!(
+        "[prefill {:.1} ms | decode {:.2} ms/tok | cache {:.1}% | kv {} B | evictions {}]",
+        out.prefill_us / 1e3,
+        out.decode_us_mean / 1e3,
+        out.cache_fraction * 100.0,
+        out.kv_bytes,
+        out.eviction_triggers,
+    );
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let artifacts = args.str("artifacts", "artifacts");
+    let instances = args.usize("instances", 8)?;
+    let seed = args.u64("seed", 0)?;
+    let mut engine = Engine::load(&artifacts, EngineConfig::default())?;
+    if let Some(v) = args.str_opt("variant") {
+        engine.load_variant(&v)?;
+    }
+    let params = policy_params(args, String::new(), 0)?;
+    let opts = params.session_options(engine.dims())?;
+    println!("{:<22} {:>8} {:>10}", "task", "score", "cache%");
+    let suite = workload::helmet_suite();
+    let mut total = 0.0;
+    for spec in &suite {
+        let insts = spec.instances(seed, instances);
+        let mut score = 0.0;
+        let mut frac = 0.0;
+        for inst in &insts {
+            let toks = engine.tokenizer.encode(&inst.prompt);
+            let mut sampler = Sampler::greedy();
+            let out = engine.generate(&toks, inst.max_new_tokens, opts.clone(), &mut sampler)?;
+            score += inst.score(&out.text);
+            frac += out.cache_fraction;
+        }
+        score /= insts.len() as f64;
+        frac /= insts.len() as f64;
+        total += score;
+        println!("{:<22} {:>8.3} {:>9.1}%", spec.name, score, frac * 100.0);
+    }
+    println!("{:<22} {:>8.3}", "MEAN", total / suite.len() as f64);
+    Ok(())
+}
+
+fn costmodel(args: &Args) -> Result<()> {
+    let llm = match args.str("model", "llama").as_str() {
+        "llama" => LLAMA31_8B,
+        "qwen" => QWEN3_4B,
+        other => bail!("unknown model '{other}' (llama|qwen)"),
+    };
+    let m = CostModel::new(llm, H200);
+    let wg = AdmissionPoint::sparsity(0.75, 256);
+    let full = AdmissionPoint::full();
+    println!("# {} on {} — Fig 1 / Fig 8 analytic reproduction", llm.name, H200.name);
+    println!(
+        "{:>8} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8} {:>9} {:>8} {:>6}",
+        "N", "pf_full_s", "pf_wg_s", "pf_spd", "dec_full", "dec_wg", "dec_spd", "mem_full",
+        "mem_wg", "dmem"
+    );
+    for n in [100_000, 200_000, 300_000, 400_000, 500_000] {
+        let pf = m.prefill(n, full).total();
+        let pw = m.prefill(n, wg).total();
+        let df = m.decode_step(n, full).total();
+        let dw = m.decode_step(n, wg).total();
+        let mf = m.memory(n, full).total() / 1e9;
+        let mw = m.memory(n, wg).total() / 1e9;
+        println!(
+            "{:>8} {:>10.2} {:>10.2} {:>7.2}x {:>8.2}ms {:>8.2}ms {:>7.2}x {:>7.0}G{} {:>7.0}G {:>5.0}%",
+            n,
+            pf,
+            pw,
+            pf / pw,
+            df * 1e3,
+            dw * 1e3,
+            df / dw,
+            mf,
+            if m.would_oom(n, full) { "!" } else { " " },
+            mw,
+            m.memory_reduction(n, wg) * 100.0
+        );
+    }
+    println!(
+        "('!' = exceeds {} GB device memory — the paper's Fig 8c OOM point)",
+        H200.mem_bytes / 1e9
+    );
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let artifacts = args.str("artifacts", "artifacts");
+    let manifest = wgkv::runtime::manifest::Manifest::load(
+        std::path::Path::new(&artifacts).join("manifest.json"),
+    )?;
+    println!("{}", manifest.to_json().pretty());
+    Ok(())
+}
+
+fn client(args: &Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7077");
+    let prompt = args
+        .str_opt("prompt")
+        .ok_or_else(|| anyhow::anyhow!("--prompt is required"))?;
+    let params = policy_params(args, prompt, args.usize("max-new", 32)?)?;
+    let mut client = server::Client::connect(&addr)?;
+    let c = client.generate(params)?;
+    println!("{}", c.text);
+    eprintln!(
+        "[id {} | prefill {:.1} ms | decode {:.2} ms/tok | cache {:.1}%]",
+        c.id,
+        c.prefill_us / 1e3,
+        c.decode_us_mean / 1e3,
+        c.cache_fraction * 100.0
+    );
+    Ok(())
+}

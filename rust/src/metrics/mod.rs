@@ -1,0 +1,266 @@
+//! Serving metrics: latency histograms, counters, throughput reporting.
+//!
+//! Deliberately self-contained (no prometheus dependency): the server's
+//! `stats` op and every benchmark harness serialize a [`MetricsSnapshot`]
+//! as JSON. Histograms use log-spaced latency buckets so one layout covers
+//! microsecond cache ops and second-scale prefills.
+
+use std::time::{Duration, Instant};
+
+
+/// Log-spaced histogram: buckets at `1us * 2^i`, i in `0..=NUM_BUCKETS`.
+const NUM_BUCKETS: usize = 32;
+
+/// Latency histogram with streaming mean/min/max.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Count per log bucket; index i covers `[2^i, 2^(i+1))` microseconds.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: vec![0; NUM_BUCKETS + 1],
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.record_us(us);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let idx = if us < 1.0 {
+            0
+        } else {
+            (us.log2().floor() as usize).min(NUM_BUCKETS)
+        };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from the log buckets (upper bucket edge).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 2f64.powi(i as i32 + 1);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Scoped timer: records into a histogram on drop.
+pub struct Timer<'a> {
+    hist: &'a mut Histogram,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn new(hist: &'a mut Histogram) -> Self {
+        Self { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed());
+    }
+}
+
+/// Engine-level metrics, one instance per engine/server.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    /// End-to-end prefill latency per request.
+    pub prefill: Histogram,
+    /// Per-token decode-step latency (PJRT execute + cache update).
+    pub decode_step: Histogram,
+    /// Host-side cache update latency inside a decode step.
+    pub cache_update: Histogram,
+    /// Requests fully served.
+    pub requests_done: u64,
+    /// Prompt tokens processed.
+    pub prompt_tokens: u64,
+    /// Tokens generated.
+    pub generated_tokens: u64,
+    /// Eviction triggers observed (Fig 16's counter, aggregated).
+    pub eviction_triggers: u64,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decode throughput in tokens/s implied by the decode histogram.
+    pub fn decode_tok_per_s(&self) -> f64 {
+        let m = self.decode_step.mean_us();
+        if m <= 0.0 {
+            0.0
+        } else {
+            1e6 / m
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_done: self.requests_done,
+            prompt_tokens: self.prompt_tokens,
+            generated_tokens: self.generated_tokens,
+            prefill_mean_us: self.prefill.mean_us(),
+            prefill_p90_us: self.prefill.quantile_us(0.9),
+            decode_mean_us: self.decode_step.mean_us(),
+            decode_p90_us: self.decode_step.quantile_us(0.9),
+            decode_tok_per_s: self.decode_tok_per_s(),
+            cache_update_mean_us: self.cache_update.mean_us(),
+            eviction_triggers: self.eviction_triggers,
+        }
+    }
+}
+
+/// Flat, JSON-friendly view served by the `stats` API op.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests_done: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub prefill_mean_us: f64,
+    pub prefill_p90_us: f64,
+    pub decode_mean_us: f64,
+    pub decode_p90_us: f64,
+    pub decode_tok_per_s: f64,
+    pub cache_update_mean_us: f64,
+    pub eviction_triggers: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("requests_done", self.requests_done)
+            .set("prompt_tokens", self.prompt_tokens)
+            .set("generated_tokens", self.generated_tokens)
+            .set("prefill_mean_us", self.prefill_mean_us)
+            .set("prefill_p90_us", self.prefill_p90_us)
+            .set("decode_mean_us", self.decode_mean_us)
+            .set("decode_p90_us", self.decode_p90_us)
+            .set("decode_tok_per_s", self.decode_tok_per_s)
+            .set("cache_update_mean_us", self.cache_update_mean_us)
+            .set("eviction_triggers", self.eviction_triggers)
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Self {
+        let f = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        Self {
+            requests_done: f("requests_done") as u64,
+            prompt_tokens: f("prompt_tokens") as u64,
+            generated_tokens: f("generated_tokens") as u64,
+            prefill_mean_us: f("prefill_mean_us"),
+            prefill_p90_us: f("prefill_p90_us"),
+            decode_mean_us: f("decode_mean_us"),
+            decode_p90_us: f("decode_p90_us"),
+            decode_tok_per_s: f("decode_tok_per_s"),
+            cache_update_mean_us: f("cache_update_mean_us"),
+            eviction_triggers: f("eviction_triggers") as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_means() {
+        let mut h = Histogram::new();
+        h.record_us(10.0);
+        h.record_us(20.0);
+        h.record_us(30.0);
+        assert_eq!(h.count, 3);
+        assert!((h.mean_us() - 20.0).abs() < 1e-9);
+        assert_eq!(h.min_us, 10.0);
+        assert_eq!(h.max_us, 30.0);
+    }
+
+    #[test]
+    fn quantile_is_monotone() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record_us(i as f64 * 10.0);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p90 = h.quantile_us(0.9);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!(p50 >= 100.0); // median of 10..1000us lands near 512-bucket
+    }
+
+    #[test]
+    fn sub_microsecond_goes_to_first_bucket() {
+        let mut h = Histogram::new();
+        h.record_us(0.2);
+        assert_eq!(h.buckets[0], 1);
+    }
+
+    #[test]
+    fn timer_records_on_drop() {
+        let mut h = Histogram::new();
+        {
+            let _t = Timer::new(&mut h);
+        }
+        assert_eq!(h.count, 1);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_json() {
+        let mut m = EngineMetrics::new();
+        m.decode_step.record_us(100.0);
+        m.generated_tokens = 1;
+        let s = m.snapshot();
+        let j = s.to_json().dump();
+        let back = MetricsSnapshot::from_json(&crate::util::json::Json::parse(&j).unwrap());
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.9), 0.0);
+        assert!(h.is_empty());
+    }
+}

@@ -1,0 +1,7 @@
+//! Model-adjacent substrates: byte tokenizer and token samplers.
+
+pub mod sampling;
+pub mod tokenizer;
+
+pub use sampling::{Sampler, SamplerKind};
+pub use tokenizer::ByteTokenizer;

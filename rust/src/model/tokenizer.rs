@@ -1,0 +1,70 @@
+//! Byte-level tokenizer matching `python/compile/corpus.py`.
+//!
+//! Tokens 0..=255 are raw bytes; BOS/EOS/PAD ids come from the manifest
+//! (256/257/258 for the exported configs). The training corpus and the Rust
+//! workload generator share this exact mapping, so the served model sees
+//! the byte distribution it was trained on.
+
+/// Byte-level tokenizer with special ids.
+#[derive(Debug, Clone, Copy)]
+pub struct ByteTokenizer {
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+}
+
+impl ByteTokenizer {
+    pub fn new(bos: i32, eos: i32, pad: i32) -> Self {
+        Self { bos, eos, pad }
+    }
+
+    pub fn from_dims(d: &crate::runtime::manifest::ModelDims) -> Self {
+        Self::new(d.bos, d.eos, d.pad)
+    }
+
+    /// Encode text as bytes, prepending BOS.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(self.bos);
+        out.extend(text.bytes().map(|b| b as i32));
+        out
+    }
+
+    /// Encode without BOS (continuation text).
+    pub fn encode_raw(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Decode tokens back to text, dropping specials and invalid bytes.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, t: i32) -> bool {
+        t == self.bos || t == self.eos || t == self.pad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = ByteTokenizer::new(256, 257, 258);
+        let toks = tk.encode("hi a0!");
+        assert_eq!(toks[0], 256);
+        assert_eq!(tk.decode(&toks), "hi a0!");
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let tk = ByteTokenizer::new(256, 257, 258);
+        assert_eq!(tk.decode(&[256, b'x' as i32, 258, 257]), "x");
+    }
+}

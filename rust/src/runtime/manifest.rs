@@ -1,0 +1,301 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust coordinator: model dimensions, export buckets, and the
+//! canonical parameter input order.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Architecture dimensions of the exported model (mirrors
+/// `python/compile/configs.ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub gate_hidden: usize,
+    /// Sliding Local Cache window (paper §3.1).
+    pub w_local: usize,
+    /// Gate binarization threshold (paper §3.3; tau=0.1 throughout).
+    pub tau: f32,
+    /// Tokens per physical page in the KV pool (paper §4.1: 16).
+    pub page_size: usize,
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+    pub gqa_group: usize,
+}
+
+impl ModelDims {
+    fn from_json(j: &Json) -> Result<Self> {
+        let us = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow!("model.{k} must be a non-negative int"))
+        };
+        let n_q_heads = us("n_q_heads")?;
+        let n_kv_heads = us("n_kv_heads")?;
+        Ok(Self {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("model.name must be a string"))?
+                .to_string(),
+            vocab_size: us("vocab_size")?,
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_q_heads,
+            n_kv_heads,
+            d_head: us("d_head")?,
+            d_ff: us("d_ff")?,
+            rope_theta: j
+                .req("rope_theta")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("model.rope_theta must be a number"))?,
+            gate_hidden: us("gate_hidden")?,
+            w_local: us("w_local")?,
+            tau: j.req("tau")?.as_f64().ok_or_else(|| anyhow!("model.tau must be a number"))?
+                as f32,
+            page_size: us("page_size")?,
+            bos: j.req("BOS")?.as_i64().ok_or_else(|| anyhow!("model.BOS"))? as i32,
+            eos: j.req("EOS")?.as_i64().ok_or_else(|| anyhow!("model.EOS"))? as i32,
+            pad: j.req("PAD")?.as_i64().ok_or_else(|| anyhow!("model.PAD"))? as i32,
+            gqa_group: j
+                .get("gqa_group")
+                .and_then(Json::as_usize)
+                .unwrap_or(if n_kv_heads > 0 { n_q_heads / n_kv_heads } else { 0 }),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("vocab_size", self.vocab_size)
+            .set("d_model", self.d_model)
+            .set("n_layers", self.n_layers)
+            .set("n_q_heads", self.n_q_heads)
+            .set("n_kv_heads", self.n_kv_heads)
+            .set("d_head", self.d_head)
+            .set("d_ff", self.d_ff)
+            .set("rope_theta", self.rope_theta)
+            .set("gate_hidden", self.gate_hidden)
+            .set("w_local", self.w_local)
+            .set("tau", self.tau)
+            .set("page_size", self.page_size)
+            .set("BOS", self.bos)
+            .set("EOS", self.eos)
+            .set("PAD", self.pad)
+            .set("gqa_group", self.gqa_group)
+    }
+}
+
+/// One entry of the executable's leading parameter inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelDims,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_capacities: Vec<usize>,
+    pub param_order: Vec<ParamSpec>,
+    pub files: BTreeMap<String, String>,
+    pub params_sha: String,
+    pub pallas: bool,
+    pub format: String,
+}
+
+fn usize_array(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.req(key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{key} must be an array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("{key} entries must be ints")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let model = ModelDims::from_json(j.req("model")?)?;
+        let param_order = j
+            .req("param_order")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_order must be an array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("param dim")))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let files = j
+            .get("files")
+            .and_then(|f| match f {
+                Json::Obj(pairs) => Some(
+                    pairs
+                        .iter()
+                        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                        .collect(),
+                ),
+                _ => None,
+            })
+            .unwrap_or_default();
+        let m = Manifest {
+            model,
+            prefill_buckets: usize_array(&j, "prefill_buckets")?,
+            decode_capacities: usize_array(&j, "decode_capacities")?,
+            param_order,
+            files,
+            params_sha: j
+                .get("params_sha")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            pallas: j.get("pallas").and_then(Json::as_bool).unwrap_or(false),
+            format: j.get("format").and_then(Json::as_str).unwrap_or("").to_string(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let params: Vec<Json> = self
+            .param_order
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("name", p.name.as_str())
+                    .set("shape", p.shape.clone())
+            })
+            .collect();
+        let mut files = Json::obj();
+        for (k, v) in &self.files {
+            files = files.set(k, v.as_str());
+        }
+        Json::obj()
+            .set("model", self.model.to_json())
+            .set("prefill_buckets", self.prefill_buckets.clone())
+            .set("decode_capacities", self.decode_capacities.clone())
+            .set("param_order", Json::Arr(params))
+            .set("files", files)
+            .set("params_sha", self.params_sha.as_str())
+            .set("pallas", self.pallas)
+            .set("format", self.format.as_str())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.model.n_kv_heads > 0 && self.model.n_q_heads % self.model.n_kv_heads == 0,
+            "n_q_heads must be a multiple of n_kv_heads"
+        );
+        anyhow::ensure!(!self.prefill_buckets.is_empty(), "no prefill buckets");
+        anyhow::ensure!(!self.decode_capacities.is_empty(), "no decode capacities");
+        anyhow::ensure!(
+            self.prefill_buckets.windows(2).all(|w| w[0] < w[1]),
+            "prefill buckets must be ascending"
+        );
+        anyhow::ensure!(
+            self.decode_capacities.windows(2).all(|w| w[0] < w[1]),
+            "decode capacities must be ascending"
+        );
+        anyhow::ensure!(!self.param_order.is_empty(), "empty param_order");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "model": {"name": "wg-tiny", "vocab_size": 259, "d_model": 256,
+                    "n_layers": 4, "n_q_heads": 8, "n_kv_heads": 4,
+                    "d_head": 32, "d_ff": 512, "rope_theta": 10000.0,
+                    "gate_hidden": 16, "w_local": 32, "tau": 0.1,
+                    "page_size": 16, "BOS": 256, "EOS": 257, "PAD": 258,
+                    "gqa_group": 2},
+          "prefill_buckets": [128, 512],
+          "decode_capacities": [64, 256],
+          "param_order": [{"name": "embed", "shape": [259, 256]}]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(&sample_json()).unwrap();
+        assert_eq!(m.model.gqa_group, 2);
+        assert_eq!(m.model.w_local, 32);
+        assert_eq!(m.param_order[0].shape, vec![259, 256]);
+    }
+
+    #[test]
+    fn gqa_group_defaults_from_heads() {
+        // Drop the explicit gqa_group field: it must fall back to Hq / Hkv.
+        let text = sample_json().replace(r#""gqa_group": 2"#, r#""PAD2": 258"#);
+        let m = Manifest::parse(&text).unwrap();
+        assert_eq!(m.model.gqa_group, 2);
+    }
+
+    #[test]
+    fn rejects_descending_buckets() {
+        let bad = sample_json().replace("[128, 512]", "[512, 128]");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_head_ratio() {
+        let bad = sample_json().replace(r#""n_q_heads": 8"#, r#""n_q_heads": 7"#);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = Manifest::parse(&sample_json()).unwrap();
+        let text = m.to_json().pretty();
+        let m2 = Manifest::parse(&text).unwrap();
+        assert_eq!(m2.model, m.model);
+        assert_eq!(m2.prefill_buckets, m.prefill_buckets);
+        assert_eq!(m2.param_order, m.param_order);
+    }
+
+    #[test]
+    fn load_reads_from_disk() {
+        let dir = std::env::temp_dir().join(format!("wgkv-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.json");
+        std::fs::write(&p, sample_json()).unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.model.name, "wg-tiny");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,306 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//! * artifacts are HLO *text* (`HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping the 64-bit-id protos jax>=0.5 emits);
+//! * computations return a tuple (`return_tuple=True`), decomposed here;
+//! * trained parameters are the *leading inputs* in the sorted-name order
+//!   recorded in `manifest.json`, shipped as `params.bin` and held resident
+//!   as PJRT device buffers ([`params`]) so one compiled executable serves
+//!   every gate variant of the λ sweep.
+
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use manifest::Manifest;
+use params::ParamSet;
+use tensor::Tensor;
+
+/// Outputs of one prefill execution (bucket length `n`).
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// `[n, vocab]` next-token logits at every prefix position.
+    pub logits: Tensor,
+    /// `[L, Hkv, n, dh]` post-RoPE keys.
+    pub k: Tensor,
+    /// `[L, Hkv, n, dh]` values.
+    pub v: Tensor,
+    /// `[L, Hkv, n]` admission gates (learned, or the override if used).
+    pub gates: Tensor,
+}
+
+/// Outputs of one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// `[vocab]` logits for the next token.
+    pub logits: Vec<f32>,
+    /// `[L, Hkv, dh]` post-RoPE key of the token just processed.
+    pub k_new: Tensor,
+    /// `[L, Hkv, dh]` value of the token just processed.
+    pub v_new: Tensor,
+    /// `[L, Hkv]` admission gate of the token just processed.
+    pub g_new: Tensor,
+    /// `[L, Hq, dh]` per-layer queries — feeds the SnapKV observation
+    /// window for post-write eviction scoring (paper App. K.1).
+    pub q: Tensor,
+}
+
+/// A loaded model: PJRT client + compiled executables + resident params.
+///
+/// `prefill` executables are keyed by sequence-length bucket, `decode` by
+/// cache capacity; the engine picks the smallest bucket/capacity that fits.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Decode with Quest read-time page selection fused in (Fig 9).
+    decode_sel: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Resident parameter buffers, manifest order. Index 0 is the default
+    /// variant; additional gate variants can be loaded via [`Self::load_variant`].
+    param_bufs: Vec<xla::PjRtBuffer>,
+    dir: PathBuf,
+}
+
+impl ModelRuntime {
+    /// Load manifest, params and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let params = ParamSet::load(dir.join("params.bin")).context("loading params.bin")?;
+        let param_bufs = Self::upload_params(&client, &manifest, &params)?;
+
+        let mut prefill = BTreeMap::new();
+        for &n in &manifest.prefill_buckets {
+            let path = dir.join(format!("prefill_{n}.hlo.txt"));
+            prefill.insert(n, Self::compile(&client, &path)?);
+        }
+        let mut decode = BTreeMap::new();
+        let mut decode_sel = BTreeMap::new();
+        for &c in &manifest.decode_capacities {
+            let path = dir.join(format!("decode_{c}.hlo.txt"));
+            decode.insert(c, Self::compile(&client, &path)?);
+            let sel_path = dir.join(format!("decode_sel_{c}.hlo.txt"));
+            if sel_path.exists() {
+                decode_sel.insert(c, Self::compile(&client, &sel_path)?);
+            }
+        }
+        Ok(Self { client, manifest, prefill, decode, decode_sel, param_bufs, dir })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Upload a parameter set as device buffers in manifest order, verifying
+    /// every tensor's shape against the manifest.
+    fn upload_params(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        params: &ParamSet,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::with_capacity(manifest.param_order.len());
+        for spec in &manifest.param_order {
+            let t = params
+                .get(&spec.name)
+                .with_context(|| format!("params.bin missing tensor '{}'", spec.name))?;
+            if t.shape != spec.shape {
+                bail!(
+                    "param '{}' shape mismatch: manifest {:?} vs params.bin {:?}",
+                    spec.name, spec.shape, t.shape
+                );
+            }
+            bufs.push(client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+        }
+        Ok(bufs)
+    }
+
+    /// Swap in a different trained-gate variant (e.g. `params_lam0.32.bin`)
+    /// while reusing the already-compiled executables.
+    pub fn load_variant(&mut self, file: &str) -> Result<()> {
+        let params = ParamSet::load(self.dir.join(file))?;
+        self.param_bufs = Self::upload_params(&self.client, &self.manifest, &params)?;
+        Ok(())
+    }
+
+    /// Prefill bucket sizes available, ascending.
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        self.prefill.keys().copied().collect()
+    }
+
+    /// Decode cache capacities available, ascending.
+    pub fn decode_capacities(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    /// Smallest prefill bucket that fits `n` tokens.
+    pub fn pick_prefill_bucket(&self, n: usize) -> Result<usize> {
+        self.prefill
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .with_context(|| format!("no prefill bucket fits {n} tokens (max {:?})",
+                                     self.prefill.keys().last()))
+    }
+
+    /// Smallest decode capacity >= `slots`.
+    pub fn pick_decode_capacity(&self, slots: usize) -> Result<usize> {
+        self.decode
+            .keys()
+            .copied()
+            .find(|&c| c >= slots)
+            .with_context(|| format!("no decode capacity fits {slots} slots (max {:?})",
+                                     self.decode.keys().last()))
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        call_inputs: &[xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + call_inputs.len());
+        args.extend(self.param_bufs.iter());
+        args.extend(call_inputs.iter());
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.into_iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute a prefill bucket. `tokens.len()` must equal the bucket size
+    /// (pad with the PAD id); `gate_override` is `[L, Hkv, n]`,
+    /// used only when `override_flag` is true.
+    pub fn prefill(
+        &self,
+        bucket: usize,
+        tokens: &[i32],
+        gate_override: &Tensor,
+        override_flag: bool,
+    ) -> Result<PrefillOut> {
+        let exe = self
+            .prefill
+            .get(&bucket)
+            .with_context(|| format!("no prefill bucket {bucket}"))?;
+        if tokens.len() != bucket {
+            bail!("prefill bucket {bucket} got {} tokens", tokens.len());
+        }
+        let m = &self.manifest.model;
+        let want = vec![m.n_layers, m.n_kv_heads, bucket];
+        if gate_override.shape != want {
+            bail!("gate_override shape {:?} != {:?}", gate_override.shape, want);
+        }
+        let inputs = vec![
+            self.client.buffer_from_host_buffer(tokens, &[bucket], None)?,
+            self.client
+                .buffer_from_host_buffer(&gate_override.data, &gate_override.shape, None)?,
+            self.client
+                .buffer_from_host_buffer(&[override_flag as i32], &[], None)?,
+        ];
+        let mut out = self.run(exe, &inputs)?;
+        if out.len() != 4 {
+            bail!("prefill returned {} outputs, expected 4", out.len());
+        }
+        let gates = out.pop().unwrap();
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        Ok(PrefillOut { logits, k, v, gates })
+    }
+
+    /// Execute one decode step against capacity-`cap` slotted caches.
+    /// `k_cache`/`v_cache`: `[L, Hkv, cap, dh]`; `slot_mask`: `[L, Hkv, cap]`.
+    pub fn decode(
+        &self,
+        cap: usize,
+        token: i32,
+        pos: i32,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        slot_mask: &Tensor,
+    ) -> Result<DecodeOut> {
+        let exe = self
+            .decode
+            .get(&cap)
+            .with_context(|| format!("no decode capacity {cap}"))?;
+        let inputs = vec![
+            self.client.buffer_from_host_buffer(&[token], &[], None)?,
+            self.client.buffer_from_host_buffer(&[pos], &[], None)?,
+            self.client
+                .buffer_from_host_buffer(&k_cache.data, &k_cache.shape, None)?,
+            self.client
+                .buffer_from_host_buffer(&v_cache.data, &v_cache.shape, None)?,
+            self.client
+                .buffer_from_host_buffer(&slot_mask.data, &slot_mask.shape, None)?,
+        ];
+        Self::unpack_decode(self.run(exe, &inputs)?)
+    }
+
+    fn unpack_decode(mut out: Vec<Tensor>) -> Result<DecodeOut> {
+        if out.len() != 5 {
+            bail!("decode returned {} outputs, expected 5", out.len());
+        }
+        let q = out.pop().unwrap();
+        let g_new = out.pop().unwrap();
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let logits = out.pop().unwrap().data;
+        Ok(DecodeOut { logits, k_new, v_new, g_new, q })
+    }
+
+    /// True if a fused-selection decode executable exists for `cap`.
+    pub fn has_decode_sel(&self, cap: usize) -> bool {
+        self.decode_sel.contains_key(&cap)
+    }
+
+    /// One decode step with Quest page selection fused in. `page_min` /
+    /// `page_max`: `[L, Hkv, P, dh]` elementwise key bounds for the global
+    /// region's pages; `budget_pages` limits read-time attention per head.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_sel(
+        &self,
+        cap: usize,
+        token: i32,
+        pos: i32,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        slot_mask: &Tensor,
+        page_min: &Tensor,
+        page_max: &Tensor,
+        budget_pages: i32,
+    ) -> Result<DecodeOut> {
+        let exe = self
+            .decode_sel
+            .get(&cap)
+            .with_context(|| format!("no decode_sel capacity {cap}"))?;
+        let inputs = vec![
+            self.client.buffer_from_host_buffer(&[token], &[], None)?,
+            self.client.buffer_from_host_buffer(&[pos], &[], None)?,
+            self.client
+                .buffer_from_host_buffer(&k_cache.data, &k_cache.shape, None)?,
+            self.client
+                .buffer_from_host_buffer(&v_cache.data, &v_cache.shape, None)?,
+            self.client
+                .buffer_from_host_buffer(&slot_mask.data, &slot_mask.shape, None)?,
+            self.client
+                .buffer_from_host_buffer(&page_min.data, &page_min.shape, None)?,
+            self.client
+                .buffer_from_host_buffer(&page_max.data, &page_max.shape, None)?,
+            self.client.buffer_from_host_buffer(&[budget_pages], &[], None)?,
+        ];
+        Self::unpack_decode(self.run(exe, &inputs)?)
+    }
+}

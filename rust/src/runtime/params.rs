@@ -1,0 +1,175 @@
+//! Reader for `params.bin`, the trained-weights container written by
+//! `python/compile/train.save_params_bin`.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   b"WGKV"
+//! u32     version (1)
+//! u32     tensor count
+//! repeat:
+//!   u16     name length, then name bytes (utf-8)
+//!   u8      ndim, then ndim * u32 dims
+//!   f32*    row-major data
+//! ```
+//! Tensors appear in sorted-name order (the same canonical order the
+//! manifest's `param_order` uses), but the reader indexes by name and does
+//! not rely on it.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+/// A named set of f32 tensors (one trained model variant).
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut r = bytes;
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("params.bin: truncated magic")?;
+        if &magic != b"WGKV" {
+            bail!("params.bin: bad magic {magic:?}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("params.bin: unsupported version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name).context("params.bin: truncated name")?;
+            let name = String::from_utf8(name).context("params.bin: non-utf8 name")?;
+            let ndim = read_u8(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            let byte_len = n * 4;
+            if r.len() < byte_len {
+                bail!("params.bin: truncated data for '{name}'");
+            }
+            for (i, chunk) in r[..byte_len].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            r = &r[byte_len..];
+            tensors.insert(name, Tensor { shape, data });
+        }
+        if !r.is_empty() {
+            bail!("params.bin: {} trailing bytes", r.len());
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    /// Total parameter count (for the paper's 0.4%-overhead accounting).
+    pub fn total_elements(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+}
+
+fn read_u8(r: &mut &[u8]) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b).context("params.bin: truncated u8")?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b).context("params.bin: truncated u16")?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("params.bin: truncated u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(entries: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"WGKV");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (name, shape, data) in entries {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(shape.len() as u8);
+            for &d in *shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &x in *data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = encode(&[
+            ("a.w", &[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            ("b", &[3], &[5.0, 6.0, 7.0]),
+        ]);
+        let p = ParamSet::parse(&bytes).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.get("a.w").unwrap().shape, vec![2, 2]);
+        assert_eq!(p.get("b").unwrap().data, vec![5.0, 6.0, 7.0]);
+        assert_eq!(p.total_elements(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = encode(&[("a", &[1], &[0.0])]);
+        bytes[0] = b'X';
+        assert!(ParamSet::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let bytes = encode(&[("a", &[4], &[0.0; 4])]);
+        assert!(ParamSet::parse(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = encode(&[("a", &[1], &[0.0])]);
+        bytes.push(0);
+        assert!(ParamSet::parse(&bytes).is_err());
+    }
+}

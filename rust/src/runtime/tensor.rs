@@ -1,0 +1,164 @@
+//! Minimal host-side dense f32 tensor used across the coordinator.
+//!
+//! This deliberately isn't a general ndarray: the coordinator only ever
+//! needs contiguous row-major f32 buffers with shape bookkeeping for
+//! marshalling PJRT inputs/outputs and assembling cache views.
+
+use anyhow::{bail, Result};
+
+/// Contiguous row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Wrap existing data, checking the element count.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    /// Convert a PJRT output literal (f32 or s32 array) into a Tensor.
+    pub fn from_literal(lit: xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            xla::ElementType::S32 => lit
+                .to_vec::<i32>()?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            ty => bail!("unsupported output element type {ty:?}"),
+        };
+        Ok(Self { shape: dims, data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flat offset of the first element under a (possibly partial) index
+    /// prefix — allocation-free (the per-token cache hot path calls this
+    /// for every (layer, head); see EXPERIMENTS.md §Perf).
+    #[inline]
+    fn prefix_offset(&self, prefix: &[usize]) -> usize {
+        debug_assert!(prefix.len() <= self.shape.len());
+        let mut tail: usize = self.shape[prefix.len()..].iter().product();
+        let mut off = 0usize;
+        for i in (0..prefix.len()).rev() {
+            debug_assert!(prefix[i] < self.shape[i]);
+            off += prefix[i] * tail;
+            tail *= self.shape[i];
+        }
+        off
+    }
+
+    /// Flat offset of a multi-index (debug-checked).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        self.prefix_offset(idx)
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Borrow the contiguous slice for a prefix index. E.g. for a
+    /// `[L, H, N, dh]` tensor, `slice_at(&[l, h])` is the `[N, dh]` block.
+    #[inline]
+    pub fn slice_at(&self, prefix: &[usize]) -> &[f32] {
+        let start = self.prefix_offset(prefix);
+        let len: usize = self.shape[prefix.len()..].iter().product();
+        &self.data[start..start + len]
+    }
+
+    /// Mutable variant of [`Self::slice_at`].
+    #[inline]
+    pub fn slice_at_mut(&mut self, prefix: &[usize]) -> &mut [f32] {
+        let start = self.prefix_offset(prefix);
+        let len: usize = self.shape[prefix.len()..].iter().product();
+        &mut self.data[start..start + len]
+    }
+}
+
+/// Argmax over a logits slice (greedy sampling helper).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_offsets() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.offset(&[1, 2, 3]), 12 + 8 + 3);
+    }
+
+    #[test]
+    fn slice_at_views_contiguous_block() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 0], 7.0);
+        let s = t.slice_at(&[1, 2]);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0], 7.0);
+    }
+
+    #[test]
+    fn from_vec_checks_count() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+    }
+}

@@ -1,0 +1,254 @@
+//! Request scheduling: queueing, continuous batching, KV-budget admission
+//! control.
+//!
+//! The exported executables are batch-1 (the tiny testbed), so "continuous
+//! batching" here is the *scheduling* structure of vLLM/Orca rather than
+//! batched GEMMs: new requests are admitted into the active set as soon as
+//! (a) a slot frees up and (b) the paged-pool byte budget allows, and the
+//! decode loop interleaves one token per active sequence per step —
+//! finished sequences retire immediately and the next queued request takes
+//! their place without draining the batch.
+//!
+//! The KV byte budget is the serving-level counterpart of the paper's
+//! App. K observation: multiple concurrent requests compete for one memory
+//! pool, so admission control (and, composed with it, per-sequence KV
+//! admission) decides how many sequences fit.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{Engine, Session, SessionOptions};
+use crate::model::{Sampler, SamplerKind};
+
+/// Scheduler limits.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Max sequences decoding concurrently.
+    pub max_active: usize,
+    /// Paged-pool KV byte budget across all active sequences; requests wait
+    /// in the queue while the pool is full.
+    pub kv_byte_budget: usize,
+    /// Queue bound; submissions beyond it are rejected.
+    pub max_queue: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_active: 8, kv_byte_budget: 256 << 20, max_queue: 1024 }
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub opts: SessionOptions,
+    pub sampler: SamplerKind,
+    pub seed: u64,
+}
+
+/// Terminal state of a request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub text: String,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    pub prefill_us: f64,
+    pub decode_us_mean: f64,
+    pub cache_fraction: f64,
+    pub kv_bytes: usize,
+    pub eviction_triggers: u64,
+    /// Set when the request failed (e.g. prompt exceeds buckets, KV OOM).
+    pub error: Option<String>,
+}
+
+struct Active {
+    req: Request,
+    sess: Session,
+    sampler: Sampler,
+    generated: Vec<i32>,
+    prefill_us: f64,
+    decode_started: Instant,
+}
+
+/// Continuous batcher over one [`Engine`].
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    queue: VecDeque<Request>,
+    active: Vec<Active>,
+    rejected: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Self { cfg, queue: VecDeque::new(), active: Vec::new(), rejected: 0 }
+    }
+
+    /// Enqueue a request; `false` means the queue is full (rejected).
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.cfg.max_queue {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// KV bytes currently pinned by active sequences.
+    pub fn active_kv_bytes(&self) -> usize {
+        self.active
+            .iter()
+            .map(|a| a.sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0))
+            .sum()
+    }
+
+    fn finish(a: Active, error: Option<String>, text: String) -> Completion {
+        let steps = a.generated.len().max(1);
+        Completion {
+            id: a.req.id,
+            text,
+            n_prompt: a.req.prompt.len(),
+            n_generated: a.generated.len(),
+            prefill_us: a.prefill_us,
+            decode_us_mean: a.decode_started.elapsed().as_secs_f64() * 1e6 / steps as f64,
+            cache_fraction: a.sess.cache_fraction(),
+            kv_bytes: a.sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0),
+            eviction_triggers: a.sess.eviction_triggers(),
+            error,
+        }
+    }
+
+    /// One scheduling step: admit queued requests while budget allows, then
+    /// decode one token for every active sequence. Returns completions.
+    pub fn step(&mut self, engine: &mut Engine) -> Vec<Completion> {
+        let mut done = Vec::new();
+
+        // --- Admission control: slots + KV byte budget.
+        while self.active.len() < self.cfg.max_active {
+            if self.queue.is_empty() || self.active_kv_bytes() >= self.cfg.kv_byte_budget {
+                break;
+            }
+            let req = self.queue.pop_front().unwrap();
+            let mut sess = engine.start_session(req.opts.clone());
+            let t0 = Instant::now();
+            match engine.prefill(&mut sess, &req.prompt) {
+                Ok(()) => {
+                    let sampler = Sampler::new(req.sampler, req.seed);
+                    self.active.push(Active {
+                        req,
+                        sess,
+                        sampler,
+                        generated: Vec::new(),
+                        prefill_us: t0.elapsed().as_secs_f64() * 1e6,
+                        decode_started: Instant::now(),
+                    });
+                }
+                Err(e) => {
+                    let a = Active {
+                        req,
+                        sess,
+                        sampler: Sampler::greedy(),
+                        generated: Vec::new(),
+                        prefill_us: 0.0,
+                        decode_started: Instant::now(),
+                    };
+                    done.push(Self::finish(a, Some(format!("prefill: {e:#}")), String::new()));
+                }
+            }
+        }
+
+        // --- Decode: one token per active sequence, retire finished.
+        let eos = engine.dims().eos;
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            let tok = a.sampler.sample(&a.sess.last_logits);
+            let mut finished = tok == eos;
+            let mut error = None;
+            if !finished {
+                a.generated.push(tok);
+                if let Err(e) = engine.decode_step(&mut a.sess, tok) {
+                    finished = true;
+                    error = Some(format!("decode: {e:#}"));
+                }
+            }
+            if !finished && a.generated.len() >= a.req.max_new {
+                finished = true;
+            }
+            if finished {
+                let a = self.active.swap_remove(i);
+                let text = engine.tokenizer.decode(&a.generated);
+                engine.metrics.requests_done += 1;
+                done.push(Self::finish(a, error, text));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Drive everything to completion (examples / benchmarks).
+    pub fn run_to_completion(&mut self, engine: &mut Engine) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while !self.is_idle() {
+            all.extend(self.step(engine));
+        }
+        all.sort_by_key(|c| c.id);
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admission::PolicyKind;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+            opts: SessionOptions::policy(PolicyKind::FullCache),
+            sampler: SamplerKind::Greedy,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn queue_bound_rejects() {
+        let mut s = Scheduler::new(SchedulerConfig { max_queue: 2, ..Default::default() });
+        assert!(s.submit(req(0)));
+        assert!(s.submit(req(1)));
+        assert!(!s.submit(req(2)));
+        assert_eq!(s.rejected(), 1);
+        assert_eq!(s.queued(), 2);
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        assert!(s.is_idle());
+        assert_eq!(s.active_kv_bytes(), 0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Read-time KV Selection (Quest-style, paper §5.4 / Fig 9).
+//!
+//! Selection approximates attention by reading only the most relevant
+//! cached pages for the *current query*: each global page carries
+//! elementwise min/max bounds of its keys (maintained by
+//! [`crate::kvcache::SequenceKvCache`]); a page's upper-bound score against
+//! query `q` is `sum_d max(q_d*min_d, q_d*max_d)`, which dominates the true
+//! score of every key in the page. The top-`budget` pages by bound are
+//! attended, the rest skipped.
+//!
+//! The selection itself runs *inside* the decode executable
+//! (`decode_sel_{C}.hlo.txt`, see `python/compile/model.decode_step_sel`) so
+//! the query never has to leave the device; this module holds the
+//! configuration, the host-side reference implementation used by tests, and
+//! the budget bookkeeping.
+
+use crate::runtime::tensor::Tensor;
+
+/// Quest configuration for a session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuestConfig {
+    /// Token budget for read-time attention over the global region
+    /// (converted to pages by [`Self::budget_pages`]). The local window and
+    /// the current token are always attended, mirroring Quest's treatment
+    /// of recent tokens.
+    pub budget_tokens: usize,
+}
+
+impl QuestConfig {
+    pub fn budget_pages(&self, page_size: usize) -> i32 {
+        (self.budget_tokens.div_ceil(page_size)) as i32
+    }
+}
+
+/// Host-side reference: upper-bound score of one page against a query.
+pub fn page_upper_bound(q: &[f32], kmin: &[f32], kmax: &[f32]) -> f32 {
+    q.iter()
+        .zip(kmin.iter().zip(kmax))
+        .map(|(&qd, (&mn, &mx))| (qd * mn).max(qd * mx))
+        .sum()
+}
+
+/// Host-side reference of the full selection: returns the indices of the
+/// `budget` pages with the highest upper bound. Used by tests and by the
+/// (slow) host fallback when no fused executable is available.
+pub fn select_pages_ref(
+    q: &[f32],
+    page_min: &Tensor, // [P, dh]
+    page_max: &Tensor, // [P, dh]
+    budget: usize,
+) -> Vec<usize> {
+    let p = page_min.shape[0];
+    let mut scored: Vec<(usize, f32)> = (0..p)
+        .map(|i| {
+            (i, page_upper_bound(q, page_min.slice_at(&[i]), page_max.slice_at(&[i])))
+        })
+        .filter(|(_, s)| s.is_finite())
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored.truncate(budget);
+    let mut out: Vec<usize> = scored.into_iter().map(|(i, _)| i).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Host-side selection fallback: mask out the global slots of pages not in
+/// the top-`budget_pages` per (layer, KV head), scoring each page by the
+/// group-max Quest upper bound of the given queries.
+///
+/// Used when no fused `decode_sel` executable is exported for the current
+/// capacity. The queries are necessarily the *previous* step's (`q_t` only
+/// exists after the executable runs), so host selection is one token stale —
+/// an explicitly-documented approximation; the fused path has no staleness.
+/// The trailing `w_local` slots (the ring) are always kept.
+#[allow(clippy::too_many_arguments)]
+pub fn host_selected_mask(
+    slot_mask: &Tensor,      // [L, Hkv, C]
+    q: &Tensor,              // [L, Hq, dh] (previous step)
+    page_min: &Tensor,       // [L, Hkv, P, dh]
+    page_max: &Tensor,       // [L, Hkv, P, dh]
+    gqa_group: usize,
+    page_size: usize,
+    w_local: usize,
+    budget_pages: usize,
+) -> Tensor {
+    let (n_layers, n_kv, cap) = (slot_mask.shape[0], slot_mask.shape[1], slot_mask.shape[2]);
+    let n_pages = page_min.shape[2];
+    let dh = page_min.shape[3];
+    let mut out = slot_mask.clone();
+    for l in 0..n_layers {
+        for h in 0..n_kv {
+            // Group-max upper bound per page.
+            let mut scored: Vec<(usize, f32)> = (0..n_pages)
+                .map(|p| {
+                    let mn = page_min.slice_at(&[l, h, p]);
+                    let mx = page_max.slice_at(&[l, h, p]);
+                    let mut best = f32::NEG_INFINITY;
+                    for g in 0..gqa_group {
+                        let qv = &q.slice_at(&[l, h * gqa_group + g])[..dh];
+                        best = best.max(page_upper_bound(qv, mn, mx));
+                    }
+                    (p, best)
+                })
+                .filter(|(_, s)| s.is_finite())
+                .collect();
+            scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            scored.truncate(budget_pages);
+            let keep: std::collections::HashSet<usize> =
+                scored.into_iter().map(|(p, _)| p).collect();
+            let m = out.slice_at_mut(&[l, h]);
+            let global_slots = cap.saturating_sub(w_local).min(n_pages * page_size);
+            for slot in 0..global_slots {
+                if !keep.contains(&(slot / page_size)) {
+                    m[slot] = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_dominates_every_key_in_page() {
+        // Random-ish keys; bound computed from their min/max must be >= any
+        // true dot product.
+        let keys = [
+            vec![0.5f32, -1.0, 2.0],
+            vec![-0.5, 1.0, 0.0],
+            vec![1.5, 0.5, -2.0],
+        ];
+        let mut kmin = vec![f32::INFINITY; 3];
+        let mut kmax = vec![f32::NEG_INFINITY; 3];
+        for k in &keys {
+            for d in 0..3 {
+                kmin[d] = kmin[d].min(k[d]);
+                kmax[d] = kmax[d].max(k[d]);
+            }
+        }
+        let q = vec![0.3f32, -0.7, 1.1];
+        let ub = page_upper_bound(&q, &kmin, &kmax);
+        for k in &keys {
+            let s: f32 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+            assert!(ub >= s - 1e-6, "ub {ub} < score {s}");
+        }
+    }
+
+    #[test]
+    fn select_pages_prefers_high_bound() {
+        // Page 1 contains a key aligned with q; page 0 anti-aligned.
+        let pmin = Tensor::from_vec(&[2, 2], vec![-1.0, -1.0, 0.9, 0.9]).unwrap();
+        let pmax = Tensor::from_vec(&[2, 2], vec![-0.5, -0.5, 1.0, 1.0]).unwrap();
+        let q = vec![1.0, 1.0];
+        assert_eq!(select_pages_ref(&q, &pmin, &pmax, 1), vec![1]);
+    }
+
+    #[test]
+    fn infinite_bounds_are_skipped() {
+        // Empty pages carry +inf/-inf sentinels and must never be selected.
+        let pmin = Tensor::from_vec(&[2, 1], vec![0.5, f32::INFINITY]).unwrap();
+        let pmax = Tensor::from_vec(&[2, 1], vec![1.0, f32::NEG_INFINITY]).unwrap();
+        assert_eq!(select_pages_ref(&[1.0], &pmin, &pmax, 2), vec![0]);
+    }
+
+    #[test]
+    fn budget_pages_rounds_up() {
+        assert_eq!(QuestConfig { budget_tokens: 33 }.budget_pages(16), 3);
+        assert_eq!(QuestConfig { budget_tokens: 32 }.budget_pages(16), 2);
+    }
+
+    #[test]
+    fn host_mask_keeps_budget_pages_and_ring() {
+        // 1 layer, 1 kv head (group 2), 2 pages of 2 slots, w_local 2, cap 6.
+        let slot_mask = Tensor::full(&[1, 1, 6], 1.0);
+        // Queries aligned with page 1's bounds.
+        let q = Tensor::from_vec(&[1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let pmin = Tensor::from_vec(&[1, 1, 2, 2], vec![-1.0, -1.0, 0.9, 0.9]).unwrap();
+        let pmax = Tensor::from_vec(&[1, 1, 2, 2], vec![-0.5, -0.5, 1.0, 1.0]).unwrap();
+        let out = host_selected_mask(&slot_mask, &q, &pmin, &pmax, 2, 2, 2, 1);
+        // Page 0 slots (0, 1) dropped; page 1 slots (2, 3) kept; ring (4, 5) kept.
+        assert_eq!(out.slice_at(&[0, 0]), &[0.0, 0.0, 1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn host_mask_never_unmasks_invalid_slots() {
+        let slot_mask = Tensor::from_vec(&[1, 1, 6], vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]).unwrap();
+        let q = Tensor::from_vec(&[1, 2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let pmin = Tensor::full(&[1, 1, 2, 2], 0.0);
+        let pmax = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let out = host_selected_mask(&slot_mask, &q, &pmin, &pmax, 2, 2, 2, 2);
+        // Budget covers both pages: mask unchanged.
+        assert_eq!(out.slice_at(&[0, 0]), slot_mask.slice_at(&[0, 0]));
+    }
+}

@@ -1,0 +1,582 @@
+//! Serving front-end: a threaded TCP JSON-lines API over the engine thread.
+//!
+//! PJRT buffers are not `Send`, so the engine + scheduler live on one
+//! dedicated OS thread; connection handler threads talk to it through an
+//! mpsc command channel and receive replies over per-request channels.
+//! (The usual tokio stack is unavailable in this image — DESIGN.md §2 —
+//! so the server is thread-per-connection over `std::net`, which at this
+//! model scale is not the bottleneck: the engine thread serializes all
+//! PJRT work anyway.) Python is never involved: the engine thread only
+//! executes pre-compiled artifacts.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```json
+//! {"op": "generate", "prompt": "q: k07\na: ", "max_new": 16,
+//!  "policy": "wg-kv", "tau": 0.1, "quest_budget_tokens": 64,
+//!  "snapkv_budget": 128, "temperature": 0.0, "seed": 0}
+//! {"op": "stats"}
+//! ```
+//!
+//! Responses are one JSON object per line: a completion (`"ok": true`), a
+//! stats snapshot (`"ok": "stats"`), or an error (`"ok": false`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::admission::PolicyKind;
+use crate::engine::{Engine, SessionOptions};
+use crate::eviction::SnapKvConfig;
+use crate::metrics::MetricsSnapshot;
+use crate::model::SamplerKind;
+use crate::runtime::manifest::ModelDims;
+use crate::scheduler::{Completion, Request, Scheduler, SchedulerConfig};
+use crate::selection::QuestConfig;
+use crate::util::json::Json;
+
+/// One `generate` call's parameters (flat JSON surface).
+#[derive(Debug, Clone)]
+pub struct GenerateParams {
+    pub prompt: String,
+    pub max_new: usize,
+    /// `wg-kv` | `full` | `local` | `duo` | `random`.
+    pub policy: String,
+    pub tau: Option<f32>,
+    pub sink: usize,
+    pub recent: usize,
+    pub duo_ratio: f32,
+    pub sparsity: f32,
+    pub quest_budget_tokens: Option<usize>,
+    pub snapkv_budget: Option<usize>,
+    pub temperature: Option<f32>,
+    pub seed: u64,
+}
+
+impl Default for GenerateParams {
+    fn default() -> Self {
+        Self {
+            prompt: String::new(),
+            max_new: 32,
+            policy: "wg-kv".into(),
+            tau: None,
+            sink: 4,
+            recent: 0,
+            duo_ratio: 0.5,
+            sparsity: 0.75,
+            quest_budget_tokens: None,
+            snapkv_budget: None,
+            temperature: None,
+            seed: 0,
+        }
+    }
+}
+
+impl GenerateParams {
+    pub fn prompt(text: &str) -> Self {
+        Self { prompt: text.to_string(), ..Self::default() }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = GenerateParams::default();
+        Ok(Self {
+            prompt: j
+                .req("prompt")?
+                .as_str()
+                .ok_or_else(|| anyhow!("prompt must be a string"))?
+                .to_string(),
+            max_new: j.get("max_new").and_then(Json::as_usize).unwrap_or(d.max_new),
+            policy: j
+                .get("policy")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.policy)
+                .to_string(),
+            tau: j.get("tau").and_then(Json::as_f64).map(|x| x as f32),
+            sink: j.get("sink").and_then(Json::as_usize).unwrap_or(d.sink),
+            recent: j.get("recent").and_then(Json::as_usize).unwrap_or(d.recent),
+            duo_ratio: j
+                .get("duo_ratio")
+                .and_then(Json::as_f64)
+                .map(|x| x as f32)
+                .unwrap_or(d.duo_ratio),
+            sparsity: j
+                .get("sparsity")
+                .and_then(Json::as_f64)
+                .map(|x| x as f32)
+                .unwrap_or(d.sparsity),
+            quest_budget_tokens: j.get("quest_budget_tokens").and_then(Json::as_usize),
+            snapkv_budget: j.get("snapkv_budget").and_then(Json::as_usize),
+            temperature: j.get("temperature").and_then(Json::as_f64).map(|x| x as f32),
+            seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("op", "generate")
+            .set("prompt", self.prompt.as_str())
+            .set("max_new", self.max_new)
+            .set("policy", self.policy.as_str())
+            .set("sink", self.sink)
+            .set("recent", self.recent)
+            .set("duo_ratio", self.duo_ratio)
+            .set("sparsity", self.sparsity)
+            .set("seed", self.seed as i64);
+        if let Some(t) = self.tau {
+            j = j.set("tau", t);
+        }
+        if let Some(b) = self.quest_budget_tokens {
+            j = j.set("quest_budget_tokens", b);
+        }
+        if let Some(b) = self.snapkv_budget {
+            j = j.set("snapkv_budget", b);
+        }
+        if let Some(t) = self.temperature {
+            j = j.set("temperature", t);
+        }
+        j
+    }
+
+    /// Resolve the policy string + knobs into a [`PolicyKind`].
+    pub fn policy_kind(&self, dims: &ModelDims) -> Result<PolicyKind> {
+        Ok(match self.policy.as_str() {
+            "wg-kv" | "wgkv" => match self.tau {
+                Some(t) => PolicyKind::WriteGatedTau(t),
+                None => PolicyKind::WriteGated,
+            },
+            "full" => PolicyKind::FullCache,
+            "local" => PolicyKind::LocalOnly { sink: self.sink, recent: self.recent },
+            "duo" => PolicyKind::duo_with_ratio(dims, self.duo_ratio, self.sink),
+            "random" => PolicyKind::RandomSparsity { sparsity: self.sparsity, seed: self.seed },
+            other => bail!("unknown policy '{other}'"),
+        })
+    }
+
+    pub fn session_options(&self, dims: &ModelDims) -> Result<SessionOptions> {
+        Ok(SessionOptions {
+            policy: self.policy_kind(dims)?,
+            quest: self.quest_budget_tokens.map(|b| QuestConfig { budget_tokens: b }),
+            snapkv: self.snapkv_budget.map(|b| SnapKvConfig {
+                budget_per_head: b,
+                ..SnapKvConfig::default()
+            }),
+        })
+    }
+
+    pub fn sampler_kind(&self) -> SamplerKind {
+        match self.temperature {
+            Some(t) if t > 0.0 => SamplerKind::Temperature(t),
+            _ => SamplerKind::Greedy,
+        }
+    }
+}
+
+/// Server-level statistics.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub engine: MetricsSnapshot,
+    pub queued: usize,
+    pub active: usize,
+    pub rejected: u64,
+    pub active_kv_bytes: usize,
+}
+
+impl ServerStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ok", "stats")
+            .set("engine", self.engine.to_json())
+            .set("queued", self.queued)
+            .set("active", self.active)
+            .set("rejected", self.rejected)
+            .set("active_kv_bytes", self.active_kv_bytes)
+    }
+}
+
+pub fn completion_to_json(c: &Completion) -> Json {
+    let mut j = Json::obj()
+        .set("ok", true)
+        .set("id", c.id)
+        .set("text", c.text.as_str())
+        .set("n_prompt", c.n_prompt)
+        .set("n_generated", c.n_generated)
+        .set("prefill_us", c.prefill_us)
+        .set("decode_us_mean", c.decode_us_mean)
+        .set("cache_fraction", c.cache_fraction)
+        .set("kv_bytes", c.kv_bytes)
+        .set("eviction_triggers", c.eviction_triggers);
+    if let Some(e) = &c.error {
+        j = j.set("error", e.as_str());
+    }
+    j
+}
+
+pub fn completion_from_json(j: &Json) -> Completion {
+    let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    Completion {
+        id: f("id") as u64,
+        text: j.get("text").and_then(Json::as_str).unwrap_or("").to_string(),
+        n_prompt: f("n_prompt") as usize,
+        n_generated: f("n_generated") as usize,
+        prefill_us: f("prefill_us"),
+        decode_us_mean: f("decode_us_mean"),
+        cache_fraction: f("cache_fraction"),
+        kv_bytes: f("kv_bytes") as usize,
+        eviction_triggers: f("eviction_triggers") as u64,
+        error: j.get("error").and_then(Json::as_str).map(str::to_string),
+    }
+}
+
+/// Command sent to the engine thread.
+pub enum Command {
+    Generate(GenerateParams, mpsc::Sender<Completion>),
+    Stats(mpsc::Sender<ServerStats>),
+}
+
+/// Spawn the engine thread: builds the engine *inside* the thread (PJRT
+/// buffers are not `Send`), owns the scheduler, drains commands, steps the
+/// batcher, and resolves completions. Dropping the returned sender (all
+/// clones) shuts the thread down once it drains.
+///
+/// `make_engine` runs on the engine thread; a load failure is returned
+/// through the join handle after every pending command errors out.
+pub fn spawn_engine_thread_with<F>(
+    make_engine: F,
+    cfg: SchedulerConfig,
+) -> (mpsc::Sender<Command>, JoinHandle<Result<()>>)
+where
+    F: FnOnce() -> Result<Engine> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Command>();
+    let handle = std::thread::spawn(move || -> Result<()> {
+        let mut engine = match make_engine() {
+            Ok(e) => e,
+            Err(e) => {
+                // Fail every request that arrives until the channel closes.
+                while let Ok(cmd) = rx.recv() {
+                    if let Command::Generate(_, reply) = cmd {
+                        let _ = reply.send(error_completion(0, &format!("engine load: {e:#}")));
+                    }
+                }
+                return Err(e);
+            }
+        };
+        let mut sched = Scheduler::new(cfg);
+        let mut next_id: u64 = 0;
+        let mut waiters: std::collections::HashMap<u64, mpsc::Sender<Completion>> =
+            std::collections::HashMap::new();
+        loop {
+            // Block when idle; drain opportunistically when busy.
+            let mut incoming: Vec<Command> = Vec::new();
+            if sched.is_idle() {
+                match rx.recv() {
+                    Ok(c) => incoming.push(c),
+                    Err(_) => break, // all senders dropped
+                }
+            }
+            while let Ok(c) = rx.try_recv() {
+                incoming.push(c);
+            }
+            for cmd in incoming {
+                match cmd {
+                    Command::Generate(p, reply) => {
+                        let id = next_id;
+                        next_id += 1;
+                        let opts = match p.session_options(engine.dims()) {
+                            Ok(o) => o,
+                            Err(e) => {
+                                let _ = reply.send(error_completion(id, &format!("{e:#}")));
+                                continue;
+                            }
+                        };
+                        let req = Request {
+                            id,
+                            prompt: engine.tokenizer.encode(&p.prompt),
+                            max_new: p.max_new,
+                            opts,
+                            sampler: p.sampler_kind(),
+                            seed: p.seed,
+                        };
+                        if sched.submit(req) {
+                            waiters.insert(id, reply);
+                        } else {
+                            let _ = reply.send(error_completion(id, "queue full"));
+                        }
+                    }
+                    Command::Stats(reply) => {
+                        let _ = reply.send(ServerStats {
+                            engine: engine.metrics.snapshot(),
+                            queued: sched.queued(),
+                            active: sched.active(),
+                            rejected: sched.rejected(),
+                            active_kv_bytes: sched.active_kv_bytes(),
+                        });
+                    }
+                }
+            }
+            for done in sched.step(&mut engine) {
+                if let Some(reply) = waiters.remove(&done.id) {
+                    let _ = reply.send(done);
+                }
+            }
+        }
+        Ok(())
+    });
+    (tx, handle)
+}
+
+/// [`spawn_engine_thread_with`] loading artifacts from a directory.
+pub fn spawn_engine_thread(
+    artifacts: impl Into<std::path::PathBuf>,
+    engine_cfg: crate::engine::EngineConfig,
+    cfg: SchedulerConfig,
+) -> (mpsc::Sender<Command>, JoinHandle<Result<()>>) {
+    let dir = artifacts.into();
+    spawn_engine_thread_with(move || Engine::load(dir, engine_cfg), cfg)
+}
+
+fn error_completion(id: u64, msg: &str) -> Completion {
+    Completion {
+        id,
+        text: String::new(),
+        n_prompt: 0,
+        n_generated: 0,
+        prefill_us: 0.0,
+        decode_us_mean: 0.0,
+        cache_fraction: 0.0,
+        kv_bytes: 0,
+        eviction_triggers: 0,
+        error: Some(msg.to_string()),
+    }
+}
+
+fn respond(line: &str, cmds: &mpsc::Sender<Command>) -> Json {
+    let parsed = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return Json::obj().set("ok", false).set("error", format!("bad json: {e}")),
+    };
+    match parsed.get("op").and_then(Json::as_str) {
+        Some("generate") => match GenerateParams::from_json(&parsed) {
+            Ok(p) => {
+                let (tx, rx) = mpsc::channel();
+                if cmds.send(Command::Generate(p, tx)).is_err() {
+                    return Json::obj().set("ok", false).set("error", "engine stopped");
+                }
+                match rx.recv() {
+                    Ok(c) => completion_to_json(&c),
+                    Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+                }
+            }
+            Err(e) => Json::obj().set("ok", false).set("error", format!("bad request: {e:#}")),
+        },
+        Some("stats") => {
+            let (tx, rx) = mpsc::channel();
+            if cmds.send(Command::Stats(tx)).is_err() {
+                return Json::obj().set("ok", false).set("error", "engine stopped");
+            }
+            match rx.recv() {
+                Ok(s) => s.to_json(),
+                Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+            }
+        }
+        Some(op) => Json::obj().set("ok", false).set("error", format!("unknown op '{op}'")),
+        None => Json::obj().set("ok", false).set("error", "missing 'op'"),
+    }
+}
+
+fn handle_conn(stream: TcpStream, cmds: mpsc::Sender<Command>) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = respond(&line, &cmds);
+        let mut out = resp.dump();
+        out.push('\n');
+        writer.write_all(out.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Serve forever on `addr`. The engine must already be wrapped by
+/// [`spawn_engine_thread`].
+pub fn serve(addr: &str, cmds: mpsc::Sender<Command>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("wgkv: serving on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
+        let cmds = cmds.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, cmds) {
+                eprintln!("wgkv: connection {peer}: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for examples and integration tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader })
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        let mut line = req.dump();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Json::parse(&resp)
+    }
+
+    pub fn generate(&mut self, params: GenerateParams) -> Result<Completion> {
+        let j = self.roundtrip(params.to_json())?;
+        match j.get("ok") {
+            Some(Json::Bool(true)) => {
+                let c = completion_from_json(&j);
+                if let Some(e) = &c.error {
+                    bail!("server error: {e}");
+                }
+                Ok(c)
+            }
+            _ => bail!(
+                "server error: {}",
+                j.get("error").and_then(Json::as_str).unwrap_or("unknown")
+            ),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<ServerStats> {
+        let j = self.roundtrip(Json::obj().set("op", "stats"))?;
+        if j.get("ok").and_then(Json::as_str) != Some("stats") {
+            bail!("unexpected stats response: {j}");
+        }
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        Ok(ServerStats {
+            engine: MetricsSnapshot::from_json(j.req("engine")?),
+            queued: f("queued") as usize,
+            active: f("active") as usize,
+            rejected: f("rejected") as u64,
+            active_kv_bytes: f("active_kv_bytes") as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(),
+            vocab_size: 259,
+            d_model: 64,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 16,
+            d_ff: 128,
+            rope_theta: 1e4,
+            gate_hidden: 8,
+            w_local: 4,
+            tau: 0.1,
+            page_size: 4,
+            bos: 256,
+            eos: 257,
+            pad: 258,
+            gqa_group: 2,
+        }
+    }
+
+    #[test]
+    fn params_parse_with_defaults() {
+        let j = Json::parse(r#"{"op":"generate","prompt":"hi"}"#).unwrap();
+        let p = GenerateParams::from_json(&j).unwrap();
+        assert_eq!(p.prompt, "hi");
+        assert_eq!(p.max_new, 32);
+        assert_eq!(p.policy_kind(&dims()).unwrap(), PolicyKind::WriteGated);
+        assert!(matches!(p.sampler_kind(), SamplerKind::Greedy));
+    }
+
+    #[test]
+    fn params_roundtrip_json() {
+        let mut p = GenerateParams::prompt("abc");
+        p.quest_budget_tokens = Some(64);
+        p.snapkv_budget = Some(128);
+        p.temperature = Some(0.7);
+        p.tau = Some(0.2);
+        let j = p.to_json();
+        let q = GenerateParams::from_json(&j).unwrap();
+        assert_eq!(q.prompt, "abc");
+        assert_eq!(q.quest_budget_tokens, Some(64));
+        assert_eq!(q.snapkv_budget, Some(128));
+        assert_eq!(q.temperature, Some(0.7));
+        let opts = q.session_options(&dims()).unwrap();
+        assert_eq!(opts.policy, PolicyKind::WriteGatedTau(0.2));
+        assert_eq!(opts.quest.unwrap().budget_tokens, 64);
+        assert_eq!(opts.snapkv.unwrap().budget_per_head, 128);
+    }
+
+    #[test]
+    fn policy_strings_resolve() {
+        let d = dims();
+        let mk = |pol: &str| {
+            GenerateParams { policy: pol.into(), ..GenerateParams::prompt("x") }
+                .policy_kind(&d)
+                .unwrap()
+        };
+        assert_eq!(mk("full"), PolicyKind::FullCache);
+        assert!(matches!(mk("local"), PolicyKind::LocalOnly { .. }));
+        assert!(matches!(mk("duo"), PolicyKind::DuoAttention { .. }));
+        assert!(matches!(mk("random"), PolicyKind::RandomSparsity { .. }));
+        let bad = GenerateParams { policy: "nope".into(), ..GenerateParams::prompt("x") };
+        assert!(bad.policy_kind(&d).is_err());
+    }
+
+    #[test]
+    fn completion_json_roundtrip() {
+        let c = Completion {
+            id: 3,
+            text: "abc".into(),
+            n_prompt: 5,
+            n_generated: 3,
+            prefill_us: 100.5,
+            decode_us_mean: 9.25,
+            cache_fraction: 0.4,
+            kv_bytes: 4096,
+            eviction_triggers: 2,
+            error: None,
+        };
+        let j = completion_to_json(&c);
+        let b = completion_from_json(&j);
+        assert_eq!(b.id, 3);
+        assert_eq!(b.text, "abc");
+        assert_eq!(b.kv_bytes, 4096);
+        assert!(b.error.is_none());
+    }
+
+    #[test]
+    fn respond_rejects_bad_input() {
+        let (tx, _rx) = mpsc::channel();
+        let j = respond("not json", &tx);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        let j = respond(r#"{"op":"unknown"}"#, &tx);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        let j = respond(r#"{"no_op": 1}"#, &tx);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    }
+}

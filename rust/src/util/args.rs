@@ -1,0 +1,173 @@
+//! Tiny CLI argument parser (substrate — this image has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Typed getters with defaults; `usage` text is
+//! assembled by the caller.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — does not include argv[0].
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` ends flag parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                out.present.push(key.clone());
+                if let Some(v) = inline {
+                    out.flags.insert(key, v);
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(key, it.next().unwrap());
+                } else {
+                    // Bare boolean flag.
+                    out.flags.insert(key, "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Result<Self> {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.get(key).map(|s| s.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn f32_opt(&self, key: &str) -> Result<Option<f32>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key} expects a boolean, got '{v}'"),
+        }
+    }
+
+    /// First positional argument (subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::from_iter(parts.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse(&["serve", "--addr", "127.0.0.1:7077", "--max-active=4", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.str("addr", ""), "127.0.0.1:7077");
+        assert_eq!(a.usize("max-active", 0).unwrap(), 4);
+        assert!(a.bool("verbose").unwrap());
+        assert!(!a.bool("quiet").unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.usize("n", 7).unwrap(), 7);
+        assert_eq!(a.f32("tau", 0.1).unwrap(), 0.1);
+        assert_eq!(a.str("s", "d"), "d");
+        assert_eq!(a.f32_opt("tau").unwrap(), None);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_ends_flags() {
+        let a = parse(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        // `--lam -0.5` — the next token starts with '-' but not '--'.
+        let a = parse(&["--lam", "-0.5"]);
+        assert_eq!(a.f32("lam", 0.0).unwrap(), -0.5);
+    }
+}

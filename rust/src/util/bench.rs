@@ -1,0 +1,210 @@
+//! Micro-benchmark harness (substrate — this image has no criterion).
+//!
+//! Fixed-time benchmarking with warmup, per-iteration sampling, and robust
+//! summary statistics (mean / median / p10 / p90 / min). `cargo bench`
+//! targets are `harness = false` binaries that call [`Bench::run`] and
+//! print one row per configuration; rows are also appended as JSON lines
+//! to `target/bench_results.jsonl` for the EXPERIMENTS.md tables.
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// Summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean_ns)
+            .set("median_ns", self.median_ns)
+            .set("p10_ns", self.p10_ns)
+            .set("p90_ns", self.p90_ns)
+            .set("min_ns", self.min_ns)
+    }
+
+    /// Human row: `name  mean  median  p90  (iters)`.
+    pub fn row(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns >= 1e9 {
+                format!("{:8.3} s ", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:8.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:8.3} us", ns / 1e3)
+            } else {
+                format!("{:8.0} ns", ns)
+            }
+        }
+        format!(
+            "{:<44} mean {} | med {} | p90 {} | n={}",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.median_ns),
+            fmt(self.p90_ns),
+            self.iters
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    /// Minimum measurement time per case.
+    pub measure: Duration,
+    /// Warmup time per case.
+    pub warmup: Duration,
+    /// Hard cap on recorded iterations.
+    pub max_iters: usize,
+    /// Minimum recorded iterations (even if over time budget).
+    pub min_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            measure: Duration::from_millis(700),
+            warmup: Duration::from_millis(200),
+            max_iters: 100_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick harness for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self {
+            measure: Duration::from_millis(300),
+            warmup: Duration::from_millis(50),
+            max_iters: 1_000,
+            min_iters: 3,
+        }
+    }
+
+    /// Run one case: `f` is invoked repeatedly; each call is timed.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let q = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            min_ns: samples[0],
+        };
+        println!("{}", result.row());
+        append_jsonl(&result);
+        result
+    }
+
+    /// Time a single execution of `f` (for one-shot long cases, e.g. a full
+    /// prefill at the largest bucket).
+    pub fn once<T>(&self, name: &str, f: impl FnOnce() -> T) -> (BenchResult, T) {
+        let t = Instant::now();
+        let out = f();
+        let ns = t.elapsed().as_nanos() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            median_ns: ns,
+            p10_ns: ns,
+            p90_ns: ns,
+            min_ns: ns,
+        };
+        println!("{}", result.row());
+        append_jsonl(&result);
+        (result, out)
+    }
+}
+
+fn append_jsonl(r: &BenchResult) {
+    let path = std::path::Path::new("target").join("bench_results.jsonl");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(fh, "{}", r.to_json().dump());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_cheap_closure() {
+        let b = Bench {
+            measure: Duration::from_millis(10),
+            warmup: Duration::from_millis(2),
+            max_iters: 10_000,
+            min_iters: 5,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn once_records_single_sample() {
+        let b = Bench::quick();
+        let (r, v) = b.once("one", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn respects_min_iters_for_slow_cases() {
+        let b = Bench {
+            measure: Duration::from_millis(1),
+            warmup: Duration::from_millis(0),
+            max_iters: 100,
+            min_iters: 4,
+        };
+        let r = b.run("slowish", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.iters >= 4);
+    }
+}

@@ -1,0 +1,23 @@
+//! From-scratch substrates for the coordinator.
+//!
+//! This image ships only the `xla` crate's vendored dependency closure, so
+//! the usual ecosystem crates (serde, rand, clap, criterion, proptest,
+//! tokio) are unavailable. Everything they would have provided is a small,
+//! tested module here:
+//!
+//! * [`json`]  — RFC 8259 JSON codec (manifest, server protocol, results);
+//! * [`rng`]   — PCG32 PRNG (policies, samplers, workload generators);
+//! * [`args`]  — CLI flag parser;
+//! * [`bench`] — fixed-time micro-benchmark harness (`cargo bench` targets);
+//! * [`prop`]  — property-based testing driver with replayable seeds.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use args::Args;
+pub use bench::{Bench, BenchResult};
+pub use json::Json;
+pub use rng::Rng;

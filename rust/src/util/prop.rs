@@ -1,0 +1,116 @@
+//! Property-based testing driver (substrate — this image has no proptest).
+//!
+//! [`forall`] runs a property over many seeded random cases; a failure
+//! reports the exact case seed so the case can be replayed with
+//! [`replay`]. No shrinking — generators in this repo draw small sizes, so
+//! failing cases are already readable.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `WGKV_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("WGKV_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` random cases derived from `seed`. The property
+/// returns `Err(message)` (or panics) to signal failure.
+pub fn forall_n<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (case {case}, replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// [`forall_n`] with the default case count.
+pub fn forall<F>(seed: u64, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    forall_n(seed, default_cases(), prop);
+}
+
+/// Re-run one failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed property failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert-like helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall_n(1, 16, |rng| {
+            count += 1;
+            let x = rng.usize(0, 100);
+            prop_assert!(x < 100);
+            Ok(())
+        });
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall_n(1, 16, |rng| {
+            let x = rng.usize(0, 10);
+            prop_assert!(x < 5, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        // Find a case seed where usize(0,10) >= 5, then replay must see the
+        // same value.
+        let mut bad_seed = None;
+        let mut bad_val = 0;
+        for case in 0..64u64 {
+            let seed = 1 ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+            let mut rng = Rng::new(seed);
+            let v = rng.usize(0, 10);
+            if v >= 5 {
+                bad_seed = Some(seed);
+                bad_val = v;
+                break;
+            }
+        }
+        let seed = bad_seed.expect("some case draws >= 5");
+        replay(seed, |rng| {
+            let v = rng.usize(0, 10);
+            prop_assert!(v == bad_val, "replay mismatch: {v} != {bad_val}");
+            Ok(())
+        });
+    }
+}

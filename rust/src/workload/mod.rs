@@ -1,0 +1,544 @@
+//! Synthetic long-context workload suite (paper §5.2 HELMET, App. K AIME).
+//!
+//! HELMET's 14 tasks / 5 categories are replaced — per the substitution
+//! rule — by parametric variants of the exact byte-level grammars the tiny
+//! model was trained on (`python/compile/corpus.py`): key-value retrieval,
+//! needle-in-haystack, list recall, many-shot ICL, and chain reasoning.
+//! Category structure, metric types (substring match / exact match / item
+//! recall / accuracy) and the memory-accuracy sweep protocol mirror the
+//! paper's; only the underlying text is synthetic.
+//!
+//! All generators are seeded and deterministic.
+
+use crate::util::rng::Rng;
+
+/// The filler vocabulary shared with `python/compile/corpus.py` (the model
+/// was trained on exactly these words).
+pub const WORDS: &[&str] = &[
+    "the", "of", "and", "to", "in", "is", "was", "for", "on", "that", "with", "as", "it", "at",
+    "by", "from", "this", "be", "are", "or", "an", "have", "not", "they", "which", "one", "you",
+    "were", "her", "all", "she", "there", "would", "their", "we", "him", "been", "has", "when",
+    "who", "will", "more", "no", "if", "out", "so", "said", "what", "up", "its", "about", "into",
+    "than", "them", "can", "only", "other", "new", "some", "could", "time", "these", "two", "may",
+    "then", "do", "first", "any", "my", "now", "such", "like", "our", "over", "man", "me", "even",
+    "most", "made", "after", "also", "did", "many", "before", "must", "through", "years", "where",
+    "much", "way", "well", "down", "should", "because", "each", "just", "those", "people", "how",
+    "too", "little", "state", "good", "very", "make", "world", "still", "own", "see", "men",
+    "work", "long", "get", "here", "between", "both", "life", "being", "under", "never", "day",
+    "same", "another", "know", "while", "last", "might", "us", "great", "old", "year", "off",
+    "come", "since", "against", "go", "came", "right", "used", "take", "three",
+];
+
+/// HELMET's five evaluation categories (paper §5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Retrieval-Augmented Generation (NQ / TriviaQA / PopQA / HotpotQA).
+    Rag,
+    /// Passage Reranking (MS MARCO).
+    Rerank,
+    /// Long-Document QA (NarrativeQA / InfiniteBench QA+MC).
+    LongQa,
+    /// Summarization (InfiniteBench Sum / Multi-LexSum).
+    Summ,
+    /// Many-Shot In-Context Learning (TREC / NLU / BANKING77 / CLINC150).
+    Icl,
+    /// Chain reasoning (AIME-like, App. K).
+    Reason,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Rag => "rag",
+            Category::Rerank => "rerank",
+            Category::LongQa => "longqa",
+            Category::Summ => "summ",
+            Category::Icl => "icl",
+            Category::Reason => "reason",
+        }
+    }
+}
+
+/// How an instance scores a model continuation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// 1.0 iff the expected string appears in the output.
+    Contains(String),
+    /// 1.0 iff the output starts with the expected string (after trimming).
+    Prefix(String),
+    /// Fraction of items appearing in the output, in order-insensitive form.
+    ItemRecall(Vec<String>),
+}
+
+/// One evaluation instance: feed `prompt`, generate, score the continuation.
+#[derive(Debug, Clone)]
+pub struct TaskInstance {
+    /// Task identifier, e.g. `rag_kv_16`.
+    pub task: String,
+    pub category: Category,
+    pub prompt: String,
+    pub metric: Metric,
+    /// Generation budget sufficient for the answer.
+    pub max_new_tokens: usize,
+}
+
+impl TaskInstance {
+    /// Score a generated continuation in [0, 1].
+    pub fn score(&self, output: &str) -> f64 {
+        match &self.metric {
+            Metric::Contains(s) => {
+                if output.contains(s.as_str()) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Metric::Prefix(s) => {
+                if output.trim_start().starts_with(s.as_str()) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Metric::ItemRecall(items) => {
+                if items.is_empty() {
+                    return 0.0;
+                }
+                let hit = items.iter().filter(|i| output.contains(i.as_str())).count();
+                hit as f64 / items.len() as f64
+            }
+        }
+    }
+}
+
+fn filler(rng: &mut Rng, n_words: usize) -> String {
+    let mut s = String::new();
+    for i in 0..n_words {
+        if i > 0 {
+            s.push(' ');
+        }
+        s.push_str(WORDS[rng.usize(0, WORDS.len())]);
+    }
+    s.push_str(". ");
+    s
+}
+
+fn letters(rng: &mut Rng, n: usize) -> String {
+    (0..n).map(|_| (b'a' + rng.usize(0, 26) as u8) as char).collect()
+}
+
+/// Distinct random keys in 0..100.
+fn distinct_keys(rng: &mut Rng, n: usize) -> Vec<u32> {
+    let mut keys: Vec<u32> = (0..100).collect();
+    // Partial Fisher-Yates.
+    for i in 0..n {
+        let j = rng.usize(i, 100);
+        keys.swap(i, j);
+    }
+    keys.truncate(n);
+    keys
+}
+
+/// Key-value retrieval (corpus `gen_kv`): RAG / LongQA analogue.
+pub fn gen_kv(rng: &mut Rng, n_pairs: usize, fill: usize) -> TaskInstance {
+    let keys = distinct_keys(rng, n_pairs);
+    let vals: Vec<String> = (0..n_pairs).map(|_| letters(rng, 3)).collect();
+    let mut doc = String::from("doc:\n");
+    for (k, v) in keys.iter().zip(&vals) {
+        doc.push_str(&format!("k{k:02} = {v}\n"));
+        doc.push_str(&filler(rng, fill));
+        doc.push('\n');
+    }
+    let qi = rng.usize(0, n_pairs);
+    let prompt = format!("{doc}q: k{:02}\na: ", keys[qi]);
+    TaskInstance {
+        task: String::new(),
+        category: Category::Rag,
+        prompt,
+        metric: Metric::Prefix(vals[qi].clone()),
+        max_new_tokens: 8,
+    }
+}
+
+/// Needle-in-haystack (corpus `gen_needle`).
+pub fn gen_needle(rng: &mut Rng, fill: usize) -> TaskInstance {
+    let code = format!("{:04}", rng.usize(0, 10_000));
+    let n_pre = rng.usize(fill / 2, fill.max(fill / 2 + 1));
+    let pre = filler(rng, n_pre);
+    let n_post = rng.usize(fill / 2, fill.max(fill / 2 + 1));
+    let post = filler(rng, n_post);
+    let prompt = format!("{pre}the secret code is {code}. {post}\nq: secret code\na: ");
+    TaskInstance {
+        task: String::new(),
+        category: Category::LongQa,
+        prompt,
+        metric: Metric::Prefix(code),
+        max_new_tokens: 8,
+    }
+}
+
+/// List recall (corpus `gen_list`): summarization / reranking analogue —
+/// the model must reproduce the salient items, in order.
+pub fn gen_list(rng: &mut Rng, n_items: usize, fill: usize) -> TaskInstance {
+    // Distinct words.
+    let mut idx: Vec<usize> = (0..WORDS.len()).collect();
+    for i in 0..n_items {
+        let j = rng.usize(i, WORDS.len());
+        idx.swap(i, j);
+    }
+    let items: Vec<String> = idx[..n_items].iter().map(|&i| WORDS[i].to_string()).collect();
+    let prompt = format!(
+        "items: {}.\n{}\nrecall: ",
+        items.join(", "),
+        filler(rng, fill)
+    );
+    TaskInstance {
+        task: String::new(),
+        category: Category::Summ,
+        prompt,
+        metric: Metric::ItemRecall(items),
+        max_new_tokens: 12 * n_items,
+    }
+}
+
+/// Many-shot in-context classification (corpus `gen_icl`).
+pub fn gen_icl(rng: &mut Rng, n_shots: usize, n_classes: usize) -> TaskInstance {
+    let pats: Vec<String> = (0..n_classes).map(|_| letters(rng, 3)).collect();
+    let mut prompt = String::new();
+    for _ in 0..n_shots {
+        let ci = rng.usize(0, n_classes);
+        prompt.push_str(&format!("x: {} -> L{}\n", pats[ci], ci));
+    }
+    let ci = rng.usize(0, n_classes);
+    prompt.push_str(&format!("x: {} -> ", pats[ci]));
+    TaskInstance {
+        task: String::new(),
+        category: Category::Icl,
+        prompt,
+        metric: Metric::Prefix(format!("L{ci}")),
+        max_new_tokens: 4,
+    }
+}
+
+/// A reasoning chain with ground truth (corpus `gen_reason`).
+#[derive(Debug, Clone)]
+pub struct ReasoningTask {
+    /// Prompt: optional noise filler, the givens, and the first
+    /// `prefill_steps` chain lines (so the model continues the chain).
+    pub prompt: String,
+    /// The full expected chain continuation (reference only).
+    pub reference: String,
+    /// Ground-truth final value (two digits, mod 100).
+    pub answer: String,
+    pub total_steps: usize,
+    pub a: u32,
+    pub b: u32,
+}
+
+impl ReasoningTask {
+    /// Accuracy metric: the generated trace must contain the correct
+    /// `answer: NN.` line.
+    pub fn score(&self, output: &str) -> f64 {
+        if output.contains(&format!("answer: {}.", self.answer)) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    pub fn instance(&self, max_new_tokens: usize) -> TaskInstance {
+        TaskInstance {
+            task: "reason_chain".into(),
+            category: Category::Reason,
+            prompt: self.prompt.clone(),
+            metric: Metric::Contains(format!("answer: {}.", self.answer)),
+            max_new_tokens,
+        }
+    }
+}
+
+/// Generate a chain-reasoning task (App. K / Fig 10, 16). `noise_words`
+/// prepends filler prose so the prompt floods the cache the way long
+/// thinking traces do; `prefill_steps` of the chain are included in the
+/// prompt and the model must generate the remaining
+/// `total_steps - prefill_steps` lines plus the final answer.
+pub fn gen_reasoning(
+    seed: u64,
+    total_steps: usize,
+    prefill_steps: usize,
+    noise_words: usize,
+) -> ReasoningTask {
+    let mut rng = Rng::new(seed);
+    let a = rng.usize(1, 10) as u32;
+    let b = rng.usize(1, 10) as u32;
+    let mut prompt = String::new();
+    if noise_words > 0 {
+        prompt.push_str(&filler(&mut rng, noise_words));
+        prompt.push('\n');
+    }
+    prompt.push_str(&format!("given a={a} b={b}.\n"));
+    let mut prev = (a + b) % 100;
+    let mut lines = vec![format!("t1 = a+b = {prev:02}")];
+    for i in 2..=total_steps {
+        let (op, val) = if rng.bool(0.5) { ("a", a) } else { ("b", b) };
+        prev = (prev + val) % 100;
+        lines.push(format!("t{i} = t{}+{op} = {prev:02}", i - 1));
+    }
+    let answer = format!("{prev:02}");
+    let pf = prefill_steps.min(total_steps);
+    for line in &lines[..pf] {
+        prompt.push_str(line);
+        prompt.push('\n');
+    }
+    let mut reference = String::new();
+    for line in &lines[pf..] {
+        reference.push_str(line);
+        reference.push('\n');
+    }
+    reference.push_str(&format!("answer: {answer}.\n"));
+    ReasoningTask { prompt, reference, answer, total_steps, a, b }
+}
+
+/// A named task: a generator producing instances of one HELMET analogue.
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub category: Category,
+    gen: fn(&mut Rng) -> TaskInstance,
+}
+
+impl TaskSpec {
+    /// Generate `n` seeded instances.
+    pub fn instances(&self, seed: u64, n: usize) -> Vec<TaskInstance> {
+        let mut rng = Rng::new(seed ^ fxhash(self.name));
+        (0..n)
+            .map(|_| {
+                let mut t = (self.gen)(&mut rng);
+                t.task = self.name.to_string();
+                t.category = self.category;
+                t
+            })
+            .collect()
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+/// The 14-task HELMET-analogue suite (paper §5.2 / App. D). Each paper
+/// task maps to a parametric variant of a trained grammar at a prompt
+/// length matched to the tiny model's context buckets.
+pub fn helmet_suite() -> Vec<TaskSpec> {
+    vec![
+        // --- Retrieval Augmented Generation (NQ, TriviaQA, PopQA, HotpotQA)
+        TaskSpec { name: "rag_nq", category: Category::Rag, gen: |r| gen_kv(r, 6, 5) },
+        TaskSpec { name: "rag_triviaqa", category: Category::Rag, gen: |r| gen_kv(r, 8, 6) },
+        TaskSpec { name: "rag_popqa", category: Category::Rag, gen: |r| gen_kv(r, 10, 8) },
+        TaskSpec { name: "rag_hotpotqa", category: Category::Rag, gen: |r| gen_kv(r, 12, 10) },
+        // --- Passage Reranking (MS MARCO): ordered list reproduction.
+        TaskSpec { name: "rerank_msmarco", category: Category::Rerank, gen: |r| {
+            let mut t = gen_list(r, 8, 24);
+            t.category = Category::Rerank;
+            t
+        } },
+        // --- Long-Document QA (NarrativeQA, InfiniteBench QA, MC).
+        TaskSpec { name: "longqa_narrative", category: Category::LongQa, gen: |r| gen_needle(r, 24) },
+        TaskSpec { name: "longqa_infbench_qa", category: Category::LongQa, gen: |r| gen_needle(r, 48) },
+        TaskSpec { name: "longqa_infbench_mc", category: Category::LongQa, gen: |r| {
+            let mut t = gen_kv(r, 14, 12);
+            t.category = Category::LongQa;
+            t
+        } },
+        // --- Summarization (InfiniteBench Sum, Multi-LexSum).
+        TaskSpec { name: "summ_infbench", category: Category::Summ, gen: |r| gen_list(r, 6, 30) },
+        TaskSpec { name: "summ_multilexsum", category: Category::Summ, gen: |r| gen_list(r, 10, 40) },
+        // --- Many-Shot ICL (TREC Fine, NLU, BANKING77, CLINC150).
+        TaskSpec { name: "icl_trec", category: Category::Icl, gen: |r| gen_icl(r, 10, 4) },
+        TaskSpec { name: "icl_nlu", category: Category::Icl, gen: |r| gen_icl(r, 16, 4) },
+        TaskSpec { name: "icl_banking77", category: Category::Icl, gen: |r| gen_icl(r, 24, 6) },
+        TaskSpec { name: "icl_clinc150", category: Category::Icl, gen: |r| gen_icl(r, 32, 8) },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation harness (shared by the CLI and the figure-reproduction examples)
+// ---------------------------------------------------------------------------
+
+/// Aggregated result for one task under one policy configuration.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub task: String,
+    pub category: Category,
+    /// Mean task score in [0, 1].
+    pub score: f64,
+    /// Mean normalized KV cache size (Fig 7 x-axis).
+    pub cache_fraction: f64,
+    pub prefill_us: f64,
+    pub decode_us: f64,
+    pub instances: usize,
+}
+
+/// Run `instances` seeded instances of every task in `tasks` through the
+/// engine under `opts`, greedy decoding.
+pub fn eval_suite(
+    engine: &mut crate::engine::Engine,
+    opts: &crate::engine::SessionOptions,
+    seed: u64,
+    instances: usize,
+    tasks: &[TaskSpec],
+) -> anyhow::Result<Vec<EvalResult>> {
+    let mut out = Vec::with_capacity(tasks.len());
+    for spec in tasks {
+        let insts = spec.instances(seed, instances);
+        let (mut score, mut frac, mut pf, mut dc) = (0.0, 0.0, 0.0, 0.0);
+        for inst in &insts {
+            let toks = engine.tokenizer.encode(&inst.prompt);
+            let mut sampler = crate::model::Sampler::greedy();
+            let g = engine.generate(&toks, inst.max_new_tokens, opts.clone(), &mut sampler)?;
+            score += inst.score(&g.text);
+            frac += g.cache_fraction;
+            pf += g.prefill_us;
+            dc += g.decode_us_mean;
+        }
+        let n = insts.len().max(1) as f64;
+        out.push(EvalResult {
+            task: spec.name.to_string(),
+            category: spec.category,
+            score: score / n,
+            cache_fraction: frac / n,
+            prefill_us: pf / n,
+            decode_us: dc / n,
+            instances: insts.len(),
+        });
+    }
+    Ok(out)
+}
+
+/// Mean score over results, optionally restricted to one category.
+pub fn mean_score(results: &[EvalResult], category: Option<Category>) -> f64 {
+    let sel: Vec<&EvalResult> = results
+        .iter()
+        .filter(|r| category.map(|c| r.category == c).unwrap_or(true))
+        .collect();
+    if sel.is_empty() {
+        return 0.0;
+    }
+    sel.iter().map(|r| r.score).sum::<f64>() / sel.len() as f64
+}
+
+/// Mean cache fraction over results.
+pub fn mean_cache_fraction(results: &[EvalResult]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|r| r.cache_fraction).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_14_tasks_5_categories() {
+        let suite = helmet_suite();
+        assert_eq!(suite.len(), 14);
+        let cats: std::collections::HashSet<_> =
+            suite.iter().map(|t| t.category).collect();
+        assert_eq!(cats.len(), 5);
+    }
+
+    #[test]
+    fn instances_are_deterministic() {
+        let suite = helmet_suite();
+        let a = suite[0].instances(7, 3);
+        let b = suite[0].instances(7, 3);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.metric, y.metric);
+        }
+        let c = suite[0].instances(8, 3);
+        assert_ne!(a[0].prompt, c[0].prompt);
+    }
+
+    #[test]
+    fn kv_prompt_contains_answer_pair() {
+        let mut rng = Rng::new(1);
+        let t = gen_kv(&mut rng, 8, 4);
+        if let Metric::Prefix(ans) = &t.metric {
+            // The queried key's value appears in the doc.
+            assert!(t.prompt.contains(&format!("= {ans}")));
+        } else {
+            panic!("kv must use Prefix metric");
+        }
+        assert!(t.prompt.ends_with("a: "));
+    }
+
+    #[test]
+    fn scoring_prefix_and_contains() {
+        let t = TaskInstance {
+            task: "t".into(),
+            category: Category::Rag,
+            prompt: String::new(),
+            metric: Metric::Prefix("abc".into()),
+            max_new_tokens: 4,
+        };
+        assert_eq!(t.score("abc.\n"), 1.0);
+        assert_eq!(t.score(" abc"), 1.0);
+        assert_eq!(t.score("xabc"), 0.0);
+    }
+
+    #[test]
+    fn scoring_item_recall_fraction() {
+        let t = TaskInstance {
+            task: "t".into(),
+            category: Category::Summ,
+            prompt: String::new(),
+            metric: Metric::ItemRecall(vec!["alpha".into(), "beta".into()]),
+            max_new_tokens: 8,
+        };
+        assert_eq!(t.score("alpha something"), 0.5);
+        assert_eq!(t.score("beta alpha"), 1.0);
+        assert_eq!(t.score("none"), 0.0);
+    }
+
+    #[test]
+    fn reasoning_chain_arithmetic_is_consistent() {
+        let r = gen_reasoning(3, 12, 4, 0);
+        // Recompute the chain from the reference text's last line.
+        assert!(r.reference.ends_with(&format!("answer: {}.\n", r.answer)));
+        // The final value equals a+b plus the ops applied, mod 100.
+        // Check that every consecutive line value differs by a or b.
+        let mut vals: Vec<u32> = Vec::new();
+        for line in r.prompt.lines().chain(r.reference.lines()) {
+            if let Some(eqpos) = line.rfind("= ") {
+                if line.starts_with('t') {
+                    vals.push(line[eqpos + 2..].trim().parse().unwrap());
+                }
+            }
+        }
+        assert_eq!(vals.len(), r.total_steps);
+        for w in vals.windows(2) {
+            let d = (w[1] + 100 - w[0]) % 100;
+            assert!(d == r.a || d == r.b, "step delta {d} not in {{a={}, b={}}}", r.a, r.b);
+        }
+    }
+
+    #[test]
+    fn reasoning_noise_lengthens_prompt() {
+        let quiet = gen_reasoning(3, 8, 2, 0);
+        let noisy = gen_reasoning(3, 8, 2, 200);
+        assert!(noisy.prompt.len() > quiet.prompt.len() + 500);
+        assert!(noisy.prompt.contains("given a="));
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct() {
+        let mut rng = Rng::new(9);
+        let ks = distinct_keys(&mut rng, 20);
+        let set: std::collections::HashSet<_> = ks.iter().collect();
+        assert_eq!(set.len(), 20);
+    }
+}

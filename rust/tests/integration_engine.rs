@@ -1,0 +1,272 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These run only after `make artifacts` (they are skipped with a notice
+//! otherwise, so `cargo test` stays green on a fresh checkout).
+
+use wgkv::admission::PolicyKind;
+use wgkv::engine::{Engine, EngineConfig, SessionOptions};
+use wgkv::eviction::SnapKvConfig;
+use wgkv::model::Sampler;
+use wgkv::selection::QuestConfig;
+use wgkv::util::Rng;
+use wgkv::workload;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("WGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping integration test: {dir}/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+macro_rules! engine_or_skip {
+    () => {{
+        let Some(dir) = artifacts_dir() else { return };
+        Engine::load(&dir, EngineConfig::default()).expect("engine must load")
+    }};
+}
+
+fn kv_task(seed: u64) -> workload::TaskInstance {
+    let mut rng = Rng::new(seed);
+    workload::gen_kv(&mut rng, 6, 5)
+}
+
+#[test]
+fn generates_under_every_policy() {
+    let mut engine = engine_or_skip!();
+    let task = kv_task(1);
+    let dims = engine.dims().clone();
+    let policies = vec![
+        PolicyKind::WriteGated,
+        PolicyKind::FullCache,
+        PolicyKind::LocalOnly { sink: 4, recent: 0 },
+        PolicyKind::duo_with_ratio(&dims, 0.5, 4),
+        PolicyKind::RandomSparsity { sparsity: 0.75, seed: 9 },
+    ];
+    for policy in policies {
+        let out = engine
+            .generate_text(&task.prompt, 8, policy.clone())
+            .unwrap_or_else(|e| panic!("{policy:?} failed: {e:#}"));
+        assert!(!out.tokens.is_empty(), "{policy:?} generated nothing");
+        assert!(out.cache_fraction > 0.0 && out.cache_fraction <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn full_cache_retains_everything_wgkv_less() {
+    let mut engine = engine_or_skip!();
+    let task = kv_task(2);
+    let full = engine.generate_text(&task.prompt, 8, PolicyKind::FullCache).unwrap();
+    let wg = engine.generate_text(&task.prompt, 8, PolicyKind::WriteGated).unwrap();
+    assert!(
+        full.cache_fraction > 0.99,
+        "full cache must be ~1.0, got {}",
+        full.cache_fraction
+    );
+    assert!(
+        wg.cache_fraction < full.cache_fraction,
+        "wg-kv ({}) must retain less than full ({})",
+        wg.cache_fraction,
+        full.cache_fraction
+    );
+    assert!(wg.kv_bytes <= full.kv_bytes);
+}
+
+#[test]
+fn greedy_generation_is_deterministic() {
+    let mut engine = engine_or_skip!();
+    let task = kv_task(3);
+    let a = engine.generate_text(&task.prompt, 12, PolicyKind::WriteGated).unwrap();
+    let b = engine.generate_text(&task.prompt, 12, PolicyKind::WriteGated).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.text, b.text);
+}
+
+#[test]
+fn trained_model_emits_task_format_with_full_cache() {
+    let mut engine = engine_or_skip!();
+    // The tiny base LM does not reach single-shot retrieval competence
+    // within this testbed's 1-core training budget (EXPERIMENTS.md §E4),
+    // so this asserts the *plumbing*: the model continues the grammar it
+    // was trained on — a short lowercase answer terminated by '.' — which
+    // requires correct tokenizer/prefill/decode round-trips end to end.
+    let mut formatted = 0;
+    let n = 8;
+    for s in 0..n {
+        let task = kv_task(100 + s);
+        let out = engine
+            .generate_text(&task.prompt, task.max_new_tokens, PolicyKind::FullCache)
+            .unwrap();
+        let t = out.text.trim_end();
+        if t.contains('.')
+            && t.chars().take_while(|c| *c != '.').all(|c| c.is_ascii_lowercase())
+        {
+            formatted += 1;
+        }
+    }
+    assert!(
+        formatted >= n / 2,
+        "only {formatted}/{n} continuations follow the trained answer format"
+    );
+}
+
+#[test]
+fn wgkv_accuracy_tracks_full_cache() {
+    let mut engine = engine_or_skip!();
+    let n = 10;
+    let (mut s_full, mut s_wg) = (0.0, 0.0);
+    for s in 0..n {
+        let task = kv_task(200 + s);
+        s_full += task.score(
+            &engine
+                .generate_text(&task.prompt, task.max_new_tokens, PolicyKind::FullCache)
+                .unwrap()
+                .text,
+        );
+        s_wg += task.score(
+            &engine
+                .generate_text(&task.prompt, task.max_new_tokens, PolicyKind::WriteGated)
+                .unwrap()
+                .text,
+        );
+    }
+    assert!(
+        s_wg >= s_full - 3.0,
+        "wg-kv degraded far below full cache: {s_wg} vs {s_full}"
+    );
+}
+
+#[test]
+fn quest_composes_and_respects_budget_path() {
+    let mut engine = engine_or_skip!();
+    let task = kv_task(4);
+    let toks = engine.tokenizer.encode(&task.prompt);
+    let opts = SessionOptions {
+        policy: PolicyKind::WriteGated,
+        quest: Some(QuestConfig { budget_tokens: 64 }),
+        snapkv: None,
+    };
+    let mut sampler = Sampler::greedy();
+    let out = engine.generate(&toks, 8, opts, &mut sampler).expect("quest decode works");
+    assert!(!out.tokens.is_empty());
+}
+
+#[test]
+fn snapkv_enforces_budget_and_counts_triggers() {
+    let mut engine = engine_or_skip!();
+    let budget = 48usize;
+    let task = workload::gen_reasoning(7, 12, 2, 120);
+    let toks = engine.tokenizer.encode(&task.prompt);
+    let opts = SessionOptions {
+        policy: PolicyKind::FullCache,
+        quest: None,
+        snapkv: Some(SnapKvConfig { budget_per_head: budget, ..SnapKvConfig::default() }),
+    };
+    let mut sess = engine.start_session(opts);
+    engine.prefill(&mut sess, &toks).unwrap();
+    for _ in 0..24 {
+        let tok = wgkv::runtime::tensor::argmax(&sess.last_logits) as i32;
+        if tok == engine.dims().eos {
+            break;
+        }
+        engine.decode_step(&mut sess, tok).unwrap();
+    }
+    assert!(sess.eviction_triggers() > 0, "budget {budget} must trigger evictions");
+    // After evictions the global region sits near the budget: allow the
+    // 10%-per-trigger hysteresis band.
+    let dims = engine.dims().clone();
+    let cache = sess.cache().unwrap();
+    for l in 0..dims.n_layers {
+        for h in 0..dims.n_kv_heads {
+            assert!(
+                cache.global_len(l, h) <= budget + budget / 5 + 1,
+                "head ({l},{h}) at {} far above budget {budget}",
+                cache.global_len(l, h)
+            );
+        }
+    }
+}
+
+#[test]
+fn oom_is_reported_not_panicked() {
+    let mut engine = engine_or_skip!();
+    // A full-cache prompt at the largest bucket cannot fit the largest
+    // decode capacity together with the ring + new token -> engine must
+    // return an error mentioning OOM.
+    let n = engine.max_prompt_len();
+    let prompt = "x".repeat(n.saturating_sub(1));
+    let res = engine.generate_text(&prompt, 4, PolicyKind::FullCache);
+    match res {
+        Err(e) => assert!(format!("{e:#}").contains("OOM"), "unexpected error: {e:#}"),
+        Ok(out) => {
+            // If capacities cover it, WG-KV must still use strictly less.
+            let wg = engine.generate_text(&prompt, 4, PolicyKind::WriteGated).unwrap();
+            assert!(wg.kv_bytes <= out.kv_bytes);
+        }
+    }
+}
+
+#[test]
+fn variant_swap_changes_admission_rate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let sparse = std::path::Path::new(&dir).join("params_lam1.28.bin");
+    let dense = std::path::Path::new(&dir).join("params_lam0.02.bin");
+    if !sparse.exists() || !dense.exists() {
+        eprintln!("skipping: λ sweep variants not exported");
+        return;
+    }
+    let mut engine = Engine::load(&dir, EngineConfig::default()).unwrap();
+    let task = kv_task(5);
+    engine.load_variant("params_lam0.02.bin").unwrap();
+    let lo = engine.generate_text(&task.prompt, 8, PolicyKind::WriteGated).unwrap();
+    engine.load_variant("params_lam1.28.bin").unwrap();
+    let hi = engine.generate_text(&task.prompt, 8, PolicyKind::WriteGated).unwrap();
+    assert!(
+        hi.cache_fraction < lo.cache_fraction + 1e-6,
+        "λ=1.28 ({}) must be sparser than λ=0.02 ({})",
+        hi.cache_fraction,
+        lo.cache_fraction
+    );
+}
+
+#[test]
+fn prefill_gates_expose_per_head_structure() {
+    let mut engine = engine_or_skip!();
+    let task = kv_task(6);
+    let toks = engine.tokenizer.encode(&task.prompt);
+    let mut sess = engine.start_session(SessionOptions::policy(PolicyKind::WriteGated));
+    engine.prefill(&mut sess, &toks).unwrap();
+    let fr = sess.head_cache_fractions();
+    let dims = engine.dims().clone();
+    assert_eq!(fr.len(), dims.n_layers);
+    assert_eq!(fr[0].len(), dims.n_kv_heads);
+    let all: Vec<f64> = fr.iter().flatten().copied().collect();
+    assert!(all.iter().all(|&x| (0.0..=1.0 + 1e-9).contains(&x)));
+}
+
+#[test]
+fn chunked_prefill_handles_prompts_beyond_buckets() {
+    let mut engine = engine_or_skip!();
+    // 1.2x the largest bucket: head goes through the prefill executable,
+    // the tail is teacher-forced through the decode path. WG-KV keeps the
+    // admitted cache small enough to fit the exported capacities.
+    let n = engine.max_prompt_len() + engine.max_prompt_len() / 5;
+    let mut rng = Rng::new(9);
+    let mut prompt = String::new();
+    while prompt.len() < n {
+        prompt.push_str(workload::WORDS[rng.usize(0, workload::WORDS.len())]);
+        prompt.push(' ');
+    }
+    prompt.truncate(n);
+    // Random-sparsity admission (App. I.3): policy-independent plumbing
+    // test — the learned gates on pure filler can admit densely enough to
+    // exceed the largest capacity, which is the OOM path, not this one.
+    let out = engine
+        .generate_text(&prompt, 4, PolicyKind::RandomSparsity { sparsity: 0.75, seed: 2 })
+        .expect("chunked prefill must work under sparse admission");
+    assert!(!out.tokens.is_empty());
+    // The session saw the full prompt.
+    assert!(out.cache_fraction <= 1.0 + 1e-9);
+}

@@ -1,0 +1,163 @@
+//! Integration: the full serving stack — engine thread, continuous
+//! batcher, TCP server, and client — over real artifacts. Skipped until
+//! `make artifacts` has run.
+
+use std::sync::mpsc;
+
+use wgkv::engine::EngineConfig;
+use wgkv::scheduler::SchedulerConfig;
+use wgkv::server::{self, Client, Command, GenerateParams};
+use wgkv::util::Rng;
+use wgkv::workload;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("WGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping serving test: {dir}/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn boot(dir: &str, max_active: usize) -> (mpsc::Sender<Command>, String) {
+    let (cmds, _h) = server::spawn_engine_thread(
+        dir.to_string(),
+        EngineConfig::default(),
+        SchedulerConfig { max_active, ..SchedulerConfig::default() },
+    );
+    // Ephemeral port: bind on 0, read the actual addr back.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    {
+        let addr = addr.clone();
+        let cmds = cmds.clone();
+        std::thread::spawn(move || server::serve(&addr, cmds));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    (cmds, addr)
+}
+
+#[test]
+fn server_round_trip_generate_and_stats() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_cmds, addr) = boot(&dir, 4);
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let mut rng = Rng::new(0);
+    let task = workload::gen_kv(&mut rng, 6, 5);
+    let c = client
+        .generate(GenerateParams {
+            prompt: task.prompt.clone(),
+            max_new: task.max_new_tokens,
+            ..GenerateParams::default()
+        })
+        .expect("generate");
+    assert!(c.n_generated > 0);
+    assert!(c.cache_fraction > 0.0);
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.engine.requests_done, 1);
+    assert!(stats.engine.generated_tokens > 0);
+    assert_eq!(stats.queued, 0);
+}
+
+#[test]
+fn concurrent_clients_share_the_batcher() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_cmds, addr) = boot(&dir, 4);
+    let n_clients = 4;
+    let mut handles = Vec::new();
+    for i in 0..n_clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut rng = Rng::new(50 + i);
+            let task = workload::gen_kv(&mut rng, 4, 4);
+            let c = client
+                .generate(GenerateParams {
+                    prompt: task.prompt.clone(),
+                    max_new: 6,
+                    policy: if i % 2 == 0 { "wg-kv".into() } else { "full".into() },
+                    ..GenerateParams::default()
+                })
+                .unwrap();
+            assert!(c.error.is_none());
+            c.n_generated
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        total += h.join().unwrap();
+    }
+    assert!(total >= n_clients as usize, "all clients generated tokens");
+
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.engine.requests_done, n_clients);
+}
+
+#[test]
+fn bad_requests_get_json_errors_not_disconnects() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_cmds, addr) = boot(&dir, 2);
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for bad in [
+        "this is not json",
+        r#"{"op":"nope"}"#,
+        r#"{"op":"generate"}"#, // missing prompt
+        r#"{"op":"generate","prompt":"x","policy":"bogus"}"#,
+    ] {
+        stream.write_all(format!("{bad}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false") || line.contains("\"error\""), "got: {line}");
+    }
+    // The connection still works afterwards.
+    let mut rng = Rng::new(1);
+    let task = workload::gen_kv(&mut rng, 4, 4);
+    let ok = format!(
+        "{}\n",
+        wgkv::util::Json::obj()
+            .set("op", "generate")
+            .set("prompt", task.prompt.as_str())
+            .set("max_new", 4)
+            .dump()
+    );
+    stream.write_all(ok.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "got: {line}");
+}
+
+#[test]
+fn scheduler_respects_kv_budget_queueing() {
+    let Some(dir) = artifacts_dir() else { return };
+    // A tiny KV budget forces serial admission; everything must still
+    // complete (budget gates admission, not correctness).
+    let (cmds, _h) = server::spawn_engine_thread(
+        dir,
+        EngineConfig::default(),
+        SchedulerConfig { max_active: 4, kv_byte_budget: 1, max_queue: 64 },
+    );
+    let mut replies = Vec::new();
+    for i in 0..3u64 {
+        let (tx, rx) = mpsc::channel();
+        let mut rng = Rng::new(80 + i);
+        let task = workload::gen_kv(&mut rng, 4, 4);
+        cmds.send(Command::Generate(
+            GenerateParams { prompt: task.prompt, max_new: 4, ..GenerateParams::default() },
+            tx,
+        ))
+        .unwrap();
+        replies.push(rx);
+    }
+    for rx in replies {
+        let c = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert!(c.error.is_none(), "error: {:?}", c.error);
+        assert!(c.n_generated > 0);
+    }
+}

@@ -1,0 +1,321 @@
+//! Property-based tests for the dual paged KV cache — model-based checking
+//! against a trivially-correct reference implementation.
+//!
+//! The reference model (`RefCache`) tracks, per (layer, head), the exact
+//! multiset of (position, gate) pairs that should be resident in Local and
+//! Global after any sequence of prefill / decode / evict operations. The
+//! real `SequenceKvCache` must agree on every observable: region lengths,
+//! token positions, promotion/discard counters, exec-mask occupancy, and
+//! paged-pool accounting.
+
+use wgkv::kvcache::{dual::CacheDims, SequenceKvCache};
+use wgkv::prop_assert;
+use wgkv::runtime::tensor::Tensor;
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+const TAU: f32 = 0.5;
+
+/// Reference model: per head, ring of (pos, gate) + ordered global list.
+#[derive(Clone)]
+struct RefHead {
+    ring: Vec<Option<(i64, f32)>>,
+    global: Vec<(i64, f32)>,
+}
+
+struct RefCache {
+    dims: CacheDims,
+    heads: Vec<RefHead>,
+    promotions: u64,
+    discards: u64,
+}
+
+impl RefCache {
+    fn new(dims: CacheDims) -> Self {
+        Self {
+            dims,
+            heads: (0..dims.n_heads_total())
+                .map(|_| RefHead { ring: vec![None; dims.w_local], global: Vec::new() })
+                .collect(),
+            promotions: 0,
+            discards: 0,
+        }
+    }
+
+    fn insert(&mut self, pos: i64, gate: f32) {
+        let slot = (pos as usize) % self.dims.w_local;
+        for h in &mut self.heads {
+            if let Some((vp, vg)) = h.ring[slot] {
+                if vg >= TAU {
+                    h.global.push((vp, vg));
+                    self.promotions += 1;
+                } else {
+                    self.discards += 1;
+                }
+            }
+            h.ring[slot] = Some((pos, gate));
+        }
+    }
+
+    fn local_len(&self) -> usize {
+        self.heads[0].ring.iter().flatten().count()
+    }
+}
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 8),
+        page_size: rng.usize(2, 6),
+    }
+}
+
+fn decoded(d: CacheDims, pos: i64, gate: f32) -> (Tensor, Tensor, Tensor) {
+    // Key encodes the position so we can verify data integrity later.
+    let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32);
+    let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 + 0.25);
+    let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+    (k, v, g)
+}
+
+#[test]
+fn decode_stream_matches_reference_model() {
+    forall(0x11, |rng| {
+        let d = dims(rng);
+        let n_ops = rng.usize(1, 60);
+        let cap_needed = n_ops + 1 + d.w_local;
+        let mut cache = SequenceKvCache::new(d, cap_needed.max(d.w_local + 2)).unwrap();
+        let mut model = RefCache::new(d);
+        for pos in 0..n_ops as i64 {
+            let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
+            let (k, v, g) = decoded(d, pos, gate);
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, gt| gt >= TAU).unwrap();
+            model.insert(pos, gate);
+        }
+        // Lengths per head.
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let hi = l * d.n_kv_heads + h;
+                prop_assert!(
+                    cache.global_len(l, h) == model.heads[hi].global.len(),
+                    "global len {} != model {}",
+                    cache.global_len(l, h),
+                    model.heads[hi].global.len()
+                );
+                prop_assert!(
+                    cache.local_len(l, h) == model.local_len(),
+                    "local len mismatch"
+                );
+                // Promotion order and data integrity (key encodes pos).
+                for (i, (pos, _)) in model.heads[hi].global.iter().enumerate() {
+                    prop_assert!(
+                        cache.global_pos(l, h, i).unwrap() == *pos,
+                        "global[{i}] pos mismatch"
+                    );
+                    let key = cache.global_key(l, h, i).unwrap();
+                    prop_assert!(
+                        key[0] == *pos as f32,
+                        "global[{i}] key payload corrupted: {} != {}",
+                        key[0],
+                        *pos as f32
+                    );
+                }
+            }
+        }
+        // Counters (per-head uniform stream -> multiply by head count).
+        let heads = d.n_heads_total() as u64;
+        prop_assert!(
+            cache.stats.promotions == model.promotions / heads * heads
+                && cache.stats.promotions == model.promotions,
+            "promotions {} != {}",
+            cache.stats.promotions,
+            model.promotions
+        );
+        prop_assert!(cache.stats.discards == model.discards, "discards mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn exec_mask_count_equals_resident_tokens() {
+    forall(0x22, |rng| {
+        let d = dims(rng);
+        let n_ops = rng.usize(1, 50);
+        let mut cache = SequenceKvCache::new(d, n_ops + 1 + d.w_local).unwrap();
+        for pos in 0..n_ops as i64 {
+            let gate = rng.f32();
+            let (k, v, g) = decoded(d, pos, gate);
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, gt| gt >= TAU).unwrap();
+        }
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let mask = cache.slot_mask().slice_at(&[l, h]);
+                let set = mask.iter().filter(|&&x| x > 0.5).count();
+                prop_assert!(
+                    set == cache.head_len(l, h),
+                    "mask count {set} != resident {}",
+                    cache.head_len(l, h)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_accounting_no_leaks_through_eviction() {
+    forall(0x33, |rng| {
+        let d = dims(rng);
+        let n_ops = rng.usize(d.w_local + 1, 60);
+        let mut cache = SequenceKvCache::new(d, n_ops + 1 + d.w_local).unwrap();
+        for pos in 0..n_ops as i64 {
+            let (k, v, g) = decoded(d, pos, 0.9);
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+        }
+        // Evict a random subset from every head.
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let n = cache.global_len(l, h);
+                if n == 0 {
+                    continue;
+                }
+                let keep: Vec<bool> = (0..n).map(|_| rng.bool(0.6)).collect();
+                let survivors: Vec<i64> = (0..n)
+                    .filter(|&i| keep[i])
+                    .map(|i| cache.global_pos(l, h, i).unwrap())
+                    .collect();
+                let evicted = cache.evict_global(l, h, &keep).unwrap();
+                prop_assert!(evicted == n - survivors.len(), "evicted count");
+                prop_assert!(cache.global_len(l, h) == survivors.len(), "post len");
+                // Order preserved.
+                for (i, want) in survivors.iter().enumerate() {
+                    prop_assert!(
+                        cache.global_pos(l, h, i).unwrap() == *want,
+                        "order broken at {i}"
+                    );
+                }
+            }
+        }
+        // Pool: allocated == live pages; free list holds the rest.
+        let st = cache.pool_stats();
+        prop_assert!(
+            st.allocated_pages + st.free_pages == st.total_pages,
+            "pool leak: {st:?}"
+        );
+        // Internal fragmentation bounded by one page per head region.
+        prop_assert!(
+            cache.slack_slots() < d.page_size * d.n_heads_total(),
+            "slack {} too large",
+            cache.slack_slots()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_never_touches_the_local_ring() {
+    forall(0x44, |rng| {
+        let d = dims(rng);
+        let n_ops = rng.usize(d.w_local + 2, 40);
+        let mut cache = SequenceKvCache::new(d, n_ops + 1 + d.w_local).unwrap();
+        for pos in 0..n_ops as i64 {
+            let (k, v, g) = decoded(d, pos, 0.9);
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+        }
+        let ring_before: Vec<f32> = {
+            let m = cache.k_exec().slice_at(&[0, 0]);
+            let start = (cache.capacity() - d.w_local) * d.d_head;
+            m[start..].to_vec()
+        };
+        let n = cache.global_len(0, 0);
+        let keep: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+        cache.evict_global(0, 0, &keep).unwrap();
+        let ring_after: Vec<f32> = {
+            let m = cache.k_exec().slice_at(&[0, 0]);
+            let start = (cache.capacity() - d.w_local) * d.d_head;
+            m[start..].to_vec()
+        };
+        prop_assert!(ring_before == ring_after, "ring mutated by eviction");
+        Ok(())
+    });
+}
+
+#[test]
+fn capacity_relayout_preserves_residents() {
+    forall(0x55, |rng| {
+        let d = dims(rng);
+        let n_ops = rng.usize(1, 30);
+        let cap0 = n_ops + 1 + d.w_local;
+        let mut cache = SequenceKvCache::new(d, cap0).unwrap();
+        for pos in 0..n_ops as i64 {
+            let gate = rng.f32();
+            let (k, v, g) = decoded(d, pos, gate);
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, gt| gt >= TAU).unwrap();
+        }
+        let snapshot: Vec<(usize, Vec<i64>)> = (0..d.n_layers)
+            .flat_map(|l| (0..d.n_kv_heads).map(move |h| (l, h)))
+            .map(|(l, h)| {
+                (
+                    cache.head_len(l, h),
+                    (0..cache.global_len(l, h))
+                        .map(|i| cache.global_pos(l, h, i).unwrap())
+                        .collect(),
+                )
+            })
+            .collect();
+        let new_cap = cap0 + rng.usize(1, 64);
+        cache.ensure_capacity(new_cap).unwrap();
+        let after: Vec<(usize, Vec<i64>)> = (0..d.n_layers)
+            .flat_map(|l| (0..d.n_kv_heads).map(move |h| (l, h)))
+            .map(|(l, h)| {
+                (
+                    cache.head_len(l, h),
+                    (0..cache.global_len(l, h))
+                        .map(|i| cache.global_pos(l, h, i).unwrap())
+                        .collect(),
+                )
+            })
+            .collect();
+        prop_assert!(snapshot == after, "relayout changed resident sets");
+        Ok(())
+    });
+}
+
+#[test]
+fn prefill_population_respects_window_and_gate() {
+    forall(0x66, |rng| {
+        let d = dims(rng);
+        let n = rng.usize(1, 64);
+        let cap = n + 1 + d.w_local;
+        let mut cache = SequenceKvCache::new(d, cap).unwrap();
+        let total = d.n_layers * d.n_kv_heads * n;
+        let gates: Vec<f32> = (0..total).map(|_| rng.f32()).collect();
+        let k = Tensor::full(&[d.n_layers, d.n_kv_heads, n, d.d_head], 1.0);
+        let v = k.clone();
+        let g = Tensor::from_vec(&[d.n_layers, d.n_kv_heads, n], gates.clone()).unwrap();
+        cache
+            .populate_from_prefill(&k, &v, &g, n, |_, _, _, gate| gate >= TAU)
+            .unwrap();
+        let window_start = n.saturating_sub(d.w_local);
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let expect_global = (0..window_start)
+                    .filter(|&t| gates[(l * d.n_kv_heads + h) * n + t] >= TAU)
+                    .count();
+                prop_assert!(
+                    cache.global_len(l, h) == expect_global,
+                    "global {} != {}",
+                    cache.global_len(l, h),
+                    expect_global
+                );
+                prop_assert!(
+                    cache.local_len(l, h) == n - window_start,
+                    "local occupancy"
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,221 @@
+//! Property tests for the three primitives' host-side logic: admission
+//! policy consistency, Quest upper-bound soundness, and SnapKV scoring.
+
+use wgkv::admission::PolicyKind;
+use wgkv::eviction::{bottom_k_mask, max_pool_1d};
+use wgkv::prop_assert;
+use wgkv::runtime::manifest::ModelDims;
+use wgkv::runtime::tensor::Tensor;
+use wgkv::selection::{page_upper_bound, select_pages_ref};
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+fn dims(rng: &mut Rng) -> ModelDims {
+    let n_kv = rng.usize(1, 5);
+    let group = rng.usize(1, 4);
+    ModelDims {
+        name: "prop".into(),
+        vocab_size: 259,
+        d_model: 64,
+        n_layers: rng.usize(1, 4),
+        n_q_heads: n_kv * group,
+        n_kv_heads: n_kv,
+        d_head: 8,
+        d_ff: 64,
+        rope_theta: 1e4,
+        gate_hidden: 4,
+        w_local: rng.usize(1, 8),
+        tau: 0.1,
+        page_size: rng.usize(2, 8),
+        bos: 256,
+        eos: 257,
+        pad: 258,
+        gqa_group: group,
+    }
+}
+
+#[test]
+fn override_gates_binarize_consistently_with_promotion() {
+    // For every static policy: a token admitted by the prefill override at
+    // threshold tau must match the policy's decode-promotion rule given
+    // that same gate value (the two code paths must agree).
+    forall(0xA1, |rng| {
+        let d = dims(rng);
+        let sink = rng.usize(0, 3);
+        let policies = vec![
+            PolicyKind::FullCache,
+            PolicyKind::LocalOnly { sink, recent: 0 },
+            PolicyKind::duo_with_ratio(&d, rng.f32(), sink),
+        ];
+        let n = rng.usize(4, 32);
+        for kind in policies {
+            let p = kind.build(&d);
+            let t = p.prefill_override(n, n).unwrap();
+            for l in 0..d.n_layers {
+                for h in 0..d.n_kv_heads {
+                    let s = t.slice_at(&[l, h]);
+                    // Values must be exactly binary.
+                    prop_assert!(
+                        s.iter().all(|&x| x == 0.0 || x == 1.0),
+                        "{kind:?} override not binary"
+                    );
+                    // Decoded tokens are never sinks: promotion must match
+                    // the override pattern at non-sink positions.
+                    let non_sink_admit = s[sink.min(n - 1)..]
+                        .iter()
+                        .any(|&x| x == 1.0);
+                    let promote = p.promote_decode(l, h, 1.0);
+                    match &kind {
+                        PolicyKind::FullCache => {
+                            prop_assert!(promote && non_sink_admit)
+                        }
+                        PolicyKind::LocalOnly { .. } => prop_assert!(!promote),
+                        PolicyKind::DuoAttention { retrieval, .. } => prop_assert!(
+                            promote == retrieval[l][h],
+                            "duo promote/retrieval mismatch"
+                        ),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quest_upper_bound_dominates_all_member_scores() {
+    forall(0xA2, |rng| {
+        let dh = rng.usize(2, 16);
+        let n_keys = rng.usize(1, 24);
+        let keys: Vec<Vec<f32>> = (0..n_keys)
+            .map(|_| (0..dh).map(|_| rng.f32() * 4.0 - 2.0).collect())
+            .collect();
+        let mut kmin = vec![f32::INFINITY; dh];
+        let mut kmax = vec![f32::NEG_INFINITY; dh];
+        for k in &keys {
+            for d in 0..dh {
+                kmin[d] = kmin[d].min(k[d]);
+                kmax[d] = kmax[d].max(k[d]);
+            }
+        }
+        let q: Vec<f32> = (0..dh).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let ub = page_upper_bound(&q, &kmin, &kmax);
+        for k in &keys {
+            let s: f32 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+            prop_assert!(ub >= s - 1e-4, "ub {ub} < member score {s}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quest_selection_includes_the_page_of_the_best_key() {
+    // Soundness: with budget >= 1, the page whose UB is maximal has
+    // UB >= the global best key score; selecting top-k by UB therefore
+    // always retains a page whose bound covers the best key.
+    forall(0xA3, |rng| {
+        let dh = 4;
+        let n_pages = rng.usize(1, 8);
+        let page_size = rng.usize(1, 6);
+        let mut pmin = Tensor::full(&[n_pages, dh], f32::INFINITY);
+        let mut pmax = Tensor::full(&[n_pages, dh], f32::NEG_INFINITY);
+        let mut keys: Vec<(usize, Vec<f32>)> = Vec::new();
+        for p in 0..n_pages {
+            for _ in 0..page_size {
+                let k: Vec<f32> = (0..dh).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                for d in 0..dh {
+                    let mn = pmin.slice_at_mut(&[p]);
+                    mn[d] = mn[d].min(k[d]);
+                    let mx = pmax.slice_at_mut(&[p]);
+                    mx[d] = mx[d].max(k[d]);
+                }
+                keys.push((p, k));
+            }
+        }
+        let q: Vec<f32> = (0..dh).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let budget = rng.usize(1, n_pages + 1);
+        let selected = select_pages_ref(&q, &pmin, &pmax, budget);
+        prop_assert!(selected.len() <= budget, "budget violated");
+        // Best true key score.
+        let best = keys
+            .iter()
+            .map(|(_, k)| q.iter().zip(k).map(|(a, b)| a * b).sum::<f32>())
+            .fold(f32::NEG_INFINITY, f32::max);
+        let best_selected_ub = selected
+            .iter()
+            .map(|&p| page_upper_bound(&q, pmin.slice_at(&[p]), pmax.slice_at(&[p])))
+            .fold(f32::NEG_INFINITY, f32::max);
+        prop_assert!(
+            best_selected_ub >= best - 1e-4,
+            "selected bound {best_selected_ub} < best score {best}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn max_pool_properties() {
+    forall(0xA4, |rng| {
+        let n = rng.usize(1, 40);
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let w = rng.usize(1, 9);
+        let p = max_pool_1d(&xs, w);
+        prop_assert!(p.len() == n);
+        for i in 0..n {
+            // Dominates the input pointwise...
+            prop_assert!(p[i] >= xs[i]);
+            // ...and never exceeds the global max.
+            let gmax = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            prop_assert!(p[i] <= gmax);
+        }
+        // Idempotent-ish: pooling twice with w=1 is identity.
+        prop_assert!(max_pool_1d(&xs, 1) == xs);
+        Ok(())
+    });
+}
+
+#[test]
+fn bottom_k_mask_drops_exactly_the_lowest() {
+    forall(0xA5, |rng| {
+        let n = rng.usize(1, 30);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let k = rng.usize(0, n + 1);
+        let keep = bottom_k_mask(&scores, k);
+        let dropped: Vec<f32> =
+            (0..n).filter(|&i| !keep[i]).map(|i| scores[i]).collect();
+        let kept: Vec<f32> = (0..n).filter(|&i| keep[i]).map(|i| scores[i]).collect();
+        prop_assert!(dropped.len() == k.min(n), "dropped count");
+        // Every dropped score <= every kept score.
+        if let (Some(dmax), Some(kmin)) = (
+            dropped.iter().cloned().fold(None, |m: Option<f32>, x| {
+                Some(m.map_or(x, |m| m.max(x)))
+            }),
+            kept.iter().cloned().fold(None, |m: Option<f32>, x| {
+                Some(m.map_or(x, |m| m.min(x)))
+            }),
+        ) {
+            prop_assert!(dmax <= kmin, "dropped {dmax} > kept {kmin}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_sparsity_override_matches_target_rate() {
+    forall(0xA6, |rng| {
+        let d = dims(rng);
+        let sparsity = rng.f32();
+        let p = PolicyKind::RandomSparsity { sparsity, seed: rng.next_u64() }.build(&d);
+        let n = 2048;
+        let t = p.prefill_override(n, n).unwrap();
+        let admit =
+            t.data.iter().filter(|&&x| x > 0.5).count() as f32 / t.data.len() as f32;
+        prop_assert!(
+            (admit - (1.0 - sparsity)).abs() < 0.05,
+            "admit rate {admit} vs target {}",
+            1.0 - sparsity
+        );
+        Ok(())
+    });
+}
