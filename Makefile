@@ -1,0 +1,26 @@
+# WG-KV build/test/bench entry points.
+#
+# The Rust crate lives under rust/; AOT artifacts are produced by the
+# Python L2 pipeline and consumed by the PJRT runtime.
+
+RUST_DIR := rust
+ARTIFACTS ?= $(RUST_DIR)/artifacts
+
+.PHONY: build test bench artifacts
+
+build:
+	cd $(RUST_DIR) && cargo build --release
+
+# Tier-1 verify.
+test:
+	cd $(RUST_DIR) && cargo build --release && cargo test -q
+
+# Coordinator perf snapshot: prints the hot-path rows and writes
+# rust/BENCH_coordinator.json — machine-readable results plus the
+# persistent-view full-vs-delta upload-bytes counters, tracked across PRs.
+bench:
+	cd $(RUST_DIR) && cargo bench --bench coordinator_hotpath
+
+# AOT-lower the JAX model to HLO-text artifacts for the PJRT runtime.
+artifacts:
+	python3 python/compile/aot.py --out $(ARTIFACTS)

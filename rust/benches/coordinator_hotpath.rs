@@ -1,16 +1,24 @@
 //! Bench: L3 coordinator hot-path micro-benchmarks (no PJRT required).
 //!
 //! Covers every host-side operation on the decode critical path — ring
-//! insert + lazy promotion, exec-view maintenance, Quest page metadata,
-//! eviction scoring/compaction, capacity re-layout — plus the substrate
-//! (JSON codec, RNG). These are the operations the §Perf pass optimizes:
-//! the PJRT execute dominates a decode step, and the coordinator must stay
-//! well under it.
+//! insert + lazy promotion, exec-view maintenance, dirty-journal drain and
+//! persistent-view delta sync, Quest page metadata (incremental vs the
+//! from-scratch rebuild baseline), eviction scoring/compaction, capacity
+//! re-layout — plus the substrate (JSON codec, RNG). These are the
+//! operations the §Perf pass optimizes: the PJRT execute dominates a
+//! decode step, and the coordinator must stay well under it.
+//!
+//! Besides the per-case rows (stdout + `target/bench_results.jsonl`), the
+//! run emits `BENCH_coordinator.json`: a machine-readable report whose
+//! counters include the full-vs-delta upload-bytes comparison for the
+//! persistent `DeviceExecView` — the tentpole acceptance number (≥50×
+//! traffic reduction at cap 1024 with one token inserted per step).
 
 use wgkv::eviction::{SnapKvConfig, SnapKvEvictor};
 use wgkv::kvcache::{dual::CacheDims, SequenceKvCache};
+use wgkv::runtime::device_cache::DeviceExecView;
 use wgkv::runtime::tensor::Tensor;
-use wgkv::util::{Bench, Json, Rng};
+use wgkv::util::{Bench, BenchReport, Json, Rng};
 
 fn dims() -> CacheDims {
     // wg-tiny's real dims.
@@ -30,6 +38,7 @@ fn decoded(rng: &mut Rng, d: CacheDims) -> (Tensor, Tensor, Tensor) {
 fn main() {
     let b = Bench::default();
     let d = dims();
+    let mut report = BenchReport::new("coordinator");
     println!("# coordinator hot path (dims: L={} H={} dh={} w={})",
              d.n_layers, d.n_kv_heads, d.d_head, d.w_local);
 
@@ -39,7 +48,7 @@ fn main() {
         let mut cache = SequenceKvCache::new(d, 1024).unwrap();
         let (k, v, g) = decoded(&mut rng, d);
         let mut pos = 0i64;
-        b.run("insert_decoded/promote-half", || {
+        report.record(b.run("insert_decoded/promote-half", || {
             cache
                 .insert_decoded(&k, &v, &g, pos, |_, _, gate| gate >= 0.5 && pos % 2 == 0)
                 .unwrap();
@@ -47,7 +56,38 @@ fn main() {
             if pos % 1500 == 0 {
                 cache = SequenceKvCache::new(d, 1024).unwrap(); // reset before overflow
             }
-        });
+        }));
+    }
+
+    // --- dirty-journal drain: the per-step cost of the delta protocol.
+    {
+        let mut rng = Rng::new(6);
+        let mut cache = SequenceKvCache::new(d, 1024).unwrap();
+        let (k, v, g) = decoded(&mut rng, d);
+        let _ = cache.drain_dirty();
+        let mut pos = 0i64;
+        report.record(b.run("drain_dirty/1-insert-step", || {
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, _| false).unwrap();
+            pos += 1;
+            let log = cache.drain_dirty();
+            std::hint::black_box(log.dirty_slots());
+        }));
+    }
+
+    // --- persistent-view delta sync (journal drain + span replay).
+    {
+        let mut rng = Rng::new(7);
+        let mut cache = SequenceKvCache::new(d, 1024).unwrap();
+        let (k, v, g) = decoded(&mut rng, d);
+        let mut view = DeviceExecView::new(&cache);
+        view.sync(&mut cache);
+        let mut pos = 0i64;
+        report.record(b.run("device_view/sync-delta-1-token", || {
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, _| false).unwrap();
+            pos += 1;
+            let r = view.sync(&mut cache);
+            std::hint::black_box(r.bytes);
+        }));
     }
 
     // --- populate_from_prefill at bucket 512.
@@ -63,16 +103,16 @@ fn main() {
         for x in g.data.iter_mut() {
             *x = rng.f32();
         }
-        b.run("populate_from_prefill/n=512/keep~25%", || {
+        report.record(b.run("populate_from_prefill/n=512/keep~25%", || {
             let mut cache = SequenceKvCache::new(d, 512).unwrap();
             cache
                 .populate_from_prefill(&k, &v, &g, n, |_, _, _, gate| gate >= 0.75)
                 .unwrap();
             std::hint::black_box(cache.slot_mask());
-        });
+        }));
     }
 
-    // --- Quest page metadata assembly.
+    // --- Quest page metadata: incremental accessor vs from-scratch rebuild.
     {
         let mut rng = Rng::new(2);
         let mut cache = SequenceKvCache::new(d, 1024).unwrap();
@@ -80,17 +120,21 @@ fn main() {
         for pos in 0..800 {
             cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
         }
-        b.run("page_meta_tensors/768-global", || {
+        report.record(b.run("page_meta/incremental/768-global", || {
             let (pmin, pmax) = cache.page_meta_tensors();
             std::hint::black_box((pmin.data.len(), pmax.data.len()));
-        });
+        }));
+        report.record(b.run("page_meta/rebuild-baseline/768-global", || {
+            let (pmin, pmax) = cache.rebuild_page_meta_tensors();
+            std::hint::black_box((pmin.data.len(), pmax.data.len()));
+        }));
     }
 
     // --- SnapKV scoring + eviction.
     {
         let mut rng = Rng::new(3);
         let (k, v, g) = decoded(&mut rng, d);
-        b.run("snapkv/score+evict/256-global", || {
+        report.record(b.run("snapkv/score+evict/256-global", || {
             let mut cache = SequenceKvCache::new(d, 512).unwrap();
             for pos in 0..288 {
                 cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
@@ -108,21 +152,55 @@ fn main() {
             }
             let fired = ev.maybe_evict(&mut cache, 2).unwrap();
             std::hint::black_box(fired);
-        });
+        }));
     }
 
     // --- capacity re-layout (the growth path).
     {
         let mut rng = Rng::new(4);
         let (k, v, g) = decoded(&mut rng, d);
-        b.run("ensure_capacity/256->1024", || {
+        report.record(b.run("ensure_capacity/256->1024", || {
             let mut cache = SequenceKvCache::new(d, 256).unwrap();
             for pos in 0..200 {
                 cache.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
             }
             cache.ensure_capacity(1024).unwrap();
             std::hint::black_box(cache.capacity());
-        });
+        }));
+    }
+
+    // --- full-vs-delta upload bytes: the tentpole acceptance number.
+    // 1024-cap cache, one token inserted per step; the persistent view
+    // ships only the journaled slots, the baseline re-marshals everything.
+    {
+        let mut rng = Rng::new(5);
+        let mut cache = SequenceKvCache::new(d, 1024).unwrap();
+        let (k, v, g) = decoded(&mut rng, d);
+        let mut view = DeviceExecView::new(&cache);
+        view.sync(&mut cache); // initial wholesale upload
+        let first_full = view.stats.bytes_uploaded;
+        let steps = 512u64;
+        for pos in 0..steps as i64 {
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, _| false).unwrap();
+            view.sync(&mut cache);
+        }
+        let delta_per_step = (view.stats.bytes_uploaded - first_full) as f64 / steps as f64;
+        let full_per_step = cache.full_view_bytes() as f64;
+        let reduction = full_per_step / delta_per_step;
+        println!(
+            "upload bytes/step @cap=1024, 1 token/step: full {:.0} B | delta {:.0} B | {:.0}x less",
+            full_per_step, delta_per_step, reduction
+        );
+        report.counter("upload_cap", 1024usize);
+        report.counter("upload_steps", steps);
+        report.counter("upload_full_bytes_per_step", full_per_step);
+        report.counter("upload_delta_bytes_per_step", delta_per_step);
+        report.counter("upload_reduction_x", reduction);
+        report.counter("upload_reduction_ok", reduction >= 50.0);
+        assert!(
+            reduction >= 50.0,
+            "persistent view must cut upload traffic >=50x (got {reduction:.1}x)"
+        );
     }
 
     // --- substrate: JSON codec + RNG (server protocol budget).
@@ -133,16 +211,21 @@ fn main() {
             .set("max_new", 32)
             .set("policy", "wg-kv")
             .dump();
-        b.run("json/parse-request", || {
+        report.record(b.run("json/parse-request", || {
             std::hint::black_box(Json::parse(&payload).unwrap());
-        });
+        }));
         let mut rng = Rng::new(5);
-        b.run("rng/u64x64", || {
+        report.record(b.run("rng/u64x64", || {
             let mut acc = 0u64;
             for _ in 0..64 {
                 acc ^= rng.next_u64();
             }
             std::hint::black_box(acc);
-        });
+        }));
+    }
+
+    match report.write_default() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench report: {e}"),
     }
 }

@@ -13,9 +13,35 @@
 //! lives in fig01_bottleneck / `wgkv costmodel`.
 
 use wgkv::admission::PolicyKind;
+use wgkv::costmodel::{AdmissionPoint, CostModel, H200, LLAMA31_8B};
 use wgkv::engine::{Engine, EngineConfig, SessionOptions};
 use wgkv::model::Sampler;
 use wgkv::util::{Bench, Json, Rng};
+
+/// Analytic host↔device upload term (always runs, no artifacts needed):
+/// the per-decode-step bytes a coordinator ships with and without the
+/// persistent execution view, priced on the H200's PCIe link.
+fn analytic_upload() {
+    let m = CostModel::new(LLAMA31_8B, H200);
+    let p = AdmissionPoint::sparsity(0.75, 256);
+    println!("# Fig 8 analytic — host->device upload per decode step ({} @ {})",
+             LLAMA31_8B.name, H200.name);
+    println!("{:>8} {:>14} {:>14} {:>10} {:>12} {:>12}",
+             "N", "full_MB", "delta_KB", "ratio", "step_full", "step_persist");
+    for n in [100_000usize, 200_000, 400_000] {
+        let full = m.decode_upload_bytes_full(n, p);
+        let delta = m.decode_upload_bytes_delta();
+        println!(
+            "{:>8} {:>12.1}MB {:>12.1}KB {:>9.0}x {:>10.2}ms {:>10.2}ms",
+            n,
+            full / 1e6,
+            delta / 1e3,
+            full / delta,
+            m.decode_step_with_upload(n, p, false).total() * 1e3,
+            m.decode_step_with_upload(n, p, true).total() * 1e3,
+        );
+    }
+}
 
 fn prompt_of_len(rng: &mut Rng, len: usize) -> String {
     let words = wgkv::workload::WORDS;
@@ -30,11 +56,12 @@ fn prompt_of_len(rng: &mut Rng, len: usize) -> String {
 }
 
 fn main() {
+    analytic_upload();
     let dir = std::env::var("WGKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let mut engine = match Engine::load(&dir, EngineConfig::default()) {
         Ok(e) => e,
         Err(e) => {
-            println!("fig08: skipping — artifacts unavailable ({e:#})");
+            println!("fig08: skipping measured part — artifacts unavailable ({e:#})");
             return;
         }
     };
@@ -62,6 +89,7 @@ fn main() {
             let mut pf_us = Vec::new();
             let mut dec_us = Vec::new();
             let mut kv_bytes = 0usize;
+            let mut upload = (0u64, 0u64);
             let mut oom = None;
             let reps = 3;
             for _ in 0..reps {
@@ -71,6 +99,7 @@ fn main() {
                         pf_us.push(out.prefill_us);
                         dec_us.push(out.decode_us_mean);
                         kv_bytes = out.kv_bytes;
+                        upload = (out.upload_bytes, out.upload_bytes_full_equiv);
                     }
                     Err(e) => {
                         oom = Some(format!("{e:#}"));
@@ -95,7 +124,9 @@ fn main() {
                     .set("policy", label)
                     .set("prefill_us", pf)
                     .set("decode_us_per_tok", dc)
-                    .set("kv_bytes", kv_bytes),
+                    .set("kv_bytes", kv_bytes)
+                    .set("upload_bytes", upload.0)
+                    .set("upload_full_equiv_bytes", upload.1),
             );
         }
         if results.len() == 2 && results[0].1.is_finite() && results[1].1.is_finite() {

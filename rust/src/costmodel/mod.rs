@@ -38,6 +38,9 @@ pub struct GpuSpec {
     pub eff_attn: f64,
     /// Achieved fraction of peak HBM bandwidth in decode.
     pub eff_bw: f64,
+    /// Achieved host↔device transfer bandwidth, bytes/s (PCIe/NVLink-C2C;
+    /// prices the execution-view uploads a host-side coordinator ships).
+    pub h2d_bw: f64,
     /// Fixed per-decode-step overhead (kernel launches, host loop), s.
     pub decode_overhead_s: f64,
 }
@@ -51,6 +54,8 @@ pub const H200: GpuSpec = GpuSpec {
     eff_gemm: 0.80,
     eff_attn: 0.35,
     eff_bw: 0.75,
+    // PCIe Gen5 x16: 64 GB/s theoretical, ~55 GB/s achieved.
+    h2d_bw: 55e9,
     decode_overhead_s: 1.0e-3,
 };
 
@@ -226,6 +231,51 @@ impl CostModel {
         w + p.keep * (n - w)
     }
 
+    // -- host↔device transfer (the persistent-exec-view term) ----------------
+
+    /// Host→device bytes per decode step when the coordinator re-marshals
+    /// the whole execution view every step (the pre-persistent-view data
+    /// path): every resident KV slot plus its validity-mask element.
+    pub fn decode_upload_bytes_full(&self, n_ctx: usize, p: AdmissionPoint) -> f64 {
+        let slots = self.cached_tokens(n_ctx, p);
+        let mask = (self.llm.n_layers * self.llm.n_kv_heads * self.llm.bytes_per_el) as f64;
+        slots * (self.llm.kv_bytes_per_token() + mask)
+    }
+
+    /// Host→device bytes per decode step with a persistent device-resident
+    /// view synced from the dirty-slot journal: the ring overwrite plus at
+    /// most one lazy promotion per head — O(1) in the context length.
+    pub fn decode_upload_bytes_delta(&self) -> f64 {
+        let mask = (self.llm.n_layers * self.llm.n_kv_heads * self.llm.bytes_per_el) as f64;
+        2.0 * (self.llm.kv_bytes_per_token() + mask)
+    }
+
+    /// Seconds to ship `bytes` over the host↔device link.
+    pub fn upload_seconds(&self, bytes: f64) -> f64 {
+        bytes / self.gpu.h2d_bw
+    }
+
+    /// Per-step decode latency including the host↔device upload term:
+    /// `persistent_view = false` pays a full-view upload every step (what
+    /// the coordinator did before the persistent `DeviceExecView`),
+    /// `true` pays only the dirty-slot delta. The upload lands in `other`
+    /// (it is coordinator traffic, not attention work).
+    pub fn decode_step_with_upload(
+        &self,
+        n_ctx: usize,
+        p: AdmissionPoint,
+        persistent_view: bool,
+    ) -> Breakdown {
+        let mut b = self.decode_step(n_ctx, p);
+        let bytes = if persistent_view {
+            self.decode_upload_bytes_delta()
+        } else {
+            self.decode_upload_bytes_full(n_ctx, p)
+        };
+        b.other += self.upload_seconds(bytes);
+        b
+    }
+
     /// Device memory breakdown at context `n_ctx` (attention = KV cache,
     /// other = weights + linear activation workspace).
     pub fn memory(&self, n_ctx: usize, p: AdmissionPoint) -> Breakdown {
@@ -369,6 +419,36 @@ mod tests {
         // keep=1 via sparsity(0.0) matches full modulo the band formula.
         let near = m.attended_pairs(n, AdmissionPoint::sparsity(0.0, 128));
         assert!((near - (n * n) as f64 / 2.0).abs() / ((n * n) as f64 / 2.0) < 1e-9);
+    }
+
+    #[test]
+    fn upload_delta_is_context_independent() {
+        let m = llama();
+        let p = AdmissionPoint::sparsity(0.75, 256);
+        assert_eq!(m.decode_upload_bytes_delta(), m.decode_upload_bytes_delta());
+        // Full-view upload grows with context; the delta does not.
+        let full_200k = m.decode_upload_bytes_full(200_000, p);
+        let full_400k = m.decode_upload_bytes_full(400_000, p);
+        assert!(full_400k > full_200k * 1.5);
+        // The persistent view wins by far more than the fig 8 gate (50x).
+        assert!(full_200k / m.decode_upload_bytes_delta() > 50.0);
+    }
+
+    #[test]
+    fn upload_term_dominates_nonpersistent_decode() {
+        // At 200K a wholesale view re-upload each step costs more than the
+        // decode itself reads from HBM — exactly the pathology the
+        // persistent view removes.
+        let m = llama();
+        let p = AdmissionPoint::full();
+        let n = 200_000;
+        let with_full = m.decode_step_with_upload(n, p, false).total();
+        let with_delta = m.decode_step_with_upload(n, p, true).total();
+        let base = m.decode_step(n, p).total();
+        assert!(with_full > 2.0 * base, "full-upload step {with_full} vs base {base}");
+        // Persistent-view upload is noise on top of the base step.
+        assert!(with_delta < base * 1.01);
+        assert!(with_delta < with_full);
     }
 
     #[test]

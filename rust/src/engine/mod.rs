@@ -8,15 +8,25 @@
 //!    (baselines, App. E / I.3). Tokens in the trailing `w_local` window go
 //!    to the Local Cache; earlier tokens enter the Global Cache iff
 //!    admitted ("Initial Cache Population", §4.2).
-//! 2. **Decode** — each step runs the fixed-capacity decode executable over
-//!    the cache's execution view, then applies **Lazy Promotion** (Fig 6d):
-//!    the ring victim is promoted iff its stored gate clears `tau`.
-//!    Optionally Quest read-time selection runs fused in the executable
-//!    (§5.4) and SnapKV post-write eviction bounds the global region
-//!    (App. K) — the three primitives compose.
+//! 2. **Decode** — each step first delta-syncs the session's *persistent
+//!    device execution view* ([`DeviceExecView`]): the cache's dirty-slot
+//!    journal (ring overwrites, promotions, evictions since the previous
+//!    step) is drained and only those `(layer, head, slot)` spans ship
+//!    host→device — O(dirty slots), not O(capacity); a capacity re-layout
+//!    triggers a wholesale re-upload. The fixed-capacity decode executable
+//!    then runs against the resident view, and **Lazy Promotion** (Fig 6d)
+//!    applies: the ring victim is promoted iff its stored gate clears
+//!    `tau` (the mutations land in the journal for the *next* step's
+//!    sync). Optionally Quest read-time selection runs fused in the
+//!    executable (§5.4) against the view's resident page bounds —
+//!    maintained incrementally, never rebuilt per step — and SnapKV
+//!    post-write eviction bounds the global region (App. K); the three
+//!    primitives compose.
 //!
 //! The engine is synchronous and single-sequence per call; concurrency is
-//! the scheduler's job ([`crate::scheduler`]).
+//! the scheduler's job ([`crate::scheduler`]), which also charges each
+//! session's resident view bytes against the KV budget and releases them
+//! when the sequence retires.
 
 use std::path::Path;
 use std::time::Instant;
@@ -28,6 +38,7 @@ use crate::eviction::{SnapKvConfig, SnapKvEvictor};
 use crate::kvcache::{dual::CacheDims, CacheStats, SequenceKvCache};
 use crate::metrics::EngineMetrics;
 use crate::model::{ByteTokenizer, Sampler};
+use crate::runtime::device_cache::{DeviceExecView, TransferStats};
 use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::ModelRuntime;
@@ -70,6 +81,9 @@ pub struct Session {
     quest: Option<QuestConfig>,
     evictor: Option<SnapKvEvictor>,
     cache: Option<SequenceKvCache>,
+    /// Persistent device execution view, created on the first decode step
+    /// and delta-synced from the cache's dirty journal thereafter.
+    device_view: Option<DeviceExecView>,
     /// Absolute position of the next token.
     pos: usize,
     /// Prompt length (for normalized cache-size reporting).
@@ -85,14 +99,30 @@ pub struct Session {
 }
 
 impl Session {
-    /// Resident KV tokens across all (layer, head) caches.
+    /// Resident KV tokens across all (layer, head) caches — a running
+    /// counter maintained by the cache on insert/promote/evict, so the
+    /// scheduler can poll it every step without an L×Hkv sweep.
     pub fn resident_tokens(&self) -> usize {
-        let Some(c) = &self.cache else { return 0 };
-        let d = c.dims();
-        (0..d.n_layers)
-            .flat_map(|l| (0..d.n_kv_heads).map(move |h| (l, h)))
-            .map(|(l, h)| c.head_len(l, h))
-            .sum()
+        self.cache.as_ref().map(|c| c.resident_tokens()).unwrap_or(0)
+    }
+
+    /// Device bytes pinned by the persistent execution view (0 before the
+    /// first decode step or after release).
+    pub fn device_view_bytes(&self) -> usize {
+        self.device_view.as_ref().map(|v| v.device_bytes()).unwrap_or(0)
+    }
+
+    /// Lifetime host→device transfer counters of the view.
+    pub fn device_transfer_stats(&self) -> TransferStats {
+        self.device_view.as_ref().map(|v| v.stats).unwrap_or_default()
+    }
+
+    /// Drop the device-resident view, returning the bytes freed — called
+    /// by the scheduler when the sequence retires so the budget recovers
+    /// them immediately. The next decode step (if any) re-creates and
+    /// re-uploads the view wholesale.
+    pub fn release_device_view(&mut self) -> usize {
+        self.device_view.take().map(|v| v.device_bytes()).unwrap_or(0)
     }
 
     /// Normalized KV cache size vs a full cache at the current position
@@ -160,6 +190,11 @@ pub struct GenOut {
     pub eviction_triggers: u64,
     /// Physical KV bytes allocated in the paged pool at the end.
     pub kv_bytes: usize,
+    /// Host→device bytes shipped by persistent-view syncs during decode.
+    pub upload_bytes: u64,
+    /// Bytes a full-view re-marshal every step would have shipped (the
+    /// pre-persistent baseline; the ratio is the fig 8 transfer win).
+    pub upload_bytes_full_equiv: u64,
 }
 
 /// The serving engine. See module docs.
@@ -217,6 +252,7 @@ impl Engine {
             quest: opts.quest,
             evictor: opts.snapkv.map(SnapKvEvictor::new),
             cache: None,
+            device_view: None,
             pos: 0,
             prompt_len: 0,
             last_logits: Vec::new(),
@@ -299,16 +335,17 @@ impl Engine {
         Ok(())
     }
 
-    /// Run one decode step: execute the model on `token`, apply Lazy
-    /// Promotion, then (optionally) SnapKV eviction. Leaves the next
-    /// token's logits in `session.last_logits`.
+    /// Run one decode step: delta-sync the persistent device view, execute
+    /// the model on `token`, apply Lazy Promotion, then (optionally) SnapKV
+    /// eviction. Leaves the next token's logits in `session.last_logits`.
     pub fn decode_step(&mut self, sess: &mut Session, token: i32) -> Result<()> {
         let m = self.dims().clone();
         let t0 = Instant::now();
         {
             let cache = sess.cache.as_mut().context("decode before prefill")?;
             // Grow the execution view when the fullest head approaches the
-            // current executable's capacity.
+            // current executable's capacity. The re-layout bumps the cache's
+            // layout epoch, so the sync below re-uploads wholesale.
             let required = cache.required_slots();
             if required > cache.capacity() {
                 let cap = self
@@ -318,66 +355,54 @@ impl Engine {
                 cache.ensure_capacity(cap)?;
             }
         }
-        let cache = sess.cache.as_ref().unwrap();
+        // Sync the persistent view: only the slots dirtied since the last
+        // step ship (previous step's ring overwrite / promotion / eviction);
+        // the first step after prefill uploads the whole view once.
+        let cache = sess.cache.as_mut().unwrap();
+        if sess.device_view.is_none() {
+            sess.device_view = Some(DeviceExecView::new(cache));
+        }
+        let view = sess.device_view.as_mut().unwrap();
+        let report = view.sync(&mut *cache);
+        self.metrics.upload_bytes += report.bytes as u64;
+        self.metrics.upload_full_equiv_bytes += cache.full_view_bytes() as u64;
+        if report.full {
+            self.metrics.view_full_uploads += 1;
+        } else {
+            self.metrics.view_delta_uploads += 1;
+        }
         let cap = cache.capacity();
+        let view = sess.device_view.as_ref().unwrap();
         let out = if let Some(q) = &sess.quest {
             if self.runtime.has_decode_sel(cap) {
                 // Fused path: selection runs inside the executable against
-                // the *current* token's queries.
-                let (pmin, pmax) = cache.page_meta_tensors();
-                self.runtime.decode_sel(
-                    cap,
-                    token,
-                    sess.pos as i32,
-                    cache.k_exec(),
-                    cache.v_exec(),
-                    cache.slot_mask(),
-                    &pmin,
-                    &pmax,
-                    q.budget_pages(m.page_size),
-                )?
+                // the *current* token's queries and the resident page
+                // bounds (maintained incrementally, never rebuilt here).
+                self.runtime
+                    .decode_sel_view(cap, token, sess.pos as i32, view, q.budget_pages(m.page_size))?
             } else if let Some(prev_q) = &sess.last_q {
                 // Host fallback: select with the previous step's queries
-                // (one-token-stale, see selection::host_selected_mask).
-                let (pmin, pmax) = cache.page_meta_tensors();
+                // (one-token-stale, see selection::host_selected_mask). The
+                // derived mask is per-step scratch; the resident view's
+                // K/V/mask images are untouched.
                 let masked = crate::selection::host_selected_mask(
-                    cache.slot_mask(),
+                    view.mask(),
                     prev_q,
-                    &pmin,
-                    &pmax,
+                    view.page_min(),
+                    view.page_max(),
                     m.gqa_group,
                     m.page_size,
                     m.w_local,
                     q.budget_pages(m.page_size) as usize,
                 );
-                self.runtime.decode(
-                    cap,
-                    token,
-                    sess.pos as i32,
-                    cache.k_exec(),
-                    cache.v_exec(),
-                    &masked,
-                )?
+                self.runtime
+                    .decode(cap, token, sess.pos as i32, view.k(), view.v(), &masked)?
             } else {
                 // First decode step with no query history: read everything.
-                self.runtime.decode(
-                    cap,
-                    token,
-                    sess.pos as i32,
-                    cache.k_exec(),
-                    cache.v_exec(),
-                    cache.slot_mask(),
-                )?
+                self.runtime.decode_view(cap, token, sess.pos as i32, view)?
             }
         } else {
-            self.runtime.decode(
-                cap,
-                token,
-                sess.pos as i32,
-                cache.k_exec(),
-                cache.v_exec(),
-                cache.slot_mask(),
-            )?
+            self.runtime.decode_view(cap, token, sess.pos as i32, view)?
         };
 
         let t1 = Instant::now();
@@ -431,6 +456,7 @@ impl Engine {
         let decode_us_mean = t1.elapsed().as_secs_f64() * 1e6 / steps as f64;
 
         self.metrics.requests_done += 1;
+        let transfer = sess.device_transfer_stats();
         Ok(GenOut {
             text: self.tokenizer.decode(&tokens),
             tokens,
@@ -441,6 +467,8 @@ impl Engine {
             resident_tokens: sess.resident_tokens(),
             eviction_triggers: sess.eviction_triggers(),
             kv_bytes: sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0),
+            upload_bytes: transfer.bytes_uploaded,
+            upload_bytes_full_equiv: transfer.bytes_full_equiv,
         })
     }
 

@@ -19,7 +19,18 @@
 //! hot path never re-gathers the whole cache. Layout: global tokens at
 //! slots `[0, cap - w_local)`, the ring at `[cap - w_local, cap)`.
 //! Quest page metadata (elementwise key min/max per global page, §5.4) is
-//! maintained on the same writes.
+//! maintained on the same writes, mirrored into persistent `[L, Hkv, P, dh]`
+//! tensors so [`Self::page_meta_tensors`] is O(1) instead of a per-step
+//! re-assembly.
+//!
+//! Every mutation of the execution view (ring overwrite, lazy promotion,
+//! eviction compaction, capacity re-layout) is additionally recorded in a
+//! **dirty-slot journal** ([`DirtyLog`]): the set of `(layer, head, slot)`
+//! spans and page-meta entries that changed since the last
+//! [`SequenceKvCache::drain_dirty`]. A persistent device-resident copy of
+//! the view ([`crate::runtime::device_cache::DeviceExecView`]) replays the
+//! journal to stay in sync at O(dirty slots) per decode step instead of
+//! re-uploading the whole `[L, Hkv, cap, dh]` view.
 
 use anyhow::{bail, Result};
 
@@ -60,6 +71,67 @@ struct HeadCache {
     kmax: Vec<f32>,
 }
 
+/// One contiguous run of freshly-written execution-view slots at a single
+/// (layer, head). Slot range is `[lo, hi)`; each slot covers one K vector,
+/// one V vector and one mask element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DirtySpan {
+    pub layer: u32,
+    pub head: u32,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl DirtySpan {
+    pub fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// Journal of execution-view mutations accumulated since the last
+/// [`SequenceKvCache::drain_dirty`]. The spans form a *covering set*: every
+/// element of the view that differs from its state at the previous drain is
+/// inside some span (spans may also cover unchanged elements, e.g. an
+/// eviction marks the head's whole global region).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DirtyLog {
+    /// Layout epoch the log belongs to (bumped by every capacity
+    /// re-layout). A consumer holding a view from an older epoch must do a
+    /// wholesale refresh regardless of the spans.
+    pub epoch: u64,
+    /// Whole view invalid: set on creation and by `ensure_capacity`
+    /// (slots move between layouts, so spans cannot describe the change).
+    pub full: bool,
+    /// Touched K/V/mask slot spans, in write order, run-coalesced.
+    pub spans: Vec<DirtySpan>,
+    /// Touched Quest page-meta entries `(layer, head, page)`; may contain
+    /// duplicates after an eviction rebuild (still a covering set).
+    pub meta: Vec<(u32, u32, u32)>,
+}
+
+impl DirtyLog {
+    pub fn is_empty(&self) -> bool {
+        !self.full && self.spans.is_empty() && self.meta.is_empty()
+    }
+
+    /// Total slots covered by the spans.
+    pub fn dirty_slots(&self) -> usize {
+        self.spans.iter().map(DirtySpan::len).sum()
+    }
+
+    /// Host→device bytes a delta upload of this log ships: per slot one K
+    /// and one V vector plus a mask element, per meta entry a kmin and a
+    /// kmax vector.
+    pub fn delta_bytes(&self, d_head: usize) -> usize {
+        let f = std::mem::size_of::<f32>();
+        self.dirty_slots() * (2 * d_head + 1) * f + self.meta.len() * 2 * d_head * f
+    }
+}
+
 /// Lifetime counters for one sequence (paper Fig 16 reports these).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
@@ -84,6 +156,17 @@ pub struct SequenceKvCache {
     k_exec: Tensor,
     v_exec: Tensor,
     mask: Tensor,
+    /// Persistent Quest page bounds, `[L, Hkv, P, dh]` — mirrors the
+    /// per-head `kmin`/`kmax` vectors for the first `P` pages.
+    pmin_exec: Tensor,
+    pmax_exec: Tensor,
+    /// Mutations since the last [`Self::drain_dirty`].
+    journal: DirtyLog,
+    /// Bumped on every capacity re-layout.
+    epoch: u64,
+    /// Running count of resident tokens across all (layer, head) caches,
+    /// updated on insert/promote/evict — O(1) for scheduler polls.
+    resident: usize,
     pub stats: CacheStats,
 }
 
@@ -106,6 +189,7 @@ impl SequenceKvCache {
             })
             .collect();
         let (l, h, dh) = (dims.n_layers, dims.n_kv_heads, dims.d_head);
+        let p = (cap - dims.w_local) / dims.page_size;
         Ok(Self {
             dims,
             pool,
@@ -114,6 +198,11 @@ impl SequenceKvCache {
             k_exec: Tensor::zeros(&[l, h, cap, dh]),
             v_exec: Tensor::zeros(&[l, h, cap, dh]),
             mask: Tensor::zeros(&[l, h, cap]),
+            pmin_exec: Tensor::full(&[l, h, p, dh], f32::INFINITY),
+            pmax_exec: Tensor::full(&[l, h, p, dh], f32::NEG_INFINITY),
+            journal: DirtyLog { full: true, ..DirtyLog::default() },
+            epoch: 0,
+            resident: 0,
             stats: CacheStats::default(),
         })
     }
@@ -151,6 +240,33 @@ impl SequenceKvCache {
     /// Tokens resident for (l, h) — the per-head KV cache size of Fig 13.
     pub fn head_len(&self, l: usize, h: usize) -> usize {
         self.global_len(l, h) + self.local_len(l, h)
+    }
+
+    /// Resident tokens across all (layer, head) caches — a running counter
+    /// (O(1)), equal to `sum_{l,h} head_len(l, h)`.
+    pub fn resident_tokens(&self) -> usize {
+        self.resident
+    }
+
+    /// Layout epoch of the execution view; bumped on every capacity
+    /// re-layout. Device-resident copies from an older epoch are stale.
+    pub fn layout_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Peek at the pending dirty journal without draining it.
+    pub fn dirty_log(&self) -> &DirtyLog {
+        &self.journal
+    }
+
+    /// Take the accumulated dirty journal, leaving an empty one behind.
+    /// The returned log describes every view mutation since the previous
+    /// drain (or since creation, in which case `full` is set).
+    pub fn drain_dirty(&mut self) -> DirtyLog {
+        let mut log = std::mem::take(&mut self.journal);
+        log.epoch = self.epoch;
+        self.journal.epoch = self.epoch;
+        log
     }
 
     /// Exec slots needed to run a decode step right now: the fullest head's
@@ -193,6 +309,52 @@ impl SequenceKvCache {
 
     // -- exec-view helpers ---------------------------------------------------
 
+    /// Record `slot` as dirty at (l, h), coalescing with the last span.
+    fn mark_dirty(&mut self, l: usize, h: usize, slot: usize) {
+        if self.journal.full {
+            return;
+        }
+        let (l, h, s) = (l as u32, h as u32, slot as u32);
+        if let Some(last) = self.journal.spans.last_mut() {
+            if last.layer == l && last.head == h && s >= last.lo && s <= last.hi {
+                last.hi = last.hi.max(s + 1);
+                return;
+            }
+        }
+        self.journal.spans.push(DirtySpan { layer: l, head: h, lo: s, hi: s + 1 });
+    }
+
+    fn mark_meta_dirty(&mut self, l: usize, h: usize, page: usize) {
+        if self.journal.full {
+            return;
+        }
+        let entry = (l as u32, h as u32, page as u32);
+        if self.journal.meta.last() == Some(&entry) {
+            return;
+        }
+        self.journal.meta.push(entry);
+    }
+
+    /// Mark (l, h)'s whole global region (slots + all exec meta pages)
+    /// dirty — used by eviction, whose compaction rewrites the region.
+    fn mark_head_global_dirty(&mut self, l: usize, h: usize) {
+        if self.journal.full {
+            return;
+        }
+        let n_global = self.n_global_slots();
+        if n_global > 0 {
+            self.journal.spans.push(DirtySpan {
+                layer: l as u32,
+                head: h as u32,
+                lo: 0,
+                hi: n_global as u32,
+            });
+        }
+        for page in 0..self.pmin_exec.shape[2] {
+            self.journal.meta.push((l as u32, h as u32, page as u32));
+        }
+    }
+
     fn write_exec(&mut self, l: usize, h: usize, slot: usize, k: &[f32], v: &[f32]) {
         let dh = self.dims.d_head;
         let kdst = self.k_exec.slice_at_mut(&[l, h]);
@@ -200,6 +362,7 @@ impl SequenceKvCache {
         let vdst = self.v_exec.slice_at_mut(&[l, h]);
         vdst[slot * dh..(slot + 1) * dh].copy_from_slice(v);
         self.mask.slice_at_mut(&[l, h])[slot] = 1.0;
+        self.mark_dirty(l, h, slot);
     }
 
     fn ring_exec_slot(&self, ring_idx: usize) -> usize {
@@ -208,8 +371,11 @@ impl SequenceKvCache {
 
     // -- Quest metadata --------------------------------------------------------
 
-    fn update_page_meta(hc: &mut HeadCache, dh: usize, global_idx: usize, k: &[f32], page_size: usize) {
-        let page = global_idx / page_size;
+    fn update_page_meta(&mut self, l: usize, h: usize, global_idx: usize, k: &[f32]) {
+        let dh = self.dims.d_head;
+        let page = global_idx / self.dims.page_size;
+        let hi = self.head_idx(l, h);
+        let hc = &mut self.heads[hi];
         if hc.kmin.len() < (page + 1) * dh {
             hc.kmin.resize((page + 1) * dh, f32::INFINITY);
             hc.kmax.resize((page + 1) * dh, f32::NEG_INFINITY);
@@ -220,12 +386,34 @@ impl SequenceKvCache {
             mn[d] = mn[d].min(k[d]);
             mx[d] = mx[d].max(k[d]);
         }
+        // Mirror into the persistent exec tensors. Tokens that land in a
+        // trailing partial page (page >= P) only live in the head vectors;
+        // they are re-homed when a re-layout grows P.
+        if page < self.pmin_exec.shape[2] {
+            let Self { heads, pmin_exec, pmax_exec, .. } = &mut *self;
+            let hc = &heads[hi];
+            pmin_exec
+                .slice_at_mut(&[l, h, page])
+                .copy_from_slice(&hc.kmin[page * dh..(page + 1) * dh]);
+            pmax_exec
+                .slice_at_mut(&[l, h, page])
+                .copy_from_slice(&hc.kmax[page * dh..(page + 1) * dh]);
+            self.mark_meta_dirty(l, h, page);
+        }
     }
 
-    /// Assemble `[L, Hkv, P, dh]` Quest page bounds for the current
-    /// capacity (P = n_global_slots / page_size). Pages beyond a head's
-    /// occupancy get +inf/-inf bounds (they are masked out in-kernel).
-    pub fn page_meta_tensors(&self) -> (Tensor, Tensor) {
+    /// `[L, Hkv, P, dh]` Quest page bounds for the current capacity
+    /// (P = n_global_slots / page_size), maintained incrementally on every
+    /// write — O(1) here, no per-step re-assembly. Pages beyond a head's
+    /// occupancy hold +inf/-inf bounds (they are masked out in-kernel).
+    pub fn page_meta_tensors(&self) -> (&Tensor, &Tensor) {
+        (&self.pmin_exec, &self.pmax_exec)
+    }
+
+    /// Assemble the page bounds from scratch (the pre-incremental code
+    /// path). Kept as the reference for property tests and as the
+    /// benchmark baseline for the incremental maintenance.
+    pub fn rebuild_page_meta_tensors(&self) -> (Tensor, Tensor) {
         let dims = self.dims;
         let p = self.n_global_slots() / dims.page_size;
         let dh = dims.d_head;
@@ -240,6 +428,70 @@ impl SequenceKvCache {
             }
         }
         (pmin, pmax)
+    }
+
+    // -- dirty-journal replay ---------------------------------------------------
+
+    /// Bytes of the full execution view plus page metadata — what a
+    /// wholesale host→device upload ships.
+    pub fn full_view_bytes(&self) -> usize {
+        (self.k_exec.numel()
+            + self.v_exec.numel()
+            + self.mask.numel()
+            + self.pmin_exec.numel()
+            + self.pmax_exec.numel())
+            * std::mem::size_of::<f32>()
+    }
+
+    /// Copy the regions named by `log` from the live execution view into
+    /// stale mirrors captured at the log's start, making them bit-for-bit
+    /// equal to the live view. A `full` log (or any shape change, which a
+    /// re-layout implies) falls back to a wholesale copy. Returns the
+    /// host→device bytes this application represents.
+    pub fn replay_dirty_into(
+        &self,
+        log: &DirtyLog,
+        k: &mut Tensor,
+        v: &mut Tensor,
+        mask: &mut Tensor,
+        pmin: &mut Tensor,
+        pmax: &mut Tensor,
+    ) -> usize {
+        if log.full || k.shape != self.k_exec.shape || pmin.shape != self.pmin_exec.shape {
+            // Wholesale refresh; reuse the existing allocation when the
+            // shape is unchanged (e.g. an eviction-heavy log whose delta
+            // would exceed a full upload).
+            fn assign(dst: &mut Tensor, src: &Tensor) {
+                if dst.shape == src.shape {
+                    dst.data.copy_from_slice(&src.data);
+                } else {
+                    *dst = src.clone();
+                }
+            }
+            assign(k, &self.k_exec);
+            assign(v, &self.v_exec);
+            assign(mask, &self.mask);
+            assign(pmin, &self.pmin_exec);
+            assign(pmax, &self.pmax_exec);
+            return self.full_view_bytes();
+        }
+        let dh = self.dims.d_head;
+        for s in &log.spans {
+            let (l, h) = (s.layer as usize, s.head as usize);
+            let (lo, hi) = (s.lo as usize, s.hi as usize);
+            k.slice_at_mut(&[l, h])[lo * dh..hi * dh]
+                .copy_from_slice(&self.k_exec.slice_at(&[l, h])[lo * dh..hi * dh]);
+            v.slice_at_mut(&[l, h])[lo * dh..hi * dh]
+                .copy_from_slice(&self.v_exec.slice_at(&[l, h])[lo * dh..hi * dh]);
+            mask.slice_at_mut(&[l, h])[lo..hi]
+                .copy_from_slice(&self.mask.slice_at(&[l, h])[lo..hi]);
+        }
+        for &(l, h, p) in &log.meta {
+            let idx = [l as usize, h as usize, p as usize];
+            pmin.slice_at_mut(&idx).copy_from_slice(self.pmin_exec.slice_at(&idx));
+            pmax.slice_at_mut(&idx).copy_from_slice(self.pmax_exec.slice_at(&idx));
+        }
+        log.delta_bytes(dh)
     }
 
     // -- writes ----------------------------------------------------------------
@@ -266,9 +518,9 @@ impl SequenceKvCache {
         }
         let (page, slot) = self.heads[hi].global.append(&mut self.pool);
         self.pool.write_token(page, slot, k, v, gate, pos);
-        let (dh, ps) = (self.dims.d_head, self.dims.page_size);
-        Self::update_page_meta(&mut self.heads[hi], dh, idx, k, ps);
+        self.update_page_meta(l, h, idx, k);
         self.write_exec(l, h, idx, k, v);
+        self.resident += 1;
         Ok(())
     }
 
@@ -290,6 +542,9 @@ impl SequenceKvCache {
             ring_idx % ps,
         );
         self.pool.write_token(page, slot, k, v, gate, pos);
+        if !self.heads[hi].local[ring_idx].occupied {
+            self.resident += 1;
+        }
         self.heads[hi].local[ring_idx] = LocalEntry { occupied: true, gate, pos };
         let exec_slot = self.ring_exec_slot(ring_idx);
         self.write_exec(l, h, exec_slot, k, v);
@@ -423,15 +678,23 @@ impl SequenceKvCache {
             hc.kmin.clear();
             hc.kmax.clear();
         }
-        // Zero the head's exec global region + mask.
+        // Zero the head's exec global region + mask, reset its page bounds.
         let n_global = self.n_global_slots();
         self.k_exec.slice_at_mut(&[l, h])[..n_global * dh].fill(0.0);
         self.v_exec.slice_at_mut(&[l, h])[..n_global * dh].fill(0.0);
         self.mask.slice_at_mut(&[l, h])[..n_global].fill(0.0);
-        // Re-append survivors.
+        self.pmin_exec.slice_at_mut(&[l, h]).fill(f32::INFINITY);
+        self.pmax_exec.slice_at_mut(&[l, h]).fill(f32::NEG_INFINITY);
+        // The compaction rewrites the whole region: journal it wholesale
+        // (the re-appends below land inside this span and coalesce away).
+        self.mark_head_global_dirty(l, h);
+        // Re-append survivors (global_append re-counts them as resident).
+        let resident_before = self.resident;
+        let n_survivors = survivors.len();
         for (k, v, g, p) in survivors {
             self.global_append(l, h, &k, &v, g, p)?;
         }
+        self.resident = resident_before + n_survivors - len;
         self.stats.evicted += evicted as u64;
         Ok(evicted)
     }
@@ -451,10 +714,17 @@ impl SequenceKvCache {
         }
         let dims = self.dims;
         let (l, h, dh) = (dims.n_layers, dims.n_kv_heads, dims.d_head);
+        // Slots move between layouts: spans can't describe the change, so
+        // invalidate wholesale and start a new epoch.
+        self.epoch += 1;
+        self.journal = DirtyLog { epoch: self.epoch, full: true, ..DirtyLog::default() };
         self.cap = new_cap;
         self.k_exec = Tensor::zeros(&[l, h, new_cap, dh]);
         self.v_exec = Tensor::zeros(&[l, h, new_cap, dh]);
         self.mask = Tensor::zeros(&[l, h, new_cap]);
+        let (pmin, pmax) = self.rebuild_page_meta_tensors();
+        self.pmin_exec = pmin;
+        self.pmax_exec = pmax;
         for li in 0..l {
             for hi_ in 0..h {
                 let hi = self.head_idx(li, hi_);
@@ -665,5 +935,123 @@ mod tests {
         }
         // Untouched page 2 must be +inf/-inf.
         assert_eq!(pmin.at(&[0, 0, 2, 0]), f32::INFINITY);
+    }
+
+    #[test]
+    fn incremental_meta_matches_rebuild() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        for pos in 0..10 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32 * 0.7 - 2.0, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+        }
+        let keep: Vec<bool> = (0..c.global_len(0, 1)).map(|i| i % 2 == 1).collect();
+        c.evict_global(0, 1, &keep).unwrap();
+        let (rmin, rmax) = c.rebuild_page_meta_tensors();
+        let (pmin, pmax) = c.page_meta_tensors();
+        assert_eq!(&rmin, pmin);
+        assert_eq!(&rmax, pmax);
+    }
+
+    #[test]
+    fn journal_starts_full_and_drains_empty() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        assert!(c.dirty_log().full);
+        let log = c.drain_dirty();
+        assert!(log.full);
+        assert!(c.dirty_log().is_empty());
+        let log2 = c.drain_dirty();
+        assert!(log2.is_empty() && !log2.full);
+    }
+
+    #[test]
+    fn insert_journals_only_touched_slots() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        let _ = c.drain_dirty();
+        // Discard-only insert: exactly one ring slot per (layer, head).
+        let (kn, vn, gn) = decoded_tensors(1.0, 0.01);
+        c.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| false).unwrap();
+        let log = c.drain_dirty();
+        assert!(!log.full);
+        assert_eq!(log.dirty_slots(), d.n_heads_total());
+        assert!(log.meta.is_empty());
+        // Promotion insert: ring slot + global slot + one meta page per head.
+        for pos in 1..=4 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+        }
+        let log = c.drain_dirty();
+        assert!(!log.full);
+        // 4 inserts: pos 1-3 overwrite empty slots (1 slot each), pos 4
+        // promotes the pos-0 victim (2 slots + meta).
+        assert_eq!(log.dirty_slots(), 5 * d.n_heads_total());
+        assert_eq!(log.meta.len(), d.n_heads_total());
+    }
+
+    #[test]
+    fn relayout_bumps_epoch_and_sets_full() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 8).unwrap();
+        let _ = c.drain_dirty();
+        let e0 = c.layout_epoch();
+        c.ensure_capacity(16).unwrap();
+        assert_eq!(c.layout_epoch(), e0 + 1);
+        let log = c.drain_dirty();
+        assert!(log.full);
+        assert_eq!(log.epoch, e0 + 1);
+    }
+
+    #[test]
+    fn replay_reconstructs_after_inserts() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        let (k, v, g) = prefill_tensors(6);
+        c.populate_from_prefill(&k, &v, &g, 6, |_, _, _, gate| gate >= 0.1).unwrap();
+        let _ = c.drain_dirty();
+        let mut ks = c.k_exec().clone();
+        let mut vs = c.v_exec().clone();
+        let mut ms = c.slot_mask().clone();
+        let (p0, p1) = c.page_meta_tensors();
+        let (mut pmin, mut pmax) = (p0.clone(), p1.clone());
+        for pos in 6..11 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+        }
+        let log = c.drain_dirty();
+        let bytes =
+            c.replay_dirty_into(&log, &mut ks, &mut vs, &mut ms, &mut pmin, &mut pmax);
+        assert_eq!(bytes, log.delta_bytes(d.d_head));
+        assert!(bytes < c.full_view_bytes());
+        assert_eq!(&ks, c.k_exec());
+        assert_eq!(&vs, c.v_exec());
+        assert_eq!(&ms, c.slot_mask());
+        assert_eq!((&pmin, &pmax), c.page_meta_tensors());
+    }
+
+    #[test]
+    fn resident_counter_tracks_head_lens() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 32).unwrap();
+        let check = |c: &SequenceKvCache| {
+            let sum: usize = (0..d.n_layers)
+                .flat_map(|l| (0..d.n_kv_heads).map(move |h| (l, h)))
+                .map(|(l, h)| c.head_len(l, h))
+                .sum();
+            assert_eq!(c.resident_tokens(), sum);
+        };
+        check(&c);
+        for pos in 0..14 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, gate| gate >= 0.5).unwrap();
+            check(&c);
+        }
+        let n = c.global_len(0, 0);
+        let keep: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+        c.evict_global(0, 0, &keep).unwrap();
+        check(&c);
+        c.ensure_capacity(64).unwrap();
+        check(&c);
     }
 }

@@ -23,9 +23,16 @@
 //! folding heads into the batch dimension for vLLM's varlen kernel), and
 //! admission's saving shows up as a smaller `C` — the engine picks the
 //! smallest exported capacity that fits the fullest head.
+//!
+//! The execution view is *persistent across decode steps*: every mutation
+//! (ring overwrite, lazy promotion, eviction compaction, capacity
+//! re-layout) is journaled as dirty `(layer, head, slot)` spans
+//! ([`dual::DirtyLog`]), and the device-resident copy of the view
+//! ([`crate::runtime::device_cache::DeviceExecView`]) replays the journal
+//! each step — host↔device traffic is O(dirty slots), not O(capacity).
 
 pub mod dual;
 pub mod pool;
 
-pub use dual::{CacheStats, SequenceKvCache};
+pub use dual::{CacheStats, DirtyLog, DirtySpan, SequenceKvCache};
 pub use pool::{KvPool, PageId, PageTable, PoolStats};

@@ -66,12 +66,22 @@ impl KvPool {
         self.gates.len() / self.page_size
     }
 
-    /// Allocate a page (recycled or fresh). Fresh pages are zeroed.
+    /// Allocate a page (recycled or fresh). Fresh and recycled pages are
+    /// both fully zeroed: a recycled page's stale K vectors would otherwise
+    /// leak a retired sequence's keys into the Quest `kmin`/`kmax` bounds
+    /// of whichever head re-populates the page (`update_page_meta` folds
+    /// the *written* key, but partially-filled pages expose the remnant
+    /// slots to `evict_global`'s wholesale snapshot and to debug dumps).
     pub fn alloc(&mut self) -> PageId {
         self.allocated += 1;
         if let Some(p) = self.free.pop() {
-            // Scrub recycled page metadata so stale positions can't leak.
+            // Scrub recycled page payloads + metadata so stale K/V data and
+            // positions can't leak across sequences.
             let base = p.0 as usize * self.page_size;
+            let kv_base = base * self.d_head;
+            let kv_len = self.page_size * self.d_head;
+            self.k[kv_base..kv_base + kv_len].fill(0.0);
+            self.v[kv_base..kv_base + kv_len].fill(0.0);
             self.gates[base..base + self.page_size].fill(0.0);
             self.pos[base..base + self.page_size].fill(-1);
             return p;
@@ -248,6 +258,10 @@ mod tests {
         assert_eq!(b, a);
         assert_eq!(pool.gate_at(b, 1), 0.0);
         assert_eq!(pool.pos_at(b, 1), -1);
+        // K/V payloads must be scrubbed too — stale keys would leak into
+        // the next owner's Quest page bounds.
+        assert_eq!(pool.k_at(b, 1), &[0.0, 0.0]);
+        assert_eq!(pool.v_at(b, 1), &[0.0, 0.0]);
     }
 
     #[test]

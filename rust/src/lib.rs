@@ -24,6 +24,23 @@
 //! Python never runs on the request path: after `make artifacts` the binary
 //! is self-contained.
 //!
+//! ## Decode data path: persistent view, delta uploads
+//!
+//! The decode hot path never re-marshals the KV state. Each
+//! [`kvcache::SequenceKvCache`] maintains a fixed-capacity *execution
+//! view* (K/V slot buffers + validity mask + Quest page bounds) updated at
+//! O(d_head) per token, and journals every mutation as dirty `(layer,
+//! head, slot)` spans ([`kvcache::DirtyLog`]). A per-session
+//! [`runtime::device_cache::DeviceExecView`] holds the device-resident
+//! image of that view across steps; each [`engine::Engine::decode_step`]
+//! drains the journal and ships only the dirty spans — host↔device
+//! traffic is O(dirty slots) per token, not O(capacity). Wholesale
+//! uploads happen exactly twice per regime: the first step after prefill,
+//! and after a capacity re-layout (which bumps the view's layout epoch).
+//! The scheduler charges each session's resident view against its KV byte
+//! budget and releases it when the sequence retires; `make bench` tracks
+//! the full-vs-delta upload bytes in `BENCH_coordinator.json`.
+//!
 //! ## Quick start
 //!
 //! ```no_run

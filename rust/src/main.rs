@@ -102,12 +102,15 @@ fn generate(args: &Args) -> Result<()> {
     let out = engine.generate(&toks, params.max_new, opts, &mut sampler)?;
     println!("{}", out.text);
     eprintln!(
-        "[prefill {:.1} ms | decode {:.2} ms/tok | cache {:.1}% | kv {} B | evictions {}]",
+        "[prefill {:.1} ms | decode {:.2} ms/tok | cache {:.1}% | kv {} B | evictions {} | \
+         upload {} B (vs {} B full-view)]",
         out.prefill_us / 1e3,
         out.decode_us_mean / 1e3,
         out.cache_fraction * 100.0,
         out.kv_bytes,
         out.eviction_triggers,
+        out.upload_bytes,
+        out.upload_bytes_full_equiv,
     );
     Ok(())
 }

@@ -121,6 +121,15 @@ pub struct EngineMetrics {
     pub generated_tokens: u64,
     /// Eviction triggers observed (Fig 16's counter, aggregated).
     pub eviction_triggers: u64,
+    /// Host→device bytes shipped by persistent-view syncs.
+    pub upload_bytes: u64,
+    /// Bytes a wholesale view re-marshal per step would have shipped (the
+    /// pre-persistent baseline the delta path is measured against).
+    pub upload_full_equiv_bytes: u64,
+    /// Persistent-view delta syncs performed.
+    pub view_delta_uploads: u64,
+    /// Persistent-view wholesale uploads (first step, re-layouts).
+    pub view_full_uploads: u64,
 }
 
 impl EngineMetrics {
@@ -150,6 +159,10 @@ impl EngineMetrics {
             decode_tok_per_s: self.decode_tok_per_s(),
             cache_update_mean_us: self.cache_update.mean_us(),
             eviction_triggers: self.eviction_triggers,
+            upload_bytes: self.upload_bytes,
+            upload_full_equiv_bytes: self.upload_full_equiv_bytes,
+            view_delta_uploads: self.view_delta_uploads,
+            view_full_uploads: self.view_full_uploads,
         }
     }
 }
@@ -167,6 +180,10 @@ pub struct MetricsSnapshot {
     pub decode_tok_per_s: f64,
     pub cache_update_mean_us: f64,
     pub eviction_triggers: u64,
+    pub upload_bytes: u64,
+    pub upload_full_equiv_bytes: u64,
+    pub view_delta_uploads: u64,
+    pub view_full_uploads: u64,
 }
 
 impl MetricsSnapshot {
@@ -182,6 +199,10 @@ impl MetricsSnapshot {
             .set("decode_tok_per_s", self.decode_tok_per_s)
             .set("cache_update_mean_us", self.cache_update_mean_us)
             .set("eviction_triggers", self.eviction_triggers)
+            .set("upload_bytes", self.upload_bytes)
+            .set("upload_full_equiv_bytes", self.upload_full_equiv_bytes)
+            .set("view_delta_uploads", self.view_delta_uploads)
+            .set("view_full_uploads", self.view_full_uploads)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -197,6 +218,10 @@ impl MetricsSnapshot {
             decode_tok_per_s: f("decode_tok_per_s"),
             cache_update_mean_us: f("cache_update_mean_us"),
             eviction_triggers: f("eviction_triggers") as u64,
+            upload_bytes: f("upload_bytes") as u64,
+            upload_full_equiv_bytes: f("upload_full_equiv_bytes") as u64,
+            view_delta_uploads: f("view_delta_uploads") as u64,
+            view_full_uploads: f("view_full_uploads") as u64,
         }
     }
 }

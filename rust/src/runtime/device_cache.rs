@@ -1,0 +1,256 @@
+//! Persistent device-resident KV execution view with dirty-slot delta
+//! uploads.
+//!
+//! The pre-persistent coordinator re-marshalled the entire `[L, Hkv, cap,
+//! dh]` K/V execution view plus mask (plus, on the Quest path, freshly
+//! rebuilt page bounds) from host to device on *every* decode step — per-
+//! token cost scaled with capacity instead of with what actually changed.
+//! [`DeviceExecView`] makes the view persistent across steps: it owns the
+//! long-lived buffers for `k_exec`/`v_exec`/`mask`/`page_min`/`page_max`
+//! of one session and, each step, replays the cache's dirty-slot journal
+//! ([`crate::kvcache::DirtyLog`]) so only the journaled `(layer, head,
+//! slot)` spans ship — O(dirty slots), not O(cap).
+//!
+//! **Backend capability gate.** PJRT device buffers on this image's CPU
+//! client are immutable (`buffer_from_host_buffer` has no sub-buffer
+//! update), so the view falls back to *pre-staged host literals*: the
+//! mirrors held here are the staged upload images, maintained at O(dirty)
+//! per step and handed to the executable without ever re-reading the
+//! sequence cache. [`TransferStats`] counts the bytes an in-place-capable
+//! backend ships on this exact schedule (`bytes_uploaded`) next to the
+//! wholesale re-upload baseline (`bytes_full_equiv`); the ratio is the
+//! fig 8 serving-level win and is asserted by `benches/coordinator_hotpath`.
+//!
+//! Lifetime: a view is created lazily on a session's first decode step and
+//! must be released when the sequence retires — the scheduler charges
+//! [`DeviceExecView::device_bytes`] against its KV byte budget while the
+//! view is live (see [`crate::scheduler`]).
+
+use crate::kvcache::{DirtyLog, SequenceKvCache};
+
+use super::tensor::Tensor;
+
+/// Lifetime host→device transfer counters for one view.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TransferStats {
+    /// Wholesale uploads (first sync, capacity re-layouts).
+    pub full_uploads: u64,
+    /// Delta syncs that shipped only journaled spans.
+    pub delta_uploads: u64,
+    /// Bytes shipped by the chosen path across all syncs.
+    pub bytes_uploaded: u64,
+    /// Bytes the pre-persistent coordinator would have shipped over the
+    /// same syncs (full view re-marshalled every step) — the baseline.
+    pub bytes_full_equiv: u64,
+    /// Dirty spans applied across all delta syncs.
+    pub spans_applied: u64,
+}
+
+impl TransferStats {
+    /// Upload-traffic reduction factor vs the full-view baseline.
+    pub fn reduction_factor(&self) -> f64 {
+        if self.bytes_uploaded == 0 {
+            return 1.0;
+        }
+        self.bytes_full_equiv as f64 / self.bytes_uploaded as f64
+    }
+}
+
+/// Outcome of one [`DeviceExecView::sync`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SyncReport {
+    /// Whether this sync was a wholesale upload.
+    pub full: bool,
+    /// Host→device bytes shipped.
+    pub bytes: usize,
+    /// Dirty spans applied (0 for a wholesale upload).
+    pub spans: usize,
+}
+
+/// Per-session persistent execution view. See the module docs.
+pub struct DeviceExecView {
+    /// Layout epoch of the resident image; a cache re-layout invalidates it.
+    epoch: u64,
+    /// Pre-staged device images (host mirrors on backends without in-place
+    /// update — the capability gate in the module docs).
+    k: Tensor,
+    v: Tensor,
+    mask: Tensor,
+    pmin: Tensor,
+    pmax: Tensor,
+    /// False until the first sync lands a wholesale upload.
+    synced: bool,
+    pub stats: TransferStats,
+}
+
+impl DeviceExecView {
+    /// Allocate a view sized for `cache`'s current layout. Nothing is
+    /// resident until the first [`Self::sync`].
+    pub fn new(cache: &SequenceKvCache) -> Self {
+        let (pmin, pmax) = cache.page_meta_tensors();
+        Self {
+            epoch: cache.layout_epoch(),
+            k: Tensor::zeros(&cache.k_exec().shape),
+            v: Tensor::zeros(&cache.v_exec().shape),
+            mask: Tensor::zeros(&cache.slot_mask().shape),
+            pmin: Tensor::zeros(&pmin.shape),
+            pmax: Tensor::zeros(&pmax.shape),
+            synced: false,
+            stats: TransferStats::default(),
+        }
+    }
+
+    /// Drain `cache`'s dirty journal and bring the resident image up to
+    /// date: journaled spans ship as deltas; the first sync, a layout-epoch
+    /// change, a `full` log, or a log whose delta payload would exceed a
+    /// wholesale upload (e.g. an eviction pass that compacted every head)
+    /// ships the whole view instead.
+    pub fn sync(&mut self, cache: &mut SequenceKvCache) -> SyncReport {
+        let log = cache.drain_dirty();
+        let full = !self.synced
+            || log.full
+            || log.epoch != self.epoch
+            || log.delta_bytes(cache.dims().d_head) >= cache.full_view_bytes();
+        let bytes = if full {
+            let wholesale = DirtyLog { full: true, ..DirtyLog::default() };
+            cache.replay_dirty_into(
+                &wholesale,
+                &mut self.k,
+                &mut self.v,
+                &mut self.mask,
+                &mut self.pmin,
+                &mut self.pmax,
+            )
+        } else {
+            cache.replay_dirty_into(
+                &log,
+                &mut self.k,
+                &mut self.v,
+                &mut self.mask,
+                &mut self.pmin,
+                &mut self.pmax,
+            )
+        };
+        self.epoch = log.epoch;
+        self.synced = true;
+        self.stats.bytes_uploaded += bytes as u64;
+        self.stats.bytes_full_equiv += cache.full_view_bytes() as u64;
+        let spans = if full { 0 } else { log.spans.len() };
+        if full {
+            self.stats.full_uploads += 1;
+        } else {
+            self.stats.delta_uploads += 1;
+            self.stats.spans_applied += spans as u64;
+        }
+        SyncReport { full, bytes, spans }
+    }
+
+    /// `[L, Hkv, cap, dh]` resident keys.
+    pub fn k(&self) -> &Tensor {
+        &self.k
+    }
+
+    /// `[L, Hkv, cap, dh]` resident values.
+    pub fn v(&self) -> &Tensor {
+        &self.v
+    }
+
+    /// `[L, Hkv, cap]` resident validity mask.
+    pub fn mask(&self) -> &Tensor {
+        &self.mask
+    }
+
+    /// `[L, Hkv, P, dh]` resident Quest page lower bounds.
+    pub fn page_min(&self) -> &Tensor {
+        &self.pmin
+    }
+
+    /// `[L, Hkv, P, dh]` resident Quest page upper bounds.
+    pub fn page_max(&self) -> &Tensor {
+        &self.pmax
+    }
+
+    /// True once a sync has landed (the image is valid to execute against).
+    pub fn is_synced(&self) -> bool {
+        self.synced
+    }
+
+    /// Device bytes pinned by the resident buffers — what the scheduler
+    /// charges against its KV byte budget while the session is active.
+    pub fn device_bytes(&self) -> usize {
+        (self.k.numel() + self.v.numel() + self.mask.numel() + self.pmin.numel()
+            + self.pmax.numel())
+            * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::dual::CacheDims;
+
+    fn dims() -> CacheDims {
+        CacheDims { n_layers: 2, n_kv_heads: 2, d_head: 4, w_local: 4, page_size: 4 }
+    }
+
+    fn decoded(d: CacheDims, val: f32, gate: f32) -> (Tensor, Tensor, Tensor) {
+        (
+            Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], val),
+            Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], val + 0.5),
+            Tensor::full(&[d.n_layers, d.n_kv_heads], gate),
+        )
+    }
+
+    #[test]
+    fn first_sync_is_full_then_deltas() {
+        let d = dims();
+        let mut cache = SequenceKvCache::new(d, 16).unwrap();
+        let mut view = DeviceExecView::new(&cache);
+        assert!(!view.is_synced());
+        let r0 = view.sync(&mut cache);
+        assert!(r0.full);
+        assert_eq!(r0.bytes, cache.full_view_bytes());
+        let (kn, vn, gn) = decoded(d, 1.0, 0.9);
+        cache.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| true).unwrap();
+        let r1 = view.sync(&mut cache);
+        assert!(!r1.full);
+        assert!(r1.bytes < r0.bytes / 10, "delta {} vs full {}", r1.bytes, r0.bytes);
+        assert_eq!(view.k(), cache.k_exec());
+        assert_eq!(view.mask(), cache.slot_mask());
+        assert_eq!(view.stats.full_uploads, 1);
+        assert_eq!(view.stats.delta_uploads, 1);
+    }
+
+    #[test]
+    fn relayout_forces_wholesale_resync() {
+        let d = dims();
+        let mut cache = SequenceKvCache::new(d, 8).unwrap();
+        let mut view = DeviceExecView::new(&cache);
+        view.sync(&mut cache);
+        let (kn, vn, gn) = decoded(d, 1.0, 0.9);
+        cache.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| true).unwrap();
+        cache.ensure_capacity(16).unwrap();
+        let r = view.sync(&mut cache);
+        assert!(r.full);
+        assert_eq!(view.k().shape, cache.k_exec().shape);
+        assert_eq!(view.k(), cache.k_exec());
+        assert_eq!(view.page_min(), cache.page_meta_tensors().0);
+    }
+
+    #[test]
+    fn stats_track_reduction() {
+        let d = dims();
+        let mut cache = SequenceKvCache::new(d, 64).unwrap();
+        let mut view = DeviceExecView::new(&cache);
+        view.sync(&mut cache);
+        for pos in 0..16 {
+            let (kn, vn, gn) = decoded(d, pos as f32, 0.1);
+            cache.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| false).unwrap();
+            view.sync(&mut cache);
+        }
+        assert_eq!(view.stats.delta_uploads, 16);
+        assert!(view.stats.reduction_factor() > 4.0);
+        assert_eq!(view.mask(), cache.slot_mask());
+        assert!(view.device_bytes() >= cache.full_view_bytes());
+    }
+}

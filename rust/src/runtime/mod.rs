@@ -8,7 +8,17 @@
 //!   recorded in `manifest.json`, shipped as `params.bin` and held resident
 //!   as PJRT device buffers ([`params`]) so one compiled executable serves
 //!   every gate variant of the λ sweep.
+//!
+//! Decode inputs go through a **persistent execution view**
+//! ([`device_cache::DeviceExecView`]): the K/V slot buffers, mask, and
+//! Quest page bounds live across steps and are delta-synced from the
+//! cache's dirty-slot journal, so per-step host↔device traffic is O(dirty
+//! slots). On this image's CPU PJRT client buffers are immutable
+//! ([`ModelRuntime::supports_in_place_update`] is false), so the view's
+//! images are pre-staged host literals handed to `execute` each step — the
+//! delta accounting still measures what an in-place-capable backend ships.
 
+pub mod device_cache;
 pub mod manifest;
 pub mod params;
 pub mod tensor;
@@ -18,6 +28,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use device_cache::DeviceExecView;
 use manifest::Manifest;
 use params::ParamSet;
 use tensor::Tensor;
@@ -259,6 +270,51 @@ impl ModelRuntime {
         let k_new = out.pop().unwrap();
         let logits = out.pop().unwrap().data;
         Ok(DecodeOut { logits, k_new, v_new, g_new, q })
+    }
+
+    /// True when the PJRT backend can mutate a resident device buffer in
+    /// place. The CPU client cannot — [`DeviceExecView`] then falls back to
+    /// pre-staged host literals and this capability gate stays false; its
+    /// transfer counters report what an in-place backend would ship.
+    pub fn supports_in_place_update(&self) -> bool {
+        false
+    }
+
+    /// One decode step against a persistent execution view: the view's
+    /// pre-staged images are handed to the executable without re-reading
+    /// the sequence cache. The caller must have [`DeviceExecView::sync`]ed
+    /// the view this step.
+    pub fn decode_view(
+        &self,
+        cap: usize,
+        token: i32,
+        pos: i32,
+        view: &DeviceExecView,
+    ) -> Result<DecodeOut> {
+        self.decode(cap, token, pos, view.k(), view.v(), view.mask())
+    }
+
+    /// Fused Quest decode against a persistent execution view (page bounds
+    /// included in the resident image).
+    pub fn decode_sel_view(
+        &self,
+        cap: usize,
+        token: i32,
+        pos: i32,
+        view: &DeviceExecView,
+        budget_pages: i32,
+    ) -> Result<DecodeOut> {
+        self.decode_sel(
+            cap,
+            token,
+            pos,
+            view.k(),
+            view.v(),
+            view.mask(),
+            view.page_min(),
+            view.page_max(),
+            budget_pages,
+        )
     }
 
     /// True if a fused-selection decode executable exists for `cap`.

@@ -13,6 +13,13 @@
 //! App. K observation: multiple concurrent requests compete for one memory
 //! pool, so admission control (and, composed with it, per-sequence KV
 //! admission) decides how many sequences fit.
+//!
+//! The budget covers *both* residency classes a sequence pins: the paged
+//! host pool (`allocated_kv_bytes`) and the persistent device execution
+//! view ([`crate::runtime::device_cache::DeviceExecView`], created on the
+//! first decode step). When a sequence retires — EOS, token limit, or
+//! error — the scheduler releases its device view immediately so the bytes
+//! return to the budget before the next admission pass.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -63,6 +70,8 @@ pub struct Completion {
     pub cache_fraction: f64,
     pub kv_bytes: usize,
     pub eviction_triggers: u64,
+    /// Host→device bytes shipped by this request's persistent-view syncs.
+    pub upload_bytes: u64,
     /// Set when the request failed (e.g. prompt exceeds buckets, KV OOM).
     pub error: Option<String>,
 }
@@ -82,11 +91,19 @@ pub struct Scheduler {
     queue: VecDeque<Request>,
     active: Vec<Active>,
     rejected: u64,
+    /// Device-view bytes returned to the budget by retired sequences.
+    view_bytes_released: u64,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
-        Self { cfg, queue: VecDeque::new(), active: Vec::new(), rejected: 0 }
+        Self {
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            rejected: 0,
+            view_bytes_released: 0,
+        }
     }
 
     /// Enqueue a request; `false` means the queue is full (rejected).
@@ -115,7 +132,7 @@ impl Scheduler {
         self.queue.is_empty() && self.active.is_empty()
     }
 
-    /// KV bytes currently pinned by active sequences.
+    /// KV bytes currently pinned by active sequences (paged host pool).
     pub fn active_kv_bytes(&self) -> usize {
         self.active
             .iter()
@@ -123,7 +140,22 @@ impl Scheduler {
             .sum()
     }
 
-    fn finish(a: Active, error: Option<String>, text: String) -> Completion {
+    /// Device bytes pinned by active sequences' persistent execution views.
+    pub fn active_view_bytes(&self) -> usize {
+        self.active.iter().map(|a| a.sess.device_view_bytes()).sum()
+    }
+
+    /// Device-view bytes released back to the budget by retired sequences.
+    pub fn view_bytes_released(&self) -> u64 {
+        self.view_bytes_released
+    }
+
+    /// Retire a sequence: release its device-resident view back to the
+    /// budget, then snapshot the completion.
+    fn finish(&mut self, mut a: Active, error: Option<String>, text: String) -> Completion {
+        // Snapshot the transfer counters before the release drops them.
+        let upload_bytes = a.sess.device_transfer_stats().bytes_uploaded;
+        self.view_bytes_released += a.sess.release_device_view() as u64;
         let steps = a.generated.len().max(1);
         Completion {
             id: a.req.id,
@@ -135,6 +167,7 @@ impl Scheduler {
             cache_fraction: a.sess.cache_fraction(),
             kv_bytes: a.sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0),
             eviction_triggers: a.sess.eviction_triggers(),
+            upload_bytes,
             error,
         }
     }
@@ -144,9 +177,13 @@ impl Scheduler {
     pub fn step(&mut self, engine: &mut Engine) -> Vec<Completion> {
         let mut done = Vec::new();
 
-        // --- Admission control: slots + KV byte budget.
+        // --- Admission control: slots + KV byte budget. The budget covers
+        // the paged pool *and* the device-resident execution views; retired
+        // sequences released theirs at finish, so the check sees the
+        // recovered bytes immediately.
         while self.active.len() < self.cfg.max_active {
-            if self.queue.is_empty() || self.active_kv_bytes() >= self.cfg.kv_byte_budget {
+            let pinned = self.active_kv_bytes() + self.active_view_bytes();
+            if self.queue.is_empty() || pinned >= self.cfg.kv_byte_budget {
                 break;
             }
             let req = self.queue.pop_front().unwrap();
@@ -173,7 +210,7 @@ impl Scheduler {
                         prefill_us: 0.0,
                         decode_started: Instant::now(),
                     };
-                    done.push(Self::finish(a, Some(format!("prefill: {e:#}")), String::new()));
+                    done.push(self.finish(a, Some(format!("prefill: {e:#}")), String::new()));
                 }
             }
         }
@@ -200,7 +237,7 @@ impl Scheduler {
                 let a = self.active.swap_remove(i);
                 let text = engine.tokenizer.decode(&a.generated);
                 engine.metrics.requests_done += 1;
-                done.push(Self::finish(a, error, text));
+                done.push(self.finish(a, error, text));
             } else {
                 i += 1;
             }
@@ -250,5 +287,7 @@ mod tests {
         let s = Scheduler::new(SchedulerConfig::default());
         assert!(s.is_idle());
         assert_eq!(s.active_kv_bytes(), 0);
+        assert_eq!(s.active_view_bytes(), 0);
+        assert_eq!(s.view_bytes_released(), 0);
     }
 }

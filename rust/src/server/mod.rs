@@ -182,6 +182,8 @@ pub struct ServerStats {
     pub active: usize,
     pub rejected: u64,
     pub active_kv_bytes: usize,
+    /// Device bytes pinned by active sequences' persistent exec views.
+    pub active_view_bytes: usize,
 }
 
 impl ServerStats {
@@ -193,6 +195,7 @@ impl ServerStats {
             .set("active", self.active)
             .set("rejected", self.rejected)
             .set("active_kv_bytes", self.active_kv_bytes)
+            .set("active_view_bytes", self.active_view_bytes)
     }
 }
 
@@ -207,7 +210,8 @@ pub fn completion_to_json(c: &Completion) -> Json {
         .set("decode_us_mean", c.decode_us_mean)
         .set("cache_fraction", c.cache_fraction)
         .set("kv_bytes", c.kv_bytes)
-        .set("eviction_triggers", c.eviction_triggers);
+        .set("eviction_triggers", c.eviction_triggers)
+        .set("upload_bytes", c.upload_bytes);
     if let Some(e) = &c.error {
         j = j.set("error", e.as_str());
     }
@@ -226,6 +230,7 @@ pub fn completion_from_json(j: &Json) -> Completion {
         cache_fraction: f("cache_fraction"),
         kv_bytes: f("kv_bytes") as usize,
         eviction_triggers: f("eviction_triggers") as u64,
+        upload_bytes: f("upload_bytes") as u64,
         error: j.get("error").and_then(Json::as_str).map(str::to_string),
     }
 }
@@ -313,6 +318,7 @@ where
                             active: sched.active(),
                             rejected: sched.rejected(),
                             active_kv_bytes: sched.active_kv_bytes(),
+                            active_view_bytes: sched.active_view_bytes(),
                         });
                     }
                 }
@@ -349,6 +355,7 @@ fn error_completion(id: u64, msg: &str) -> Completion {
         cache_fraction: 0.0,
         kv_bytes: 0,
         eviction_triggers: 0,
+        upload_bytes: 0,
         error: Some(msg.to_string()),
     }
 }
@@ -472,6 +479,7 @@ impl Client {
             active: f("active") as usize,
             rejected: f("rejected") as u64,
             active_kv_bytes: f("active_kv_bytes") as usize,
+            active_view_bytes: f("active_view_bytes") as usize,
         })
     }
 }
@@ -559,6 +567,7 @@ mod tests {
             cache_fraction: 0.4,
             kv_bytes: 4096,
             eviction_triggers: 2,
+            upload_bytes: 1536,
             error: None,
         };
         let j = completion_to_json(&c);
@@ -566,6 +575,7 @@ mod tests {
         assert_eq!(b.id, 3);
         assert_eq!(b.text, "abc");
         assert_eq!(b.kv_bytes, 4096);
+        assert_eq!(b.upload_bytes, 1536);
         assert!(b.error.is_none());
     }
 

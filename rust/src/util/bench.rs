@@ -5,8 +5,14 @@
 //! targets are `harness = false` binaries that call [`Bench::run`] and
 //! print one row per configuration; rows are also appended as JSON lines
 //! to `target/bench_results.jsonl` for the EXPERIMENTS.md tables.
+//!
+//! [`BenchReport`] additionally collects a whole target's rows plus
+//! free-form counters (e.g. the persistent-view upload-byte totals) into
+//! one machine-readable `BENCH_<name>.json` file, so the perf trajectory
+//! is diffable across PRs (`make bench`).
 
 use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use super::json::Json;
@@ -157,6 +163,54 @@ impl Bench {
     }
 }
 
+/// Machine-readable report for one bench target: accumulates
+/// [`BenchResult`] rows and named counters, serialized as one JSON object
+/// (`{"bench": ..., "results": [...], "counters": {...}}`).
+pub struct BenchReport {
+    name: String,
+    results: Vec<BenchResult>,
+    counters: Json,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), results: Vec::new(), counters: Json::obj() }
+    }
+
+    /// Record a finished case (chain with [`Bench::run`]).
+    pub fn record(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Attach a named counter (upload bytes, reduction ratios, config).
+    /// Re-setting a key overwrites the previous value ([`Json::set`]).
+    pub fn counter(&mut self, key: &str, v: impl Into<Json>) {
+        let counters = std::mem::replace(&mut self.counters, Json::Null);
+        self.counters = counters.set(key, v);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self.results.iter().map(BenchResult::to_json).collect();
+        Json::obj()
+            .set("bench", self.name.as_str())
+            .set("results", Json::Arr(rows))
+            .set("counters", self.counters.clone())
+    }
+
+    /// Write the report to `path` (pretty-printed).
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    /// Write to the conventional `BENCH_<name>.json` in the current
+    /// directory; returns the path written.
+    pub fn write_default(&self) -> std::io::Result<PathBuf> {
+        let path = PathBuf::from(format!("BENCH_{}.json", self.name));
+        self.write(&path)?;
+        Ok(path)
+    }
+}
+
 fn append_jsonl(r: &BenchResult) {
     let path = std::path::Path::new("target").join("bench_results.jsonl");
     if let Some(dir) = path.parent() {
@@ -194,6 +248,47 @@ mod tests {
         let (r, v) = b.once("one", || 42);
         assert_eq!(v, 42);
         assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn report_serializes_rows_and_counters() {
+        let b = Bench {
+            measure: Duration::from_millis(5),
+            warmup: Duration::from_millis(1),
+            max_iters: 1000,
+            min_iters: 3,
+        };
+        let mut report = BenchReport::new("unit");
+        report.record(b.run("case_a", || {
+            std::hint::black_box(1 + 1);
+        }));
+        report.counter("upload_bytes_per_step", 4160usize);
+        report.counter("upload_bytes_per_step", 4161usize); // overwrite
+        report.counter("reduction_x", 1090.5);
+        let j = report.to_json();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("unit"));
+        let rows = j.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("case_a"));
+        let counters = j.get("counters").unwrap();
+        assert_eq!(counters.get("upload_bytes_per_step").and_then(Json::as_usize), Some(4161));
+        assert_eq!(counters.get("reduction_x").and_then(Json::as_f64), Some(1090.5));
+        // Round-trips through the codec.
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(back.get("bench").and_then(Json::as_str), Some("unit"));
+    }
+
+    #[test]
+    fn report_writes_file() {
+        let mut report = BenchReport::new("writetest");
+        report.counter("k", 1usize);
+        let dir = std::env::temp_dir().join("wgkv_bench_report_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_writetest.json");
+        report.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).unwrap().get("counters").is_some());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

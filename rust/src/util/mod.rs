@@ -18,6 +18,6 @@ pub mod prop;
 pub mod rng;
 
 pub use args::Args;
-pub use bench::{Bench, BenchResult};
+pub use bench::{Bench, BenchReport, BenchResult};
 pub use json::Json;
 pub use rng::Rng;

@@ -8,6 +8,7 @@
 //! token positions, promotion/discard counters, exec-mask occupancy, and
 //! paged-pool accounting.
 
+use wgkv::eviction::{SnapKvConfig, SnapKvEvictor};
 use wgkv::kvcache::{dual::CacheDims, SequenceKvCache};
 use wgkv::prop_assert;
 use wgkv::runtime::tensor::Tensor;
@@ -279,6 +280,129 @@ fn capacity_relayout_preserves_residents() {
             })
             .collect();
         prop_assert!(snapshot == after, "relayout changed resident sets");
+        Ok(())
+    });
+}
+
+#[test]
+fn dirty_journal_replay_reconstructs_view() {
+    // After ANY interleaving of insert (ring wrap + lazy promotion),
+    // SnapKV-driven eviction, direct eviction, and capacity re-layout,
+    // replaying the drained dirty journal onto a stale copy of the
+    // execution view must reproduce the live view bit-for-bit — the
+    // correctness contract the persistent DeviceExecView relies on.
+    forall(0x77, |rng| {
+        let d = dims(rng);
+        let gqa = 2;
+        let cap0 = d.w_local + rng.usize(2, 16);
+        let mut cache = SequenceKvCache::new(d, cap0).unwrap();
+        let mut pos: i64 = 0;
+        let insert = |cache: &mut SequenceKvCache, rng: &mut Rng, pos: &mut i64| {
+            if cache.required_slots() > cache.capacity() {
+                let grow = cache.required_slots() + rng.usize(0, 8);
+                cache.ensure_capacity(grow).unwrap();
+            }
+            let gate = rng.f32();
+            let (k, v, g) = decoded(d, *pos, gate);
+            cache.insert_decoded(&k, &v, &g, *pos, |_, _, gt| gt >= TAU).unwrap();
+            *pos += 1;
+        };
+        // Warm up past at least one ring wrap, then mark the sync point.
+        for _ in 0..rng.usize(d.w_local + 1, 3 * d.w_local) {
+            insert(&mut cache, rng, &mut pos);
+        }
+        let _ = cache.drain_dirty();
+        let mut k_st = cache.k_exec().clone();
+        let mut v_st = cache.v_exec().clone();
+        let mut m_st = cache.slot_mask().clone();
+        let (p0, p1) = cache.page_meta_tensors();
+        let (mut pmin_st, mut pmax_st) = (p0.clone(), p1.clone());
+
+        let mut ev = SnapKvEvictor::new(SnapKvConfig {
+            budget_per_head: rng.usize(1, 5),
+            evict_frac: 0.5,
+            w_obs: 4,
+            w_pool: 3,
+        });
+        let n_ops = rng.usize(1, 40);
+        for _ in 0..n_ops {
+            match rng.usize(0, 6) {
+                0..=2 => insert(&mut cache, rng, &mut pos),
+                3 => {
+                    // Direct eviction with a random keep mask.
+                    let l = rng.usize(0, d.n_layers);
+                    let h = rng.usize(0, d.n_kv_heads);
+                    let n = cache.global_len(l, h);
+                    if n > 0 {
+                        let keep: Vec<bool> = (0..n).map(|_| rng.bool(0.6)).collect();
+                        cache.evict_global(l, h, &keep).unwrap();
+                    }
+                }
+                4 => {
+                    // SnapKV-driven eviction (observe random queries first).
+                    let hq = d.n_kv_heads * gqa;
+                    let total = d.n_layers * hq * d.d_head;
+                    let q = Tensor::from_vec(
+                        &[d.n_layers, hq, d.d_head],
+                        (0..total).map(|_| rng.f32()).collect(),
+                    )
+                    .unwrap();
+                    ev.observe(q);
+                    ev.maybe_evict(&mut cache, gqa).unwrap();
+                }
+                _ => {
+                    // Capacity re-layout (grow or shrink-to-required).
+                    let new_cap = cache.required_slots() + rng.usize(0, 16);
+                    cache.ensure_capacity(new_cap).unwrap();
+                }
+            }
+        }
+
+        let log = cache.drain_dirty();
+        cache.replay_dirty_into(&log, &mut k_st, &mut v_st, &mut m_st, &mut pmin_st, &mut pmax_st);
+        prop_assert!(k_st == *cache.k_exec(), "k_exec mismatch after replay");
+        prop_assert!(v_st == *cache.v_exec(), "v_exec mismatch after replay");
+        prop_assert!(m_st == *cache.slot_mask(), "mask mismatch after replay");
+        let (pmin, pmax) = cache.page_meta_tensors();
+        prop_assert!(pmin_st == *pmin, "pmin mismatch after replay");
+        prop_assert!(pmax_st == *pmax, "pmax mismatch after replay");
+        // The incrementally-maintained page bounds agree with the
+        // from-scratch rebuild (the pre-incremental reference).
+        let (rmin, rmax) = cache.rebuild_page_meta_tensors();
+        prop_assert!(rmin == *pmin, "incremental pmin diverged from rebuild");
+        prop_assert!(rmax == *pmax, "incremental pmax diverged from rebuild");
+        Ok(())
+    });
+}
+
+#[test]
+fn resident_counter_matches_head_len_sum() {
+    forall(0x88, |rng| {
+        let d = dims(rng);
+        let n_ops = rng.usize(1, 50);
+        let mut cache = SequenceKvCache::new(d, n_ops + 1 + d.w_local).unwrap();
+        for pos in 0..n_ops as i64 {
+            let gate = rng.f32();
+            let (k, v, g) = decoded(d, pos, gate);
+            cache.insert_decoded(&k, &v, &g, pos, |_, _, gt| gt >= TAU).unwrap();
+        }
+        // Random eviction on a random head.
+        let l = rng.usize(0, d.n_layers);
+        let h = rng.usize(0, d.n_kv_heads);
+        let n = cache.global_len(l, h);
+        if n > 0 {
+            let keep: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+            cache.evict_global(l, h, &keep).unwrap();
+        }
+        let sum: usize = (0..d.n_layers)
+            .flat_map(|l| (0..d.n_kv_heads).map(move |h| (l, h)))
+            .map(|(l, h)| cache.head_len(l, h))
+            .sum();
+        prop_assert!(
+            cache.resident_tokens() == sum,
+            "running counter {} != head-len sum {sum}",
+            cache.resident_tokens()
+        );
         Ok(())
     });
 }
