@@ -23,10 +23,29 @@
 //!    post-write eviction bounds the global region (App. K); the three
 //!    primitives compose.
 //!
-//! The engine is synchronous and single-sequence per call; concurrency is
-//! the scheduler's job ([`crate::scheduler`]), which also charges each
-//! session's resident view bytes against the KV budget and releases them
-//! when the sequence retires.
+//! Two decode entry points exist:
+//!
+//! * [`Engine::decode_step`] — single-session decode against the
+//!   session's own [`DeviceExecView`];
+//! * [`Engine::decode_batch`] — **continuous batched decode**: one fused
+//!   step over up to `max_decode_batch` sessions, each bound to a *lane*
+//!   of the engine's shared
+//!   [`DeviceViewPool`](crate::runtime::device_cache::DeviceViewPool).
+//!   Per-sequence capacities pad into the pool's shared
+//!   `[B, L, Hkv, cap_max, dh]` staging (tails masked invalid), every
+//!   lane is delta-synced from its session's dirty journal, and the step
+//!   executes against the pooled image. The exported executables are
+//!   batch-1 on this testbed, so the fused step dispatches per lane —
+//!   each call reading its lane's contiguous block of the shared staging
+//!   — and a genuinely batched executable drops in without touching the
+//!   sync path. Greedy outputs are token-identical to sequential decode:
+//!   keys are stored post-RoPE, so slot placement carries no positional
+//!   meaning and padded slots are excluded exactly by the mask.
+//!
+//! Concurrency is the scheduler's job ([`crate::scheduler`]), which plans
+//! the batches, charges each session's resident view bytes — and the
+//! pooled bytes, once — against the KV budget, and releases lanes when
+//! sequences retire.
 
 use std::path::Path;
 use std::time::Instant;
@@ -38,10 +57,10 @@ use crate::eviction::{SnapKvConfig, SnapKvEvictor};
 use crate::kvcache::{dual::CacheDims, CacheStats, SequenceKvCache};
 use crate::metrics::EngineMetrics;
 use crate::model::{ByteTokenizer, Sampler};
-use crate::runtime::device_cache::{DeviceExecView, TransferStats};
+use crate::runtime::device_cache::{DeviceExecView, DeviceViewPool, LaneId, TransferStats};
 use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::Tensor;
-use crate::runtime::ModelRuntime;
+use crate::runtime::{DecodeOut, ModelRuntime};
 use crate::selection::QuestConfig;
 
 /// Engine-level configuration.
@@ -84,6 +103,10 @@ pub struct Session {
     /// Persistent device execution view, created on the first decode step
     /// and delta-synced from the cache's dirty journal thereafter.
     device_view: Option<DeviceExecView>,
+    /// Lane of the engine's shared [`DeviceViewPool`], bound by the first
+    /// [`Engine::decode_batch`] that schedules this session and returned
+    /// by [`Engine::release_lane`] when the sequence retires.
+    lane: Option<LaneId>,
     /// Absolute position of the next token.
     pos: usize,
     /// Prompt length (for normalized cache-size reporting).
@@ -112,9 +135,17 @@ impl Session {
         self.device_view.as_ref().map(|v| v.device_bytes()).unwrap_or(0)
     }
 
-    /// Lifetime host→device transfer counters of the view.
+    /// Lifetime host→device transfer counters of the session's *owned*
+    /// view. Pooled-lane counters live in the engine's pool; use
+    /// [`Engine::session_transfer_stats`] for the combined number.
     pub fn device_transfer_stats(&self) -> TransferStats {
         self.device_view.as_ref().map(|v| v.stats).unwrap_or_default()
+    }
+
+    /// The session's checked-out pool lane, if it has been scheduled into
+    /// a batched decode step.
+    pub fn pool_lane(&self) -> Option<LaneId> {
+        self.lane
     }
 
     /// Drop the device-resident view, returning the bytes freed — called
@@ -203,6 +234,9 @@ pub struct Engine {
     pub tokenizer: ByteTokenizer,
     pub metrics: EngineMetrics,
     cfg: EngineConfig,
+    /// Shared staged execution buffers for batched decode; lanes are bound
+    /// to sessions by [`Self::decode_batch`] and recycled across sessions.
+    view_pool: DeviceViewPool,
 }
 
 impl Engine {
@@ -210,7 +244,13 @@ impl Engine {
     pub fn load(dir: impl AsRef<Path>, cfg: EngineConfig) -> Result<Self> {
         let runtime = ModelRuntime::load(dir).context("loading model runtime")?;
         let tokenizer = ByteTokenizer::from_dims(&runtime.manifest.model);
-        Ok(Self { runtime, tokenizer, metrics: EngineMetrics::new(), cfg })
+        Ok(Self {
+            runtime,
+            tokenizer,
+            metrics: EngineMetrics::new(),
+            cfg,
+            view_pool: DeviceViewPool::new(),
+        })
     }
 
     pub fn dims(&self) -> &ModelDims {
@@ -253,6 +293,7 @@ impl Engine {
             evictor: opts.snapkv.map(SnapKvEvictor::new),
             cache: None,
             device_view: None,
+            lane: None,
             pos: 0,
             prompt_len: 0,
             last_logits: Vec::new(),
@@ -405,6 +446,17 @@ impl Engine {
             self.runtime.decode_view(cap, token, sess.pos as i32, view)?
         };
 
+        self.apply_decode_out(sess, out, m.gqa_group)?;
+        self.metrics.decode_step.record(t0.elapsed());
+        self.metrics.generated_tokens += 1;
+        Ok(())
+    }
+
+    /// Post-execute cache update shared by [`Self::decode_step`] and
+    /// [`Self::decode_batch`]: insert the decoded token (Lazy Promotion on
+    /// the ring victim), run optional SnapKV eviction, and roll the
+    /// session state forward to the next position.
+    fn apply_decode_out(&mut self, sess: &mut Session, out: DecodeOut, gqa_group: usize) -> Result<()> {
         let t1 = Instant::now();
         let cache = sess.cache.as_mut().unwrap();
         let policy = &sess.policy;
@@ -413,19 +465,248 @@ impl Engine {
         })?;
         if let Some(ev) = &mut sess.evictor {
             ev.observe(out.q.clone());
-            let fired = ev.maybe_evict(cache, m.gqa_group)?;
+            let fired = ev.maybe_evict(cache, gqa_group)?;
             if fired > 0 {
                 self.metrics.eviction_triggers += 1;
             }
         }
         self.metrics.cache_update.record(t1.elapsed());
-
         sess.last_q = Some(out.q);
         sess.last_logits = out.logits;
         sess.pos += 1;
-        self.metrics.decode_step.record(t0.elapsed());
-        self.metrics.generated_tokens += 1;
         Ok(())
+    }
+
+    /// One continuous-batching decode step: feed `tokens[i]` to
+    /// `sessions[i]` for every lane of the batch, against the engine's
+    /// shared [`DeviceViewPool`].
+    ///
+    /// Sessions are bound to pool lanes on their first batched step and
+    /// keep them until [`Self::release_lane`]; per-sequence capacities pad
+    /// into the pool's `[B, L, Hkv, cap_max, dh]` staging (every lane
+    /// executes at the pool capacity, which only grows and always matches
+    /// an exported decode executable — padded slots are masked invalid,
+    /// and keys are stored post-RoPE, so greedy outputs are
+    /// token-identical to [`Self::decode_step`]). Each lane is
+    /// delta-synced from its session's dirty journal — O(dirty slots) per
+    /// token, exactly the per-session protocol — before the step
+    /// executes.
+    ///
+    /// The caller (the scheduler's batch planner) groups sessions of one
+    /// capacity bucket per call; an error is batch-wide (the scheduler
+    /// retires the whole group with it).
+    pub fn decode_batch(&mut self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<()> {
+        if sessions.len() != tokens.len() {
+            bail!("decode_batch: {} sessions vs {} tokens", sessions.len(), tokens.len());
+        }
+        if sessions.is_empty() {
+            return Ok(());
+        }
+        let m = self.dims().clone();
+        let t0 = Instant::now();
+        // Grow per-session capacity where needed, then fix the group's
+        // padded capacity (the pool never shrinks mid-flight).
+        let mut cap_group = self.view_pool.capacity();
+        for sess in sessions.iter_mut() {
+            let cache = sess.cache.as_mut().context("decode before prefill")?;
+            let required = cache.required_slots();
+            if required > cache.capacity() {
+                let cap = self
+                    .runtime
+                    .pick_decode_capacity(required)
+                    .map_err(|e| anyhow!("KV OOM at decode (pos {}): {e}", sess.pos))?;
+                cache.ensure_capacity(cap)?;
+            }
+            cap_group = cap_group.max(cache.capacity());
+        }
+        // Bind lanes first: checkouts and capacity growth re-layout the
+        // pool and wholesale-invalidate its staging, so every re-layout
+        // must land before the first lane sync of the step (otherwise a
+        // later binding would wipe an earlier lane's fresh image).
+        self.view_pool.ensure_capacity(cap_group);
+        for sess in sessions.iter_mut() {
+            if sess.lane.is_none() {
+                let cache_dims = sess.cache.as_ref().unwrap().dims();
+                sess.lane = Some(self.view_pool.checkout(cache_dims, cap_group));
+            }
+        }
+        // Delta-sync each lane from its session's journal. A fresh
+        // checkout, a cache re-layout, or a pool re-layout syncs
+        // wholesale; steady state ships only dirty spans.
+        for sess in sessions.iter_mut() {
+            let cache = sess.cache.as_mut().unwrap();
+            let lane = sess.lane.unwrap();
+            let report = self.view_pool.sync_lane(lane, cache);
+            self.metrics.upload_bytes += report.bytes as u64;
+            self.metrics.upload_full_equiv_bytes += cache.full_view_bytes() as u64;
+            if report.full {
+                self.metrics.view_full_uploads += 1;
+            } else {
+                self.metrics.view_delta_uploads += 1;
+            }
+        }
+        let cap_exec = self.view_pool.capacity();
+        // Execute every lane against the shared staged buffers. The
+        // exported executables are batch-1 on this testbed, so the fused
+        // step dispatches per lane, each call reading its lane's
+        // contiguous block of the pooled staging; a batched executable
+        // replaces this loop without touching the sync path above.
+        for (sess, &tok) in sessions.iter_mut().zip(tokens.iter()) {
+            let sess: &mut Session = sess;
+            let lane = sess.lane.unwrap();
+            let pos = sess.pos as i32;
+            let out = if let Some(q) = &sess.quest {
+                let cache_cap = sess.cache.as_ref().unwrap().capacity();
+                if cache_cap == cap_exec && self.runtime.has_decode_sel(cap_exec) {
+                    // Fused path over the pooled lane — the lane is
+                    // unpadded, so the kernel's ring-window geometry holds.
+                    self.runtime.decode_sel_slices(
+                        cap_exec,
+                        tok,
+                        pos,
+                        self.view_pool.lane_k(lane),
+                        self.view_pool.lane_v(lane),
+                        self.view_pool.lane_mask(lane),
+                        self.view_pool.lane_page_min(lane),
+                        self.view_pool.lane_page_max(lane),
+                        self.view_pool.pages(),
+                        q.budget_pages(m.page_size),
+                    )?
+                } else if self.runtime.has_decode_sel(cache_cap) {
+                    // Padded lane but a fused executable exists at the
+                    // session's own capacity: run it straight from the
+                    // cache's staged view. Selection stays on the
+                    // *current* token's queries — exactly the sequential
+                    // decode_step path, preserving greedy token-identity
+                    // — at the cost of bypassing the pooled staging for
+                    // this call (the lane stays synced for the next
+                    // unpadded or non-selective step).
+                    let cache = sess.cache.as_ref().unwrap();
+                    let (pmin, pmax) = cache.page_meta_tensors();
+                    self.runtime.decode_sel(
+                        cache_cap,
+                        tok,
+                        pos,
+                        cache.k_exec(),
+                        cache.v_exec(),
+                        cache.slot_mask(),
+                        pmin,
+                        pmax,
+                        q.budget_pages(m.page_size),
+                    )?
+                } else if let Some(prev_q) = &sess.last_q {
+                    // Host fallback: select against the cache's *own*
+                    // geometry (the lane may be padded), then embed the
+                    // selected mask into the lane layout.
+                    let cache = sess.cache.as_ref().unwrap();
+                    let (pmin, pmax) = cache.page_meta_tensors();
+                    let masked = crate::selection::host_selected_mask(
+                        cache.slot_mask(),
+                        prev_q,
+                        pmin,
+                        pmax,
+                        m.gqa_group,
+                        m.page_size,
+                        m.w_local,
+                        q.budget_pages(m.page_size) as usize,
+                    );
+                    let mut lane_mask = vec![0.0f32; m.n_layers * m.n_kv_heads * cap_exec];
+                    for l in 0..m.n_layers {
+                        for h in 0..m.n_kv_heads {
+                            let dst = (l * m.n_kv_heads + h) * cap_exec;
+                            lane_mask[dst..dst + cache_cap]
+                                .copy_from_slice(masked.slice_at(&[l, h]));
+                        }
+                    }
+                    self.runtime.decode_slices(
+                        cap_exec,
+                        tok,
+                        pos,
+                        self.view_pool.lane_k(lane),
+                        self.view_pool.lane_v(lane),
+                        &lane_mask,
+                    )?
+                } else {
+                    // First decode step with no query history: read all.
+                    self.runtime.decode_slices(
+                        cap_exec,
+                        tok,
+                        pos,
+                        self.view_pool.lane_k(lane),
+                        self.view_pool.lane_v(lane),
+                        self.view_pool.lane_mask(lane),
+                    )?
+                }
+            } else {
+                self.runtime.decode_slices(
+                    cap_exec,
+                    tok,
+                    pos,
+                    self.view_pool.lane_k(lane),
+                    self.view_pool.lane_v(lane),
+                    self.view_pool.lane_mask(lane),
+                )?
+            };
+            self.apply_decode_out(sess, out, m.gqa_group)?;
+        }
+        let n = sessions.len() as u32;
+        let per_token = t0.elapsed() / n;
+        for _ in 0..n {
+            self.metrics.decode_step.record(per_token);
+        }
+        self.metrics.generated_tokens += n as u64;
+        self.metrics.batch_steps += 1;
+        self.metrics.batch_lanes += n as u64;
+        Ok(())
+    }
+
+    /// The shared device-view pool backing batched decode (read-only; the
+    /// scheduler polls lane occupancy and pooled bytes through this).
+    pub fn view_pool(&self) -> &DeviceViewPool {
+        &self.view_pool
+    }
+
+    /// Device bytes pinned by the shared view pool — charged against the
+    /// scheduler's KV byte budget exactly **once**, however many sessions
+    /// hold lanes.
+    pub fn pooled_view_bytes(&self) -> usize {
+        self.view_pool.device_bytes()
+    }
+
+    /// Bytes one pool lane would pin at capacity `cap` — the planning
+    /// unit [`crate::scheduler::plan_decode_batches`] uses to bound
+    /// pooled bytes against the KV budget before lanes are checked out.
+    pub fn lane_view_bytes(&self, cap: usize) -> usize {
+        DeviceViewPool::lane_bytes(self.cache_dims(), cap)
+    }
+
+    /// Return a retiring session's pool lane for recycling; `false` if the
+    /// session never held one. The pooled bytes stay pinned (and charged,
+    /// once) until [`Self::trim_view_pool`].
+    pub fn release_lane(&mut self, sess: &mut Session) -> bool {
+        match sess.lane.take() {
+            Some(lane) => {
+                self.view_pool.release(lane);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Free the pooled buffers once every lane has been returned; returns
+    /// the bytes released back to the KV budget (0 while lanes are out).
+    pub fn trim_view_pool(&mut self) -> usize {
+        self.view_pool.trim()
+    }
+
+    /// A session's lifetime host→device transfer counters across both its
+    /// owned per-session view and its pooled lane (if any).
+    pub fn session_transfer_stats(&self, sess: &Session) -> TransferStats {
+        let mut t = sess.device_transfer_stats();
+        if let Some(lane) = sess.lane {
+            t.accumulate(self.view_pool.lane_stats(lane));
+        }
+        t
     }
 
     /// Prefill + autoregressive decode until EOS or `max_new` tokens.

@@ -494,6 +494,81 @@ impl SequenceKvCache {
         log.delta_bytes(dh)
     }
 
+    /// Lane-keyed variant of [`Self::replay_dirty_into`] for batched
+    /// decode: copy the regions named by `log` into lane `lane` of
+    /// *batched* `[B, L, Hkv, cap_b, dh]` staging buffers (a
+    /// [`crate::runtime::device_cache::DeviceViewPool`]), where
+    /// `cap_b >= self.capacity()`.
+    ///
+    /// Slot indices are preserved: the lane prefix `[0, cap)` holds this
+    /// cache's own layout (global region then ring), so the *same* dirty
+    /// journal drives per-session views and pooled lanes — spans never
+    /// need re-basing. The padding tail `[cap, cap_b)` is only written by
+    /// a `full` replay, which zeroes it and masks it invalid (delta spans
+    /// cannot reach it). Returns the host→device bytes the application
+    /// represents, mirroring [`Self::replay_dirty_into`].
+    pub fn replay_dirty_into_lane(
+        &self,
+        log: &DirtyLog,
+        lane: usize,
+        k: &mut Tensor,
+        v: &mut Tensor,
+        mask: &mut Tensor,
+        pmin: &mut Tensor,
+        pmax: &mut Tensor,
+    ) -> usize {
+        let d = self.dims;
+        let dh = d.d_head;
+        let cap_b = k.shape[3];
+        let pages_b = pmin.shape[3];
+        let p = self.pmin_exec.shape[2];
+        debug_assert!(
+            cap_b >= self.cap && pages_b >= p,
+            "lane geometry ({cap_b} slots, {pages_b} pages) smaller than cache ({}, {p})",
+            self.cap
+        );
+        if log.full {
+            for l in 0..d.n_layers {
+                for h in 0..d.n_kv_heads {
+                    let kd = k.slice_at_mut(&[lane, l, h]);
+                    kd[..self.cap * dh].copy_from_slice(self.k_exec.slice_at(&[l, h]));
+                    kd[self.cap * dh..].fill(0.0);
+                    let vd = v.slice_at_mut(&[lane, l, h]);
+                    vd[..self.cap * dh].copy_from_slice(self.v_exec.slice_at(&[l, h]));
+                    vd[self.cap * dh..].fill(0.0);
+                    let md = mask.slice_at_mut(&[lane, l, h]);
+                    md[..self.cap].copy_from_slice(self.mask.slice_at(&[l, h]));
+                    md[self.cap..].fill(0.0);
+                    let pn = pmin.slice_at_mut(&[lane, l, h]);
+                    pn[..p * dh].copy_from_slice(self.pmin_exec.slice_at(&[l, h]));
+                    pn[p * dh..].fill(f32::INFINITY);
+                    let px = pmax.slice_at_mut(&[lane, l, h]);
+                    px[..p * dh].copy_from_slice(self.pmax_exec.slice_at(&[l, h]));
+                    px[p * dh..].fill(f32::NEG_INFINITY);
+                }
+            }
+            return self.full_view_bytes();
+        }
+        for s in &log.spans {
+            let (l, h) = (s.layer as usize, s.head as usize);
+            let (lo, hi) = (s.lo as usize, s.hi as usize);
+            k.slice_at_mut(&[lane, l, h])[lo * dh..hi * dh]
+                .copy_from_slice(&self.k_exec.slice_at(&[l, h])[lo * dh..hi * dh]);
+            v.slice_at_mut(&[lane, l, h])[lo * dh..hi * dh]
+                .copy_from_slice(&self.v_exec.slice_at(&[l, h])[lo * dh..hi * dh]);
+            mask.slice_at_mut(&[lane, l, h])[lo..hi]
+                .copy_from_slice(&self.mask.slice_at(&[l, h])[lo..hi]);
+        }
+        for &(l, h, pg) in &log.meta {
+            let src = [l as usize, h as usize, pg as usize];
+            pmin.slice_at_mut(&[lane, src[0], src[1], src[2]])
+                .copy_from_slice(self.pmin_exec.slice_at(&src));
+            pmax.slice_at_mut(&[lane, src[0], src[1], src[2]])
+                .copy_from_slice(self.pmax_exec.slice_at(&src));
+        }
+        log.delta_bytes(dh)
+    }
+
     // -- writes ----------------------------------------------------------------
 
     /// Append a token to (l, h)'s Global Cache: pool write, exec-view write,
@@ -1028,6 +1103,57 @@ mod tests {
         assert_eq!(&vs, c.v_exec());
         assert_eq!(&ms, c.slot_mask());
         assert_eq!((&pmin, &pmax), c.page_meta_tensors());
+    }
+
+    #[test]
+    fn lane_replay_agrees_with_per_session_replay() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        let (k, v, g) = prefill_tensors(6);
+        c.populate_from_prefill(&k, &v, &g, 6, |_, _, _, gate| gate >= 0.1).unwrap();
+        let _ = c.drain_dirty();
+        // Per-session mirrors and a padded 2-lane batch buffer (cap 16 -> 24).
+        let mut ks = c.k_exec().clone();
+        let mut vs = c.v_exec().clone();
+        let mut ms = c.slot_mask().clone();
+        let (p0, p1) = c.page_meta_tensors();
+        let (mut pmin, mut pmax) = (p0.clone(), p1.clone());
+        let (l, h, cap_b, dh) = (d.n_layers, d.n_kv_heads, 24, d.d_head);
+        let pages_b = (cap_b - d.w_local) / d.page_size;
+        let mut bk = Tensor::zeros(&[2, l, h, cap_b, dh]);
+        let mut bv = Tensor::zeros(&[2, l, h, cap_b, dh]);
+        let mut bm = Tensor::zeros(&[2, l, h, cap_b]);
+        let mut bpmin = Tensor::full(&[2, l, h, pages_b, dh], f32::INFINITY);
+        let mut bpmax = Tensor::full(&[2, l, h, pages_b, dh], f32::NEG_INFINITY);
+        let full = DirtyLog { full: true, ..DirtyLog::default() };
+        c.replay_dirty_into_lane(&full, 1, &mut bk, &mut bv, &mut bm, &mut bpmin, &mut bpmax);
+        for pos in 6..11 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+            let log = c.drain_dirty();
+            let a = c.replay_dirty_into(&log, &mut ks, &mut vs, &mut ms, &mut pmin, &mut pmax);
+            let b =
+                c.replay_dirty_into_lane(&log, 1, &mut bk, &mut bv, &mut bm, &mut bpmin, &mut bpmax);
+            assert_eq!(a, b, "both replay flavors represent the same upload bytes");
+        }
+        // Lane 1's prefix must match the per-session mirrors bit for bit;
+        // its padding tail stays masked; lane 0 was never written.
+        for li in 0..l {
+            for hi in 0..h {
+                let lane_k = &bk.slice_at(&[1, li, hi])[..16 * dh];
+                assert_eq!(lane_k, ks.slice_at(&[li, hi]));
+                let lane_m = bm.slice_at(&[1, li, hi]);
+                assert_eq!(&lane_m[..16], ms.slice_at(&[li, hi]));
+                assert!(lane_m[16..].iter().all(|&x| x == 0.0));
+                for pg in 0..pmin.shape[2] {
+                    assert_eq!(
+                        bpmin.slice_at(&[1, li, hi, pg]),
+                        pmin.slice_at(&[li, hi, pg])
+                    );
+                }
+            }
+        }
+        assert!(bm.slice_at(&[0]).iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //!   owns the paper's dual Local/Global paged cache with lazy promotion
 //!   ([`kvcache`]), the admission policies ([`admission`]), read-time
 //!   selection ([`selection`]), post-write eviction ([`eviction`]), the
-//!   serving engine ([`engine`]), continuous batching ([`scheduler`]), a
-//!   tokio server ([`server`]), workload generators ([`workload`]), and the
+//!   serving engine ([`engine`]), continuous batched decode over a shared
+//!   device-view pool ([`scheduler`]), a threaded TCP JSON-lines server
+//!   ([`server`]), workload generators ([`workload`]), and the
 //!   H200 analytic cost model used to reproduce the paper's latency/memory
 //!   figures ([`costmodel`]).
 //!
@@ -37,9 +38,20 @@
 //! traffic is O(dirty slots) per token, not O(capacity). Wholesale
 //! uploads happen exactly twice per regime: the first step after prefill,
 //! and after a capacity re-layout (which bumps the view's layout epoch).
-//! The scheduler charges each session's resident view against its KV byte
-//! budget and releases it when the sequence retires; `make bench` tracks
-//! the full-vs-delta upload bytes in `BENCH_coordinator.json`.
+//!
+//! Under continuous batching the same protocol runs pooled: the engine
+//! owns one [`runtime::device_cache::DeviceViewPool`] — a shared
+//! `[B, L, Hkv, cap, dh]` staging buffer whose *lanes* are checked out by
+//! sessions scheduled into [`engine::Engine::decode_batch`] and recycled
+//! when they retire. The scheduler ([`scheduler`]) is the batch planner:
+//! it groups active sessions by capacity bucket
+//! ([`scheduler::plan_decode_batches`]), bounds each tick's pooled bytes
+//! against `kv_byte_budget` (the pool is charged once, never per
+//! session), and retires finished sequences mid-batch so queued requests
+//! take their lanes immediately. `make bench` tracks the full-vs-delta
+//! upload bytes and the batched-vs-sequential decode counters in
+//! `BENCH_coordinator.json`; `docs/ARCHITECTURE.md` has the dataflow
+//! diagrams.
 //!
 //! ## Quick start
 //!

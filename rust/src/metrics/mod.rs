@@ -130,6 +130,11 @@ pub struct EngineMetrics {
     pub view_delta_uploads: u64,
     /// Persistent-view wholesale uploads (first step, re-layouts).
     pub view_full_uploads: u64,
+    /// Fused batched-decode steps executed (`Engine::decode_batch`).
+    pub batch_steps: u64,
+    /// Lanes decoded across all batched steps; `batch_lanes /
+    /// batch_steps` is the realized mean batch size.
+    pub batch_lanes: u64,
 }
 
 impl EngineMetrics {
@@ -163,6 +168,17 @@ impl EngineMetrics {
             upload_full_equiv_bytes: self.upload_full_equiv_bytes,
             view_delta_uploads: self.view_delta_uploads,
             view_full_uploads: self.view_full_uploads,
+            batch_steps: self.batch_steps,
+            batch_lanes: self.batch_lanes,
+        }
+    }
+
+    /// Realized mean batched-decode lane count (0 before any batch ran).
+    pub fn batch_mean_lanes(&self) -> f64 {
+        if self.batch_steps == 0 {
+            0.0
+        } else {
+            self.batch_lanes as f64 / self.batch_steps as f64
         }
     }
 }
@@ -184,6 +200,8 @@ pub struct MetricsSnapshot {
     pub upload_full_equiv_bytes: u64,
     pub view_delta_uploads: u64,
     pub view_full_uploads: u64,
+    pub batch_steps: u64,
+    pub batch_lanes: u64,
 }
 
 impl MetricsSnapshot {
@@ -203,6 +221,8 @@ impl MetricsSnapshot {
             .set("upload_full_equiv_bytes", self.upload_full_equiv_bytes)
             .set("view_delta_uploads", self.view_delta_uploads)
             .set("view_full_uploads", self.view_full_uploads)
+            .set("batch_steps", self.batch_steps)
+            .set("batch_lanes", self.batch_lanes)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -222,6 +242,8 @@ impl MetricsSnapshot {
             upload_full_equiv_bytes: f("upload_full_equiv_bytes") as u64,
             view_delta_uploads: f("view_delta_uploads") as u64,
             view_full_uploads: f("view_full_uploads") as u64,
+            batch_steps: f("batch_steps") as u64,
+            batch_lanes: f("batch_lanes") as u64,
         }
     }
 }

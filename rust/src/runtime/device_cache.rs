@@ -1,5 +1,5 @@
-//! Persistent device-resident KV execution view with dirty-slot delta
-//! uploads.
+//! Persistent device-resident KV execution views: per-session
+//! ([`DeviceExecView`]) and pooled-across-sessions ([`DeviceViewPool`]).
 //!
 //! The pre-persistent coordinator re-marshalled the entire `[L, Hkv, cap,
 //! dh]` K/V execution view plus mask (plus, on the Quest path, freshly
@@ -11,26 +11,42 @@
 //! ([`crate::kvcache::DirtyLog`]) so only the journaled `(layer, head,
 //! slot)` spans ship — O(dirty slots), not O(cap).
 //!
+//! [`DeviceViewPool`] extends the same protocol to continuous batching:
+//! instead of one buffer set per session, the pool owns **one** staged
+//! `[B, L, Hkv, cap, dh]` buffer set whose *lanes* are checked out by
+//! sessions when they are first scheduled into a batch and returned when
+//! they retire. Each lane is delta-synced from its session's journal
+//! exactly like a private view; a pool re-layout (capacity or lane-count
+//! growth) bumps the pool's layout epoch, wholesale-invalidating every
+//! lane. Pool buffers are charged against the serving KV budget **once**
+//! — not once per session — which is why the scheduler asks the pool,
+//! not the sessions, for the pinned byte count (see [`crate::scheduler`]).
+//!
 //! **Backend capability gate.** PJRT device buffers on this image's CPU
 //! client are immutable (`buffer_from_host_buffer` has no sub-buffer
-//! update), so the view falls back to *pre-staged host literals*: the
-//! mirrors held here are the staged upload images, maintained at O(dirty)
-//! per step and handed to the executable without ever re-reading the
-//! sequence cache. [`TransferStats`] counts the bytes an in-place-capable
-//! backend ships on this exact schedule (`bytes_uploaded`) next to the
-//! wholesale re-upload baseline (`bytes_full_equiv`); the ratio is the
-//! fig 8 serving-level win and is asserted by `benches/coordinator_hotpath`.
+//! update), so both view flavors fall back to *pre-staged host literals*:
+//! the mirrors held here are the staged upload images, maintained at
+//! O(dirty) per step and handed to the executable without ever re-reading
+//! the sequence cache. [`TransferStats`] counts the bytes an in-place-
+//! capable backend ships on this exact schedule (`bytes_uploaded`) next
+//! to the wholesale re-upload baseline (`bytes_full_equiv`); the ratio is
+//! the fig 8 serving-level win and is asserted by
+//! `benches/coordinator_hotpath`.
 //!
-//! Lifetime: a view is created lazily on a session's first decode step and
-//! must be released when the sequence retires — the scheduler charges
-//! [`DeviceExecView::device_bytes`] against its KV byte budget while the
-//! view is live (see [`crate::scheduler`]).
+//! Lifetime: a per-session view is created lazily on a session's first
+//! [`crate::engine::Engine::decode_step`] and released when the sequence
+//! retires; a pool lane is checked out on the session's first
+//! [`crate::engine::Engine::decode_batch`] and returned at retire. The
+//! scheduler charges [`DeviceExecView::device_bytes`] per owned view plus
+//! [`DeviceViewPool::device_bytes`] once for the shared pool.
+#![warn(missing_docs)]
 
+use crate::kvcache::dual::CacheDims;
 use crate::kvcache::{DirtyLog, SequenceKvCache};
 
 use super::tensor::Tensor;
 
-/// Lifetime host→device transfer counters for one view.
+/// Lifetime host→device transfer counters for one view or pool lane.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TransferStats {
     /// Wholesale uploads (first sync, capacity re-layouts).
@@ -54,9 +70,19 @@ impl TransferStats {
         }
         self.bytes_full_equiv as f64 / self.bytes_uploaded as f64
     }
+
+    /// Fold another counter set into this one — used to combine a
+    /// session's owned-view counters with its pooled-lane counters.
+    pub fn accumulate(&mut self, o: TransferStats) {
+        self.full_uploads += o.full_uploads;
+        self.delta_uploads += o.delta_uploads;
+        self.bytes_uploaded += o.bytes_uploaded;
+        self.bytes_full_equiv += o.bytes_full_equiv;
+        self.spans_applied += o.spans_applied;
+    }
 }
 
-/// Outcome of one [`DeviceExecView::sync`].
+/// Outcome of one view or lane sync.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SyncReport {
     /// Whether this sync was a wholesale upload.
@@ -80,6 +106,7 @@ pub struct DeviceExecView {
     pmax: Tensor,
     /// False until the first sync lands a wholesale upload.
     synced: bool,
+    /// Lifetime transfer counters for this view.
     pub stats: TransferStats,
 }
 
@@ -184,10 +211,338 @@ impl DeviceExecView {
     }
 }
 
+/// Identifies one checked-out lane of a [`DeviceViewPool`]. Obtained from
+/// [`DeviceViewPool::checkout`] and invalid after
+/// [`DeviceViewPool::release`] hands the lane to another session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneId {
+    idx: usize,
+}
+
+impl LaneId {
+    /// The lane's index into the batch dimension of the pooled buffers.
+    pub fn index(&self) -> usize {
+        self.idx
+    }
+}
+
+/// Per-lane bookkeeping inside the pool.
+#[derive(Debug, Clone, Copy, Default)]
+struct Lane {
+    in_use: bool,
+    /// Cache layout epoch of the image resident in this lane.
+    cache_epoch: u64,
+    /// Pool layout epoch at this lane's last sync.
+    pool_epoch: u64,
+    /// False until a sync lands (fresh checkout, pool re-layout).
+    synced: bool,
+    /// Transfer counters since this lane's checkout.
+    stats: TransferStats,
+}
+
+/// Shared staged execution buffers for batched decode. See the module
+/// docs: one `[B, L, Hkv, cap, dh]` buffer set whose lanes are checked
+/// out per session and delta-synced from each session's dirty journal.
+///
+/// The pool grows on demand — a checkout with no free lane adds a lane,
+/// and a session whose cache re-layouts beyond the pool capacity grows
+/// every lane — and each growth is a *pool re-layout*: the layout epoch
+/// bumps and every lane's next sync is wholesale. Buffers are only freed
+/// by [`Self::trim`], which the scheduler calls whenever its active
+/// set empties; until
+/// then the pooled bytes stay pinned (and charged once) regardless of
+/// how many sessions come and go.
+pub struct DeviceViewPool {
+    /// Cache geometry shared by every lane (set by the first checkout).
+    dims: Option<CacheDims>,
+    /// Slots per lane (the padded batch capacity `cap_max`).
+    cap: usize,
+    /// Quest pages per lane at the current capacity.
+    pages: usize,
+    /// Bumped on every pool re-layout (capacity or lane-count growth).
+    epoch: u64,
+    /// `[B, L, Hkv, cap, dh]` staged keys.
+    k: Tensor,
+    /// `[B, L, Hkv, cap, dh]` staged values.
+    v: Tensor,
+    /// `[B, L, Hkv, cap]` staged validity masks.
+    mask: Tensor,
+    /// `[B, L, Hkv, P, dh]` staged Quest page lower bounds.
+    pmin: Tensor,
+    /// `[B, L, Hkv, P, dh]` staged Quest page upper bounds.
+    pmax: Tensor,
+    lanes: Vec<Lane>,
+    /// Pool-wide lifetime transfer counters (sum over all lanes ever).
+    pub stats: TransferStats,
+}
+
+impl Default for DeviceViewPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeviceViewPool {
+    /// An empty pool; buffers are allocated by the first checkout.
+    pub fn new() -> Self {
+        Self {
+            dims: None,
+            cap: 0,
+            pages: 0,
+            epoch: 0,
+            k: Tensor::zeros(&[0]),
+            v: Tensor::zeros(&[0]),
+            mask: Tensor::zeros(&[0]),
+            pmin: Tensor::zeros(&[0]),
+            pmax: Tensor::zeros(&[0]),
+            lanes: Vec::new(),
+            stats: TransferStats::default(),
+        }
+    }
+
+    /// Bytes one lane pins at `cap` slots — the planning unit the
+    /// scheduler uses to bound pooled bytes against the KV budget before
+    /// lanes are actually checked out.
+    pub fn lane_bytes(d: CacheDims, cap: usize) -> usize {
+        let (l, h, dh) = (d.n_layers, d.n_kv_heads, d.d_head);
+        let pages = cap.saturating_sub(d.w_local) / d.page_size;
+        let slots = 2 * l * h * cap * dh + l * h * cap;
+        let meta = 2 * l * h * pages * dh;
+        (slots + meta) * std::mem::size_of::<f32>()
+    }
+
+    /// Number of lanes currently checked out.
+    pub fn lanes_in_use(&self) -> usize {
+        self.lanes.iter().filter(|l| l.in_use).count()
+    }
+
+    /// Total lanes allocated (in use + free, the batch dimension `B`).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Padded per-lane slot capacity (`cap_max`); 0 before the first
+    /// checkout. Every lane executes at this capacity, so it is always a
+    /// capacity the runtime has a decode executable for.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Quest pages per lane at the current capacity.
+    pub fn pages(&self) -> usize {
+        self.pages
+    }
+
+    /// Pool layout epoch; bumped by every re-layout.
+    pub fn layout_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Device bytes pinned by the pooled buffers. This is the number the
+    /// scheduler charges against `kv_byte_budget` — **once**, however
+    /// many sessions hold lanes (the counter bugfix regression-tested in
+    /// this module).
+    pub fn device_bytes(&self) -> usize {
+        (self.k.numel() + self.v.numel() + self.mask.numel() + self.pmin.numel()
+            + self.pmax.numel())
+            * std::mem::size_of::<f32>()
+    }
+
+    /// Re-allocate the pooled buffers for `n_lanes` lanes of `cap` slots,
+    /// wholesale-invalidating every lane (their next sync re-uploads).
+    fn relayout(&mut self, n_lanes: usize, cap: usize) {
+        let d = self.dims.expect("pool re-layout before first checkout");
+        let (l, h, dh) = (d.n_layers, d.n_kv_heads, d.d_head);
+        let pages = cap.saturating_sub(d.w_local) / d.page_size;
+        self.k = Tensor::zeros(&[n_lanes, l, h, cap, dh]);
+        self.v = Tensor::zeros(&[n_lanes, l, h, cap, dh]);
+        self.mask = Tensor::zeros(&[n_lanes, l, h, cap]);
+        self.pmin = Tensor::full(&[n_lanes, l, h, pages, dh], f32::INFINITY);
+        self.pmax = Tensor::full(&[n_lanes, l, h, pages, dh], f32::NEG_INFINITY);
+        self.cap = cap;
+        self.pages = pages;
+        self.epoch += 1;
+        while self.lanes.len() < n_lanes {
+            self.lanes.push(Lane::default());
+        }
+        for lane in &mut self.lanes {
+            lane.synced = false;
+        }
+    }
+
+    /// Check a lane out for a session whose cache has geometry `dims` and
+    /// execution capacity `cap`. Reuses a free lane when one exists
+    /// (recycled buffers — no allocation on the churn path), else grows
+    /// the pool by one lane; either way the lane's first sync is
+    /// wholesale. The pool capacity only grows (`max(cap, current)`), so
+    /// a small-capacity session checked into a large pool runs padded:
+    /// its image occupies slots `[0, cache_cap)` and the tail stays
+    /// masked invalid.
+    pub fn checkout(&mut self, dims: CacheDims, cap: usize) -> LaneId {
+        if self.dims.is_none() {
+            self.dims = Some(dims);
+        }
+        let idx = match self.lanes.iter().position(|l| !l.in_use) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(Lane::default());
+                self.lanes.len() - 1
+            }
+        };
+        let want_lanes = self.lanes.len();
+        let batch_dim = self.k.shape.first().copied().unwrap_or(0);
+        if want_lanes != batch_dim || cap > self.cap {
+            self.relayout(want_lanes, self.cap.max(cap));
+        }
+        let lane = &mut self.lanes[idx];
+        lane.in_use = true;
+        lane.synced = false;
+        lane.stats = TransferStats::default();
+        LaneId { idx }
+    }
+
+    /// Grow the pooled buffers to at least `cap` slots per lane (no-op
+    /// when already large enough or never allocated). Growth is a pool
+    /// re-layout: the staging is re-allocated and every lane's next sync
+    /// is wholesale — callers batching several lanes must therefore land
+    /// all growth (this call and every [`Self::checkout`]) **before** the
+    /// first [`Self::sync_lane`] of the step, or earlier lanes' freshly
+    /// staged images are wiped ([`crate::engine::Engine::decode_batch`]
+    /// binds lanes first for exactly this reason).
+    pub fn ensure_capacity(&mut self, cap: usize) {
+        if self.dims.is_some() && cap > self.cap {
+            self.relayout(self.lanes.len(), cap);
+        }
+    }
+
+    /// Return a lane to the pool (session retired). The lane's mask is
+    /// cleared so a stale validity image can never leak to the next
+    /// session even if a consumer reads the lane before its first sync;
+    /// the buffers themselves stay allocated for recycling (release
+    /// frees budgeted bytes only via [`Self::trim`]).
+    pub fn release(&mut self, lane: LaneId) {
+        if let Some(l) = self.lanes.get_mut(lane.idx) {
+            l.in_use = false;
+            l.synced = false;
+        }
+        if self.mask.numel() > 0 {
+            self.mask.slice_at_mut(&[lane.idx]).fill(0.0);
+        }
+    }
+
+    /// Free the pooled buffers if no lane is in use, returning the bytes
+    /// released back to the KV budget (0 when lanes are still out or the
+    /// pool is already empty). Lane geometry survives, so the next
+    /// checkout re-allocates at the same capacity class.
+    pub fn trim(&mut self) -> usize {
+        if self.lanes.iter().any(|l| l.in_use) {
+            return 0;
+        }
+        let freed = self.device_bytes();
+        self.k = Tensor::zeros(&[0]);
+        self.v = Tensor::zeros(&[0]);
+        self.mask = Tensor::zeros(&[0]);
+        self.pmin = Tensor::zeros(&[0]);
+        self.pmax = Tensor::zeros(&[0]);
+        self.lanes.clear();
+        self.cap = 0;
+        self.pages = 0;
+        self.epoch += 1;
+        freed
+    }
+
+    /// Drain `cache`'s dirty journal into `lane`'s staged image — the
+    /// pooled counterpart of [`DeviceExecView::sync`]. Journaled spans
+    /// ship as deltas; a fresh checkout, a cache or pool re-layout, a
+    /// `full` log, or a delta payload exceeding a wholesale upload ships
+    /// the lane wholesale (padding tail masked invalid). Grows the pool
+    /// capacity first if the cache outgrew it.
+    pub fn sync_lane(&mut self, lane: LaneId, cache: &mut SequenceKvCache) -> SyncReport {
+        debug_assert!(self.lanes[lane.idx].in_use, "sync of a released lane");
+        if cache.capacity() > self.cap {
+            self.relayout(self.lanes.len(), cache.capacity());
+        }
+        let log = cache.drain_dirty();
+        let st = self.lanes[lane.idx];
+        let full = !st.synced
+            || log.full
+            || log.epoch != st.cache_epoch
+            || st.pool_epoch != self.epoch
+            || log.delta_bytes(cache.dims().d_head) >= cache.full_view_bytes();
+        let bytes = if full {
+            let wholesale = DirtyLog { full: true, ..DirtyLog::default() };
+            cache.replay_dirty_into_lane(
+                &wholesale,
+                lane.idx,
+                &mut self.k,
+                &mut self.v,
+                &mut self.mask,
+                &mut self.pmin,
+                &mut self.pmax,
+            )
+        } else {
+            cache.replay_dirty_into_lane(
+                &log,
+                lane.idx,
+                &mut self.k,
+                &mut self.v,
+                &mut self.mask,
+                &mut self.pmin,
+                &mut self.pmax,
+            )
+        };
+        let spans = if full { 0 } else { log.spans.len() };
+        let st = &mut self.lanes[lane.idx];
+        st.cache_epoch = log.epoch;
+        st.pool_epoch = self.epoch;
+        st.synced = true;
+        for stats in [&mut st.stats, &mut self.stats] {
+            stats.bytes_uploaded += bytes as u64;
+            stats.bytes_full_equiv += cache.full_view_bytes() as u64;
+            if full {
+                stats.full_uploads += 1;
+            } else {
+                stats.delta_uploads += 1;
+                stats.spans_applied += spans as u64;
+            }
+        }
+        SyncReport { full, bytes, spans }
+    }
+
+    /// Transfer counters accumulated by `lane` since its checkout.
+    pub fn lane_stats(&self, lane: LaneId) -> TransferStats {
+        self.lanes.get(lane.idx).map(|l| l.stats).unwrap_or_default()
+    }
+
+    /// `lane`'s contiguous `[L, Hkv, cap, dh]` staged-key block.
+    pub fn lane_k(&self, lane: LaneId) -> &[f32] {
+        self.k.slice_at(&[lane.idx])
+    }
+
+    /// `lane`'s contiguous `[L, Hkv, cap, dh]` staged-value block.
+    pub fn lane_v(&self, lane: LaneId) -> &[f32] {
+        self.v.slice_at(&[lane.idx])
+    }
+
+    /// `lane`'s contiguous `[L, Hkv, cap]` validity-mask block.
+    pub fn lane_mask(&self, lane: LaneId) -> &[f32] {
+        self.mask.slice_at(&[lane.idx])
+    }
+
+    /// `lane`'s contiguous `[L, Hkv, P, dh]` Quest page lower bounds.
+    pub fn lane_page_min(&self, lane: LaneId) -> &[f32] {
+        self.pmin.slice_at(&[lane.idx])
+    }
+
+    /// `lane`'s contiguous `[L, Hkv, P, dh]` Quest page upper bounds.
+    pub fn lane_page_max(&self, lane: LaneId) -> &[f32] {
+        self.pmax.slice_at(&[lane.idx])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::dual::CacheDims;
 
     fn dims() -> CacheDims {
         CacheDims { n_layers: 2, n_kv_heads: 2, d_head: 4, w_local: 4, page_size: 4 }
@@ -252,5 +607,148 @@ mod tests {
         assert!(view.stats.reduction_factor() > 4.0);
         assert_eq!(view.mask(), cache.slot_mask());
         assert!(view.device_bytes() >= cache.full_view_bytes());
+    }
+
+    // ---- pool ------------------------------------------------------------
+
+    /// Compare a lane's staged blocks to a cache's own exec view: the
+    /// `[0, cache_cap)` prefix must be bit-identical and the padding tail
+    /// masked invalid.
+    fn assert_lane_matches(pool: &DeviceViewPool, lane: LaneId, cache: &SequenceKvCache) {
+        let d = cache.dims();
+        let (cap, cap_b) = (cache.capacity(), pool.capacity());
+        let (kl, vl, ml) = (pool.lane_k(lane), pool.lane_v(lane), pool.lane_mask(lane));
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let row = (l * d.n_kv_heads + h) * cap_b;
+                let krow = &kl[row * d.d_head..(row + cap_b) * d.d_head];
+                assert_eq!(
+                    &krow[..cap * d.d_head],
+                    cache.k_exec().slice_at(&[l, h]),
+                    "lane K prefix (l={l}, h={h})"
+                );
+                assert!(krow[cap * d.d_head..].iter().all(|&x| x == 0.0));
+                let vrow = &vl[row * d.d_head..(row + cap_b) * d.d_head];
+                assert_eq!(&vrow[..cap * d.d_head], cache.v_exec().slice_at(&[l, h]));
+                let mrow = &ml[row..row + cap_b];
+                assert_eq!(&mrow[..cap], cache.slot_mask().slice_at(&[l, h]));
+                assert!(mrow[cap..].iter().all(|&x| x == 0.0), "padding tail must be masked");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_sync_full_then_delta_matches_cache() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut cache = SequenceKvCache::new(d, 8).unwrap();
+        let lane = pool.checkout(d, 8);
+        let r0 = pool.sync_lane(lane, &mut cache);
+        assert!(r0.full);
+        for pos in 0..6 {
+            let (kn, vn, gn) = decoded(d, pos as f32, 0.9);
+            cache.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+            let r = pool.sync_lane(lane, &mut cache);
+            assert!(!r.full, "steady-state lane syncs must be deltas (pos {pos})");
+        }
+        assert_lane_matches(&pool, lane, &cache);
+    }
+
+    #[test]
+    fn small_capacity_session_runs_padded_in_a_grown_pool() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut big = SequenceKvCache::new(d, 16).unwrap();
+        let mut small = SequenceKvCache::new(d, 8).unwrap();
+        let big_lane = pool.checkout(d, 16);
+        let small_lane = pool.checkout(d, 8);
+        assert_eq!(pool.capacity(), 16, "pool capacity only grows");
+        for pos in 0..5 {
+            let (kn, vn, gn) = decoded(d, pos as f32, 0.9);
+            big.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+            small.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| false).unwrap();
+            pool.sync_lane(big_lane, &mut big);
+            pool.sync_lane(small_lane, &mut small);
+        }
+        assert_lane_matches(&pool, big_lane, &big);
+        assert_lane_matches(&pool, small_lane, &small);
+    }
+
+    #[test]
+    fn capacity_growth_relayouts_every_lane() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut a = SequenceKvCache::new(d, 8).unwrap();
+        let mut b = SequenceKvCache::new(d, 8).unwrap();
+        let la = pool.checkout(d, 8);
+        let lb = pool.checkout(d, 8);
+        pool.sync_lane(la, &mut a);
+        pool.sync_lane(lb, &mut b);
+        let e0 = pool.layout_epoch();
+        // Lane a's cache outgrows the pool: the sync grows every lane.
+        a.ensure_capacity(16).unwrap();
+        let ra = pool.sync_lane(la, &mut a);
+        assert!(ra.full);
+        assert!(pool.layout_epoch() > e0);
+        assert_eq!(pool.capacity(), 16);
+        // Lane b was invalidated by the pool re-layout even though its own
+        // cache never changed.
+        let rb = pool.sync_lane(lb, &mut b);
+        assert!(rb.full, "pool re-layout must wholesale-invalidate peer lanes");
+        assert_lane_matches(&pool, la, &a);
+        assert_lane_matches(&pool, lb, &b);
+    }
+
+    /// Regression test for the counter bugfix: pooled (shared) buffers are
+    /// charged exactly once, not once per session holding a lane, and
+    /// releasing a lane returns nothing to the budget until the pool is
+    /// trimmed.
+    #[test]
+    fn pooled_bytes_charged_once_not_per_lane() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let l0 = pool.checkout(d, 8);
+        let one_lane_bytes = pool.device_bytes();
+        assert_eq!(one_lane_bytes, DeviceViewPool::lane_bytes(d, 8));
+        let l1 = pool.checkout(d, 8);
+        let two_lane_bytes = pool.device_bytes();
+        assert_eq!(two_lane_bytes, 2 * DeviceViewPool::lane_bytes(d, 8));
+        // The naive per-session accounting would report each session
+        // pinning the whole pool: 2 sessions x pool bytes = 4 lane-bytes.
+        let naive_per_session = 2 * two_lane_bytes;
+        assert!(naive_per_session > two_lane_bytes);
+        // Releasing a lane keeps the bytes pinned (recycled, not freed)...
+        pool.release(l0);
+        assert_eq!(pool.device_bytes(), two_lane_bytes);
+        assert_eq!(pool.trim(), 0, "trim must refuse while a lane is out");
+        // ...and only trimming the drained pool releases them, once.
+        pool.release(l1);
+        assert_eq!(pool.trim(), two_lane_bytes);
+        assert_eq!(pool.device_bytes(), 0);
+        assert_eq!(pool.trim(), 0, "double-trim must release nothing");
+    }
+
+    #[test]
+    fn released_lane_is_recycled_and_resyncs_wholesale() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut a = SequenceKvCache::new(d, 8).unwrap();
+        let la = pool.checkout(d, 8);
+        pool.sync_lane(la, &mut a);
+        let (kn, vn, gn) = decoded(d, 1.0, 0.9);
+        a.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| true).unwrap();
+        pool.sync_lane(la, &mut a);
+        pool.release(la);
+        assert!(pool.lane_mask(la).iter().all(|&x| x == 0.0), "release clears the mask");
+        // A new session gets the same lane back; its first sync must be
+        // wholesale (the recycled buffers hold another session's K/V).
+        let mut b = SequenceKvCache::new(d, 8).unwrap();
+        let lb = pool.checkout(d, 8);
+        assert_eq!(lb.index(), la.index(), "free lane must be recycled, not grown");
+        assert_eq!(pool.lane_count(), 1);
+        let r = pool.sync_lane(lb, &mut b);
+        assert!(r.full);
+        assert_lane_matches(&pool, lb, &b);
+        assert_eq!(pool.lane_stats(lb).full_uploads, 1, "lane stats reset at checkout");
     }
 }

@@ -243,19 +243,36 @@ impl ModelRuntime {
         v_cache: &Tensor,
         slot_mask: &Tensor,
     ) -> Result<DecodeOut> {
+        self.decode_slices(cap, token, pos, &k_cache.data, &v_cache.data, &slot_mask.data)
+    }
+
+    /// [`Self::decode`] over raw contiguous slices — the entry point for
+    /// one *lane* of a pooled batch view
+    /// ([`device_cache::DeviceViewPool`]), whose `[L, Hkv, cap, dh]` /
+    /// `[L, Hkv, cap]` blocks are contiguous sub-slices of the shared
+    /// `[B, ...]` staging buffers and need no per-call re-assembly.
+    pub fn decode_slices(
+        &self,
+        cap: usize,
+        token: i32,
+        pos: i32,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        slot_mask: &[f32],
+    ) -> Result<DecodeOut> {
         let exe = self
             .decode
             .get(&cap)
             .with_context(|| format!("no decode capacity {cap}"))?;
+        let m = &self.manifest.model;
+        let kv_shape = [m.n_layers, m.n_kv_heads, cap, m.d_head];
+        let mask_shape = [m.n_layers, m.n_kv_heads, cap];
         let inputs = vec![
             self.client.buffer_from_host_buffer(&[token], &[], None)?,
             self.client.buffer_from_host_buffer(&[pos], &[], None)?,
-            self.client
-                .buffer_from_host_buffer(&k_cache.data, &k_cache.shape, None)?,
-            self.client
-                .buffer_from_host_buffer(&v_cache.data, &v_cache.shape, None)?,
-            self.client
-                .buffer_from_host_buffer(&slot_mask.data, &slot_mask.shape, None)?,
+            self.client.buffer_from_host_buffer(k_cache, &kv_shape, None)?,
+            self.client.buffer_from_host_buffer(v_cache, &kv_shape, None)?,
+            self.client.buffer_from_host_buffer(slot_mask, &mask_shape, None)?,
         ];
         Self::unpack_decode(self.run(exe, &inputs)?)
     }
@@ -338,23 +355,54 @@ impl ModelRuntime {
         page_max: &Tensor,
         budget_pages: i32,
     ) -> Result<DecodeOut> {
+        let pages = page_min.shape[2];
+        self.decode_sel_slices(
+            cap,
+            token,
+            pos,
+            &k_cache.data,
+            &v_cache.data,
+            &slot_mask.data,
+            &page_min.data,
+            &page_max.data,
+            pages,
+            budget_pages,
+        )
+    }
+
+    /// [`Self::decode_sel`] over raw contiguous slices (a pooled batch-view
+    /// lane, page bounds included). `pages` is the `P` dimension of the
+    /// `[L, Hkv, P, dh]` bound blocks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_sel_slices(
+        &self,
+        cap: usize,
+        token: i32,
+        pos: i32,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        slot_mask: &[f32],
+        page_min: &[f32],
+        page_max: &[f32],
+        pages: usize,
+        budget_pages: i32,
+    ) -> Result<DecodeOut> {
         let exe = self
             .decode_sel
             .get(&cap)
             .with_context(|| format!("no decode_sel capacity {cap}"))?;
+        let m = &self.manifest.model;
+        let kv_shape = [m.n_layers, m.n_kv_heads, cap, m.d_head];
+        let mask_shape = [m.n_layers, m.n_kv_heads, cap];
+        let bounds_shape = [m.n_layers, m.n_kv_heads, pages, m.d_head];
         let inputs = vec![
             self.client.buffer_from_host_buffer(&[token], &[], None)?,
             self.client.buffer_from_host_buffer(&[pos], &[], None)?,
-            self.client
-                .buffer_from_host_buffer(&k_cache.data, &k_cache.shape, None)?,
-            self.client
-                .buffer_from_host_buffer(&v_cache.data, &v_cache.shape, None)?,
-            self.client
-                .buffer_from_host_buffer(&slot_mask.data, &slot_mask.shape, None)?,
-            self.client
-                .buffer_from_host_buffer(&page_min.data, &page_min.shape, None)?,
-            self.client
-                .buffer_from_host_buffer(&page_max.data, &page_max.shape, None)?,
+            self.client.buffer_from_host_buffer(k_cache, &kv_shape, None)?,
+            self.client.buffer_from_host_buffer(v_cache, &kv_shape, None)?,
+            self.client.buffer_from_host_buffer(slot_mask, &mask_shape, None)?,
+            self.client.buffer_from_host_buffer(page_min, &bounds_shape, None)?,
+            self.client.buffer_from_host_buffer(page_max, &bounds_shape, None)?,
             self.client.buffer_from_host_buffer(&[budget_pages], &[], None)?,
         ];
         Self::unpack_decode(self.run(exe, &inputs)?)

@@ -1,27 +1,44 @@
-//! Request scheduling: queueing, continuous batching, KV-budget admission
-//! control.
+//! Request scheduling: queueing, continuous batched decode, KV-budget
+//! admission control.
 //!
-//! The exported executables are batch-1 (the tiny testbed), so "continuous
-//! batching" here is the *scheduling* structure of vLLM/Orca rather than
-//! batched GEMMs: new requests are admitted into the active set as soon as
-//! (a) a slot frees up and (b) the paged-pool byte budget allows, and the
-//! decode loop interleaves one token per active sequence per step —
-//! finished sequences retire immediately and the next queued request takes
-//! their place without draining the batch.
+//! The scheduler is the *batch planner* of the stack: new requests are
+//! admitted into the active set as soon as (a) a slot frees up and (b)
+//! the KV byte budget allows, and every tick the active set is
+//! partitioned into **fused decode batches** ([`plan_decode_batches`])
+//! that [`Engine::decode_batch`] runs over the engine's shared
+//! device-view pool — one token per active sequence per tick, finished
+//! sequences retiring immediately so the next queued request takes their
+//! lane without draining the batch (the vLLM/Orca scheduling structure).
+//!
+//! Batch planning groups sessions by *capacity bucket*: members of one
+//! fused call share an exported decode capacity, so the pooled
+//! `[B, L, Hkv, cap, dh]` staging pads nothing within a group and the
+//! Quest kernel geometry holds. Groups are bounded by
+//! `max_decode_batch` lanes and by the KV byte budget: the planner gets
+//! the budget *headroom* left after paged-cache and owned-view bytes,
+//! models the pool's real post-tick footprint (`max(allocated lanes,
+//! bound lanes + new checkouts)` at the capacity the pool will have
+//! grown to — see [`PoolSnapshot`]), and defers sessions that would
+//! blow it to a later tick (always scheduling at least one session, so
+//! a tiny budget degrades to sequential decode rather than livelock).
 //!
 //! The KV byte budget is the serving-level counterpart of the paper's
-//! App. K observation: multiple concurrent requests compete for one memory
-//! pool, so admission control (and, composed with it, per-sequence KV
-//! admission) decides how many sequences fit.
-//!
-//! The budget covers *both* residency classes a sequence pins: the paged
-//! host pool (`allocated_kv_bytes`) and the persistent device execution
-//! view ([`crate::runtime::device_cache::DeviceExecView`], created on the
-//! first decode step). When a sequence retires — EOS, token limit, or
-//! error — the scheduler releases its device view immediately so the bytes
-//! return to the budget before the next admission pass.
+//! App. K observation: multiple concurrent requests compete for one
+//! memory pool, so admission control (and, composed with it,
+//! per-sequence KV admission) decides how many sequences fit. The budget
+//! covers *all three* residency classes: the paged host pool
+//! (`allocated_kv_bytes`), sessions' *owned* per-session execution views
+//! ([`crate::runtime::device_cache::DeviceExecView`]), and the shared
+//! [`crate::runtime::device_cache::DeviceViewPool`] — the latter charged
+//! exactly **once**, not once per session holding a lane. When a
+//! sequence retires its lane returns to the pool for recycling, and
+//! whenever the active set empties the scheduler trims the pool so the
+//! budget recovers the pooled bytes before the next admission pass —
+//! trimming must not wait for the queue to drain, or a tight budget
+//! would starve queued requests behind a lingering empty pool.
+#![warn(missing_docs)]
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -34,43 +51,68 @@ use crate::model::{Sampler, SamplerKind};
 pub struct SchedulerConfig {
     /// Max sequences decoding concurrently.
     pub max_active: usize,
-    /// Paged-pool KV byte budget across all active sequences; requests wait
-    /// in the queue while the pool is full.
+    /// KV byte budget across all active sequences (paged pool + owned
+    /// views + the shared view pool, charged once); requests wait in the
+    /// queue while the pool is full.
     pub kv_byte_budget: usize,
     /// Queue bound; submissions beyond it are rejected.
     pub max_queue: usize,
+    /// Max sessions fused into one [`Engine::decode_batch`] call; 1 (or
+    /// 0, treated as 1) degrades to sequential per-session decode.
+    pub max_decode_batch: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_active: 8, kv_byte_budget: 256 << 20, max_queue: 1024 }
+        Self {
+            max_active: 8,
+            kv_byte_budget: 256 << 20,
+            max_queue: 1024,
+            max_decode_batch: 4,
+        }
     }
 }
 
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-chosen id, echoed in the [`Completion`].
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget (tokens).
     pub max_new: usize,
+    /// Admission policy + optional Quest/SnapKV composition.
     pub opts: SessionOptions,
+    /// Sampling configuration.
     pub sampler: SamplerKind,
+    /// Sampler seed (reproducibility).
     pub seed: u64,
 }
 
 /// Terminal state of a request.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The request's id.
     pub id: u64,
+    /// Decoded continuation text (prompt excluded).
     pub text: String,
+    /// Prompt length in tokens.
     pub n_prompt: usize,
+    /// Tokens generated (EOS excluded).
     pub n_generated: usize,
+    /// Prefill wall-clock, microseconds.
     pub prefill_us: f64,
+    /// Mean per-token decode wall-clock, microseconds.
     pub decode_us_mean: f64,
+    /// Final normalized cache size (Fig 7 x-axis).
     pub cache_fraction: f64,
+    /// Physical KV bytes allocated in the paged pool at retirement.
     pub kv_bytes: usize,
+    /// SnapKV eviction triggers fired (Fig 16).
     pub eviction_triggers: u64,
-    /// Host→device bytes shipped by this request's persistent-view syncs.
+    /// Host→device bytes shipped by this request's persistent-view syncs
+    /// (owned view + pooled lane combined).
     pub upload_bytes: u64,
     /// Set when the request failed (e.g. prompt exceeds buckets, KV OOM).
     pub error: Option<String>,
@@ -85,17 +127,102 @@ struct Active {
     decode_started: Instant,
 }
 
-/// Continuous batcher over one [`Engine`].
+/// Pool occupancy snapshot fed to [`plan_decode_batches`] — what the
+/// shared [`crate::runtime::device_cache::DeviceViewPool`] already holds
+/// before this tick binds anything.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolSnapshot {
+    /// Lanes allocated in the pool (in use + free, the staging's batch
+    /// dimension). A capacity growth re-layouts *all* of them, so they
+    /// all count toward the pooled footprint.
+    pub allocated_lanes: usize,
+    /// Lanes currently bound to (not-yet-retired) sessions.
+    pub bound_lanes: usize,
+    /// Current pooled per-lane slot capacity (the padding floor — the
+    /// pool never shrinks mid-flight).
+    pub cap_floor: usize,
+}
+
+/// Plan one decode tick: partition the active sessions — given as their
+/// current execution capacities plus whether each already holds a pool
+/// lane, in admission order — into fused batch groups.
+///
+/// Sessions sharing a capacity bucket are grouped oldest-first into
+/// chunks of at most `max_batch` lanes (`max_batch == 0` is treated
+/// as 1). The planner also bounds the **pooled bytes** the schedule
+/// implies: all lanes live in one shared pool whose per-lane footprint
+/// is `lane_bytes` at the pool capacity — the max of the snapshot's
+/// `cap_floor` and every scheduled session's capacity — and whose lane
+/// count after this tick is `max(allocated, bound + new checkouts)`
+/// (already-bound sessions re-use their lane; free lanes recycle before
+/// the pool grows; a capacity growth re-layouts every allocated lane).
+/// Sessions that would push that footprint past `pool_byte_budget` —
+/// the *headroom* left in the KV budget after paged-cache and
+/// owned-view bytes — are deferred to a later tick, except the very
+/// first scheduled session, which always runs so a tiny budget degrades
+/// to sequential decode instead of livelock.
+///
+/// Indices are ascending within each group; every index appears in at
+/// most one group.
+pub fn plan_decode_batches(
+    caps: &[usize],
+    has_lane: &[bool],
+    max_batch: usize,
+    lane_bytes: &dyn Fn(usize) -> usize,
+    pool_byte_budget: usize,
+    pool: PoolSnapshot,
+) -> Vec<Vec<usize>> {
+    debug_assert_eq!(caps.len(), has_lane.len());
+    let max_batch = max_batch.max(1);
+    let mut by_cap: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, &c) in caps.iter().enumerate() {
+        by_cap.entry(c).or_default().push(i);
+    }
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut pool_cap = pool.cap_floor;
+    let mut new_lanes = 0usize;
+    let mut scheduled_any = false;
+    for (cap, idxs) in by_cap {
+        let mut group: Vec<usize> = Vec::new();
+        for i in idxs {
+            let cap_after = pool_cap.max(cap);
+            let adds = usize::from(!has_lane[i]);
+            let lanes_after =
+                pool.allocated_lanes.max(pool.bound_lanes + new_lanes + adds);
+            if scheduled_any && lanes_after * lane_bytes(cap_after) > pool_byte_budget {
+                // Defer: this session decodes on a later tick, once
+                // retirements free lanes and the pool is trimmed.
+                continue;
+            }
+            scheduled_any = true;
+            new_lanes += adds;
+            pool_cap = cap_after;
+            group.push(i);
+            if group.len() == max_batch {
+                groups.push(std::mem::take(&mut group));
+            }
+        }
+        if !group.is_empty() {
+            groups.push(group);
+        }
+    }
+    groups
+}
+
+/// Continuous batcher over one [`Engine`]. See the module docs.
 pub struct Scheduler {
+    /// Limits this scheduler was built with.
     pub cfg: SchedulerConfig,
     queue: VecDeque<Request>,
     active: Vec<Active>,
     rejected: u64,
-    /// Device-view bytes returned to the budget by retired sequences.
+    /// View bytes returned to the budget: owned views released at retire
+    /// plus pool trims once the scheduler drains.
     view_bytes_released: u64,
 }
 
 impl Scheduler {
+    /// An empty scheduler with the given limits.
     pub fn new(cfg: SchedulerConfig) -> Self {
         Self {
             cfg,
@@ -116,18 +243,22 @@ impl Scheduler {
         true
     }
 
+    /// Requests waiting for admission.
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
 
+    /// Sequences currently decoding.
     pub fn active(&self) -> usize {
         self.active.len()
     }
 
+    /// Submissions rejected by the queue bound.
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
 
+    /// True when nothing is queued or in flight.
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.active.is_empty()
     }
@@ -140,22 +271,37 @@ impl Scheduler {
             .sum()
     }
 
-    /// Device bytes pinned by active sequences' persistent execution views.
-    pub fn active_view_bytes(&self) -> usize {
+    /// Device bytes pinned by active sequences' *owned* per-session
+    /// execution views. Pooled lanes are deliberately excluded: the
+    /// shared pool is charged once, via [`Engine::pooled_view_bytes`] —
+    /// summing it per session would double-count (the counter bugfix
+    /// regression-tested in `runtime::device_cache`).
+    pub fn owned_view_bytes(&self) -> usize {
         self.active.iter().map(|a| a.sess.device_view_bytes()).sum()
     }
 
-    /// Device-view bytes released back to the budget by retired sequences.
+    /// View bytes returned to the budget by retired sequences' owned
+    /// views and by pool trims whenever the active set empties. Pooled
+    /// buffers count exactly once, at trim — a retiring session's lane
+    /// recycles without freeing anything.
     pub fn view_bytes_released(&self) -> u64 {
         self.view_bytes_released
     }
 
-    /// Retire a sequence: release its device-resident view back to the
-    /// budget, then snapshot the completion.
-    fn finish(&mut self, mut a: Active, error: Option<String>, text: String) -> Completion {
-        // Snapshot the transfer counters before the release drops them.
-        let upload_bytes = a.sess.device_transfer_stats().bytes_uploaded;
+    /// Retire a sequence: release its owned device view back to the
+    /// budget, return its pool lane for recycling, then snapshot the
+    /// completion.
+    fn finish(
+        &mut self,
+        engine: &mut Engine,
+        mut a: Active,
+        error: Option<String>,
+        text: String,
+    ) -> Completion {
+        // Snapshot the transfer counters before the releases drop them.
+        let upload_bytes = engine.session_transfer_stats(&a.sess).bytes_uploaded;
         self.view_bytes_released += a.sess.release_device_view() as u64;
+        engine.release_lane(&mut a.sess);
         let steps = a.generated.len().max(1);
         Completion {
             id: a.req.id,
@@ -172,17 +318,20 @@ impl Scheduler {
         }
     }
 
-    /// One scheduling step: admit queued requests while budget allows, then
-    /// decode one token for every active sequence. Returns completions.
+    /// One scheduling tick: admit queued requests while the budget
+    /// allows, plan the active set into fused batches, decode one token
+    /// per scheduled sequence, and retire finished ones. Returns the
+    /// completions that retired this tick.
     pub fn step(&mut self, engine: &mut Engine) -> Vec<Completion> {
         let mut done = Vec::new();
 
-        // --- Admission control: slots + KV byte budget. The budget covers
-        // the paged pool *and* the device-resident execution views; retired
-        // sequences released theirs at finish, so the check sees the
-        // recovered bytes immediately.
+        // --- Admission control: slots + KV byte budget. The budget
+        // covers the paged pool, owned views, and the shared view pool
+        // (charged once); retired sequences released theirs at finish,
+        // so the check sees the recovered bytes immediately.
         while self.active.len() < self.cfg.max_active {
-            let pinned = self.active_kv_bytes() + self.active_view_bytes();
+            let pinned =
+                self.active_kv_bytes() + self.owned_view_bytes() + engine.pooled_view_bytes();
             if self.queue.is_empty() || pinned >= self.cfg.kv_byte_budget {
                 break;
             }
@@ -210,37 +359,108 @@ impl Scheduler {
                         prefill_us: 0.0,
                         decode_started: Instant::now(),
                     };
-                    done.push(self.finish(a, Some(format!("prefill: {e:#}")), String::new()));
+                    done.push(self.finish(engine, a, Some(format!("prefill: {e:#}")), String::new()));
                 }
             }
         }
 
-        // --- Decode: one token per active sequence, retire finished.
+        // --- Batch planning: group by capacity bucket, bound by
+        // max_decode_batch lanes and the pooled-byte budget. The pool's
+        // bound is the *headroom* left after the other two residency
+        // classes, so total pinned bytes respect kv_byte_budget.
+        let caps: Vec<usize> = self
+            .active
+            .iter()
+            .map(|a| a.sess.cache().map(|c| c.capacity()).unwrap_or(0))
+            .collect();
+        let has_lane: Vec<bool> =
+            self.active.iter().map(|a| a.sess.pool_lane().is_some()).collect();
+        let lane_bytes = |cap: usize| engine.lane_view_bytes(cap);
+        let headroom = self
+            .cfg
+            .kv_byte_budget
+            .saturating_sub(self.active_kv_bytes() + self.owned_view_bytes());
+        let snapshot = PoolSnapshot {
+            allocated_lanes: engine.view_pool().lane_count(),
+            bound_lanes: engine.view_pool().lanes_in_use(),
+            cap_floor: engine.view_pool().capacity(),
+        };
+        let plan = plan_decode_batches(
+            &caps,
+            &has_lane,
+            self.cfg.max_decode_batch,
+            &lane_bytes,
+            headroom,
+            snapshot,
+        );
+
+        // --- Decode: one fused step per planned group; sequences retire
+        // on EOS (sampled before decode), decode error (batch-wide), or
+        // their token limit.
         let eos = engine.dims().eos;
-        let mut i = 0;
-        while i < self.active.len() {
-            let a = &mut self.active[i];
-            let tok = a.sampler.sample(&a.sess.last_logits);
-            let mut finished = tok == eos;
-            let mut error = None;
-            if !finished {
+        let mut retire: BTreeMap<usize, Option<String>> = BTreeMap::new();
+        for group in &plan {
+            let mut scheduled: Vec<usize> = Vec::with_capacity(group.len());
+            let mut toks: Vec<i32> = Vec::with_capacity(group.len());
+            for &i in group {
+                let a = &mut self.active[i];
+                let tok = a.sampler.sample(&a.sess.last_logits);
+                if tok == eos {
+                    retire.insert(i, None);
+                    continue;
+                }
                 a.generated.push(tok);
-                if let Err(e) = engine.decode_step(&mut a.sess, tok) {
-                    finished = true;
-                    error = Some(format!("decode: {e:#}"));
+                scheduled.push(i);
+                toks.push(tok);
+            }
+            if scheduled.is_empty() {
+                continue;
+            }
+            // Disjoint &mut Session handles for the batch members
+            // (indices are ascending, so the split walk is linear).
+            let mut batch: Vec<&mut Session> = Vec::with_capacity(scheduled.len());
+            let mut rest: &mut [Active] = &mut self.active[..];
+            let mut base = 0usize;
+            for &i in &scheduled {
+                let (head, tail) = rest.split_at_mut(i - base + 1);
+                batch.push(&mut head[i - base].sess);
+                rest = tail;
+                base = i + 1;
+            }
+            if let Err(e) = engine.decode_batch(&mut batch, &toks) {
+                // A batch error poisons the fused step: retire the whole
+                // group with it (per-lane blame is not recoverable from a
+                // fused executable).
+                let msg = format!("decode: {e:#}");
+                for &i in &scheduled {
+                    retire.insert(i, Some(msg.clone()));
                 }
             }
-            if !finished && a.generated.len() >= a.req.max_new {
-                finished = true;
+        }
+        for (i, a) in self.active.iter().enumerate() {
+            if a.generated.len() >= a.req.max_new {
+                retire.entry(i).or_insert(None);
             }
-            if finished {
-                let a = self.active.swap_remove(i);
-                let text = engine.tokenizer.decode(&a.generated);
-                engine.metrics.requests_done += 1;
-                done.push(self.finish(a, error, text));
-            } else {
-                i += 1;
-            }
+        }
+
+        // --- Retire in descending index order so swap_remove never
+        // disturbs a pending index.
+        for (&i, err) in retire.iter().rev() {
+            let a = self.active.swap_remove(i);
+            let text = engine.tokenizer.decode(&a.generated);
+            engine.metrics.requests_done += 1;
+            done.push(self.finish(engine, a, err.clone(), text));
+        }
+
+        // Once no sequence is active, trim the pool so the budget
+        // recovers the pooled bytes (counted once — see
+        // view_bytes_released). This must NOT wait for the queue to
+        // drain: admission charges pooled bytes, so a lingering pool
+        // from retired sequences could otherwise starve queued requests
+        // forever under a tight budget (trim requires every lane
+        // returned, which an empty active set guarantees).
+        if self.active.is_empty() {
+            self.view_bytes_released += engine.trim_view_pool() as u64;
         }
         done
     }
@@ -287,7 +507,86 @@ mod tests {
         let s = Scheduler::new(SchedulerConfig::default());
         assert!(s.is_idle());
         assert_eq!(s.active_kv_bytes(), 0);
-        assert_eq!(s.active_view_bytes(), 0);
+        assert_eq!(s.owned_view_bytes(), 0);
         assert_eq!(s.view_bytes_released(), 0);
+    }
+
+    /// Planner over a fresh pool (nothing allocated or bound).
+    fn plan_fresh(
+        caps: &[usize],
+        max_batch: usize,
+        lane_bytes: &dyn Fn(usize) -> usize,
+        budget: usize,
+        cap_floor: usize,
+    ) -> Vec<Vec<usize>> {
+        let unbound = vec![false; caps.len()];
+        let pool = PoolSnapshot { allocated_lanes: 0, bound_lanes: 0, cap_floor };
+        plan_decode_batches(caps, &unbound, max_batch, lane_bytes, budget, pool)
+    }
+
+    #[test]
+    fn planner_groups_by_capacity_bucket() {
+        let lane = |cap: usize| cap; // 1 byte per slot keeps arithmetic easy
+        let caps = [256, 512, 256, 256, 512];
+        let plan = plan_fresh(&caps, 2, &lane, usize::MAX, 0);
+        assert_eq!(plan, vec![vec![0, 2], vec![3], vec![1, 4]]);
+    }
+
+    #[test]
+    fn planner_defers_lanes_beyond_the_budget() {
+        let lane = |cap: usize| cap;
+        // Budget fits exactly two 256-slot lanes; the rest defer.
+        let caps = [256, 256, 256];
+        let plan = plan_fresh(&caps, 4, &lane, 512, 0);
+        assert_eq!(plan, vec![vec![0, 1]]);
+        // A budget below even one lane still schedules one (progress).
+        let plan = plan_fresh(&caps, 4, &lane, 1, 0);
+        assert_eq!(plan, vec![vec![0]]);
+    }
+
+    #[test]
+    fn planner_accounts_pool_capacity_growth() {
+        let lane = |cap: usize| cap;
+        // Scheduling the 512-cap session raises every lane's footprint to
+        // 512: budget 1024 then fits 2 lanes total, not 3.
+        let caps = [256, 256, 512];
+        let plan = plan_fresh(&caps, 4, &lane, 1024, 0);
+        let scheduled: usize = plan.iter().map(Vec::len).sum();
+        assert_eq!(scheduled, 2);
+        // The pool floor counts even before any session needs it.
+        let plan = plan_fresh(&[256, 256], 4, &lane, 1024, 512);
+        assert_eq!(plan, vec![vec![0, 1]]);
+        let plan = plan_fresh(&[256, 256, 256], 4, &lane, 1024, 512);
+        let scheduled: usize = plan.iter().map(Vec::len).sum();
+        assert_eq!(scheduled, 2, "floor 512 caps the lane count at 2");
+    }
+
+    /// Regression: lanes already bound by deferred or growing sessions
+    /// count toward the pooled footprint — a capacity growth re-layouts
+    /// every allocated lane, not just the ones scheduled this tick.
+    #[test]
+    fn planner_counts_already_bound_lanes_under_growth() {
+        let lane = |cap: usize| cap;
+        // Two sessions bound at 256; session 0's cache grew to 512.
+        // Growing the pool re-layouts BOTH lanes: footprint 2 * 512.
+        let caps = [512, 256];
+        let bound = [true, true];
+        let pool = PoolSnapshot { allocated_lanes: 2, bound_lanes: 2, cap_floor: 256 };
+        let plan = plan_decode_batches(&caps, &bound, 4, &lane, 1024, pool);
+        assert_eq!(plan, vec![vec![1], vec![0]], "1024 fits both lanes at 512");
+        let plan = plan_decode_batches(&caps, &bound, 4, &lane, 1023, pool);
+        assert_eq!(
+            plan,
+            vec![vec![1]],
+            "1023 cannot fit the 2-lane re-layout to 512: the grower defers"
+        );
+        // Bound sessions re-use their lane (no +1), and free allocated
+        // lanes still count: 3 allocated x 256 = 768 even though only
+        // one session schedules.
+        let pool = PoolSnapshot { allocated_lanes: 3, bound_lanes: 1, cap_floor: 256 };
+        let plan = plan_decode_batches(&[256, 256], &[true, false], 4, &lane, 768, pool);
+        assert_eq!(plan, vec![vec![0, 1]], "bound lane re-used, free lane recycled");
+        let plan = plan_decode_batches(&[256, 256], &[true, false], 4, &lane, 767, pool);
+        assert_eq!(plan, vec![vec![0]], "767 < 3 allocated lanes x 256");
     }
 }

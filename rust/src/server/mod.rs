@@ -9,6 +9,13 @@
 //! PJRT work anyway.) Python is never involved: the engine thread only
 //! executes pre-compiled artifacts.
 //!
+//! The engine loop is a *batch feeder*: every tick it drains **all**
+//! pending commands — blocking only when the scheduler is idle, and then
+//! holding a short gather window so commands from concurrent clients
+//! land in the same admission pass — before stepping the continuous
+//! batcher once. Co-arriving requests therefore share the first fused
+//! decode batch instead of being serialized one prefill apart.
+//!
 //! Protocol (one JSON object per line):
 //!
 //! ```json
@@ -20,6 +27,7 @@
 //!
 //! Responses are one JSON object per line: a completion (`"ok": true`), a
 //! stats snapshot (`"ok": "stats"`), or an error (`"ok": false`).
+#![warn(missing_docs)]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -41,18 +49,29 @@ use crate::util::json::Json;
 /// One `generate` call's parameters (flat JSON surface).
 #[derive(Debug, Clone)]
 pub struct GenerateParams {
+    /// Prompt text (byte-tokenized server-side).
     pub prompt: String,
+    /// Generation budget in tokens.
     pub max_new: usize,
     /// `wg-kv` | `full` | `local` | `duo` | `random`.
     pub policy: String,
+    /// Gate-threshold override for `wg-kv` (trained τ when absent).
     pub tau: Option<f32>,
+    /// Attention sinks kept by `local` / `duo`.
     pub sink: usize,
+    /// Extra recent admissions for `local` (window sweep).
     pub recent: usize,
+    /// Retrieval-head ratio for `duo`.
     pub duo_ratio: f32,
+    /// Target sparsity for `random`.
     pub sparsity: f32,
+    /// Enables Quest read-time selection at this token budget.
     pub quest_budget_tokens: Option<usize>,
+    /// Enables SnapKV post-write eviction at this per-head budget.
     pub snapkv_budget: Option<usize>,
+    /// Sampling temperature; absent or 0 means greedy.
     pub temperature: Option<f32>,
+    /// Sampler seed (also the `random` policy's mask seed).
     pub seed: u64,
 }
 
@@ -76,10 +95,12 @@ impl Default for GenerateParams {
 }
 
 impl GenerateParams {
+    /// Defaults with the given prompt text.
     pub fn prompt(text: &str) -> Self {
         Self { prompt: text.to_string(), ..Self::default() }
     }
 
+    /// Parse a `generate` request object; absent fields take defaults.
     pub fn from_json(j: &Json) -> Result<Self> {
         let d = GenerateParams::default();
         Ok(Self {
@@ -114,6 +135,7 @@ impl GenerateParams {
         })
     }
 
+    /// Serialize as a `generate` request object (the client wire form).
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj()
             .set("op", "generate")
@@ -155,6 +177,7 @@ impl GenerateParams {
         })
     }
 
+    /// Full per-session options: policy plus Quest/SnapKV composition.
     pub fn session_options(&self, dims: &ModelDims) -> Result<SessionOptions> {
         Ok(SessionOptions {
             policy: self.policy_kind(dims)?,
@@ -166,6 +189,7 @@ impl GenerateParams {
         })
     }
 
+    /// Sampler configuration implied by `temperature`.
     pub fn sampler_kind(&self) -> SamplerKind {
         match self.temperature {
             Some(t) if t > 0.0 => SamplerKind::Temperature(t),
@@ -177,16 +201,23 @@ impl GenerateParams {
 /// Server-level statistics.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
+    /// Engine counters and latency summaries.
     pub engine: MetricsSnapshot,
+    /// Requests waiting for admission.
     pub queued: usize,
+    /// Sequences currently decoding.
     pub active: usize,
+    /// Submissions rejected by the queue bound.
     pub rejected: u64,
+    /// KV bytes pinned by active sequences in the paged host pool.
     pub active_kv_bytes: usize,
-    /// Device bytes pinned by active sequences' persistent exec views.
+    /// Device bytes pinned by persistent exec views: sessions' owned
+    /// views plus the shared batch-view pool, the latter counted once.
     pub active_view_bytes: usize,
 }
 
 impl ServerStats {
+    /// Serialize as the `stats` response object.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("ok", "stats")
@@ -199,6 +230,7 @@ impl ServerStats {
     }
 }
 
+/// Serialize a completion as the `generate` response object.
 pub fn completion_to_json(c: &Completion) -> Json {
     let mut j = Json::obj()
         .set("ok", true)
@@ -218,6 +250,7 @@ pub fn completion_to_json(c: &Completion) -> Json {
     j
 }
 
+/// Parse a `generate` response object back into a [`Completion`].
 pub fn completion_from_json(j: &Json) -> Completion {
     let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
     Completion {
@@ -237,7 +270,9 @@ pub fn completion_from_json(j: &Json) -> Completion {
 
 /// Command sent to the engine thread.
 pub enum Command {
+    /// Submit a generation request; the completion arrives on the sender.
     Generate(GenerateParams, mpsc::Sender<Completion>),
+    /// Snapshot server statistics.
     Stats(mpsc::Sender<ServerStats>),
 }
 
@@ -273,13 +308,29 @@ where
         let mut next_id: u64 = 0;
         let mut waiters: std::collections::HashMap<u64, mpsc::Sender<Completion>> =
             std::collections::HashMap::new();
+        // How long an idle engine waits for co-arriving commands after the
+        // first one lands, so concurrent clients share the first fused
+        // decode batch instead of being admitted one prefill apart.
+        const BATCH_GATHER: std::time::Duration = std::time::Duration::from_millis(2);
         loop {
-            // Block when idle; drain opportunistically when busy.
+            // Block when idle; gather briefly after the first arrival;
+            // drain opportunistically when busy. Every pending command is
+            // consumed before the batcher steps, so one tick admits them
+            // all together.
             let mut incoming: Vec<Command> = Vec::new();
             if sched.is_idle() {
                 match rx.recv() {
                     Ok(c) => incoming.push(c),
                     Err(_) => break, // all senders dropped
+                }
+                let deadline = std::time::Instant::now() + BATCH_GATHER;
+                while let Some(left) =
+                    deadline.checked_duration_since(std::time::Instant::now())
+                {
+                    match rx.recv_timeout(left) {
+                        Ok(c) => incoming.push(c),
+                        Err(_) => break, // window elapsed or disconnected
+                    }
                 }
             }
             while let Ok(c) = rx.try_recv() {
@@ -318,7 +369,10 @@ where
                             active: sched.active(),
                             rejected: sched.rejected(),
                             active_kv_bytes: sched.active_kv_bytes(),
-                            active_view_bytes: sched.active_view_bytes(),
+                            // Owned views summed per session + the shared
+                            // pool charged once (never per lane-holder).
+                            active_view_bytes: sched.owned_view_bytes()
+                                + engine.pooled_view_bytes(),
                         });
                     }
                 }
@@ -435,6 +489,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a serving endpoint (`host:port`).
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
@@ -450,6 +505,7 @@ impl Client {
         Json::parse(&resp)
     }
 
+    /// Blocking `generate` round-trip; server-side errors become `Err`.
     pub fn generate(&mut self, params: GenerateParams) -> Result<Completion> {
         let j = self.roundtrip(params.to_json())?;
         match j.get("ok") {
@@ -467,6 +523,7 @@ impl Client {
         }
     }
 
+    /// Blocking `stats` round-trip.
     pub fn stats(&mut self) -> Result<ServerStats> {
         let j = self.roundtrip(Json::obj().set("op", "stats"))?;
         if j.get("ok").and_then(Json::as_str) != Some("stats") {

@@ -4,8 +4,10 @@
 
 use std::sync::mpsc;
 
-use wgkv::engine::EngineConfig;
-use wgkv::scheduler::SchedulerConfig;
+use wgkv::admission::PolicyKind;
+use wgkv::engine::{Engine, EngineConfig, SessionOptions};
+use wgkv::model::SamplerKind;
+use wgkv::scheduler::{Request, Scheduler, SchedulerConfig};
 use wgkv::server::{self, Client, Command, GenerateParams};
 use wgkv::util::Rng;
 use wgkv::workload;
@@ -133,6 +135,70 @@ fn bad_requests_get_json_errors_not_disconnects() {
     assert!(line.contains("\"ok\":true"), "got: {line}");
 }
 
+/// The batched-decode acceptance check: greedy outputs through the fused
+/// batch path (shared view pool, padded lanes) must be token-identical to
+/// sequential single-session decode, and the batch must actually fuse.
+#[test]
+fn batched_decode_matches_sequential_greedy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir, EngineConfig::default()).expect("engine must load");
+    // Two distinct prompts, two lanes each: equal-shaped tasks land in one
+    // capacity bucket, so the planner fuses all four.
+    let mut rng = Rng::new(31);
+    let prompts = [workload::gen_kv(&mut rng, 6, 5).prompt, workload::gen_kv(&mut rng, 6, 5).prompt];
+    let max_new = 10;
+    let mut sequential = Vec::new();
+    for p in &prompts {
+        for _ in 0..2 {
+            sequential.push(
+                engine
+                    .generate_text(p, max_new, PolicyKind::WriteGated)
+                    .expect("sequential decode")
+                    .tokens,
+            );
+        }
+    }
+    let batch_steps_before = engine.metrics.batch_steps;
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: 4,
+        max_decode_batch: 4,
+        ..SchedulerConfig::default()
+    });
+    for (id, p) in prompts.iter().flat_map(|p| [p, p]).enumerate() {
+        assert!(sched.submit(Request {
+            id: id as u64,
+            prompt: engine.tokenizer.encode(p),
+            max_new,
+            opts: SessionOptions::policy(PolicyKind::WriteGated),
+            sampler: SamplerKind::Greedy,
+            seed: 0,
+        }));
+    }
+    let done = sched.run_to_completion(&mut engine).expect("batched run");
+    assert_eq!(done.len(), 4);
+    for (c, seq_tokens) in done.iter().zip(&sequential) {
+        assert!(c.error.is_none(), "request {}: {:?}", c.id, c.error);
+        let seq_text = engine.tokenizer.decode(seq_tokens);
+        assert_eq!(
+            c.text, seq_text,
+            "request {} batched output diverged from sequential decode",
+            c.id
+        );
+    }
+    assert!(
+        engine.metrics.batch_steps > batch_steps_before,
+        "the scheduler must have used the fused batch path"
+    );
+    assert!(
+        engine.metrics.batch_mean_lanes() >= 2.0,
+        "equal-bucket sessions must actually share a batch (mean lanes {})",
+        engine.metrics.batch_mean_lanes()
+    );
+    // Drained scheduler: lanes returned, pool trimmed, bytes recovered.
+    assert_eq!(engine.pooled_view_bytes(), 0, "pool must be trimmed after drain");
+    assert!(sched.view_bytes_released() > 0);
+}
+
 #[test]
 fn scheduler_respects_kv_budget_queueing() {
     let Some(dir) = artifacts_dir() else { return };
@@ -141,7 +207,7 @@ fn scheduler_respects_kv_budget_queueing() {
     let (cmds, _h) = server::spawn_engine_thread(
         dir,
         EngineConfig::default(),
-        SchedulerConfig { max_active: 4, kv_byte_budget: 1, max_queue: 64 },
+        SchedulerConfig { max_active: 4, kv_byte_budget: 1, max_queue: 64, max_decode_batch: 4 },
     );
     let mut replies = Vec::new();
     for i in 0..3u64 {

@@ -1,0 +1,260 @@
+//! Property-based tests for continuous batched decode: the scheduler's
+//! batch planner and the shared device-view pool's lane-journal replay.
+//!
+//! Two invariants from the batching design are checked over randomized
+//! histories:
+//!
+//! 1. **Budget safety** — however sessions arrive, the planner never
+//!    schedules a lane set whose pooled bytes exceed `kv_byte_budget`
+//!    (except the single-lane progress guarantee), groups never mix
+//!    capacity buckets, and the plan is a valid sub-partition of the
+//!    active set.
+//! 2. **Lane isolation** — a pool lane delta-synced from its session's
+//!    dirty journal stays bit-identical to a private per-session
+//!    [`DeviceExecView`] fed the same token stream, across ring wrap,
+//!    random promotion, capacity re-layouts (pool-wide invalidation),
+//!    and *mid-batch retirement*: releasing one lane and recycling it
+//!    for a fresh session must not perturb any surviving lane.
+
+use wgkv::kvcache::{dual::CacheDims, SequenceKvCache};
+use wgkv::prop_assert;
+use wgkv::runtime::device_cache::{DeviceExecView, DeviceViewPool, LaneId};
+use wgkv::runtime::tensor::Tensor;
+use wgkv::scheduler::{plan_decode_batches, PoolSnapshot};
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 6),
+        page_size: rng.usize(2, 5),
+    }
+}
+
+// ---- planner properties --------------------------------------------------
+
+#[test]
+fn planner_never_exceeds_budget_in_pooled_bytes() {
+    forall(0x21, |rng| {
+        let d = dims(rng);
+        let cap_classes = [
+            d.w_local + 8,
+            d.w_local + 16,
+            d.w_local + 32,
+        ];
+        let n = rng.usize(0, 12);
+        let caps: Vec<usize> =
+            (0..n).map(|_| cap_classes[rng.usize(0, cap_classes.len())]).collect();
+        let has_lane: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+        let max_batch = rng.usize(1, 6);
+        let lane_bytes = |cap: usize| DeviceViewPool::lane_bytes(d, cap);
+        // Budget anywhere from "fits nothing" to "fits everything".
+        let budget = rng.usize(0, (n.max(1) + 1) * lane_bytes(cap_classes[2]) + 2);
+        // A consistent pool snapshot: one lane per already-bound session,
+        // plus up to two free (released, recyclable) lanes.
+        let bound_lanes = has_lane.iter().filter(|&&b| b).count();
+        let pool = PoolSnapshot {
+            bound_lanes,
+            allocated_lanes: bound_lanes + rng.usize(0, 3),
+            cap_floor: if rng.bool(0.3) { cap_classes[rng.usize(0, 3)] } else { 0 },
+        };
+        let plan = plan_decode_batches(&caps, &has_lane, max_batch, &lane_bytes, budget, pool);
+
+        // A valid sub-partition: indices unique, in range, groups bounded
+        // and capacity-uniform with ascending member order.
+        let mut seen = vec![false; n];
+        for group in &plan {
+            prop_assert!(!group.is_empty(), "empty group emitted");
+            prop_assert!(group.len() <= max_batch, "group over max_batch");
+            let cap0 = caps[group[0]];
+            for w in group.windows(2) {
+                prop_assert!(w[0] < w[1], "group indices not ascending");
+            }
+            for &i in group {
+                prop_assert!(i < n, "index out of range");
+                prop_assert!(!seen[i], "index {i} scheduled twice");
+                seen[i] = true;
+                prop_assert!(caps[i] == cap0, "mixed capacity bucket in a group");
+            }
+        }
+        // Pooled-byte bound: the pool's footprint after this tick is its
+        // lane count — max(allocated, bound + new checkouts) — at the
+        // largest capacity it will have grown to. The single-lane
+        // progress guarantee is the only sanctioned overshoot.
+        let scheduled: Vec<usize> = plan.iter().flatten().copied().collect();
+        if scheduled.len() > 1 {
+            let pool_cap = scheduled
+                .iter()
+                .map(|&i| caps[i])
+                .max()
+                .unwrap_or(0)
+                .max(pool.cap_floor);
+            let new = scheduled.iter().filter(|&&i| !has_lane[i]).count();
+            let lanes_after = pool.allocated_lanes.max(pool.bound_lanes + new);
+            let pooled = lanes_after * lane_bytes(pool_cap);
+            prop_assert!(
+                pooled <= budget,
+                "pooled bytes {pooled} exceed budget {budget} ({lanes_after} lanes at cap {pool_cap})"
+            );
+        }
+        // Progress guarantee: a non-empty active set always decodes
+        // someone, however small the budget.
+        if n > 0 {
+            prop_assert!(!scheduled.is_empty(), "planner starved a non-empty active set");
+        }
+        Ok(())
+    });
+}
+
+// ---- lane replay properties ----------------------------------------------
+
+/// One simulated session: twin caches (one feeds the private view, one
+/// feeds the pool lane — `drain_dirty` is consuming, so each consumer
+/// needs its own journal) driven by an identical token stream.
+struct Sim {
+    view_cache: SequenceKvCache,
+    lane_cache: SequenceKvCache,
+    view: DeviceExecView,
+    lane: LaneId,
+    pos: i64,
+}
+
+fn decoded(d: CacheDims, pos: i64, gate: f32) -> (Tensor, Tensor, Tensor) {
+    let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 + gate);
+    let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 - gate);
+    let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+    (k, v, g)
+}
+
+impl Sim {
+    fn new(d: CacheDims, cap: usize, pool: &mut DeviceViewPool) -> Self {
+        let view_cache = SequenceKvCache::new(d, cap).unwrap();
+        let lane_cache = SequenceKvCache::new(d, cap).unwrap();
+        let view = DeviceExecView::new(&view_cache);
+        let lane = pool.checkout(d, cap);
+        Self { view_cache, lane_cache, view, lane, pos: 0 }
+    }
+
+    /// Phase 1 of a step (the engine's capacity prologue + token write):
+    /// grow both twins if the fullest head demands it, then insert one
+    /// decoded token into each.
+    fn insert(&mut self, d: CacheDims, gate: f32, tau: f32) {
+        let required = self.view_cache.required_slots();
+        if required > self.view_cache.capacity() {
+            let cap = required + d.w_local;
+            self.view_cache.ensure_capacity(cap).unwrap();
+            self.lane_cache.ensure_capacity(cap).unwrap();
+        }
+        let (k, v, g) = decoded(d, self.pos, gate);
+        self.view_cache.insert_decoded(&k, &v, &g, self.pos, |_, _, gt| gt >= tau).unwrap();
+        self.lane_cache.insert_decoded(&k, &v, &g, self.pos, |_, _, gt| gt >= tau).unwrap();
+        self.pos += 1;
+    }
+
+    /// Phase 2: sync both consumers. The caller must have landed every
+    /// pool re-layout (`ensure_capacity` / checkouts) first, mirroring
+    /// `Engine::decode_batch`'s bind-then-sync ordering.
+    fn sync(&mut self, pool: &mut DeviceViewPool) {
+        self.view.sync(&mut self.view_cache);
+        pool.sync_lane(self.lane, &mut self.lane_cache);
+    }
+
+    /// The bit-identity check: the lane's `[0, cap)` prefix must equal
+    /// the private view exactly, and its padding tail must stay masked.
+    fn check(&self, d: CacheDims, pool: &DeviceViewPool) -> Result<(), String> {
+        let cap = self.view_cache.capacity();
+        let cap_b = pool.capacity();
+        let dh = d.d_head;
+        let (kl, vl, ml) = (
+            pool.lane_k(self.lane),
+            pool.lane_v(self.lane),
+            pool.lane_mask(self.lane),
+        );
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let row = (l * d.n_kv_heads + h) * cap_b;
+                let krow = &kl[row * dh..(row + cap_b) * dh];
+                prop_assert!(
+                    &krow[..cap * dh] == self.view.k().slice_at(&[l, h]),
+                    "lane K diverged from view at (l={l}, h={h})"
+                );
+                let vrow = &vl[row * dh..(row + cap_b) * dh];
+                prop_assert!(
+                    &vrow[..cap * dh] == self.view.v().slice_at(&[l, h]),
+                    "lane V diverged from view at (l={l}, h={h})"
+                );
+                let mrow = &ml[row..row + cap_b];
+                prop_assert!(
+                    &mrow[..cap] == self.view.mask().slice_at(&[l, h]),
+                    "lane mask diverged from view at (l={l}, h={h})"
+                );
+                prop_assert!(
+                    mrow[cap..].iter().all(|&x| x == 0.0),
+                    "padding tail unmasked at (l={l}, h={h})"
+                );
+            }
+        }
+        // Quest page bounds: the lane prefix mirrors the view's pages.
+        let pages = self.view.page_min().shape[2];
+        let pages_b = pool.pages();
+        let (pnl, pxl) = (pool.lane_page_min(self.lane), pool.lane_page_max(self.lane));
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let row = (l * d.n_kv_heads + h) * pages_b;
+                let pn = &pnl[row * dh..(row + pages_b) * dh];
+                let px = &pxl[row * dh..(row + pages_b) * dh];
+                prop_assert!(
+                    &pn[..pages * dh] == self.view.page_min().slice_at(&[l, h]),
+                    "lane page_min diverged at (l={l}, h={h})"
+                );
+                prop_assert!(
+                    &px[..pages * dh] == self.view.page_max().slice_at(&[l, h]),
+                    "lane page_max diverged at (l={l}, h={h})"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn lane_replay_survives_mid_batch_retire_bit_identical() {
+    forall(0x22, |rng| {
+        let d = dims(rng);
+        let tau = 0.5;
+        let mut pool = DeviceViewPool::new();
+        let n_lanes = rng.usize(2, 5);
+        let base_cap = d.w_local + d.page_size * rng.usize(2, 5);
+        let mut sims: Vec<Sim> =
+            (0..n_lanes).map(|_| Sim::new(d, base_cap, &mut pool)).collect();
+        let steps = rng.usize(4, 24);
+        for s in 0..steps {
+            for sim in sims.iter_mut() {
+                let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
+                sim.insert(d, gate, tau);
+            }
+            // Land all pool growth before the first sync of the step
+            // (decode_batch's bind-then-sync ordering), then sync lanes.
+            let cap_group = sims.iter().map(|x| x.lane_cache.capacity()).max().unwrap();
+            pool.ensure_capacity(cap_group);
+            for sim in sims.iter_mut() {
+                sim.sync(&mut pool);
+            }
+            // Mid-batch retire: drop a random lane, recycle it for a
+            // fresh session, and keep decoding the survivors.
+            if s == steps / 2 {
+                let victim = rng.usize(0, sims.len());
+                let retired = sims.swap_remove(victim);
+                pool.release(retired.lane);
+                sims.push(Sim::new(d, base_cap, &mut pool));
+            }
+        }
+        for sim in &sims {
+            sim.check(d, &pool)?;
+        }
+        Ok(())
+    });
+}
