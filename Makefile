@@ -6,7 +6,7 @@
 RUST_DIR := rust
 ARTIFACTS ?= $(RUST_DIR)/artifacts
 
-.PHONY: build test bench artifacts docs
+.PHONY: build test test-fast bench artifacts docs
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -22,11 +22,28 @@ docs:
 test: docs
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
 
+# Fast tier: unit tests + the property sweeps only — no AOT artifacts
+# needed (the integration tests are skipped anyway without them, but this
+# target does not even build their real-engine setup paths).
+test-fast:
+	cd $(RUST_DIR) && cargo test -q --lib \
+		--test prop_kvcache --test prop_policies \
+		--test prop_batching --test prop_prefill
+
 # Coordinator perf snapshot: prints the hot-path rows and writes
 # rust/BENCH_coordinator.json — machine-readable results plus the
-# persistent-view full-vs-delta upload-bytes counters, tracked across PRs.
+# persistent-view full-vs-delta upload-bytes counters and the PR 3
+# prefill-batch / defrag counters, tracked across PRs. The greps keep the
+# report's schema honest: a refactor that silently drops a tracked
+# counter fails the bench target, not a later PR's comparison.
 bench:
 	cd $(RUST_DIR) && cargo bench --bench coordinator_hotpath
+	@grep -q '"prefill_batch_steps"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing prefill_batch_steps"; exit 1; }
+	@grep -q '"defrag_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing defrag_events"; exit 1; }
+	@grep -q '"upload_reduction_x"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing upload_reduction_x"; exit 1; }
 
 # AOT-lower the JAX model to HLO-text artifacts for the PJRT runtime.
 artifacts:

@@ -36,13 +36,14 @@ fn main() -> Result<()> {
     let n_requests = args.usize("requests", 40)?;
     let n_clients = args.usize("clients", 4)?;
     let max_active = args.usize("max-active", 6)?;
+    let max_prefill_batch = args.usize("max-prefill-batch", 4)?;
     let addr = args.str("addr", "127.0.0.1:7411");
 
     // Boot the stack: engine thread + TCP acceptor.
     let (cmds, _engine_handle) = server::spawn_engine_thread(
         dir.clone(),
         EngineConfig::default(),
-        SchedulerConfig { max_active, ..SchedulerConfig::default() },
+        SchedulerConfig { max_active, max_prefill_batch, ..SchedulerConfig::default() },
     );
     {
         let addr = addr.clone();

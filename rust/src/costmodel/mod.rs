@@ -246,6 +246,49 @@ impl CostModel {
             / self.decode_step_batched(n_ctx, p, b).total()
     }
 
+    /// Wall-clock for the admission front-end to prefill `b` queued
+    /// length-`n` prompts while a `b_dec`-lane decode batch at context
+    /// `n_ctx` keeps running (the traffic the front-end must not starve).
+    /// Every scheduler tick pays one fused decode step for the running
+    /// batch; `max_prefill_batch` prefills land per tick. With
+    /// `max_prefill_batch = 1` (serial admission) the `b` prefills spread
+    /// over `b` ticks and pay the decode step `b` times; a batched
+    /// front-end admits all `b` in `ceil(b / max_prefill_batch)` ticks —
+    /// the prefill FLOPs are identical (batch-1 bucket executables either
+    /// way), what amortizes is the per-tick decode pass the queue would
+    /// otherwise serialize behind.
+    pub fn prefill_admission_latency(
+        &self,
+        n: usize,
+        p: AdmissionPoint,
+        b: usize,
+        n_ctx: usize,
+        b_dec: usize,
+        max_prefill_batch: usize,
+    ) -> f64 {
+        let b = b.max(1);
+        let ticks = b.div_ceil(max_prefill_batch.max(1));
+        b as f64 * self.prefill(n, p).total()
+            + ticks as f64 * self.decode_step_batched(n_ctx, p, b_dec).total()
+    }
+
+    /// Aggregate prefill-throughput speedup of batched admission (`b`
+    /// prompts per tick) over the serial one-per-tick front-end, same
+    /// workload. Always ≥ 1; grows toward `1 + T_dec_tick / T_prefill`
+    /// as `b` grows, so it is largest exactly where batching matters:
+    /// short prompts co-arriving against a heavy running decode batch.
+    pub fn batched_prefill_speedup(
+        &self,
+        n: usize,
+        p: AdmissionPoint,
+        b: usize,
+        n_ctx: usize,
+        b_dec: usize,
+    ) -> f64 {
+        self.prefill_admission_latency(n, p, b, n_ctx, b_dec, 1)
+            / self.prefill_admission_latency(n, p, b, n_ctx, b_dec, b)
+    }
+
     /// Tokens resident in the KV cache at context `n_ctx`.
     pub fn cached_tokens(&self, n_ctx: usize, p: AdmissionPoint) -> f64 {
         let n = n_ctx as f64;
@@ -504,5 +547,31 @@ mod tests {
         // KV-bound and cannot — batching and admission compose.
         let full4 = m.batched_decode_speedup(n, AdmissionPoint::full(), 4);
         assert!(full4 < s4, "full {full4} vs wg {s4}");
+    }
+
+    #[test]
+    fn batched_prefill_amortizes_the_per_tick_decode_pass() {
+        let m = llama();
+        let wg = AdmissionPoint::sparsity(0.75, 256);
+        let (n, n_ctx, b_dec) = (8_192, 100_000, 4);
+        // b = 1 is exactly the serial front-end.
+        assert!((m.batched_prefill_speedup(n, wg, 1, n_ctx, b_dec) - 1.0).abs() < 1e-12);
+        // Batched admission is never slower, and strictly faster at b >= 2
+        // (it pays the running batch's decode pass once per tick, not once
+        // per admitted prompt); monotone in b.
+        let s2 = m.batched_prefill_speedup(n, wg, 2, n_ctx, b_dec);
+        let s4 = m.batched_prefill_speedup(n, wg, 4, n_ctx, b_dec);
+        let s8 = m.batched_prefill_speedup(n, wg, 8, n_ctx, b_dec);
+        assert!(s2 > 1.0, "b=2 batched prefill must beat serial: {s2}");
+        assert!(s4 >= s2 && s8 >= s4, "s2 {s2} s4 {s4} s8 {s8}");
+        // Bounded: prefill FLOPs are identical either way, so the win is
+        // capped by the decode-tick share of a serial admission tick.
+        let serial_tick =
+            m.prefill(n, wg).total() + m.decode_step_batched(n_ctx, wg, b_dec).total();
+        let cap = serial_tick / m.prefill(n, wg).total();
+        assert!(s8 <= cap + 1e-9, "s8 {s8} above cap {cap}");
+        // Shorter prompts against the same running batch amortize more.
+        let short = m.batched_prefill_speedup(2_048, wg, 4, n_ctx, b_dec);
+        assert!(short > s4, "short {short} vs long {s4}");
     }
 }

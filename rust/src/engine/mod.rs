@@ -42,10 +42,19 @@
 //!   keys are stored post-RoPE, so slot placement carries no positional
 //!   meaning and padded slots are excluded exactly by the mask.
 //!
+//! Prefill has the same split: [`Engine::prefill`] admits one session,
+//! and [`Engine::prefill_batch`] runs a whole planner group — per-session
+//! dispatch through the batch-1 bucket executables (chunked tails
+//! teacher-forced exactly as the sequential path, so outputs stay
+//! token-identical), then every admitted session's pool lane is bound and
+//! populated in the same pass, so the first decode tick pays no wholesale
+//! sync.
+//!
 //! Concurrency is the scheduler's job ([`crate::scheduler`]), which plans
 //! the batches, charges each session's resident view bytes — and the
-//! pooled bytes, once — against the KV budget, and releases lanes when
-//! sequences retire.
+//! pooled bytes, once — against the KV budget, releases lanes when
+//! sequences retire, and compacts the pool ([`Engine::defrag_view_pool`])
+//! when retired peers leave a grown staging pinned.
 
 use std::path::Path;
 use std::time::Instant;
@@ -103,10 +112,16 @@ pub struct Session {
     /// Persistent device execution view, created on the first decode step
     /// and delta-synced from the cache's dirty journal thereafter.
     device_view: Option<DeviceExecView>,
-    /// Lane of the engine's shared [`DeviceViewPool`], bound by the first
-    /// [`Engine::decode_batch`] that schedules this session and returned
+    /// Lane of the engine's shared [`DeviceViewPool`], bound at batched
+    /// prefill ([`Engine::prefill_batch`]) or by the first
+    /// [`Engine::decode_batch`] that schedules this session, and returned
     /// by [`Engine::release_lane`] when the sequence retires.
     lane: Option<LaneId>,
+    /// Transfer counters of owned views this session has already
+    /// released, so the per-request accounting survives the release
+    /// (e.g. a chunked-prefill tail's view dropped when a pool lane is
+    /// bound).
+    released_view_stats: TransferStats,
     /// Absolute position of the next token.
     pos: usize,
     /// Prompt length (for normalized cache-size reporting).
@@ -136,10 +151,15 @@ impl Session {
     }
 
     /// Lifetime host→device transfer counters of the session's *owned*
-    /// view. Pooled-lane counters live in the engine's pool; use
+    /// views — the live one plus any already released. Pooled-lane
+    /// counters live in the engine's pool; use
     /// [`Engine::session_transfer_stats`] for the combined number.
     pub fn device_transfer_stats(&self) -> TransferStats {
-        self.device_view.as_ref().map(|v| v.stats).unwrap_or_default()
+        let mut t = self.released_view_stats;
+        if let Some(v) = &self.device_view {
+            t.accumulate(v.stats);
+        }
+        t
     }
 
     /// The session's checked-out pool lane, if it has been scheduled into
@@ -150,10 +170,18 @@ impl Session {
 
     /// Drop the device-resident view, returning the bytes freed — called
     /// by the scheduler when the sequence retires so the budget recovers
-    /// them immediately. The next decode step (if any) re-creates and
-    /// re-uploads the view wholesale.
+    /// them immediately, and by [`Engine::prefill_batch`] when a pool
+    /// lane supersedes a chunked-prefill tail's view. The view's transfer
+    /// counters are preserved on the session; the next [`Engine::decode_step`]
+    /// (if any) re-creates and re-uploads the view wholesale.
     pub fn release_device_view(&mut self) -> usize {
-        self.device_view.take().map(|v| v.device_bytes()).unwrap_or(0)
+        match self.device_view.take() {
+            Some(v) => {
+                self.released_view_stats.accumulate(v.stats);
+                v.device_bytes()
+            }
+            None => 0,
+        }
     }
 
     /// Normalized KV cache size vs a full cache at the current position
@@ -294,6 +322,7 @@ impl Engine {
             cache: None,
             device_view: None,
             lane: None,
+            released_view_stats: TransferStats::default(),
             pos: 0,
             prompt_len: 0,
             last_logits: Vec::new(),
@@ -374,6 +403,136 @@ impl Engine {
         self.metrics.prefill.record(dt);
         self.metrics.prompt_tokens += n as u64;
         Ok(())
+    }
+
+    /// The prefill bucket a prompt of `n` tokens dispatches through:
+    /// the smallest exported bucket holding `n`, or the largest bucket
+    /// when the prompt overflows every bucket (chunked prefill runs the
+    /// head chunk there and teacher-forces the tail through decode).
+    /// The scheduler's prefill planner groups queued requests by this.
+    pub fn prefill_bucket_for(&self, n: usize) -> usize {
+        let max_bucket = self.max_prompt_len();
+        self.runtime
+            .pick_prefill_bucket(n.clamp(1, max_bucket.max(1)))
+            .unwrap_or(max_bucket)
+    }
+
+    /// Conservative post-prefill *paged-KV* byte estimate for one session
+    /// whose prompt is `prompt_len` tokens: worst-case full admission
+    /// (every head caches every token, page-rounded). Deliberately keyed
+    /// on the full prompt length, **not** the prefill bucket — a chunked
+    /// prompt longer than the largest bucket teacher-forces its tail
+    /// through decode and ends up resident well past the bucket size.
+    /// [`crate::scheduler::plan_prefill_batch`] charges this against the
+    /// KV-budget headroom *before* any prompt is prefilled — admission
+    /// gates run ahead of real occupancy, so the planner must bound the
+    /// worst case; the admitted set's real bytes are re-measured next
+    /// tick. The session's pool-lane bytes are **not** included here: the
+    /// planner models the shared pool's footprint itself (charged once,
+    /// with lane recycling and growth re-layouts), using
+    /// [`Self::prefill_implied_capacity`] and [`Self::lane_view_bytes`].
+    pub fn prefill_byte_estimate(&self, prompt_len: usize) -> usize {
+        SequenceKvCache::worst_case_kv_bytes(self.cache_dims(), prompt_len.max(1))
+    }
+
+    /// The decode capacity a session with a `prompt_len`-token prompt
+    /// executes at in the worst (full-admission) case — the capacity its
+    /// pool lane is checked out with, which the prefill planner feeds
+    /// into the pooled-footprint model. Like the byte estimate this is
+    /// keyed on the prompt length (chunked tails grow the cache past the
+    /// bucket); a requirement beyond every exported executable saturates
+    /// at the largest one, which is where the real cache growth errors
+    /// out too.
+    pub fn prefill_implied_capacity(&self, prompt_len: usize) -> usize {
+        let d = self.cache_dims();
+        let required = prompt_len.max(1) + 1 + d.w_local + self.cfg.capacity_headroom;
+        self.runtime
+            .pick_decode_capacity(required)
+            .unwrap_or_else(|_| self.max_capacity().max(1))
+    }
+
+    /// Run prefill for one planner pass of admitted sessions (the tick's
+    /// bucket groups concatenated in plan order) — the admission
+    /// front-end of a two-phase tick (see [`crate::scheduler`]). When
+    /// true batched prefill executables land, the per-bucket-group
+    /// structure of the plan turns this into one fused call per group.
+    ///
+    /// Each session dispatches through the existing batch-1 bucket
+    /// executables via [`Self::prefill`] — chunked-prefill tails are
+    /// teacher-forced exactly as in the sequential path, so outputs stay
+    /// token-identical — then every successfully prefilled session's
+    /// [`DeviceViewPool`] lane is bound and populated in the same pass
+    /// (bind-then-sync: all checkouts and capacity growth land before the
+    /// first lane sync), so the first decode step pays no wholesale
+    /// upload. Errors are per-session, not batch-wide: element `i` of the
+    /// result is `Ok(prefill_us)` or that session's prefill error (the
+    /// scheduler retires failures individually and keeps the rest).
+    pub fn prefill_batch(
+        &mut self,
+        sessions: &mut [&mut Session],
+        prompts: &[&[i32]],
+    ) -> Vec<Result<f64>> {
+        assert_eq!(
+            sessions.len(),
+            prompts.len(),
+            "prefill_batch: one prompt per session"
+        );
+        // Phase A: per-session prefill through the bucket executables.
+        let mut out: Vec<Result<f64>> = Vec::with_capacity(sessions.len());
+        for (sess, prompt) in sessions.iter_mut().zip(prompts) {
+            let t0 = Instant::now();
+            out.push(
+                self.prefill(sess, prompt)
+                    .map(|()| t0.elapsed().as_secs_f64() * 1e6),
+            );
+        }
+        // Phase B: bind pool lanes for every success. Checkouts and
+        // capacity growth re-layout the pool, so all of them must land
+        // before the first lane sync below (the decode_batch ordering).
+        let mut cap_group = self.view_pool.capacity();
+        for (sess, r) in sessions.iter().zip(&out) {
+            if r.is_ok() {
+                cap_group = cap_group.max(sess.cache.as_ref().unwrap().capacity());
+            }
+        }
+        self.view_pool.ensure_capacity(cap_group);
+        let mut n_ok = 0u64;
+        for (sess, r) in sessions.iter_mut().zip(&out) {
+            if r.is_err() {
+                continue;
+            }
+            n_ok += 1;
+            if sess.lane.is_none() {
+                let cache_dims = sess.cache.as_ref().unwrap().dims();
+                sess.lane = Some(self.view_pool.checkout(cache_dims, cap_group));
+            }
+            // A chunked-prefill tail teacher-forced through decode_step
+            // created an owned view; the scheduler decodes through the
+            // lane, so drop the dead buffers before they pin budget
+            // (transfer counters are preserved on the session).
+            let _ = sess.release_device_view();
+        }
+        // Phase C: populate each lane (the one wholesale upload per
+        // session, paid here instead of on the first decode tick).
+        for (sess, r) in sessions.iter_mut().zip(&out) {
+            if r.is_err() {
+                continue;
+            }
+            let cache = sess.cache.as_mut().unwrap();
+            let report = self.view_pool.sync_lane(sess.lane.unwrap(), cache);
+            self.metrics.upload_bytes += report.bytes as u64;
+            self.metrics.upload_full_equiv_bytes += cache.full_view_bytes() as u64;
+            if report.full {
+                self.metrics.view_full_uploads += 1;
+            } else {
+                self.metrics.view_delta_uploads += 1;
+            }
+        }
+        if !sessions.is_empty() {
+            self.metrics.prefill_batch_steps += 1;
+            self.metrics.prefill_batch_lanes += n_ok;
+        }
+        out
     }
 
     /// Run one decode step: delta-sync the persistent device view, execute
@@ -697,6 +856,21 @@ impl Engine {
     /// the bytes released back to the KV budget (0 while lanes are out).
     pub fn trim_view_pool(&mut self) -> usize {
         self.view_pool.trim()
+    }
+
+    /// Compact the shared view pool down to the live-session requirement
+    /// (`required_cap` = max execution capacity over active sessions; see
+    /// [`crate::runtime::device_cache::DeviceViewPool::defrag`]). Returns
+    /// the bytes released back to the KV budget; counts a `defrag_events`
+    /// metric only when something was actually reclaimed. The scheduler
+    /// calls this at retire boundaries and when a non-empty queue is
+    /// blocked on the budget — never between a step's binds and syncs.
+    pub fn defrag_view_pool(&mut self, required_cap: usize) -> usize {
+        let freed = self.view_pool.defrag(required_cap);
+        if freed > 0 {
+            self.metrics.defrag_events += 1;
+        }
+        freed
     }
 
     /// A session's lifetime host→device transfer counters across both its

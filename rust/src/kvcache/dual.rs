@@ -297,6 +297,18 @@ impl SequenceKvCache {
         self.pool.allocated_kv_bytes()
     }
 
+    /// Worst-case paged KV bytes a sequence of `n` tokens can pin: every
+    /// (layer, head) caches every token (full admission), rounded up to
+    /// whole pages — the paged-pool counterpart of
+    /// [`crate::runtime::device_cache::DeviceViewPool::lane_bytes`]. The
+    /// prefill batch planner charges this estimate against the KV byte
+    /// budget *before* a prompt is prefilled, when the post-admission
+    /// occupancy is not yet known.
+    pub fn worst_case_kv_bytes(d: CacheDims, n: usize) -> usize {
+        let pages = n.div_ceil(d.page_size.max(1)) * d.n_layers * d.n_kv_heads;
+        pages * d.page_size * d.d_head * 2 * std::mem::size_of::<f32>()
+    }
+
     /// Pool-level stats (fragmentation analysis).
     pub fn pool_stats(&self) -> super::pool::PoolStats {
         self.pool.stats()
@@ -1179,5 +1191,27 @@ mod tests {
         check(&c);
         c.ensure_capacity(64).unwrap();
         check(&c);
+    }
+
+    /// The planner's pre-prefill estimate must dominate the bytes a fully
+    /// admitted sequence of the same length actually pins.
+    #[test]
+    fn worst_case_kv_bytes_bounds_full_admission() {
+        let d = dims();
+        let n = 14usize;
+        let mut c = SequenceKvCache::new(d, 32).unwrap();
+        for pos in 0..n as i64 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
+        }
+        let est = SequenceKvCache::worst_case_kv_bytes(d, n);
+        assert!(
+            est >= c.allocated_kv_bytes(),
+            "estimate {est} under-counts allocated {}",
+            c.allocated_kv_bytes()
+        );
+        // Page-rounded, not wildly conservative: within two pages per head.
+        let slack = 2 * d.n_layers * d.n_kv_heads * d.page_size * d.d_head * 2 * 4;
+        assert!(est <= c.allocated_kv_bytes() + slack);
     }
 }

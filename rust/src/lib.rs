@@ -16,8 +16,9 @@
 //!   owns the paper's dual Local/Global paged cache with lazy promotion
 //!   ([`kvcache`]), the admission policies ([`admission`]), read-time
 //!   selection ([`selection`]), post-write eviction ([`eviction`]), the
-//!   serving engine ([`engine`]), continuous batched decode over a shared
-//!   device-view pool ([`scheduler`]), a threaded TCP JSON-lines server
+//!   serving engine ([`engine`]), batched prefill admission and
+//!   continuous batched decode over a shared device-view pool
+//!   ([`scheduler`]), a threaded TCP JSON-lines server
 //!   ([`server`]), workload generators ([`workload`]), and the
 //!   H200 analytic cost model used to reproduce the paper's latency/memory
 //!   figures ([`costmodel`]).

@@ -23,7 +23,7 @@ wgkv — learned KV-cache admission for long-context serving
 
 USAGE:
   wgkv serve     [--artifacts DIR] [--addr HOST:PORT] [--max-active N] [--max-batch N]
-                 [--kv-budget BYTES]
+                 [--max-prefill-batch N] [--kv-budget BYTES]
   wgkv generate  [--artifacts DIR] --prompt TEXT [--max-new N] [--variant FILE] [POLICY]
   wgkv eval      [--artifacts DIR] [--instances N] [--seed S] [--variant FILE] [POLICY]
   wgkv costmodel [--model llama|qwen]
@@ -82,6 +82,7 @@ fn serve(args: &Args) -> Result<()> {
         max_active: args.usize("max-active", 8)?,
         kv_byte_budget: args.usize("kv-budget", 256 << 20)?,
         max_decode_batch: args.usize("max-batch", 4)?,
+        max_prefill_batch: args.usize("max-prefill-batch", 4)?,
         ..SchedulerConfig::default()
     };
     let (cmds, _handle) = server::spawn_engine_thread(artifacts, EngineConfig::default(), cfg);

@@ -135,6 +135,14 @@ pub struct EngineMetrics {
     /// Lanes decoded across all batched steps; `batch_lanes /
     /// batch_steps` is the realized mean batch size.
     pub batch_lanes: u64,
+    /// Batched prefill passes executed (`Engine::prefill_batch`).
+    pub prefill_batch_steps: u64,
+    /// Sessions prefilled across all batched passes; `prefill_batch_lanes
+    /// / prefill_batch_steps` is the realized mean admission batch size.
+    pub prefill_batch_lanes: u64,
+    /// Pool defrag events that actually reclaimed bytes (a grown staging
+    /// compacted down to the live-session requirement).
+    pub defrag_events: u64,
 }
 
 impl EngineMetrics {
@@ -170,6 +178,9 @@ impl EngineMetrics {
             view_full_uploads: self.view_full_uploads,
             batch_steps: self.batch_steps,
             batch_lanes: self.batch_lanes,
+            prefill_batch_steps: self.prefill_batch_steps,
+            prefill_batch_lanes: self.prefill_batch_lanes,
+            defrag_events: self.defrag_events,
         }
     }
 
@@ -179,6 +190,15 @@ impl EngineMetrics {
             0.0
         } else {
             self.batch_lanes as f64 / self.batch_steps as f64
+        }
+    }
+
+    /// Realized mean batched-prefill admission size (0 before any pass).
+    pub fn prefill_batch_mean_lanes(&self) -> f64 {
+        if self.prefill_batch_steps == 0 {
+            0.0
+        } else {
+            self.prefill_batch_lanes as f64 / self.prefill_batch_steps as f64
         }
     }
 }
@@ -202,6 +222,9 @@ pub struct MetricsSnapshot {
     pub view_full_uploads: u64,
     pub batch_steps: u64,
     pub batch_lanes: u64,
+    pub prefill_batch_steps: u64,
+    pub prefill_batch_lanes: u64,
+    pub defrag_events: u64,
 }
 
 impl MetricsSnapshot {
@@ -223,6 +246,9 @@ impl MetricsSnapshot {
             .set("view_full_uploads", self.view_full_uploads)
             .set("batch_steps", self.batch_steps)
             .set("batch_lanes", self.batch_lanes)
+            .set("prefill_batch_steps", self.prefill_batch_steps)
+            .set("prefill_batch_lanes", self.prefill_batch_lanes)
+            .set("defrag_events", self.defrag_events)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -244,6 +270,9 @@ impl MetricsSnapshot {
             view_full_uploads: f("view_full_uploads") as u64,
             batch_steps: f("batch_steps") as u64,
             batch_lanes: f("batch_lanes") as u64,
+            prefill_batch_steps: f("prefill_batch_steps") as u64,
+            prefill_batch_lanes: f("prefill_batch_lanes") as u64,
+            defrag_events: f("defrag_events") as u64,
         }
     }
 }

@@ -247,11 +247,14 @@ struct Lane {
 /// The pool grows on demand — a checkout with no free lane adds a lane,
 /// and a session whose cache re-layouts beyond the pool capacity grows
 /// every lane — and each growth is a *pool re-layout*: the layout epoch
-/// bumps and every lane's next sync is wholesale. Buffers are only freed
-/// by [`Self::trim`], which the scheduler calls whenever its active
-/// set empties; until
-/// then the pooled bytes stay pinned (and charged once) regardless of
-/// how many sessions come and go.
+/// bumps and every lane's next sync is wholesale. Buffers shrink at two
+/// boundaries only, both scheduler-driven and never mid-step:
+/// [`Self::trim`] frees everything once every lane is returned (the
+/// active set emptied), and [`Self::defrag`] compacts a grown pool down
+/// to the live-session requirement (retire boundaries, or a blocked
+/// admission pass under a tight budget); between those, the pooled bytes
+/// stay pinned (and charged once) regardless of how many sessions come
+/// and go.
 pub struct DeviceViewPool {
     /// Cache geometry shared by every lane (set by the first checkout).
     dims: Option<CacheDims>,
@@ -449,6 +452,44 @@ impl DeviceViewPool {
         self.pages = 0;
         self.epoch += 1;
         freed
+    }
+
+    /// Lane compaction: shrink the pooled buffers to the live-session
+    /// requirement, so a long-lived small session no longer pins a
+    /// staging grown for peers that have since retired.
+    ///
+    /// Two axes shrink at once: trailing *free* lanes are dropped (bound
+    /// lanes keep their indices, so checked-out [`LaneId`]s stay valid —
+    /// free lanes below the highest bound index stay allocated for
+    /// recycling), and the per-lane capacity shrinks to `required_cap`
+    /// (never below — the caller passes the max execution capacity over
+    /// all live sessions, which always matches an exported executable).
+    /// Any shrink is a pool re-layout: the epoch bumps and every
+    /// surviving lane's next sync is wholesale — which is why callers
+    /// (the scheduler) run defrag only at retire/trim boundaries, never
+    /// between a step's lane binds and its syncs. When nothing would
+    /// shrink this is a no-op: no re-layout, no epoch bump, 0 returned —
+    /// so calling it speculatively every blocked tick cannot thrash
+    /// resyncs. With no lane bound at all it degrades to [`Self::trim`].
+    ///
+    /// Returns the device bytes released back to the KV budget.
+    pub fn defrag(&mut self, required_cap: usize) -> usize {
+        if self.dims.is_none() || self.lanes.is_empty() {
+            return 0;
+        }
+        let keep_lanes = match self.lanes.iter().rposition(|l| l.in_use) {
+            Some(i) => i + 1,
+            None => return self.trim(),
+        };
+        let new_cap =
+            if required_cap == 0 { self.cap } else { required_cap.min(self.cap) };
+        if keep_lanes == self.lanes.len() && new_cap == self.cap {
+            return 0;
+        }
+        let before = self.device_bytes();
+        self.lanes.truncate(keep_lanes);
+        self.relayout(keep_lanes, new_cap);
+        before.saturating_sub(self.device_bytes())
     }
 
     /// Drain `cache`'s dirty journal into `lane`'s staged image — the
@@ -726,6 +767,69 @@ mod tests {
         assert_eq!(pool.trim(), two_lane_bytes);
         assert_eq!(pool.device_bytes(), 0);
         assert_eq!(pool.trim(), 0, "double-trim must release nothing");
+    }
+
+    /// Defrag shrinks both axes (capacity to the live requirement,
+    /// trailing free lanes dropped), keeps bound lane indices valid, and
+    /// wholesale-invalidates survivors exactly once.
+    #[test]
+    fn defrag_shrinks_grown_pool_around_live_lane() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut small = SequenceKvCache::new(d, 8).unwrap();
+        let small_lane = pool.checkout(d, 8);
+        let big_lane = pool.checkout(d, 32); // grows every lane to cap 32
+        pool.sync_lane(small_lane, &mut small);
+        assert_eq!(pool.capacity(), 32);
+        // The big session retires; its grown staging lingers.
+        pool.release(big_lane);
+        let grown = pool.device_bytes();
+        assert_eq!(grown, 2 * DeviceViewPool::lane_bytes(d, 32));
+        // Defrag at the retire boundary: back to one lane at cap 8.
+        let e0 = pool.layout_epoch();
+        let freed = pool.defrag(8);
+        assert_eq!(pool.lane_count(), 1);
+        assert_eq!(pool.capacity(), 8);
+        assert_eq!(pool.device_bytes(), DeviceViewPool::lane_bytes(d, 8));
+        assert_eq!(freed, grown - pool.device_bytes());
+        assert!(pool.layout_epoch() > e0, "a shrink is a re-layout");
+        // The surviving lane resyncs wholesale, then deltas again.
+        let r = pool.sync_lane(small_lane, &mut small);
+        assert!(r.full, "defrag must wholesale-invalidate survivors");
+        assert_lane_matches(&pool, small_lane, &small);
+        // No slack left: defrag is now a no-op and must NOT bump the
+        // epoch (speculative calls cannot thrash resyncs).
+        let e1 = pool.layout_epoch();
+        assert_eq!(pool.defrag(8), 0);
+        assert_eq!(pool.layout_epoch(), e1);
+        let r = pool.sync_lane(small_lane, &mut small);
+        assert!(!r.full, "no-op defrag must not invalidate lanes");
+    }
+
+    /// A free lane *below* a bound one cannot be dropped (indices must
+    /// stay valid) but still shrinks to the new capacity; with no lane
+    /// bound, defrag degrades to trim.
+    #[test]
+    fn defrag_keeps_bound_indices_and_degrades_to_trim() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let la = pool.checkout(d, 32);
+        let lb = pool.checkout(d, 8);
+        pool.release(la); // lane 0 free, lane 1 (lb) still bound
+        let freed = pool.defrag(8);
+        assert!(freed > 0);
+        assert_eq!(pool.lane_count(), 2, "free lane below a bound one survives");
+        assert_eq!(pool.capacity(), 8);
+        assert_eq!(pool.device_bytes(), 2 * DeviceViewPool::lane_bytes(d, 8));
+        // Recycling still prefers the surviving free lane.
+        let lc = pool.checkout(d, 8);
+        assert_eq!(lc.index(), la.index());
+        // All lanes released: defrag frees everything, like trim.
+        pool.release(lb);
+        pool.release(lc);
+        assert_eq!(pool.defrag(8), 2 * DeviceViewPool::lane_bytes(d, 8));
+        assert_eq!(pool.device_bytes(), 0);
+        assert_eq!(pool.defrag(8), 0, "empty pool: defrag is a no-op");
     }
 
     #[test]

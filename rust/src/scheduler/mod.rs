@@ -1,14 +1,17 @@
-//! Request scheduling: queueing, continuous batched decode, KV-budget
-//! admission control.
+//! Request scheduling: batched prefill admission, continuous batched
+//! decode, KV-budget admission control, pool compaction.
 //!
-//! The scheduler is the *batch planner* of the stack: new requests are
-//! admitted into the active set as soon as (a) a slot frees up and (b)
-//! the KV byte budget allows, and every tick the active set is
-//! partitioned into **fused decode batches** ([`plan_decode_batches`])
-//! that [`Engine::decode_batch`] runs over the engine's shared
-//! device-view pool — one token per active sequence per tick, finished
-//! sequences retiring immediately so the next queued request takes their
-//! lane without draining the batch (the vLLM/Orca scheduling structure).
+//! The scheduler is the *two-phase tick planner* of the stack. Phase 1
+//! (**admission**): queued requests are partitioned into prefill-bucket
+//! groups ([`plan_prefill_batch`]) and up to `max_prefill_batch` of them
+//! are admitted per tick through [`Engine::prefill_batch`] — the serial
+//! one-prefill-per-tick front-end no longer starves the decode bucket.
+//! Phase 2 (**decode**): the active set is partitioned into **fused
+//! decode batches** ([`plan_decode_batches`]) that
+//! [`Engine::decode_batch`] runs over the engine's shared device-view
+//! pool — one token per active sequence per tick, finished sequences
+//! retiring immediately so the next queued request takes their lane
+//! without draining the batch (the vLLM/Orca scheduling structure).
 //!
 //! Batch planning groups sessions by *capacity bucket*: members of one
 //! fused call share an exported decode capacity, so the pooled
@@ -35,7 +38,12 @@
 //! whenever the active set empties the scheduler trims the pool so the
 //! budget recovers the pooled bytes before the next admission pass —
 //! trimming must not wait for the queue to drain, or a tight budget
-//! would starve queued requests behind a lingering empty pool.
+//! would starve queued requests behind a lingering empty pool. While
+//! sequences remain active the scheduler instead **defrags**: at retire
+//! boundaries, and whenever a non-empty queue was deferred by the
+//! budget, the pool is compacted down to the live-session requirement
+//! ([`Engine::defrag_view_pool`]), so a long-lived small session cannot
+//! pin a staging grown for peers that already retired.
 #![warn(missing_docs)]
 
 use std::collections::{BTreeMap, VecDeque};
@@ -60,6 +68,10 @@ pub struct SchedulerConfig {
     /// Max sessions fused into one [`Engine::decode_batch`] call; 1 (or
     /// 0, treated as 1) degrades to sequential per-session decode.
     pub max_decode_batch: usize,
+    /// Max queued sessions admitted (prefilled) per tick by
+    /// [`Engine::prefill_batch`]; 1 (or 0, treated as 1) degrades to the
+    /// serial one-prefill-per-tick admission front-end.
+    pub max_prefill_batch: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -69,6 +81,7 @@ impl Default for SchedulerConfig {
             kv_byte_budget: 256 << 20,
             max_queue: 1024,
             max_decode_batch: 4,
+            max_prefill_batch: 4,
         }
     }
 }
@@ -209,6 +222,105 @@ pub fn plan_decode_batches(
     groups
 }
 
+/// Plan one prefill (admission) tick: partition the *queued* requests —
+/// given as their prefill buckets in arrival order — into bucket-uniform
+/// groups, admitting at most `min(max_batch, free_slots)` sessions total.
+///
+/// Requests sharing a bucket are grouped oldest-first (one group per
+/// bucket, ascending bucket order), so each group dispatches through one
+/// bucket executable and a future batched prefill executable drops in
+/// per group.
+///
+/// Admission uses the **same byte accounting as the decode planner**:
+/// `byte_budget` is the KV-budget headroom left after paged-cache and
+/// owned-view bytes, and the shared pool is charged exactly once through
+/// the decode planner's footprint model — the lane count after this tick
+/// is `max(allocated, bound + admissions)` (free lanes recycle before
+/// the pool grows) at the largest capacity the pool will have grown to
+/// (`max(cap_floor, implied_cap(i))` over admissions; a growth
+/// re-layouts every allocated lane). On top of the pooled footprint each
+/// admission charges `est_paged(i)`; both callbacks are keyed by **queue
+/// index**, not bucket — a chunked prompt longer than the largest bucket
+/// grows past its bucket's size, so the estimates must see the real
+/// prompt length ([`Engine::prefill_byte_estimate`] documents both
+/// terms). Prefill happens *before* admission gates can observe real
+/// occupancy, so the planner must bound the worst case. A request that
+/// would push the modeled total past the headroom is deferred in place,
+/// without blocking smaller requests behind it (bounded by the aging
+/// rule in [`Scheduler::step`], so the bypass cannot starve the queue
+/// head).
+///
+/// `force_first` is the single-session progress guarantee: when the
+/// active set is empty, nothing can retire to free bytes, so the first
+/// request is admitted even over budget (a tiny budget degrades to
+/// serial admission instead of livelock). With sessions still active the
+/// guarantee is *not* taken — deferring the whole queue is safe because
+/// the active set keeps making progress and returns bytes at retire.
+///
+/// Indices are ascending within each group; every index appears in at
+/// most one group (a request is never admitted twice).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_prefill_batch(
+    buckets: &[usize],
+    max_batch: usize,
+    free_slots: usize,
+    est_paged: &dyn Fn(usize) -> usize,
+    implied_cap: &dyn Fn(usize) -> usize,
+    lane_bytes: &dyn Fn(usize) -> usize,
+    byte_budget: usize,
+    pool: PoolSnapshot,
+    force_first: bool,
+) -> Vec<Vec<usize>> {
+    let max_admit = max_batch.max(1).min(free_slots);
+    if max_admit == 0 {
+        return Vec::new();
+    }
+    let mut by_bucket: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, &b) in buckets.iter().enumerate() {
+        by_bucket.entry(b).or_default().push(i);
+    }
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut admitted = 0usize;
+    let mut paged = 0usize;
+    let mut pool_cap = pool.cap_floor;
+    for (_bucket, idxs) in by_bucket {
+        let mut group: Vec<usize> = Vec::new();
+        for i in idxs {
+            if admitted == max_admit {
+                break;
+            }
+            let cap_after = pool_cap.max(implied_cap(i));
+            let lanes_after =
+                pool.allocated_lanes.max(pool.bound_lanes + admitted + 1);
+            let total = paged
+                .saturating_add(est_paged(i))
+                .saturating_add(lanes_after.saturating_mul(lane_bytes(cap_after)));
+            if total > byte_budget && !(force_first && admitted == 0) {
+                // Defer: this request stays queued, in arrival order,
+                // until retirements (or a pool defrag) recover bytes.
+                continue;
+            }
+            paged += est_paged(i);
+            pool_cap = cap_after;
+            admitted += 1;
+            group.push(i);
+        }
+        if !group.is_empty() {
+            groups.push(group);
+        }
+        if admitted == max_admit {
+            break;
+        }
+    }
+    groups
+}
+
+/// Consecutive bypassed ticks after which the prefill planner is offered
+/// only the queue head, so bucket-grouped admission (which lets small
+/// requests pass a budget-deferred large one) stays a bounded reordering
+/// instead of starvation.
+const HEAD_MAX_BYPASS: usize = 16;
+
 /// Continuous batcher over one [`Engine`]. See the module docs.
 pub struct Scheduler {
     /// Limits this scheduler was built with.
@@ -216,9 +328,13 @@ pub struct Scheduler {
     queue: VecDeque<Request>,
     active: Vec<Active>,
     rejected: u64,
-    /// View bytes returned to the budget: owned views released at retire
-    /// plus pool trims once the scheduler drains.
+    /// View bytes returned to the budget: owned views released at retire,
+    /// pool trims once the scheduler drains, and pool defrag shrinks at
+    /// retire/blocked boundaries.
     view_bytes_released: u64,
+    /// Consecutive admission ticks in which requests were admitted past a
+    /// still-queued head (see [`HEAD_MAX_BYPASS`]).
+    head_bypass_ticks: usize,
 }
 
 impl Scheduler {
@@ -230,6 +346,7 @@ impl Scheduler {
             active: Vec::new(),
             rejected: 0,
             view_bytes_released: 0,
+            head_bypass_ticks: 0,
         }
     }
 
@@ -281,9 +398,10 @@ impl Scheduler {
     }
 
     /// View bytes returned to the budget by retired sequences' owned
-    /// views and by pool trims whenever the active set empties. Pooled
-    /// buffers count exactly once, at trim — a retiring session's lane
-    /// recycles without freeing anything.
+    /// views, by pool trims whenever the active set empties, and by pool
+    /// defrag shrinks at retire/blocked boundaries. Pooled buffers count
+    /// exactly once, at trim or defrag — a retiring session's lane
+    /// recycles without freeing anything by itself.
     pub fn view_bytes_released(&self) -> u64 {
         self.view_bytes_released
     }
@@ -318,51 +436,145 @@ impl Scheduler {
         }
     }
 
-    /// One scheduling tick: admit queued requests while the budget
-    /// allows, plan the active set into fused batches, decode one token
-    /// per scheduled sequence, and retire finished ones. Returns the
-    /// completions that retired this tick.
+    /// One scheduling tick — a **two-phase tick plan**: (1) admit a
+    /// *batch* of queued requests through [`Engine::prefill_batch`] while
+    /// slots and the KV byte budget allow, (2) plan the active set into
+    /// fused decode batches and decode one token per scheduled sequence,
+    /// then retire finished ones and compact/trim the view pool at the
+    /// boundary. Returns the completions that retired this tick.
     pub fn step(&mut self, engine: &mut Engine) -> Vec<Completion> {
         let mut done = Vec::new();
 
-        // --- Admission control: slots + KV byte budget. The budget
-        // covers the paged pool, owned views, and the shared view pool
-        // (charged once); retired sequences released theirs at finish,
-        // so the check sees the recovered bytes immediately.
-        while self.active.len() < self.cfg.max_active {
-            let pinned =
-                self.active_kv_bytes() + self.owned_view_bytes() + engine.pooled_view_bytes();
-            if self.queue.is_empty() || pinned >= self.cfg.kv_byte_budget {
-                break;
+        // --- Phase 1, admission: plan a prefill batch over the queue.
+        // The budget covers the paged pool, owned views, and the shared
+        // view pool (charged once); retired sequences released theirs at
+        // finish, so the headroom sees the recovered bytes immediately.
+        // Admission charges the engine's conservative per-bucket byte
+        // estimate up front (the admitted set's real bytes are
+        // re-measured next tick).
+        let free_slots = self.cfg.max_active.saturating_sub(self.active.len());
+        if free_slots > 0 && !self.queue.is_empty() {
+            // Headroom after the two non-pooled residency classes; the
+            // shared pool is modeled inside the planner (charged once),
+            // exactly like the decode planner below.
+            let headroom = self
+                .cfg
+                .kv_byte_budget
+                .saturating_sub(self.active_kv_bytes() + self.owned_view_bytes());
+            // Aging bound: bucket-grouped admission deliberately lets
+            // later small requests pass a budget-deferred large queue
+            // head, but a sustained small-request stream could then
+            // starve it forever. After HEAD_MAX_BYPASS consecutive
+            // bypassed ticks only the head is offered to the planner, so
+            // freed bytes accrue to it instead of to younger requests.
+            let consider = if self.head_bypass_ticks >= HEAD_MAX_BYPASS {
+                1
+            } else {
+                self.queue.len()
+            };
+            let buckets: Vec<usize> = self
+                .queue
+                .iter()
+                .take(consider)
+                .map(|r| engine.prefill_bucket_for(r.prompt.len()))
+                .collect();
+            // Estimates are keyed by queue index and computed from the
+            // real prompt length — chunked prompts grow past their
+            // bucket, so the bucket alone would under-count them.
+            let lens: Vec<usize> = self
+                .queue
+                .iter()
+                .take(consider)
+                .map(|r| r.prompt.len())
+                .collect();
+            let est_paged = |i: usize| engine.prefill_byte_estimate(lens[i]);
+            let implied_cap = |i: usize| engine.prefill_implied_capacity(lens[i]);
+            let lane_bytes = |cap: usize| engine.lane_view_bytes(cap);
+            let snapshot = PoolSnapshot {
+                allocated_lanes: engine.view_pool().lane_count(),
+                bound_lanes: engine.view_pool().lanes_in_use(),
+                cap_floor: engine.view_pool().capacity(),
+            };
+            let plan = plan_prefill_batch(
+                &buckets,
+                self.cfg.max_prefill_batch,
+                free_slots,
+                &est_paged,
+                &implied_cap,
+                &lane_bytes,
+                headroom,
+                snapshot,
+                self.active.is_empty(),
+            );
+            // Pull the admitted requests out of the queue (descending
+            // index removal keeps deferred requests queued in arrival
+            // order), then run the whole tick's admissions through ONE
+            // prefill_batch pass — group order preserved, so a future
+            // batched prefill executable splits this into one call per
+            // bucket group without re-planning; a single pass also lands
+            // every pool re-layout (lane checkouts, capacity growth) in
+            // one epoch before the lanes are populated.
+            let order: Vec<usize> = plan.iter().flatten().copied().collect();
+            if order.contains(&0) {
+                self.head_bypass_ticks = 0;
+            } else if !order.is_empty() {
+                self.head_bypass_ticks += 1;
             }
-            let req = self.queue.pop_front().unwrap();
-            let mut sess = engine.start_session(req.opts.clone());
-            let t0 = Instant::now();
-            match engine.prefill(&mut sess, &req.prompt) {
-                Ok(()) => {
-                    let sampler = Sampler::new(req.sampler, req.seed);
-                    self.active.push(Active {
-                        req,
-                        sess,
-                        sampler,
-                        generated: Vec::new(),
-                        prefill_us: t0.elapsed().as_secs_f64() * 1e6,
-                        decode_started: Instant::now(),
-                    });
+            if !order.is_empty() {
+                let mut descending = order.clone();
+                descending.sort_unstable_by(|a, b| b.cmp(a));
+                let mut taken: BTreeMap<usize, Request> = BTreeMap::new();
+                for &i in &descending {
+                    taken.insert(i, self.queue.remove(i).expect("planned index in queue"));
                 }
-                Err(e) => {
-                    let a = Active {
-                        req,
-                        sess,
-                        sampler: Sampler::greedy(),
-                        generated: Vec::new(),
-                        prefill_us: 0.0,
-                        decode_started: Instant::now(),
-                    };
-                    done.push(self.finish(engine, a, Some(format!("prefill: {e:#}")), String::new()));
+                let reqs: Vec<Request> =
+                    order.iter().map(|i| taken.remove(i).unwrap()).collect();
+                let mut sessions: Vec<Session> =
+                    reqs.iter().map(|r| engine.start_session(r.opts.clone())).collect();
+                let prompts: Vec<&[i32]> =
+                    reqs.iter().map(|r| r.prompt.as_slice()).collect();
+                let results = {
+                    let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                    engine.prefill_batch(&mut refs, &prompts)
+                };
+                for ((req, sess), res) in reqs.into_iter().zip(sessions).zip(results) {
+                    match res {
+                        Ok(prefill_us) => {
+                            let sampler = Sampler::new(req.sampler, req.seed);
+                            self.active.push(Active {
+                                req,
+                                sess,
+                                sampler,
+                                generated: Vec::new(),
+                                prefill_us,
+                                decode_started: Instant::now(),
+                            });
+                        }
+                        Err(e) => {
+                            let a = Active {
+                                req,
+                                sess,
+                                sampler: Sampler::greedy(),
+                                generated: Vec::new(),
+                                prefill_us: 0.0,
+                                decode_started: Instant::now(),
+                            };
+                            done.push(self.finish(
+                                engine,
+                                a,
+                                Some(format!("prefill: {e:#}")),
+                                String::new(),
+                            ));
+                        }
+                    }
                 }
             }
         }
+        // Requests still queued with slots free means the budget deferred
+        // them — the signal that gates the end-of-tick pool defrag (a
+        // pinned grown capacity must not starve the queue).
+        let admission_blocked =
+            !self.queue.is_empty() && self.active.len() < self.cfg.max_active;
 
         // --- Batch planning: group by capacity bucket, bound by
         // max_decode_batch lanes and the pooled-byte budget. The pool's
@@ -452,15 +664,32 @@ impl Scheduler {
             done.push(self.finish(engine, a, err.clone(), text));
         }
 
-        // Once no sequence is active, trim the pool so the budget
-        // recovers the pooled bytes (counted once — see
-        // view_bytes_released). This must NOT wait for the queue to
-        // drain: admission charges pooled bytes, so a lingering pool
-        // from retired sequences could otherwise starve queued requests
-        // forever under a tight budget (trim requires every lane
-        // returned, which an empty active set guarantees).
+        // --- Pool compaction at the tick boundary (never mid-step: all
+        // of this tick's binds and syncs are done). Once no sequence is
+        // active, trim the pool so the budget recovers the pooled bytes
+        // (counted once — see view_bytes_released). This must NOT wait
+        // for the queue to drain: admission charges pooled bytes, so a
+        // lingering pool from retired sequences could otherwise starve
+        // queued requests forever under a tight budget (trim requires
+        // every lane returned, which an empty active set guarantees).
+        //
+        // While sequences remain active, a full trim is impossible but a
+        // *defrag* is not: at a retire boundary — or whenever a non-empty
+        // queue was deferred by the budget — compact the pool down to the
+        // live-session requirement, so a long-lived small session cannot
+        // pin a staging grown for peers that already retired (the
+        // tight-budget deadlock regression). Defrag is a no-op (no
+        // re-layout, no wholesale resyncs) when there is no slack.
         if self.active.is_empty() {
             self.view_bytes_released += engine.trim_view_pool() as u64;
+        } else if !done.is_empty() || admission_blocked {
+            let required = self
+                .active
+                .iter()
+                .map(|a| a.sess.cache().map(|c| c.capacity()).unwrap_or(0))
+                .max()
+                .unwrap_or(0);
+            self.view_bytes_released += engine.defrag_view_pool(required) as u64;
         }
         done
     }
@@ -559,6 +788,98 @@ mod tests {
         let plan = plan_fresh(&[256, 256, 256], 4, &lane, 1024, 512);
         let scheduled: usize = plan.iter().map(Vec::len).sum();
         assert_eq!(scheduled, 2, "floor 512 caps the lane count at 2");
+    }
+
+    /// Prefill planner over a fresh pool with trivial byte models: paged
+    /// estimate = bucket, implied capacity = bucket, lane bytes = cap.
+    fn plan_prefill_fresh(
+        buckets: &[usize],
+        max_batch: usize,
+        slots: usize,
+        budget: usize,
+        force_first: bool,
+    ) -> Vec<Vec<usize>> {
+        let est = |i: usize| buckets[i];
+        let cap = |i: usize| buckets[i];
+        let lane = |c: usize| c;
+        plan_prefill_batch(
+            buckets,
+            max_batch,
+            slots,
+            &est,
+            &cap,
+            &lane,
+            budget,
+            PoolSnapshot::default(),
+            force_first,
+        )
+    }
+
+    #[test]
+    fn prefill_planner_groups_by_bucket_within_slots() {
+        let buckets = [64, 128, 64, 64, 128];
+        let plan = plan_prefill_fresh(&buckets, 8, 8, usize::MAX, false);
+        assert_eq!(plan, vec![vec![0, 2, 3], vec![1, 4]]);
+        // Total admission is bounded by min(max_batch, free_slots).
+        let plan = plan_prefill_fresh(&buckets, 2, 8, usize::MAX, false);
+        assert_eq!(plan, vec![vec![0, 2]]);
+        let plan = plan_prefill_fresh(&buckets, 8, 4, usize::MAX, false);
+        assert_eq!(plan.iter().map(Vec::len).sum::<usize>(), 4);
+        assert!(plan_prefill_fresh(&buckets, 8, 0, usize::MAX, true).is_empty());
+    }
+
+    #[test]
+    fn prefill_planner_defers_beyond_the_byte_budget() {
+        // Admitting the k-th 64-bucket session over a fresh pool models
+        // 64 paged bytes per admitted prompt plus (k+1) pooled lanes of
+        // 64 bytes: 1 admission costs 128 total, 2 cost 256, 3 cost 384.
+        let buckets = [64, 64, 64];
+        let plan = plan_prefill_fresh(&buckets, 8, 8, 256, false);
+        assert_eq!(plan, vec![vec![0, 1]], "256 fits two admissions, third defers");
+        // Without the progress guarantee a zero headroom admits nothing
+        // (active sessions will retire and recover bytes)...
+        let plan = plan_prefill_fresh(&buckets, 8, 8, 0, false);
+        assert!(plan.is_empty());
+        // ...with it (empty active set) exactly one is forced through.
+        let plan = plan_prefill_fresh(&buckets, 8, 8, 0, true);
+        assert_eq!(plan, vec![vec![0]]);
+    }
+
+    #[test]
+    fn prefill_planner_lets_small_requests_pass_a_deferred_big_one() {
+        // The 512-bucket request (arrival 0) blows the budget — admitting
+        // it third would cost 128 paged + 512 + 3 lanes at cap 512; the
+        // later small ones must not starve behind it.
+        let buckets = [512, 64, 64];
+        let plan = plan_prefill_fresh(&buckets, 8, 8, 300, false);
+        assert_eq!(plan, vec![vec![1, 2]]);
+    }
+
+    /// The deadlock regression arithmetic: a pool whose capacity floor
+    /// was grown by a now-retired session prices every admission at the
+    /// grown capacity; after a defrag drops the floor (and the trailing
+    /// free lane), the same budget admits again.
+    #[test]
+    fn prefill_planner_blocked_by_grown_floor_admits_after_defrag() {
+        let buckets = [64];
+        let est = |i: usize| buckets[i];
+        let cap = |i: usize| buckets[i];
+        let lane = |c: usize| c;
+        // Grown pool: 2 allocated lanes (1 bound to the live small
+        // session, 1 free from the retired grower) at cap floor 512.
+        // Admitting the queued 64-bucket request costs 64 paged +
+        // max(2, 1+1) lanes x 512 = 1088.
+        let grown = PoolSnapshot { allocated_lanes: 2, bound_lanes: 1, cap_floor: 512 };
+        let plan =
+            plan_prefill_batch(&buckets, 4, 4, &est, &cap, &lane, 1087, grown, false);
+        assert!(plan.is_empty(), "grown floor must price the admission out");
+        // Post-defrag snapshot: trailing free lane dropped, floor at the
+        // live session's capacity. Same budget now admits: 64 paged +
+        // max(1, 1+1) lanes x 64 = 192.
+        let defragged = PoolSnapshot { allocated_lanes: 1, bound_lanes: 1, cap_floor: 64 };
+        let plan =
+            plan_prefill_batch(&buckets, 4, 4, &est, &cap, &lane, 1087, defragged, false);
+        assert_eq!(plan, vec![vec![0]]);
     }
 
     /// Regression: lanes already bound by deferred or growing sessions

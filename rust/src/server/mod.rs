@@ -13,8 +13,10 @@
 //! pending commands — blocking only when the scheduler is idle, and then
 //! holding a short gather window so commands from concurrent clients
 //! land in the same admission pass — before stepping the continuous
-//! batcher once. Co-arriving requests therefore share the first fused
-//! decode batch instead of being serialized one prefill apart.
+//! batcher once. Co-arriving requests therefore land in one **batched
+//! prefill pass** (the scheduler's phase-1 `plan_prefill_batch` tick,
+//! up to `max_prefill_batch` per tick) and then share the first fused
+//! decode batch, instead of being serialized one prefill apart.
 //!
 //! Protocol (one JSON object per line):
 //!
@@ -309,8 +311,9 @@ where
         let mut waiters: std::collections::HashMap<u64, mpsc::Sender<Completion>> =
             std::collections::HashMap::new();
         // How long an idle engine waits for co-arriving commands after the
-        // first one lands, so concurrent clients share the first fused
-        // decode batch instead of being admitted one prefill apart.
+        // first one lands, so concurrent clients land in one batched
+        // prefill pass and share the first fused decode batch instead of
+        // being admitted one prefill apart.
         const BATCH_GATHER: std::time::Duration = std::time::Duration::from_millis(2);
         loop {
             // Block when idle; gather briefly after the first arrival;

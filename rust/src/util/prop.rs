@@ -49,6 +49,50 @@ where
     }
 }
 
+/// One session of a randomized serving workload drawn by [`sessions`].
+///
+/// The fields are deliberately abstract — a *size class* rather than a
+/// byte count, a *retire tick* rather than a token budget — so the same
+/// draw parameterizes the decode-batch planner (class = decode capacity),
+/// the prefill planner (class = prefill bucket), and pool-lane lifetime
+/// simulations, instead of each test keeping its own copy-pasted
+/// generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionSpec {
+    /// Index into the caller's size-class table (prefill bucket or decode
+    /// capacity class — the caller decides what a class means).
+    pub size_class: usize,
+    /// Whether the session already holds a pool lane when the property
+    /// starts (decode-planner histories; prefill planners ignore it).
+    pub bound: bool,
+    /// Tick at which the session retires, in `0..horizon`.
+    pub retire: usize,
+}
+
+/// Draw a serving workload: between `min_sessions` and `max_sessions`
+/// sessions in arrival order, each with a size class in `0..n_classes`,
+/// an already-holds-a-lane bit, and a retire tick in `0..horizon`.
+///
+/// Shared by `tests/prop_batching.rs` and `tests/prop_prefill.rs` so both
+/// planners are swept over one workload distribution (lengths, arrival
+/// order, retire schedule).
+pub fn sessions(
+    rng: &mut Rng,
+    min_sessions: usize,
+    max_sessions: usize,
+    n_classes: usize,
+    horizon: usize,
+) -> Vec<SessionSpec> {
+    let n = rng.usize(min_sessions, max_sessions + 1);
+    (0..n)
+        .map(|_| SessionSpec {
+            size_class: rng.usize(0, n_classes.max(1)),
+            bound: rng.bool(0.4),
+            retire: rng.usize(0, horizon.max(1)),
+        })
+        .collect()
+}
+
 /// Assert-like helper for property bodies.
 #[macro_export]
 macro_rules! prop_assert {
@@ -88,6 +132,20 @@ mod tests {
             prop_assert!(x < 5, "x = {x}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn session_workload_respects_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..64 {
+            let w = sessions(&mut rng, 2, 6, 3, 24);
+            assert!(w.len() >= 2 && w.len() <= 6);
+            for s in &w {
+                assert!(s.size_class < 3);
+                assert!(s.retire < 24);
+            }
+        }
+        assert!(sessions(&mut rng, 0, 0, 3, 24).is_empty());
     }
 
     #[test]

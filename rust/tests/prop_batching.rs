@@ -21,7 +21,7 @@ use wgkv::prop_assert;
 use wgkv::runtime::device_cache::{DeviceExecView, DeviceViewPool, LaneId};
 use wgkv::runtime::tensor::Tensor;
 use wgkv::scheduler::{plan_decode_batches, PoolSnapshot};
-use wgkv::util::prop::forall;
+use wgkv::util::prop::{forall, sessions};
 use wgkv::util::rng::Rng;
 
 fn dims(rng: &mut Rng) -> CacheDims {
@@ -45,10 +45,12 @@ fn planner_never_exceeds_budget_in_pooled_bytes() {
             d.w_local + 16,
             d.w_local + 32,
         ];
-        let n = rng.usize(0, 12);
-        let caps: Vec<usize> =
-            (0..n).map(|_| cap_classes[rng.usize(0, cap_classes.len())]).collect();
-        let has_lane: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+        // Shared workload generator (util::prop::sessions): size class ->
+        // capacity bucket, bound bit -> already holds a lane.
+        let specs = sessions(rng, 0, 12, cap_classes.len(), 24);
+        let n = specs.len();
+        let caps: Vec<usize> = specs.iter().map(|s| cap_classes[s.size_class]).collect();
+        let has_lane: Vec<bool> = specs.iter().map(|s| s.bound).collect();
         let max_batch = rng.usize(1, 6);
         let lane_bytes = |cap: usize| DeviceViewPool::lane_bytes(d, cap);
         // Budget anywhere from "fits nothing" to "fits everything".
@@ -226,33 +228,48 @@ fn lane_replay_survives_mid_batch_retire_bit_identical() {
         let d = dims(rng);
         let tau = 0.5;
         let mut pool = DeviceViewPool::new();
-        let n_lanes = rng.usize(2, 5);
-        let base_cap = d.w_local + d.page_size * rng.usize(2, 5);
-        let mut sims: Vec<Sim> =
-            (0..n_lanes).map(|_| Sim::new(d, base_cap, &mut pool)).collect();
         let steps = rng.usize(4, 24);
+        // Shared workload generator: every original session draws a
+        // retire tick inside the run, so each case exercises several
+        // mid-batch retire/recycle events (not just one).
+        let specs = sessions(rng, 2, 4, 1, steps);
+        let base_cap = d.w_local + d.page_size * rng.usize(2, 5);
+        let mut sims: Vec<(Sim, usize)> = specs
+            .iter()
+            .map(|spec| (Sim::new(d, base_cap, &mut pool), spec.retire))
+            .collect();
         for s in 0..steps {
-            for sim in sims.iter_mut() {
+            for (sim, _) in sims.iter_mut() {
                 let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
                 sim.insert(d, gate, tau);
             }
             // Land all pool growth before the first sync of the step
             // (decode_batch's bind-then-sync ordering), then sync lanes.
-            let cap_group = sims.iter().map(|x| x.lane_cache.capacity()).max().unwrap();
+            let cap_group =
+                sims.iter().map(|(x, _)| x.lane_cache.capacity()).max().unwrap();
             pool.ensure_capacity(cap_group);
-            for sim in sims.iter_mut() {
+            for (sim, _) in sims.iter_mut() {
                 sim.sync(&mut pool);
             }
-            // Mid-batch retire: drop a random lane, recycle it for a
-            // fresh session, and keep decoding the survivors.
-            if s == steps / 2 {
-                let victim = rng.usize(0, sims.len());
-                let retired = sims.swap_remove(victim);
-                pool.release(retired.lane);
-                sims.push(Sim::new(d, base_cap, &mut pool));
+            // Mid-batch retires per the drawn schedule: drop the lane,
+            // recycle it for a fresh session whose lane is populated at
+            // admission (the prefill_batch protocol: the recycled
+            // checkout is no re-layout, so peers' images stay valid),
+            // and keep decoding the survivors.
+            let mut i = 0;
+            while i < sims.len() {
+                if sims[i].1 == s {
+                    let (retired, _) = sims.swap_remove(i);
+                    pool.release(retired.lane);
+                    let mut fresh = Sim::new(d, base_cap, &mut pool);
+                    fresh.sync(&mut pool);
+                    sims.push((fresh, steps)); // replacements never retire
+                } else {
+                    i += 1;
+                }
             }
         }
-        for sim in &sims {
+        for (sim, _) in &sims {
             sim.check(d, &pool)?;
         }
         Ok(())

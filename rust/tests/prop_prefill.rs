@@ -1,0 +1,278 @@
+//! Property-based tests for the batched-prefill admission front-end and
+//! the view pool's lane compaction (`DeviceViewPool::defrag`).
+//!
+//! Three invariants from the two-phase tick design are checked over
+//! randomized workloads (drawn from the same `util::prop::sessions`
+//! generator as `prop_batching.rs`):
+//!
+//! 1. **Plan validity + budget safety** — however requests arrive,
+//!    `plan_prefill_batch` emits a valid sub-partition of the queue
+//!    (bucket-uniform groups, ascending indices, nothing admitted twice,
+//!    total bounded by slots and `max_prefill_batch`) whose estimated
+//!    bytes never exceed the budget headroom — except the single forced
+//!    session of the progress guarantee, which only fires when the
+//!    active set is empty.
+//! 2. **Defrag safety** — across random checkout/release/defrag
+//!    histories, compaction never grows the pool, never drops or
+//!    re-indexes a bound lane, lands exactly at the live requirement,
+//!    and is a no-op (no epoch bump — no spurious wholesale resyncs)
+//!    when there is nothing to reclaim.
+//! 3. **Defrag recovers headroom** — shrinking a grown pool never makes
+//!    the prefill planner admit *fewer* sessions: the budget bound holds
+//!    including the defrag shrink.
+
+use wgkv::kvcache::dual::CacheDims;
+use wgkv::kvcache::SequenceKvCache;
+use wgkv::prop_assert;
+use wgkv::runtime::device_cache::{DeviceViewPool, LaneId};
+use wgkv::scheduler::{plan_prefill_batch, PoolSnapshot};
+use wgkv::util::prop::{forall, sessions};
+use wgkv::util::rng::Rng;
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 6),
+        page_size: rng.usize(2, 5),
+    }
+}
+
+// ---- planner properties --------------------------------------------------
+
+#[test]
+fn prefill_plan_is_a_valid_partition_within_slots_and_budget() {
+    forall(0x31, |rng| {
+        let d = dims(rng);
+        let classes = [16usize, 32, 64];
+        let specs = sessions(rng, 0, 12, classes.len(), 24);
+        let buckets: Vec<usize> = specs.iter().map(|s| classes[s.size_class]).collect();
+        let n = buckets.len();
+        // The engine's real accounting shape: worst-case paged bytes per
+        // prompt, plus the pooled footprint modeled per lane. The planner
+        // callbacks are keyed by queue index (prompt length = bucket in
+        // this toy, so the value-level helpers double as the oracle).
+        let est_of = |b: usize| SequenceKvCache::worst_case_kv_bytes(d, b);
+        let icap_of = |b: usize| b + d.w_local;
+        let est = |i: usize| est_of(buckets[i]);
+        let icap = |i: usize| icap_of(buckets[i]);
+        let lane = |c: usize| DeviceViewPool::lane_bytes(d, c);
+        let max_batch = rng.usize(1, 6);
+        let free_slots = rng.usize(0, 10);
+        // A consistent starting pool: some sessions already active.
+        let bound_lanes = rng.usize(0, 4);
+        let pool = PoolSnapshot {
+            bound_lanes,
+            allocated_lanes: bound_lanes + rng.usize(0, 3),
+            cap_floor: if rng.bool(0.4) { icap_of(classes[rng.usize(0, 3)]) } else { 0 },
+        };
+        // Budget anywhere from "fits nothing" to "fits everything".
+        let per = est_of(classes[2]) + lane(icap_of(classes[2]));
+        let budget = rng.usize(0, (n.max(1) + pool.allocated_lanes + 1) * per + 2);
+        let force_first = rng.bool(0.5);
+        let plan = plan_prefill_batch(
+            &buckets, max_batch, free_slots, &est, &icap, &lane, budget, pool, force_first,
+        );
+
+        // Valid sub-partition: indices unique and in range, groups
+        // non-empty and bucket-uniform with ascending member order.
+        let mut seen = vec![false; n];
+        for group in &plan {
+            prop_assert!(!group.is_empty(), "empty group emitted");
+            let b0 = buckets[group[0]];
+            for w in group.windows(2) {
+                prop_assert!(w[0] < w[1], "group indices not ascending");
+            }
+            for &i in group {
+                prop_assert!(i < n, "index out of range");
+                prop_assert!(!seen[i], "request {i} admitted twice");
+                seen[i] = true;
+                prop_assert!(buckets[i] == b0, "mixed bucket in a group");
+            }
+        }
+        let admitted: Vec<usize> = plan.iter().flatten().copied().collect();
+        prop_assert!(
+            admitted.len() <= max_batch.max(1).min(free_slots),
+            "admitted {} over min(max_batch {max_batch}, slots {free_slots})",
+            admitted.len()
+        );
+        // Budget bound under the decode planner's pooled accounting: the
+        // paged estimates plus the post-tick pool footprint — lane count
+        // max(allocated, bound + admissions) at the grown capacity — stay
+        // within the headroom; the sole sanctioned overshoot is a single
+        // forced session (empty active set).
+        if !admitted.is_empty() {
+            let paged: usize = admitted.iter().map(|&i| est(i)).sum();
+            let cap_final = admitted
+                .iter()
+                .map(|&i| icap(i))
+                .max()
+                .unwrap()
+                .max(pool.cap_floor);
+            let lanes_after =
+                pool.allocated_lanes.max(pool.bound_lanes + admitted.len());
+            let total = paged + lanes_after * lane(cap_final);
+            if total > budget {
+                prop_assert!(
+                    force_first && admitted.len() == 1,
+                    "modeled bytes {total} over budget {budget} without the \
+                     progress guarantee ({} paged + {lanes_after} lanes at {cap_final})",
+                    paged
+                );
+            }
+        }
+        // Progress guarantee: an empty active set (force_first) with a
+        // non-empty queue and free slots always admits someone.
+        if force_first && n > 0 && free_slots > 0 && max_batch > 0 {
+            prop_assert!(!admitted.is_empty(), "planner starved a non-empty queue");
+        }
+        Ok(())
+    });
+}
+
+// ---- defrag properties ---------------------------------------------------
+
+/// Host-side model of the pool a property case drives: which lanes are
+/// bound and at what capacity the owning session executes.
+struct Live {
+    lane: LaneId,
+    cap: usize,
+}
+
+#[test]
+fn defrag_never_grows_never_drops_a_bound_lane() {
+    forall(0x32, |rng| {
+        let d = dims(rng);
+        let classes =
+            [d.w_local + 8, d.w_local + 16, d.w_local + 32];
+        let mut pool = DeviceViewPool::new();
+        let mut live: Vec<Live> = Vec::new();
+        for _ in 0..rng.usize(4, 20) {
+            match rng.usize(0, 3) {
+                // Checkout at a random capacity class.
+                0 => {
+                    let cap = classes[rng.usize(0, classes.len())];
+                    let lane = pool.checkout(d, cap);
+                    live.push(Live { lane, cap });
+                }
+                // Release a random bound lane.
+                1 if !live.is_empty() => {
+                    let v = rng.usize(0, live.len());
+                    pool.release(live.swap_remove(v).lane);
+                }
+                // Defrag down to the live requirement.
+                _ => {
+                    let required = live.iter().map(|s| s.cap).max().unwrap_or(0);
+                    let before = pool.device_bytes();
+                    let epoch_before = pool.layout_epoch();
+                    let freed = pool.defrag(required);
+                    prop_assert!(
+                        pool.device_bytes() + freed == before,
+                        "defrag byte accounting broken"
+                    );
+                    prop_assert!(pool.device_bytes() <= before, "defrag grew the pool");
+                    if freed == 0 {
+                        prop_assert!(
+                            pool.layout_epoch() == epoch_before,
+                            "no-op defrag must not bump the epoch"
+                        );
+                    }
+                    if !live.is_empty() {
+                        prop_assert!(
+                            pool.capacity() >= required,
+                            "defrag shrank below the live requirement"
+                        );
+                        // Every bound lane index survived.
+                        for s in &live {
+                            prop_assert!(
+                                s.lane.index() < pool.lane_count(),
+                                "defrag dropped bound lane {}",
+                                s.lane.index()
+                            );
+                        }
+                    } else {
+                        prop_assert!(
+                            pool.device_bytes() == 0,
+                            "defrag with nothing bound must free everything"
+                        );
+                    }
+                }
+            }
+        }
+        // Terminal defrag lands exactly at the live requirement: trailing
+        // free lanes gone, capacity = max live class (or empty pool).
+        let required = live.iter().map(|s| s.cap).max().unwrap_or(0);
+        pool.defrag(required);
+        match live.iter().map(|s| s.lane.index()).max() {
+            Some(hi) => {
+                prop_assert!(pool.lane_count() == hi + 1, "trailing free lanes kept");
+                prop_assert!(pool.capacity() == required, "capacity not compacted");
+            }
+            None => prop_assert!(pool.device_bytes() == 0),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn defrag_recovers_headroom_for_the_prefill_planner() {
+    forall(0x33, |rng| {
+        let d = dims(rng);
+        let classes = [16usize, 32, 64];
+        let specs = sessions(rng, 1, 10, classes.len(), 24);
+        let buckets: Vec<usize> = specs.iter().map(|s| classes[s.size_class]).collect();
+        let est_of = |b: usize| SequenceKvCache::worst_case_kv_bytes(d, b);
+        let icap_of = |b: usize| b + d.w_local;
+        let est = |i: usize| est_of(buckets[i]);
+        let icap = |i: usize| icap_of(buckets[i]);
+        let lane = |c: usize| DeviceViewPool::lane_bytes(d, c);
+
+        // A pool grown for retired peers: one small live lane pins a
+        // large-capacity, many-lane staging.
+        let small_cap = d.w_local + 8;
+        let grown_cap = icap_of(classes[2]) + 64;
+        let mut pool = DeviceViewPool::new();
+        let _live = pool.checkout(d, small_cap);
+        let retired: Vec<LaneId> =
+            (0..rng.usize(1, 4)).map(|_| pool.checkout(d, grown_cap)).collect();
+        for l in retired {
+            pool.release(l);
+        }
+        let snap = |p: &DeviceViewPool| PoolSnapshot {
+            allocated_lanes: p.lane_count(),
+            bound_lanes: p.lanes_in_use(),
+            cap_floor: p.capacity(),
+        };
+        let per = est_of(classes[2]) + lane(icap_of(classes[2]));
+        let budget = pool.device_bytes() + per * rng.usize(0, buckets.len() + 1);
+        let max_batch = 8;
+
+        // Monotonicity holds because the planner considers requests in
+        // ascending-bucket order and the defragged pool prices every
+        // admission at most as high as the grown one (fewer allocated
+        // lanes, lower capacity floor): the post-defrag plan admits a
+        // superset of the pre-defrag prefix.
+        let before = plan_prefill_batch(
+            &buckets, max_batch, 8, &est, &icap, &lane, budget, snap(&pool), false,
+        )
+        .iter()
+        .flatten()
+        .count();
+        let freed = pool.defrag(small_cap);
+        prop_assert!(freed > 0, "grown pool must have slack to reclaim");
+        prop_assert!(pool.capacity() == small_cap);
+        prop_assert!(pool.lane_count() == 1, "trailing retired lanes must drop");
+        let after = plan_prefill_batch(
+            &buckets, max_batch, 8, &est, &icap, &lane, budget, snap(&pool), false,
+        )
+        .iter()
+        .flatten()
+        .count();
+        prop_assert!(
+            after >= before,
+            "defrag shrank admission: {after} < {before} (freed {freed} bytes)"
+        );
+        Ok(())
+    });
+}
