@@ -28,12 +28,13 @@ test: docs
 test-fast:
 	cd $(RUST_DIR) && cargo test -q --lib \
 		--test prop_kvcache --test prop_policies \
-		--test prop_batching --test prop_prefill
+		--test prop_batching --test prop_prefill --test prop_pool
 
 # Coordinator perf snapshot: prints the hot-path rows and writes
 # rust/BENCH_coordinator.json — machine-readable results plus the
-# persistent-view full-vs-delta upload-bytes counters and the PR 3
-# prefill-batch / defrag counters, tracked across PRs. The greps keep the
+# persistent-view full-vs-delta upload-bytes counters, the PR 3
+# prefill-batch / defrag counters, and the PR 4 lane-compaction
+# counters, tracked across PRs. The greps keep the
 # report's schema honest: a refactor that silently drops a tracked
 # counter fails the bench target, not a later PR's comparison.
 bench:
@@ -42,6 +43,12 @@ bench:
 		|| { echo "BENCH_coordinator.json: missing prefill_batch_steps"; exit 1; }
 	@grep -q '"defrag_events"' $(RUST_DIR)/BENCH_coordinator.json \
 		|| { echo "BENCH_coordinator.json: missing defrag_events"; exit 1; }
+	@grep -q '"compaction_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing compaction_events"; exit 1; }
+	@grep -q '"lane_moves"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing lane_moves"; exit 1; }
+	@grep -q '"lane_move_bytes"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing lane_move_bytes"; exit 1; }
 	@grep -q '"upload_reduction_x"' $(RUST_DIR)/BENCH_coordinator.json \
 		|| { echo "BENCH_coordinator.json: missing upload_reduction_x"; exit 1; }
 

@@ -252,13 +252,13 @@ fn main() {
             let lanes: Vec<_> = caches.iter().map(|c| pool.checkout(d, c.capacity())).collect();
             for (i, cache) in caches.iter_mut().enumerate() {
                 let _ = cache.drain_dirty();
-                pool.sync_lane(lanes[i], cache);
+                pool.sync_lane(lanes[i], cache).unwrap();
             }
             for _ in 0..seq_len {
                 for (i, cache) in caches.iter_mut().enumerate() {
                     cache.insert_decoded(&k, &v, &g, pos[i], |_, _, _| false).unwrap();
                     pos[i] += 1;
-                    pool.sync_lane(lanes[i], cache);
+                    pool.sync_lane(lanes[i], cache).unwrap();
                 }
             }
             for &lane in &lanes {
@@ -316,10 +316,11 @@ fn main() {
     // one-prefill-per-tick front-end (deterministic acceptance number);
     // (b) measured coordinator-side admission churn, pooled lanes vs
     // per-session views; (c) a planner/pool pipeline simulation that
-    // drives plan_prefill_batch + defrag over a deterministic
-    // arrival/retire schedule, tracking pooled bytes against a byte
-    // budget and emitting the prefill_batch_steps / defrag_events
-    // counters compared across PRs.
+    // drives plan_prefill_batch + bound-lane compaction (PR 4) over a
+    // deterministic arrival/retire schedule growing *interior* lane
+    // holes, tracking pooled bytes against a byte budget and emitting
+    // the prefill_batch_steps / defrag_events / compaction_events /
+    // lane_moves / lane_move_bytes counters compared across PRs.
     {
         // (a) Model: a serial front-end pays the running decode batch's
         // fused step once per admitted prompt; a batched front-end pays
@@ -383,7 +384,7 @@ fn main() {
             let lanes: Vec<_> =
                 caches.iter().map(|c| pool.checkout(d, c.capacity())).collect();
             for (cache, &lane) in caches.iter_mut().zip(&lanes) {
-                pool.sync_lane(lane, cache);
+                pool.sync_lane(lane, cache).unwrap();
             }
             for &lane in &lanes {
                 pool.release(lane);
@@ -409,17 +410,24 @@ fn main() {
             );
         }
 
-        // (c) Pipeline simulation: a big session admitted alongside two
-        // smalls retires early; defrag compacts the grown staging while
-        // the smalls keep running, two more smalls admit post-defrag.
-        // Pooled bytes must never exceed the budget.
+        // (c) Pipeline simulation over the compaction protocol. Two
+        // fragmentation regimes are forced: at t=2 the big session AND
+        // the first small retire together, leaving the second small
+        // bound *above* a grown interior hole (trailing-only defrag
+        // reclaims nothing there — compaction re-indexes the survivor
+        // down and shrinks the capacity); at t=6 a same-capacity peer
+        // retires beneath two live lanes, so compaction takes the
+        // in-place path (staged lane-to-lane copy, no re-layout) and
+        // `lane_move_bytes` counts real moved bytes. The live bindings
+        // are re-pointed through the returned LaneRemap exactly as the
+        // scheduler does. Pooled bytes must never exceed the budget.
         use wgkv::scheduler::{plan_prefill_batch, PoolSnapshot};
         let icap = |bucket: usize| bucket + d.w_local;
         let lane = |cap: usize| DeviceViewPool::lane_bytes(d, cap);
         let est = |bucket: usize| SequenceKvCache::worst_case_kv_bytes(d, bucket);
         // (arrival tick, prefill bucket, lifetime in ticks)
         let jobs: &[(usize, usize, usize)] =
-            &[(0, 512, 2), (0, 128, 10), (0, 128, 10), (3, 128, 8), (3, 128, 8)];
+            &[(0, 512, 2), (0, 128, 2), (0, 128, 12), (3, 128, 3), (3, 128, 9)];
         let budget = est(512) + 2 * est(128) + 3 * lane(icap(512)) + 1;
         let mut pool = DeviceViewPool::new();
         let mut queue: Vec<(usize, usize)> = Vec::new(); // (job, bucket)
@@ -427,6 +435,7 @@ fn main() {
         let mut lanes_by_job: Vec<Option<wgkv::runtime::device_cache::LaneId>> =
             vec![None; jobs.len()];
         let (mut pf_steps, mut pf_lanes, mut defrag_events) = (0u64, 0u64, 0u64);
+        let (mut compaction_events, mut lane_moves, mut lane_move_bytes) = (0u64, 0u64, 0u64);
         let mut pool_bytes_max = 0usize;
         for t in 0..16usize {
             for (j, &(arr, bucket, _)) in jobs.iter().enumerate() {
@@ -485,13 +494,27 @@ fn main() {
                 }
             }
             active = still;
-            // Tick boundary: trim or defrag, exactly the scheduler rule.
+            // Tick boundary: trim or compact, exactly the scheduler rule
+            // — including re-pointing live bindings through the remap.
             if active.is_empty() {
                 pool.trim();
             } else if retired_any || blocked {
                 let required = active.iter().map(|&(_, c, _)| c).max().unwrap_or(0);
-                if pool.defrag(required) > 0 {
+                let r = pool.compact(required);
+                for slot in lanes_by_job.iter_mut() {
+                    if let Some(id) = *slot {
+                        if let Some(moved) = r.remap.apply(id) {
+                            *slot = Some(moved);
+                        }
+                    }
+                }
+                lane_moves += r.remap.len() as u64;
+                lane_move_bytes += r.lane_move_bytes;
+                if r.freed > 0 {
                     defrag_events += 1;
+                }
+                if r.freed > 0 || !r.remap.is_empty() {
+                    compaction_events += 1;
                 }
             }
             pool_bytes_max = pool_bytes_max.max(pool.device_bytes());
@@ -502,16 +525,32 @@ fn main() {
             );
         }
         println!(
-            "prefill pipeline sim: {} admission passes ({} lanes), {} defrag events, \
-             pool peak {} B <= budget {} B",
-            pf_steps, pf_lanes, defrag_events, pool_bytes_max, budget
+            "prefill pipeline sim: {} admission passes ({} lanes), {} compactions \
+             ({} lane moves, {} B moved in place), pool peak {} B <= budget {} B",
+            pf_steps, pf_lanes, compaction_events, lane_moves, lane_move_bytes,
+            pool_bytes_max, budget
         );
         assert!(pf_steps >= 2 && pf_lanes >= 5, "sim must admit in batches");
-        assert!(defrag_events >= 1, "the big session's retire must defrag the pool");
+        assert!(
+            compaction_events >= 2 && defrag_events >= 1,
+            "both retire boundaries must compact the pool \
+             ({compaction_events} compactions, {defrag_events} byte-reclaiming)"
+        );
+        assert!(
+            lane_moves >= 2,
+            "survivors bound above interior holes must be re-indexed ({lane_moves} moves)"
+        );
+        assert!(
+            lane_move_bytes > 0,
+            "the same-capacity compaction must move staged bytes in place"
+        );
         assert_eq!(pool.device_bytes(), 0, "sim must drain and trim");
         report.counter("prefill_batch_steps", pf_steps);
         report.counter("prefill_batch_lanes", pf_lanes);
         report.counter("defrag_events", defrag_events);
+        report.counter("compaction_events", compaction_events);
+        report.counter("lane_moves", lane_moves);
+        report.counter("lane_move_bytes", lane_move_bytes);
         report.counter("pool_bytes_max", pool_bytes_max);
         report.counter("pool_byte_budget", budget);
         report.counter("pool_budget_ok", pool_bytes_max <= budget);

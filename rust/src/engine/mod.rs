@@ -53,8 +53,11 @@
 //! Concurrency is the scheduler's job ([`crate::scheduler`]), which plans
 //! the batches, charges each session's resident view bytes — and the
 //! pooled bytes, once — against the KV budget, releases lanes when
-//! sequences retire, and compacts the pool ([`Engine::defrag_view_pool`])
-//! when retired peers leave a grown staging pinned.
+//! sequences retire, and compacts the pool ([`Engine::compact_view_pool`])
+//! when retired peers leave a grown staging — or interior lane holes —
+//! pinned; compaction may re-index bound lanes, and the engine applies
+//! the resulting [`crate::runtime::device_cache::LaneRemap`] to every
+//! live session before the next sync.
 
 use std::path::Path;
 use std::time::Instant;
@@ -514,18 +517,24 @@ impl Engine {
         }
         // Phase C: populate each lane (the one wholesale upload per
         // session, paid here instead of on the first decode tick).
-        for (sess, r) in sessions.iter_mut().zip(&out) {
+        for (sess, r) in sessions.iter_mut().zip(out.iter_mut()) {
             if r.is_err() {
                 continue;
             }
             let cache = sess.cache.as_mut().unwrap();
-            let report = self.view_pool.sync_lane(sess.lane.unwrap(), cache);
-            self.metrics.upload_bytes += report.bytes as u64;
-            self.metrics.upload_full_equiv_bytes += cache.full_view_bytes() as u64;
-            if report.full {
-                self.metrics.view_full_uploads += 1;
-            } else {
-                self.metrics.view_delta_uploads += 1;
+            match self.view_pool.sync_lane(sess.lane.unwrap(), cache) {
+                Ok(report) => {
+                    self.metrics.upload_bytes += report.bytes as u64;
+                    self.metrics.upload_full_equiv_bytes += cache.full_view_bytes() as u64;
+                    if report.full {
+                        self.metrics.view_full_uploads += 1;
+                    } else {
+                        self.metrics.view_delta_uploads += 1;
+                    }
+                }
+                // Unreachable for a lane bound in this very pass; surface
+                // it as the session's own error, not a batch-wide one.
+                Err(e) => *r = Err(e.context("populating the admitted session's pool lane")),
             }
         }
         if !sessions.is_empty() {
@@ -695,7 +704,7 @@ impl Engine {
         for sess in sessions.iter_mut() {
             let cache = sess.cache.as_mut().unwrap();
             let lane = sess.lane.unwrap();
-            let report = self.view_pool.sync_lane(lane, cache);
+            let report = self.view_pool.sync_lane(lane, cache)?;
             self.metrics.upload_bytes += report.bytes as u64;
             self.metrics.upload_full_equiv_bytes += cache.full_view_bytes() as u64;
             if report.full {
@@ -840,14 +849,13 @@ impl Engine {
     }
 
     /// Return a retiring session's pool lane for recycling; `false` if the
-    /// session never held one. The pooled bytes stay pinned (and charged,
-    /// once) until [`Self::trim_view_pool`].
+    /// session never held one (or its id had already gone stale — a
+    /// double retire, rejected by the pool's generation check). The
+    /// pooled bytes stay pinned (and charged, once) until
+    /// [`Self::trim_view_pool`].
     pub fn release_lane(&mut self, sess: &mut Session) -> bool {
         match sess.lane.take() {
-            Some(lane) => {
-                self.view_pool.release(lane);
-                true
-            }
+            Some(lane) => self.view_pool.release(lane),
             None => false,
         }
     }
@@ -858,19 +866,46 @@ impl Engine {
         self.view_pool.trim()
     }
 
-    /// Compact the shared view pool down to the live-session requirement
-    /// (`required_cap` = max execution capacity over active sessions; see
-    /// [`crate::runtime::device_cache::DeviceViewPool::defrag`]). Returns
-    /// the bytes released back to the KV budget; counts a `defrag_events`
-    /// metric only when something was actually reclaimed. The scheduler
-    /// calls this at retire boundaries and when a non-empty queue is
-    /// blocked on the budget — never between a step's binds and syncs.
-    pub fn defrag_view_pool(&mut self, required_cap: usize) -> usize {
-        let freed = self.view_pool.defrag(required_cap);
-        if freed > 0 {
+    /// Compact the shared view pool around the live sessions: bound lanes
+    /// are re-indexed down into interior holes, the freed tail is
+    /// truncated, and the per-lane capacity shrinks to `required_cap`
+    /// (the max execution capacity over active sessions; see
+    /// [`crate::runtime::device_cache::DeviceViewPool::compact`]). The
+    /// returned [`crate::runtime::device_cache::LaneRemap`] is applied to
+    /// `sessions` — every live session the scheduler holds — so no
+    /// binding is left stale; a session whose lane did not move keeps
+    /// its id and, when the capacity did not shrink, its synced image.
+    ///
+    /// Returns the bytes released back to the KV budget. Counts
+    /// `compaction_events` / `lane_moves` / `lane_move_bytes` metrics,
+    /// plus the pre-existing `defrag_events` whenever bytes were
+    /// reclaimed. The scheduler calls this at retire boundaries and when
+    /// a non-empty queue is blocked on the budget — never between a
+    /// step's binds and syncs.
+    pub fn compact_view_pool(
+        &mut self,
+        sessions: &mut [&mut Session],
+        required_cap: usize,
+    ) -> usize {
+        let report = self.view_pool.compact(required_cap);
+        if !report.remap.is_empty() {
+            for sess in sessions.iter_mut() {
+                if let Some(lane) = sess.lane {
+                    if let Some(moved) = report.remap.apply(lane) {
+                        sess.lane = Some(moved);
+                    }
+                }
+            }
+        }
+        self.metrics.lane_moves += report.remap.len() as u64;
+        self.metrics.lane_move_bytes += report.lane_move_bytes;
+        if report.freed > 0 {
             self.metrics.defrag_events += 1;
         }
-        freed
+        if report.freed > 0 || !report.remap.is_empty() {
+            self.metrics.compaction_events += 1;
+        }
+        report.freed
     }
 
     /// A session's lifetime host→device transfer counters across both its

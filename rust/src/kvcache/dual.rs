@@ -38,7 +38,7 @@ use super::pool::{KvPool, PageId, PageTable};
 use crate::runtime::tensor::Tensor;
 
 /// Static dimensions of a cache instance.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheDims {
     pub n_layers: usize,
     pub n_kv_heads: usize,

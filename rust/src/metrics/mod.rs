@@ -143,6 +143,17 @@ pub struct EngineMetrics {
     /// Pool defrag events that actually reclaimed bytes (a grown staging
     /// compacted down to the live-session requirement).
     pub defrag_events: u64,
+    /// Pool compaction passes that moved lanes or reclaimed bytes
+    /// (`Engine::compact_view_pool` at retire/budget-deferred
+    /// boundaries); a superset of `defrag_events`, which only counts
+    /// byte-reclaiming passes.
+    pub compaction_events: u64,
+    /// Bound lanes re-indexed down into interior holes by compaction.
+    pub lane_moves: u64,
+    /// Staged bytes copied lane-to-lane by compaction moves —
+    /// device-side traffic on an in-place-capable backend, never a host
+    /// re-upload (0 for moves folded into a capacity-shrink re-layout).
+    pub lane_move_bytes: u64,
 }
 
 impl EngineMetrics {
@@ -181,6 +192,9 @@ impl EngineMetrics {
             prefill_batch_steps: self.prefill_batch_steps,
             prefill_batch_lanes: self.prefill_batch_lanes,
             defrag_events: self.defrag_events,
+            compaction_events: self.compaction_events,
+            lane_moves: self.lane_moves,
+            lane_move_bytes: self.lane_move_bytes,
         }
     }
 
@@ -225,6 +239,9 @@ pub struct MetricsSnapshot {
     pub prefill_batch_steps: u64,
     pub prefill_batch_lanes: u64,
     pub defrag_events: u64,
+    pub compaction_events: u64,
+    pub lane_moves: u64,
+    pub lane_move_bytes: u64,
 }
 
 impl MetricsSnapshot {
@@ -249,6 +266,9 @@ impl MetricsSnapshot {
             .set("prefill_batch_steps", self.prefill_batch_steps)
             .set("prefill_batch_lanes", self.prefill_batch_lanes)
             .set("defrag_events", self.defrag_events)
+            .set("compaction_events", self.compaction_events)
+            .set("lane_moves", self.lane_moves)
+            .set("lane_move_bytes", self.lane_move_bytes)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -273,6 +293,9 @@ impl MetricsSnapshot {
             prefill_batch_steps: f("prefill_batch_steps") as u64,
             prefill_batch_lanes: f("prefill_batch_lanes") as u64,
             defrag_events: f("defrag_events") as u64,
+            compaction_events: f("compaction_events") as u64,
+            lane_moves: f("lane_moves") as u64,
+            lane_move_bytes: f("lane_move_bytes") as u64,
         }
     }
 }

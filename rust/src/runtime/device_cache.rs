@@ -39,7 +39,18 @@
 //! [`crate::engine::Engine::decode_batch`] and returned at retire. The
 //! scheduler charges [`DeviceExecView::device_bytes`] per owned view plus
 //! [`DeviceViewPool::device_bytes`] once for the shared pool.
+//!
+//! **Lane identity.** A [`LaneId`] is `(index, generation)`: the index
+//! addresses the batch dimension of the pooled buffers, the generation
+//! is a pool-unique stamp minted at checkout (and at every compaction
+//! move). Mutating entry points ([`DeviceViewPool::release`],
+//! [`DeviceViewPool::sync_lane`]) validate both, so a stale id — held
+//! past its release, past a recycle, or past a
+//! [`DeviceViewPool::compact`] re-index — is *detected* instead of
+//! silently clearing or corrupting the lane's next tenant.
 #![warn(missing_docs)]
+
+use anyhow::{bail, Result};
 
 use crate::kvcache::dual::CacheDims;
 use crate::kvcache::{DirtyLog, SequenceKvCache};
@@ -211,12 +222,17 @@ impl DeviceExecView {
     }
 }
 
-/// Identifies one checked-out lane of a [`DeviceViewPool`]. Obtained from
-/// [`DeviceViewPool::checkout`] and invalid after
-/// [`DeviceViewPool::release`] hands the lane to another session.
+/// Identifies one checked-out lane of a [`DeviceViewPool`]: a batch
+/// index plus the pool-unique generation minted when the binding was
+/// created. Obtained from [`DeviceViewPool::checkout`] (or, after a
+/// compaction move, from the [`LaneRemap`]); once
+/// [`DeviceViewPool::release`] or a [`DeviceViewPool::compact`] move
+/// retires the binding, the id is *stale* — the mutating pool entry
+/// points reject it instead of touching the index's next tenant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LaneId {
     idx: usize,
+    gen: u64,
 }
 
 impl LaneId {
@@ -224,12 +240,23 @@ impl LaneId {
     pub fn index(&self) -> usize {
         self.idx
     }
+
+    /// The binding generation this id was issued under. A lane index is
+    /// recycled across sessions (and re-assigned by compaction); the
+    /// generation is what distinguishes the current binding from every
+    /// earlier holder of the same index.
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
 }
 
 /// Per-lane bookkeeping inside the pool.
 #[derive(Debug, Clone, Copy, Default)]
 struct Lane {
     in_use: bool,
+    /// Generation of the current (or, once freed, the last) binding of
+    /// this index; ids carrying any other generation are stale.
+    gen: u64,
     /// Cache layout epoch of the image resident in this lane.
     cache_epoch: u64,
     /// Pool layout epoch at this lane's last sync.
@@ -240,6 +267,54 @@ struct Lane {
     stats: TransferStats,
 }
 
+/// Map from pre-compaction to post-compaction [`LaneId`]s for every lane
+/// [`DeviceViewPool::compact`] moved. Bindings not listed were not moved
+/// (their ids stay valid verbatim). The scheduler applies the remap to
+/// every live session at the compaction boundary; a caller that skips it
+/// is left holding stale ids, which the pool then rejects rather than
+/// corrupts.
+#[derive(Debug, Clone, Default)]
+pub struct LaneRemap {
+    moves: Vec<(LaneId, LaneId)>,
+}
+
+impl LaneRemap {
+    /// True when the compaction moved no lane.
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    /// Number of lanes moved.
+    pub fn len(&self) -> usize {
+        self.moves.len()
+    }
+
+    /// The new id for `id`, or `None` when that exact binding (index
+    /// *and* generation) was not moved.
+    pub fn apply(&self, id: LaneId) -> Option<LaneId> {
+        self.moves.iter().find(|&&(old, _)| old == id).map(|&(_, new)| new)
+    }
+
+    /// All `(old, new)` id pairs, in ascending new-index order.
+    pub fn moves(&self) -> &[(LaneId, LaneId)] {
+        &self.moves
+    }
+}
+
+/// Outcome of one [`DeviceViewPool::compact`] pass.
+#[derive(Debug, Clone, Default)]
+pub struct CompactReport {
+    /// Device bytes released back to the KV budget.
+    pub freed: usize,
+    /// Re-indexed bindings the caller must apply to live sessions.
+    pub remap: LaneRemap,
+    /// Staged bytes copied lane-to-lane by in-place moves — device-side
+    /// traffic on an in-place-capable backend, never a host re-upload
+    /// (0 when the compaction also shrank the per-lane capacity, which
+    /// re-layouts the staging instead of copying it).
+    pub lane_move_bytes: u64,
+}
+
 /// Shared staged execution buffers for batched decode. See the module
 /// docs: one `[B, L, Hkv, cap, dh]` buffer set whose lanes are checked
 /// out per session and delta-synced from each session's dirty journal.
@@ -247,14 +322,15 @@ struct Lane {
 /// The pool grows on demand — a checkout with no free lane adds a lane,
 /// and a session whose cache re-layouts beyond the pool capacity grows
 /// every lane — and each growth is a *pool re-layout*: the layout epoch
-/// bumps and every lane's next sync is wholesale. Buffers shrink at two
-/// boundaries only, both scheduler-driven and never mid-step:
-/// [`Self::trim`] frees everything once every lane is returned (the
-/// active set emptied), and [`Self::defrag`] compacts a grown pool down
-/// to the live-session requirement (retire boundaries, or a blocked
-/// admission pass under a tight budget); between those, the pooled bytes
-/// stay pinned (and charged once) regardless of how many sessions come
-/// and go.
+/// bumps and every lane's next sync is wholesale. Buffers shrink at
+/// scheduler-driven boundaries only, never mid-step: [`Self::trim`]
+/// frees everything once every lane is returned (the active set
+/// emptied), and [`Self::compact`] re-indexes bound lanes down into
+/// interior holes and truncates the freed tail (retire boundaries, or a
+/// blocked admission pass under a tight budget) — [`Self::defrag`] is
+/// the trailing-only subset kept for callers that cannot apply a
+/// [`LaneRemap`]. Between those, the pooled bytes stay pinned (and
+/// charged once) regardless of how many sessions come and go.
 pub struct DeviceViewPool {
     /// Cache geometry shared by every lane (set by the first checkout).
     dims: Option<CacheDims>,
@@ -264,6 +340,9 @@ pub struct DeviceViewPool {
     pages: usize,
     /// Bumped on every pool re-layout (capacity or lane-count growth).
     epoch: u64,
+    /// Monotone stamp for lane bindings; never reset (survives [`Self::trim`])
+    /// so a [`LaneId`] from any earlier binding stays detectably stale.
+    gen_counter: u64,
     /// `[B, L, Hkv, cap, dh]` staged keys.
     k: Tensor,
     /// `[B, L, Hkv, cap, dh]` staged values.
@@ -293,6 +372,7 @@ impl DeviceViewPool {
             cap: 0,
             pages: 0,
             epoch: 0,
+            gen_counter: 0,
             k: Tensor::zeros(&[0]),
             v: Tensor::zeros(&[0]),
             mask: Tensor::zeros(&[0]),
@@ -381,9 +461,20 @@ impl DeviceViewPool {
     /// a small-capacity session checked into a large pool runs padded:
     /// its image occupies slots `[0, cache_cap)` and the tail stays
     /// masked invalid.
+    ///
+    /// # Panics
+    ///
+    /// The first checkout pins the pool's geometry; a later checkout
+    /// whose `dims` disagree panics — every lane shares one stride
+    /// layout, so a mismatched session would silently execute with wrong
+    /// strides if admitted.
     pub fn checkout(&mut self, dims: CacheDims, cap: usize) -> LaneId {
-        if self.dims.is_none() {
-            self.dims = Some(dims);
+        match self.dims {
+            None => self.dims = Some(dims),
+            Some(d) => assert!(
+                d == dims,
+                "checkout geometry {dims:?} disagrees with the pool's pinned dims {d:?}"
+            ),
         }
         let idx = match self.lanes.iter().position(|l| !l.in_use) {
             Some(i) => i,
@@ -397,11 +488,13 @@ impl DeviceViewPool {
         if want_lanes != batch_dim || cap > self.cap {
             self.relayout(want_lanes, self.cap.max(cap));
         }
+        self.gen_counter += 1;
         let lane = &mut self.lanes[idx];
         lane.in_use = true;
+        lane.gen = self.gen_counter;
         lane.synced = false;
         lane.stats = TransferStats::default();
-        LaneId { idx }
+        LaneId { idx, gen: self.gen_counter }
     }
 
     /// Grow the pooled buffers to at least `cap` slots per lane (no-op
@@ -423,21 +516,39 @@ impl DeviceViewPool {
     /// session even if a consumer reads the lane before its first sync;
     /// the buffers themselves stay allocated for recycling (release
     /// frees budgeted bytes only via [`Self::trim`]).
-    pub fn release(&mut self, lane: LaneId) {
-        if let Some(l) = self.lanes.get_mut(lane.idx) {
-            l.in_use = false;
-            l.synced = false;
+    ///
+    /// Returns `false` — touching nothing — when `lane` is stale: a
+    /// double release, an id recycled to another session, or an id
+    /// invalidated by a [`Self::compact`] move. Before lane generations,
+    /// a stale bare-index release silently cleared the index's *current*
+    /// tenant's mask, zeroing that session's attention output for a step.
+    pub fn release(&mut self, lane: LaneId) -> bool {
+        match self.lanes.get_mut(lane.idx) {
+            Some(l) if l.in_use && l.gen == lane.gen => {
+                l.in_use = false;
+                l.synced = false;
+            }
+            _ => return false,
         }
         if self.mask.numel() > 0 {
             self.mask.slice_at_mut(&[lane.idx]).fill(0.0);
         }
+        true
     }
 
     /// Free the pooled buffers if no lane is in use, returning the bytes
     /// released back to the KV budget (0 when lanes are still out or the
     /// pool is already empty). Lane geometry survives, so the next
     /// checkout re-allocates at the same capacity class.
+    ///
+    /// A trim of an already-drained (or never-allocated) pool is a
+    /// strict no-op: 0 returned and **no epoch bump** — the discipline
+    /// [`Self::defrag`] documents, so speculative trims cannot thrash
+    /// epoch-watching consumers.
     pub fn trim(&mut self) -> usize {
+        if self.lanes.is_empty() {
+            return 0;
+        }
         if self.lanes.iter().any(|l| l.in_use) {
             return 0;
         }
@@ -466,11 +577,16 @@ impl DeviceViewPool {
     /// all live sessions, which always matches an exported executable).
     /// Any shrink is a pool re-layout: the epoch bumps and every
     /// surviving lane's next sync is wholesale — which is why callers
-    /// (the scheduler) run defrag only at retire/trim boundaries, never
-    /// between a step's lane binds and its syncs. When nothing would
-    /// shrink this is a no-op: no re-layout, no epoch bump, 0 returned —
-    /// so calling it speculatively every blocked tick cannot thrash
-    /// resyncs. With no lane bound at all it degrades to [`Self::trim`].
+    /// must run defrag only at retire/trim boundaries, never between a
+    /// step's lane binds and its syncs. When nothing would shrink this
+    /// is a no-op: no re-layout, no epoch bump, 0 returned — so calling
+    /// it speculatively every blocked tick cannot thrash resyncs. With
+    /// no lane bound at all it degrades to [`Self::trim`].
+    ///
+    /// Since the bound-lane re-index protocol landed, the scheduler
+    /// reclaims through [`Self::compact`] instead (which also takes
+    /// interior holes); defrag remains the trailing-only subset for
+    /// callers that cannot apply a [`LaneRemap`].
     ///
     /// Returns the device bytes released back to the KV budget.
     pub fn defrag(&mut self, required_cap: usize) -> usize {
@@ -492,14 +608,164 @@ impl DeviceViewPool {
         before.saturating_sub(self.device_bytes())
     }
 
+    /// Copy one lane's contiguous block inside a `[B, ...]`-leading
+    /// staged tensor; returns the bytes moved.
+    fn copy_lane_block(t: &mut Tensor, old: usize, new: usize) -> usize {
+        let b = t.shape.first().copied().unwrap_or(0);
+        if b == 0 {
+            return 0;
+        }
+        let stride = t.data.len() / b;
+        t.data.copy_within(old * stride..(old + 1) * stride, new * stride);
+        stride * std::mem::size_of::<f32>()
+    }
+
+    /// Drop trailing lanes off a `[B, ...]`-leading staged tensor in
+    /// place: surviving lanes' strides and contents are untouched. The
+    /// backing allocation is shrunk too — the freed bytes are credited
+    /// back to the KV budget, so they must actually leave host memory,
+    /// not linger as spare `Vec` capacity.
+    fn truncate_lane_dim(t: &mut Tensor, keep: usize) {
+        let b = t.shape.first().copied().unwrap_or(0);
+        if b == 0 || keep >= b {
+            return;
+        }
+        let stride = t.data.len() / b;
+        t.data.truncate(keep * stride);
+        t.data.shrink_to_fit();
+        t.shape[0] = keep;
+    }
+
+    /// Bound-lane re-index compaction: reclaim *interior* holes, the
+    /// capacity [`Self::defrag`] structurally cannot. Bound lanes are
+    /// packed down to the lowest indices (relative order preserved),
+    /// then the — now entirely trailing — free lanes are truncated and,
+    /// when `required_cap` allows, the per-lane capacity shrinks exactly
+    /// as in defrag. Without compaction, one long-lived session bound at
+    /// a high index pins every freed lane beneath it against the KV
+    /// budget for its whole lifetime.
+    ///
+    /// Each move mints a fresh generation: the mover's old [`LaneId`]
+    /// goes stale (rejected by [`Self::release`]/[`Self::sync_lane`])
+    /// and the returned [`LaneRemap`] carries the replacement ids, which
+    /// the caller **must** apply to the sessions holding them before the
+    /// next sync ([`crate::engine::Engine::compact_view_pool`] does).
+    ///
+    /// Cost model, and why this beats a blanket re-layout:
+    ///
+    /// * **capacity unchanged** (`required_cap >= ` [`Self::capacity`],
+    ///   or 0): moved lanes' staged K/V/mask/page-bound images are
+    ///   copied lane-to-lane *inside* the staging (device-side traffic
+    ///   on an in-place backend, reported as
+    ///   [`CompactReport::lane_move_bytes`] — never a host re-upload),
+    ///   and truncating the freed tail leaves every survivor's stride
+    ///   and image intact: **no epoch bump, no resync for anyone** —
+    ///   moved or not.
+    /// * **capacity shrink** (`required_cap < ` [`Self::capacity`]): the
+    ///   per-lane stride changes, so the staging re-layouts (epoch bump;
+    ///   survivors resync wholesale, `lane_move_bytes` is 0), same as
+    ///   defrag.
+    ///
+    /// When nothing would move or shrink this is a strict no-op: empty
+    /// report, no epoch bump, no generation minted. With no lane bound
+    /// it degrades to [`Self::trim`]. Like defrag, callers run it only
+    /// at retire/budget-deferred tick boundaries, never between a step's
+    /// lane binds and its syncs.
+    pub fn compact(&mut self, required_cap: usize) -> CompactReport {
+        if self.dims.is_none() || self.lanes.is_empty() {
+            return CompactReport::default();
+        }
+        if !self.lanes.iter().any(|l| l.in_use) {
+            return CompactReport { freed: self.trim(), ..CompactReport::default() };
+        }
+        let new_cap =
+            if required_cap == 0 { self.cap } else { required_cap.min(self.cap) };
+        let bound: Vec<usize> =
+            (0..self.lanes.len()).filter(|&i| self.lanes[i].in_use).collect();
+        let keep = bound.len();
+        // Target index = rank among bound lanes: always <= the old index,
+        // and processing moves in ascending old order never overwrites a
+        // bound lane that has not moved yet (rank i < j <= old_j).
+        let moves: Vec<(usize, usize)> = bound
+            .iter()
+            .enumerate()
+            .filter(|&(rank, &old)| rank != old)
+            .map(|(rank, &old)| (old, rank))
+            .collect();
+        if moves.is_empty() && keep == self.lanes.len() && new_cap == self.cap {
+            return CompactReport::default();
+        }
+        let before = self.device_bytes();
+        let in_place = new_cap == self.cap;
+        let mut remap = LaneRemap::default();
+        let mut move_bytes = 0u64;
+        for &(old, new) in &moves {
+            // The tenant keeps its sync state and transfer counters; only
+            // its address changes — under a fresh generation, so the old
+            // id is detectably stale (the freed source slot keeps the old
+            // generation but drops `in_use`, which rejects it too).
+            self.gen_counter += 1;
+            let from = self.lanes[old];
+            self.lanes[new] = Lane { gen: self.gen_counter, ..from };
+            self.lanes[old] = Lane { gen: from.gen, ..Lane::default() };
+            remap.moves.push((
+                LaneId { idx: old, gen: from.gen },
+                LaneId { idx: new, gen: self.gen_counter },
+            ));
+            if in_place {
+                for t in
+                    [&mut self.k, &mut self.v, &mut self.mask, &mut self.pmin, &mut self.pmax]
+                {
+                    move_bytes += Self::copy_lane_block(t, old, new) as u64;
+                }
+            }
+        }
+        self.lanes.truncate(keep);
+        if in_place {
+            for t in
+                [&mut self.k, &mut self.v, &mut self.mask, &mut self.pmin, &mut self.pmax]
+            {
+                Self::truncate_lane_dim(t, keep);
+            }
+        } else {
+            self.relayout(keep, new_cap);
+        }
+        CompactReport {
+            freed: before.saturating_sub(self.device_bytes()),
+            remap,
+            lane_move_bytes: move_bytes,
+        }
+    }
+
     /// Drain `cache`'s dirty journal into `lane`'s staged image — the
     /// pooled counterpart of [`DeviceExecView::sync`]. Journaled spans
     /// ship as deltas; a fresh checkout, a cache or pool re-layout, a
     /// `full` log, or a delta payload exceeding a wholesale upload ships
     /// the lane wholesale (padding tail masked invalid). Grows the pool
     /// capacity first if the cache outgrew it.
-    pub fn sync_lane(&mut self, lane: LaneId, cache: &mut SequenceKvCache) -> SyncReport {
-        debug_assert!(self.lanes[lane.idx].in_use, "sync of a released lane");
+    ///
+    /// # Errors
+    ///
+    /// A stale `lane` — released, recycled to another session, or
+    /// re-indexed by [`Self::compact`] since the id was issued — is
+    /// rejected before anything is touched: the cache's journal is not
+    /// drained and no staging is written, where the pre-generation pool
+    /// would have overwritten the index's current tenant with this
+    /// session's K/V.
+    pub fn sync_lane(
+        &mut self,
+        lane: LaneId,
+        cache: &mut SequenceKvCache,
+    ) -> Result<SyncReport> {
+        match self.lanes.get(lane.idx) {
+            Some(l) if l.in_use && l.gen == lane.gen => {}
+            _ => bail!(
+                "stale LaneId (index {}, generation {}): the lane was released, \
+                 recycled, or re-indexed by compaction since this id was issued",
+                lane.idx,
+                lane.gen
+            ),
+        }
         if cache.capacity() > self.cap {
             self.relayout(self.lanes.len(), cache.capacity());
         }
@@ -547,36 +813,63 @@ impl DeviceViewPool {
                 stats.spans_applied += spans as u64;
             }
         }
-        SyncReport { full, bytes, spans }
+        Ok(SyncReport { full, bytes, spans })
+    }
+
+    /// Debug-mode guard for the read accessors below: they index by
+    /// `lane.idx` on the decode hot path (every in-tree caller reads
+    /// only after a successful [`Self::sync_lane`] of the same id in the
+    /// same call, which did the full validation), but a caller that
+    /// skipped a [`LaneRemap`] would otherwise silently read **another
+    /// binding's** block — surface that protocol break loudly in tests.
+    /// Reading one's own *released* lane stays tolerated (the buffers
+    /// are untouched until recycled; tests inspect the cleared mask this
+    /// way); only an index owned by a different live binding fires.
+    fn debug_check_live(&self, lane: LaneId) {
+        debug_assert!(
+            self.lanes
+                .get(lane.idx)
+                .map_or(true, |l| !l.in_use || l.gen == lane.gen),
+            "stale LaneId (index {}, generation {}) read a lane now bound to \
+             another session — a compaction remap was not applied",
+            lane.idx,
+            lane.gen
+        );
     }
 
     /// Transfer counters accumulated by `lane` since its checkout.
     pub fn lane_stats(&self, lane: LaneId) -> TransferStats {
+        self.debug_check_live(lane);
         self.lanes.get(lane.idx).map(|l| l.stats).unwrap_or_default()
     }
 
     /// `lane`'s contiguous `[L, Hkv, cap, dh]` staged-key block.
     pub fn lane_k(&self, lane: LaneId) -> &[f32] {
+        self.debug_check_live(lane);
         self.k.slice_at(&[lane.idx])
     }
 
     /// `lane`'s contiguous `[L, Hkv, cap, dh]` staged-value block.
     pub fn lane_v(&self, lane: LaneId) -> &[f32] {
+        self.debug_check_live(lane);
         self.v.slice_at(&[lane.idx])
     }
 
     /// `lane`'s contiguous `[L, Hkv, cap]` validity-mask block.
     pub fn lane_mask(&self, lane: LaneId) -> &[f32] {
+        self.debug_check_live(lane);
         self.mask.slice_at(&[lane.idx])
     }
 
     /// `lane`'s contiguous `[L, Hkv, P, dh]` Quest page lower bounds.
     pub fn lane_page_min(&self, lane: LaneId) -> &[f32] {
+        self.debug_check_live(lane);
         self.pmin.slice_at(&[lane.idx])
     }
 
     /// `lane`'s contiguous `[L, Hkv, P, dh]` Quest page upper bounds.
     pub fn lane_page_max(&self, lane: LaneId) -> &[f32] {
+        self.debug_check_live(lane);
         self.pmax.slice_at(&[lane.idx])
     }
 }
@@ -684,12 +977,12 @@ mod tests {
         let mut pool = DeviceViewPool::new();
         let mut cache = SequenceKvCache::new(d, 8).unwrap();
         let lane = pool.checkout(d, 8);
-        let r0 = pool.sync_lane(lane, &mut cache);
+        let r0 = pool.sync_lane(lane, &mut cache).unwrap();
         assert!(r0.full);
         for pos in 0..6 {
             let (kn, vn, gn) = decoded(d, pos as f32, 0.9);
             cache.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
-            let r = pool.sync_lane(lane, &mut cache);
+            let r = pool.sync_lane(lane, &mut cache).unwrap();
             assert!(!r.full, "steady-state lane syncs must be deltas (pos {pos})");
         }
         assert_lane_matches(&pool, lane, &cache);
@@ -708,8 +1001,8 @@ mod tests {
             let (kn, vn, gn) = decoded(d, pos as f32, 0.9);
             big.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| true).unwrap();
             small.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| false).unwrap();
-            pool.sync_lane(big_lane, &mut big);
-            pool.sync_lane(small_lane, &mut small);
+            pool.sync_lane(big_lane, &mut big).unwrap();
+            pool.sync_lane(small_lane, &mut small).unwrap();
         }
         assert_lane_matches(&pool, big_lane, &big);
         assert_lane_matches(&pool, small_lane, &small);
@@ -723,18 +1016,18 @@ mod tests {
         let mut b = SequenceKvCache::new(d, 8).unwrap();
         let la = pool.checkout(d, 8);
         let lb = pool.checkout(d, 8);
-        pool.sync_lane(la, &mut a);
-        pool.sync_lane(lb, &mut b);
+        pool.sync_lane(la, &mut a).unwrap();
+        pool.sync_lane(lb, &mut b).unwrap();
         let e0 = pool.layout_epoch();
         // Lane a's cache outgrows the pool: the sync grows every lane.
         a.ensure_capacity(16).unwrap();
-        let ra = pool.sync_lane(la, &mut a);
+        let ra = pool.sync_lane(la, &mut a).unwrap();
         assert!(ra.full);
         assert!(pool.layout_epoch() > e0);
         assert_eq!(pool.capacity(), 16);
         // Lane b was invalidated by the pool re-layout even though its own
         // cache never changed.
-        let rb = pool.sync_lane(lb, &mut b);
+        let rb = pool.sync_lane(lb, &mut b).unwrap();
         assert!(rb.full, "pool re-layout must wholesale-invalidate peer lanes");
         assert_lane_matches(&pool, la, &a);
         assert_lane_matches(&pool, lb, &b);
@@ -779,7 +1072,7 @@ mod tests {
         let mut small = SequenceKvCache::new(d, 8).unwrap();
         let small_lane = pool.checkout(d, 8);
         let big_lane = pool.checkout(d, 32); // grows every lane to cap 32
-        pool.sync_lane(small_lane, &mut small);
+        pool.sync_lane(small_lane, &mut small).unwrap();
         assert_eq!(pool.capacity(), 32);
         // The big session retires; its grown staging lingers.
         pool.release(big_lane);
@@ -794,7 +1087,7 @@ mod tests {
         assert_eq!(freed, grown - pool.device_bytes());
         assert!(pool.layout_epoch() > e0, "a shrink is a re-layout");
         // The surviving lane resyncs wholesale, then deltas again.
-        let r = pool.sync_lane(small_lane, &mut small);
+        let r = pool.sync_lane(small_lane, &mut small).unwrap();
         assert!(r.full, "defrag must wholesale-invalidate survivors");
         assert_lane_matches(&pool, small_lane, &small);
         // No slack left: defrag is now a no-op and must NOT bump the
@@ -802,7 +1095,7 @@ mod tests {
         let e1 = pool.layout_epoch();
         assert_eq!(pool.defrag(8), 0);
         assert_eq!(pool.layout_epoch(), e1);
-        let r = pool.sync_lane(small_lane, &mut small);
+        let r = pool.sync_lane(small_lane, &mut small).unwrap();
         assert!(!r.full, "no-op defrag must not invalidate lanes");
     }
 
@@ -838,10 +1131,10 @@ mod tests {
         let mut pool = DeviceViewPool::new();
         let mut a = SequenceKvCache::new(d, 8).unwrap();
         let la = pool.checkout(d, 8);
-        pool.sync_lane(la, &mut a);
+        pool.sync_lane(la, &mut a).unwrap();
         let (kn, vn, gn) = decoded(d, 1.0, 0.9);
         a.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| true).unwrap();
-        pool.sync_lane(la, &mut a);
+        pool.sync_lane(la, &mut a).unwrap();
         pool.release(la);
         assert!(pool.lane_mask(la).iter().all(|&x| x == 0.0), "release clears the mask");
         // A new session gets the same lane back; its first sync must be
@@ -850,9 +1143,178 @@ mod tests {
         let lb = pool.checkout(d, 8);
         assert_eq!(lb.index(), la.index(), "free lane must be recycled, not grown");
         assert_eq!(pool.lane_count(), 1);
-        let r = pool.sync_lane(lb, &mut b);
+        let r = pool.sync_lane(lb, &mut b).unwrap();
         assert!(r.full);
         assert_lane_matches(&pool, lb, &b);
         assert_eq!(pool.lane_stats(lb).full_uploads, 1, "lane stats reset at checkout");
+    }
+
+    /// Regression: a speculative trim on a drained (or never-allocated)
+    /// pool must be a strict no-op — 0 returned and no epoch bump — so
+    /// epoch-watching consumers are not wholesale-invalidated for free.
+    #[test]
+    fn trim_on_drained_pool_is_a_strict_noop() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        assert_eq!(pool.trim(), 0, "fresh pool: nothing to trim");
+        assert_eq!(pool.layout_epoch(), 0, "fresh-pool trim must not bump the epoch");
+        let lane = pool.checkout(d, 8);
+        assert!(pool.release(lane));
+        assert!(pool.trim() > 0, "drained pool frees its buffers once");
+        let e = pool.layout_epoch();
+        assert_eq!(pool.trim(), 0, "second trim must release nothing");
+        assert_eq!(pool.layout_epoch(), e, "drained-pool trim must not bump the epoch");
+    }
+
+    /// Regression: the first checkout pins the pool geometry; a later
+    /// session with disagreeing `CacheDims` must be rejected loudly, not
+    /// silently run with the pool's strides.
+    #[test]
+    #[should_panic(expected = "disagrees with the pool's pinned dims")]
+    fn checkout_rejects_mismatched_geometry() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let _ = pool.checkout(d, 8);
+        let other = CacheDims { d_head: d.d_head * 2, ..d };
+        let _ = pool.checkout(other, 8);
+    }
+
+    /// Regression for the latent stale-id bug the generations fix: a
+    /// double release, or a release/sync through an id whose lane was
+    /// recycled to another session, must be rejected — not clear or
+    /// overwrite the new tenant's staged image.
+    #[test]
+    fn stale_lane_ids_are_rejected_and_touch_nothing() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut a = SequenceKvCache::new(d, 8).unwrap();
+        let la = pool.checkout(d, 8);
+        pool.sync_lane(la, &mut a).unwrap();
+        assert!(pool.release(la), "live release must succeed");
+        assert!(!pool.release(la), "double release must be rejected");
+        // The index is recycled to a new tenant with real occupancy.
+        let mut b = SequenceKvCache::new(d, 8).unwrap();
+        let (kn, vn, gn) = decoded(d, 3.0, 0.9);
+        b.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| true).unwrap();
+        let lb = pool.checkout(d, 8);
+        assert_eq!(lb.index(), la.index(), "lane must recycle");
+        assert!(lb.generation() > la.generation(), "recycle mints a new generation");
+        pool.sync_lane(lb, &mut b).unwrap();
+        let mask: Vec<f32> = pool.lane_mask(lb).to_vec();
+        assert!(mask.iter().any(|&x| x > 0.0), "tenant image must be non-trivial");
+        // Stale sync: rejected before the journal is drained or the
+        // staging written (the old behavior overwrote lane `lb`).
+        let (kn, vn, gn) = decoded(d, 9.0, 0.9);
+        a.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| true).unwrap();
+        assert!(!a.dirty_log().is_empty());
+        assert!(pool.sync_lane(la, &mut a).is_err(), "stale sync must be rejected");
+        assert!(!a.dirty_log().is_empty(), "rejected sync must not drain the journal");
+        // Stale release: rejected without clearing the tenant's mask (the
+        // old behavior zeroed it, killing the tenant's attention output).
+        assert!(!pool.release(la));
+        assert_eq!(pool.lane_mask(lb), &mask[..], "stale id touched the new tenant");
+        assert_lane_matches(&pool, lb, &b);
+    }
+
+    /// The PR 4 acceptance scenario: a long-lived session bound *above*
+    /// two retired peers' lanes. Trailing-only defrag reclaims nothing
+    /// (the survivor pins the tail); compaction moves the survivor down
+    /// into the interior hole by a staged lane-to-lane copy, truncates
+    /// the freed lanes, and the survivor keeps delta-syncing — no
+    /// wholesale host re-upload.
+    #[test]
+    fn compact_reclaims_interior_holes_without_survivor_resync() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut survivor = SequenceKvCache::new(d, 8).unwrap();
+        let mut peers: Vec<SequenceKvCache> =
+            (0..2).map(|_| SequenceKvCache::new(d, 8).unwrap()).collect();
+        let peer_lanes: Vec<LaneId> = peers.iter().map(|c| pool.checkout(d, c.capacity())).collect();
+        let lane = pool.checkout(d, 8);
+        assert_eq!(lane.index(), 2, "survivor bound above both peers");
+        for (peer, &pl) in peers.iter_mut().zip(&peer_lanes) {
+            pool.sync_lane(pl, peer).unwrap();
+        }
+        pool.sync_lane(lane, &mut survivor).unwrap();
+        let (kn, vn, gn) = decoded(d, 1.0, 0.9);
+        survivor.insert_decoded(&kn, &vn, &gn, 0, |_, _, _| true).unwrap();
+        pool.sync_lane(lane, &mut survivor).unwrap();
+        // Both peers retire: interior holes at indices 0 and 1.
+        for pl in peer_lanes {
+            assert!(pool.release(pl));
+        }
+        let grown = pool.device_bytes();
+        assert_eq!(grown, 3 * DeviceViewPool::lane_bytes(d, 8));
+        // Trailing-only defrag is structurally blind to interior holes.
+        assert_eq!(pool.defrag(8), 0, "defrag cannot reclaim an interior hole");
+        assert_eq!(pool.lane_count(), 3);
+        // Compaction re-indexes the survivor down and frees both lanes.
+        let epoch = pool.layout_epoch();
+        let r = pool.compact(8);
+        assert_eq!(r.freed, 2 * DeviceViewPool::lane_bytes(d, 8));
+        assert_eq!(pool.device_bytes(), DeviceViewPool::lane_bytes(d, 8));
+        assert_eq!(pool.lane_count(), 1);
+        assert_eq!(r.remap.len(), 1);
+        let moved = r.remap.apply(lane).expect("survivor must be remapped");
+        assert_eq!(moved.index(), 0);
+        assert!(r.lane_move_bytes > 0, "in-place move ships staged bytes, not a re-upload");
+        assert_eq!(pool.layout_epoch(), epoch, "in-place compaction is not a re-layout");
+        // The moved image is bit-identical and the survivor stays on the
+        // delta path; its stale pre-move id is rejected.
+        assert_lane_matches(&pool, moved, &survivor);
+        let (kn, vn, gn) = decoded(d, 2.0, 0.9);
+        survivor.insert_decoded(&kn, &vn, &gn, 1, |_, _, _| true).unwrap();
+        assert!(pool.sync_lane(lane, &mut survivor).is_err(), "pre-move id is stale");
+        let s = pool.sync_lane(moved, &mut survivor).unwrap();
+        assert!(!s.full, "a moved lane must not resync wholesale");
+        assert_lane_matches(&pool, moved, &survivor);
+    }
+
+    /// Compaction edge cases: a fully-bound pool is a strict no-op (no
+    /// epoch bump, no generation minted, empty remap); a capacity shrink
+    /// re-layouts (survivors resync wholesale) but still re-indexes; an
+    /// all-free pool degrades to trim.
+    #[test]
+    fn compact_noop_shrink_and_trim_degradation() {
+        let d = dims();
+        let mut pool = DeviceViewPool::new();
+        let mut a = SequenceKvCache::new(d, 8).unwrap();
+        let mut b = SequenceKvCache::new(d, 8).unwrap();
+        let la = pool.checkout(d, 8);
+        let lb = pool.checkout(d, 8);
+        pool.sync_lane(la, &mut a).unwrap();
+        pool.sync_lane(lb, &mut b).unwrap();
+        // Fully bound, nothing to shrink: strict no-op.
+        let epoch = pool.layout_epoch();
+        let r = pool.compact(8);
+        assert_eq!(r.freed, 0);
+        assert!(r.remap.is_empty());
+        assert_eq!(pool.layout_epoch(), epoch);
+        let s = pool.sync_lane(la, &mut a).unwrap();
+        assert!(!s.full, "no-op compaction must not invalidate lanes");
+        assert!(pool.release(la), "id must survive a no-op compaction unchanged");
+        // Grow the pool via a big peer, retire it: the survivor (lb) sits
+        // at index 1 over a hole at 0 *and* a grown capacity — the shrink
+        // path re-layouts, re-indexes, and frees both axes.
+        let big = pool.checkout(d, 32);
+        assert_eq!(big.index(), 0);
+        assert_eq!(pool.capacity(), 32);
+        assert!(pool.release(big));
+        let r = pool.compact(8);
+        assert!(r.freed > 0);
+        assert_eq!(pool.capacity(), 8);
+        assert_eq!(pool.lane_count(), 1);
+        assert_eq!(r.lane_move_bytes, 0, "a shrink re-layouts instead of copying");
+        let moved = r.remap.apply(lb).expect("survivor re-indexed");
+        assert_eq!(moved.index(), 0);
+        let s = pool.sync_lane(moved, &mut b).unwrap();
+        assert!(s.full, "a capacity shrink wholesale-invalidates survivors");
+        assert_lane_matches(&pool, moved, &b);
+        // All lanes free: compaction degrades to trim.
+        assert!(pool.release(moved));
+        let r = pool.compact(8);
+        assert_eq!(r.freed, DeviceViewPool::lane_bytes(d, 8));
+        assert_eq!(pool.device_bytes(), 0);
+        assert!(r.remap.is_empty());
     }
 }

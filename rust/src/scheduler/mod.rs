@@ -39,11 +39,14 @@
 //! budget recovers the pooled bytes before the next admission pass —
 //! trimming must not wait for the queue to drain, or a tight budget
 //! would starve queued requests behind a lingering empty pool. While
-//! sequences remain active the scheduler instead **defrags**: at retire
+//! sequences remain active the scheduler instead **compacts**: at retire
 //! boundaries, and whenever a non-empty queue was deferred by the
-//! budget, the pool is compacted down to the live-session requirement
-//! ([`Engine::defrag_view_pool`]), so a long-lived small session cannot
-//! pin a staging grown for peers that already retired.
+//! budget, bound lanes are re-indexed down into interior holes, the
+//! freed tail is truncated, and the capacity shrinks to the live-session
+//! requirement ([`Engine::compact_view_pool`], which also applies the
+//! resulting lane remap to every live session's binding) — so a
+//! long-lived session cannot pin a staging grown for peers that already
+//! retired, whether the slack is trailing or buried beneath it.
 #![warn(missing_docs)]
 
 use std::collections::{BTreeMap, VecDeque};
@@ -329,8 +332,8 @@ pub struct Scheduler {
     active: Vec<Active>,
     rejected: u64,
     /// View bytes returned to the budget: owned views released at retire,
-    /// pool trims once the scheduler drains, and pool defrag shrinks at
-    /// retire/blocked boundaries.
+    /// pool trims once the scheduler drains, and pool compaction shrinks
+    /// at retire/blocked boundaries.
     view_bytes_released: u64,
     /// Consecutive admission ticks in which requests were admitted past a
     /// still-queued head (see [`HEAD_MAX_BYPASS`]).
@@ -399,8 +402,8 @@ impl Scheduler {
 
     /// View bytes returned to the budget by retired sequences' owned
     /// views, by pool trims whenever the active set empties, and by pool
-    /// defrag shrinks at retire/blocked boundaries. Pooled buffers count
-    /// exactly once, at trim or defrag — a retiring session's lane
+    /// compaction at retire/blocked boundaries. Pooled buffers count
+    /// exactly once, at trim or compaction — a retiring session's lane
     /// recycles without freeing anything by itself.
     pub fn view_bytes_released(&self) -> u64 {
         self.view_bytes_released
@@ -674,12 +677,17 @@ impl Scheduler {
         // every lane returned, which an empty active set guarantees).
         //
         // While sequences remain active, a full trim is impossible but a
-        // *defrag* is not: at a retire boundary — or whenever a non-empty
-        // queue was deferred by the budget — compact the pool down to the
-        // live-session requirement, so a long-lived small session cannot
-        // pin a staging grown for peers that already retired (the
-        // tight-budget deadlock regression). Defrag is a no-op (no
-        // re-layout, no wholesale resyncs) when there is no slack.
+        // *compaction* is not: at a retire boundary — or whenever a
+        // non-empty queue was deferred by the budget — bound lanes move
+        // down into interior holes, the freed tail is truncated, and the
+        // capacity shrinks to the live-session requirement, so a
+        // long-lived session cannot pin lanes freed beneath it (the
+        // interior-hole capacity leak) or a staging grown for retired
+        // peers (the tight-budget deadlock regression). Every live
+        // session is handed to the engine so the lane remap lands on its
+        // binding before the next tick's syncs. Compaction is a strict
+        // no-op (no re-layout, no wholesale resyncs) when there is no
+        // slack.
         if self.active.is_empty() {
             self.view_bytes_released += engine.trim_view_pool() as u64;
         } else if !done.is_empty() || admission_blocked {
@@ -689,7 +697,10 @@ impl Scheduler {
                 .map(|a| a.sess.cache().map(|c| c.capacity()).unwrap_or(0))
                 .max()
                 .unwrap_or(0);
-            self.view_bytes_released += engine.defrag_view_pool(required) as u64;
+            let mut live: Vec<&mut Session> =
+                self.active.iter_mut().map(|a| &mut a.sess).collect();
+            self.view_bytes_released +=
+                engine.compact_view_pool(&mut live, required) as u64;
         }
         done
     }

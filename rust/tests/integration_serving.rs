@@ -317,6 +317,14 @@ fn batched_prefill_matches_sequential_and_retire_triggers_defrag() {
             saw_mid_run_defrag,
             "the long session's retire must defrag the grown pool"
         );
+        // PR 4: the reclaim runs through the bound-lane compaction
+        // protocol — the survivors' bindings were re-pointed via the
+        // LaneRemap (or kept in place) and kept decoding, so the pass
+        // must be counted as a compaction event too.
+        assert!(
+            engine.metrics.compaction_events >= 1,
+            "the mid-run reclaim must be a compaction pass"
+        );
     }
     assert!(
         engine.metrics.prefill_batch_steps > pf_steps_before,

@@ -161,7 +161,7 @@ impl Sim {
     /// `Engine::decode_batch`'s bind-then-sync ordering.
     fn sync(&mut self, pool: &mut DeviceViewPool) {
         self.view.sync(&mut self.view_cache);
-        pool.sync_lane(self.lane, &mut self.lane_cache);
+        pool.sync_lane(self.lane, &mut self.lane_cache).unwrap();
     }
 
     /// The bit-identity check: the lane's `[0, cap)` prefix must equal

@@ -1,0 +1,292 @@
+//! Property-based tests for the bound-lane re-index protocol
+//! (`DeviceViewPool::compact`), lane generations (stale-`LaneId`
+//! rejection), and the scheduler's admission-order contract.
+//!
+//! Three invariants from the compaction design are checked over
+//! randomized workloads (drawn from the same `util::prop::sessions`
+//! generator as the other planner sweeps):
+//!
+//! 1. **Admission order is a safe removal sequence** — the flattened
+//!    `plan_prefill_batch` order contains only unique, in-queue indices,
+//!    so `Scheduler::step`'s descending `queue.remove(i)` walk and its
+//!    `taken.remove(i).unwrap()` re-take can never panic mid-tick.
+//! 2. **Compaction safety** — across random checkout/decode/retire/
+//!    compact histories, surviving lane images are bit-identical across
+//!    `compact`, pool `device_bytes` is monotone non-increasing through
+//!    it, bound lanes end packed at the bottom, single-capacity
+//!    compaction never re-layouts (no epoch bump), and a no-op pass
+//!    leaves every outstanding id valid (no generation minted).
+//! 3. **Stale ids touch nothing** — double release and release/sync
+//!    through a recycled or remapped id are rejected without draining
+//!    the caller's journal or clearing the new tenant's mask.
+
+use wgkv::kvcache::dual::CacheDims;
+use wgkv::kvcache::SequenceKvCache;
+use wgkv::prop_assert;
+use wgkv::runtime::device_cache::{DeviceViewPool, LaneId};
+use wgkv::runtime::tensor::Tensor;
+use wgkv::scheduler::{plan_prefill_batch, PoolSnapshot};
+use wgkv::util::prop::{forall, sessions};
+use wgkv::util::rng::Rng;
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 6),
+        page_size: rng.usize(2, 5),
+    }
+}
+
+fn decoded(d: CacheDims, pos: i64, gate: f32) -> (Tensor, Tensor, Tensor) {
+    let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 + gate);
+    let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 - gate);
+    let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+    (k, v, g)
+}
+
+// ---- planner admission-order property ------------------------------------
+
+#[test]
+fn prefill_plan_order_is_a_safe_queue_removal_sequence() {
+    forall(0x41, |rng| {
+        let d = dims(rng);
+        let classes = [16usize, 32, 64];
+        let specs = sessions(rng, 0, 12, classes.len(), 24);
+        let buckets: Vec<usize> = specs.iter().map(|s| classes[s.size_class]).collect();
+        let n = buckets.len();
+        let est_of = |b: usize| SequenceKvCache::worst_case_kv_bytes(d, b);
+        let icap_of = |b: usize| b + d.w_local;
+        let est = |i: usize| est_of(buckets[i]);
+        let icap = |i: usize| icap_of(buckets[i]);
+        let lane = |c: usize| DeviceViewPool::lane_bytes(d, c);
+        let bound_lanes = rng.usize(0, 4);
+        let pool = PoolSnapshot {
+            bound_lanes,
+            allocated_lanes: bound_lanes + rng.usize(0, 3),
+            cap_floor: if rng.bool(0.4) { icap_of(classes[rng.usize(0, 3)]) } else { 0 },
+        };
+        let per = est_of(classes[2]) + lane(icap_of(classes[2]));
+        let budget = rng.usize(0, (n.max(1) + pool.allocated_lanes + 1) * per + 2);
+        let plan = plan_prefill_batch(
+            &buckets,
+            rng.usize(1, 6),
+            rng.usize(0, 10),
+            &est,
+            &icap,
+            &lane,
+            budget,
+            pool,
+            rng.bool(0.5),
+        );
+        let order: Vec<usize> = plan.iter().flatten().copied().collect();
+        // Unique, in-queue indices — the precondition for the
+        // scheduler's take-then-retake dance.
+        let mut seen = vec![false; n];
+        for &i in &order {
+            prop_assert!(i < n, "planned index {i} outside the {n}-deep queue");
+            prop_assert!(!seen[i], "index {i} planned twice");
+            seen[i] = true;
+        }
+        // Replay the scheduler's exact removal protocol on a model queue:
+        // descending removal keeps every index in bounds, and the
+        // plan-order re-take finds every entry exactly once (the
+        // `taken.remove(i).unwrap()` path in `Scheduler::step`).
+        let mut queue: Vec<usize> = (0..n).collect();
+        let mut descending = order.clone();
+        descending.sort_unstable_by(|a, b| b.cmp(a));
+        let mut taken = std::collections::BTreeMap::new();
+        for &i in &descending {
+            prop_assert!(i < queue.len(), "descending removal index {i} out of bounds");
+            taken.insert(i, queue.remove(i));
+        }
+        for &i in &order {
+            prop_assert!(taken.remove(&i) == Some(i), "re-take of index {i} failed");
+        }
+        prop_assert!(taken.is_empty(), "planned entries left untaken");
+        Ok(())
+    });
+}
+
+// ---- compaction properties -----------------------------------------------
+
+/// One live session of a compaction history: its pool binding plus the
+/// cache feeding that lane's journal.
+struct Live {
+    lane: LaneId,
+    cache: SequenceKvCache,
+    pos: i64,
+}
+
+#[test]
+fn compaction_preserves_images_and_never_grows() {
+    forall(0x42, |rng| {
+        let d = dims(rng);
+        // One capacity class: every compaction stays on the in-place
+        // path (moves + tail truncation, never a re-layout).
+        let cap = d.w_local + d.page_size * 2;
+        let mut pool = DeviceViewPool::new();
+        let mut live: Vec<Live> = Vec::new();
+        for _ in 0..rng.usize(8, 28) {
+            match rng.usize(0, 4) {
+                // Arrival: bind a lane for a fresh session.
+                0 => {
+                    let cache = SequenceKvCache::new(d, cap).unwrap();
+                    let lane = pool.checkout(d, cap);
+                    live.push(Live { lane, cache, pos: 0 });
+                }
+                // Retire a random session; its id must release exactly once.
+                1 if !live.is_empty() => {
+                    let s = live.swap_remove(rng.usize(0, live.len()));
+                    prop_assert!(pool.release(s.lane), "live release rejected");
+                    prop_assert!(!pool.release(s.lane), "double release accepted");
+                }
+                // Decode one token into every live session and delta-sync
+                // its lane (ring-only writes, so the fixed capacity class
+                // never overflows — capacity growth would break the
+                // single-class in-place invariant this sweep pins down).
+                2 => {
+                    for s in live.iter_mut() {
+                        let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
+                        let (k, v, g) = decoded(d, s.pos, gate);
+                        s.cache
+                            .insert_decoded(&k, &v, &g, s.pos, |_, _, _| false)
+                            .unwrap();
+                        s.pos += 1;
+                        pool.sync_lane(s.lane, &mut s.cache).unwrap();
+                    }
+                }
+                // Compact around the live set.
+                _ => {
+                    let snaps: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = live
+                        .iter()
+                        .map(|s| {
+                            (
+                                pool.lane_k(s.lane).to_vec(),
+                                pool.lane_v(s.lane).to_vec(),
+                                pool.lane_mask(s.lane).to_vec(),
+                            )
+                        })
+                        .collect();
+                    let before = pool.device_bytes();
+                    let epoch = pool.layout_epoch();
+                    let r = pool.compact(cap);
+                    prop_assert!(
+                        pool.device_bytes() + r.freed == before,
+                        "compaction byte accounting broken"
+                    );
+                    prop_assert!(pool.device_bytes() <= before, "compaction grew the pool");
+                    if live.is_empty() {
+                        // Nothing bound: compaction degrades to trim
+                        // (which may legitimately re-layout to empty).
+                        prop_assert!(
+                            pool.device_bytes() == 0,
+                            "compacting an all-free pool must free everything"
+                        );
+                        prop_assert!(r.remap.is_empty(), "nothing bound, nothing to move");
+                        continue;
+                    }
+                    prop_assert!(
+                        pool.layout_epoch() == epoch,
+                        "single-class compaction must not re-layout (epoch bumped)"
+                    );
+                    // Apply the remap exactly as the engine does; moved
+                    // sessions' old ids must go stale.
+                    for s in live.iter_mut() {
+                        if let Some(moved) = r.remap.apply(s.lane) {
+                            let old = s.lane;
+                            s.lane = moved;
+                            prop_assert!(
+                                !pool.release(old),
+                                "pre-move id still accepted after compaction"
+                            );
+                        }
+                    }
+                    // Survivor images are bit-identical across the pass.
+                    for (s, (k, v, m)) in live.iter().zip(&snaps) {
+                        prop_assert!(
+                            pool.lane_k(s.lane) == &k[..],
+                            "K image changed across compaction"
+                        );
+                        prop_assert!(
+                            pool.lane_v(s.lane) == &v[..],
+                            "V image changed across compaction"
+                        );
+                        prop_assert!(
+                            pool.lane_mask(s.lane) == &m[..],
+                            "mask changed across compaction"
+                        );
+                    }
+                    // Bound lanes end packed at the bottom: no interior
+                    // or trailing hole survives a compaction.
+                    prop_assert!(
+                        pool.lane_count() == live.len(),
+                        "free lanes survived compaction ({} lanes, {} live)",
+                        pool.lane_count(),
+                        live.len()
+                    );
+                    // A no-op pass minted nothing: every outstanding id
+                    // still syncs (checked by the next decode arm), and
+                    // the remap says so explicitly.
+                    if before == pool.device_bytes() {
+                        prop_assert!(
+                            r.remap.is_empty(),
+                            "a pass that freed nothing must not re-index"
+                        );
+                    }
+                }
+            }
+        }
+        // Every surviving binding is still live after the whole history.
+        for s in live.iter_mut() {
+            pool.sync_lane(s.lane, &mut s.cache).unwrap();
+        }
+        Ok(())
+    });
+}
+
+// ---- stale-id properties -------------------------------------------------
+
+#[test]
+fn stale_ids_never_touch_the_recycled_lanes_tenant() {
+    forall(0x43, |rng| {
+        let d = dims(rng);
+        let cap = d.w_local + d.page_size * 2;
+        let mut pool = DeviceViewPool::new();
+        let mut a = SequenceKvCache::new(d, cap).unwrap();
+        let la = pool.checkout(d, cap);
+        pool.sync_lane(la, &mut a).unwrap();
+        prop_assert!(pool.release(la), "first release must succeed");
+        prop_assert!(!pool.release(la), "double release must be rejected");
+        // The index recycles to a new tenant with real occupancy.
+        let mut b = SequenceKvCache::new(d, cap).unwrap();
+        for pos in 0..rng.usize(1, d.w_local) as i64 {
+            let (k, v, g) = decoded(d, pos, 0.9);
+            b.insert_decoded(&k, &v, &g, pos, |_, _, _| false).unwrap();
+        }
+        let lb = pool.checkout(d, cap);
+        prop_assert!(lb.index() == la.index(), "freed lane must recycle");
+        prop_assert!(lb.generation() > la.generation(), "recycle must mint a generation");
+        pool.sync_lane(lb, &mut b).unwrap();
+        let mask: Vec<f32> = pool.lane_mask(lb).to_vec();
+        prop_assert!(mask.iter().any(|&x| x > 0.0), "tenant image must be non-trivial");
+        // Stale sync through the recycled index: rejected before the
+        // journal drains or the staging is written.
+        let (k, v, g) = decoded(d, 99, 0.9);
+        a.insert_decoded(&k, &v, &g, 0, |_, _, _| false).unwrap();
+        prop_assert!(!a.dirty_log().is_empty(), "setup: journal must be non-empty");
+        prop_assert!(pool.sync_lane(la, &mut a).is_err(), "stale sync accepted");
+        prop_assert!(
+            !a.dirty_log().is_empty(),
+            "a rejected sync must not drain the caller's journal"
+        );
+        // Stale release: rejected without clearing the tenant's mask.
+        prop_assert!(!pool.release(la), "stale release accepted");
+        prop_assert!(
+            pool.lane_mask(lb) == &mask[..],
+            "a stale id reached the new tenant's lane"
+        );
+        Ok(())
+    });
+}
