@@ -28,15 +28,16 @@ test: docs
 test-fast:
 	cd $(RUST_DIR) && cargo test -q --lib \
 		--test prop_kvcache --test prop_policies \
-		--test prop_batching --test prop_prefill --test prop_pool
+		--test prop_batching --test prop_prefill --test prop_pool \
+		--test prop_park
 
 # Coordinator perf snapshot: prints the hot-path rows and writes
 # rust/BENCH_coordinator.json — machine-readable results plus the
 # persistent-view full-vs-delta upload-bytes counters, the PR 3
-# prefill-batch / defrag counters, and the PR 4 lane-compaction
-# counters, tracked across PRs. The greps keep the
-# report's schema honest: a refactor that silently drops a tracked
-# counter fails the bench target, not a later PR's comparison.
+# prefill-batch / defrag counters, the PR 4 lane-compaction counters,
+# and the PR 5 parking-tier counters, tracked across PRs. The greps
+# keep the report's schema honest: a refactor that silently drops a
+# tracked counter fails the bench target, not a later PR's comparison.
 bench:
 	cd $(RUST_DIR) && cargo bench --bench coordinator_hotpath
 	@grep -q '"prefill_batch_steps"' $(RUST_DIR)/BENCH_coordinator.json \
@@ -51,6 +52,12 @@ bench:
 		|| { echo "BENCH_coordinator.json: missing lane_move_bytes"; exit 1; }
 	@grep -q '"upload_reduction_x"' $(RUST_DIR)/BENCH_coordinator.json \
 		|| { echo "BENCH_coordinator.json: missing upload_reduction_x"; exit 1; }
+	@grep -q '"park_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing park_events"; exit 1; }
+	@grep -q '"resume_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing resume_events"; exit 1; }
+	@grep -q '"parked_bytes_peak"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing parked_bytes_peak"; exit 1; }
 
 # AOT-lower the JAX model to HLO-text artifacts for the PJRT runtime.
 artifacts:

@@ -556,6 +556,129 @@ fn main() {
         report.counter("pool_budget_ok", pool_bytes_max <= budget);
     }
 
+    // --- session parking tier (PR 5): a budget-pressure workload that
+    // the defer-only scheduler could not serve. Session A (long-lived,
+    // heavily admitted) pins enough paged+pooled bytes that queued
+    // session B can never fit next to it under kv_byte_budget — pre-PR 5
+    // the queue simply starved until A finished. The sim preempt-parks A
+    // to the host tier (snapshot -> ParkedStore under park_byte_budget,
+    // lane released, pool compacted), admits and retires B, then resumes
+    // A into a fresh lane and asserts the staged image is bit-identical
+    // to the pre-park image. Tracked every tick: device bytes (paged +
+    // pool) <= kv_byte_budget and parked bytes <= park_byte_budget.
+    {
+        use wgkv::kvcache::CacheSnapshot;
+        use wgkv::runtime::host_tier::ParkedStore;
+
+        let cap = 1024usize;
+        let mut rng = Rng::new(10);
+        let (k, v, g) = decoded(&mut rng, d);
+        let mk_cache = |n_tokens: usize| {
+            let mut c = SequenceKvCache::new(d, cap).unwrap();
+            for pos in 0..n_tokens as i64 {
+                c.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+            }
+            c
+        };
+        let mut a = mk_cache(700);
+        let paged_a = a.allocated_kv_bytes();
+        let lane = DeviceViewPool::lane_bytes(d, cap);
+        let paged_b_probe = mk_cache(500).allocated_kv_bytes();
+        // Either session fits alone (plus one lane); both never do.
+        let kv_budget = paged_a.max(paged_b_probe) + lane + 1;
+        assert!(
+            paged_a + paged_b_probe + 2 * lane > kv_budget,
+            "precondition: the workload must be budget-blocked without parking"
+        );
+        let park_budget = 16 << 20;
+        let mut store: ParkedStore<CacheSnapshot> = ParkedStore::new(park_budget);
+        let mut pool = DeviceViewPool::new();
+        let mut parked_peak = 0usize;
+        let mut device_bytes_during_park = usize::MAX;
+
+        // t0: A resident and synced.
+        let lane_a = pool.checkout(d, cap);
+        pool.sync_lane(lane_a, &mut a).unwrap();
+        let image_a: Vec<f32> = pool.lane_k(lane_a).to_vec();
+        let check = |paged: usize, pool: &DeviceViewPool, store: &ParkedStore<CacheSnapshot>| {
+            assert!(
+                paged + pool.device_bytes() <= kv_budget,
+                "device bytes {} exceed kv budget {kv_budget}",
+                paged + pool.device_bytes()
+            );
+            assert!(
+                store.parked_bytes() <= store.park_byte_budget(),
+                "parked bytes exceed the park budget"
+            );
+        };
+        check(paged_a, &pool, &store);
+
+        // t1: B arrives; blocked (A + B over budget) -> preempt-park A.
+        let hint = a.snapshot_bytes();
+        assert!(store.would_fit(hint), "park admission check must pass");
+        let full_view = a.full_view_bytes();
+        let snap = a.snapshot().unwrap();
+        let blob_bytes = snap.blob_bytes();
+        assert!(
+            blob_bytes < full_view,
+            "the parked blob ({blob_bytes} B) must be compact vs the \
+             capacity-padded device view ({full_view} B) — only admitted \
+             tokens move to host"
+        );
+        store.insert("A", snap, blob_bytes, true, 1).unwrap();
+        drop(a); // paged pool freed with the cache
+        assert!(pool.release(lane_a));
+        let r = pool.compact(cap);
+        assert!(r.freed > 0, "the park must reclaim the freed lane the same tick");
+        parked_peak = parked_peak.max(store.parked_bytes());
+        check(0, &pool, &store);
+
+        // t2: B admits into the recovered budget and decodes.
+        let mut b = mk_cache(500);
+        let lane_b = pool.checkout(d, cap);
+        pool.sync_lane(lane_b, &mut b).unwrap();
+        for pos in 500..540 {
+            b.insert_decoded(&k, &v, &g, pos, |_, _, _| false).unwrap();
+            pool.sync_lane(lane_b, &mut b).unwrap();
+            device_bytes_during_park =
+                device_bytes_during_park.min(b.allocated_kv_bytes() + pool.device_bytes());
+            parked_peak = parked_peak.max(store.parked_bytes());
+            check(b.allocated_kv_bytes(), &pool, &store);
+        }
+
+        // t3: B retires; t4: A resumes into a fresh lane, bit-identical.
+        drop(b);
+        assert!(pool.release(lane_b));
+        pool.compact(cap);
+        let snap = store.take("A").expect("pinned blob must survive");
+        let mut back = SequenceKvCache::restore(&snap).unwrap();
+        let lane_a2 = pool.checkout(d, back.capacity());
+        let r = pool.sync_lane(lane_a2, &mut back).unwrap();
+        assert!(r.full, "a resumed session re-enters through the wholesale sync path");
+        assert_eq!(
+            pool.lane_k(lane_a2),
+            &image_a[..],
+            "resumed lane image must be bit-identical to the pre-park image"
+        );
+        check(back.allocated_kv_bytes(), &pool, &store);
+        assert!(pool.release(lane_a2));
+        pool.trim();
+
+        println!(
+            "park sim: {} park(s), {} resume(s), blob {} B (paged {} B), parked peak {} B <= {} B, \
+             kv budget {} B held every tick (B ran at {} B while A was parked)",
+            store.park_events, store.resume_events, blob_bytes, paged_a, parked_peak,
+            park_budget, kv_budget, device_bytes_during_park
+        );
+        assert!(store.park_events >= 1 && store.resume_events >= 1);
+        report.counter("park_events", store.park_events);
+        report.counter("resume_events", store.resume_events);
+        report.counter("parked_bytes_peak", parked_peak);
+        report.counter("park_byte_budget", park_budget);
+        report.counter("park_blob_bytes", blob_bytes);
+        report.counter("park_budget_ok", parked_peak <= park_budget);
+    }
+
     // --- substrate: JSON codec + RNG (server protocol budget).
     {
         let payload = Json::obj()

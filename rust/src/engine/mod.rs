@@ -65,8 +65,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::admission::{AdmissionPolicy, PolicyKind};
-use crate::eviction::{SnapKvConfig, SnapKvEvictor};
-use crate::kvcache::{dual::CacheDims, CacheStats, SequenceKvCache};
+use crate::eviction::{EvictorSnapshot, SnapKvConfig, SnapKvEvictor};
+use crate::kvcache::{dual::CacheDims, CacheSnapshot, CacheStats, SequenceKvCache};
 use crate::metrics::EngineMetrics;
 use crate::model::{ByteTokenizer, Sampler};
 use crate::runtime::device_cache::{DeviceExecView, DeviceViewPool, LaneId, TransferStats};
@@ -187,6 +187,24 @@ impl Session {
         }
     }
 
+    /// Exact host bytes [`Engine::park_session`] would pin for this
+    /// session right now ([`SessionSnapshot::parked_bytes`]), computed
+    /// without serializing anything — the scheduler's pre-park admission
+    /// check against the parking tier's `park_byte_budget`.
+    pub fn park_bytes_hint(&self) -> usize {
+        let Some(cache) = &self.cache else { return 0 };
+        let f = std::mem::size_of::<f32>();
+        cache.snapshot_bytes()
+            + self.last_logits.len() * f
+            + self.last_q.as_ref().map(|t| t.numel() * f).unwrap_or(0)
+            + self.prefill_gates.as_ref().map(|t| t.numel() * f).unwrap_or(0)
+            + self
+                .evictor
+                .as_ref()
+                .map(|e| e.queries.iter().map(|t| t.numel()).sum::<usize>() * f)
+                .unwrap_or(0)
+    }
+
     /// Normalized KV cache size vs a full cache at the current position
     /// (the x-axis of Fig 7 / 14).
     pub fn cache_fraction(&self) -> f64 {
@@ -257,6 +275,90 @@ pub struct GenOut {
     /// Bytes a full-view re-marshal every step would have shipped (the
     /// pre-persistent baseline; the ratio is the fig 8 transfer win).
     pub upload_bytes_full_equiv: u64,
+}
+
+/// A parked session's complete host-side state — the blob the parking
+/// tier ([`crate::runtime::host_tier::ParkedStore`]) stores and budgets.
+/// Produced by [`Engine::park_session`], consumed by
+/// [`Engine::resume_session`]; the round trip is token-identical.
+///
+/// The blob is compact by construction: the cache snapshot carries only
+/// admitted tokens (never the capacity-padded execution view), plus the
+/// decode cursor (position, next-token logits, last queries), the prompt
+/// gate statistics, and the Quest/SnapKV composition state.
+pub struct SessionSnapshot {
+    cache: CacheSnapshot,
+    policy: PolicyKind,
+    quest: Option<QuestConfig>,
+    evictor: Option<EvictorSnapshot>,
+    pos: usize,
+    prompt_len: usize,
+    last_logits: Vec<f32>,
+    last_q: Option<Tensor>,
+    prefill_gates: Option<Tensor>,
+    released_view_stats: TransferStats,
+}
+
+impl SessionSnapshot {
+    /// Host bytes the blob pins — what the parking tier charges against
+    /// `park_byte_budget` (f32/i64 payloads across the cache snapshot,
+    /// logits, queries, prompt gates, and the eviction window).
+    pub fn parked_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        self.cache.blob_bytes()
+            + self.last_logits.len() * f
+            + self.last_q.as_ref().map(|t| t.numel() * f).unwrap_or(0)
+            + self.prefill_gates.as_ref().map(|t| t.numel() * f).unwrap_or(0)
+            + self.evictor.as_ref().map(|e| e.blob_bytes()).unwrap_or(0)
+    }
+
+    /// Worst-case paged KV bytes the resumed session will pin — the
+    /// exact (page-rounded, occupancy-known) re-admission charge the
+    /// scheduler's prefill planner uses for a queued resume.
+    pub fn paged_kv_bytes(&self) -> usize {
+        self.cache.paged_kv_bytes()
+    }
+
+    /// Execution capacity the session parked at (its resumed cache — and
+    /// pool lane — come back at this capacity).
+    pub fn capacity(&self) -> usize {
+        self.cache.capacity()
+    }
+
+    /// Absolute position of the next token (the decode cursor).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Exec slots the restored cache needs before any decode step (see
+    /// [`CacheSnapshot::required_slots`]).
+    pub fn required_slots(&self) -> usize {
+        self.cache.required_slots()
+    }
+
+    /// Resident KV tokens captured in the blob.
+    pub fn resident_tokens(&self) -> usize {
+        self.cache.resident_tokens()
+    }
+
+    /// Test-only constructor: a snapshot carrying just a cache (no
+    /// composition or cursor state) — enough for store/routing unit
+    /// tests that never resume it through an engine.
+    #[cfg(test)]
+    pub(crate) fn for_tests(cache: CacheSnapshot) -> Self {
+        Self {
+            cache,
+            policy: PolicyKind::FullCache,
+            quest: None,
+            evictor: None,
+            pos: 0,
+            prompt_len: 0,
+            last_logits: Vec::new(),
+            last_q: None,
+            prefill_gates: None,
+            released_view_stats: TransferStats::default(),
+        }
+    }
 }
 
 /// The serving engine. See module docs.
@@ -451,6 +553,18 @@ impl Engine {
         let required = prompt_len.max(1) + 1 + d.w_local + self.cfg.capacity_headroom;
         self.runtime
             .pick_decode_capacity(required)
+            .unwrap_or_else(|_| self.max_capacity().max(1))
+    }
+
+    /// The smallest exported decode capacity holding `slots` execution
+    /// slots, saturating at the largest executable (where real cache
+    /// growth errors out too) — the admission planner's unit for
+    /// modeling a resumed session's worst-case post-append capacity
+    /// (its snapshot's [`CacheSnapshot::required_slots`] plus the
+    /// appended turn's length).
+    pub fn capacity_for_slots(&self, slots: usize) -> usize {
+        self.runtime
+            .pick_decode_capacity(slots.max(1))
             .unwrap_or_else(|_| self.max_capacity().max(1))
     }
 
@@ -664,6 +778,20 @@ impl Engine {
     /// capacity bucket per call; an error is batch-wide (the scheduler
     /// retires the whole group with it).
     pub fn decode_batch(&mut self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<()> {
+        self.decode_batch_inner(sessions, tokens, true)
+    }
+
+    /// [`Self::decode_batch`] body. `count_batch` gates the
+    /// `batch_steps`/`batch_lanes` occupancy counters: a scheduler tick's
+    /// fused groups count, while [`Self::append_turn`]'s single-lane
+    /// teacher-forced steps do not (they would drag the realized mean
+    /// batch size toward 1 without any scheduling having happened).
+    fn decode_batch_inner(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+        count_batch: bool,
+    ) -> Result<()> {
         if sessions.len() != tokens.len() {
             bail!("decode_batch: {} sessions vs {} tokens", sessions.len(), tokens.len());
         }
@@ -823,8 +951,10 @@ impl Engine {
             self.metrics.decode_step.record(per_token);
         }
         self.metrics.generated_tokens += n as u64;
-        self.metrics.batch_steps += 1;
-        self.metrics.batch_lanes += n as u64;
+        if count_batch {
+            self.metrics.batch_steps += 1;
+            self.metrics.batch_lanes += n as u64;
+        }
         Ok(())
     }
 
@@ -916,6 +1046,141 @@ impl Engine {
             t.accumulate(self.view_pool.lane_stats(lane));
         }
         t
+    }
+
+    /// Park a live session to the host tier: serialize its complete
+    /// admitted state — global/local K/V payloads with gates and
+    /// positions, prompt gate statistics, Quest/SnapKV composition state,
+    /// the decode cursor (`pos`, next-token logits, last queries) — into
+    /// a compact [`SessionSnapshot`], then release every device-side
+    /// residency class (owned exec view, pool lane; dropping the cache
+    /// frees its paged pool). The caller (the scheduler's preemption
+    /// phase, or a server `park` op) stores the blob in a
+    /// [`crate::runtime::host_tier::ParkedStore`] under its own
+    /// `park_byte_budget`. The session is left a husk (`cache` gone) and
+    /// should be dropped.
+    ///
+    /// [`Self::resume_session`] is the inverse; the round trip is
+    /// token-identical — a parked-and-resumed session decodes the same
+    /// greedy continuation as one that never left the device (asserted by
+    /// the artifacts-gated integration test and the `prop_park` sweeps).
+    pub fn park_session(&mut self, sess: &mut Session) -> Result<SessionSnapshot> {
+        let cache = sess.cache.as_ref().context("park before prefill")?;
+        let snap_cache = cache.snapshot()?;
+        // Fold the owned-view and lane transfer counters into the blob so
+        // per-request upload accounting survives the park.
+        let _ = sess.release_device_view();
+        let stats = self.session_transfer_stats(sess);
+        self.release_lane(sess);
+        let snap = SessionSnapshot {
+            cache: snap_cache,
+            policy: sess.policy.kind.clone(),
+            quest: sess.quest,
+            evictor: sess.evictor.take().map(|e| e.snapshot()),
+            pos: sess.pos,
+            prompt_len: sess.prompt_len,
+            last_logits: std::mem::take(&mut sess.last_logits),
+            last_q: sess.last_q.take(),
+            prefill_gates: sess.prefill_gates.take(),
+            released_view_stats: stats,
+        };
+        sess.cache = None;
+        self.metrics.park_events += 1;
+        Ok(snap)
+    }
+
+    /// Resume a parked session: rebuild the cache (bit-identical
+    /// execution view; see [`SequenceKvCache::restore`]) and session
+    /// state, teacher-force the `new_tokens` of an appended conversation
+    /// turn through the decode path (empty for a preemption resume), and
+    /// re-checkout + populate a [`DeviceViewPool`] lane so the session
+    /// re-enters the scheduler's batched decode with a fully synced
+    /// image. The restored cache's journal starts `full`, so the lane
+    /// population runs through the existing wholesale-sync path — resume
+    /// needs no upload machinery of its own; byte admission is the
+    /// *scheduler's* job (a queued resume passes through
+    /// `plan_prefill_batch`'s accounting at zero prefill cost before this
+    /// is called).
+    ///
+    /// Fails cleanly — touching nothing — when the snapshot's geometry
+    /// disagrees with this engine's model.
+    pub fn resume_session(
+        &mut self,
+        snap: SessionSnapshot,
+        new_tokens: &[i32],
+    ) -> Result<Session> {
+        if snap.cache.dims() != self.cache_dims() {
+            bail!(
+                "stale session snapshot: geometry {:?} does not match this engine's {:?}",
+                snap.cache.dims(),
+                self.cache_dims()
+            );
+        }
+        let cache = SequenceKvCache::restore(&snap.cache)?;
+        let mut sess = Session {
+            policy: snap.policy.build(self.dims()),
+            quest: snap.quest,
+            evictor: snap.evictor.map(SnapKvEvictor::restore),
+            cache: Some(cache),
+            device_view: None,
+            lane: None,
+            released_view_stats: snap.released_view_stats,
+            pos: snap.pos,
+            prompt_len: snap.prompt_len,
+            last_logits: snap.last_logits,
+            prefill_gates: snap.prefill_gates,
+            last_q: snap.last_q,
+        };
+        if let Err(e) = self.append_turn(&mut sess, new_tokens) {
+            // Return the half-resumed session's lane before surfacing the
+            // error — the caller drops the session, and a lane checked
+            // out by a dropped session would stay in_use forever.
+            self.release_lane(&mut sess);
+            let _ = sess.release_device_view();
+            return Err(e);
+        }
+        self.metrics.resume_events += 1;
+        Ok(sess)
+    }
+
+    /// Append a conversation turn to a live (or just-resumed) session:
+    /// each prompt token is teacher-forced through the lane-backed decode
+    /// path — exactly how chunked-prefill tails are handled, so the
+    /// appended context is token-identical to having been part of one
+    /// long prompt — leaving `session.last_logits` predicting the turn's
+    /// continuation. A session without a lane gets one bound and
+    /// populated (the resume re-checkout), even for an empty turn.
+    ///
+    /// Sessions driven through this path must keep decoding through
+    /// [`Self::decode_batch`] (the scheduler's path), not
+    /// [`Self::decode_step`]: the lane is the journal's single consumer.
+    pub fn append_turn(&mut self, sess: &mut Session, tokens: &[i32]) -> Result<()> {
+        if sess.cache.is_none() {
+            bail!("append_turn before prefill/resume");
+        }
+        for &t in tokens {
+            self.decode_batch_inner(&mut [&mut *sess], &[t], false)?;
+        }
+        sess.prompt_len += tokens.len();
+        self.metrics.prompt_tokens += tokens.len() as u64;
+        if sess.lane.is_none() {
+            // Empty turn (preemption resume): bind-then-sync the lane
+            // here, mirroring prefill_batch's phases B/C.
+            let cache_dims = sess.cache.as_ref().unwrap().dims();
+            let cap = self.view_pool.capacity().max(sess.cache.as_ref().unwrap().capacity());
+            self.view_pool.ensure_capacity(cap);
+            sess.lane = Some(self.view_pool.checkout(cache_dims, cap));
+            let cache = sess.cache.as_mut().unwrap();
+            let report = self.view_pool.sync_lane(sess.lane.unwrap(), cache)?;
+            self.metrics.upload_bytes += report.bytes as u64;
+            self.metrics.upload_full_equiv_bytes += cache.full_view_bytes() as u64;
+            if report.full {
+                self.metrics.view_full_uploads += 1;
+            } else {
+                self.metrics.view_delta_uploads += 1;
+            }
+        }
+        Ok(())
     }
 
     /// Prefill + autoregressive decode until EOS or `max_new` tokens.

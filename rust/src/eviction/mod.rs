@@ -76,6 +76,31 @@ impl QueryRing {
     }
 }
 
+/// Serialized state of a [`SnapKvEvictor`] — part of a parked session's
+/// host-tier blob, so a resumed session's future eviction decisions are
+/// identical to a session that never left the device (the observation
+/// window and its overwrite cursor are preserved exactly).
+#[derive(Debug, Clone)]
+pub struct EvictorSnapshot {
+    /// The evictor's configuration.
+    pub cfg: SnapKvConfig,
+    /// Observation-window queries, in storage order.
+    pub window: Vec<Tensor>,
+    /// Ring overwrite cursor into `window`.
+    pub next: usize,
+    /// Eviction triggers fired so far.
+    pub triggers: u64,
+    /// Tokens evicted so far.
+    pub evicted_tokens: u64,
+}
+
+impl EvictorSnapshot {
+    /// Host bytes the snapshot's query window pins (f32 payloads).
+    pub fn blob_bytes(&self) -> usize {
+        self.window.iter().map(|t| t.numel()).sum::<usize>() * std::mem::size_of::<f32>()
+    }
+}
+
 /// Stateful evictor for one session.
 pub struct SnapKvEvictor {
     pub cfg: SnapKvConfig,
@@ -94,6 +119,30 @@ impl SnapKvEvictor {
     /// Record the decode step's `[L, Hq, dh]` queries.
     pub fn observe(&mut self, q: Tensor) {
         self.queries.push(q);
+    }
+
+    /// Serialize the evictor for the host parking tier.
+    pub fn snapshot(&self) -> EvictorSnapshot {
+        EvictorSnapshot {
+            cfg: self.cfg,
+            window: self.queries.window.clone(),
+            next: self.queries.next,
+            triggers: self.triggers,
+            evicted_tokens: self.evicted_tokens,
+        }
+    }
+
+    /// Rebuild an evictor from a parked snapshot; subsequent observes and
+    /// evictions behave exactly as if the session never parked.
+    pub fn restore(s: EvictorSnapshot) -> Self {
+        let cap = s.cfg.w_obs.max(1);
+        let len = s.window.len().min(cap);
+        Self {
+            cfg: s.cfg,
+            queries: QueryRing { next: s.next % cap, len, window: s.window, cap },
+            triggers: s.triggers,
+            evicted_tokens: s.evicted_tokens,
+        }
     }
 
     /// Importance scores for (l, h)'s global tokens (paper K.1 steps 1-3).
@@ -215,6 +264,27 @@ mod tests {
     fn bottom_k_drops_lowest() {
         let keep = bottom_k_mask(&[0.5, 0.1, 0.9, 0.2], 2);
         assert_eq!(keep, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn evictor_snapshot_round_trips_window_and_cursor() {
+        let mut ev = SnapKvEvictor::new(SnapKvConfig { w_obs: 2, ..SnapKvConfig::default() });
+        for i in 0..3 {
+            ev.observe(Tensor::full(&[1], i as f32));
+        }
+        ev.triggers = 5;
+        let snap = ev.snapshot();
+        assert!(snap.blob_bytes() > 0);
+        let mut back = SnapKvEvictor::restore(snap);
+        assert_eq!(back.triggers, 5);
+        assert_eq!(back.queries.len(), ev.queries.len());
+        // The overwrite cursor is preserved: the next push lands on the
+        // same slot in both rings.
+        ev.observe(Tensor::full(&[1], 9.0));
+        back.observe(Tensor::full(&[1], 9.0));
+        let a: Vec<f32> = ev.queries.iter().map(|t| t.data[0]).collect();
+        let b: Vec<f32> = back.queries.iter().map(|t| t.data[0]).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

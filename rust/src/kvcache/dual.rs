@@ -147,6 +147,115 @@ pub struct CacheStats {
     pub evicted: u64,
 }
 
+/// One (layer, head)'s logical contents inside a [`CacheSnapshot`]:
+/// the global region in logical order plus the occupied ring slots.
+/// K/V payloads are flat `len * d_head` f32 runs; ring payloads are
+/// packed over occupied slots only (in ascending ring index), with
+/// `ring_occupied` recording which slots they belong to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeadSnapshot {
+    /// Global-region keys, `[global_len * d_head]`.
+    pub global_k: Vec<f32>,
+    /// Global-region values, `[global_len * d_head]`.
+    pub global_v: Vec<f32>,
+    /// Per-global-token admission gate.
+    pub global_gate: Vec<f32>,
+    /// Per-global-token absolute position.
+    pub global_pos: Vec<i64>,
+    /// Which of the `w_local` ring slots hold a token.
+    pub ring_occupied: Vec<bool>,
+    /// Keys of the occupied ring slots, packed in ascending ring index.
+    pub ring_k: Vec<f32>,
+    /// Values of the occupied ring slots, same packing.
+    pub ring_v: Vec<f32>,
+    /// Gates of the occupied ring slots, same packing.
+    pub ring_gate: Vec<f32>,
+    /// Positions of the occupied ring slots, same packing.
+    pub ring_pos: Vec<i64>,
+}
+
+/// Compact serialized form of a [`SequenceKvCache`] — the unit the
+/// host-side parking tier stores and budgets
+/// ([`crate::runtime::host_tier::ParkedStore`]). Captures only admitted
+/// state (global tokens + occupied ring slots, with gates and positions),
+/// not the capacity-padded execution view; [`SequenceKvCache::restore`]
+/// rebuilds a bit-identical view from it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheSnapshot {
+    dims: CacheDims,
+    cap: usize,
+    stats: CacheStats,
+    heads: Vec<HeadSnapshot>,
+}
+
+impl CacheSnapshot {
+    /// Geometry the snapshot was taken under.
+    pub fn dims(&self) -> CacheDims {
+        self.dims
+    }
+
+    /// Execution capacity the parked session ran at (restore re-creates
+    /// the cache at this capacity, so the rebuilt view matches an
+    /// exported decode executable).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Resident tokens captured across all heads.
+    pub fn resident_tokens(&self) -> usize {
+        self.heads
+            .iter()
+            .map(|h| h.global_pos.len() + h.ring_pos.len())
+            .sum()
+    }
+
+    /// Host bytes the serialized blob pins — what the parking tier
+    /// charges against its `park_byte_budget` (accounted separately from
+    /// the device-side `kv_byte_budget`). Payload bytes only; the
+    /// per-head Vec headers are noise at any realistic size.
+    pub fn blob_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let i = std::mem::size_of::<i64>();
+        self.heads
+            .iter()
+            .map(|h| {
+                (h.global_k.len() + h.global_v.len() + h.global_gate.len()) * f
+                    + h.global_pos.len() * i
+                    + h.ring_occupied.len()
+                    + (h.ring_k.len() + h.ring_v.len() + h.ring_gate.len()) * f
+                    + h.ring_pos.len() * i
+            })
+            .sum()
+    }
+
+    /// Exec slots the restored cache needs before any decode step — the
+    /// fullest head's global occupancy plus one promotion plus the ring
+    /// (the snapshot-side mirror of [`SequenceKvCache::required_slots`]).
+    /// The admission planner grows this by an appended turn's length to
+    /// bound the resumed session's worst-case execution capacity.
+    pub fn required_slots(&self) -> usize {
+        let g = self.heads.iter().map(|h| h.global_pos.len()).max().unwrap_or(0);
+        g + 1 + self.dims.w_local
+    }
+
+    /// Worst-case *paged* KV bytes the restored cache will pin — the
+    /// exact re-admission charge the scheduler's prefill planner uses
+    /// for a queued resume (unlike a fresh prompt, a parked session's
+    /// occupancy is fully known: page-rounded per-head residency, no
+    /// full-admission guess).
+    pub fn paged_kv_bytes(&self) -> usize {
+        let d = self.dims;
+        let ps = d.page_size.max(1);
+        let local_pages = d.w_local.div_ceil(ps);
+        let pages: usize = self
+            .heads
+            .iter()
+            .map(|h| h.global_pos.len().div_ceil(ps) + local_pages)
+            .sum();
+        pages * ps * d.d_head * 2 * std::mem::size_of::<f32>()
+    }
+}
+
 /// Per-sequence dual-cache state + execution view.
 pub struct SequenceKvCache {
     dims: CacheDims,
@@ -786,6 +895,133 @@ impl SequenceKvCache {
         Ok(evicted)
     }
 
+    // -- parking-tier snapshot / restore ---------------------------------------
+
+    /// Exact [`CacheSnapshot::blob_bytes`] a [`Self::snapshot`] taken
+    /// right now would pin, computed from per-head occupancy without
+    /// serializing anything — the parking tier's cheap admission check.
+    pub fn snapshot_bytes(&self) -> usize {
+        let d = self.dims;
+        let f = std::mem::size_of::<f32>();
+        let i = std::mem::size_of::<i64>();
+        let per_token = (2 * d.d_head + 1) * f + i;
+        let mut total = 0usize;
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                total += d.w_local + (self.global_len(l, h) + self.local_len(l, h)) * per_token;
+            }
+        }
+        total
+    }
+
+    /// Serialize the cache's complete logical state into a compact
+    /// [`CacheSnapshot`] — the host-tier parking blob
+    /// ([`crate::runtime::host_tier`]). Only *admitted* tokens are
+    /// captured (per-head global regions plus the occupied ring slots),
+    /// never the capacity-sized execution view or its padding, so the
+    /// blob scales with the session's resident tokens — the paper's
+    /// premise that admission keeps the cache cheap to move. The live
+    /// cache is untouched (its journal is not drained).
+    pub fn snapshot(&self) -> Result<CacheSnapshot> {
+        let d = self.dims;
+        let dh = d.d_head;
+        let ps = d.page_size;
+        let mut heads = Vec::with_capacity(d.n_heads_total());
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let hi = self.head_idx(l, h);
+                let hc = &self.heads[hi];
+                let g_len = hc.global.len();
+                let mut hs = HeadSnapshot {
+                    global_k: Vec::with_capacity(g_len * dh),
+                    global_v: Vec::with_capacity(g_len * dh),
+                    global_gate: Vec::with_capacity(g_len),
+                    global_pos: Vec::with_capacity(g_len),
+                    ring_occupied: vec![false; d.w_local],
+                    ring_k: Vec::new(),
+                    ring_v: Vec::new(),
+                    ring_gate: Vec::new(),
+                    ring_pos: Vec::new(),
+                };
+                for i in 0..g_len {
+                    let (page, slot) = hc.global.locate(i)?;
+                    hs.global_k.extend_from_slice(self.pool.k_at(page, slot));
+                    hs.global_v.extend_from_slice(self.pool.v_at(page, slot));
+                    hs.global_gate.push(self.pool.gate_at(page, slot));
+                    hs.global_pos.push(self.pool.pos_at(page, slot));
+                }
+                for r in 0..d.w_local {
+                    if !hc.local[r].occupied {
+                        continue;
+                    }
+                    hs.ring_occupied[r] = true;
+                    let (page, slot) = (hc.local_pages[r / ps], r % ps);
+                    hs.ring_k.extend_from_slice(self.pool.k_at(page, slot));
+                    hs.ring_v.extend_from_slice(self.pool.v_at(page, slot));
+                    hs.ring_gate.push(hc.local[r].gate);
+                    hs.ring_pos.push(hc.local[r].pos);
+                }
+                heads.push(hs);
+            }
+        }
+        Ok(CacheSnapshot { dims: d, cap: self.cap, stats: self.stats, heads })
+    }
+
+    /// Rebuild a cache from a [`CacheSnapshot`] — the resume half of the
+    /// parking round trip. Tokens are re-appended through the normal
+    /// write path, so the rebuilt execution view (K/V slots, mask, Quest
+    /// page bounds) is **bit-identical** to the parked cache's: the view
+    /// is a pure function of the logical content at a given capacity
+    /// (unoccupied slots are zero, page bounds fold keys in append
+    /// order). The fresh cache's journal starts `full`, so the session's
+    /// next lane sync ships the image wholesale through the existing
+    /// upload path — restore needs no upload machinery of its own.
+    pub fn restore(snap: &CacheSnapshot) -> Result<Self> {
+        let d = snap.dims;
+        let dh = d.d_head;
+        if snap.heads.len() != d.n_heads_total() {
+            bail!(
+                "snapshot has {} heads, dims imply {}",
+                snap.heads.len(),
+                d.n_heads_total()
+            );
+        }
+        let mut cache = Self::new(d, snap.cap)?;
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let hs = &snap.heads[l * d.n_kv_heads + h];
+                for i in 0..hs.global_pos.len() {
+                    cache.global_append(
+                        l,
+                        h,
+                        &hs.global_k[i * dh..(i + 1) * dh],
+                        &hs.global_v[i * dh..(i + 1) * dh],
+                        hs.global_gate[i],
+                        hs.global_pos[i],
+                    )?;
+                }
+                let mut j = 0usize;
+                for r in 0..d.w_local {
+                    if !hs.ring_occupied[r] {
+                        continue;
+                    }
+                    cache.local_write(
+                        l,
+                        h,
+                        r,
+                        &hs.ring_k[j * dh..(j + 1) * dh],
+                        &hs.ring_v[j * dh..(j + 1) * dh],
+                        hs.ring_gate[j],
+                        hs.ring_pos[j],
+                    );
+                    j += 1;
+                }
+            }
+        }
+        cache.stats = snap.stats;
+        Ok(cache)
+    }
+
     /// Re-layout the execution view for a new capacity (e.g. after the
     /// global region outgrows the current decode executable, or to shrink
     /// for a cheaper one). Pool state is untouched.
@@ -1191,6 +1427,85 @@ mod tests {
         check(&c);
         c.ensure_capacity(64).unwrap();
         check(&c);
+    }
+
+    /// Park/resume round trip: the snapshot captures only admitted state,
+    /// and restore rebuilds a bit-identical execution view (K/V slots,
+    /// mask, Quest page bounds), logical contents, stats, and counters.
+    #[test]
+    fn snapshot_restore_round_trips_bit_identically() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 16).unwrap();
+        let (k, v, g) = prefill_tensors(6);
+        c.populate_from_prefill(&k, &v, &g, 6, |_, _, _, gate| gate >= 0.1).unwrap();
+        for pos in 6..12 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32 * 0.3 - 1.0, 0.9);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, gate| gate >= 0.5).unwrap();
+        }
+        // An eviction makes the page-bound fold order non-trivial.
+        let keep: Vec<bool> = (0..c.global_len(0, 1)).map(|i| i % 2 == 0).collect();
+        c.evict_global(0, 1, &keep).unwrap();
+        let snap = c.snapshot().unwrap();
+        assert_eq!(
+            c.snapshot_bytes(),
+            snap.blob_bytes(),
+            "the non-serializing hint must match the real blob"
+        );
+        let r = SequenceKvCache::restore(&snap).unwrap();
+        assert_eq!(r.capacity(), c.capacity());
+        assert_eq!(r.k_exec(), c.k_exec());
+        assert_eq!(r.v_exec(), c.v_exec());
+        assert_eq!(r.slot_mask(), c.slot_mask());
+        assert_eq!(r.page_meta_tensors(), c.page_meta_tensors());
+        assert_eq!(r.resident_tokens(), c.resident_tokens());
+        assert_eq!(r.stats, c.stats);
+        assert_eq!(r.allocated_kv_bytes(), c.allocated_kv_bytes());
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                assert_eq!(r.global_len(l, h), c.global_len(l, h));
+                assert_eq!(r.local_len(l, h), c.local_len(l, h));
+                for i in 0..c.global_len(l, h) {
+                    assert_eq!(r.global_pos(l, h, i).unwrap(), c.global_pos(l, h, i).unwrap());
+                    assert_eq!(r.global_key(l, h, i).unwrap(), c.global_key(l, h, i).unwrap());
+                }
+            }
+        }
+        // Snapshotting drained nothing and the restored journal is full:
+        // the next lane sync ships the image through the wholesale path.
+        assert!(r.dirty_log().full);
+        // The resumed session keeps decoding identically: same insert on
+        // both caches leaves identical views.
+        let mut c2 = c;
+        let mut r2 = r;
+        let (kn, vn, gn) = decoded_tensors(5.5, 0.9);
+        c2.insert_decoded(&kn, &vn, &gn, 12, |_, _, _| true).unwrap();
+        r2.insert_decoded(&kn, &vn, &gn, 12, |_, _, _| true).unwrap();
+        assert_eq!(r2.k_exec(), c2.k_exec());
+        assert_eq!(r2.slot_mask(), c2.slot_mask());
+    }
+
+    /// The blob is compact: it scales with resident tokens, not with the
+    /// capacity-padded execution view, and its paged estimate is exact.
+    #[test]
+    fn snapshot_blob_is_compact_and_paged_estimate_exact() {
+        let d = dims();
+        let mut c = SequenceKvCache::new(d, 64).unwrap();
+        // Sparse admission: nothing promotes, only the ring stays.
+        for pos in 0..10 {
+            let (kn, vn, gn) = decoded_tensors(pos as f32, 0.1);
+            c.insert_decoded(&kn, &vn, &gn, pos, |_, _, _| false).unwrap();
+        }
+        let snap = c.snapshot().unwrap();
+        assert_eq!(snap.resident_tokens(), c.resident_tokens());
+        assert!(
+            snap.blob_bytes() < c.full_view_bytes() / 4,
+            "blob {} vs full view {} — parking must not ship the padded view",
+            snap.blob_bytes(),
+            c.full_view_bytes()
+        );
+        assert_eq!(snap.paged_kv_bytes(), c.allocated_kv_bytes());
+        let r = SequenceKvCache::restore(&snap).unwrap();
+        assert_eq!(r.allocated_kv_bytes(), c.allocated_kv_bytes());
     }
 
     /// The planner's pre-prefill estimate must dominate the bytes a fully

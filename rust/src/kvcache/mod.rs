@@ -34,5 +34,5 @@
 pub mod dual;
 pub mod pool;
 
-pub use dual::{CacheStats, DirtyLog, DirtySpan, SequenceKvCache};
+pub use dual::{CacheSnapshot, CacheStats, DirtyLog, DirtySpan, SequenceKvCache};
 pub use pool::{KvPool, PageId, PageTable, PoolStats};

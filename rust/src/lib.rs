@@ -17,9 +17,10 @@
 //!   ([`kvcache`]), the admission policies ([`admission`]), read-time
 //!   selection ([`selection`]), post-write eviction ([`eviction`]), the
 //!   serving engine ([`engine`]), batched prefill admission and
-//!   continuous batched decode over a shared device-view pool
-//!   ([`scheduler`]), a threaded TCP JSON-lines server
-//!   ([`server`]), workload generators ([`workload`]), and the
+//!   continuous batched decode over a shared device-view pool plus a
+//!   preempt-to-host session parking tier with multi-turn resume
+//!   ([`scheduler`], [`runtime::host_tier`]), a threaded TCP JSON-lines
+//!   server ([`server`]), workload generators ([`workload`]), and the
 //!   H200 analytic cost model used to reproduce the paper's latency/memory
 //!   figures ([`costmodel`]).
 //!

@@ -24,6 +24,7 @@ wgkv — learned KV-cache admission for long-context serving
 USAGE:
   wgkv serve     [--artifacts DIR] [--addr HOST:PORT] [--max-active N] [--max-batch N]
                  [--max-prefill-batch N] [--kv-budget BYTES]
+                 [--park-byte-budget BYTES] [--park-idle-ticks N]
   wgkv generate  [--artifacts DIR] --prompt TEXT [--max-new N] [--variant FILE] [POLICY]
   wgkv eval      [--artifacts DIR] [--instances N] [--seed S] [--variant FILE] [POLICY]
   wgkv costmodel [--model llama|qwen]
@@ -40,6 +41,14 @@ POLICY flags:
   --quest-budget N  enable Quest read-time selection (token budget)
   --snapkv-budget N enable SnapKV eviction (per-head budget)
   --temperature F   sampling temperature (default greedy)
+  --session-id S    multi-turn key (client): resume a retained session,
+                    appending only the new turn's tokens
+
+serve parking tier:
+  --park-byte-budget BYTES  host budget for parked session blobs
+                            (default 256 MiB; 0 disables parking)
+  --park-idle-ticks N       ticks an idle multi-turn session stays
+                            device-resident before parking (default 8)
 ";
 
 fn policy_params(args: &Args, prompt: String, max_new: usize) -> Result<GenerateParams> {
@@ -56,6 +65,7 @@ fn policy_params(args: &Args, prompt: String, max_new: usize) -> Result<Generate
         snapkv_budget: args.usize_opt("snapkv-budget")?,
         temperature: args.f32_opt("temperature")?,
         seed: args.u64("seed", 0)?,
+        session_id: args.str_opt("session-id"),
     })
 }
 
@@ -83,6 +93,8 @@ fn serve(args: &Args) -> Result<()> {
         kv_byte_budget: args.usize("kv-budget", 256 << 20)?,
         max_decode_batch: args.usize("max-batch", 4)?,
         max_prefill_batch: args.usize("max-prefill-batch", 4)?,
+        park_byte_budget: args.usize("park-byte-budget", 256 << 20)?,
+        park_idle_ticks: args.usize("park-idle-ticks", 8)?,
         ..SchedulerConfig::default()
     };
     let (cmds, _handle) = server::spawn_engine_thread(artifacts, EngineConfig::default(), cfg);

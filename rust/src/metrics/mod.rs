@@ -154,6 +154,16 @@ pub struct EngineMetrics {
     /// device-side traffic on an in-place-capable backend, never a host
     /// re-upload (0 for moves folded into a capacity-shrink re-layout).
     pub lane_move_bytes: u64,
+    /// Sessions parked to the host tier (idle-tick parks, budget
+    /// preemptions, and turn-end parks alike).
+    pub park_events: u64,
+    /// Sessions resumed from the host tier back onto a device lane.
+    pub resume_events: u64,
+    /// Host bytes currently pinned by parked session blobs — a gauge the
+    /// scheduler refreshes every tick from its
+    /// [`crate::runtime::host_tier::ParkedStore`] (bounded by
+    /// `park_byte_budget`, accounted separately from `kv_byte_budget`).
+    pub parked_bytes: u64,
 }
 
 impl EngineMetrics {
@@ -195,6 +205,9 @@ impl EngineMetrics {
             compaction_events: self.compaction_events,
             lane_moves: self.lane_moves,
             lane_move_bytes: self.lane_move_bytes,
+            park_events: self.park_events,
+            resume_events: self.resume_events,
+            parked_bytes: self.parked_bytes,
         }
     }
 
@@ -242,6 +255,9 @@ pub struct MetricsSnapshot {
     pub compaction_events: u64,
     pub lane_moves: u64,
     pub lane_move_bytes: u64,
+    pub park_events: u64,
+    pub resume_events: u64,
+    pub parked_bytes: u64,
 }
 
 impl MetricsSnapshot {
@@ -269,6 +285,9 @@ impl MetricsSnapshot {
             .set("compaction_events", self.compaction_events)
             .set("lane_moves", self.lane_moves)
             .set("lane_move_bytes", self.lane_move_bytes)
+            .set("park_events", self.park_events)
+            .set("resume_events", self.resume_events)
+            .set("parked_bytes", self.parked_bytes)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -296,6 +315,9 @@ impl MetricsSnapshot {
             compaction_events: f("compaction_events") as u64,
             lane_moves: f("lane_moves") as u64,
             lane_move_bytes: f("lane_move_bytes") as u64,
+            park_events: f("park_events") as u64,
+            resume_events: f("resume_events") as u64,
+            parked_bytes: f("parked_bytes") as u64,
         }
     }
 }

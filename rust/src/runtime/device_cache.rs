@@ -712,10 +712,20 @@ impl DeviceViewPool {
                 LaneId { idx: old, gen: from.gen },
                 LaneId { idx: new, gen: self.gen_counter },
             ));
-            if in_place {
-                for t in
-                    [&mut self.k, &mut self.v, &mut self.mask, &mut self.pmin, &mut self.pmax]
-                {
+        }
+        if in_place {
+            // One pass per staged tensor, all moves applied in ascending
+            // old-index order (target = rank among bound lanes, always <=
+            // the source and never a still-unmoved bound lane, so the
+            // batched order is exactly as safe as the per-move order was).
+            // Batching keeps each tensor's memory hot instead of touching
+            // all five buffers once per move; the bytes moved are
+            // identical to the per-move schedule, which `prop_pool`
+            // pins down against the analytic per-lane stride.
+            for t in
+                [&mut self.k, &mut self.v, &mut self.mask, &mut self.pmin, &mut self.pmax]
+            {
+                for &(old, new) in &moves {
                     move_bytes += Self::copy_lane_block(t, old, new) as u64;
                 }
             }

@@ -1,0 +1,331 @@
+//! Host-side session parking tier: preempt-to-host KV snapshots.
+//!
+//! The device-side residency classes (paged host pool, owned exec views,
+//! the shared [`crate::runtime::device_cache::DeviceViewPool`]) are all
+//! charged against the scheduler's `kv_byte_budget`, and until this tier
+//! existed the only response to budget pressure was to defer the queue —
+//! and every completed request threw its admitted KV away, so a chat
+//! user's cache was rebuilt from scratch each turn. [`ParkedStore`] is
+//! the third tier: a host-memory store of serialized session blobs
+//! (compact by construction — admission keeps the resident set a small
+//! fraction of the sequence, which is exactly what makes swapping it to
+//! host viable), accounted against its **own** `park_byte_budget`,
+//! never against the device budget.
+//!
+//! The store is deliberately generic over the blob type: the scheduler
+//! parks engine-level session snapshots (cache + gates + sampler/decode
+//! cursor), benches and property tests park bare
+//! [`crate::kvcache::CacheSnapshot`]s, and the store itself only needs a
+//! byte count per blob. Policy knobs:
+//!
+//! * **Budget + LRU.** An insert that would exceed `park_byte_budget`
+//!   first evicts least-recently-used *unpinned* blobs; if the blob can
+//!   not fit even then, the insert is refused (the caller keeps the
+//!   session device-resident instead — parking must never be forced into
+//!   an over-budget host tier).
+//! * **Pinning.** A blob with a *queued resume* (a preempted mid-decode
+//!   session waiting to re-enter admission, or a multi-turn session whose
+//!   next turn is already queued) is pinned: LRU eviction skips it
+//!   unconditionally, so a session the scheduler has promised to resume
+//!   can never silently lose its context.
+//! * **Staleness.** [`ParkedStore::take`] removes the blob; a second
+//!   take — or a take of an evicted/dropped key — returns `None`, which
+//!   the scheduler surfaces as a clean per-request error rather than a
+//!   panic or a silent fresh prefill.
+//!
+//! Recency is driven by the caller's tick counter (the scheduler passes
+//! its own tick), with an internal sequence number breaking ties so two
+//! parks in one tick still have a deterministic LRU order.
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+
+/// One parked blob plus its bookkeeping.
+struct Entry<B> {
+    blob: B,
+    bytes: usize,
+    pinned: bool,
+    /// (caller tick, insertion sequence) — LRU orders by this pair.
+    last_used: (u64, u64),
+}
+
+/// Host-side LRU store of parked session blobs under a byte budget.
+/// See the module docs for the eviction/pinning policy.
+pub struct ParkedStore<B> {
+    budget: usize,
+    entries: BTreeMap<String, Entry<B>>,
+    bytes: usize,
+    seq: u64,
+    /// Lifetime count of blobs parked (inserts).
+    pub park_events: u64,
+    /// Lifetime count of blobs resumed (successful takes).
+    pub resume_events: u64,
+    /// Lifetime count of blobs LRU-evicted to make room.
+    pub evictions: u64,
+    /// High-water mark of [`Self::parked_bytes`].
+    pub peak_bytes: usize,
+}
+
+impl<B> ParkedStore<B> {
+    /// An empty store with the given `park_byte_budget`.
+    pub fn new(budget: usize) -> Self {
+        Self {
+            budget,
+            entries: BTreeMap::new(),
+            bytes: 0,
+            seq: 0,
+            park_events: 0,
+            resume_events: 0,
+            evictions: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// The store's byte budget (accounted separately from the device-side
+    /// `kv_byte_budget`).
+    pub fn park_byte_budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Host bytes currently pinned by parked blobs (always `<=` the
+    /// budget — inserts that cannot fit are refused, never admitted over).
+    pub fn parked_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of parked blobs.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is parked.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when `key` is parked.
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Bytes charged for `key`'s blob, if parked.
+    pub fn bytes_of(&self, key: &str) -> Option<usize> {
+        self.entries.get(key).map(|e| e.bytes)
+    }
+
+    /// Peek at `key`'s blob without resuming it (the admission planner
+    /// reads a parked session's byte model through this).
+    pub fn get(&self, key: &str) -> Option<&B> {
+        self.entries.get(key).map(|e| &e.blob)
+    }
+
+    /// Whether a blob of `bytes` could be admitted right now, evicting
+    /// every unpinned blob if necessary. The scheduler checks this before
+    /// committing to a preemption — a park that cannot land must not
+    /// release the session's device state.
+    pub fn would_fit(&self, bytes: usize) -> bool {
+        let pinned: usize =
+            self.entries.values().filter(|e| e.pinned).map(|e| e.bytes).sum();
+        pinned.saturating_add(bytes) <= self.budget
+    }
+
+    fn evict_lru_unpinned(&mut self) -> Option<(String, B)> {
+        let key = self
+            .entries
+            .iter()
+            .filter(|(_, e)| !e.pinned)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone())?;
+        let e = self.entries.remove(&key).unwrap();
+        self.bytes -= e.bytes;
+        self.evictions += 1;
+        Some((key, e.blob))
+    }
+
+    /// Park `blob` under `key` at the caller's tick `now`, charging
+    /// `bytes` against the budget. Least-recently-used unpinned blobs are
+    /// evicted until the blob fits; the evicted `(key, blob)` pairs are
+    /// returned so the caller can count (or log) the lost sessions. An
+    /// existing blob under the same key is replaced (its bytes returned
+    /// first). Returns `Err(blob)` — store untouched — when the blob
+    /// cannot fit even with every unpinned blob evicted.
+    pub fn insert(
+        &mut self,
+        key: &str,
+        blob: B,
+        bytes: usize,
+        pinned: bool,
+        now: u64,
+    ) -> Result<Vec<(String, B)>, B> {
+        let replaced: usize = self.entries.get(key).map(|e| e.bytes).unwrap_or(0);
+        let pinned_bytes: usize = self
+            .entries
+            .iter()
+            .filter(|(k, e)| e.pinned && k.as_str() != key)
+            .map(|(_, e)| e.bytes)
+            .sum();
+        if pinned_bytes.saturating_add(bytes) > self.budget {
+            return Err(blob);
+        }
+        self.entries.remove(key);
+        self.bytes -= replaced;
+        let mut evicted = Vec::new();
+        while self.bytes.saturating_add(bytes) > self.budget {
+            match self.evict_lru_unpinned() {
+                Some(kv) => evicted.push(kv),
+                None => unreachable!("pinned bytes alone were checked to fit"),
+            }
+        }
+        self.seq += 1;
+        self.entries.insert(
+            key.to_string(),
+            Entry { blob, bytes, pinned, last_used: (now, self.seq) },
+        );
+        self.bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        self.park_events += 1;
+        Ok(evicted)
+    }
+
+    /// Resume: remove and return `key`'s blob. `None` for a key that was
+    /// never parked, already resumed, evicted, or dropped — the stale
+    /// resume the scheduler rejects cleanly.
+    pub fn take(&mut self, key: &str) -> Option<B> {
+        let e = self.entries.remove(key)?;
+        self.bytes -= e.bytes;
+        self.resume_events += 1;
+        Some(e.blob)
+    }
+
+    /// Drop `key`'s blob without counting a resume (explicit client
+    /// `drop`, or a scheduler cancellation).
+    pub fn remove(&mut self, key: &str) -> Option<B> {
+        let e = self.entries.remove(key)?;
+        self.bytes -= e.bytes;
+        Some(e.blob)
+    }
+
+    /// Refresh `key`'s recency to `now` (a keep-alive). `false` when the
+    /// key is not parked.
+    pub fn touch(&mut self, key: &str, now: u64) -> bool {
+        self.seq += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = (now, self.seq);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Pin or unpin `key` (a queued resume pins; resolving it unpins).
+    /// `false` when the key is not parked.
+    pub fn set_pinned(&mut self, key: &str, pinned: bool) -> bool {
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.pinned = pinned;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether `key` is currently pinned (`None` when not parked).
+    pub fn is_pinned(&self, key: &str) -> Option<bool> {
+        self.entries.get(key).map(|e| e.pinned)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_a_hard_bound_with_lru_eviction() {
+        let mut s: ParkedStore<u32> = ParkedStore::new(100);
+        assert!(s.insert("a", 1, 40, false, 0).unwrap().is_empty());
+        assert!(s.insert("b", 2, 40, false, 1).unwrap().is_empty());
+        assert_eq!(s.parked_bytes(), 80);
+        // c needs 40: evicts the LRU (a), not b.
+        let evicted = s.insert("c", 3, 40, false, 2).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0], ("a".to_string(), 1));
+        assert_eq!(s.parked_bytes(), 80);
+        assert!(s.parked_bytes() <= s.park_byte_budget());
+        assert!(!s.contains("a") && s.contains("b") && s.contains("c"));
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.peak_bytes, 80);
+    }
+
+    #[test]
+    fn touch_refreshes_lru_order() {
+        let mut s: ParkedStore<u32> = ParkedStore::new(100);
+        s.insert("a", 1, 40, false, 0).unwrap();
+        s.insert("b", 2, 40, false, 1).unwrap();
+        assert!(s.touch("a", 2));
+        let evicted = s.insert("c", 3, 40, false, 3).unwrap();
+        assert_eq!(evicted[0].0, "b", "touched blob must not be the LRU victim");
+        assert!(!s.touch("missing", 4));
+    }
+
+    #[test]
+    fn pinned_blobs_survive_eviction_and_oversize_inserts_are_refused() {
+        let mut s: ParkedStore<u32> = ParkedStore::new(100);
+        s.insert("queued-resume", 1, 60, true, 0).unwrap();
+        s.insert("idle", 2, 30, false, 1).unwrap();
+        // 50 more: the unpinned blob is evicted, the pinned one never is.
+        let evicted = s.insert("new", 3, 40, false, 2).unwrap();
+        assert_eq!(evicted[0].0, "idle");
+        assert!(s.contains("queued-resume"));
+        // A blob that cannot fit next to the pinned bytes is refused
+        // whole — the store is untouched and the blob handed back.
+        assert_eq!(s.insert("too-big", 4, 45, false, 3), Err(4));
+        assert!(s.contains("queued-resume") && s.contains("new"));
+        assert!(s.parked_bytes() <= s.park_byte_budget());
+        assert!(!s.would_fit(41));
+        assert!(s.would_fit(40));
+    }
+
+    #[test]
+    fn take_is_once_and_stale_keys_return_none() {
+        let mut s: ParkedStore<u32> = ParkedStore::new(100);
+        s.insert("a", 7, 10, true, 0).unwrap();
+        assert_eq!(s.take("a"), Some(7));
+        assert_eq!(s.take("a"), None, "double resume must be rejected");
+        assert_eq!(s.take("never"), None);
+        assert_eq!(s.parked_bytes(), 0);
+        assert_eq!(s.park_events, 1);
+        assert_eq!(s.resume_events, 1);
+        // remove() does not count a resume.
+        s.insert("b", 8, 10, false, 1).unwrap();
+        assert_eq!(s.remove("b"), Some(8));
+        assert_eq!(s.resume_events, 1);
+    }
+
+    #[test]
+    fn replacing_a_key_returns_its_bytes_first() {
+        let mut s: ParkedStore<u32> = ParkedStore::new(100);
+        s.insert("a", 1, 90, false, 0).unwrap();
+        // Same key, new blob: the old 90 bytes are returned before the
+        // fit check, so no eviction is needed.
+        let evicted = s.insert("a", 2, 95, false, 1).unwrap();
+        assert!(evicted.is_empty());
+        assert_eq!(s.parked_bytes(), 95);
+        assert_eq!(s.take("a"), Some(2));
+    }
+
+    #[test]
+    fn pin_state_is_togglable() {
+        let mut s: ParkedStore<u32> = ParkedStore::new(50);
+        s.insert("a", 1, 50, false, 0).unwrap();
+        assert_eq!(s.is_pinned("a"), Some(false));
+        assert!(s.set_pinned("a", true));
+        assert_eq!(s.is_pinned("a"), Some(true));
+        assert_eq!(s.insert("b", 2, 10, false, 1), Err(2), "pinned blob blocks the budget");
+        assert!(s.set_pinned("a", false));
+        let evicted = s.insert("b", 2, 10, false, 2).unwrap();
+        assert_eq!(evicted[0].0, "a");
+        assert!(!s.set_pinned("missing", true));
+        assert_eq!(s.is_pinned("missing"), None);
+    }
+}

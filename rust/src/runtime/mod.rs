@@ -19,6 +19,7 @@
 //! delta accounting still measures what an in-place-capable backend ships.
 
 pub mod device_cache;
+pub mod host_tier;
 pub mod manifest;
 pub mod params;
 pub mod tensor;

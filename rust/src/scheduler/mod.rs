@@ -1,5 +1,7 @@
 //! Request scheduling: batched prefill admission, continuous batched
-//! decode, KV-budget admission control, pool compaction.
+//! decode, KV-budget admission control, pool compaction, and the
+//! host-side session parking tier (preempt-to-host KV snapshots with
+//! multi-turn resume).
 //!
 //! The scheduler is the *two-phase tick planner* of the stack. Phase 1
 //! (**admission**): queued requests are partitioned into prefill-bucket
@@ -47,6 +49,26 @@
 //! resulting lane remap to every live session's binding) — so a
 //! long-lived session cannot pin a staging grown for peers that already
 //! retired, whether the slack is trailing or buried beneath it.
+//!
+//! **The parking tier** (the third phase) turns budget pressure and idle
+//! sessions into reclaimed device lanes instead of starvation. Three
+//! session residency states exist: *active* (decoding, lane bound),
+//! *idle* (a multi-turn session between turns — finished its generation
+//! but keyed by `session_id`, lane still bound so the next turn resumes
+//! warm), and *parked* (serialized to the host-side
+//! [`crate::runtime::host_tier::ParkedStore`] under `park_byte_budget`,
+//! all device bytes released). Idle sessions park after
+//! `park_idle_ticks` ticks without a turn; and whenever admission is
+//! budget-blocked, the scheduler **preempts** the coldest session —
+//! idle-ticks LRU over idle sessions first, then decode-deferred active
+//! sessions, never the last runnable lane — parking it to host *before*
+//! deferring the queue. A preempted mid-decode session re-enters through
+//! the normal admission plan (its exact page-rounded bytes charged, zero
+//! prefill cost) and continues its generation token-identically. A
+//! `generate` carrying a known `session_id` is routed as a *resume*:
+//! the parked (or idle) cache is restored and the new turn's tokens are
+//! appended through the decode path instead of re-prefilling the whole
+//! conversation.
 #![warn(missing_docs)]
 
 use std::collections::{BTreeMap, VecDeque};
@@ -54,8 +76,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{Engine, Session, SessionOptions};
+use crate::engine::{Engine, Session, SessionOptions, SessionSnapshot};
 use crate::model::{Sampler, SamplerKind};
+use crate::runtime::host_tier::ParkedStore;
 
 /// Scheduler limits.
 #[derive(Debug, Clone, Copy)]
@@ -75,6 +98,15 @@ pub struct SchedulerConfig {
     /// [`Engine::prefill_batch`]; 1 (or 0, treated as 1) degrades to the
     /// serial one-prefill-per-tick admission front-end.
     pub max_prefill_batch: usize,
+    /// Host-byte budget of the session parking tier
+    /// ([`crate::runtime::host_tier::ParkedStore`]) — accounted
+    /// separately from `kv_byte_budget`; 0 disables parking entirely
+    /// (idle sessions stay device-resident, preemption never fires).
+    pub park_byte_budget: usize,
+    /// Ticks an idle multi-turn session stays device-resident (lane
+    /// bound, warm for its next turn) before it is parked to host; 0
+    /// parks at the first boundary after the turn completes.
+    pub park_idle_ticks: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -85,6 +117,8 @@ impl Default for SchedulerConfig {
             max_queue: 1024,
             max_decode_batch: 4,
             max_prefill_batch: 4,
+            park_byte_budget: 256 << 20,
+            park_idle_ticks: 8,
         }
     }
 }
@@ -104,6 +138,13 @@ pub struct Request {
     pub sampler: SamplerKind,
     /// Sampler seed (reproducibility).
     pub seed: u64,
+    /// Multi-turn conversation key. `None` is the classic one-shot
+    /// request. With a key, the session survives its completion as an
+    /// *idle* (then *parked*) session, and a later request carrying the
+    /// same key resumes it — `prompt` is then the new turn's tokens,
+    /// appended to the retained KV instead of re-prefilling the whole
+    /// conversation.
+    pub session_id: Option<String>,
 }
 
 /// Terminal state of a request.
@@ -141,6 +182,56 @@ struct Active {
     generated: Vec<i32>,
     prefill_us: f64,
     decode_started: Instant,
+    /// Consecutive ticks the decode planner left this session
+    /// unscheduled (budget-deferred) — the preemption LRU's coldness.
+    idle_ticks: usize,
+}
+
+/// A multi-turn session between turns: generation finished, lane still
+/// bound (warm resume), waiting for its next turn or for the idle limit
+/// to park it.
+struct IdleSession {
+    key: String,
+    sess: Session,
+    /// Ticks since the turn completed.
+    idle_ticks: usize,
+}
+
+/// Mid-decode state of a preempted session, parked next to its snapshot
+/// so the resumed session finishes the *same* request.
+struct Continuation {
+    req: Request,
+    sampler: Sampler,
+    generated: Vec<i32>,
+    prefill_us: f64,
+}
+
+/// What the parking tier stores per session.
+struct ParkedEntry {
+    snap: SessionSnapshot,
+    /// `Some` for a preemption park (a resume is queued to finish the
+    /// in-flight generation); `None` for an idle multi-turn park.
+    cont: Option<Continuation>,
+}
+
+/// One queue slot: a fresh request, a resume-carrying request (new turn
+/// for a known `session_id`), or a preemption re-admission marker
+/// (`req: None` — the continuation travels with the parked blob).
+struct QueueEntry {
+    req: Option<Request>,
+    resume: Option<String>,
+}
+
+/// Where a `session_id` currently lives.
+enum ResumeState {
+    /// Actively decoding a turn (a queued resume waits for it).
+    Busy,
+    /// Idle tier, device-resident, at this index.
+    IdleAt(usize),
+    /// Host parking tier.
+    Parked,
+    /// Nowhere — a fresh key (or one whose blob was dropped/evicted).
+    Unknown,
 }
 
 /// Pool occupancy snapshot fed to [`plan_decode_batches`] — what the
@@ -324,12 +415,35 @@ pub fn plan_prefill_batch(
 /// instead of starvation.
 const HEAD_MAX_BYPASS: usize = 16;
 
+/// Bound on remembered park-LRU eviction tombstones (oldest forgotten
+/// first — a forgotten tombstone degrades to the fresh-first-turn path,
+/// never to an error).
+const TOMBSTONE_MAX: usize = 256;
+
 /// Continuous batcher over one [`Engine`]. See the module docs.
 pub struct Scheduler {
     /// Limits this scheduler was built with.
     pub cfg: SchedulerConfig,
-    queue: VecDeque<Request>,
+    queue: VecDeque<QueueEntry>,
     active: Vec<Active>,
+    /// Multi-turn sessions between turns (device-resident, lane bound).
+    idle: Vec<IdleSession>,
+    /// The host parking tier: serialized session blobs under
+    /// `park_byte_budget`, LRU-evicted, pinned while a resume is queued.
+    parked: ParkedStore<ParkedEntry>,
+    /// Monotone tick counter (drives idle limits and the park LRU).
+    tick: u64,
+    /// Keys of sessions the park LRU evicted, bounded FIFO
+    /// ([`TOMBSTONE_MAX`]): a later turn for one of these is rejected
+    /// with a clean "gone" error (consuming the tombstone) instead of
+    /// silently re-prefilling an amnesiac fresh session.
+    evicted_keys: VecDeque<String>,
+    /// Consecutive ticks admission was blocked with an empty active set
+    /// and no park landed — after one such tick the forced-first
+    /// progress guarantee fires even though a parkable idle session
+    /// exists (its park may be vetoed by a queued resume; the guarantee
+    /// must not wait on it forever).
+    blocked_noprogress_ticks: usize,
     rejected: u64,
     /// View bytes returned to the budget: owned views released at retire,
     /// pool trims once the scheduler drains, and pool compaction shrinks
@@ -347,19 +461,88 @@ impl Scheduler {
             cfg,
             queue: VecDeque::new(),
             active: Vec::new(),
+            idle: Vec::new(),
+            parked: ParkedStore::new(cfg.park_byte_budget),
+            tick: 0,
+            evicted_keys: VecDeque::new(),
+            blocked_noprogress_ticks: 0,
             rejected: 0,
             view_bytes_released: 0,
             head_bypass_ticks: 0,
         }
     }
 
+    /// Where a session key currently lives (active turn, idle tier,
+    /// parked, or unknown).
+    fn resume_state(&self, key: &str) -> ResumeState {
+        if self
+            .active
+            .iter()
+            .any(|a| a.req.session_id.as_deref() == Some(key))
+        {
+            return ResumeState::Busy;
+        }
+        if let Some(i) = self.idle.iter().position(|s| s.key == key) {
+            return ResumeState::IdleAt(i);
+        }
+        if self.parked.contains(key) {
+            return ResumeState::Parked;
+        }
+        ResumeState::Unknown
+    }
+
+    /// True when a resume for `key` is waiting in the queue.
+    fn has_queued_resume(&self, key: &str) -> bool {
+        self.queue.iter().any(|e| e.resume.as_deref() == Some(key))
+    }
+
+    /// Remember sessions the park LRU just evicted (bounded FIFO), so
+    /// their next turn errors cleanly instead of silently losing context.
+    fn note_evictions(&mut self, evicted: Vec<(String, ParkedEntry)>) {
+        for (key, _) in evicted {
+            self.evicted_keys.push_back(key);
+            if self.evicted_keys.len() > TOMBSTONE_MAX {
+                self.evicted_keys.pop_front();
+            }
+        }
+    }
+
     /// Enqueue a request; `false` means the queue is full (rejected).
+    ///
+    /// A request whose `session_id` names a *known* session (active,
+    /// idle, or parked) is routed as a **resume**: its prompt is the new
+    /// turn, appended to the retained KV at admission. An unknown key is
+    /// a fresh first turn. A parked blob with a queued resume is pinned
+    /// so LRU eviction can never drop a session the scheduler has
+    /// promised to continue.
     pub fn submit(&mut self, req: Request) -> bool {
         if self.queue.len() >= self.cfg.max_queue {
             self.rejected += 1;
             return false;
         }
-        self.queue.push_back(req);
+        let resume = match &req.session_id {
+            Some(key) => match self.resume_state(key) {
+                ResumeState::Unknown => {
+                    // A key the park LRU evicted is *stale*, not fresh:
+                    // route it as a resume so admission rejects it with a
+                    // clean "gone" error instead of silently answering
+                    // without the conversation's context. The tombstone
+                    // is consumed — the client's retry starts fresh.
+                    if let Some(p) = self.evicted_keys.iter().position(|k| k == key) {
+                        self.evicted_keys.remove(p);
+                        Some(key.clone())
+                    } else {
+                        None
+                    }
+                }
+                _ => Some(key.clone()),
+            },
+            None => None,
+        };
+        if let Some(key) = &resume {
+            self.parked.set_pinned(key, true);
+        }
+        self.queue.push_back(QueueEntry { req: Some(req), resume });
         true
     }
 
@@ -373,31 +556,55 @@ impl Scheduler {
         self.active.len()
     }
 
+    /// Multi-turn sessions between turns, still device-resident.
+    pub fn idle_sessions(&self) -> usize {
+        self.idle.len()
+    }
+
+    /// Sessions parked in the host tier.
+    pub fn parked_sessions(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Host bytes pinned by parked session blobs (bounded by
+    /// `park_byte_budget`, accounted separately from `kv_byte_budget`).
+    pub fn parked_bytes(&self) -> usize {
+        self.parked.parked_bytes()
+    }
+
     /// Submissions rejected by the queue bound.
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
 
-    /// True when nothing is queued or in flight.
+    /// True when nothing is queued or in flight (idle multi-turn
+    /// sessions and parked blobs don't count: they have no pending work).
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.active.is_empty()
     }
 
-    /// KV bytes currently pinned by active sequences (paged host pool).
+    /// KV bytes currently pinned in the paged host pool by active *and*
+    /// idle (between-turn) sequences — both charge the budget headroom.
     pub fn active_kv_bytes(&self) -> usize {
         self.active
             .iter()
             .map(|a| a.sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0))
-            .sum()
+            .sum::<usize>()
+            + self
+                .idle
+                .iter()
+                .map(|s| s.sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0))
+                .sum::<usize>()
     }
 
-    /// Device bytes pinned by active sequences' *owned* per-session
+    /// Device bytes pinned by active/idle sequences' *owned* per-session
     /// execution views. Pooled lanes are deliberately excluded: the
     /// shared pool is charged once, via [`Engine::pooled_view_bytes`] —
     /// summing it per session would double-count (the counter bugfix
     /// regression-tested in `runtime::device_cache`).
     pub fn owned_view_bytes(&self) -> usize {
-        self.active.iter().map(|a| a.sess.device_view_bytes()).sum()
+        self.active.iter().map(|a| a.sess.device_view_bytes()).sum::<usize>()
+            + self.idle.iter().map(|s| s.sess.device_view_bytes()).sum::<usize>()
     }
 
     /// View bytes returned to the budget by retired sequences' owned
@@ -439,22 +646,51 @@ impl Scheduler {
         }
     }
 
-    /// One scheduling tick — a **two-phase tick plan**: (1) admit a
-    /// *batch* of queued requests through [`Engine::prefill_batch`] while
-    /// slots and the KV byte budget allow, (2) plan the active set into
-    /// fused decode batches and decode one token per scheduled sequence,
-    /// then retire finished ones and compact/trim the view pool at the
-    /// boundary. Returns the completions that retired this tick.
+    /// One scheduling tick — a **three-phase tick plan**: (0) park idle
+    /// multi-turn sessions past their idle limit, (1) admit a *batch* of
+    /// queued requests through [`Engine::prefill_batch`] — and resume
+    /// queued parked/idle sessions at zero prefill cost — while slots and
+    /// the KV byte budget allow, (2) plan the active set into fused
+    /// decode batches and decode one token per scheduled sequence, then
+    /// retire finished ones (multi-turn sessions go idle instead of
+    /// tearing down), (3) under budget pressure preempt the coldest
+    /// session to the host tier before deferring the queue, and
+    /// compact/trim the view pool at the boundary. Returns the
+    /// completions that retired this tick.
     pub fn step(&mut self, engine: &mut Engine) -> Vec<Completion> {
+        self.tick += 1;
         let mut done = Vec::new();
+        let mut parked_this_tick = false;
+
+        // --- Phase 0, idle-limit parking: a multi-turn session that sat
+        // between turns for park_idle_ticks gives up its device residency
+        // (lane, paged pool); its compact blob moves under the separate
+        // park_byte_budget and the freed lane is compacted at this tick's
+        // boundary. A session whose next turn is already queued stays
+        // resident — it resumes this very tick.
+        if self.cfg.park_byte_budget > 0 {
+            let mut i = 0;
+            while i < self.idle.len() {
+                self.idle[i].idle_ticks += 1;
+                let due = self.idle[i].idle_ticks >= self.cfg.park_idle_ticks.max(1);
+                if due && !self.has_queued_resume(&self.idle[i].key) {
+                    if self.park_idle_at(engine, i) {
+                        parked_this_tick = true;
+                        continue; // index i now holds the swapped-in tail
+                    }
+                }
+                i += 1;
+            }
+        }
 
         // --- Phase 1, admission: plan a prefill batch over the queue.
         // The budget covers the paged pool, owned views, and the shared
         // view pool (charged once); retired sequences released theirs at
         // finish, so the headroom sees the recovered bytes immediately.
-        // Admission charges the engine's conservative per-bucket byte
-        // estimate up front (the admitted set's real bytes are
-        // re-measured next tick).
+        // Fresh requests charge the engine's conservative per-bucket byte
+        // estimate up front; queued resumes charge their *known* bytes
+        // (the parked blob's page-rounded occupancy plus the new turn's
+        // worst case) at zero prefill cost.
         let free_slots = self.cfg.max_active.saturating_sub(self.active.len());
         if free_slots > 0 && !self.queue.is_empty() {
             // Headroom after the two non-pooled residency classes; the
@@ -475,109 +711,237 @@ impl Scheduler {
             } else {
                 self.queue.len()
             };
-            let buckets: Vec<usize> = self
-                .queue
-                .iter()
-                .take(consider)
-                .map(|r| engine.prefill_bucket_for(r.prompt.len()))
-                .collect();
-            // Estimates are keyed by queue index and computed from the
-            // real prompt length — chunked prompts grow past their
-            // bucket, so the bucket alone would under-count them.
-            let lens: Vec<usize> = self
-                .queue
-                .iter()
-                .take(consider)
-                .map(|r| r.prompt.len())
-                .collect();
-            let est_paged = |i: usize| engine.prefill_byte_estimate(lens[i]);
-            let implied_cap = |i: usize| engine.prefill_implied_capacity(lens[i]);
-            let lane_bytes = |cap: usize| engine.lane_view_bytes(cap);
-            let snapshot = PoolSnapshot {
-                allocated_lanes: engine.view_pool().lane_count(),
-                bound_lanes: engine.view_pool().lanes_in_use(),
-                cap_floor: engine.view_pool().capacity(),
-            };
-            let plan = plan_prefill_batch(
-                &buckets,
-                self.cfg.max_prefill_batch,
-                free_slots,
-                &est_paged,
-                &implied_cap,
-                &lane_bytes,
-                headroom,
-                snapshot,
-                self.active.is_empty(),
-            );
-            // Pull the admitted requests out of the queue (descending
-            // index removal keeps deferred requests queued in arrival
-            // order), then run the whole tick's admissions through ONE
-            // prefill_batch pass — group order preserved, so a future
-            // batched prefill executable splits this into one call per
-            // bucket group without re-planning; a single pass also lands
-            // every pool re-layout (lane checkouts, capacity growth) in
-            // one epoch before the lanes are populated.
-            let order: Vec<usize> = plan.iter().flatten().copied().collect();
-            if order.contains(&0) {
-                self.head_bypass_ticks = 0;
-            } else if !order.is_empty() {
-                self.head_bypass_ticks += 1;
-            }
-            if !order.is_empty() {
-                let mut descending = order.clone();
-                descending.sort_unstable_by(|a, b| b.cmp(a));
-                let mut taken: BTreeMap<usize, Request> = BTreeMap::new();
-                for &i in &descending {
-                    taken.insert(i, self.queue.remove(i).expect("planned index in queue"));
-                }
-                let reqs: Vec<Request> =
-                    order.iter().map(|i| taken.remove(i).unwrap()).collect();
-                let mut sessions: Vec<Session> =
-                    reqs.iter().map(|r| engine.start_session(r.opts.clone())).collect();
-                let prompts: Vec<&[i32]> =
-                    reqs.iter().map(|r| r.prompt.as_slice()).collect();
-                let results = {
-                    let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
-                    engine.prefill_batch(&mut refs, &prompts)
-                };
-                for ((req, sess), res) in reqs.into_iter().zip(sessions).zip(results) {
-                    match res {
-                        Ok(prefill_us) => {
-                            let sampler = Sampler::new(req.sampler, req.seed);
-                            self.active.push(Active {
-                                req,
-                                sess,
-                                sampler,
-                                generated: Vec::new(),
-                                prefill_us,
-                                decode_started: Instant::now(),
-                            });
-                        }
-                        Err(e) => {
-                            let a = Active {
-                                req,
-                                sess,
-                                sampler: Sampler::greedy(),
-                                generated: Vec::new(),
-                                prefill_us: 0.0,
-                                decode_started: Instant::now(),
-                            };
-                            done.push(self.finish(
-                                engine,
-                                a,
-                                Some(format!("prefill: {e:#}")),
-                                String::new(),
-                            ));
+            // Project the considered prefix onto *admissible* entries: a
+            // resume whose session is still decoding its previous turn
+            // waits (turns serialize per session) without blocking the
+            // plan. Estimates are keyed by the projected index; fresh
+            // prompts use the worst-case bucket model, resumes their
+            // exact retained bytes.
+            let mut eligible: Vec<usize> = Vec::new();
+            let mut buckets: Vec<usize> = Vec::new();
+            let mut ests: Vec<usize> = Vec::new();
+            let mut icaps: Vec<usize> = Vec::new();
+            for (qi, entry) in self.queue.iter().take(consider).enumerate() {
+                let new_len = entry.req.as_ref().map(|r| r.prompt.len()).unwrap_or(0);
+                match entry.resume.as_deref() {
+                    None => {
+                        eligible.push(qi);
+                        buckets.push(engine.prefill_bucket_for(new_len));
+                        ests.push(engine.prefill_byte_estimate(new_len));
+                        icaps.push(engine.prefill_implied_capacity(new_len));
+                    }
+                    Some(key) => {
+                        let turn_est = if new_len > 0 {
+                            engine.prefill_byte_estimate(new_len)
+                        } else {
+                            0
+                        };
+                        match self.resume_state(key) {
+                            ResumeState::Busy => continue,
+                            ResumeState::IdleAt(i) => {
+                                // Device-resident: its retained bytes are
+                                // already inside the headroom subtraction;
+                                // only the new turn's growth is charged.
+                                // The planner still models +1 lane even
+                                // though this session's lane is bound —
+                                // a deliberate, bounded overcharge (the
+                                // prefill planner has no has_lane input;
+                                // a deferred resume is retried next tick
+                                // and the forced-first backstop below
+                                // caps the wait).
+                                eligible.push(qi);
+                                buckets.push(0);
+                                ests.push(turn_est);
+                                let (cap_now, req_slots) = self.idle[i]
+                                    .sess
+                                    .cache()
+                                    .map(|c| (c.capacity(), c.required_slots()))
+                                    .unwrap_or((0, 0));
+                                let grown = if new_len > 0 {
+                                    engine.capacity_for_slots(req_slots + new_len)
+                                } else {
+                                    0
+                                };
+                                icaps.push(cap_now.max(grown));
+                            }
+                            ResumeState::Parked => {
+                                let (paged, cap, req_slots) = self
+                                    .parked
+                                    .get(key)
+                                    .map(|e| {
+                                        (
+                                            e.snap.paged_kv_bytes(),
+                                            e.snap.capacity(),
+                                            e.snap.required_slots(),
+                                        )
+                                    })
+                                    .unwrap_or((0, 0, 0));
+                                eligible.push(qi);
+                                buckets.push(0);
+                                ests.push(paged.saturating_add(turn_est));
+                                // A long appended turn can grow the
+                                // resumed cache (and the whole pool) past
+                                // the parked capacity: charge the worst
+                                // case, exactly as the fresh-prompt path
+                                // does for chunked prompts.
+                                let grown = if new_len > 0 {
+                                    engine.capacity_for_slots(req_slots + new_len)
+                                } else {
+                                    0
+                                };
+                                icaps.push(cap.max(grown));
+                            }
+                            ResumeState::Unknown => {
+                                // Blob gone between submit and admission:
+                                // admit at zero modeled cost so the entry
+                                // resolves to a clean error this tick
+                                // instead of starving in the queue.
+                                eligible.push(qi);
+                                buckets.push(0);
+                                ests.push(0);
+                                icaps.push(0);
+                            }
                         }
                     }
                 }
             }
+            // The queue head counts as served when it is a resume waiting
+            // on its own busy session — the aging rule protects against
+            // starvation by *others*, not self-waits — and this must
+            // reset even when the wait leaves nothing eligible, or a
+            // clamped `consider` window would freeze admission.
+            let head_waits_on_self = self
+                .queue
+                .front()
+                .and_then(|e| e.resume.as_deref())
+                .map(|k| matches!(self.resume_state(k), ResumeState::Busy))
+                .unwrap_or(false);
+            if head_waits_on_self {
+                self.head_bypass_ticks = 0;
+            }
+            if !eligible.is_empty() {
+                let est_paged = |i: usize| ests[i];
+                let implied_cap = |i: usize| icaps[i];
+                let lane_bytes = |cap: usize| engine.lane_view_bytes(cap);
+                let snapshot = PoolSnapshot {
+                    allocated_lanes: engine.view_pool().lane_count(),
+                    bound_lanes: engine.view_pool().lanes_in_use(),
+                    cap_floor: engine.view_pool().capacity(),
+                };
+                // Progress guarantee: with nothing active, nothing can
+                // retire to free bytes — force the first admission. But a
+                // *parkable idle* session is a source of reclaimable
+                // bytes: hold the guarantee back so the preemption phase
+                // can park it and the queue admits within budget next
+                // tick. The hold-back is bounded by
+                // `blocked_noprogress_ticks`: if a blocked tick passes
+                // and no park actually landed (e.g. every idle session
+                // is vetoed by its own queued resume), the guarantee
+                // fires anyway — livelock stays impossible.
+                let force_first = self.active.is_empty()
+                    && (self.cfg.park_byte_budget == 0
+                        || self.blocked_noprogress_ticks >= 1
+                        || !self
+                            .idle
+                            .iter()
+                            .any(|s| self.parked.would_fit(s.sess.park_bytes_hint())));
+                let plan = plan_prefill_batch(
+                    &buckets,
+                    self.cfg.max_prefill_batch,
+                    free_slots,
+                    &est_paged,
+                    &implied_cap,
+                    &lane_bytes,
+                    headroom,
+                    snapshot,
+                    force_first,
+                );
+                // Pull the admitted entries out of the queue (descending
+                // index removal keeps deferred requests queued in arrival
+                // order). Fresh requests run through ONE prefill_batch
+                // pass — group order preserved, so a future batched
+                // prefill executable splits this into one call per bucket
+                // group without re-planning — and resumes restore/append
+                // through the engine afterwards.
+                let order: Vec<usize> =
+                    plan.iter().flatten().map(|&i| eligible[i]).collect();
+                if order.contains(&0) {
+                    self.head_bypass_ticks = 0;
+                } else if !order.is_empty() && !head_waits_on_self {
+                    self.head_bypass_ticks += 1;
+                }
+                if !order.is_empty() {
+                    let mut descending = order.clone();
+                    descending.sort_unstable_by(|a, b| b.cmp(a));
+                    let mut taken: BTreeMap<usize, QueueEntry> = BTreeMap::new();
+                    for &i in &descending {
+                        taken.insert(i, self.queue.remove(i).expect("planned index in queue"));
+                    }
+                    let entries: Vec<QueueEntry> =
+                        order.iter().map(|i| taken.remove(i).unwrap()).collect();
+                    let mut fresh: Vec<Request> = Vec::new();
+                    let mut resumes: Vec<QueueEntry> = Vec::new();
+                    for e in entries {
+                        if e.resume.is_some() {
+                            resumes.push(e);
+                        } else {
+                            fresh.push(e.req.expect("fresh entry carries a request"));
+                        }
+                    }
+                    if !fresh.is_empty() {
+                        let mut sessions: Vec<Session> = fresh
+                            .iter()
+                            .map(|r| engine.start_session(r.opts.clone()))
+                            .collect();
+                        let prompts: Vec<&[i32]> =
+                            fresh.iter().map(|r| r.prompt.as_slice()).collect();
+                        let results = {
+                            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                            engine.prefill_batch(&mut refs, &prompts)
+                        };
+                        for ((req, sess), res) in fresh.into_iter().zip(sessions).zip(results) {
+                            match res {
+                                Ok(prefill_us) => {
+                                    let sampler = Sampler::new(req.sampler, req.seed);
+                                    self.active.push(Active {
+                                        req,
+                                        sess,
+                                        sampler,
+                                        generated: Vec::new(),
+                                        prefill_us,
+                                        decode_started: Instant::now(),
+                                        idle_ticks: 0,
+                                    });
+                                }
+                                Err(e) => {
+                                    let a = Active {
+                                        req,
+                                        sess,
+                                        sampler: Sampler::greedy(),
+                                        generated: Vec::new(),
+                                        prefill_us: 0.0,
+                                        decode_started: Instant::now(),
+                                        idle_ticks: 0,
+                                    };
+                                    done.push(self.finish(
+                                        engine,
+                                        a,
+                                        Some(format!("prefill: {e:#}")),
+                                        String::new(),
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    self.admit_resumes(engine, resumes, &mut done);
+                }
+            }
         }
-        // Requests still queued with slots free means the budget deferred
-        // them — the signal that gates the end-of-tick pool defrag (a
-        // pinned grown capacity must not starve the queue).
-        let admission_blocked =
-            !self.queue.is_empty() && self.active.len() < self.cfg.max_active;
+        // Admissible entries still queued with slots free means the
+        // budget deferred them — the signal that gates both the
+        // preemption phase and the end-of-tick pool compaction (a pinned
+        // grown capacity must not starve the queue).
+        let admission_blocked = self.admission_blocked();
 
         // --- Batch planning: group by capacity bucket, bound by
         // max_decode_batch lanes and the pooled-byte budget. The pool's
@@ -608,6 +972,25 @@ impl Scheduler {
             headroom,
             snapshot,
         );
+
+        // Coldness bookkeeping for the preemption LRU: a session the
+        // decode planner left out of every group this tick (budget-
+        // deferred) grows colder; a scheduled one resets.
+        {
+            let mut planned = vec![false; self.active.len()];
+            for group in &plan {
+                for &i in group {
+                    planned[i] = true;
+                }
+            }
+            for (i, a) in self.active.iter_mut().enumerate() {
+                if planned[i] {
+                    a.idle_ticks = 0;
+                } else {
+                    a.idle_ticks += 1;
+                }
+            }
+        }
 
         // --- Decode: one fused step per planned group; sequences retire
         // on EOS (sampled before decode), decode error (batch-wide), or
@@ -659,50 +1042,501 @@ impl Scheduler {
         }
 
         // --- Retire in descending index order so swap_remove never
-        // disturbs a pending index.
+        // disturbs a pending index. A multi-turn session (session_id)
+        // that finished its turn cleanly goes *idle* — lane kept bound,
+        // cache retained, waiting for its next turn or the idle limit —
+        // instead of tearing down; errors always tear down (the key is
+        // forgotten and the next turn starts fresh).
         for (&i, err) in retire.iter().rev() {
             let a = self.active.swap_remove(i);
             let text = engine.tokenizer.decode(&a.generated);
             engine.metrics.requests_done += 1;
-            done.push(self.finish(engine, a, err.clone(), text));
+            match (&a.req.session_id, err) {
+                (Some(key), None) => {
+                    let key = key.clone();
+                    done.push(self.retire_to_idle(engine, a, key, text));
+                }
+                _ => done.push(self.finish(engine, a, err.clone(), text)),
+            }
+        }
+
+        // --- Phase 3, preempt-to-host: when the budget deferred
+        // admissible work, park the coldest session (idle-ticks LRU —
+        // idle multi-turn sessions first, then decode-deferred actives,
+        // never the last runnable lane) instead of only deferring the
+        // queue. The freed paged bytes leave the headroom immediately
+        // and the freed lane is reclaimed by the compaction below, so
+        // the next tick's admission plan sees the recovered budget. A
+        // tick that retired something holds the preemption back: the
+        // retire already returned bytes, so the next admission pass gets
+        // first claim before any session pays a park/resume round trip.
+        if admission_blocked && done.is_empty() && self.cfg.park_byte_budget > 0 {
+            parked_this_tick |= self.try_preempt(engine, &mut done);
+        }
+
+        // Bound the forced-first hold-back: a blocked tick with an empty
+        // active set in which no park landed must not repeat silently —
+        // next tick the progress guarantee fires (see force_first above).
+        if admission_blocked && self.active.is_empty() && !parked_this_tick {
+            self.blocked_noprogress_ticks += 1;
+        } else {
+            self.blocked_noprogress_ticks = 0;
         }
 
         // --- Pool compaction at the tick boundary (never mid-step: all
         // of this tick's binds and syncs are done). Once no sequence is
-        // active, trim the pool so the budget recovers the pooled bytes
-        // (counted once — see view_bytes_released). This must NOT wait
-        // for the queue to drain: admission charges pooled bytes, so a
-        // lingering pool from retired sequences could otherwise starve
+        // active or idle, trim the pool so the budget recovers the pooled
+        // bytes (counted once — see view_bytes_released). This must NOT
+        // wait for the queue to drain: admission charges pooled bytes, so
+        // a lingering pool from retired sequences could otherwise starve
         // queued requests forever under a tight budget (trim requires
-        // every lane returned, which an empty active set guarantees).
+        // every lane returned, which an empty active+idle set
+        // guarantees).
         //
-        // While sequences remain active, a full trim is impossible but a
-        // *compaction* is not: at a retire boundary — or whenever a
-        // non-empty queue was deferred by the budget — bound lanes move
-        // down into interior holes, the freed tail is truncated, and the
-        // capacity shrinks to the live-session requirement, so a
-        // long-lived session cannot pin lanes freed beneath it (the
-        // interior-hole capacity leak) or a staging grown for retired
-        // peers (the tight-budget deadlock regression). Every live
-        // session is handed to the engine so the lane remap lands on its
-        // binding before the next tick's syncs. Compaction is a strict
-        // no-op (no re-layout, no wholesale resyncs) when there is no
-        // slack.
-        if self.active.is_empty() {
+        // While sessions remain resident, a full trim is impossible but a
+        // *compaction* is not: at a retire boundary, whenever a non-empty
+        // queue was deferred by the budget, or after a park released a
+        // lane (possibly an interior one — the freed lane must be
+        // reclaimed the same tick, not pinned under a surviving high
+        // index), bound lanes move down into interior holes, the freed
+        // tail is truncated, and the capacity shrinks to the live-session
+        // requirement. Every live session — active *and* idle — is
+        // handed to the engine so the lane remap lands on its binding
+        // before the next tick's syncs. Compaction is a strict no-op (no
+        // re-layout, no wholesale resyncs) when there is no slack.
+        if self.active.is_empty() && self.idle.is_empty() {
             self.view_bytes_released += engine.trim_view_pool() as u64;
-        } else if !done.is_empty() || admission_blocked {
-            let required = self
-                .active
-                .iter()
-                .map(|a| a.sess.cache().map(|c| c.capacity()).unwrap_or(0))
-                .max()
-                .unwrap_or(0);
-            let mut live: Vec<&mut Session> =
-                self.active.iter_mut().map(|a| &mut a.sess).collect();
-            self.view_bytes_released +=
-                engine.compact_view_pool(&mut live, required) as u64;
+        } else if !done.is_empty() || admission_blocked || parked_this_tick {
+            self.compact_boundary(engine);
         }
+        engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
         done
+    }
+
+    /// True when the queue holds an entry that *could* be admitted (not
+    /// a resume waiting on its own busy session) while decode slots are
+    /// free — i.e. the byte budget, not capacity, is what defers it.
+    fn admission_blocked(&self) -> bool {
+        if self.active.len() >= self.cfg.max_active {
+            return false;
+        }
+        self.queue.iter().any(|e| match e.resume.as_deref() {
+            None => true,
+            Some(key) => !matches!(self.resume_state(key), ResumeState::Busy),
+        })
+    }
+
+    /// Execute the admitted resume entries of one tick: restore parked
+    /// blobs (continuations finish their in-flight generation; idle
+    /// blobs append the new turn), or append a turn to a device-resident
+    /// idle session. Failures become per-request error completions.
+    fn admit_resumes(
+        &mut self,
+        engine: &mut Engine,
+        resumes: Vec<QueueEntry>,
+        done: &mut Vec<Completion>,
+    ) {
+        // Two requeue flavors: a Busy wait keeps its queue position (it
+        // consumes no plan slot while busy), while a turn blocked behind
+        // its own session's preemption marker goes to the *back* — the
+        // marker sits earlier in the queue, so even a 1-admission tick
+        // reaches it next instead of replaying this turn forever.
+        let mut requeue_front: Vec<QueueEntry> = Vec::new();
+        let mut requeue_back: Vec<QueueEntry> = Vec::new();
+        for e in resumes {
+            let key = e.resume.clone().expect("resume entry carries a key");
+            match self.resume_state(&key) {
+                ResumeState::IdleAt(i) => {
+                    let req = e.req.expect("an idle session resumes only via a new turn");
+                    let mut s = self.idle.remove(i);
+                    let t0 = Instant::now();
+                    match engine.append_turn(&mut s.sess, &req.prompt) {
+                        Ok(()) => {
+                            let sampler = Sampler::new(req.sampler, req.seed);
+                            self.active.push(Active {
+                                req,
+                                sess: s.sess,
+                                sampler,
+                                generated: Vec::new(),
+                                prefill_us: t0.elapsed().as_secs_f64() * 1e6,
+                                decode_started: Instant::now(),
+                                idle_ticks: 0,
+                            });
+                        }
+                        Err(err) => {
+                            let a = Active {
+                                req,
+                                sess: s.sess,
+                                sampler: Sampler::greedy(),
+                                generated: Vec::new(),
+                                prefill_us: 0.0,
+                                decode_started: Instant::now(),
+                                idle_ticks: 0,
+                            };
+                            done.push(self.finish(
+                                engine,
+                                a,
+                                Some(format!("resume: {err:#}")),
+                                String::new(),
+                            ));
+                        }
+                    }
+                }
+                ResumeState::Parked => {
+                    let has_cont =
+                        self.parked.get(&key).map(|p| p.cont.is_some()).unwrap_or(false);
+                    if has_cont && e.req.is_some() {
+                        // A new turn for a session whose preempted
+                        // generation has not finished: the continuation's
+                        // own marker resumes it first; this turn waits.
+                        requeue_back.push(e);
+                        continue;
+                    }
+                    let entry = self.parked.take(&key).expect("state said parked");
+                    match (entry.cont, e.req) {
+                        (Some(cont), _) => match engine.resume_session(entry.snap, &[]) {
+                            Ok(sess) => self.active.push(Active {
+                                req: cont.req,
+                                sess,
+                                sampler: cont.sampler,
+                                generated: cont.generated,
+                                prefill_us: cont.prefill_us,
+                                decode_started: Instant::now(),
+                                idle_ticks: 0,
+                            }),
+                            Err(err) => done.push(Self::error_completion(
+                                &cont.req,
+                                format!("resume: {err:#}"),
+                            )),
+                        },
+                        (None, Some(req)) => {
+                            let t0 = Instant::now();
+                            match engine.resume_session(entry.snap, &req.prompt) {
+                                Ok(sess) => {
+                                    let sampler = Sampler::new(req.sampler, req.seed);
+                                    self.active.push(Active {
+                                        req,
+                                        sess,
+                                        sampler,
+                                        generated: Vec::new(),
+                                        prefill_us: t0.elapsed().as_secs_f64() * 1e6,
+                                        decode_started: Instant::now(),
+                                        idle_ticks: 0,
+                                    });
+                                }
+                                Err(err) => done.push(Self::error_completion(
+                                    &req,
+                                    format!("resume: {err:#}"),
+                                )),
+                            }
+                        }
+                        (None, None) => {}
+                    }
+                }
+                ResumeState::Busy => {
+                    // Another resume for this key won the same tick; put
+                    // this turn back so per-session turn order holds.
+                    requeue_front.push(e);
+                }
+                ResumeState::Unknown => {
+                    // The blob was dropped or evicted after this turn was
+                    // queued: a *stale resume*, rejected cleanly instead
+                    // of silently re-prefilling with amnesia.
+                    if let Some(req) = e.req {
+                        done.push(Self::error_completion(
+                            &req,
+                            format!("session '{key}' is gone (dropped or evicted)"),
+                        ));
+                    }
+                }
+            }
+        }
+        for e in requeue_front.into_iter().rev() {
+            self.queue.push_front(e);
+        }
+        for e in requeue_back {
+            self.queue.push_back(e);
+        }
+    }
+
+    /// A completion for a request that failed before holding a session.
+    fn error_completion(req: &Request, msg: String) -> Completion {
+        Completion {
+            id: req.id,
+            text: String::new(),
+            n_prompt: req.prompt.len(),
+            n_generated: 0,
+            prefill_us: 0.0,
+            decode_us_mean: 0.0,
+            cache_fraction: 0.0,
+            kv_bytes: 0,
+            eviction_triggers: 0,
+            upload_bytes: 0,
+            error: Some(msg),
+        }
+    }
+
+    /// Move a cleanly finished multi-turn session to the idle tier (lane
+    /// kept bound for a warm next turn), snapshotting its completion. An
+    /// existing idle session under the same key is torn down first.
+    fn retire_to_idle(
+        &mut self,
+        engine: &mut Engine,
+        mut a: Active,
+        key: String,
+        text: String,
+    ) -> Completion {
+        let upload_bytes = engine.session_transfer_stats(&a.sess).bytes_uploaded;
+        self.view_bytes_released += a.sess.release_device_view() as u64;
+        let steps = a.generated.len().max(1);
+        let completion = Completion {
+            id: a.req.id,
+            text,
+            n_prompt: a.req.prompt.len(),
+            n_generated: a.generated.len(),
+            prefill_us: a.prefill_us,
+            decode_us_mean: a.decode_started.elapsed().as_secs_f64() * 1e6 / steps as f64,
+            cache_fraction: a.sess.cache_fraction(),
+            kv_bytes: a.sess.cache().map(|c| c.allocated_kv_bytes()).unwrap_or(0),
+            eviction_triggers: a.sess.eviction_triggers(),
+            upload_bytes,
+            error: None,
+        };
+        if let Some(i) = self.idle.iter().position(|s| s.key == key) {
+            let mut old = self.idle.swap_remove(i);
+            self.view_bytes_released += old.sess.release_device_view() as u64;
+            engine.release_lane(&mut old.sess);
+        }
+        // A recreated session clears any eviction tombstone for its key —
+        // the lost context belonged to a previous incarnation.
+        if let Some(p) = self.evicted_keys.iter().position(|k| *k == key) {
+            self.evicted_keys.remove(p);
+        }
+        self.idle.push(IdleSession { key, sess: a.sess, idle_ticks: 0 });
+        completion
+    }
+
+    /// Park the idle session at index `i` into the host tier. `false` —
+    /// store untouched, session still idle — when the blob would not fit
+    /// next to the store's pinned bytes.
+    fn park_idle_at(&mut self, engine: &mut Engine, i: usize) -> bool {
+        let hint = self.idle[i].sess.park_bytes_hint();
+        if !self.parked.would_fit(hint) {
+            return false;
+        }
+        let mut s = self.idle.swap_remove(i);
+        match engine.park_session(&mut s.sess) {
+            Ok(snap) => {
+                let bytes = snap.parked_bytes();
+                match self.parked.insert(
+                    &s.key,
+                    ParkedEntry { snap, cont: None },
+                    bytes,
+                    false,
+                    self.tick,
+                ) {
+                    Ok(evicted) => {
+                        self.note_evictions(evicted);
+                        true
+                    }
+                    Err(entry) => {
+                        // Unreachable (the hint is exact), but never lose
+                        // a session to a bookkeeping bug: restore it.
+                        if let Ok(sess) = engine.resume_session(entry.snap, &[]) {
+                            self.idle.push(IdleSession {
+                                key: s.key,
+                                sess,
+                                idle_ticks: 0,
+                            });
+                        }
+                        false
+                    }
+                }
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Preempt the coldest session to the host tier (see the module
+    /// docs): idle sessions by descending idle ticks first — any may go,
+    /// even the last — then decode-deferred actives (idle_ticks >= 1),
+    /// never the last runnable lane and never a session the decode
+    /// planner scheduled this very tick. Returns whether a park landed.
+    fn try_preempt(&mut self, engine: &mut Engine, done: &mut Vec<Completion>) -> bool {
+        if !self.idle.is_empty() {
+            // Coldest-first over *all* idle candidates: one vetoed (or
+            // unparkable) session must not shield the rest.
+            let mut order: Vec<usize> = (0..self.idle.len()).collect();
+            order.sort_by_key(|&i| std::cmp::Reverse(self.idle[i].idle_ticks));
+            for i in order {
+                if !self.has_queued_resume(&self.idle[i].key) && self.park_idle_at(engine, i)
+                {
+                    return true;
+                }
+            }
+        }
+        if self.active.len() >= 2 {
+            let cand = (0..self.active.len())
+                .filter(|&i| self.active[i].idle_ticks >= 1)
+                .max_by_key(|&i| self.active[i].idle_ticks);
+            if let Some(i) = cand {
+                return self.park_active_at(engine, i, done);
+            }
+        }
+        false
+    }
+
+    /// Preempt the active (mid-decode) session at index `i`: park its
+    /// snapshot *with* its generation continuation (request, sampler,
+    /// tokens so far) pinned in the store, and queue a resume marker so
+    /// it re-enters admission — through the normal byte accounting, at
+    /// zero prefill cost — once the pressure clears. The resumed session
+    /// finishes the same request token-identically.
+    fn park_active_at(
+        &mut self,
+        engine: &mut Engine,
+        i: usize,
+        done: &mut Vec<Completion>,
+    ) -> bool {
+        let hint = self.active[i].sess.park_bytes_hint();
+        if !self.parked.would_fit(hint) {
+            return false;
+        }
+        let mut a = self.active.swap_remove(i);
+        self.view_bytes_released += a.sess.release_device_view() as u64;
+        match engine.park_session(&mut a.sess) {
+            Ok(snap) => {
+                let bytes = snap.parked_bytes();
+                let key = a
+                    .req
+                    .session_id
+                    .clone()
+                    .unwrap_or_else(|| format!("\u{1}preempt-{}", a.req.id));
+                let cont = Continuation {
+                    req: a.req,
+                    sampler: a.sampler,
+                    generated: a.generated,
+                    prefill_us: a.prefill_us,
+                };
+                match self.parked.insert(
+                    &key,
+                    ParkedEntry { snap, cont: Some(cont) },
+                    bytes,
+                    true,
+                    self.tick,
+                ) {
+                    Ok(evicted) => {
+                        self.note_evictions(evicted);
+                        self.queue.push_back(QueueEntry { req: None, resume: Some(key) });
+                        true
+                    }
+                    Err(entry) => {
+                        // Unreachable (the hint is exact); restore rather
+                        // than lose the in-flight generation.
+                        let cont = entry.cont.expect("preempt entry carries a continuation");
+                        match engine.resume_session(entry.snap, &[]) {
+                            Ok(sess) => self.active.push(Active {
+                                req: cont.req,
+                                sess,
+                                sampler: cont.sampler,
+                                generated: cont.generated,
+                                prefill_us: cont.prefill_us,
+                                decode_started: Instant::now(),
+                                idle_ticks: 0,
+                            }),
+                            Err(err) => done.push(Self::error_completion(
+                                &cont.req,
+                                format!("preempt un-park: {err:#}"),
+                            )),
+                        }
+                        false
+                    }
+                }
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Trim (nothing resident) or compact (otherwise) the shared view
+    /// pool around every resident session — active *and* idle — applying
+    /// the lane remap to each. Called at tick boundaries and after an
+    /// out-of-tick release (server `drop`).
+    fn compact_boundary(&mut self, engine: &mut Engine) {
+        if self.active.is_empty() && self.idle.is_empty() {
+            self.view_bytes_released += engine.trim_view_pool() as u64;
+            return;
+        }
+        let required = self
+            .active
+            .iter()
+            .filter_map(|a| a.sess.cache().map(|c| c.capacity()))
+            .chain(self.idle.iter().filter_map(|s| s.sess.cache().map(|c| c.capacity())))
+            .max()
+            .unwrap_or(0);
+        let mut live: Vec<&mut Session> = self
+            .active
+            .iter_mut()
+            .map(|a| &mut a.sess)
+            .chain(self.idle.iter_mut().map(|s| &mut s.sess))
+            .collect();
+        self.view_bytes_released += engine.compact_view_pool(&mut live, required) as u64;
+    }
+
+    /// Server `park` op: immediately park an idle multi-turn session (or
+    /// refresh an already-parked one's LRU recency). Errors name the
+    /// reason: unknown key, a session mid-turn, or a full park store.
+    pub fn park_session_now(&mut self, engine: &mut Engine, key: &str) -> Result<usize> {
+        match self.resume_state(key) {
+            ResumeState::IdleAt(i) => {
+                let hint = self.idle[i].sess.park_bytes_hint();
+                if self.park_idle_at(engine, i) {
+                    if self.has_queued_resume(key) {
+                        // A turn was already queued against the session:
+                        // the fresh blob inherits the queued-resume pin.
+                        self.parked.set_pinned(key, true);
+                    }
+                    self.compact_boundary(engine);
+                    engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
+                    Ok(self.parked.bytes_of(key).unwrap_or(hint))
+                } else {
+                    anyhow::bail!(
+                        "park store cannot fit session '{key}' ({hint} bytes of {} budget)",
+                        self.parked.park_byte_budget()
+                    )
+                }
+            }
+            ResumeState::Parked => {
+                self.parked.touch(key, self.tick);
+                Ok(self.parked.bytes_of(key).unwrap_or(0))
+            }
+            ResumeState::Busy => anyhow::bail!("session '{key}' is decoding a turn"),
+            ResumeState::Unknown => anyhow::bail!("unknown session '{key}'"),
+        }
+    }
+
+    /// Server `drop` op: discard a session's retained context entirely
+    /// (idle tier or parked blob). Refused while the session is decoding
+    /// or has a queued turn — a promised resume must never dangle.
+    pub fn drop_session(&mut self, engine: &mut Engine, key: &str) -> Result<()> {
+        if self.has_queued_resume(key) {
+            anyhow::bail!("session '{key}' has a queued turn");
+        }
+        match self.resume_state(key) {
+            ResumeState::Busy => anyhow::bail!("session '{key}' is decoding a turn"),
+            ResumeState::IdleAt(i) => {
+                let mut s = self.idle.swap_remove(i);
+                self.view_bytes_released += s.sess.release_device_view() as u64;
+                engine.release_lane(&mut s.sess);
+                self.compact_boundary(engine);
+                Ok(())
+            }
+            ResumeState::Parked => {
+                self.parked.remove(key);
+                engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
+                Ok(())
+            }
+            ResumeState::Unknown => anyhow::bail!("unknown session '{key}'"),
+        }
     }
 
     /// Drive everything to completion (examples / benchmarks).
@@ -729,6 +1563,7 @@ mod tests {
             opts: SessionOptions::policy(PolicyKind::FullCache),
             sampler: SamplerKind::Greedy,
             seed: 0,
+            session_id: None,
         }
     }
 
@@ -749,6 +1584,88 @@ mod tests {
         assert_eq!(s.active_kv_bytes(), 0);
         assert_eq!(s.owned_view_bytes(), 0);
         assert_eq!(s.view_bytes_released(), 0);
+        assert_eq!(s.idle_sessions(), 0);
+        assert_eq!(s.parked_sessions(), 0);
+        assert_eq!(s.parked_bytes(), 0);
+    }
+
+    /// An unknown `session_id` is a fresh first turn (no resume routing);
+    /// the scheduler stays idle-detectable and nothing is parked.
+    #[test]
+    fn unknown_session_id_routes_as_fresh() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let r = Request { session_id: Some("chat-1".into()), ..req(0) };
+        assert!(s.submit(r));
+        assert_eq!(s.queued(), 1);
+        assert!(matches!(s.resume_state("chat-1"), ResumeState::Unknown));
+        assert!(s.queue.front().unwrap().resume.is_none(), "first turn must be fresh");
+        assert_eq!(s.parked_sessions(), 0);
+    }
+
+    /// A second turn for a key that is already queued-but-unknown also
+    /// goes fresh (nothing to resume yet); once the key is parked, the
+    /// turn routes as a resume and pins the blob.
+    #[test]
+    fn parked_key_routes_as_pinned_resume() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        // Hand-plant a parked blob the way a park would (no engine needed
+        // for store-level routing): dims/empty snapshot are irrelevant to
+        // submit's routing decision, so stub with a continuation-free
+        // entry built from a minimal cache snapshot.
+        let d = crate::kvcache::dual::CacheDims {
+            n_layers: 1,
+            n_kv_heads: 1,
+            d_head: 2,
+            w_local: 2,
+            page_size: 2,
+        };
+        let cache = crate::kvcache::SequenceKvCache::new(d, 4).unwrap();
+        let snap = cache.snapshot().unwrap();
+        let sess_snap = {
+            // Build through the engine-free surface: a parked entry only
+            // needs the cache snapshot's byte model for routing.
+            ParkedEntry {
+                snap: crate::engine::SessionSnapshot::for_tests(snap),
+                cont: None,
+            }
+        };
+        assert!(s.parked.insert("chat-2", sess_snap, 64, false, 0).is_ok());
+        let r = Request { session_id: Some("chat-2".into()), ..req(1) };
+        assert!(s.submit(r));
+        assert_eq!(
+            s.queue.front().unwrap().resume.as_deref(),
+            Some("chat-2"),
+            "known key must route as a resume"
+        );
+        assert_eq!(s.parked.is_pinned("chat-2"), Some(true), "queued resume pins the blob");
+        // Dropping a session with a queued turn is refused — the promised
+        // resume must never dangle (checked before any engine work, so a
+        // default engine-free call observes the same guard).
+        assert!(s.has_queued_resume("chat-2"));
+    }
+
+    /// A key the park LRU evicted must not silently restart as a fresh
+    /// session: its next turn routes as a resume (which admission then
+    /// rejects with a clean "gone" error), consuming the tombstone so
+    /// the retry after that starts fresh.
+    #[test]
+    fn evicted_key_routes_as_stale_resume_once() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        s.evicted_keys.push_back("lost".to_string());
+        let r = Request { session_id: Some("lost".into()), ..req(5) };
+        assert!(s.submit(r));
+        assert_eq!(
+            s.queue.back().unwrap().resume.as_deref(),
+            Some("lost"),
+            "an evicted key is stale, not fresh"
+        );
+        assert!(s.evicted_keys.is_empty(), "the tombstone is consumed");
+        let r = Request { session_id: Some("lost".into()), ..req(6) };
+        assert!(s.submit(r));
+        assert!(
+            s.queue.back().unwrap().resume.is_none(),
+            "after the tombstone is consumed the key starts fresh"
+        );
     }
 
     /// Planner over a fresh pool (nothing allocated or bound).

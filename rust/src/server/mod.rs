@@ -24,11 +24,23 @@
 //! {"op": "generate", "prompt": "q: k07\na: ", "max_new": 16,
 //!  "policy": "wg-kv", "tau": 0.1, "quest_budget_tokens": 64,
 //!  "snapkv_budget": 128, "temperature": 0.0, "seed": 0}
+//! {"op": "generate", "prompt": "next turn", "session_id": "chat-1"}
+//! {"op": "park", "session_id": "chat-1"}
+//! {"op": "drop", "session_id": "chat-1"}
 //! {"op": "stats"}
 //! ```
 //!
 //! Responses are one JSON object per line: a completion (`"ok": true`), a
 //! stats snapshot (`"ok": "stats"`), or an error (`"ok": false`).
+//!
+//! **Multi-turn sessions.** A `generate` carrying a `session_id` keeps
+//! the session's admitted KV after the turn completes (idle on-device,
+//! then parked to the host tier under `--park-byte-budget`); a later
+//! `generate` with the same key appends only the new turn's tokens to
+//! the retained cache instead of re-prefilling the whole conversation.
+//! `park` pushes an idle session to the host tier immediately (or
+//! refreshes a parked one's LRU recency); `drop` discards the retained
+//! context.
 #![warn(missing_docs)]
 
 use std::io::{BufRead, BufReader, Write};
@@ -75,6 +87,9 @@ pub struct GenerateParams {
     pub temperature: Option<f32>,
     /// Sampler seed (also the `random` policy's mask seed).
     pub seed: u64,
+    /// Multi-turn conversation key: retains the session's admitted KV
+    /// across turns (idle, then parked to host). Absent = one-shot.
+    pub session_id: Option<String>,
 }
 
 impl Default for GenerateParams {
@@ -92,6 +107,7 @@ impl Default for GenerateParams {
             snapkv_budget: None,
             temperature: None,
             seed: 0,
+            session_id: None,
         }
     }
 }
@@ -134,6 +150,7 @@ impl GenerateParams {
             snapkv_budget: j.get("snapkv_budget").and_then(Json::as_usize),
             temperature: j.get("temperature").and_then(Json::as_f64).map(|x| x as f32),
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            session_id: j.get("session_id").and_then(Json::as_str).map(str::to_string),
         })
     }
 
@@ -160,6 +177,9 @@ impl GenerateParams {
         }
         if let Some(t) = self.temperature {
             j = j.set("temperature", t);
+        }
+        if let Some(s) = &self.session_id {
+            j = j.set("session_id", s.as_str());
         }
         j
     }
@@ -209,13 +229,30 @@ pub struct ServerStats {
     pub queued: usize,
     /// Sequences currently decoding.
     pub active: usize,
+    /// Multi-turn sessions between turns, still device-resident.
+    pub idle_sessions: usize,
     /// Submissions rejected by the queue bound.
     pub rejected: u64,
-    /// KV bytes pinned by active sequences in the paged host pool.
+    /// KV bytes pinned by active/idle sequences in the paged host pool.
     pub active_kv_bytes: usize,
     /// Device bytes pinned by persistent exec views: sessions' owned
     /// views plus the shared batch-view pool, the latter counted once.
     pub active_view_bytes: usize,
+    /// Pool compaction passes (top-level dashboard mirror of the engine
+    /// counter — previously only buried in the nested snapshot).
+    pub compaction_events: u64,
+    /// Bound lanes re-indexed by compaction (dashboard mirror).
+    pub lane_moves: u64,
+    /// Staged bytes moved lane-to-lane by compaction (dashboard mirror).
+    pub lane_move_bytes: u64,
+    /// Sessions parked to the host tier.
+    pub park_events: u64,
+    /// Sessions resumed from the host tier.
+    pub resume_events: u64,
+    /// Host bytes currently pinned by parked session blobs.
+    pub parked_bytes: usize,
+    /// Sessions currently parked in the host tier.
+    pub parked_sessions: usize,
 }
 
 impl ServerStats {
@@ -226,9 +263,17 @@ impl ServerStats {
             .set("engine", self.engine.to_json())
             .set("queued", self.queued)
             .set("active", self.active)
+            .set("idle_sessions", self.idle_sessions)
             .set("rejected", self.rejected)
             .set("active_kv_bytes", self.active_kv_bytes)
             .set("active_view_bytes", self.active_view_bytes)
+            .set("compaction_events", self.compaction_events)
+            .set("lane_moves", self.lane_moves)
+            .set("lane_move_bytes", self.lane_move_bytes)
+            .set("park_events", self.park_events)
+            .set("resume_events", self.resume_events)
+            .set("parked_bytes", self.parked_bytes)
+            .set("parked_sessions", self.parked_sessions)
     }
 }
 
@@ -276,6 +321,11 @@ pub enum Command {
     Generate(GenerateParams, mpsc::Sender<Completion>),
     /// Snapshot server statistics.
     Stats(mpsc::Sender<ServerStats>),
+    /// Park an idle multi-turn session to the host tier now (or refresh
+    /// a parked one); replies with the parked bytes.
+    Park(String, mpsc::Sender<Result<usize>>),
+    /// Discard a session's retained context (idle tier or parked blob).
+    Drop(String, mpsc::Sender<Result<()>>),
 }
 
 /// Spawn the engine thread: builds the engine *inside* the thread (PJRT
@@ -358,6 +408,7 @@ where
                             opts,
                             sampler: p.sampler_kind(),
                             seed: p.seed,
+                            session_id: p.session_id.clone(),
                         };
                         if sched.submit(req) {
                             waiters.insert(id, reply);
@@ -366,17 +417,32 @@ where
                         }
                     }
                     Command::Stats(reply) => {
+                        let snapshot = engine.metrics.snapshot();
                         let _ = reply.send(ServerStats {
-                            engine: engine.metrics.snapshot(),
                             queued: sched.queued(),
                             active: sched.active(),
+                            idle_sessions: sched.idle_sessions(),
                             rejected: sched.rejected(),
                             active_kv_bytes: sched.active_kv_bytes(),
                             // Owned views summed per session + the shared
                             // pool charged once (never per lane-holder).
                             active_view_bytes: sched.owned_view_bytes()
                                 + engine.pooled_view_bytes(),
+                            compaction_events: snapshot.compaction_events,
+                            lane_moves: snapshot.lane_moves,
+                            lane_move_bytes: snapshot.lane_move_bytes,
+                            park_events: snapshot.park_events,
+                            resume_events: snapshot.resume_events,
+                            parked_bytes: sched.parked_bytes(),
+                            parked_sessions: sched.parked_sessions(),
+                            engine: snapshot,
                         });
+                    }
+                    Command::Park(key, reply) => {
+                        let _ = reply.send(sched.park_session_now(&mut engine, &key));
+                    }
+                    Command::Drop(key, reply) => {
+                        let _ = reply.send(sched.drop_session(&mut engine, &key));
                     }
                 }
             }
@@ -443,6 +509,37 @@ fn respond(line: &str, cmds: &mpsc::Sender<Command>) -> Json {
             }
             match rx.recv() {
                 Ok(s) => s.to_json(),
+                Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+            }
+        }
+        Some("park") => {
+            let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
+                return Json::obj().set("ok", false).set("error", "park: missing 'session_id'");
+            };
+            let (tx, rx) = mpsc::channel();
+            if cmds.send(Command::Park(key.to_string(), tx)).is_err() {
+                return Json::obj().set("ok", false).set("error", "engine stopped");
+            }
+            match rx.recv() {
+                Ok(Ok(bytes)) => Json::obj()
+                    .set("ok", "parked")
+                    .set("session_id", key)
+                    .set("parked_bytes", bytes),
+                Ok(Err(e)) => Json::obj().set("ok", false).set("error", format!("park: {e:#}")),
+                Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+            }
+        }
+        Some("drop") => {
+            let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
+                return Json::obj().set("ok", false).set("error", "drop: missing 'session_id'");
+            };
+            let (tx, rx) = mpsc::channel();
+            if cmds.send(Command::Drop(key.to_string(), tx)).is_err() {
+                return Json::obj().set("ok", false).set("error", "engine stopped");
+            }
+            match rx.recv() {
+                Ok(Ok(())) => Json::obj().set("ok", "dropped").set("session_id", key),
+                Ok(Err(e)) => Json::obj().set("ok", false).set("error", format!("drop: {e:#}")),
                 Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
             }
         }
@@ -532,15 +629,56 @@ impl Client {
         if j.get("ok").and_then(Json::as_str) != Some("stats") {
             bail!("unexpected stats response: {j}");
         }
+        Self::stats_from_json(&j)
+    }
+
+    /// Parse a `stats` response object (the inverse of
+    /// [`ServerStats::to_json`], round-trip-tested).
+    pub fn stats_from_json(j: &Json) -> Result<ServerStats> {
         let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
         Ok(ServerStats {
             engine: MetricsSnapshot::from_json(j.req("engine")?),
             queued: f("queued") as usize,
             active: f("active") as usize,
+            idle_sessions: f("idle_sessions") as usize,
             rejected: f("rejected") as u64,
             active_kv_bytes: f("active_kv_bytes") as usize,
             active_view_bytes: f("active_view_bytes") as usize,
+            compaction_events: f("compaction_events") as u64,
+            lane_moves: f("lane_moves") as u64,
+            lane_move_bytes: f("lane_move_bytes") as u64,
+            park_events: f("park_events") as u64,
+            resume_events: f("resume_events") as u64,
+            parked_bytes: f("parked_bytes") as usize,
+            parked_sessions: f("parked_sessions") as usize,
         })
+    }
+
+    /// Blocking `park` round-trip: push an idle multi-turn session to the
+    /// host tier (or refresh a parked one). Returns the parked bytes.
+    pub fn park(&mut self, session_id: &str) -> Result<usize> {
+        let j = self
+            .roundtrip(Json::obj().set("op", "park").set("session_id", session_id))?;
+        if j.get("ok").and_then(Json::as_str) != Some("parked") {
+            bail!(
+                "park failed: {}",
+                j.get("error").and_then(Json::as_str).unwrap_or("unknown")
+            );
+        }
+        Ok(j.get("parked_bytes").and_then(Json::as_usize).unwrap_or(0))
+    }
+
+    /// Blocking `drop` round-trip: discard a session's retained context.
+    pub fn drop_session(&mut self, session_id: &str) -> Result<()> {
+        let j = self
+            .roundtrip(Json::obj().set("op", "drop").set("session_id", session_id))?;
+        if j.get("ok").and_then(Json::as_str) != Some("dropped") {
+            bail!(
+                "drop failed: {}",
+                j.get("error").and_then(Json::as_str).unwrap_or("unknown")
+            );
+        }
+        Ok(())
     }
 }
 
@@ -648,5 +786,68 @@ mod tests {
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
         let j = respond(r#"{"no_op": 1}"#, &tx);
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        // Session ops require a session_id before touching the engine.
+        let j = respond(r#"{"op":"park"}"#, &tx);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        let j = respond(r#"{"op":"drop"}"#, &tx);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn session_id_roundtrips_in_generate_params() {
+        let mut p = GenerateParams::prompt("turn two");
+        p.session_id = Some("chat-42".into());
+        let j = p.to_json();
+        let q = GenerateParams::from_json(&j).unwrap();
+        assert_eq!(q.session_id.as_deref(), Some("chat-42"));
+        // Absent stays absent (one-shot requests are unchanged).
+        let bare = GenerateParams::from_json(
+            &Json::parse(r#"{"op":"generate","prompt":"x"}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(bare.session_id.is_none());
+    }
+
+    /// Satellite for the open ROADMAP item: the compaction and parking
+    /// counters must survive the server JSON boundary — both at the
+    /// dashboard top level and inside the nested engine snapshot.
+    #[test]
+    fn server_stats_json_roundtrips_compaction_and_park_counters() {
+        let mut engine = MetricsSnapshot::default();
+        engine.compaction_events = 7;
+        engine.lane_moves = 9;
+        engine.lane_move_bytes = 4096;
+        engine.park_events = 3;
+        engine.resume_events = 2;
+        engine.parked_bytes = 1234;
+        let s = ServerStats {
+            engine,
+            queued: 5,
+            active: 2,
+            idle_sessions: 1,
+            rejected: 4,
+            active_kv_bytes: 111,
+            active_view_bytes: 222,
+            compaction_events: 7,
+            lane_moves: 9,
+            lane_move_bytes: 4096,
+            park_events: 3,
+            resume_events: 2,
+            parked_bytes: 1234,
+            parked_sessions: 1,
+        };
+        let dumped = s.to_json().dump();
+        let back = Client::stats_from_json(&Json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(back.compaction_events, 7);
+        assert_eq!(back.lane_moves, 9);
+        assert_eq!(back.lane_move_bytes, 4096);
+        assert_eq!(back.park_events, 3);
+        assert_eq!(back.resume_events, 2);
+        assert_eq!(back.parked_bytes, 1234);
+        assert_eq!(back.parked_sessions, 1);
+        assert_eq!(back.idle_sessions, 1);
+        assert_eq!(back.engine, s.engine);
+        assert_eq!(back.queued, 5);
+        assert_eq!(back.active_view_bytes, 222);
     }
 }

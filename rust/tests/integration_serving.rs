@@ -172,6 +172,7 @@ fn batched_decode_matches_sequential_greedy() {
             opts: SessionOptions::policy(PolicyKind::WriteGated),
             sampler: SamplerKind::Greedy,
             seed: 0,
+            session_id: None,
         }));
     }
     let done = sched.run_to_completion(&mut engine).expect("batched run");
@@ -270,6 +271,7 @@ fn batched_prefill_matches_sequential_and_retire_triggers_defrag() {
         opts: SessionOptions::policy(pol),
         sampler: SamplerKind::Greedy,
         seed: 0,
+        session_id: None,
     };
     // Submit the long one and two shorts together: one tick admits all
     // three through prefill_batch (one group per bucket).
@@ -351,6 +353,314 @@ fn batched_prefill_matches_sequential_and_retire_triggers_defrag() {
     assert_eq!(engine.pooled_view_bytes(), 0, "pool must be trimmed after drain");
 }
 
+/// The PR 5 engine-level acceptance check: a session parked mid-decode
+/// and resumed into a fresh lane produces the identical greedy
+/// continuation as an unparked control, and every device residency class
+/// is released while parked. Also covers the multi-turn append path:
+/// resume-with-a-new-turn equals append-without-park token for token.
+#[test]
+fn park_resume_mid_decode_is_token_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir, EngineConfig::default()).expect("engine must load");
+    let mut rng = Rng::new(91);
+    let prompt = workload::gen_kv(&mut rng, 6, 5).prompt;
+    let toks = engine.tokenizer.encode(&prompt);
+    let turn2 = engine.tokenizer.encode("\nq: again\na: ");
+    let (n_before, n_after, n_turn2) = (5usize, 8usize, 6usize);
+
+    // Greedy decode `n` tokens through the batched (lane) path.
+    let decode_n = |engine: &mut Engine, sess: &mut wgkv::engine::Session, n: usize| {
+        let eos = engine.dims().eos;
+        let mut out = Vec::new();
+        let mut sampler = wgkv::model::Sampler::greedy();
+        for _ in 0..n {
+            let tok = sampler.sample(&sess.last_logits);
+            if tok == eos {
+                break;
+            }
+            out.push(tok);
+            engine
+                .decode_batch(&mut [&mut *sess], &[tok])
+                .expect("batched decode step");
+        }
+        out
+    };
+
+    // Control: never parked. Prefill, decode, append a turn, decode.
+    let mut control = engine.start_session(SessionOptions::policy(PolicyKind::WriteGated));
+    engine.prefill(&mut control, &toks).expect("control prefill");
+    let mut control_tokens = decode_n(&mut engine, &mut control, n_before + n_after);
+    engine.append_turn(&mut control, &turn2).expect("control append");
+    control_tokens.extend(decode_n(&mut engine, &mut control, n_turn2));
+    engine.release_lane(&mut control);
+    engine.trim_view_pool();
+
+    // Parked run: same prefix, park mid-decode, resume, finish, then a
+    // second park/resume around the appended turn.
+    let mut sess = engine.start_session(SessionOptions::policy(PolicyKind::WriteGated));
+    engine.prefill(&mut sess, &toks).expect("prefill");
+    let mut tokens = decode_n(&mut engine, &mut sess, n_before);
+    let resident_before = sess.resident_tokens();
+    let parks_before = engine.metrics.park_events;
+    let snap = engine.park_session(&mut sess).expect("park mid-decode");
+    assert_eq!(engine.metrics.park_events, parks_before + 1);
+    assert_eq!(snap.resident_tokens(), resident_before);
+    assert!(snap.parked_bytes() > 0);
+    // Every device residency class is gone while parked: the husk pins
+    // nothing and the pool trims to zero (its lane was released).
+    assert_eq!(sess.device_view_bytes(), 0);
+    assert!(sess.pool_lane().is_none());
+    assert!(sess.cache().is_none());
+    engine.trim_view_pool();
+    assert_eq!(engine.pooled_view_bytes(), 0, "no device bytes while parked");
+
+    let mut sess = engine.resume_session(snap, &[]).expect("resume mid-decode");
+    assert!(sess.pool_lane().is_some(), "resume re-checks out a lane");
+    tokens.extend(decode_n(&mut engine, &mut sess, n_after));
+
+    // Second round trip, this time carrying a new turn's tokens.
+    let snap = engine.park_session(&mut sess).expect("park between turns");
+    let mut sess = engine.resume_session(snap, &turn2).expect("resume with turn");
+    tokens.extend(decode_n(&mut engine, &mut sess, n_turn2));
+
+    assert_eq!(
+        engine.tokenizer.decode(&tokens),
+        engine.tokenizer.decode(&control_tokens),
+        "parked-and-resumed greedy continuation diverged from the unparked control"
+    );
+    assert!(engine.metrics.resume_events >= 2);
+    engine.release_lane(&mut sess);
+    engine.trim_view_pool();
+}
+
+/// The PR 5 scheduler-level acceptance check: under a budget that fits
+/// one large session but not two, an idle multi-turn session blocks the
+/// queue — the defer-only scheduler starved here — until the preemption
+/// phase parks it; the queued request then admits and completes while
+/// device bytes stay within `kv_byte_budget` every tick, and the parked
+/// session later resumes its next turn from the host tier.
+#[test]
+fn preemption_parks_the_idle_session_and_unblocks_the_queue() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir, EngineConfig::default()).expect("engine must load");
+    let mut rng = Rng::new(97);
+    let prompt = workload::gen_kv(&mut rng, 8, 6).prompt;
+    let n = engine.tokenizer.encode(&prompt).len();
+    let est = engine.prefill_byte_estimate(n);
+    let lane = engine.lane_view_bytes(engine.prefill_implied_capacity(n));
+    // Either session fits alone (worst case + its lane); both never do:
+    // the second admission models two lanes next to the first session's
+    // retained bytes, which always exceeds est + 2*lane.
+    let budget = est + 2 * lane;
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: 2,
+        kv_byte_budget: budget,
+        max_decode_batch: 2,
+        max_prefill_batch: 2,
+        park_byte_budget: 64 << 20,
+        park_idle_ticks: 10_000, // idle parking only via preemption here
+        ..SchedulerConfig::default()
+    });
+    let mk = |engine: &Engine, id: u64, text: &str, key: Option<&str>| Request {
+        id,
+        prompt: engine.tokenizer.encode(text),
+        max_new: 2,
+        opts: SessionOptions::policy(PolicyKind::FullCache),
+        sampler: SamplerKind::Greedy,
+        seed: 0,
+        session_id: key.map(str::to_string),
+    };
+
+    let check_budget = |engine: &Engine, sched: &Scheduler| {
+        let device = sched.active_kv_bytes() + sched.owned_view_bytes()
+            + engine.pooled_view_bytes();
+        assert!(
+            device <= budget,
+            "device bytes {device} exceed the kv budget {budget}"
+        );
+        assert!(
+            sched.parked_bytes() <= 64 << 20,
+            "parked bytes exceed the park budget"
+        );
+    };
+
+    // Turn 1 of the multi-turn session: completes and goes idle.
+    assert!(sched.submit(mk(&engine, 0, &prompt, Some("chat"))));
+    let mut done = Vec::new();
+    let mut ticks = 0;
+    while done.is_empty() {
+        done.extend(sched.step(&mut engine));
+        check_budget(&engine, &sched);
+        ticks += 1;
+        assert!(ticks < 1000, "turn 1 failed to complete");
+    }
+    assert!(done[0].error.is_none(), "turn 1: {:?}", done[0].error);
+    assert_eq!(sched.idle_sessions(), 1, "keyed session must go idle, not retire");
+    assert!(engine.pooled_view_bytes() > 0, "idle session keeps its lane warm");
+
+    // A large one-shot request cannot fit next to the idle session: the
+    // first tick must defer it (the pre-PR 5 scheduler stayed stuck
+    // here) and preempt-park the idle session instead.
+    assert!(sched.submit(mk(&engine, 1, &prompt, None)));
+    let parks_before = engine.metrics.park_events;
+    let stepped = sched.step(&mut engine);
+    assert!(stepped.is_empty(), "the blocked request cannot complete in one tick");
+    check_budget(&engine, &sched);
+    assert_eq!(sched.queued(), 1, "the blocked tick defers the queue");
+    assert_eq!(
+        engine.metrics.park_events,
+        parks_before + 1,
+        "budget pressure must preempt-park the idle session"
+    );
+    assert_eq!(sched.parked_sessions(), 1);
+    assert!(sched.parked_bytes() > 0);
+    assert_eq!(sched.idle_sessions(), 0);
+
+    // With the lane reclaimed the queue makes progress.
+    let mut done = Vec::new();
+    let mut ticks = 0;
+    while done.is_empty() {
+        done.extend(sched.step(&mut engine));
+        check_budget(&engine, &sched);
+        ticks += 1;
+        assert!(ticks < 1000, "parked bytes did not unblock the queue");
+    }
+    assert!(done[0].error.is_none(), "unblocked request: {:?}", done[0].error);
+    assert_eq!(done[0].id, 1);
+
+    // Turn 2 (a short follow-up) resumes the parked session from the
+    // host tier: its charge is the retained bytes plus the small turn,
+    // which fits the budget without the progress guarantee.
+    let resumes_before = engine.metrics.resume_events;
+    assert!(sched.submit(mk(&engine, 2, "\nq: again\na: ", Some("chat"))));
+    let mut done = Vec::new();
+    let mut ticks = 0;
+    while done.is_empty() {
+        done.extend(sched.step(&mut engine));
+        check_budget(&engine, &sched);
+        ticks += 1;
+        assert!(ticks < 1000, "turn 2 failed to resume");
+    }
+    assert!(done[0].error.is_none(), "turn 2: {:?}", done[0].error);
+    assert!(engine.metrics.resume_events > resumes_before);
+    assert_eq!(sched.parked_sessions(), 0, "the resumed blob leaves the store");
+}
+
+/// Satellite regression: a park that frees an *interior* lane (a bound
+/// peer above it) triggers compaction the same tick — the freed lane is
+/// reclaimed immediately, not pinned under the surviving high index.
+#[test]
+fn park_of_an_interior_lane_compacts_the_same_tick() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(&dir, EngineConfig::default()).expect("engine must load");
+    let mut rng = Rng::new(101);
+    let prompt = workload::gen_kv(&mut rng, 4, 4).prompt;
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: 4,
+        park_byte_budget: 64 << 20,
+        park_idle_ticks: 10_000,
+        ..SchedulerConfig::default()
+    });
+    let mk = |engine: &Engine, id: u64, key: &str| Request {
+        id,
+        prompt: engine.tokenizer.encode(&prompt),
+        max_new: 2,
+        opts: SessionOptions::policy(PolicyKind::WriteGated),
+        sampler: SamplerKind::Greedy,
+        seed: 0,
+        session_id: Some(key.to_string()),
+    };
+    // Two keyed sessions go idle, holding lanes 0 and 1.
+    assert!(sched.submit(mk(&engine, 0, "first")));
+    assert!(sched.submit(mk(&engine, 1, "second")));
+    let mut finished = 0;
+    let mut ticks = 0;
+    while finished < 2 {
+        finished += sched.step(&mut engine).len();
+        ticks += 1;
+        assert!(ticks < 1000, "setup turns failed");
+    }
+    assert_eq!(sched.idle_sessions(), 2);
+    let lanes_before = engine.view_pool().lane_count();
+    assert!(lanes_before >= 2);
+    let compactions_before = engine.metrics.compaction_events;
+
+    // Explicitly park "first" (the lower lane index): the freed interior
+    // lane must be reclaimed by the same call, not linger under the
+    // surviving session's higher index.
+    let bytes = sched
+        .park_session_now(&mut engine, "first")
+        .expect("explicit park of an idle session");
+    assert!(bytes > 0);
+    assert_eq!(
+        engine.view_pool().lane_count(),
+        lanes_before - 1,
+        "the interior lane must be reclaimed the same tick"
+    );
+    assert!(engine.metrics.compaction_events > compactions_before);
+
+    // The surviving session's remapped binding still works: its next
+    // turn appends and decodes cleanly.
+    assert!(sched.submit(mk(&engine, 2, "second")));
+    let mut done = Vec::new();
+    let mut ticks = 0;
+    while done.is_empty() {
+        done.extend(sched.step(&mut engine));
+        ticks += 1;
+        assert!(ticks < 1000, "survivor turn failed");
+    }
+    assert!(done[0].error.is_none(), "survivor: {:?}", done[0].error);
+}
+
+/// Multi-turn over the wire: session_id retention, explicit park/drop
+/// ops, and the parking counters surfacing in `stats`.
+#[test]
+fn server_multi_turn_session_with_park_and_drop_ops() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_cmds, addr) = boot(&dir, 4);
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let mut rng = Rng::new(103);
+    let task = workload::gen_kv(&mut rng, 5, 4).prompt;
+    let turn1 = GenerateParams {
+        prompt: task.clone(),
+        max_new: 4,
+        session_id: Some("conv".into()),
+        ..GenerateParams::default()
+    };
+    let c1 = client.generate(turn1).expect("turn 1");
+    assert!(c1.error.is_none());
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.idle_sessions, 1, "keyed session must idle between turns");
+
+    // Explicit park moves it to the host tier; stats see the bytes.
+    let parked = client.park("conv").expect("park op");
+    assert!(parked > 0);
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.parked_sessions, 1);
+    assert!(stats.parked_bytes > 0);
+    assert!(stats.park_events >= 1);
+
+    // Turn 2 resumes from the host tier; only the new turn is prefixed.
+    let turn2 = GenerateParams {
+        prompt: "\nq: again\na: ".into(),
+        max_new: 4,
+        session_id: Some("conv".into()),
+        ..GenerateParams::default()
+    };
+    let c2 = client.generate(turn2).expect("turn 2");
+    assert!(c2.error.is_none());
+    let stats = client.stats().expect("stats");
+    assert!(stats.resume_events >= 1);
+    assert_eq!(stats.parked_sessions, 0);
+
+    // Drop discards the retained context; a second drop is a clean error.
+    client.drop_session("conv").expect("drop op");
+    assert!(client.drop_session("conv").is_err(), "double drop must error");
+    // Unknown keys error for park too.
+    assert!(client.park("never-seen").is_err());
+}
+
 #[test]
 fn scheduler_respects_kv_budget_queueing() {
     let Some(dir) = artifacts_dir() else { return };
@@ -365,6 +675,7 @@ fn scheduler_respects_kv_budget_queueing() {
             max_queue: 64,
             max_decode_batch: 4,
             max_prefill_batch: 4,
+            ..SchedulerConfig::default()
         },
     );
     let mut replies = Vec::new();

@@ -1,0 +1,254 @@
+//! Property-based tests for the session parking tier: cache
+//! snapshot/restore round trips, pool-byte recovery while parked, and
+//! the [`ParkedStore`]'s budget/LRU/pinning contract.
+//!
+//! Four invariants from the Design 5 dataflow are checked over
+//! randomized workloads:
+//!
+//! 1. **Round-trip bit identity** — across random prefill/decode/evict
+//!    histories, `SequenceKvCache::restore(snapshot())` rebuilds an
+//!    execution view (K/V slots, mask, Quest page bounds) bit-identical
+//!    to the live cache's, with identical logical contents, stats, and
+//!    resident counter — and the restored image re-enters a pool lane
+//!    bit-identically through the ordinary wholesale sync path.
+//! 2. **Device bytes drop while parked** — parking releases the
+//!    session's lane; after compaction the pool pins strictly fewer
+//!    bytes, and the parked blob is charged to `park_byte_budget`
+//!    (never to the device budget), scaling with resident tokens, not
+//!    capacity.
+//! 3. **The budget is a hard bound and pinned blobs survive** — under
+//!    random insert/take/touch/pin traffic, `parked_bytes` never
+//!    exceeds `park_byte_budget` and a pinned (queued-resume) blob is
+//!    never evicted.
+//! 4. **Stale resumes are rejected cleanly** — a second take, or a take
+//!    after eviction/drop, returns `None` (no panic, nothing clobbered).
+
+use wgkv::kvcache::dual::CacheDims;
+use wgkv::kvcache::{CacheSnapshot, SequenceKvCache};
+use wgkv::prop_assert;
+use wgkv::runtime::device_cache::DeviceViewPool;
+use wgkv::runtime::host_tier::ParkedStore;
+use wgkv::runtime::tensor::Tensor;
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 6),
+        page_size: rng.usize(2, 5),
+    }
+}
+
+fn decoded(d: CacheDims, pos: i64, gate: f32) -> (Tensor, Tensor, Tensor) {
+    let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 * 0.7 + gate);
+    let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 * 0.3 - gate);
+    let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+    (k, v, g)
+}
+
+/// Drive a cache through a random history: decode inserts with mixed
+/// promotion gates, occasional evictions, occasional capacity growth.
+fn random_history(rng: &mut Rng, d: CacheDims, cache: &mut SequenceKvCache, steps: usize) {
+    let mut pos = 0i64;
+    for _ in 0..steps {
+        if cache.required_slots() > cache.capacity() {
+            let grown = cache.capacity() + d.page_size * 2;
+            cache.ensure_capacity(grown).unwrap();
+        }
+        let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
+        let (k, v, g) = decoded(d, pos, gate);
+        cache
+            .insert_decoded(&k, &v, &g, pos, |_, _, gg| gg >= 0.5)
+            .unwrap();
+        pos += 1;
+        if rng.bool(0.1) {
+            let l = rng.usize(0, d.n_layers);
+            let h = rng.usize(0, d.n_kv_heads);
+            let n = cache.global_len(l, h);
+            if n > 1 {
+                let keep: Vec<bool> = (0..n).map(|_| rng.bool(0.6)).collect();
+                cache.evict_global(l, h, &keep).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn park_resume_round_trip_is_bit_identical() {
+    forall(0x51, |rng| {
+        let d = dims(rng);
+        let cap = d.w_local + d.page_size * rng.usize(1, 4);
+        let mut cache = SequenceKvCache::new(d, cap).unwrap();
+        random_history(rng, d, &mut cache, rng.usize(0, 40));
+        let snap = cache.snapshot().unwrap();
+        prop_assert!(
+            snap.blob_bytes() == cache.snapshot_bytes(),
+            "hint {} != blob {}",
+            cache.snapshot_bytes(),
+            snap.blob_bytes()
+        );
+        let restored = SequenceKvCache::restore(&snap).unwrap();
+        prop_assert!(restored.capacity() == cache.capacity(), "capacity changed");
+        prop_assert!(restored.k_exec() == cache.k_exec(), "K view diverged");
+        prop_assert!(restored.v_exec() == cache.v_exec(), "V view diverged");
+        prop_assert!(restored.slot_mask() == cache.slot_mask(), "mask diverged");
+        prop_assert!(
+            restored.page_meta_tensors() == cache.page_meta_tensors(),
+            "Quest page bounds diverged"
+        );
+        prop_assert!(
+            restored.resident_tokens() == cache.resident_tokens(),
+            "resident counter diverged"
+        );
+        prop_assert!(restored.stats == cache.stats, "stats diverged");
+        prop_assert!(
+            restored.allocated_kv_bytes() == cache.allocated_kv_bytes(),
+            "paged bytes diverged"
+        );
+        prop_assert!(
+            snap.paged_kv_bytes() == restored.allocated_kv_bytes(),
+            "paged estimate must be exact for a restored cache"
+        );
+        // The round trip must not disturb *future* behavior: the same
+        // insert lands identically on both caches.
+        let mut live = cache;
+        let mut back = restored;
+        let (k, v, g) = decoded(d, 999, 0.9);
+        live.insert_decoded(&k, &v, &g, 999, |_, _, _| true).unwrap();
+        back.insert_decoded(&k, &v, &g, 999, |_, _, _| true).unwrap();
+        prop_assert!(back.k_exec() == live.k_exec(), "post-resume insert diverged");
+        prop_assert!(back.slot_mask() == live.slot_mask(), "post-resume mask diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn parking_releases_pool_bytes_and_resumes_into_an_identical_lane() {
+    forall(0x52, |rng| {
+        let d = dims(rng);
+        let cap = d.w_local + d.page_size * 2;
+        let mut pool = DeviceViewPool::new();
+        // A survivor session keeps the pool alive; the parked session
+        // releases its lane and the compaction reclaims it.
+        let mut survivor = SequenceKvCache::new(d, cap).unwrap();
+        let mut parked = SequenceKvCache::new(d, cap).unwrap();
+        random_history(rng, d, &mut parked, rng.usize(1, 20));
+        let survivor_lane = pool.checkout(d, survivor.capacity());
+        let parked_lane = pool.checkout(d, parked.capacity());
+        pool.sync_lane(survivor_lane, &mut survivor).unwrap();
+        pool.sync_lane(parked_lane, &mut parked).unwrap();
+        let lane_image: Vec<f32> = pool.lane_k(parked_lane).to_vec();
+        let before = pool.device_bytes();
+
+        // Park: snapshot, release the lane, compact at the boundary.
+        let snap = parked.snapshot().unwrap();
+        let mut store: ParkedStore<CacheSnapshot> = ParkedStore::new(1 << 20);
+        prop_assert!(store.would_fit(snap.blob_bytes()), "blob must fit a 1MiB tier");
+        store
+            .insert("s", snap, parked.snapshot_bytes(), true, 0)
+            .map_err(|_| "insert refused".to_string())?;
+        drop(parked); // paged pool freed with the cache
+        prop_assert!(pool.release(parked_lane), "live lane must release");
+        let report = pool.compact(cap);
+        prop_assert!(
+            pool.device_bytes() + report.freed == before,
+            "compaction accounting broken"
+        );
+        prop_assert!(
+            pool.device_bytes() < before,
+            "parking must shrink the pool ({} -> {})",
+            before,
+            pool.device_bytes()
+        );
+        prop_assert!(
+            store.parked_bytes() <= store.park_byte_budget(),
+            "host tier over budget"
+        );
+
+        // Resume: restore, checkout a fresh lane, wholesale sync — the
+        // staged image must equal the pre-park lane image's valid
+        // prefix (same capacity class, so full-width comparison holds).
+        let snap = store.take("s").ok_or("blob vanished")?;
+        let mut back = SequenceKvCache::restore(&snap).unwrap();
+        let lane = pool.checkout(d, back.capacity());
+        let r = pool.sync_lane(lane, &mut back).unwrap();
+        prop_assert!(r.full, "a restored cache must wholesale-sync its lane");
+        prop_assert!(
+            pool.lane_k(lane) == &lane_image[..],
+            "resumed lane image diverged from the pre-park image"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn park_budget_is_hard_and_pinned_blobs_survive() {
+    forall(0x53, |rng| {
+        let budget = rng.usize(64, 512);
+        let mut store: ParkedStore<usize> = ParkedStore::new(budget);
+        let mut pinned_alive: Vec<String> = Vec::new();
+        for t in 0..rng.usize(4, 40) as u64 {
+            match rng.usize(0, 4) {
+                0 | 1 => {
+                    let key = format!("s{}", rng.usize(0, 12));
+                    let bytes = rng.usize(1, budget / 2 + 2);
+                    let pin = rng.bool(0.3);
+                    if store.insert(&key, bytes, bytes, pin, t).is_ok() {
+                        pinned_alive.retain(|k| k != &key);
+                        if pin {
+                            pinned_alive.push(key);
+                        }
+                    }
+                }
+                2 => {
+                    let key = format!("s{}", rng.usize(0, 12));
+                    if store.take(&key).is_some() {
+                        pinned_alive.retain(|k| k != &key);
+                    }
+                    // A second take of the same key is always a clean None.
+                    prop_assert!(store.take(&key).is_none(), "double take accepted");
+                }
+                _ => {
+                    let key = format!("s{}", rng.usize(0, 12));
+                    store.touch(&key, t);
+                }
+            }
+            prop_assert!(
+                store.parked_bytes() <= store.park_byte_budget(),
+                "parked bytes {} exceed budget {}",
+                store.parked_bytes(),
+                store.park_byte_budget()
+            );
+            for k in &pinned_alive {
+                prop_assert!(
+                    store.contains(k),
+                    "pinned blob '{k}' was evicted (a queued resume lost its session)"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stale_resume_takes_are_rejected_cleanly() {
+    forall(0x54, |rng| {
+        let mut store: ParkedStore<u8> = ParkedStore::new(8);
+        store.insert("a", 1, 4, false, 0).map_err(|_| "insert a".to_string())?;
+        // Evict `a` by filling the store with unpinned traffic.
+        store.insert("b", 2, 8, false, 1).map_err(|_| "insert b".to_string())?;
+        prop_assert!(!store.contains("a"), "a must be LRU-evicted");
+        prop_assert!(store.take("a").is_none(), "evicted key must resume to None");
+        prop_assert!(store.take("b") == Some(2), "live key must resume");
+        prop_assert!(store.take("b").is_none(), "double resume must be rejected");
+        // remove() (explicit drop) leaves the same clean-None behavior.
+        store.insert("c", 3, rng.usize(1, 8), false, 2).map_err(|_| "insert c".to_string())?;
+        prop_assert!(store.remove("c").is_some());
+        prop_assert!(store.take("c").is_none(), "dropped key must resume to None");
+        prop_assert!(store.parked_bytes() == 0, "drained store must pin nothing");
+        Ok(())
+    });
+}

@@ -191,6 +191,19 @@ fn compaction_preserves_images_and_never_grows() {
                         pool.layout_epoch() == epoch,
                         "single-class compaction must not re-layout (epoch bumped)"
                     );
+                    // Batching the per-move staged copies into one pass
+                    // per tensor must not change the moved-byte
+                    // accounting: every move still ships exactly one
+                    // lane stride across the five staged tensors.
+                    prop_assert!(
+                        r.lane_move_bytes
+                            == r.remap.len() as u64
+                                * DeviceViewPool::lane_bytes(d, cap) as u64,
+                        "lane_move_bytes {} != {} moves x {} lane bytes",
+                        r.lane_move_bytes,
+                        r.remap.len(),
+                        DeviceViewPool::lane_bytes(d, cap)
+                    );
                     // Apply the remap exactly as the engine does; moved
                     // sessions' old ids must go stale.
                     for s in live.iter_mut() {
