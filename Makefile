@@ -6,7 +6,7 @@
 RUST_DIR := rust
 ARTIFACTS ?= $(RUST_DIR)/artifacts
 
-.PHONY: build test test-fast bench artifacts docs
+.PHONY: build test test-fast test-fault bench artifacts docs
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -29,13 +29,28 @@ test-fast:
 	cd $(RUST_DIR) && cargo test -q --lib \
 		--test prop_kvcache --test prop_policies \
 		--test prop_batching --test prop_prefill --test prop_pool \
-		--test prop_park
+		--test prop_park --test prop_spill
+
+# Fault drill: the whole fast tier re-run with the spill-I/O failpoint
+# matrix armed through the same env interface production honors
+# (WGKV_FAILPOINTS / WGKV_FAILPOINT_SEED). Code that only passes
+# fault-free does not pass this target; a panic anywhere under injected
+# faults fails it. Override the matrix: make test-fault FAULTS=...
+FAULTS ?= spill.write.short=0.3,spill.write.corrupt=0.15,spill.write.enospc=0.15,spill.write.slow=0.3,spill.write.crash=0.15,spill.read.err=0.3
+test-fault:
+	cd $(RUST_DIR) && \
+		WGKV_FAILPOINTS="$(FAULTS)" WGKV_FAILPOINT_SEED=48879 \
+		cargo test -q --lib \
+		--test prop_kvcache --test prop_policies \
+		--test prop_batching --test prop_prefill --test prop_pool \
+		--test prop_park --test prop_spill
 
 # Coordinator perf snapshot: prints the hot-path rows and writes
 # rust/BENCH_coordinator.json — machine-readable results plus the
 # persistent-view full-vs-delta upload-bytes counters, the PR 3
 # prefill-batch / defrag counters, the PR 4 lane-compaction counters,
-# and the PR 5 parking-tier counters, tracked across PRs. The greps
+# the PR 5 parking-tier counters, and the PR 6 spill-tier fault-drill
+# counters, tracked across PRs. The greps
 # keep the report's schema honest: a refactor that silently drops a
 # tracked counter fails the bench target, not a later PR's comparison.
 bench:
@@ -58,6 +73,18 @@ bench:
 		|| { echo "BENCH_coordinator.json: missing resume_events"; exit 1; }
 	@grep -q '"parked_bytes_peak"' $(RUST_DIR)/BENCH_coordinator.json \
 		|| { echo "BENCH_coordinator.json: missing parked_bytes_peak"; exit 1; }
+	@grep -q '"spill_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing spill_events"; exit 1; }
+	@grep -q '"promote_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing promote_events"; exit 1; }
+	@grep -q '"spilled_bytes_peak"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing spilled_bytes_peak"; exit 1; }
+	@grep -q '"io_faults_injected"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing io_faults_injected"; exit 1; }
+	@grep -q '"io_retries"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing io_retries"; exit 1; }
+	@grep -q '"quarantined_sessions"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing quarantined_sessions"; exit 1; }
 
 # AOT-lower the JAX model to HLO-text artifacts for the PJRT runtime.
 artifacts:

@@ -679,6 +679,171 @@ fn main() {
         report.counter("park_budget_ok", parked_peak <= park_budget);
     }
 
+    // --- disk spill tier (PR 6): the park sim extended to forced spill
+    // pressure under an armed failpoint matrix. Host and disk budgets
+    // are sized so the workload cannot fit either tier alone — parked
+    // blobs demote through the write-behind protocol (host copy pinned
+    // until Committed, authoritative again on Shed), the disk tier
+    // evicts/sheds at its bound, and injected faults (short write,
+    // latent corruption, ENOSPC, slow write, crash-before-rename, read
+    // error) must degrade into the documented ladder: commits promote
+    // bit-identical, sheds keep the host copy, corruption quarantines.
+    // Tracked every tick: host <= park_byte_budget and disk <=
+    // spill_byte_budget (the device <= kv_byte_budget bound is held by
+    // the park sim above, which owns the device tier).
+    {
+        use wgkv::engine::SessionSnapshot;
+        use wgkv::runtime::host_tier::ParkedStore;
+        use wgkv::runtime::spill::{SpillConfig, SpillError, SpillEvent, SpillMeta, SpillStore};
+        use wgkv::util::failpoint::Failpoints;
+
+        let mut rng = Rng::new(11);
+        let (k, v, g) = decoded(&mut rng, d);
+        let mut c = SequenceKvCache::new(d, 256).unwrap();
+        for pos in 0..96i64 {
+            c.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+        }
+        let snap = SessionSnapshot::from_cache(c.snapshot().unwrap());
+        let meta = SpillMeta {
+            paged_kv_bytes: snap.paged_kv_bytes(),
+            capacity: snap.capacity(),
+            required_slots: snap.required_slots(),
+        };
+        let payload = snap.to_bytes();
+        let blob = payload.len();
+        // Host tier holds 4 blobs, disk tier 3 — pushing 8 sessions
+        // through must evict and/or shed at both bounds.
+        let park_budget = 4 * blob;
+        let spill_budget = 3 * blob;
+        let fp = Failpoints::parse(
+            "spill.write.short=0.2,spill.write.corrupt=0.1,spill.write.enospc=0.1,\
+             spill.write.slow=0.2,spill.write.crash=0.1,spill.read.err=0.2",
+            0xBE2C11,
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join(format!("wgkv-bench-spill-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spill = SpillStore::new(SpillConfig::new(&dir, spill_budget), fp).unwrap();
+        let mut host: ParkedStore<Vec<u8>> = ParkedStore::new(park_budget);
+        let mut spilled_peak = 0usize;
+        let mut host_refused = 0u64;
+        let mut tombstoned = 0u64;
+        let mut next = 0usize;
+        let check_tiers = |host: &ParkedStore<Vec<u8>>, spill: &SpillStore, t: usize| {
+            assert!(
+                host.parked_bytes() <= host.park_byte_budget(),
+                "tick {t}: host bytes {} exceed park budget {park_budget}",
+                host.parked_bytes()
+            );
+            assert!(
+                spill.spilled_bytes() <= spill.spill_byte_budget(),
+                "tick {t}: disk bytes {} exceed spill budget {spill_budget}",
+                spill.spilled_bytes()
+            );
+        };
+        // Keep parking + demoting until the fault schedule lets at
+        // least one write-behind demotion commit (bounded: the armed
+        // probabilities leave ample headroom long before the cap).
+        for t in 0..64usize {
+            if spill.spill_events >= 1 && next >= 8 {
+                break;
+            }
+            // Park one more session into the host tier.
+            let key = format!("s{next}");
+            next += 1;
+            if host.insert(&key, payload.clone(), blob, false, t as u64).is_err() {
+                // Pinned (demote-pending) blobs can block the insert:
+                // the session stays on device — degradation, not loss.
+                host_refused += 1;
+            }
+            // Demotion scan: coldest unpinned host blobs start a
+            // write-behind demote; the host copy is pinned until the
+            // commit lands. A refused demote (Err) is a shed — the host
+            // copy simply stays authoritative.
+            for cold in host.coldest_unpinned(t as u64, 1, 2) {
+                let Some(bytes) = host.get(&cold).cloned() else { continue };
+                match spill.demote(&cold, bytes, meta, t as u64) {
+                    Ok(evicted) => {
+                        host.set_pinned(&cold, true);
+                        // Disk LRU victims are lost sessions: the
+                        // scheduler tombstones them for a clean error.
+                        tombstoned += evicted.len() as u64;
+                    }
+                    Err(_) => {}
+                }
+            }
+            // Tick upkeep: drain resolved demotions exactly like the
+            // scheduler — Committed drops the host copy, Shed unpins it.
+            for ev in spill.poll() {
+                match ev {
+                    SpillEvent::Committed { key } => {
+                        host.take(&key);
+                    }
+                    SpillEvent::Shed { key, .. } => {
+                        host.set_pinned(&key, false);
+                    }
+                }
+            }
+            spilled_peak = spilled_peak.max(spill.spilled_bytes());
+            check_tiers(&host, &spill, t);
+        }
+        for ev in spill.flush() {
+            match ev {
+                SpillEvent::Committed { key } => {
+                    host.take(&key);
+                }
+                SpillEvent::Shed { key, .. } => {
+                    host.set_pinned(&key, false);
+                }
+            }
+        }
+        spilled_peak = spilled_peak.max(spill.spilled_bytes());
+        check_tiers(&host, &spill, 64);
+        assert!(spill.spill_events >= 1, "no demotion ever committed under the matrix");
+
+        // Resume everything still on disk. A promote under faults may
+        // only end three ways: bit-identical bytes, a typed transient
+        // read error (entry kept), or checksum-detected corruption
+        // (quarantined). Junk bytes or a panic fail the bench.
+        let mut promoted_ok = 0u64;
+        let mut read_errors = 0u64;
+        for key in spill.coldest_unpinned(u64::MAX, 0, usize::MAX) {
+            match spill.promote(&key) {
+                Ok(back) => {
+                    assert_eq!(back, payload, "promoted blob diverged from the demoted bytes");
+                    promoted_ok += 1;
+                }
+                Err(SpillError::Io { .. }) => {
+                    assert!(spill.contains(&key), "a transient read failure must keep the blob");
+                    read_errors += 1;
+                }
+                Err(SpillError::Corrupt { .. }) => {} // quarantined, counted below
+                Err(SpillError::Gone { .. }) => panic!("resident blob '{key}' vanished"),
+            }
+        }
+        println!(
+            "spill sim: {} commits, {} sheds, {} disk evictions (tombstoned {}), {} promotes ok \
+             ({} transient read errors, {} quarantined), peak {} B <= {} B, {} injected faults, \
+             {} retries, host refused {}",
+            spill.spill_events, spill.shed_events, spill.evictions, tombstoned, promoted_ok,
+            read_errors, spill.quarantined, spilled_peak, spill_budget,
+            spill.io_faults_injected, spill.io_retries, host_refused
+        );
+        assert!(spill.io_faults_injected >= 1, "the armed matrix never fired");
+        report.counter("spill_events", spill.spill_events);
+        report.counter("promote_events", spill.promote_events);
+        report.counter("spill_shed_events", spill.shed_events);
+        report.counter("spill_evictions", spill.evictions);
+        report.counter("spilled_bytes_peak", spilled_peak);
+        report.counter("spill_byte_budget", spill_budget);
+        report.counter("spill_budget_ok", spilled_peak <= spill_budget);
+        report.counter("io_faults_injected", spill.io_faults_injected);
+        report.counter("io_retries", spill.io_retries);
+        report.counter("quarantined_sessions", spill.quarantined);
+        drop(spill);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // --- substrate: JSON codec + RNG (server protocol budget).
     {
         let payload = Json::obj()

@@ -59,6 +59,71 @@ impl PolicyKind {
         }
     }
 
+    /// Serialize into `w` (spill-tier wire format): a one-byte tag plus
+    /// the variant's payload.
+    pub fn encode_into(&self, w: &mut crate::util::codec::ByteWriter) {
+        match self {
+            PolicyKind::WriteGated => w.put_u8(0),
+            PolicyKind::WriteGatedTau(tau) => {
+                w.put_u8(1);
+                w.put_f32(*tau);
+            }
+            PolicyKind::FullCache => w.put_u8(2),
+            PolicyKind::LocalOnly { sink, recent } => {
+                w.put_u8(3);
+                w.put_usize(*sink);
+                w.put_usize(*recent);
+            }
+            PolicyKind::DuoAttention { retrieval, sink } => {
+                w.put_u8(4);
+                w.put_usize(retrieval.len());
+                for row in retrieval {
+                    w.put_bools(row);
+                }
+                w.put_usize(*sink);
+            }
+            PolicyKind::RandomSparsity { sparsity, seed } => {
+                w.put_u8(5);
+                w.put_f32(*sparsity);
+                w.put_u64(*seed);
+            }
+        }
+    }
+
+    /// Decode a policy written by [`Self::encode_into`]; an unknown tag
+    /// is a typed error (forward-compatibility guard).
+    pub fn decode(
+        r: &mut crate::util::codec::ByteReader<'_>,
+    ) -> crate::util::codec::CodecResult<Self> {
+        Ok(match r.get_u8("policy.tag")? {
+            0 => PolicyKind::WriteGated,
+            1 => PolicyKind::WriteGatedTau(r.get_f32("policy.tau")?),
+            2 => PolicyKind::FullCache,
+            3 => PolicyKind::LocalOnly {
+                sink: r.get_usize("policy.sink")?,
+                recent: r.get_usize("policy.recent")?,
+            },
+            4 => {
+                let n = r.get_usize("policy.retrieval.len")?;
+                let mut retrieval = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    retrieval.push(r.get_bools("policy.retrieval.row")?);
+                }
+                PolicyKind::DuoAttention { retrieval, sink: r.get_usize("policy.sink")? }
+            }
+            5 => PolicyKind::RandomSparsity {
+                sparsity: r.get_f32("policy.sparsity")?,
+                seed: r.get_u64("policy.seed")?,
+            },
+            tag => {
+                return Err(crate::util::codec::CodecError {
+                    what: "policy",
+                    detail: format!("unknown tag {tag}"),
+                })
+            }
+        })
+    }
+
     /// Build the stateful evaluator for a model.
     pub fn build(&self, dims: &ModelDims) -> AdmissionPolicy {
         AdmissionPolicy { kind: self.clone(), tau: match self {

@@ -74,6 +74,7 @@ use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{DecodeOut, ModelRuntime};
 use crate::selection::QuestConfig;
+use crate::util::codec::{ByteReader, ByteWriter, CodecError};
 
 /// Engine-level configuration.
 #[derive(Debug, Clone)]
@@ -341,11 +342,12 @@ impl SessionSnapshot {
         self.cache.resident_tokens()
     }
 
-    /// Test-only constructor: a snapshot carrying just a cache (no
-    /// composition or cursor state) — enough for store/routing unit
-    /// tests that never resume it through an engine.
-    #[cfg(test)]
-    pub(crate) fn for_tests(cache: CacheSnapshot) -> Self {
+    /// Store-level constructor: a snapshot carrying just a cache (no
+    /// composition or cursor state) — enough for spill/park store and
+    /// codec tests or benches that never resume it through an engine.
+    /// A snapshot built this way round-trips [`Self::to_bytes`] but
+    /// resumes as a fresh session would.
+    pub fn from_cache(cache: CacheSnapshot) -> Self {
         Self {
             cache,
             policy: PolicyKind::FullCache,
@@ -359,7 +361,131 @@ impl SessionSnapshot {
             released_view_stats: TransferStats::default(),
         }
     }
+
+    /// Store-level inverse of [`Self::from_cache`]: surrender the cache
+    /// image, discarding composition and cursor state. Spill/park store
+    /// tests and benches use it to rebuild a
+    /// [`crate::kvcache::SequenceKvCache`] without driving an
+    /// [`Engine`].
+    pub fn into_cache(self) -> CacheSnapshot {
+        self.cache
+    }
+
+    /// Test-only alias kept for existing unit tests.
+    #[cfg(test)]
+    pub(crate) fn for_tests(cache: CacheSnapshot) -> Self {
+        Self::from_cache(cache)
+    }
+
+    /// Serialize the whole session image to a stable little-endian byte
+    /// blob — the unit the disk spill tier stores
+    /// ([`crate::runtime::spill::SpillStore`]). Leads with a format
+    /// version so a future schema change degrades to a typed decode
+    /// error, never a misread session.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(self.parked_bytes() + 256);
+        w.put_u32(SNAPSHOT_FORMAT_VERSION);
+        self.cache.encode_into(&mut w);
+        self.policy.encode_into(&mut w);
+        match &self.quest {
+            None => w.put_bool(false),
+            Some(q) => {
+                w.put_bool(true);
+                q.encode_into(&mut w);
+            }
+        }
+        match &self.evictor {
+            None => w.put_bool(false),
+            Some(e) => {
+                w.put_bool(true);
+                e.encode_into(&mut w);
+            }
+        }
+        w.put_usize(self.pos);
+        w.put_usize(self.prompt_len);
+        w.put_f32s(&self.last_logits);
+        match &self.last_q {
+            None => w.put_bool(false),
+            Some(t) => {
+                w.put_bool(true);
+                t.encode_into(&mut w);
+            }
+        }
+        match &self.prefill_gates {
+            None => w.put_bool(false),
+            Some(t) => {
+                w.put_bool(true);
+                t.encode_into(&mut w);
+            }
+        }
+        self.released_view_stats.encode_into(&mut w);
+        w.into_bytes()
+    }
+
+    /// Decode a blob written by [`Self::to_bytes`]. Every field is
+    /// bounds-checked; corrupt or truncated bytes yield a typed error,
+    /// never a panic — the spill tier leans on this after its checksum
+    /// has already vouched for the bytes.
+    pub fn from_bytes(bytes: &[u8]) -> std::result::Result<Self, CodecError> {
+        let mut r = ByteReader::new(bytes);
+        let version = r.get_u32("snapshot.version")?;
+        if version != SNAPSHOT_FORMAT_VERSION {
+            return Err(CodecError {
+                what: "session snapshot",
+                detail: format!(
+                    "format version {version} (this build reads {SNAPSHOT_FORMAT_VERSION})"
+                ),
+            });
+        }
+        let cache = CacheSnapshot::decode(&mut r)?;
+        let policy = PolicyKind::decode(&mut r)?;
+        let quest = if r.get_bool("snapshot.has_quest")? {
+            Some(QuestConfig::decode(&mut r)?)
+        } else {
+            None
+        };
+        let evictor = if r.get_bool("snapshot.has_evictor")? {
+            Some(EvictorSnapshot::decode(&mut r)?)
+        } else {
+            None
+        };
+        let pos = r.get_usize("snapshot.pos")?;
+        let prompt_len = r.get_usize("snapshot.prompt_len")?;
+        let last_logits = r.get_f32s("snapshot.last_logits")?;
+        let last_q = if r.get_bool("snapshot.has_last_q")? {
+            Some(Tensor::decode(&mut r)?)
+        } else {
+            None
+        };
+        let prefill_gates = if r.get_bool("snapshot.has_prefill_gates")? {
+            Some(Tensor::decode(&mut r)?)
+        } else {
+            None
+        };
+        let released_view_stats = TransferStats::decode(&mut r)?;
+        if !r.is_exhausted() {
+            return Err(CodecError {
+                what: "session snapshot",
+                detail: format!("{} trailing bytes after a complete decode", r.remaining()),
+            });
+        }
+        Ok(Self {
+            cache,
+            policy,
+            quest,
+            evictor,
+            pos,
+            prompt_len,
+            last_logits,
+            last_q,
+            prefill_gates,
+            released_view_stats,
+        })
+    }
 }
+
+/// Version tag leading every serialized [`SessionSnapshot`].
+pub const SNAPSHOT_FORMAT_VERSION: u32 = 1;
 
 /// The serving engine. See module docs.
 pub struct Engine {

@@ -99,6 +99,52 @@ impl EvictorSnapshot {
     pub fn blob_bytes(&self) -> usize {
         self.window.iter().map(|t| t.numel()).sum::<usize>() * std::mem::size_of::<f32>()
     }
+
+    /// Serialize into `w` (spill-tier wire format).
+    pub fn encode_into(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.put_usize(self.cfg.budget_per_head);
+        w.put_f32(self.cfg.evict_frac);
+        w.put_usize(self.cfg.w_obs);
+        w.put_usize(self.cfg.w_pool);
+        w.put_usize(self.window.len());
+        for t in &self.window {
+            t.encode_into(w);
+        }
+        w.put_usize(self.next);
+        w.put_u64(self.triggers);
+        w.put_u64(self.evicted_tokens);
+    }
+
+    /// Decode a snapshot written by [`Self::encode_into`].
+    pub fn decode(
+        r: &mut crate::util::codec::ByteReader<'_>,
+    ) -> crate::util::codec::CodecResult<Self> {
+        let cfg = SnapKvConfig {
+            budget_per_head: r.get_usize("evictor.budget_per_head")?,
+            evict_frac: r.get_f32("evictor.evict_frac")?,
+            w_obs: r.get_usize("evictor.w_obs")?,
+            w_pool: r.get_usize("evictor.w_pool")?,
+        };
+        let n = r.get_usize("evictor.window.len")?;
+        let mut window = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            window.push(Tensor::decode(r)?);
+        }
+        let next = r.get_usize("evictor.next")?;
+        if n > 0 && next >= n.max(cfg.w_obs.max(1)) {
+            return Err(crate::util::codec::CodecError {
+                what: "evictor",
+                detail: format!("ring cursor {next} outside window of {n}"),
+            });
+        }
+        Ok(Self {
+            cfg,
+            window,
+            next,
+            triggers: r.get_u64("evictor.triggers")?,
+            evicted_tokens: r.get_u64("evictor.evicted_tokens")?,
+        })
+    }
 }
 
 /// Stateful evictor for one session.

@@ -254,6 +254,99 @@ impl CacheSnapshot {
             .sum();
         pages * ps * d.d_head * 2 * std::mem::size_of::<f32>()
     }
+
+    /// Serialize the snapshot into `w` (spill-tier wire format). The
+    /// encoding is deterministic: equal snapshots produce equal bytes,
+    /// so blob checksums double as content identity.
+    pub fn encode_into(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.put_usize(self.dims.n_layers);
+        w.put_usize(self.dims.n_kv_heads);
+        w.put_usize(self.dims.d_head);
+        w.put_usize(self.dims.w_local);
+        w.put_usize(self.dims.page_size);
+        w.put_usize(self.cap);
+        w.put_u64(self.stats.prefill_admitted);
+        w.put_u64(self.stats.prefill_discarded);
+        w.put_u64(self.stats.promotions);
+        w.put_u64(self.stats.discards);
+        w.put_u64(self.stats.evicted);
+        w.put_usize(self.heads.len());
+        for h in &self.heads {
+            w.put_f32s(&h.global_k);
+            w.put_f32s(&h.global_v);
+            w.put_f32s(&h.global_gate);
+            w.put_i64s(&h.global_pos);
+            w.put_bools(&h.ring_occupied);
+            w.put_f32s(&h.ring_k);
+            w.put_f32s(&h.ring_v);
+            w.put_f32s(&h.ring_gate);
+            w.put_i64s(&h.ring_pos);
+        }
+    }
+
+    /// Decode a snapshot written by [`Self::encode_into`], re-validating
+    /// the geometry/payload contract field by field so corrupt bytes
+    /// decode to a typed error instead of a snapshot that panics inside
+    /// [`SequenceKvCache::restore`].
+    pub fn decode(
+        r: &mut crate::util::codec::ByteReader<'_>,
+    ) -> crate::util::codec::CodecResult<Self> {
+        use crate::util::codec::CodecError;
+        let bad = |detail: String| CodecError { what: "cache snapshot", detail };
+        let dims = CacheDims {
+            n_layers: r.get_usize("dims.n_layers")?,
+            n_kv_heads: r.get_usize("dims.n_kv_heads")?,
+            d_head: r.get_usize("dims.d_head")?,
+            w_local: r.get_usize("dims.w_local")?,
+            page_size: r.get_usize("dims.page_size")?,
+        };
+        let cap = r.get_usize("cap")?;
+        let stats = CacheStats {
+            prefill_admitted: r.get_u64("stats.prefill_admitted")?,
+            prefill_discarded: r.get_u64("stats.prefill_discarded")?,
+            promotions: r.get_u64("stats.promotions")?,
+            discards: r.get_u64("stats.discards")?,
+            evicted: r.get_u64("stats.evicted")?,
+        };
+        let n_heads = r.get_usize("heads.len")?;
+        if n_heads != dims.n_heads_total() {
+            return Err(bad(format!(
+                "{} heads encoded, geometry wants {}",
+                n_heads,
+                dims.n_heads_total()
+            )));
+        }
+        let d = dims.d_head;
+        let mut heads = Vec::with_capacity(n_heads);
+        for i in 0..n_heads {
+            let h = HeadSnapshot {
+                global_k: r.get_f32s("head.global_k")?,
+                global_v: r.get_f32s("head.global_v")?,
+                global_gate: r.get_f32s("head.global_gate")?,
+                global_pos: r.get_i64s("head.global_pos")?,
+                ring_occupied: r.get_bools("head.ring_occupied")?,
+                ring_k: r.get_f32s("head.ring_k")?,
+                ring_v: r.get_f32s("head.ring_v")?,
+                ring_gate: r.get_f32s("head.ring_gate")?,
+                ring_pos: r.get_i64s("head.ring_pos")?,
+            };
+            let g = h.global_pos.len();
+            let occ = h.ring_occupied.iter().filter(|&&o| o).count();
+            if h.global_k.len() != g * d
+                || h.global_v.len() != g * d
+                || h.global_gate.len() != g
+                || h.ring_occupied.len() != dims.w_local
+                || h.ring_pos.len() != occ
+                || h.ring_k.len() != occ * d
+                || h.ring_v.len() != occ * d
+                || h.ring_gate.len() != occ
+            {
+                return Err(bad(format!("head {i}: inconsistent payload lengths")));
+            }
+            heads.push(h);
+        }
+        Ok(Self { dims, cap, stats, heads })
+    }
 }
 
 /// Per-sequence dual-cache state + execution view.

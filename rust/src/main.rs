@@ -15,6 +15,7 @@ use wgkv::engine::{Engine, EngineConfig};
 use wgkv::model::Sampler;
 use wgkv::scheduler::SchedulerConfig;
 use wgkv::server::{self, GenerateParams};
+use wgkv::util::failpoint::Failpoints;
 use wgkv::util::Args;
 use wgkv::workload;
 
@@ -25,6 +26,9 @@ USAGE:
   wgkv serve     [--artifacts DIR] [--addr HOST:PORT] [--max-active N] [--max-batch N]
                  [--max-prefill-batch N] [--kv-budget BYTES]
                  [--park-byte-budget BYTES] [--park-idle-ticks N]
+                 [--spill-dir DIR] [--spill-byte-budget BYTES]
+                 [--spill-after-ticks N] [--max-park-per-tick N]
+                 [--failpoints SPEC] [--failpoint-seed S]
   wgkv generate  [--artifacts DIR] --prompt TEXT [--max-new N] [--variant FILE] [POLICY]
   wgkv eval      [--artifacts DIR] [--instances N] [--seed S] [--variant FILE] [POLICY]
   wgkv costmodel [--model llama|qwen]
@@ -49,6 +53,20 @@ serve parking tier:
                             (default 256 MiB; 0 disables parking)
   --park-idle-ticks N       ticks an idle multi-turn session stays
                             device-resident before parking (default 8)
+
+serve spill tier (disk, below the host tier):
+  --spill-dir DIR           directory for spilled session blobs; the
+                            spill tier is off unless this is set
+  --spill-byte-budget BYTES disk budget for spilled blobs
+                            (default 1 GiB; 0 disables spilling)
+  --spill-after-ticks N     ticks a parked session stays host-resident
+                            before demoting to disk (default 4)
+  --max-park-per-tick N     max sessions parked per blocked scheduler
+                            tick (default 1; raise for bulk preemption)
+  --failpoints SPEC         arm deterministic spill-I/O fault injection,
+                            e.g. 'spill.write.enospc=0.2,spill.read.err=0.1'
+                            (testing only; also via WGKV_FAILPOINTS)
+  --failpoint-seed S        RNG seed for --failpoints (default 0x5EED)
 ";
 
 fn policy_params(args: &Args, prompt: String, max_new: usize) -> Result<GenerateParams> {
@@ -95,9 +113,31 @@ fn serve(args: &Args) -> Result<()> {
         max_prefill_batch: args.usize("max-prefill-batch", 4)?,
         park_byte_budget: args.usize("park-byte-budget", 256 << 20)?,
         park_idle_ticks: args.usize("park-idle-ticks", 8)?,
+        spill_byte_budget: args.usize("spill-byte-budget", 1 << 30)?,
+        spill_after_ticks: args.usize("spill-after-ticks", 4)?,
+        max_park_per_tick: args.usize("max-park-per-tick", 1)?,
         ..SchedulerConfig::default()
     };
-    let (cmds, _handle) = server::spawn_engine_thread(artifacts, EngineConfig::default(), cfg);
+    let spill = match args.str_opt("spill-dir") {
+        Some(dir) => {
+            // An explicit --failpoints flag wins over the env spec; both
+            // default to disarmed, so production serves fault-free.
+            let failpoints = match args.str_opt("failpoints") {
+                Some(spec) => {
+                    Failpoints::parse(&spec, args.u64("failpoint-seed", 0x5EED)?)
+                        .map_err(|e| anyhow::anyhow!("--failpoints: {e}"))?
+                }
+                None => Failpoints::from_env(),
+            };
+            Some(server::SpillSetup { dir: dir.into(), failpoints })
+        }
+        None => None,
+    };
+    let (cmds, _handle) = server::spawn_engine_thread_with_spill(
+        move || Engine::load(artifacts, EngineConfig::default()),
+        cfg,
+        spill,
+    );
     server::serve(&addr, cmds)
 }
 

@@ -164,6 +164,26 @@ pub struct EngineMetrics {
     /// [`crate::runtime::host_tier::ParkedStore`] (bounded by
     /// `park_byte_budget`, accounted separately from `kv_byte_budget`).
     pub parked_bytes: u64,
+    /// Session blobs committed to the disk spill tier (write-behind
+    /// demotions that reached their checksummed blob file).
+    pub spill_events: u64,
+    /// Session blobs promoted back from disk (checksum-verified reads).
+    pub promote_events: u64,
+    /// Disk bytes currently charged to the spill tier — a gauge the
+    /// scheduler refreshes every tick from its
+    /// [`crate::runtime::spill::SpillStore`] (bounded by
+    /// `spill_byte_budget`; includes in-flight write-behind blobs).
+    pub spilled_bytes: u64,
+    /// Demotions shed by the spill tier (full tier, permanent write
+    /// fault) — each one left the host copy authoritative.
+    pub spill_shed_events: u64,
+    /// Faults fired by the armed failpoint plan across spill I/O.
+    pub io_faults_injected: u64,
+    /// Transient spill I/O faults absorbed by bounded retry.
+    pub io_retries: u64,
+    /// Blobs that failed checksum/format validation at promote and were
+    /// quarantined (each surfaced exactly one per-session error).
+    pub quarantined_sessions: u64,
 }
 
 impl EngineMetrics {
@@ -208,6 +228,13 @@ impl EngineMetrics {
             park_events: self.park_events,
             resume_events: self.resume_events,
             parked_bytes: self.parked_bytes,
+            spill_events: self.spill_events,
+            promote_events: self.promote_events,
+            spilled_bytes: self.spilled_bytes,
+            spill_shed_events: self.spill_shed_events,
+            io_faults_injected: self.io_faults_injected,
+            io_retries: self.io_retries,
+            quarantined_sessions: self.quarantined_sessions,
         }
     }
 
@@ -258,6 +285,13 @@ pub struct MetricsSnapshot {
     pub park_events: u64,
     pub resume_events: u64,
     pub parked_bytes: u64,
+    pub spill_events: u64,
+    pub promote_events: u64,
+    pub spilled_bytes: u64,
+    pub spill_shed_events: u64,
+    pub io_faults_injected: u64,
+    pub io_retries: u64,
+    pub quarantined_sessions: u64,
 }
 
 impl MetricsSnapshot {
@@ -288,6 +322,13 @@ impl MetricsSnapshot {
             .set("park_events", self.park_events)
             .set("resume_events", self.resume_events)
             .set("parked_bytes", self.parked_bytes)
+            .set("spill_events", self.spill_events)
+            .set("promote_events", self.promote_events)
+            .set("spilled_bytes", self.spilled_bytes)
+            .set("spill_shed_events", self.spill_shed_events)
+            .set("io_faults_injected", self.io_faults_injected)
+            .set("io_retries", self.io_retries)
+            .set("quarantined_sessions", self.quarantined_sessions)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -318,6 +359,13 @@ impl MetricsSnapshot {
             park_events: f("park_events") as u64,
             resume_events: f("resume_events") as u64,
             parked_bytes: f("parked_bytes") as u64,
+            spill_events: f("spill_events") as u64,
+            promote_events: f("promote_events") as u64,
+            spilled_bytes: f("spilled_bytes") as u64,
+            spill_shed_events: f("spill_shed_events") as u64,
+            io_faults_injected: f("io_faults_injected") as u64,
+            io_retries: f("io_retries") as u64,
+            quarantined_sessions: f("quarantined_sessions") as u64,
         }
     }
 }
@@ -372,6 +420,13 @@ mod tests {
         let mut m = EngineMetrics::new();
         m.decode_step.record_us(100.0);
         m.generated_tokens = 1;
+        m.spill_events = 3;
+        m.promote_events = 2;
+        m.spilled_bytes = 4096;
+        m.spill_shed_events = 1;
+        m.io_faults_injected = 7;
+        m.io_retries = 5;
+        m.quarantined_sessions = 1;
         let s = m.snapshot();
         let j = s.to_json().dump();
         let back = MetricsSnapshot::from_json(&crate::util::json::Json::parse(&j).unwrap());

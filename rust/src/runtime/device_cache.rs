@@ -91,6 +91,28 @@ impl TransferStats {
         self.bytes_full_equiv += o.bytes_full_equiv;
         self.spans_applied += o.spans_applied;
     }
+
+    /// Serialize into `w` (spill-tier wire format).
+    pub fn encode_into(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.put_u64(self.full_uploads);
+        w.put_u64(self.delta_uploads);
+        w.put_u64(self.bytes_uploaded);
+        w.put_u64(self.bytes_full_equiv);
+        w.put_u64(self.spans_applied);
+    }
+
+    /// Decode counters written by [`Self::encode_into`].
+    pub fn decode(
+        r: &mut crate::util::codec::ByteReader<'_>,
+    ) -> crate::util::codec::CodecResult<Self> {
+        Ok(Self {
+            full_uploads: r.get_u64("xfer.full_uploads")?,
+            delta_uploads: r.get_u64("xfer.delta_uploads")?,
+            bytes_uploaded: r.get_u64("xfer.bytes_uploaded")?,
+            bytes_full_equiv: r.get_u64("xfer.bytes_full_equiv")?,
+            spans_applied: r.get_u64("xfer.spans_applied")?,
+        })
+    }
 }
 
 /// Outcome of one view or lane sync.

@@ -129,19 +129,6 @@ impl<B> ParkedStore<B> {
         pinned.saturating_add(bytes) <= self.budget
     }
 
-    fn evict_lru_unpinned(&mut self) -> Option<(String, B)> {
-        let key = self
-            .entries
-            .iter()
-            .filter(|(_, e)| !e.pinned)
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(k, _)| k.clone())?;
-        let e = self.entries.remove(&key).unwrap();
-        self.bytes -= e.bytes;
-        self.evictions += 1;
-        Some((key, e.blob))
-    }
-
     /// Park `blob` under `key` at the caller's tick `now`, charging
     /// `bytes` against the budget. Least-recently-used unpinned blobs are
     /// evicted until the blob fits; the evicted `(key, blob)` pairs are
@@ -149,6 +136,12 @@ impl<B> ParkedStore<B> {
     /// existing blob under the same key is replaced (its bytes returned
     /// first). Returns `Err(blob)` — store untouched — when the blob
     /// cannot fit even with every unpinned blob evicted.
+    ///
+    /// Eviction victims are *planned* before anything mutates, so a blob
+    /// that turns out not to fit is refused with the store intact — there
+    /// is no partially-evicted failure state (this used to be an
+    /// `unreachable!` arm; fault injection taught us to make the
+    /// impossible case a clean refusal instead).
     pub fn insert(
         &mut self,
         key: &str,
@@ -167,13 +160,37 @@ impl<B> ParkedStore<B> {
         if pinned_bytes.saturating_add(bytes) > self.budget {
             return Err(blob);
         }
+        // Plan the victim set against a projected byte count; mutate only
+        // once the plan is known to land the blob under budget.
+        let mut victims: Vec<String> = Vec::new();
+        let mut projected = self.bytes - replaced;
+        if projected.saturating_add(bytes) > self.budget {
+            let mut unpinned: Vec<(&String, u64, u64, usize)> = self
+                .entries
+                .iter()
+                .filter(|(k, e)| !e.pinned && k.as_str() != key)
+                .map(|(k, e)| (k, e.last_used.0, e.last_used.1, e.bytes))
+                .collect();
+            unpinned.sort_by_key(|&(_, t, s, _)| (t, s));
+            for (k, _, _, b) in unpinned {
+                if projected.saturating_add(bytes) <= self.budget {
+                    break;
+                }
+                projected -= b;
+                victims.push(k.clone());
+            }
+            if projected.saturating_add(bytes) > self.budget {
+                return Err(blob);
+            }
+        }
         self.entries.remove(key);
         self.bytes -= replaced;
         let mut evicted = Vec::new();
-        while self.bytes.saturating_add(bytes) > self.budget {
-            match self.evict_lru_unpinned() {
-                Some(kv) => evicted.push(kv),
-                None => unreachable!("pinned bytes alone were checked to fit"),
+        for k in victims {
+            if let Some(e) = self.entries.remove(&k) {
+                self.bytes -= e.bytes;
+                self.evictions += 1;
+                evicted.push((k, e.blob));
             }
         }
         self.seq += 1;
@@ -233,6 +250,23 @@ impl<B> ParkedStore<B> {
     /// Whether `key` is currently pinned (`None` when not parked).
     pub fn is_pinned(&self, key: &str) -> Option<bool> {
         self.entries.get(key).map(|e| e.pinned)
+    }
+
+    /// Keys of the coldest unpinned blobs — entries untouched for at
+    /// least `min_idle_ticks` of the caller's clock, least recently used
+    /// first, at most `limit` of them. The scheduler's spill demotion
+    /// policy scans this to pick write-behind candidates for the disk
+    /// tier ([`crate::runtime::spill::SpillStore`]); pinned blobs
+    /// (queued resumes) are never candidates.
+    pub fn coldest_unpinned(&self, now: u64, min_idle_ticks: u64, limit: usize) -> Vec<String> {
+        let mut cold: Vec<(u64, u64, &String)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| !e.pinned && now.saturating_sub(e.last_used.0) >= min_idle_ticks)
+            .map(|(k, e)| (e.last_used.0, e.last_used.1, k))
+            .collect();
+        cold.sort();
+        cold.into_iter().take(limit).map(|(_, _, k)| k.clone()).collect()
     }
 }
 
@@ -312,6 +346,38 @@ mod tests {
         assert!(evicted.is_empty());
         assert_eq!(s.parked_bytes(), 95);
         assert_eq!(s.take("a"), Some(2));
+    }
+
+    #[test]
+    fn coldest_unpinned_orders_by_lru_and_skips_pins() {
+        let mut s: ParkedStore<u32> = ParkedStore::new(1000);
+        s.insert("old", 1, 10, false, 0).unwrap();
+        s.insert("pinned-old", 2, 10, true, 0).unwrap();
+        s.insert("mid", 3, 10, false, 5).unwrap();
+        s.insert("hot", 4, 10, false, 9).unwrap();
+        // now=10, idle >= 4: "old" (10 idle) then "mid" (5 idle); "hot"
+        // (1 idle) too warm, the pinned blob never a candidate.
+        assert_eq!(s.coldest_unpinned(10, 4, 8), vec!["old", "mid"]);
+        assert_eq!(s.coldest_unpinned(10, 4, 1), vec!["old"], "limit must cap the scan");
+        assert!(s.coldest_unpinned(10, 100, 8).is_empty());
+        // Two same-tick inserts: insertion sequence breaks the tie.
+        let mut s2: ParkedStore<u32> = ParkedStore::new(1000);
+        s2.insert("first", 1, 10, false, 3).unwrap();
+        s2.insert("second", 2, 10, false, 3).unwrap();
+        assert_eq!(s2.coldest_unpinned(3, 0, 8), vec!["first", "second"]);
+    }
+
+    #[test]
+    fn refused_insert_leaves_store_intact() {
+        // A blob that cannot fit next to the pinned bytes is refused
+        // before any eviction is planned or applied.
+        let mut s: ParkedStore<u32> = ParkedStore::new(100);
+        s.insert("pin", 1, 60, true, 0).unwrap();
+        s.insert("u", 2, 30, false, 1).unwrap();
+        assert_eq!(s.insert("big", 9, 41, false, 2), Err(9));
+        assert!(s.contains("pin") && s.contains("u"));
+        assert_eq!(s.parked_bytes(), 90);
+        assert_eq!(s.evictions, 0, "a refused insert must evict nothing");
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod device_cache;
 pub mod host_tier;
 pub mod manifest;
 pub mod params;
+pub mod spill;
 pub mod tensor;
 
 use std::collections::BTreeMap;

@@ -1,0 +1,1105 @@
+//! Disk spill tier below the host parking store: fault-tolerant
+//! write-behind demotion of cold parked sessions.
+//!
+//! [`crate::runtime::host_tier::ParkedStore`] stops at host RAM; the
+//! ROADMAP's million-session target needs the cold tail durably off the
+//! heap. [`SpillStore`] is the fourth residency class: checksummed,
+//! versioned blob files under their own `spill_byte_budget`, demoted
+//! asynchronously (a single background writer thread) and promoted back
+//! through the existing wholesale lane-sync path on resume.
+//!
+//! **Durability discipline.** Every blob is written to a `.tmp` file and
+//! atomically renamed into place only after a full write — a reader never
+//! observes a torn blob under the final name. The file leads with a
+//! magic/version/length/FNV-1a-checksum header
+//! ([`crate::util::codec::fnv1a64`]), so corruption is *detected at
+//! promote*, quarantined (the file is renamed to `.quarantine` for
+//! postmortem), and surfaced as one typed [`SpillError::Corrupt`] — never
+//! a panic, never a silently amnesiac re-prefill. Stale `.tmp` and
+//! orphaned blob files from a previous process are swept at startup (the
+//! in-memory index does not persist, so they are unreachable by design).
+//!
+//! **Write-behind protocol.** `demote` charges the blob against the
+//! budget immediately and enqueues the write; the caller keeps its host
+//! copy until [`SpillStore::poll`] reports [`SpillEvent::Committed`].
+//! A write that fails permanently reports [`SpillEvent::Shed`] instead —
+//! the caller's host copy is still live, so a full disk degrades to
+//! "stop demoting" while the hot path keeps serving. Transient faults
+//! (short writes, rename races) retry with bounded backoff before giving
+//! up.
+//!
+//! **Fault injection.** Every I/O boundary consults a deterministic,
+//! seeded [`Failpoints`] instance (see the `FP_*` site constants):
+//! short write, corrupted payload, ENOSPC, slow write, crash between
+//! write and rename, and read errors. `make test-fault` arms the matrix
+//! via `WGKV_FAILPOINTS`; the property suite pins every class to a
+//! retry-success / clean-degradation / typed-error outcome.
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::util::codec::fnv1a64;
+use crate::util::failpoint::Failpoints;
+
+/// Failpoint site: the writer produces a torn `.tmp` (transient; retried).
+pub const FP_WRITE_SHORT: &str = "spill.write.short";
+/// Failpoint site: one payload byte is flipped before the write "succeeds"
+/// (latent corruption; caught by the checksum at promote).
+pub const FP_WRITE_CORRUPT: &str = "spill.write.corrupt";
+/// Failpoint site: the write fails with ENOSPC (permanent; demotion shed).
+pub const FP_WRITE_ENOSPC: &str = "spill.write.enospc";
+/// Failpoint site: the write stalls before starting (fault counted; the
+/// write itself still succeeds).
+pub const FP_WRITE_SLOW: &str = "spill.write.slow";
+/// Failpoint site: simulated crash between write and rename — the `.tmp`
+/// is left on disk (permanent; demotion shed, tmp swept at next start).
+pub const FP_WRITE_CRASH: &str = "spill.write.crash";
+/// Failpoint site: reading a committed blob fails (transient; retried).
+pub const FP_READ_ERR: &str = "spill.read.err";
+
+/// Leading bytes of every spill blob file.
+pub const BLOB_MAGIC: &[u8; 4] = b"WGSP";
+/// On-disk format version (bumped on any header/payload schema change).
+pub const BLOB_FORMAT_VERSION: u32 = 1;
+/// Header length: magic (4) + version (4) + payload length (8) +
+/// FNV-1a-64 checksum (8).
+pub const BLOB_HEADER_LEN: usize = 24;
+
+/// How long an injected "slow write" stalls (kept small so armed test
+/// suites stay fast while still exercising the path).
+const SLOW_FAULT_STALL: Duration = Duration::from_millis(2);
+
+/// Typed failure surface of the spill tier.
+#[derive(Debug)]
+pub enum SpillError {
+    /// The blob failed its magic/version/length/checksum validation. The
+    /// file has been renamed to `.quarantine` and the entry dropped; the
+    /// session is gone and the caller must surface one clean per-session
+    /// error (a later retry maps to [`SpillError::Gone`]).
+    Corrupt {
+        /// Session key of the quarantined blob.
+        key: String,
+        /// What the validator rejected.
+        detail: String,
+    },
+    /// The key is not spilled: never demoted, already promoted, evicted,
+    /// or previously quarantined.
+    Gone {
+        /// The unknown session key.
+        key: String,
+    },
+    /// Reading the blob failed even after bounded retries. The entry is
+    /// kept — a later promote may succeed once the fault clears.
+    Io {
+        /// Session key of the unreadable blob.
+        key: String,
+        /// The underlying I/O failure.
+        detail: String,
+    },
+}
+
+impl fmt::Display for SpillError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpillError::Corrupt { key, detail } => {
+                write!(f, "spilled session '{key}' is corrupt (quarantined): {detail}")
+            }
+            SpillError::Gone { key } => write!(f, "session '{key}' is not in the spill tier"),
+            SpillError::Io { key, detail } => {
+                write!(f, "reading spilled session '{key}' failed: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+/// Spill-tier tuning knobs.
+#[derive(Debug, Clone)]
+pub struct SpillConfig {
+    /// Directory holding the blob files (created if missing).
+    pub dir: PathBuf,
+    /// Hard byte budget across committed + in-flight payload bytes.
+    pub byte_budget: usize,
+    /// Bounded retries for transient write/read faults.
+    pub max_retries: u32,
+    /// Linear backoff unit between retries (attempt `n` sleeps `n` units).
+    pub retry_backoff_ms: u64,
+}
+
+impl SpillConfig {
+    /// A config with default retry policy (3 retries, 1 ms backoff unit).
+    pub fn new(dir: impl Into<PathBuf>, byte_budget: usize) -> Self {
+        Self { dir: dir.into(), byte_budget, max_retries: 3, retry_backoff_ms: 1 }
+    }
+}
+
+/// Byte/capacity model of a spilled session, captured at demote time so
+/// the scheduler's admission planner can cost a queued resume without
+/// touching the disk.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillMeta {
+    /// Worst-case paged KV bytes the resumed session will pin
+    /// (mirror of `SessionSnapshot::paged_kv_bytes`).
+    pub paged_kv_bytes: usize,
+    /// Execution capacity the session parked at.
+    pub capacity: usize,
+    /// Exec slots the restored cache needs before any decode step.
+    pub required_slots: usize,
+}
+
+/// Outcome of a resolved write-behind demotion, drained via
+/// [`SpillStore::poll`] / [`SpillStore::flush`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpillEvent {
+    /// The blob is durably on disk; the caller may now drop its host
+    /// copy.
+    Committed {
+        /// Session key whose demotion landed.
+        key: String,
+    },
+    /// The demotion failed permanently (ENOSPC, crash-before-rename,
+    /// retries exhausted). The entry is gone from the spill tier; the
+    /// caller's host copy is still authoritative and stays in the host
+    /// tier (graceful degradation, re-queued by a later demotion scan).
+    Shed {
+        /// Session key whose demotion failed.
+        key: String,
+        /// Why the write gave up.
+        detail: String,
+    },
+}
+
+enum BlobState {
+    /// Write-behind in flight; the full file image is still in RAM so a
+    /// promote-before-commit is served without touching the disk.
+    Pending { seq: u64, image: Arc<Vec<u8>> },
+    /// Durably renamed into place.
+    Committed,
+}
+
+struct Entry {
+    file: PathBuf,
+    /// Payload bytes charged against the budget (header overhead and
+    /// filesystem slack are noise at any realistic blob size).
+    bytes: usize,
+    pinned: bool,
+    /// (caller tick, insertion sequence) — LRU orders by this pair.
+    last_used: (u64, u64),
+    meta: SpillMeta,
+    state: BlobState,
+}
+
+struct WriteJob {
+    seq: u64,
+    key: String,
+    tmp: PathBuf,
+    fin: PathBuf,
+    image: Arc<Vec<u8>>,
+}
+
+struct WriteDone {
+    seq: u64,
+    key: String,
+    fin: PathBuf,
+    result: Result<(), String>,
+    faults: u64,
+    retries: u64,
+}
+
+/// Disk spill tier: LRU blob store under a hard byte budget with
+/// asynchronous, fault-injected, atomically-renamed writes. See the
+/// module docs for the protocol.
+pub struct SpillStore {
+    dir: PathBuf,
+    budget: usize,
+    max_retries: u32,
+    retry_backoff: Duration,
+    entries: BTreeMap<String, Entry>,
+    bytes: usize,
+    seq: u64,
+    job_seq: u64,
+    next_file_id: u64,
+    jobs: Option<mpsc::Sender<WriteJob>>,
+    done_rx: mpsc::Receiver<WriteDone>,
+    worker: Option<thread::JoinHandle<()>>,
+    read_fp: Failpoints,
+    /// Lifetime count of demotions durably committed.
+    pub spill_events: u64,
+    /// Lifetime count of successful promotes.
+    pub promote_events: u64,
+    /// Lifetime count of blobs LRU-evicted to make room.
+    pub evictions: u64,
+    /// Lifetime count of demotions shed (refused at admission or failed
+    /// permanently in the writer) — each one left the host copy intact.
+    pub shed_events: u64,
+    /// Lifetime count of corrupt blobs quarantined at promote.
+    pub quarantined: u64,
+    /// Lifetime count of bounded retries across writes and reads.
+    pub io_retries: u64,
+    /// Lifetime count of injected faults observed (write + read side).
+    pub io_faults_injected: u64,
+    /// High-water mark of [`Self::spilled_bytes`].
+    pub peak_bytes: usize,
+    /// Stale `.tmp`/orphan blob files swept at startup.
+    pub recovered_files: u64,
+    /// Writes that landed for an entry that had already been promoted,
+    /// re-demoted, or removed — their orphan files were deleted.
+    pub stale_writes_cleaned: u64,
+}
+
+impl SpillStore {
+    /// Open (and sweep) `cfg.dir`, then start the write-behind worker.
+    /// `failpoints` arms the store's I/O boundaries; the worker thread
+    /// gets an independent fork of the stream so the two sides'
+    /// schedules stay deterministic regardless of interleaving.
+    pub fn new(cfg: SpillConfig, mut failpoints: Failpoints) -> std::io::Result<Self> {
+        fs::create_dir_all(&cfg.dir)?;
+        // Crash recovery: the in-memory index does not persist, so any
+        // pre-existing tmp or blob file is unreachable — sweep them.
+        // Quarantined files are kept for postmortem.
+        let mut recovered = 0u64;
+        for dent in fs::read_dir(&cfg.dir)? {
+            let Ok(dent) = dent else { continue };
+            let name = dent.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".tmp") || name.ends_with(".bin") {
+                if fs::remove_file(dent.path()).is_ok() {
+                    recovered += 1;
+                }
+            }
+        }
+        let writer_fp = failpoints.fork(0x5B11);
+        let (jobs_tx, jobs_rx) = mpsc::channel::<WriteJob>();
+        let (done_tx, done_rx) = mpsc::channel::<WriteDone>();
+        let max_retries = cfg.max_retries;
+        let backoff = Duration::from_millis(cfg.retry_backoff_ms);
+        let worker = thread::Builder::new()
+            .name("wgkv-spill-writer".into())
+            .spawn(move || run_writer(jobs_rx, done_tx, writer_fp, max_retries, backoff))?;
+        Ok(Self {
+            dir: cfg.dir,
+            budget: cfg.byte_budget,
+            max_retries: cfg.max_retries,
+            retry_backoff: backoff,
+            entries: BTreeMap::new(),
+            bytes: 0,
+            seq: 0,
+            job_seq: 0,
+            next_file_id: 0,
+            jobs: Some(jobs_tx),
+            done_rx,
+            worker: Some(worker),
+            read_fp: failpoints,
+            spill_events: 0,
+            promote_events: 0,
+            evictions: 0,
+            shed_events: 0,
+            quarantined: 0,
+            io_retries: 0,
+            io_faults_injected: 0,
+            peak_bytes: 0,
+            recovered_files: recovered,
+            stale_writes_cleaned: 0,
+        })
+    }
+
+    /// The tier's hard byte budget.
+    pub fn spill_byte_budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Payload bytes currently charged (committed + in-flight; always
+    /// `<=` the budget — demotions that cannot fit are shed, never
+    /// admitted over).
+    pub fn spilled_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of spilled blobs (committed + in-flight).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is spilled.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when `key` is spilled (committed or in flight).
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// The admission-planner byte model captured at demote time.
+    pub fn meta(&self, key: &str) -> Option<SpillMeta> {
+        self.entries.get(key).map(|e| e.meta)
+    }
+
+    /// Bytes charged for `key`'s blob, if spilled.
+    pub fn bytes_of(&self, key: &str) -> Option<usize> {
+        self.entries.get(key).map(|e| e.bytes)
+    }
+
+    /// Demotions still in flight in the writer.
+    pub fn pending_demotions(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| matches!(e.state, BlobState::Pending { .. }))
+            .count()
+    }
+
+    /// Whether a blob of `bytes` could be admitted right now, evicting
+    /// every committed unpinned blob if necessary (pinned and in-flight
+    /// blobs are incompressible).
+    pub fn would_fit(&self, bytes: usize) -> bool {
+        let incompressible: usize = self
+            .entries
+            .values()
+            .filter(|e| e.pinned || matches!(e.state, BlobState::Pending { .. }))
+            .map(|e| e.bytes)
+            .sum();
+        incompressible.saturating_add(bytes) <= self.budget
+    }
+
+    /// Pin or unpin `key` (a queued resume pins: the blob is neither an
+    /// LRU victim nor a demotion-scan candidate while promised). `false`
+    /// when the key is not spilled.
+    pub fn set_pinned(&mut self, key: &str, pinned: bool) -> bool {
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.pinned = pinned;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether `key` is currently pinned (`None` when not spilled).
+    pub fn is_pinned(&self, key: &str) -> Option<bool> {
+        self.entries.get(key).map(|e| e.pinned)
+    }
+
+    /// Refresh `key`'s recency to `now`. `false` when not spilled.
+    pub fn touch(&mut self, key: &str, now: u64) -> bool {
+        self.seq += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = (now, self.seq);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Start a write-behind demotion of `payload` under `key` at the
+    /// caller's tick `now`, charging `payload.len()` against the budget
+    /// immediately. Committed unpinned LRU blobs are evicted (files
+    /// deleted) until the blob fits; the evicted keys are returned so
+    /// the caller can tombstone the lost sessions. Returns
+    /// `Err(payload)` — store untouched, shed counted — when the blob
+    /// cannot fit even then: the caller keeps the host copy (graceful
+    /// degradation under a full tier).
+    ///
+    /// The caller must keep its host copy until [`Self::poll`] reports
+    /// [`SpillEvent::Committed`] for `key`.
+    pub fn demote(
+        &mut self,
+        key: &str,
+        payload: Vec<u8>,
+        meta: SpillMeta,
+        now: u64,
+    ) -> Result<Vec<String>, Vec<u8>> {
+        let bytes = payload.len();
+        let replaced: usize = self.entries.get(key).map(|e| e.bytes).unwrap_or(0);
+        let incompressible: usize = self
+            .entries
+            .iter()
+            .filter(|(k, e)| {
+                k.as_str() != key
+                    && (e.pinned || matches!(e.state, BlobState::Pending { .. }))
+            })
+            .map(|(_, e)| e.bytes)
+            .sum();
+        if incompressible.saturating_add(bytes) > self.budget {
+            self.shed_events += 1;
+            return Err(payload);
+        }
+        // Plan the victim set before mutating (same discipline as the
+        // host tier's insert): committed, unpinned, LRU-first.
+        let mut victims: Vec<String> = Vec::new();
+        let mut projected = self.bytes - replaced;
+        if projected.saturating_add(bytes) > self.budget {
+            let mut evictable: Vec<(u64, u64, usize, &String)> = self
+                .entries
+                .iter()
+                .filter(|(k, e)| {
+                    k.as_str() != key
+                        && !e.pinned
+                        && matches!(e.state, BlobState::Committed)
+                })
+                .map(|(k, e)| (e.last_used.0, e.last_used.1, e.bytes, k))
+                .collect();
+            evictable.sort();
+            for (_, _, b, k) in evictable {
+                if projected.saturating_add(bytes) <= self.budget {
+                    break;
+                }
+                projected -= b;
+                victims.push(k.clone());
+            }
+            if projected.saturating_add(bytes) > self.budget {
+                self.shed_events += 1;
+                return Err(payload);
+            }
+        }
+        let Some(jobs) = self.jobs.clone() else {
+            // Writer gone (only possible mid-teardown): degrade, do not
+            // accept a demotion that can never commit.
+            self.shed_events += 1;
+            return Err(payload);
+        };
+        // Commit the plan: replace the old entry (a stale in-flight
+        // write for this key is cleaned up by seq mismatch in poll),
+        // evict the victims, enqueue the write.
+        if let Some(old) = self.entries.remove(key) {
+            self.bytes -= old.bytes;
+            if matches!(old.state, BlobState::Committed) {
+                let _ = fs::remove_file(&old.file);
+            }
+        }
+        let mut evicted = Vec::new();
+        for k in victims {
+            if let Some(e) = self.entries.remove(&k) {
+                self.bytes -= e.bytes;
+                self.evictions += 1;
+                let _ = fs::remove_file(&e.file);
+                evicted.push(k);
+            }
+        }
+        let image = Arc::new(encode_blob_image(&payload));
+        drop(payload);
+        let id = self.next_file_id;
+        self.next_file_id += 1;
+        let fin = self.dir.join(format!("blob-{id:08}.bin"));
+        let tmp = self.dir.join(format!("blob-{id:08}.tmp"));
+        self.job_seq += 1;
+        self.seq += 1;
+        let seq = self.job_seq;
+        self.entries.insert(
+            key.to_string(),
+            Entry {
+                file: fin.clone(),
+                bytes,
+                pinned: false,
+                last_used: (now, self.seq),
+                meta,
+                state: BlobState::Pending { seq, image: Arc::clone(&image) },
+            },
+        );
+        self.bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        let _ = jobs.send(WriteJob { seq, key: key.to_string(), tmp, fin, image });
+        Ok(evicted)
+    }
+
+    fn handle_done(&mut self, done: WriteDone, events: &mut Vec<SpillEvent>) {
+        self.io_faults_injected += done.faults;
+        self.io_retries += done.retries;
+        let current = matches!(
+            self.entries.get(&done.key),
+            Some(Entry { state: BlobState::Pending { seq, .. }, .. }) if *seq == done.seq
+        );
+        if !current {
+            // The entry was promoted, re-demoted, or removed while the
+            // write was in flight: whatever landed under the final name
+            // is an orphan.
+            let _ = fs::remove_file(&done.fin);
+            self.stale_writes_cleaned += 1;
+            return;
+        }
+        match done.result {
+            Ok(()) => {
+                if let Some(e) = self.entries.get_mut(&done.key) {
+                    e.state = BlobState::Committed;
+                }
+                self.spill_events += 1;
+                events.push(SpillEvent::Committed { key: done.key });
+            }
+            Err(detail) => {
+                if let Some(e) = self.entries.remove(&done.key) {
+                    self.bytes -= e.bytes;
+                }
+                self.shed_events += 1;
+                events.push(SpillEvent::Shed { key: done.key, detail });
+            }
+        }
+    }
+
+    /// Drain resolved write-behind demotions without blocking. The
+    /// scheduler calls this once per tick; each event tells it whether
+    /// the host copy may be dropped ([`SpillEvent::Committed`]) or must
+    /// stay ([`SpillEvent::Shed`]).
+    pub fn poll(&mut self) -> Vec<SpillEvent> {
+        let mut events = Vec::new();
+        while let Ok(done) = self.done_rx.try_recv() {
+            self.handle_done(done, &mut events);
+        }
+        events
+    }
+
+    /// Block until every in-flight demotion resolves (tests, benches,
+    /// orderly shutdown). If the writer dies or wedges, the remaining
+    /// pending entries are shed — degradation, not deadlock.
+    pub fn flush(&mut self) -> Vec<SpillEvent> {
+        let mut events = Vec::new();
+        while self.pending_demotions() > 0 {
+            match self.done_rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(done) => self.handle_done(done, &mut events),
+                Err(_) => {
+                    let stuck: Vec<String> = self
+                        .entries
+                        .iter()
+                        .filter(|(_, e)| matches!(e.state, BlobState::Pending { .. }))
+                        .map(|(k, _)| k.clone())
+                        .collect();
+                    for key in stuck {
+                        if let Some(e) = self.entries.remove(&key) {
+                            self.bytes -= e.bytes;
+                        }
+                        self.shed_events += 1;
+                        events.push(SpillEvent::Shed {
+                            key,
+                            detail: "write-behind worker unresponsive".into(),
+                        });
+                    }
+                    break;
+                }
+            }
+        }
+        events
+    }
+
+    /// Promote: remove and return `key`'s payload bytes.
+    ///
+    /// * still in flight — served from the in-RAM image, no disk I/O;
+    /// * committed — read back, validated against the header (magic,
+    ///   version, length, checksum), with transient read faults retried
+    ///   up to the configured bound;
+    /// * corrupt — quarantined and surfaced as [`SpillError::Corrupt`];
+    /// * unknown — [`SpillError::Gone`] (stale resume, evicted, or
+    ///   previously quarantined).
+    pub fn promote(&mut self, key: &str) -> Result<Vec<u8>, SpillError> {
+        enum Plan {
+            Ram(Arc<Vec<u8>>),
+            Disk(PathBuf),
+        }
+        let plan = match self.entries.get(key) {
+            None => return Err(SpillError::Gone { key: key.to_string() }),
+            Some(e) => match &e.state {
+                BlobState::Pending { image, .. } => Plan::Ram(Arc::clone(image)),
+                BlobState::Committed => Plan::Disk(e.file.clone()),
+            },
+        };
+        let image: Vec<u8> = match plan {
+            Plan::Ram(image) => {
+                // The in-flight write will eventually land a file for an
+                // entry that no longer exists; poll's seq check deletes
+                // it then.
+                if let Some(e) = self.entries.remove(key) {
+                    self.bytes -= e.bytes;
+                }
+                self.promote_events += 1;
+                return Ok(image[BLOB_HEADER_LEN..].to_vec());
+            }
+            Plan::Disk(file) => {
+                let mut attempt = 0u32;
+                loop {
+                    let injected = self.read_fp.should_fire(FP_READ_ERR);
+                    if injected {
+                        self.io_faults_injected += 1;
+                    }
+                    let res: std::io::Result<Vec<u8>> = if injected {
+                        Err(std::io::Error::new(
+                            std::io::ErrorKind::Other,
+                            "injected read fault",
+                        ))
+                    } else {
+                        fs::read(&file)
+                    };
+                    match res {
+                        Ok(data) => break data,
+                        Err(_) if attempt < self.max_retries => {
+                            attempt += 1;
+                            self.io_retries += 1;
+                            thread::sleep(self.retry_backoff * attempt);
+                        }
+                        Err(e) => {
+                            // Entry kept: the fault may clear.
+                            return Err(SpillError::Io {
+                                key: key.to_string(),
+                                detail: format!("{}: {e}", file.display()),
+                            });
+                        }
+                    }
+                }
+            }
+        };
+        match validate_blob_image(&image) {
+            Ok(payload) => {
+                let payload = payload.to_vec();
+                if let Some(e) = self.entries.remove(key) {
+                    self.bytes -= e.bytes;
+                    let _ = fs::remove_file(&e.file);
+                }
+                self.promote_events += 1;
+                Ok(payload)
+            }
+            Err(detail) => {
+                if let Some(e) = self.entries.remove(key) {
+                    self.bytes -= e.bytes;
+                    let quarantine = e.file.with_extension("quarantine");
+                    let _ = fs::rename(&e.file, &quarantine);
+                }
+                self.quarantined += 1;
+                Err(SpillError::Corrupt { key: key.to_string(), detail })
+            }
+        }
+    }
+
+    /// Drop `key`'s blob without counting a promote (explicit client
+    /// `drop`, or a scheduler cancellation). Returns whether the key was
+    /// present.
+    pub fn remove(&mut self, key: &str) -> bool {
+        match self.entries.remove(key) {
+            Some(e) => {
+                self.bytes -= e.bytes;
+                if matches!(e.state, BlobState::Committed) {
+                    let _ = fs::remove_file(&e.file);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Keys of the coldest unpinned *committed* blobs (candidates for
+    /// future tier descent or diagnostics), LRU-first, at most `limit`.
+    pub fn coldest_unpinned(&self, now: u64, min_idle_ticks: u64, limit: usize) -> Vec<String> {
+        let mut cold: Vec<(u64, u64, &String)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                !e.pinned
+                    && matches!(e.state, BlobState::Committed)
+                    && now.saturating_sub(e.last_used.0) >= min_idle_ticks
+            })
+            .map(|(k, e)| (e.last_used.0, e.last_used.1, k))
+            .collect();
+        cold.sort();
+        cold.into_iter().take(limit).map(|(_, _, k)| k.clone()).collect()
+    }
+
+    /// The directory the store writes under.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        // Close the job channel so the worker's recv loop ends, then
+        // join it — leaking a writer thread would leave tmp files racing
+        // a future store over the same directory.
+        self.jobs.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Build the on-disk image: header (magic, version, payload length,
+/// FNV-1a-64 checksum) followed by the payload.
+fn encode_blob_image(payload: &[u8]) -> Vec<u8> {
+    let mut image = Vec::with_capacity(BLOB_HEADER_LEN + payload.len());
+    image.extend_from_slice(BLOB_MAGIC);
+    image.extend_from_slice(&BLOB_FORMAT_VERSION.to_le_bytes());
+    image.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    image.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    image.extend_from_slice(payload);
+    image
+}
+
+/// Validate a blob image read back from disk; returns the payload slice
+/// or a human-readable rejection.
+fn validate_blob_image(image: &[u8]) -> Result<&[u8], String> {
+    if image.len() < BLOB_HEADER_LEN {
+        return Err(format!("file too short ({} bytes < {BLOB_HEADER_LEN} header)", image.len()));
+    }
+    if &image[0..4] != BLOB_MAGIC {
+        return Err(format!("bad magic {:02x?}", &image[0..4]));
+    }
+    let version = u32::from_le_bytes([image[4], image[5], image[6], image[7]]);
+    if version != BLOB_FORMAT_VERSION {
+        return Err(format!("format version {version} (this build reads {BLOB_FORMAT_VERSION})"));
+    }
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&image[8..16]);
+    let len = u64::from_le_bytes(b) as usize;
+    if image.len() != BLOB_HEADER_LEN + len {
+        return Err(format!(
+            "payload length {len} but file carries {} payload bytes",
+            image.len() - BLOB_HEADER_LEN
+        ));
+    }
+    b.copy_from_slice(&image[16..24]);
+    let want = u64::from_le_bytes(b);
+    let got = fnv1a64(&image[BLOB_HEADER_LEN..]);
+    if got != want {
+        return Err(format!("checksum mismatch (stored {want:#018x}, computed {got:#018x})"));
+    }
+    Ok(&image[BLOB_HEADER_LEN..])
+}
+
+/// The write-behind worker: one job at a time, in order, so an armed
+/// failpoint schedule is a deterministic function of the demotion order.
+fn run_writer(
+    jobs: mpsc::Receiver<WriteJob>,
+    done: mpsc::Sender<WriteDone>,
+    mut fp: Failpoints,
+    max_retries: u32,
+    backoff: Duration,
+) {
+    while let Ok(job) = jobs.recv() {
+        let faults_before = fp.fired();
+        let mut retries = 0u64;
+        let mut attempt = 0u32;
+        let result = loop {
+            match attempt_write(&job, &mut fp) {
+                Ok(()) => break Ok(()),
+                Err(WriteFault { transient: true, detail }) if attempt < max_retries => {
+                    attempt += 1;
+                    retries += 1;
+                    thread::sleep(backoff * attempt);
+                    let _ = detail;
+                }
+                Err(WriteFault { detail, .. }) => break Err(detail),
+            }
+        };
+        let msg = WriteDone {
+            seq: job.seq,
+            key: job.key,
+            fin: job.fin,
+            result,
+            faults: fp.fired() - faults_before,
+            retries,
+        };
+        if done.send(msg).is_err() {
+            return; // store dropped; nothing left to report to
+        }
+    }
+}
+
+struct WriteFault {
+    transient: bool,
+    detail: String,
+}
+
+fn transient(detail: String) -> WriteFault {
+    WriteFault { transient: true, detail }
+}
+
+fn permanent(detail: String) -> WriteFault {
+    WriteFault { transient: false, detail }
+}
+
+/// One write attempt: stall/ENOSPC/corrupt/short/crash failpoints in a
+/// fixed order, then the real write-then-rename.
+fn attempt_write(job: &WriteJob, fp: &mut Failpoints) -> Result<(), WriteFault> {
+    if fp.should_fire(FP_WRITE_SLOW) {
+        thread::sleep(SLOW_FAULT_STALL);
+    }
+    if fp.should_fire(FP_WRITE_ENOSPC) {
+        return Err(permanent("no space left on device (injected)".into()));
+    }
+    let corrupted: Vec<u8>;
+    let mut image: &[u8] = &job.image;
+    if fp.should_fire(FP_WRITE_CORRUPT) && image.len() > BLOB_HEADER_LEN {
+        // Flip one payload bit and let the write "succeed": the latent
+        // corruption is only caught by the checksum at promote.
+        let mut c = image.to_vec();
+        let idx = BLOB_HEADER_LEN + (c.len() - BLOB_HEADER_LEN) / 2;
+        c[idx] ^= 0x40;
+        corrupted = c;
+        image = &corrupted;
+    }
+    let short = fp.should_fire(FP_WRITE_SHORT);
+    let write_res: std::io::Result<()> = (|| {
+        let mut f = fs::File::create(&job.tmp)?;
+        if short {
+            f.write_all(&image[..image.len() / 2])?;
+        } else {
+            f.write_all(image)?;
+        }
+        f.sync_all()
+    })();
+    if let Err(e) = write_res {
+        // Real ENOSPC is permanent (retrying cannot free the disk);
+        // everything else gets the transient retry path.
+        let is_enospc = e.raw_os_error() == Some(28);
+        let _ = fs::remove_file(&job.tmp);
+        let fault = format!("write {}: {e}", job.tmp.display());
+        return Err(if is_enospc { permanent(fault) } else { transient(fault) });
+    }
+    if short {
+        // A torn tmp never reaches the final name: the length check
+        // fails before rename and the attempt retries.
+        let _ = fs::remove_file(&job.tmp);
+        return Err(transient("short write (torn tmp, length check failed)".into()));
+    }
+    if fp.should_fire(FP_WRITE_CRASH) {
+        // Simulated crash between write and rename: the tmp stays on
+        // disk (the next store's startup sweep reclaims it) and the
+        // demotion fails permanently.
+        return Err(permanent("crash before rename (injected)".into()));
+    }
+    fs::rename(&job.tmp, &job.fin)
+        .map_err(|e| transient(format!("rename {}: {e}", job.fin.display())))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("wgkv-spill-ut-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    fn store(tag: &str, budget: usize, fp: Failpoints) -> SpillStore {
+        SpillStore::new(SpillConfig::new(tdir(tag), budget), fp).expect("open spill store")
+    }
+
+    #[test]
+    fn demote_commit_promote_round_trips_bytes() {
+        let mut s = store("roundtrip", 1 << 20, Failpoints::disarmed());
+        let payload: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let meta = SpillMeta { paged_kv_bytes: 7, capacity: 64, required_slots: 9 };
+        s.demote("sess", payload.clone(), meta, 0).expect("demote admitted");
+        assert_eq!(s.spilled_bytes(), payload.len());
+        assert!(s.contains("sess"));
+        assert_eq!(s.meta("sess"), Some(meta));
+        let events = s.flush();
+        assert_eq!(events, vec![SpillEvent::Committed { key: "sess".into() }]);
+        assert_eq!(s.spill_events, 1);
+        let back = s.promote("sess").expect("promote");
+        assert_eq!(back, payload, "payload must round-trip bit-identically");
+        assert_eq!(s.promote_events, 1);
+        assert_eq!(s.spilled_bytes(), 0);
+        assert!(matches!(s.promote("sess"), Err(SpillError::Gone { .. })));
+    }
+
+    #[test]
+    fn promote_while_pending_is_served_from_ram() {
+        let mut fp = Failpoints::disarmed();
+        fp.arm(FP_WRITE_SLOW, 1.0); // give the promote a head start
+        let mut s = store("pending", 1 << 20, fp);
+        let payload = vec![42u8; 512];
+        s.demote("sess", payload.clone(), SpillMeta::default(), 0).unwrap();
+        let back = s.promote("sess").expect("promote from RAM");
+        assert_eq!(back, payload);
+        // The in-flight write lands a file for a dead entry; poll must
+        // clean it up via the seq check.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while s.stale_writes_cleaned == 0 {
+            s.poll();
+            assert!(std::time::Instant::now() < deadline, "stale write never resolved");
+            thread::sleep(Duration::from_millis(1));
+        }
+        let stray: Vec<_> = fs::read_dir(s.dir())
+            .unwrap()
+            .filter_map(|d| d.ok())
+            .filter(|d| d.file_name().to_string_lossy().ends_with(".bin"))
+            .collect();
+        assert!(stray.is_empty(), "orphan blob not cleaned: {stray:?}");
+    }
+
+    #[test]
+    fn budget_is_hard_and_refused_demotions_are_shed() {
+        let mut s = store("budget", 100, Failpoints::disarmed());
+        s.demote("a", vec![0; 60], SpillMeta::default(), 0).unwrap();
+        s.flush();
+        s.demote("b", vec![0; 30], SpillMeta::default(), 1).unwrap();
+        s.flush();
+        // 60 more: evicts the committed LRU "a"; b survives.
+        let evicted = s.demote("c", vec![0; 60], SpillMeta::default(), 2).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert!(s.spilled_bytes() <= s.spill_byte_budget());
+        s.flush();
+        // Pinned blobs are incompressible: an unfittable demotion sheds.
+        assert!(s.set_pinned("b", true));
+        assert!(s.set_pinned("c", true));
+        let refused = s.demote("d", vec![0; 20], SpillMeta::default(), 3);
+        assert!(refused.is_err(), "over-pinned tier must shed");
+        assert_eq!(s.shed_events, 1);
+        assert!(s.spilled_bytes() <= s.spill_byte_budget());
+    }
+
+    #[test]
+    fn flipped_byte_is_quarantined_with_a_typed_error() {
+        let mut s = store("corrupt", 1 << 20, Failpoints::disarmed());
+        s.demote("sess", (0..128u8).collect(), SpillMeta::default(), 0).unwrap();
+        s.flush();
+        // Flip one payload byte on disk behind the store's back.
+        let file: PathBuf = fs::read_dir(s.dir())
+            .unwrap()
+            .filter_map(|d| d.ok())
+            .map(|d| d.path())
+            .find(|p| p.to_string_lossy().ends_with(".bin"))
+            .expect("committed blob on disk");
+        let mut data = fs::read(&file).unwrap();
+        let idx = BLOB_HEADER_LEN + 13;
+        data[idx] ^= 0x01;
+        fs::write(&file, &data).unwrap();
+        match s.promote("sess") {
+            Err(SpillError::Corrupt { key, detail }) => {
+                assert_eq!(key, "sess");
+                assert!(detail.contains("checksum"), "detail: {detail}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        assert_eq!(s.quarantined, 1);
+        assert!(!file.exists(), "corrupt blob must leave the live namespace");
+        assert!(
+            file.with_extension("quarantine").exists(),
+            "corrupt blob must be kept for postmortem"
+        );
+        assert!(matches!(s.promote("sess"), Err(SpillError::Gone { .. })));
+    }
+
+    #[test]
+    fn injected_corruption_is_caught_at_promote() {
+        let mut fp = Failpoints::disarmed();
+        fp.arm(FP_WRITE_CORRUPT, 1.0);
+        let mut s = store("inj-corrupt", 1 << 20, fp);
+        s.demote("sess", vec![7u8; 256], SpillMeta::default(), 0).unwrap();
+        let events = s.flush();
+        assert_eq!(
+            events,
+            vec![SpillEvent::Committed { key: "sess".into() }],
+            "corruption is latent: the write itself succeeds"
+        );
+        assert!(s.io_faults_injected >= 1);
+        assert!(matches!(s.promote("sess"), Err(SpillError::Corrupt { .. })));
+        assert_eq!(s.quarantined, 1);
+    }
+
+    #[test]
+    fn short_writes_retry_to_success() {
+        let mut fp = Failpoints::disarmed();
+        fp.arm(FP_WRITE_SHORT, 0.5);
+        let mut s = store("short", 1 << 20, fp);
+        let mut committed = 0;
+        for i in 0..16 {
+            let key = format!("s{i}");
+            let payload = vec![i as u8; 200];
+            s.demote(&key, payload.clone(), SpillMeta::default(), i as u64).unwrap();
+            for ev in s.flush() {
+                if matches!(ev, SpillEvent::Committed { .. }) {
+                    committed += 1;
+                    assert_eq!(s.promote(&key).expect("intact blob"), payload);
+                }
+            }
+        }
+        assert!(committed >= 8, "p=0.5 with 3 retries should mostly commit ({committed}/16)");
+        assert!(s.io_faults_injected > 0, "faults must be observed");
+        assert!(s.io_retries > 0, "retries must be counted");
+    }
+
+    #[test]
+    fn enospc_sheds_and_the_host_copy_survives() {
+        let mut fp = Failpoints::disarmed();
+        fp.arm(FP_WRITE_ENOSPC, 1.0);
+        let mut s = store("enospc", 1 << 20, fp);
+        s.demote("sess", vec![1u8; 128], SpillMeta::default(), 0).unwrap();
+        let events = s.flush();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            SpillEvent::Shed { key, detail } => {
+                assert_eq!(key, "sess");
+                assert!(detail.contains("space"), "detail: {detail}");
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert_eq!(s.shed_events, 1);
+        assert_eq!(s.spilled_bytes(), 0, "a shed demotion must uncharge its bytes");
+        assert!(!s.contains("sess"));
+    }
+
+    #[test]
+    fn crash_before_rename_sheds_and_the_next_store_sweeps_the_tmp() {
+        let dir = tdir("crash");
+        let mut fp = Failpoints::disarmed();
+        fp.arm(FP_WRITE_CRASH, 1.0);
+        let mut s =
+            SpillStore::new(SpillConfig::new(dir.clone(), 1 << 20), fp).expect("open");
+        s.demote("sess", vec![9u8; 64], SpillMeta::default(), 0).unwrap();
+        let events = s.flush();
+        assert!(matches!(&events[0], SpillEvent::Shed { .. }));
+        let tmps = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|d| d.ok())
+            .filter(|d| d.file_name().to_string_lossy().ends_with(".tmp"))
+            .count();
+        assert_eq!(tmps, 1, "the crash site must leave its tmp");
+        drop(s);
+        let s2 = SpillStore::new(SpillConfig::new(dir, 1 << 20), Failpoints::disarmed())
+            .expect("reopen");
+        assert_eq!(s2.recovered_files, 1, "startup sweep must reclaim the tmp");
+    }
+
+    #[test]
+    fn read_faults_retry_then_surface_a_typed_io_error() {
+        // p=1.0 exhausts every retry: typed Io error, entry kept.
+        let mut fp = Failpoints::disarmed();
+        fp.arm(FP_READ_ERR, 1.0);
+        let mut s = store("readerr", 1 << 20, fp);
+        s.demote("sess", vec![3u8; 64], SpillMeta::default(), 0).unwrap();
+        s.flush();
+        match s.promote("sess") {
+            Err(SpillError::Io { key, .. }) => assert_eq!(key, "sess"),
+            other => panic!("expected Io, got {other:?}"),
+        }
+        assert!(s.io_retries >= 3);
+        assert!(s.contains("sess"), "an unreadable entry must be kept for later");
+        // Disarm: the same promote now succeeds (the fault cleared).
+        s.read_fp.disarm(FP_READ_ERR);
+        assert!(s.promote("sess").is_ok());
+    }
+
+    #[test]
+    fn remove_deletes_the_file_and_double_remove_is_clean() {
+        let mut s = store("remove", 1 << 20, Failpoints::disarmed());
+        s.demote("sess", vec![5u8; 64], SpillMeta::default(), 0).unwrap();
+        s.flush();
+        assert!(s.remove("sess"));
+        assert!(!s.remove("sess"), "double remove must be a clean no-op");
+        assert_eq!(s.spilled_bytes(), 0);
+        let bins = fs::read_dir(s.dir())
+            .unwrap()
+            .filter_map(|d| d.ok())
+            .filter(|d| d.file_name().to_string_lossy().ends_with(".bin"))
+            .count();
+        assert_eq!(bins, 0, "remove must delete the committed file");
+    }
+}

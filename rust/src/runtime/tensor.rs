@@ -118,6 +118,32 @@ impl Tensor {
     }
 }
 
+impl Tensor {
+    /// Serialize shape + payload into `w` (spill-tier wire format).
+    pub fn encode_into(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.put_usizes(&self.shape);
+        w.put_f32s(&self.data);
+    }
+
+    /// Decode a tensor written by [`Self::encode_into`], re-validating
+    /// the shape/payload contract so corrupt bytes cannot construct an
+    /// inconsistent tensor.
+    pub fn decode(
+        r: &mut crate::util::codec::ByteReader<'_>,
+    ) -> crate::util::codec::CodecResult<Self> {
+        let shape = r.get_usizes("tensor.shape")?;
+        let data = r.get_f32s("tensor.data")?;
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(crate::util::codec::CodecError {
+                what: "tensor",
+                detail: format!("shape {:?} wants {} elements, payload has {}", shape, numel, data.len()),
+            });
+        }
+        Ok(Self { shape, data })
+    }
+}
+
 /// Argmax over a logits slice (greedy sampling helper).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;

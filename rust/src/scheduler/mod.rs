@@ -69,6 +69,24 @@
 //! the parked (or idle) cache is restored and the new turn's tokens are
 //! appended through the decode path instead of re-prefilling the whole
 //! conversation.
+//!
+//! **The spill tier** (optional, [`Scheduler::attach_spill`]) extends
+//! the placement ladder below the host tier: device pool → host
+//! [`ParkedStore`] → disk [`crate::runtime::spill::SpillStore`]. Parked
+//! blobs that sat cold for `spill_after_ticks` ticks (continuation-free
+//! only — a preempted generation's live sampler state never serializes)
+//! are *demoted* through a write-behind protocol: the serialized
+//! snapshot is enqueued to a background writer, the host copy stays
+//! pinned until the checksummed blob file **commits** (atomic
+//! write-then-rename), and only then is the host copy dropped and its
+//! `park_byte_budget` bytes recovered. A failed or shed write leaves
+//! the host copy authoritative — degradation, never data loss. A
+//! resume for a spilled key *promotes* the blob (read, checksum-verify,
+//! decode) back through the normal wholesale lane-sync restore path; a
+//! corrupted blob is quarantined and surfaces exactly one clean
+//! per-session error instead of a panic or a silent amnesiac
+//! re-prefill. Every spill I/O boundary is threaded with deterministic
+//! fault injection ([`crate::util::failpoint::Failpoints`]).
 #![warn(missing_docs)]
 
 use std::collections::{BTreeMap, VecDeque};
@@ -79,6 +97,8 @@ use anyhow::Result;
 use crate::engine::{Engine, Session, SessionOptions, SessionSnapshot};
 use crate::model::{Sampler, SamplerKind};
 use crate::runtime::host_tier::ParkedStore;
+use crate::runtime::spill::{SpillConfig, SpillError, SpillEvent, SpillMeta, SpillStore};
+use crate::util::failpoint::Failpoints;
 
 /// Scheduler limits.
 #[derive(Debug, Clone, Copy)]
@@ -107,6 +127,19 @@ pub struct SchedulerConfig {
     /// bound, warm for its next turn) before it is parked to host; 0
     /// parks at the first boundary after the turn completes.
     pub park_idle_ticks: usize,
+    /// Disk-byte budget of the spill tier
+    /// ([`crate::runtime::spill::SpillStore`]) — accounted separately
+    /// from both `kv_byte_budget` and `park_byte_budget`; 0 disables
+    /// demotion entirely (parked blobs stay host-resident). The store
+    /// itself must also be attached via [`Scheduler::attach_spill`].
+    pub spill_byte_budget: usize,
+    /// Ticks a parked blob stays host-resident without a touch before
+    /// the demotion scan offers it to the spill tier.
+    pub spill_after_ticks: usize,
+    /// Bulk-preemption width: max sessions parked by the preemption
+    /// phase — and max parked blobs demoted to disk — per tick; 0 is
+    /// treated as 1 (the pre-spill single-park behavior).
+    pub max_park_per_tick: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -119,6 +152,9 @@ impl Default for SchedulerConfig {
             max_prefill_batch: 4,
             park_byte_budget: 256 << 20,
             park_idle_ticks: 8,
+            spill_byte_budget: 0,
+            spill_after_ticks: 4,
+            max_park_per_tick: 1,
         }
     }
 }
@@ -228,8 +264,12 @@ enum ResumeState {
     Busy,
     /// Idle tier, device-resident, at this index.
     IdleAt(usize),
-    /// Host parking tier.
+    /// Host parking tier. While a demotion write is in flight the key
+    /// exists in *both* the host and disk tiers; the host copy wins (a
+    /// resume from it is free) and the stale disk side is cleaned up.
     Parked,
+    /// Disk spill tier only — the host copy was dropped at commit.
+    Spilled,
     /// Nowhere — a fresh key (or one whose blob was dropped/evicted).
     Unknown,
 }
@@ -431,6 +471,12 @@ pub struct Scheduler {
     /// The host parking tier: serialized session blobs under
     /// `park_byte_budget`, LRU-evicted, pinned while a resume is queued.
     parked: ParkedStore<ParkedEntry>,
+    /// The disk spill tier, when attached: checksummed blob files under
+    /// `spill_byte_budget`, written behind by a background thread.
+    spill: Option<SpillStore>,
+    /// Keys whose demotion write is in flight: the host copy is pinned
+    /// (authoritative) until the spill store reports `Committed`.
+    pending_demote: Vec<String>,
     /// Monotone tick counter (drives idle limits and the park LRU).
     tick: u64,
     /// Keys of sessions the park LRU evicted, bounded FIFO
@@ -463,12 +509,163 @@ impl Scheduler {
             active: Vec::new(),
             idle: Vec::new(),
             parked: ParkedStore::new(cfg.park_byte_budget),
+            spill: None,
+            pending_demote: Vec::new(),
             tick: 0,
             evicted_keys: VecDeque::new(),
             blocked_noprogress_ticks: 0,
             rejected: 0,
             view_bytes_released: 0,
             head_bypass_ticks: 0,
+        }
+    }
+
+    /// Attach a disk spill tier rooted at `dir`, sized by the config's
+    /// `spill_byte_budget`, with `failpoints` governing deterministic
+    /// fault injection on every blob read/write. Replaces any previous
+    /// store (in-flight writes are shed to the host tier first).
+    pub fn attach_spill(
+        &mut self,
+        dir: impl Into<std::path::PathBuf>,
+        failpoints: Failpoints,
+    ) -> std::io::Result<()> {
+        self.detach_spill();
+        let cfg = SpillConfig::new(dir, self.cfg.spill_byte_budget);
+        self.spill = Some(SpillStore::new(cfg, failpoints)?);
+        Ok(())
+    }
+
+    /// Drop the spill tier: pending demotions are shed back to the host
+    /// tier (their parked copies were kept pinned, so nothing is lost);
+    /// committed disk blobs are abandoned with tombstones so their next
+    /// turn errors cleanly instead of silently restarting.
+    pub fn detach_spill(&mut self) {
+        let Some(mut spill) = self.spill.take() else {
+            return;
+        };
+        let events = spill.flush();
+        self.apply_spill_events(events);
+        for key in spill.coldest_unpinned(u64::MAX, 0, usize::MAX) {
+            self.push_tombstone(key);
+        }
+        for key in std::mem::take(&mut self.pending_demote) {
+            if !self.has_queued_resume(&key) {
+                self.parked.set_pinned(&key, false);
+            }
+        }
+    }
+
+    /// The attached spill tier, if any (read-only: counters, occupancy).
+    pub fn spill(&self) -> Option<&SpillStore> {
+        self.spill.as_ref()
+    }
+
+    /// Sessions resident in the disk spill tier.
+    pub fn spilled_sessions(&self) -> usize {
+        self.spill.as_ref().map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Disk bytes charged to the spill tier (bounded by
+    /// `spill_byte_budget`; includes in-flight write-behind blobs).
+    pub fn spilled_bytes(&self) -> usize {
+        self.spill.as_ref().map(|s| s.spilled_bytes()).unwrap_or(0)
+    }
+
+    /// Barrier on the spill tier's write-behind queue: block until every
+    /// in-flight demotion commits (or sheds), then apply the outcomes.
+    /// Benchmarks and tests use this to reach a deterministic placement.
+    pub fn flush_spill(&mut self) {
+        let events = match self.spill.as_mut() {
+            Some(s) => s.flush(),
+            None => return,
+        };
+        self.apply_spill_events(events);
+    }
+
+    /// Apply write-behind outcomes: a committed demotion drops the host
+    /// copy (the session now lives on disk); a shed one leaves the host
+    /// copy authoritative — graceful degradation, never data loss.
+    fn apply_spill_events(&mut self, events: Vec<SpillEvent>) {
+        for ev in events {
+            match ev {
+                SpillEvent::Committed { key } => {
+                    self.pending_demote.retain(|k| k != &key);
+                    if self.has_queued_resume(&key) {
+                        // A turn queued against the session while the
+                        // write was in flight: serve it from the (still
+                        // pinned) host copy and drop the disk blob.
+                        if let Some(s) = self.spill.as_mut() {
+                            s.remove(&key);
+                        }
+                    } else {
+                        self.parked.set_pinned(&key, false);
+                        self.parked.remove(&key);
+                    }
+                }
+                SpillEvent::Shed { key, .. } => {
+                    self.pending_demote.retain(|k| k != &key);
+                    if !self.has_queued_resume(&key) {
+                        self.parked.set_pinned(&key, false);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The demotion scan: offer up to `max_park_per_tick` of the coldest
+    /// unpinned parked blobs (idle ≥ `spill_after_ticks`,
+    /// continuation-free, no queued resume) to the spill tier. Accepted
+    /// blobs start a write-behind demotion with the host copy pinned;
+    /// refused ones (full tier) simply stay host-resident.
+    fn spill_demotions(&mut self) {
+        if self.cfg.park_byte_budget == 0 {
+            return;
+        }
+        let budget = self.spill.as_ref().map(|s| s.spill_byte_budget()).unwrap_or(0);
+        if budget == 0 {
+            return;
+        }
+        let limit = self.cfg.max_park_per_tick.max(1);
+        let min_idle = self.cfg.spill_after_ticks as u64;
+        let candidates = self.parked.coldest_unpinned(self.tick, min_idle, limit);
+        for key in candidates {
+            if self.has_queued_resume(&key) {
+                continue;
+            }
+            let Some(entry) = self.parked.get(&key) else {
+                continue;
+            };
+            // Only idle (continuation-free) parks demote: a preempted
+            // generation's continuation holds live sampler state that
+            // does not serialize.
+            if entry.cont.is_some() {
+                continue;
+            }
+            let payload = entry.snap.to_bytes();
+            let meta = SpillMeta {
+                paged_kv_bytes: entry.snap.paged_kv_bytes(),
+                capacity: entry.snap.capacity(),
+                required_slots: entry.snap.required_slots(),
+            };
+            let Some(spill) = self.spill.as_mut() else {
+                return;
+            };
+            match spill.demote(&key, payload, meta, self.tick) {
+                Ok(evicted) => {
+                    // Disk victims lost their only copy: tombstone them
+                    // so their next turn errors cleanly.
+                    for k in evicted {
+                        self.push_tombstone(k);
+                    }
+                    self.parked.set_pinned(&key, true);
+                    self.pending_demote.push(key);
+                }
+                Err(_refused) => {
+                    // Shed at admission (tier full even after planning
+                    // evictions, or the writer is gone): the host copy
+                    // stays authoritative. The store counted the shed.
+                }
+            }
         }
     }
 
@@ -488,6 +685,9 @@ impl Scheduler {
         if self.parked.contains(key) {
             return ResumeState::Parked;
         }
+        if self.spill.as_ref().map(|s| s.contains(key)).unwrap_or(false) {
+            return ResumeState::Spilled;
+        }
         ResumeState::Unknown
     }
 
@@ -496,14 +696,21 @@ impl Scheduler {
         self.queue.iter().any(|e| e.resume.as_deref() == Some(key))
     }
 
+    /// Remember one session whose last copy was just dropped (park or
+    /// spill LRU eviction, tier teardown) — bounded FIFO — so its next
+    /// turn errors cleanly instead of silently losing context.
+    fn push_tombstone(&mut self, key: String) {
+        self.evicted_keys.push_back(key);
+        if self.evicted_keys.len() > TOMBSTONE_MAX {
+            self.evicted_keys.pop_front();
+        }
+    }
+
     /// Remember sessions the park LRU just evicted (bounded FIFO), so
     /// their next turn errors cleanly instead of silently losing context.
     fn note_evictions(&mut self, evicted: Vec<(String, ParkedEntry)>) {
         for (key, _) in evicted {
-            self.evicted_keys.push_back(key);
-            if self.evicted_keys.len() > TOMBSTONE_MAX {
-                self.evicted_keys.pop_front();
-            }
+            self.push_tombstone(key);
         }
     }
 
@@ -541,6 +748,11 @@ impl Scheduler {
         };
         if let Some(key) = &resume {
             self.parked.set_pinned(key, true);
+            if let Some(s) = self.spill.as_mut() {
+                // A spilled (or mid-demotion) blob with a queued resume
+                // must never be evicted by a later demotion's planning.
+                s.set_pinned(key, true);
+            }
         }
         self.queue.push_back(QueueEntry { req: Some(req), resume });
         true
@@ -662,6 +874,14 @@ impl Scheduler {
         let mut done = Vec::new();
         let mut parked_this_tick = false;
 
+        // --- Spill upkeep: drain write-behind completions first, so
+        // park bytes freed by committed demotions are visible to this
+        // tick's parking and admission decisions.
+        if self.spill.is_some() {
+            let events = self.spill.as_mut().map(|s| s.poll()).unwrap_or_default();
+            self.apply_spill_events(events);
+        }
+
         // --- Phase 0, idle-limit parking: a multi-turn session that sat
         // between turns for park_idle_ticks gives up its device residency
         // (lane, paged pool); its compact blob moves under the separate
@@ -682,6 +902,11 @@ impl Scheduler {
                 i += 1;
             }
         }
+
+        // --- Phase 0b, tier descent: offer the coldest parked blobs to
+        // the disk spill tier (write-behind; the host copy stays pinned
+        // until the checksummed blob commits).
+        self.spill_demotions();
 
         // --- Phase 1, admission: plan a prefill batch over the queue.
         // The budget covers the paged pool, owned views, and the shared
@@ -791,6 +1016,30 @@ impl Scheduler {
                                 };
                                 icaps.push(cap.max(grown));
                             }
+                            ResumeState::Spilled => {
+                                // Same byte model as a parked resume —
+                                // the spill metadata preserves the
+                                // snapshot's page-rounded occupancy and
+                                // capacity so admission is planned
+                                // without touching the disk.
+                                let (paged, cap, req_slots) = self
+                                    .spill
+                                    .as_ref()
+                                    .and_then(|s| s.meta(key))
+                                    .map(|m| {
+                                        (m.paged_kv_bytes, m.capacity, m.required_slots)
+                                    })
+                                    .unwrap_or((0, 0, 0));
+                                eligible.push(qi);
+                                buckets.push(0);
+                                ests.push(paged.saturating_add(turn_est));
+                                let grown = if new_len > 0 {
+                                    engine.capacity_for_slots(req_slots + new_len)
+                                } else {
+                                    0
+                                };
+                                icaps.push(cap.max(grown));
+                            }
                             ResumeState::Unknown => {
                                 // Blob gone between submit and admission:
                                 // admit at zero modeled cost so the entry
@@ -875,17 +1124,22 @@ impl Scheduler {
                     descending.sort_unstable_by(|a, b| b.cmp(a));
                     let mut taken: BTreeMap<usize, QueueEntry> = BTreeMap::new();
                     for &i in &descending {
-                        taken.insert(i, self.queue.remove(i).expect("planned index in queue"));
+                        // Planned indices come from this tick's queue
+                        // snapshot; a miss would be a planner bug, and
+                        // the admission simply shrinks by one entry.
+                        if let Some(entry) = self.queue.remove(i) {
+                            taken.insert(i, entry);
+                        }
                     }
                     let entries: Vec<QueueEntry> =
-                        order.iter().map(|i| taken.remove(i).unwrap()).collect();
+                        order.iter().filter_map(|i| taken.remove(i)).collect();
                     let mut fresh: Vec<Request> = Vec::new();
                     let mut resumes: Vec<QueueEntry> = Vec::new();
                     for e in entries {
                         if e.resume.is_some() {
                             resumes.push(e);
-                        } else {
-                            fresh.push(e.req.expect("fresh entry carries a request"));
+                        } else if let Some(req) = e.req {
+                            fresh.push(req);
                         }
                     }
                     if !fresh.is_empty() {
@@ -1071,7 +1325,16 @@ impl Scheduler {
         // retire already returned bytes, so the next admission pass gets
         // first claim before any session pays a park/resume round trip.
         if admission_blocked && done.is_empty() && self.cfg.park_byte_budget > 0 {
-            parked_this_tick |= self.try_preempt(engine, &mut done);
+            // Bulk preemption: under sustained pressure one freed lane
+            // per tick converges too slowly, so park up to
+            // `max_park_per_tick` cold sessions in one tick and pay a
+            // single boundary compaction for the whole batch.
+            for _ in 0..self.cfg.max_park_per_tick.max(1) {
+                if !self.try_preempt(engine, &mut done) {
+                    break;
+                }
+                parked_this_tick = true;
+            }
         }
 
         // Bound the forced-first hold-back: a blocked tick with an empty
@@ -1110,6 +1373,15 @@ impl Scheduler {
             self.compact_boundary(engine);
         }
         engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
+        if let Some(s) = &self.spill {
+            engine.metrics.spilled_bytes = s.spilled_bytes() as u64;
+            engine.metrics.spill_events = s.spill_events;
+            engine.metrics.promote_events = s.promote_events;
+            engine.metrics.spill_shed_events = s.shed_events;
+            engine.metrics.io_faults_injected = s.io_faults_injected;
+            engine.metrics.io_retries = s.io_retries;
+            engine.metrics.quarantined_sessions = s.quarantined;
+        }
         done
     }
 
@@ -1144,10 +1416,25 @@ impl Scheduler {
         let mut requeue_front: Vec<QueueEntry> = Vec::new();
         let mut requeue_back: Vec<QueueEntry> = Vec::new();
         for e in resumes {
-            let key = e.resume.clone().expect("resume entry carries a key");
+            // Structural invariants (a resume entry carries a key; an
+            // idle resume carries a new turn) degrade to a clean error
+            // or a dropped no-op marker — never a panic.
+            let Some(key) = e.resume.clone() else {
+                if let Some(req) = e.req {
+                    done.push(Self::error_completion(
+                        &req,
+                        "internal: resume entry without a session key".to_string(),
+                    ));
+                }
+                continue;
+            };
             match self.resume_state(&key) {
                 ResumeState::IdleAt(i) => {
-                    let req = e.req.expect("an idle session resumes only via a new turn");
+                    let Some(req) = e.req else {
+                        // A stray marker for a device-resident session:
+                        // nothing to finish, the session stays idle.
+                        continue;
+                    };
                     let mut s = self.idle.remove(i);
                     let t0 = Instant::now();
                     match engine.append_turn(&mut s.sess, &req.prompt) {
@@ -1192,7 +1479,24 @@ impl Scheduler {
                         requeue_back.push(e);
                         continue;
                     }
-                    let entry = self.parked.take(&key).expect("state said parked");
+                    let Some(entry) = self.parked.take(&key) else {
+                        // Gone between the state check and the take — a
+                        // clean stale-resume error, never a panic.
+                        if let Some(req) = e.req {
+                            done.push(Self::error_completion(
+                                &req,
+                                format!("session '{key}' is gone (dropped or evicted)"),
+                            ));
+                        }
+                        continue;
+                    };
+                    // The host copy is authoritative: cancel any
+                    // write-behind demotion racing this resume (a stale
+                    // in-flight write is seq-matched and swept).
+                    self.pending_demote.retain(|k| k != &key);
+                    if let Some(s) = self.spill.as_mut() {
+                        s.remove(&key);
+                    }
                     match (entry.cont, e.req) {
                         (Some(cont), _) => match engine.resume_session(entry.snap, &[]) {
                             Ok(sess) => self.active.push(Active {
@@ -1231,6 +1535,72 @@ impl Scheduler {
                             }
                         }
                         (None, None) => {}
+                    }
+                }
+                ResumeState::Spilled => {
+                    // Promote from disk: read (with bounded retry under
+                    // injected faults), checksum-verify, decode, then
+                    // restore through the normal wholesale lane sync.
+                    // Spilled blobs are always continuation-free, so a
+                    // marker without a new turn has nothing to do.
+                    let Some(req) = e.req else {
+                        if let Some(s) = self.spill.as_mut() {
+                            s.set_pinned(&key, false);
+                        }
+                        continue;
+                    };
+                    let promoted = match self.spill.as_mut() {
+                        Some(s) => s.promote(&key),
+                        None => Err(SpillError::Gone { key: key.clone() }),
+                    };
+                    match promoted {
+                        Ok(payload) => {
+                            let t0 = Instant::now();
+                            let restored = SessionSnapshot::from_bytes(&payload)
+                                .map_err(|e| anyhow::anyhow!("{e}"))
+                                .and_then(|snap| engine.resume_session(snap, &req.prompt));
+                            match restored {
+                                Ok(sess) => {
+                                    let sampler = Sampler::new(req.sampler, req.seed);
+                                    self.active.push(Active {
+                                        req,
+                                        sess,
+                                        sampler,
+                                        generated: Vec::new(),
+                                        prefill_us: t0.elapsed().as_secs_f64() * 1e6,
+                                        decode_started: Instant::now(),
+                                        idle_ticks: 0,
+                                    });
+                                }
+                                Err(err) => done.push(Self::error_completion(
+                                    &req,
+                                    format!("resume: {err:#}"),
+                                )),
+                            }
+                        }
+                        Err(err @ SpillError::Io { .. }) => {
+                            // Transient reads exhausted their retries:
+                            // the blob is intact on disk, so only THIS
+                            // turn fails; the session stays spilled and
+                            // a later retry can still resume it.
+                            if let Some(s) = self.spill.as_mut() {
+                                s.set_pinned(&key, false);
+                            }
+                            done.push(Self::error_completion(
+                                &req,
+                                format!("resume: {err}"),
+                            ));
+                        }
+                        Err(err) => {
+                            // Corrupt (blob quarantined on disk) or gone:
+                            // the session is lost — exactly one clean
+                            // per-session error, and the client's retry
+                            // starts fresh.
+                            done.push(Self::error_completion(
+                                &req,
+                                format!("resume: {err}"),
+                            ));
+                        }
                     }
                 }
                 ResumeState::Busy => {
@@ -1432,22 +1802,27 @@ impl Scheduler {
                     }
                     Err(entry) => {
                         // Unreachable (the hint is exact); restore rather
-                        // than lose the in-flight generation.
-                        let cont = entry.cont.expect("preempt entry carries a continuation");
-                        match engine.resume_session(entry.snap, &[]) {
-                            Ok(sess) => self.active.push(Active {
-                                req: cont.req,
-                                sess,
-                                sampler: cont.sampler,
-                                generated: cont.generated,
-                                prefill_us: cont.prefill_us,
-                                decode_started: Instant::now(),
-                                idle_ticks: 0,
-                            }),
-                            Err(err) => done.push(Self::error_completion(
-                                &cont.req,
-                                format!("preempt un-park: {err:#}"),
-                            )),
+                        // than lose the in-flight generation. The entry
+                        // we just built carries a continuation; if it
+                        // somehow does not, there is nothing to restore
+                        // and refusing the park is still safe.
+                        let ParkedEntry { snap, cont } = entry;
+                        if let Some(cont) = cont {
+                            match engine.resume_session(snap, &[]) {
+                                Ok(sess) => self.active.push(Active {
+                                    req: cont.req,
+                                    sess,
+                                    sampler: cont.sampler,
+                                    generated: cont.generated,
+                                    prefill_us: cont.prefill_us,
+                                    decode_started: Instant::now(),
+                                    idle_ticks: 0,
+                                }),
+                                Err(err) => done.push(Self::error_completion(
+                                    &cont.req,
+                                    format!("preempt un-park: {err:#}"),
+                                )),
+                            }
                         }
                         false
                     }
@@ -1509,6 +1884,18 @@ impl Scheduler {
                 self.parked.touch(key, self.tick);
                 Ok(self.parked.bytes_of(key).unwrap_or(0))
             }
+            ResumeState::Spilled => {
+                // Already descended past the host tier: refresh its
+                // spill LRU recency so the next demotion pass does not
+                // evict a session the client just signalled it wants.
+                let tick = self.tick;
+                if let Some(s) = self.spill.as_mut() {
+                    s.touch(key, tick);
+                    Ok(s.bytes_of(key).unwrap_or(0))
+                } else {
+                    anyhow::bail!("unknown session '{key}'")
+                }
+            }
             ResumeState::Busy => anyhow::bail!("session '{key}' is decoding a turn"),
             ResumeState::Unknown => anyhow::bail!("unknown session '{key}'"),
         }
@@ -1532,7 +1919,19 @@ impl Scheduler {
             }
             ResumeState::Parked => {
                 self.parked.remove(key);
+                // A drop also cancels any write-behind demotion racing
+                // it: the in-flight blob would be an orphan.
+                self.pending_demote.retain(|k| k != key);
+                if let Some(s) = self.spill.as_mut() {
+                    s.remove(key);
+                }
                 engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
+                Ok(())
+            }
+            ResumeState::Spilled => {
+                if let Some(s) = self.spill.as_mut() {
+                    s.remove(key);
+                }
                 Ok(())
             }
             ResumeState::Unknown => anyhow::bail!("unknown session '{key}'"),
@@ -1837,5 +2236,135 @@ mod tests {
         assert_eq!(plan, vec![vec![0, 1]], "bound lane re-used, free lane recycled");
         let plan = plan_decode_batches(&[256, 256], &[true, false], 4, &lane, 767, pool);
         assert_eq!(plan, vec![vec![0]], "767 < 3 allocated lanes x 256");
+    }
+
+    /// A minimal engine-free session snapshot (routing and demotion only
+    /// look at its byte model and serialized form).
+    fn snap_for_tests() -> crate::engine::SessionSnapshot {
+        let d = crate::kvcache::dual::CacheDims {
+            n_layers: 1,
+            n_kv_heads: 1,
+            d_head: 2,
+            w_local: 2,
+            page_size: 2,
+        };
+        let cache = crate::kvcache::SequenceKvCache::new(d, 4).unwrap();
+        crate::engine::SessionSnapshot::for_tests(cache.snapshot().unwrap())
+    }
+
+    fn tdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("wgkv-sched-spill-ut-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// The demotion scan moves a cold continuation-free parked blob to
+    /// disk: the host copy stays pinned through the write-behind window,
+    /// is dropped at commit, and the key then routes as a Spilled resume
+    /// (pinning the disk blob).
+    #[test]
+    fn cold_parked_blobs_demote_to_disk_and_route_as_spilled() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            spill_byte_budget: 1 << 20,
+            spill_after_ticks: 2,
+            ..Default::default()
+        });
+        s.attach_spill(tdir("demote"), Failpoints::disarmed()).unwrap();
+        let entry = ParkedEntry { snap: snap_for_tests(), cont: None };
+        assert!(s.parked.insert("cold", entry, 64, false, 0).is_ok());
+        s.tick = 10;
+        s.spill_demotions();
+        assert_eq!(s.pending_demote, vec!["cold".to_string()]);
+        assert_eq!(
+            s.parked.is_pinned("cold"),
+            Some(true),
+            "host copy stays pinned until the blob commits"
+        );
+        s.flush_spill();
+        assert!(!s.parked.contains("cold"), "host copy dropped at commit");
+        assert!(matches!(s.resume_state("cold"), ResumeState::Spilled));
+        assert!(s.pending_demote.is_empty());
+        assert_eq!(s.spilled_sessions(), 1);
+        let r = Request { session_id: Some("cold".into()), ..req(9) };
+        assert!(s.submit(r));
+        assert_eq!(s.queue.back().unwrap().resume.as_deref(), Some("cold"));
+        assert_eq!(
+            s.spill().unwrap().is_pinned("cold"),
+            Some(true),
+            "a queued resume pins the spilled blob"
+        );
+        let dir = s.spill().unwrap().dir().to_path_buf();
+        drop(s);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Preemption parks (continuations) and blobs with a queued resume
+    /// never descend to disk — the spill tier only takes idle,
+    /// unpromised sessions.
+    #[test]
+    fn continuations_and_queued_resumes_never_demote() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            spill_byte_budget: 1 << 20,
+            spill_after_ticks: 1,
+            ..Default::default()
+        });
+        s.attach_spill(tdir("veto"), Failpoints::disarmed()).unwrap();
+        let cont = Continuation {
+            req: req(1),
+            sampler: Sampler::greedy(),
+            generated: Vec::new(),
+            prefill_us: 0.0,
+        };
+        let entry = ParkedEntry { snap: snap_for_tests(), cont: Some(cont) };
+        assert!(s.parked.insert("preempted", entry, 64, false, 0).is_ok());
+        let idle = ParkedEntry { snap: snap_for_tests(), cont: None };
+        assert!(s.parked.insert("wanted", idle, 64, false, 0).is_ok());
+        let r = Request { session_id: Some("wanted".into()), ..req(2) };
+        assert!(s.submit(r));
+        s.tick = 10;
+        s.spill_demotions();
+        s.flush_spill();
+        assert!(s.pending_demote.is_empty());
+        assert_eq!(s.spilled_sessions(), 0, "neither blob may descend");
+        assert!(s.parked.contains("preempted"));
+        assert!(s.parked.contains("wanted"));
+        let dir = s.spill().unwrap().dir().to_path_buf();
+        drop(s);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Detaching the spill tier shed-and-tombstones its resident blobs:
+    /// an unpinned spilled session's next turn errors cleanly (stale
+    /// resume) instead of silently restarting fresh.
+    #[test]
+    fn detach_spill_tombstones_resident_blobs() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            spill_byte_budget: 1 << 20,
+            spill_after_ticks: 0,
+            ..Default::default()
+        });
+        s.attach_spill(tdir("detach"), Failpoints::disarmed()).unwrap();
+        let entry = ParkedEntry { snap: snap_for_tests(), cont: None };
+        assert!(s.parked.insert("doomed", entry, 64, false, 0).is_ok());
+        s.tick = 5;
+        s.spill_demotions();
+        s.flush_spill();
+        assert_eq!(s.spilled_sessions(), 1);
+        let dir = s.spill().unwrap().dir().to_path_buf();
+        s.detach_spill();
+        assert!(s.spill().is_none());
+        assert!(
+            s.evicted_keys.iter().any(|k| k == "doomed"),
+            "the lost blob leaves a tombstone"
+        );
+        let r = Request { session_id: Some("doomed".into()), ..req(3) };
+        assert!(s.submit(r));
+        assert_eq!(
+            s.queue.back().unwrap().resume.as_deref(),
+            Some("doomed"),
+            "a tombstoned key routes as a stale resume, not fresh"
+        );
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

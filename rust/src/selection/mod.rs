@@ -27,6 +27,18 @@ pub struct QuestConfig {
 }
 
 impl QuestConfig {
+    /// Serialize into `w` (spill-tier wire format).
+    pub fn encode_into(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.put_usize(self.budget_tokens);
+    }
+
+    /// Decode a config written by [`Self::encode_into`].
+    pub fn decode(
+        r: &mut crate::util::codec::ByteReader<'_>,
+    ) -> crate::util::codec::CodecResult<Self> {
+        Ok(Self { budget_tokens: r.get_usize("quest.budget_tokens")? })
+    }
+
     pub fn budget_pages(&self, page_size: usize) -> i32 {
         (self.budget_tokens.div_ceil(page_size)) as i32
     }

@@ -31,7 +31,12 @@
 //! ```
 //!
 //! Responses are one JSON object per line: a completion (`"ok": true`), a
-//! stats snapshot (`"ok": "stats"`), or an error (`"ok": false`).
+//! stats snapshot (`"ok": "stats"`), or an error (`"ok": false`). Every
+//! error response carries a stable machine-matchable `"code"` field
+//! (see [`error_code`]) next to the human-readable `"error"` message,
+//! and an idle connection is closed after [`CONN_READ_TIMEOUT`] with a
+//! final `read_timeout` error line — a stuck client cannot pin a
+//! handler thread forever.
 //!
 //! **Multi-turn sessions.** A `generate` carrying a `session_id` keeps
 //! the session's admitted KV after the turn completes (idle on-device,
@@ -58,7 +63,41 @@ use crate::model::SamplerKind;
 use crate::runtime::manifest::ModelDims;
 use crate::scheduler::{Completion, Request, Scheduler, SchedulerConfig};
 use crate::selection::QuestConfig;
+use crate::util::failpoint::Failpoints;
 use crate::util::json::Json;
+
+/// Stable error codes carried in the `"code"` field of every
+/// `"ok": false` response, so clients can branch on the failure class
+/// without parsing the human-readable `"error"` message.
+pub mod error_code {
+    /// The request line was not valid JSON.
+    pub const BAD_JSON: &str = "bad_json";
+    /// The request object was missing or mistyped a field.
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// The `op` field named no known operation.
+    pub const UNKNOWN_OP: &str = "unknown_op";
+    /// The `op` field was absent.
+    pub const MISSING_OP: &str = "missing_op";
+    /// The engine thread has shut down (its command channel is closed).
+    pub const ENGINE_STOPPED: &str = "engine_stopped";
+    /// The engine thread dropped this request's reply channel.
+    pub const ENGINE_DROPPED: &str = "engine_dropped";
+    /// A session op (`park` / `drop`) was refused by the scheduler.
+    pub const SESSION_OP_FAILED: &str = "session_op_failed";
+    /// The connection sat idle past the server's read timeout and is
+    /// being closed.
+    pub const READ_TIMEOUT: &str = "read_timeout";
+}
+
+/// Per-connection read timeout: an idle client may hold its socket (and
+/// its handler thread) this long between requests before the server
+/// sends a final `read_timeout` error line and closes the connection.
+pub const CONN_READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(300);
+
+/// An `"ok": false` response with a stable code and a readable message.
+fn error_json(code: &str, msg: impl std::fmt::Display) -> Json {
+    Json::obj().set("ok", false).set("code", code).set("error", format!("{msg}"))
+}
 
 /// One `generate` call's parameters (flat JSON surface).
 #[derive(Debug, Clone)]
@@ -253,6 +292,23 @@ pub struct ServerStats {
     pub parked_bytes: usize,
     /// Sessions currently parked in the host tier.
     pub parked_sessions: usize,
+    /// Sessions resident in the disk spill tier.
+    pub spilled_sessions: usize,
+    /// Disk bytes charged to the spill tier (in-flight writes included).
+    pub spilled_bytes: usize,
+    /// Demotions committed to disk (dashboard mirror of the engine
+    /// counter).
+    pub spill_events: u64,
+    /// Promotions back from disk (dashboard mirror).
+    pub promote_events: u64,
+    /// Demotions shed by the spill tier — host copy kept (mirror).
+    pub spill_shed_events: u64,
+    /// Faults fired by the armed failpoint plan across spill I/O (mirror).
+    pub io_faults_injected: u64,
+    /// Transient spill I/O faults absorbed by bounded retry (mirror).
+    pub io_retries: u64,
+    /// Blobs quarantined at promote by checksum/format validation (mirror).
+    pub quarantined_sessions: u64,
 }
 
 impl ServerStats {
@@ -274,6 +330,14 @@ impl ServerStats {
             .set("resume_events", self.resume_events)
             .set("parked_bytes", self.parked_bytes)
             .set("parked_sessions", self.parked_sessions)
+            .set("spilled_sessions", self.spilled_sessions)
+            .set("spilled_bytes", self.spilled_bytes)
+            .set("spill_events", self.spill_events)
+            .set("promote_events", self.promote_events)
+            .set("spill_shed_events", self.spill_shed_events)
+            .set("io_faults_injected", self.io_faults_injected)
+            .set("io_retries", self.io_retries)
+            .set("quarantined_sessions", self.quarantined_sessions)
     }
 }
 
@@ -333,11 +397,37 @@ pub enum Command {
 /// batcher, and resolves completions. Dropping the returned sender (all
 /// clones) shuts the thread down once it drains.
 ///
+/// Optional disk-spill wiring for the engine thread: when present, the
+/// scheduler attaches a spill tier rooted at `dir` right after the
+/// engine loads, with `failpoints` arming deterministic fault injection
+/// at the spill I/O boundaries (disarmed in production).
+pub struct SpillSetup {
+    /// Directory the spill blobs live under (created if missing).
+    pub dir: std::path::PathBuf,
+    /// Fault-injection table forwarded to the spill store.
+    pub failpoints: Failpoints,
+}
+
 /// `make_engine` runs on the engine thread; a load failure is returned
 /// through the join handle after every pending command errors out.
 pub fn spawn_engine_thread_with<F>(
     make_engine: F,
     cfg: SchedulerConfig,
+) -> (mpsc::Sender<Command>, JoinHandle<Result<()>>)
+where
+    F: FnOnce() -> Result<Engine> + Send + 'static,
+{
+    spawn_engine_thread_with_spill(make_engine, cfg, None)
+}
+
+/// [`spawn_engine_thread_with`] plus an optional disk-spill tier. A
+/// spill directory that cannot be opened degrades gracefully: the
+/// server logs the failure and serves with the device + host tiers
+/// only, rather than refusing to boot.
+pub fn spawn_engine_thread_with_spill<F>(
+    make_engine: F,
+    cfg: SchedulerConfig,
+    spill: Option<SpillSetup>,
 ) -> (mpsc::Sender<Command>, JoinHandle<Result<()>>)
 where
     F: FnOnce() -> Result<Engine> + Send + 'static,
@@ -357,6 +447,14 @@ where
             }
         };
         let mut sched = Scheduler::new(cfg);
+        if let Some(s) = spill {
+            if let Err(e) = sched.attach_spill(&s.dir, s.failpoints) {
+                eprintln!(
+                    "wgkv: spill tier disabled ({}: {e}); serving with device + host tiers only",
+                    s.dir.display()
+                );
+            }
+        }
         let mut next_id: u64 = 0;
         let mut waiters: std::collections::HashMap<u64, mpsc::Sender<Completion>> =
             std::collections::HashMap::new();
@@ -435,6 +533,14 @@ where
                             resume_events: snapshot.resume_events,
                             parked_bytes: sched.parked_bytes(),
                             parked_sessions: sched.parked_sessions(),
+                            spilled_sessions: sched.spilled_sessions(),
+                            spilled_bytes: sched.spilled_bytes(),
+                            spill_events: snapshot.spill_events,
+                            promote_events: snapshot.promote_events,
+                            spill_shed_events: snapshot.spill_shed_events,
+                            io_faults_injected: snapshot.io_faults_injected,
+                            io_retries: snapshot.io_retries,
+                            quarantined_sessions: snapshot.quarantined_sessions,
                             engine: snapshot,
                         });
                     }
@@ -486,73 +592,102 @@ fn error_completion(id: u64, msg: &str) -> Completion {
 fn respond(line: &str, cmds: &mpsc::Sender<Command>) -> Json {
     let parsed = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return Json::obj().set("ok", false).set("error", format!("bad json: {e}")),
+        Err(e) => return error_json(error_code::BAD_JSON, format!("bad json: {e}")),
     };
     match parsed.get("op").and_then(Json::as_str) {
         Some("generate") => match GenerateParams::from_json(&parsed) {
             Ok(p) => {
                 let (tx, rx) = mpsc::channel();
                 if cmds.send(Command::Generate(p, tx)).is_err() {
-                    return Json::obj().set("ok", false).set("error", "engine stopped");
+                    return error_json(error_code::ENGINE_STOPPED, "engine stopped");
                 }
                 match rx.recv() {
                     Ok(c) => completion_to_json(&c),
-                    Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+                    Err(_) => {
+                        error_json(error_code::ENGINE_DROPPED, "engine dropped request")
+                    }
                 }
             }
-            Err(e) => Json::obj().set("ok", false).set("error", format!("bad request: {e:#}")),
+            Err(e) => error_json(error_code::BAD_REQUEST, format!("bad request: {e:#}")),
         },
         Some("stats") => {
             let (tx, rx) = mpsc::channel();
             if cmds.send(Command::Stats(tx)).is_err() {
-                return Json::obj().set("ok", false).set("error", "engine stopped");
+                return error_json(error_code::ENGINE_STOPPED, "engine stopped");
             }
             match rx.recv() {
                 Ok(s) => s.to_json(),
-                Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+                Err(_) => error_json(error_code::ENGINE_DROPPED, "engine dropped request"),
             }
         }
         Some("park") => {
             let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
-                return Json::obj().set("ok", false).set("error", "park: missing 'session_id'");
+                return error_json(error_code::BAD_REQUEST, "park: missing 'session_id'");
             };
             let (tx, rx) = mpsc::channel();
             if cmds.send(Command::Park(key.to_string(), tx)).is_err() {
-                return Json::obj().set("ok", false).set("error", "engine stopped");
+                return error_json(error_code::ENGINE_STOPPED, "engine stopped");
             }
             match rx.recv() {
                 Ok(Ok(bytes)) => Json::obj()
                     .set("ok", "parked")
                     .set("session_id", key)
                     .set("parked_bytes", bytes),
-                Ok(Err(e)) => Json::obj().set("ok", false).set("error", format!("park: {e:#}")),
-                Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+                Ok(Err(e)) => {
+                    error_json(error_code::SESSION_OP_FAILED, format!("park: {e:#}"))
+                }
+                Err(_) => error_json(error_code::ENGINE_DROPPED, "engine dropped request"),
             }
         }
         Some("drop") => {
             let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
-                return Json::obj().set("ok", false).set("error", "drop: missing 'session_id'");
+                return error_json(error_code::BAD_REQUEST, "drop: missing 'session_id'");
             };
             let (tx, rx) = mpsc::channel();
             if cmds.send(Command::Drop(key.to_string(), tx)).is_err() {
-                return Json::obj().set("ok", false).set("error", "engine stopped");
+                return error_json(error_code::ENGINE_STOPPED, "engine stopped");
             }
             match rx.recv() {
                 Ok(Ok(())) => Json::obj().set("ok", "dropped").set("session_id", key),
-                Ok(Err(e)) => Json::obj().set("ok", false).set("error", format!("drop: {e:#}")),
-                Err(_) => Json::obj().set("ok", false).set("error", "engine dropped request"),
+                Ok(Err(e)) => {
+                    error_json(error_code::SESSION_OP_FAILED, format!("drop: {e:#}"))
+                }
+                Err(_) => error_json(error_code::ENGINE_DROPPED, "engine dropped request"),
             }
         }
-        Some(op) => Json::obj().set("ok", false).set("error", format!("unknown op '{op}'")),
-        None => Json::obj().set("ok", false).set("error", "missing 'op'"),
+        Some(op) => error_json(error_code::UNKNOWN_OP, format!("unknown op '{op}'")),
+        None => error_json(error_code::MISSING_OP, "missing 'op'"),
     }
 }
 
 fn handle_conn(stream: TcpStream, cmds: mpsc::Sender<Command>) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    // Bound how long an idle client can pin this handler thread: a
+    // connection with no traffic for CONN_READ_TIMEOUT gets one final
+    // structured error line, then the socket closes.
+    stream.set_read_timeout(Some(CONN_READ_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client closed cleanly
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                let mut out = error_json(
+                    error_code::READ_TIMEOUT,
+                    "connection idle past read timeout; closing",
+                )
+                .dump();
+                out.push('\n');
+                let _ = writer.write_all(out.as_bytes());
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -605,6 +740,17 @@ impl Client {
         Json::parse(&resp)
     }
 
+    /// Render a server error response as `[code] message`, surfacing the
+    /// structured `code` field instead of a blanket "unknown".
+    fn server_error(j: &Json) -> String {
+        let code = j.get("code").and_then(Json::as_str).unwrap_or("unspecified");
+        let msg = j
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("server sent no error message");
+        format!("[{code}] {msg}")
+    }
+
     /// Blocking `generate` round-trip; server-side errors become `Err`.
     pub fn generate(&mut self, params: GenerateParams) -> Result<Completion> {
         let j = self.roundtrip(params.to_json())?;
@@ -616,10 +762,7 @@ impl Client {
                 }
                 Ok(c)
             }
-            _ => bail!(
-                "server error: {}",
-                j.get("error").and_then(Json::as_str).unwrap_or("unknown")
-            ),
+            _ => bail!("server error: {}", Self::server_error(&j)),
         }
     }
 
@@ -651,6 +794,14 @@ impl Client {
             resume_events: f("resume_events") as u64,
             parked_bytes: f("parked_bytes") as usize,
             parked_sessions: f("parked_sessions") as usize,
+            spilled_sessions: f("spilled_sessions") as usize,
+            spilled_bytes: f("spilled_bytes") as usize,
+            spill_events: f("spill_events") as u64,
+            promote_events: f("promote_events") as u64,
+            spill_shed_events: f("spill_shed_events") as u64,
+            io_faults_injected: f("io_faults_injected") as u64,
+            io_retries: f("io_retries") as u64,
+            quarantined_sessions: f("quarantined_sessions") as u64,
         })
     }
 
@@ -660,10 +811,7 @@ impl Client {
         let j = self
             .roundtrip(Json::obj().set("op", "park").set("session_id", session_id))?;
         if j.get("ok").and_then(Json::as_str) != Some("parked") {
-            bail!(
-                "park failed: {}",
-                j.get("error").and_then(Json::as_str).unwrap_or("unknown")
-            );
+            bail!("park failed: {}", Self::server_error(&j));
         }
         Ok(j.get("parked_bytes").and_then(Json::as_usize).unwrap_or(0))
     }
@@ -673,10 +821,7 @@ impl Client {
         let j = self
             .roundtrip(Json::obj().set("op", "drop").set("session_id", session_id))?;
         if j.get("ok").and_then(Json::as_str) != Some("dropped") {
-            bail!(
-                "drop failed: {}",
-                j.get("error").and_then(Json::as_str).unwrap_or("unknown")
-            );
+            bail!("drop failed: {}", Self::server_error(&j));
         }
         Ok(())
     }
@@ -835,6 +980,14 @@ mod tests {
             resume_events: 2,
             parked_bytes: 1234,
             parked_sessions: 1,
+            spilled_sessions: 2,
+            spilled_bytes: 2048,
+            spill_events: 6,
+            promote_events: 4,
+            spill_shed_events: 1,
+            io_faults_injected: 8,
+            io_retries: 5,
+            quarantined_sessions: 1,
         };
         let dumped = s.to_json().dump();
         let back = Client::stats_from_json(&Json::parse(&dumped).unwrap()).unwrap();
@@ -849,5 +1002,42 @@ mod tests {
         assert_eq!(back.engine, s.engine);
         assert_eq!(back.queued, 5);
         assert_eq!(back.active_view_bytes, 222);
+        assert_eq!(back.spilled_sessions, 2);
+        assert_eq!(back.spilled_bytes, 2048);
+        assert_eq!(back.spill_events, 6);
+        assert_eq!(back.promote_events, 4);
+        assert_eq!(back.spill_shed_events, 1);
+        assert_eq!(back.io_faults_injected, 8);
+        assert_eq!(back.io_retries, 5);
+        assert_eq!(back.quarantined_sessions, 1);
+    }
+
+    /// Every protocol error carries a stable machine-matchable code next
+    /// to the readable message, and the client surfaces it.
+    #[test]
+    fn error_responses_carry_structured_codes() {
+        let (tx, _rx) = mpsc::channel();
+        let code_of = |line: &str| {
+            let j = respond(line, &tx);
+            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+            j.get("code").and_then(Json::as_str).unwrap_or("").to_string()
+        };
+        assert_eq!(code_of("not json"), error_code::BAD_JSON);
+        assert_eq!(code_of(r#"{"op":"unknown"}"#), error_code::UNKNOWN_OP);
+        assert_eq!(code_of(r#"{"no_op": 1}"#), error_code::MISSING_OP);
+        assert_eq!(code_of(r#"{"op":"park"}"#), error_code::BAD_REQUEST);
+        assert_eq!(code_of(r#"{"op":"drop"}"#), error_code::BAD_REQUEST);
+        assert_eq!(code_of(r#"{"op":"generate"}"#), error_code::BAD_REQUEST);
+        // A closed engine channel is ENGINE_STOPPED, not "unknown".
+        let (dead_tx, dead_rx) = mpsc::channel::<Command>();
+        drop(dead_rx);
+        let j = respond(r#"{"op":"stats"}"#, &dead_tx);
+        assert_eq!(
+            j.get("code").and_then(Json::as_str),
+            Some(error_code::ENGINE_STOPPED)
+        );
+        // The client renders the code, never a blanket "unknown".
+        let rendered = Client::server_error(&j);
+        assert!(rendered.contains(error_code::ENGINE_STOPPED), "{rendered}");
     }
 }

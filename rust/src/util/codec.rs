@@ -1,0 +1,416 @@
+//! Hand-rolled binary codec (substrate — this image has no `serde`).
+//!
+//! Snapshots that leave the process (the disk spill tier, future RPC
+//! transports) need a stable byte representation. [`ByteWriter`] and
+//! [`ByteReader`] implement a little-endian, length-prefixed wire format
+//! with bounds-checked reads: a corrupted or truncated buffer decodes to
+//! a typed [`CodecError`], never a panic and never an unbounded
+//! allocation. [`fnv1a64`] provides the checksum the spill tier stores
+//! alongside each blob.
+
+use std::fmt;
+
+/// Decode failure: truncation, a bad enum tag, or an implausible length
+/// prefix. Carries enough context to name the offending field.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError {
+    /// What the decoder was reading when it failed.
+    pub what: &'static str,
+    /// Human-readable detail (offsets, tags, lengths).
+    pub detail: String,
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "decode {}: {}", self.what, self.detail)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Shorthand result for decoders.
+pub type CodecResult<T> = Result<T, CodecError>;
+
+/// FNV-1a 64-bit hash — the spill tier's blob checksum. Not
+/// cryptographic; it detects bit flips, truncation, and torn writes.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    /// Writer with a pre-sized buffer (for large snapshots).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Consume the writer, yielding the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Single byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Little-endian u32.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Little-endian u64.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Little-endian i64.
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// usize widened to u64 (portable across word sizes).
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// IEEE-754 f32 bit pattern (bit-exact round trip, NaN included).
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bool as one byte (0 or 1).
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (bit-exact).
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_usize(vs.len());
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed i64 slice.
+    pub fn put_i64s(&mut self, vs: &[i64]) {
+        self.put_usize(vs.len());
+        self.buf.reserve(vs.len() * 8);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed usize slice (each widened to u64).
+    pub fn put_usizes(&mut self, vs: &[usize]) {
+        self.put_usize(vs.len());
+        self.buf.reserve(vs.len() * 8);
+        for &v in vs {
+            self.buf.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed bool slice (one byte per element).
+    pub fn put_bools(&mut self, vs: &[bool]) {
+        self.put_usize(vs.len());
+        self.buf.reserve(vs.len());
+        for &v in vs {
+            self.buf.push(v as u8);
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Reader positioned at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    /// True once every byte has been consumed.
+    pub fn is_exhausted(&self) -> bool {
+        self.off == self.buf.len()
+    }
+
+    fn err(&self, what: &'static str, detail: String) -> CodecError {
+        CodecError { what, detail }
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> CodecResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(self.err(
+                what,
+                format!("need {n} bytes at offset {}, have {}", self.off, self.remaining()),
+            ));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    /// Single byte.
+    pub fn get_u8(&mut self, what: &'static str) -> CodecResult<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    /// Little-endian u32.
+    pub fn get_u32(&mut self, what: &'static str) -> CodecResult<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Little-endian u64.
+    pub fn get_u64(&mut self, what: &'static str) -> CodecResult<u64> {
+        let s = self.take(8, what)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Little-endian i64.
+    pub fn get_i64(&mut self, what: &'static str) -> CodecResult<i64> {
+        Ok(self.get_u64(what)? as i64)
+    }
+
+    /// u64 narrowed to usize, rejecting values that do not fit.
+    pub fn get_usize(&mut self, what: &'static str) -> CodecResult<usize> {
+        let v = self.get_u64(what)?;
+        usize::try_from(v).map_err(|_| self.err(what, format!("{v} overflows usize")))
+    }
+
+    /// IEEE-754 f32 from its bit pattern.
+    pub fn get_f32(&mut self, what: &'static str) -> CodecResult<f32> {
+        let s = self.take(4, what)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Bool from one byte; any value other than 0/1 is a decode error.
+    pub fn get_bool(&mut self, what: &'static str) -> CodecResult<bool> {
+        match self.get_u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(self.err(what, format!("bad bool byte {v}"))),
+        }
+    }
+
+    /// A length prefix for elements of `elem_bytes` each, validated
+    /// against the remaining buffer so a corrupt length cannot trigger
+    /// an unbounded allocation.
+    fn get_len(&mut self, elem_bytes: usize, what: &'static str) -> CodecResult<usize> {
+        let n = self.get_usize(what)?;
+        let need = n.checked_mul(elem_bytes.max(1)).ok_or_else(|| {
+            self.err(what, format!("length {n} overflows"))
+        })?;
+        if need > self.remaining() {
+            return Err(self.err(
+                what,
+                format!("length {n} needs {need} bytes, only {} remain", self.remaining()),
+            ));
+        }
+        Ok(n)
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn get_bytes(&mut self, what: &'static str) -> CodecResult<&'a [u8]> {
+        let n = self.get_len(1, what)?;
+        self.take(n, what)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn get_str(&mut self, what: &'static str) -> CodecResult<String> {
+        let s = self.get_bytes(what)?;
+        String::from_utf8(s.to_vec()).map_err(|e| self.err(what, format!("bad utf-8: {e}")))
+    }
+
+    /// Length-prefixed f32 slice.
+    pub fn get_f32s(&mut self, what: &'static str) -> CodecResult<Vec<f32>> {
+        let n = self.get_len(4, what)?;
+        let s = self.take(n * 4, what)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Length-prefixed i64 slice.
+    pub fn get_i64s(&mut self, what: &'static str) -> CodecResult<Vec<i64>> {
+        let n = self.get_len(8, what)?;
+        let s = self.take(n * 8, what)?;
+        Ok(s.chunks_exact(8)
+            .map(|c| {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(c);
+                i64::from_le_bytes(b)
+            })
+            .collect())
+    }
+
+    /// Length-prefixed usize slice.
+    pub fn get_usizes(&mut self, what: &'static str) -> CodecResult<Vec<usize>> {
+        let n = self.get_len(8, what)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_usize(what)?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed bool slice.
+    pub fn get_bools(&mut self, what: &'static str) -> CodecResult<Vec<bool>> {
+        let n = self.get_len(1, what)?;
+        let s = self.take(n, what)?;
+        s.iter()
+            .map(|&b| match b {
+                0 => Ok(false),
+                1 => Ok(true),
+                v => Err(self.err(what, format!("bad bool byte {v}"))),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trip_is_exact() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEADBEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_i64(-42);
+        w.put_usize(123_456);
+        w.put_f32(f32::NAN);
+        w.put_f32(-0.0);
+        w.put_bool(true);
+        w.put_str("spill \u{1F4BE}");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8("a").unwrap(), 7);
+        assert_eq!(r.get_u32("b").unwrap(), 0xDEADBEEF);
+        assert_eq!(r.get_u64("c").unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_i64("d").unwrap(), -42);
+        assert_eq!(r.get_usize("e").unwrap(), 123_456);
+        assert!(r.get_f32("f").unwrap().is_nan());
+        let z = r.get_f32("g").unwrap();
+        assert_eq!(z.to_bits(), (-0.0f32).to_bits());
+        assert!(r.get_bool("h").unwrap());
+        assert_eq!(r.get_str("i").unwrap(), "spill \u{1F4BE}");
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn slice_round_trip_is_bit_exact() {
+        let fs = vec![0.0f32, -1.5, f32::INFINITY, f32::MIN_POSITIVE];
+        let is = vec![i64::MIN, -1, 0, i64::MAX];
+        let bs = vec![true, false, true];
+        let us = vec![0usize, 9, usize::MAX / 2];
+        let mut w = ByteWriter::new();
+        w.put_f32s(&fs);
+        w.put_i64s(&is);
+        w.put_bools(&bs);
+        w.put_usizes(&us);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let fs2 = r.get_f32s("f").unwrap();
+        assert_eq!(fs.len(), fs2.len());
+        for (a, b) in fs.iter().zip(&fs2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(r.get_i64s("i").unwrap(), is);
+        assert_eq!(r.get_bools("b").unwrap(), bs);
+        assert_eq!(r.get_usizes("u").unwrap(), us);
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.get_f32s("xs").is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefix_cannot_oom() {
+        // A length prefix claiming 2^60 elements must be rejected by the
+        // remaining-bytes check before any allocation.
+        let mut w = ByteWriter::new();
+        w.put_u64(1u64 << 60);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_f32s("xs").is_err());
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_bytes("bs").is_err());
+    }
+
+    #[test]
+    fn bad_bool_byte_rejected() {
+        let bytes = vec![2u8];
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_bool("b").is_err());
+    }
+
+    #[test]
+    fn fnv_detects_single_bit_flips() {
+        let data: Vec<u8> = (0..255).collect();
+        let h = fnv1a64(&data);
+        assert_eq!(h, fnv1a64(&data), "hash must be pure");
+        for i in [0usize, 17, 254] {
+            let mut flipped = data.clone();
+            flipped[i] ^= 1;
+            assert_ne!(h, fnv1a64(&flipped), "flip at {i} undetected");
+        }
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325, "FNV offset basis");
+    }
+}

@@ -1,0 +1,243 @@
+//! Deterministic fault injection for I/O boundaries.
+//!
+//! A [`Failpoints`] instance holds a set of named sites armed with a
+//! fire probability and a seeded PCG32 stream, so a fault schedule is
+//! exactly reproducible: same spec + same seed + same call order = same
+//! faults. Production code asks [`Failpoints::should_fire`] at each I/O
+//! boundary; a disarmed instance answers `false` without consuming
+//! randomness, so arming one site never perturbs another site's
+//! schedule.
+//!
+//! Arming comes from three places, strongest last:
+//!
+//! * code — [`Failpoints::arm`] (tests build exact matrices this way);
+//! * environment — `WGKV_FAILPOINTS="site=prob,site=prob"` with
+//!   `WGKV_FAILPOINT_SEED=n` (how `make test-fault` arms the suite);
+//! * CLI — `--failpoints SPEC --failpoint-seed N` on the coordinator
+//!   binary (parsed with [`Failpoints::parse`]).
+//!
+//! The spill tier's sites are listed in `runtime::spill`; the module
+//! itself is site-agnostic.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Rng;
+
+/// Environment variable naming the armed sites (`site=prob,...`).
+pub const ENV_SPEC: &str = "WGKV_FAILPOINTS";
+/// Environment variable carrying the fault-schedule seed.
+pub const ENV_SEED: &str = "WGKV_FAILPOINT_SEED";
+
+/// A seeded set of armed fault sites.
+#[derive(Debug, Clone)]
+pub struct Failpoints {
+    sites: BTreeMap<String, f64>,
+    rng: Rng,
+    fired: u64,
+    checked: u64,
+}
+
+impl Default for Failpoints {
+    fn default() -> Self {
+        Self::disarmed()
+    }
+}
+
+impl Failpoints {
+    /// No sites armed; every `should_fire` answers `false` for free.
+    pub fn disarmed() -> Self {
+        Self { sites: BTreeMap::new(), rng: Rng::new(0), fired: 0, checked: 0 }
+    }
+
+    /// Parse a `site=prob,site=prob` spec. Probabilities are clamped to
+    /// `[0, 1]`; an empty spec yields a disarmed instance.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self, String> {
+        let mut fp = Self { sites: BTreeMap::new(), rng: Rng::new(seed), fired: 0, checked: 0 };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (site, prob) = part
+                .split_once('=')
+                .ok_or_else(|| format!("failpoint '{part}': expected site=prob"))?;
+            let p: f64 = prob
+                .trim()
+                .parse()
+                .map_err(|e| format!("failpoint '{part}': bad probability ({e})"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("failpoint '{part}': probability {p} outside [0, 1]"));
+            }
+            fp.sites.insert(site.trim().to_string(), p);
+        }
+        Ok(fp)
+    }
+
+    /// Build from `WGKV_FAILPOINTS` / `WGKV_FAILPOINT_SEED`. An unset
+    /// spec yields a disarmed instance; a malformed spec is reported on
+    /// stderr and treated as disarmed (the suite must not panic because
+    /// an operator fat-fingered an env var).
+    pub fn from_env() -> Self {
+        let Ok(spec) = std::env::var(ENV_SPEC) else {
+            return Self::disarmed();
+        };
+        let seed = std::env::var(ENV_SEED)
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0x5EED);
+        match Self::parse(&spec, seed) {
+            Ok(fp) => fp,
+            Err(e) => {
+                eprintln!("warning: ignoring {ENV_SPEC}: {e}");
+                Self::disarmed()
+            }
+        }
+    }
+
+    /// Arm (or re-arm) one site at probability `p` (clamped to [0, 1]).
+    pub fn arm(&mut self, site: &str, p: f64) {
+        self.sites.insert(site.to_string(), p.clamp(0.0, 1.0));
+    }
+
+    /// Disarm one site.
+    pub fn disarm(&mut self, site: &str) {
+        self.sites.remove(site);
+    }
+
+    /// True when any site is armed.
+    pub fn is_active(&self) -> bool {
+        self.sites.values().any(|&p| p > 0.0)
+    }
+
+    /// True when `site` is armed with a nonzero probability.
+    pub fn is_armed(&self, site: &str) -> bool {
+        self.sites.get(site).copied().unwrap_or(0.0) > 0.0
+    }
+
+    /// Ask whether `site` fires this time. Draws from the seeded stream
+    /// only when the site is armed, so disarmed sites cost nothing and
+    /// never perturb the schedule of armed ones.
+    pub fn should_fire(&mut self, site: &str) -> bool {
+        let p = match self.sites.get(site) {
+            Some(&p) if p > 0.0 => p,
+            _ => return false,
+        };
+        self.checked += 1;
+        let fire = p >= 1.0 || self.rng.f64() < p;
+        if fire {
+            self.fired += 1;
+        }
+        fire
+    }
+
+    /// Total faults injected by this instance.
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// Total armed-site checks performed by this instance.
+    pub fn checked(&self) -> u64 {
+        self.checked
+    }
+
+    /// Derive an independent instance with the same armed sites but its
+    /// own stream (e.g. for a background writer thread), so the two
+    /// threads' schedules stay deterministic regardless of interleaving.
+    pub fn fork(&mut self, salt: u64) -> Failpoints {
+        Failpoints {
+            sites: self.sites.clone(),
+            rng: self.rng.fork(salt),
+            fired: 0,
+            checked: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_never_fires() {
+        let mut fp = Failpoints::disarmed();
+        for _ in 0..100 {
+            assert!(!fp.should_fire("spill.write.short"));
+        }
+        assert_eq!(fp.fired(), 0);
+        assert_eq!(fp.checked(), 0);
+        assert!(!fp.is_active());
+    }
+
+    #[test]
+    fn probability_one_always_fires_and_zero_never() {
+        let mut fp = Failpoints::disarmed();
+        fp.arm("always", 1.0);
+        fp.arm("never", 0.0);
+        for _ in 0..50 {
+            assert!(fp.should_fire("always"));
+            assert!(!fp.should_fire("never"));
+        }
+        assert_eq!(fp.fired(), 50);
+        assert!(fp.is_armed("always"));
+        assert!(!fp.is_armed("never"));
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let schedule = |seed: u64| -> Vec<bool> {
+            let mut fp = Failpoints::parse("a=0.5,b=0.2", seed).unwrap();
+            (0..64)
+                .map(|i| fp.should_fire(if i % 2 == 0 { "a" } else { "b" }))
+                .collect()
+        };
+        assert_eq!(schedule(7), schedule(7));
+        assert_ne!(schedule(7), schedule(8), "different seeds must diverge");
+    }
+
+    #[test]
+    fn unarmed_sites_do_not_perturb_armed_schedules() {
+        let mut a = Failpoints::parse("x=0.5", 3).unwrap();
+        let mut b = Failpoints::parse("x=0.5", 3).unwrap();
+        let only_x: Vec<bool> = (0..32).map(|_| a.should_fire("x")).collect();
+        let mixed: Vec<bool> = (0..32)
+            .map(|_| {
+                assert!(!b.should_fire("y"), "unarmed site fired");
+                b.should_fire("x")
+            })
+            .collect();
+        assert_eq!(only_x, mixed);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_cleanly() {
+        assert!(Failpoints::parse("siteonly", 0).is_err());
+        assert!(Failpoints::parse("a=notanumber", 0).is_err());
+        assert!(Failpoints::parse("a=1.5", 0).is_err());
+        assert!(Failpoints::parse("a=-0.1", 0).is_err());
+        let fp = Failpoints::parse("", 0).unwrap();
+        assert!(!fp.is_active());
+        let fp = Failpoints::parse(" a = 0.25 , b=1.0 ", 0).unwrap();
+        assert!(fp.is_armed("a") && fp.is_armed("b"));
+    }
+
+    #[test]
+    fn approximate_rate_matches_probability() {
+        let mut fp = Failpoints::parse("a=0.25", 11).unwrap();
+        let n = 20_000;
+        let hits = (0..n).filter(|_| fp.should_fire("a")).count();
+        let f = hits as f64 / n as f64;
+        assert!((f - 0.25).abs() < 0.02, "rate {f}");
+        assert_eq!(fp.fired(), hits as u64);
+        assert_eq!(fp.checked(), n as u64);
+    }
+
+    #[test]
+    fn forked_instance_shares_sites_but_not_stream() {
+        let mut base = Failpoints::parse("a=0.5", 1).unwrap();
+        let mut fork = base.fork(42);
+        assert!(fork.is_armed("a"));
+        let va: Vec<bool> = (0..32).map(|_| base.should_fire("a")).collect();
+        let vb: Vec<bool> = (0..32).map(|_| fork.should_fire("a")).collect();
+        assert_ne!(va, vb, "fork must have an independent stream");
+    }
+}

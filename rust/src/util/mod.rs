@@ -9,15 +9,21 @@
 //! * [`rng`]   — PCG32 PRNG (policies, samplers, workload generators);
 //! * [`args`]  — CLI flag parser;
 //! * [`bench`] — fixed-time micro-benchmark harness (`cargo bench` targets);
-//! * [`prop`]  — property-based testing driver with replayable seeds.
+//! * [`prop`]  — property-based testing driver with replayable seeds;
+//! * [`codec`] — little-endian binary codec + FNV-1a checksum (spill blobs);
+//! * [`failpoint`] — deterministic, seeded fault injection for I/O paths.
 
 pub mod args;
 pub mod bench;
+pub mod codec;
+pub mod failpoint;
 pub mod json;
 pub mod prop;
 pub mod rng;
 
 pub use args::Args;
 pub use bench::{Bench, BenchReport, BenchResult};
+pub use codec::{fnv1a64, ByteReader, ByteWriter, CodecError};
+pub use failpoint::Failpoints;
 pub use json::Json;
 pub use rng::Rng;

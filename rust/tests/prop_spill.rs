@@ -1,0 +1,395 @@
+//! Property-based tests for the disk spill tier: blob round trips,
+//! the hard `spill_byte_budget` bound, checksum rejection of corrupted
+//! blobs, and a deterministic failpoint matrix over every injected
+//! fault class.
+//!
+//! Four invariants from the Design 6 dataflow are checked:
+//!
+//! 1. **Round-trip bit identity** — across random prefill/decode/evict
+//!    histories, a session snapshot demoted through the write-behind
+//!    path promotes back byte-identical, decodes, restores, and
+//!    wholesale-syncs a pool lane bit-identical to the pre-spill image.
+//! 2. **The budget is a hard bound and pinned blobs survive** — under
+//!    random demote/promote/pin/flush traffic, `spilled_bytes` never
+//!    exceeds `spill_byte_budget` and a pinned (queued-resume) blob is
+//!    never evicted; stale promotes are a clean [`SpillError::Gone`].
+//! 3. **Corruption is detected, quarantined, and reported once** — any
+//!    single flipped byte (header or payload) and any truncation is
+//!    caught by the magic/version/length/checksum validator; the blob
+//!    is renamed to `.quarantine`, the first promote returns
+//!    [`SpillError::Corrupt`], every later one [`SpillError::Gone`].
+//!    Never a panic, never silently-wrong bytes.
+//! 4. **The failpoint matrix degrades gracefully** — each injected
+//!    fault class (short write, latent corruption, ENOSPC, slow write,
+//!    crash-before-rename, read error), alone at p ∈ {0.5, 1.0} and all
+//!    together, yields only the documented outcomes: commits with
+//!    bit-identical payloads, sheds that keep the host copy
+//!    authoritative, typed per-session errors — with the budget bound
+//!    holding at every step and crashed tmp files reclaimed by the next
+//!    store's startup sweep.
+
+use wgkv::engine::SessionSnapshot;
+use wgkv::kvcache::dual::CacheDims;
+use wgkv::kvcache::SequenceKvCache;
+use wgkv::prop_assert;
+use wgkv::runtime::device_cache::DeviceViewPool;
+use wgkv::runtime::spill::{
+    SpillConfig, SpillError, SpillEvent, SpillMeta, SpillStore, FP_READ_ERR, FP_WRITE_CORRUPT,
+    FP_WRITE_CRASH, FP_WRITE_ENOSPC, FP_WRITE_SHORT, FP_WRITE_SLOW,
+};
+use wgkv::runtime::tensor::Tensor;
+use wgkv::util::failpoint::Failpoints;
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+/// A unique scratch directory per case (deterministic inputs, but the
+/// filesystem is shared across concurrently-running test binaries).
+fn tdir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("wgkv-prop-spill-{}-{tag}-{n}", std::process::id()))
+}
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 6),
+        page_size: rng.usize(2, 5),
+    }
+}
+
+fn decoded(d: CacheDims, pos: i64, gate: f32) -> (Tensor, Tensor, Tensor) {
+    let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 * 0.7 + gate);
+    let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 * 0.3 - gate);
+    let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+    (k, v, g)
+}
+
+/// Drive a cache through a random history: decode inserts with mixed
+/// promotion gates, occasional evictions, occasional capacity growth.
+fn random_history(rng: &mut Rng, d: CacheDims, cache: &mut SequenceKvCache, steps: usize) {
+    let mut pos = 0i64;
+    for _ in 0..steps {
+        if cache.required_slots() > cache.capacity() {
+            let grown = cache.capacity() + d.page_size * 2;
+            cache.ensure_capacity(grown).unwrap();
+        }
+        let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
+        let (k, v, g) = decoded(d, pos, gate);
+        cache
+            .insert_decoded(&k, &v, &g, pos, |_, _, gg| gg >= 0.5)
+            .unwrap();
+        pos += 1;
+        if rng.bool(0.1) {
+            let l = rng.usize(0, d.n_layers);
+            let h = rng.usize(0, d.n_kv_heads);
+            let n = cache.global_len(l, h);
+            if n > 1 {
+                let keep: Vec<bool> = (0..n).map(|_| rng.bool(0.6)).collect();
+                cache.evict_global(l, h, &keep).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn spill_round_trip_is_bit_identical() {
+    forall(0x61, |rng| {
+        let d = dims(rng);
+        let cap = d.w_local + d.page_size * rng.usize(1, 4);
+        let mut cache = SequenceKvCache::new(d, cap).unwrap();
+        random_history(rng, d, &mut cache, rng.usize(0, 30));
+        // The pre-spill lane image is the identity reference.
+        let mut pool = DeviceViewPool::new();
+        let lane = pool.checkout(d, cache.capacity());
+        pool.sync_lane(lane, &mut cache).unwrap();
+        let lane_image: Vec<f32> = pool.lane_k(lane).to_vec();
+        prop_assert!(pool.release(lane), "live lane must release");
+
+        let snap = SessionSnapshot::from_cache(cache.snapshot().unwrap());
+        let meta = SpillMeta {
+            paged_kv_bytes: snap.paged_kv_bytes(),
+            capacity: snap.capacity(),
+            required_slots: snap.required_slots(),
+        };
+        let payload = snap.to_bytes();
+        let dir = tdir("rt");
+        let mut store = SpillStore::new(SpillConfig::new(&dir, 1 << 20), Failpoints::disarmed())
+            .map_err(|e| e.to_string())?;
+        store
+            .demote("s", payload.clone(), meta, 0)
+            .map_err(|_| "fault-free demote shed".to_string())?;
+        let events = store.flush();
+        prop_assert!(
+            events == vec![SpillEvent::Committed { key: "s".into() }],
+            "fault-free demotion must commit: {events:?}"
+        );
+        prop_assert!(store.meta("s") == Some(meta), "spill meta diverged");
+        prop_assert!(
+            store.spilled_bytes() == payload.len(),
+            "budget charge {} != payload {}",
+            store.spilled_bytes(),
+            payload.len()
+        );
+        let back = store.promote("s").map_err(|e| e.to_string())?;
+        prop_assert!(back == payload, "promoted payload diverged from the demoted bytes");
+        prop_assert!(
+            store.spilled_bytes() == 0 && !store.contains("s"),
+            "promote must drain the entry and its budget charge"
+        );
+        // End to end: decode, restore, wholesale-sync a fresh lane.
+        let decoded_snap = SessionSnapshot::from_bytes(&back).map_err(|e| e.to_string())?;
+        let cs = decoded_snap.into_cache();
+        let mut restored = SequenceKvCache::restore(&cs).unwrap();
+        let lane = pool.checkout(d, restored.capacity());
+        let r = pool.sync_lane(lane, &mut restored).unwrap();
+        prop_assert!(r.full, "a restored cache must wholesale-sync its lane");
+        prop_assert!(
+            pool.lane_k(lane) == &lane_image[..],
+            "resumed lane image diverged across the disk round trip"
+        );
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn spill_budget_is_hard_and_pinned_blobs_survive() {
+    forall(0x62, |rng| {
+        let budget = rng.usize(64, 512);
+        let dir = tdir("budget");
+        let mut store = SpillStore::new(SpillConfig::new(&dir, budget), Failpoints::disarmed())
+            .map_err(|e| e.to_string())?;
+        let mut pinned_alive: Vec<String> = Vec::new();
+        for t in 0..rng.usize(4, 40) as u64 {
+            match rng.usize(0, 5) {
+                0 | 1 => {
+                    let key = format!("s{}", rng.usize(0, 12));
+                    let bytes = rng.usize(1, budget / 2 + 2);
+                    if let Ok(evicted) = store.demote(&key, vec![t as u8; bytes], SpillMeta::default(), t) {
+                        pinned_alive.retain(|k| k != &key);
+                        for k in &evicted {
+                            prop_assert!(!pinned_alive.contains(k), "evicted a pinned blob '{k}'");
+                        }
+                    }
+                }
+                2 => {
+                    let key = format!("s{}", rng.usize(0, 12));
+                    match store.promote(&key) {
+                        Ok(_) | Err(SpillError::Gone { .. }) => {}
+                        Err(e) => return Err(format!("fault-free promote failed: {e}")),
+                    }
+                    pinned_alive.retain(|k| k != &key);
+                    // A second promote of the same key is a clean Gone.
+                    prop_assert!(
+                        matches!(store.promote(&key), Err(SpillError::Gone { .. })),
+                        "double promote accepted"
+                    );
+                }
+                3 => {
+                    let key = format!("s{}", rng.usize(0, 12));
+                    let pin = rng.bool(0.5);
+                    if store.set_pinned(&key, pin) {
+                        pinned_alive.retain(|k| k != &key);
+                        if pin {
+                            pinned_alive.push(key);
+                        }
+                    }
+                }
+                _ => {
+                    if rng.bool(0.5) {
+                        store.flush();
+                    } else {
+                        store.poll();
+                    }
+                    let key = format!("s{}", rng.usize(0, 12));
+                    store.touch(&key, t);
+                }
+            }
+            prop_assert!(
+                store.spilled_bytes() <= store.spill_byte_budget(),
+                "spilled bytes {} exceed budget {}",
+                store.spilled_bytes(),
+                store.spill_byte_budget()
+            );
+            for k in &pinned_alive {
+                prop_assert!(store.contains(k), "pinned blob '{k}' vanished");
+            }
+        }
+        store.flush();
+        prop_assert!(
+            store.spilled_bytes() <= store.spill_byte_budget(),
+            "over budget after the flush barrier"
+        );
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// The one committed `.bin` file under `dir`.
+fn blob_file(dir: &std::path::Path) -> Result<std::path::PathBuf, String> {
+    std::fs::read_dir(dir)
+        .map_err(|e| e.to_string())?
+        .filter_map(|d| d.ok())
+        .map(|d| d.path())
+        .find(|p| p.extension().map(|e| e == "bin").unwrap_or(false))
+        .ok_or_else(|| "no committed blob file".to_string())
+}
+
+#[test]
+fn corrupted_blobs_quarantine_with_one_clean_error() {
+    forall(0x63, |rng| {
+        let dir = tdir("corrupt");
+        let mut store = SpillStore::new(SpillConfig::new(&dir, 1 << 20), Failpoints::disarmed())
+            .map_err(|e| e.to_string())?;
+        let payload: Vec<u8> = (0..rng.usize(1, 256)).map(|_| rng.next_u32() as u8).collect();
+        store
+            .demote("s", payload.clone(), SpillMeta::default(), 0)
+            .map_err(|_| "demote shed".to_string())?;
+        store.flush();
+        let blob = blob_file(&dir)?;
+        let mut image = std::fs::read(&blob).map_err(|e| e.to_string())?;
+        if rng.bool(0.5) {
+            // One flipped byte anywhere — header or payload — must fail
+            // the magic/version/length/checksum validation.
+            let i = rng.usize(0, image.len());
+            image[i] ^= rng.usize(1, 256) as u8;
+        } else {
+            // Any truncation (torn write that somehow reached the final
+            // name) must fail the length check.
+            image.truncate(rng.usize(0, image.len()));
+        }
+        std::fs::write(&blob, &image).map_err(|e| e.to_string())?;
+        match store.promote("s") {
+            Err(SpillError::Corrupt { key, .. }) => {
+                prop_assert!(key == "s", "error names the wrong session")
+            }
+            other => return Err(format!("corrupted blob must be Corrupt, got {other:?}")),
+        }
+        prop_assert!(
+            matches!(store.promote("s"), Err(SpillError::Gone { .. })),
+            "a quarantined session must be Gone afterwards, not re-reported"
+        );
+        prop_assert!(
+            blob.with_extension("quarantine").exists(),
+            "corrupted blob must be kept under .quarantine for postmortem"
+        );
+        prop_assert!(store.quarantined == 1, "exactly one quarantine counted");
+        prop_assert!(
+            !store.contains("s") && store.spilled_bytes() == 0,
+            "quarantined entry must release its budget charge"
+        );
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// Drive a store through demote/flush/promote traffic under an armed
+/// `fp`, asserting only the graceful-degradation contract: budget bound
+/// at every step, committed blobs promote to bit-identical bytes or a
+/// typed attributable error, never junk, never a panic. `site` names
+/// the armed site for messages; `everything` accepts any typed error
+/// class (multi-site matrices); `p >= 1.0` additionally requires the
+/// site to have fired.
+fn exercise(site: &str, fp: Failpoints, p: f64, everything: bool, seed: u64) {
+    let dir = tdir("fp");
+    let mut store = SpillStore::new(SpillConfig::new(&dir, 1 << 20), fp).unwrap();
+    let mut rng = Rng::new(0x64 ^ seed);
+    let mut committed: Vec<(String, Vec<u8>)> = Vec::new();
+    for t in 0..24u64 {
+        let key = format!("s{}", rng.usize(0, 8));
+        let payload: Vec<u8> = (0..rng.usize(1, 128)).map(|_| rng.next_u32() as u8).collect();
+        // A demote refusal (Err) is a shed at admission: the host
+        // copy stays authoritative and nothing is charged.
+        if store.demote(&key, payload.clone(), SpillMeta::default(), t).is_ok() {
+            committed.retain(|(k, _)| k != &key);
+            for ev in store.flush() {
+                match ev {
+                    SpillEvent::Committed { key: k } => {
+                        if k == key {
+                            committed.push((k, payload.clone()));
+                        }
+                    }
+                    SpillEvent::Shed { .. } => {} // host copy kept
+                }
+            }
+        }
+        assert!(
+            store.spilled_bytes() <= store.spill_byte_budget(),
+            "site {site}: budget breached under faults"
+        );
+    }
+    // Every committed blob promotes to bit-identical bytes or a
+    // typed, attributable error — never junk, never a panic.
+    for (key, payload) in committed {
+        match store.promote(&key) {
+            Ok(back) => assert_eq!(back, payload, "site {site} p={p}: payload diverged"),
+            Err(SpillError::Corrupt { .. }) => assert!(
+                everything || site == FP_WRITE_CORRUPT,
+                "site {site}: unexpected corruption"
+            ),
+            Err(SpillError::Io { .. }) => {
+                assert!(everything || site == FP_READ_ERR, "site {site}: unexpected Io");
+                assert!(store.contains(&key), "an Io failure must keep the entry resident");
+            }
+            Err(SpillError::Gone { .. }) => {
+                panic!("site {site}: committed key '{key}' vanished")
+            }
+        }
+    }
+    if p >= 1.0 {
+        assert!(store.io_faults_injected > 0, "site {site} armed at 1.0 never fired");
+    }
+    let crashed = site == FP_WRITE_CRASH && p >= 1.0;
+    drop(store);
+    if crashed {
+        // Crash-before-rename leaves tmp files; a fresh store over
+        // the same directory must sweep them at startup.
+        let swept =
+            SpillStore::new(SpillConfig::new(&dir, 1 << 20), Failpoints::disarmed()).unwrap();
+        assert!(swept.recovered_files > 0, "startup sweep reclaimed nothing after crashes");
+        drop(swept);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn failpoint_matrix_degrades_gracefully_and_never_panics() {
+    let sites =
+        [FP_WRITE_SHORT, FP_WRITE_CORRUPT, FP_WRITE_ENOSPC, FP_WRITE_SLOW, FP_WRITE_CRASH, FP_READ_ERR];
+    let mut case = 0u64;
+    for &site in &sites {
+        for &p in &[0.5f64, 1.0] {
+            case += 1;
+            let mut fp = Failpoints::disarmed();
+            fp.arm(site, p);
+            exercise(site, fp, p, false, case);
+        }
+    }
+    // All sites together, through the same spec syntax --failpoints and
+    // WGKV_FAILPOINTS take.
+    let spec = format!(
+        "{FP_WRITE_SHORT}=0.3,{FP_WRITE_CORRUPT}=0.2,{FP_WRITE_ENOSPC}=0.2,\
+         {FP_WRITE_SLOW}=0.3,{FP_WRITE_CRASH}=0.2,{FP_READ_ERR}=0.3"
+    );
+    let fp = Failpoints::parse(&spec, 0xF00D).expect("matrix spec must parse");
+    exercise("all-sites", fp, 0.3, true, 99);
+}
+
+/// `make test-fault` arms `WGKV_FAILPOINTS` / `WGKV_FAILPOINT_SEED` for
+/// the whole fast tier; this test is the consumer that drives the spill
+/// store under exactly that operator-facing matrix. With the env unset
+/// it runs disarmed — the same invariants hold trivially — so the test
+/// is valid in both tiers.
+#[test]
+fn env_armed_matrix_degrades_gracefully() {
+    // p = 0.0 skips the must-have-fired check: an env matrix may arm
+    // sites this workload never crosses, or nothing at all.
+    exercise("env-matrix", Failpoints::from_env(), 0.0, true, 0xE21);
+}
