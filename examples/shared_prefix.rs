@@ -1,0 +1,119 @@
+//! Shared-prefix admission across sessions (Design 7): boots the real
+//! TCP server with `--prefix-share` semantics enabled, registers a long
+//! system preamble once via a warm-up request, then sends several
+//! requests whose prompts extend that preamble with private questions.
+//! Each of them binds the already-admitted shared KV pages read-only —
+//! zero prefill compute and zero private pool bytes for the shared span,
+//! copy-on-write at the divergence point — and the example prints the
+//! sharing counters from `stats` (`prefix_hits`, `shared_pages`,
+//! `cow_clones`, `shared_bytes_saved`) as they grow.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example shared_prefix
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+use wgkv::engine::{Engine, EngineConfig};
+use wgkv::scheduler::SchedulerConfig;
+use wgkv::server::{self, Client, GenerateParams};
+use wgkv::util::{Args, Rng};
+use wgkv::workload;
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let dir = args.str("artifacts", "artifacts");
+    let addr = args.str("addr", "127.0.0.1:7415");
+    let sessions = args.usize("sessions", 3)?;
+    let max_new = args.usize("max-new", 8)?;
+    let min_tokens = args.usize("prefix-min-tokens", 32)?;
+
+    let (cmds, _engine_handle) = server::spawn_engine_thread_with(
+        move || {
+            let mut engine = Engine::load(dir, EngineConfig::default())?;
+            // What `wgkv serve --prefix-share` flips on.
+            engine.enable_prefix_share(min_tokens, 64);
+            Ok(engine)
+        },
+        SchedulerConfig { max_active: 4, ..SchedulerConfig::default() },
+    );
+    {
+        let addr = addr.clone();
+        let cmds = cmds.clone();
+        std::thread::spawn(move || server::serve(&addr, cmds));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let mut client = Client::connect(&addr)?;
+
+    // The shared preamble: a seeded retrieval context every session
+    // opens with, long past the min-tokens registration floor.
+    let mut rng = Rng::new(11);
+    let preamble = workload::gen_kv(&mut rng, 8, 5).prompt;
+    assert!(preamble.len() > min_tokens, "preamble must clear the registration floor");
+
+    // Warm-up: a request whose prompt is *exactly* the preamble. Its
+    // private prefill registers the admitted prefix with the store;
+    // every later prompt extending it binds instead of re-prefilling.
+    let t0 = Instant::now();
+    let _ = client.generate(GenerateParams {
+        prompt: preamble.clone(),
+        max_new,
+        ..GenerateParams::default()
+    })?;
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = client.stats()?;
+    println!(
+        "# shared-prefix admission ({} byte preamble, {sessions} follow-up sessions)",
+        preamble.len()
+    );
+    println!("warm-up registered the preamble in {warm_ms:.1} ms");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "session", "latency_ms", "prefix_hits", "shared_pgs", "cow_clones", "saved_bytes"
+    );
+    println!(
+        "{:<10} {:>12.1} {:>12} {:>12} {:>12} {:>14}",
+        "warm-up", warm_ms, stats.prefix_hits, stats.shared_pages, stats.cow_clones,
+        stats.shared_bytes_saved
+    );
+
+    // Follow-up sessions: same preamble, private question suffixes. Each
+    // binds the shared pages and teacher-forces only its own suffix.
+    for s in 0..sessions {
+        let prompt = format!("{preamble}\nq: k{s:02}\na: ");
+        let t0 = Instant::now();
+        let c = client.generate(GenerateParams {
+            prompt,
+            max_new,
+            ..GenerateParams::default()
+        })?;
+        let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let stats = client.stats()?;
+        println!(
+            "{:<10} {:>12.1} {:>12} {:>12} {:>12} {:>14}   -> {:?}",
+            format!("s{s}"),
+            dt_ms,
+            stats.prefix_hits,
+            stats.shared_pages,
+            stats.cow_clones,
+            stats.shared_bytes_saved,
+            c.text
+        );
+    }
+
+    let stats = client.stats()?;
+    assert!(
+        stats.prefix_hits >= sessions as u64,
+        "every follow-up session must bind the shared preamble \
+         ({} hits for {sessions} sessions)",
+        stats.prefix_hits
+    );
+    assert!(stats.shared_bytes_saved > 0, "binds must record avoided prefill bytes");
+    println!(
+        "\nfinal: {} hits | {} shared pages charged once | {} COW clones | {} B of \
+         per-session prefill KV avoided. Done.",
+        stats.prefix_hits, stats.shared_pages, stats.cow_clones, stats.shared_bytes_saved
+    );
+    Ok(())
+}

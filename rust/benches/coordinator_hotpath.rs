@@ -844,6 +844,132 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // --- shared-prefix admission (PR 7): N=4 sessions arriving over the
+    // same admitted preamble. A warm-up session prefills the preamble
+    // privately and registers it with the SharedSegmentStore; the four
+    // binders then match + bind the shared pages (zero prefill compute,
+    // zero private pool bytes for the shared span) and teacher-force only
+    // their private suffixes. The preamble length is chosen so the
+    // per-head admitted span ends mid-page: every binder's first private
+    // global append must copy-on-write the partial shared tail, so the
+    // sim exercises the full register -> match -> bind -> diverge
+    // lifecycle. Tracked against a lockstep unshared baseline (four
+    // private prefills of the same preamble): the shared world — store
+    // bytes charged once plus every binder's private pool — must peak
+    // strictly below the unshared world at every tick.
+    {
+        use wgkv::kvcache::SharedSegmentStore;
+
+        let n_pre = 250usize; // per-head span 218 = 13 full pages + partial tail
+        let n_suffix = 48usize;
+        let n_sessions = 4usize;
+        let mut rng = Rng::new(12);
+        let preamble: Vec<i32> = (0..n_pre as i32).map(|i| 3 * i).collect();
+        let mut kp = Tensor::zeros(&[d.n_layers, d.n_kv_heads, n_pre, d.d_head]);
+        let mut vp = Tensor::zeros(&[d.n_layers, d.n_kv_heads, n_pre, d.d_head]);
+        for x in kp.data.iter_mut().chain(vp.data.iter_mut()) {
+            *x = rng.f32();
+        }
+        // Fully admitted: the shared segment is the paper's compact
+        // admitted footprint, kept hot across sessions.
+        let gp = Tensor::full(&[d.n_layers, d.n_kv_heads, n_pre], 0.9);
+        let prefill = |cache: &mut SequenceKvCache| {
+            cache
+                .populate_from_prefill(&kp, &vp, &gp, n_pre, |_, _, _, gate| gate >= 0.5)
+                .unwrap();
+        };
+
+        // Warm-up session registers the preamble, then retires: only the
+        // store's charged-once copy stays resident.
+        let mut store = SharedSegmentStore::new(32, 8);
+        {
+            let mut warm = SequenceKvCache::new(d, 512).unwrap();
+            prefill(&mut warm);
+            assert!(store.register(&preamble, &warm).unwrap());
+        }
+
+        let mut prompt = preamble.clone();
+        prompt.push(9001); // a binder always has a private suffix to force
+        let pm = store.match_prefix(&prompt).expect("registered preamble must match");
+        assert_eq!(pm.prefix_len(), n_pre);
+        let mut binders: Vec<SequenceKvCache> = (0..n_sessions)
+            .map(|_| {
+                let mut c = SequenceKvCache::new(d, 512).unwrap();
+                store.bind(&pm, &mut c).unwrap();
+                c
+            })
+            .collect();
+        let mut controls: Vec<SequenceKvCache> = (0..n_sessions)
+            .map(|_| {
+                let mut c = SequenceKvCache::new(d, 512).unwrap();
+                prefill(&mut c);
+                c
+            })
+            .collect();
+        assert_eq!(
+            binders[0].k_exec(),
+            controls[0].k_exec(),
+            "bind must reconstruct the private prefill's exec view"
+        );
+
+        let shared_world = |store: &SharedSegmentStore, binders: &[SequenceKvCache]| {
+            store.shared_kv_bytes()
+                + binders.iter().map(|c| c.allocated_kv_bytes()).sum::<usize>()
+        };
+        let unshared_world =
+            |controls: &[SequenceKvCache]| -> usize {
+                controls.iter().map(|c| c.allocated_kv_bytes()).sum()
+            };
+        let mut shared_peak = shared_world(&store, &binders);
+        let mut unshared_peak = unshared_world(&controls);
+        assert!(
+            shared_peak < unshared_peak,
+            "sharing must already win at bind time ({shared_peak} B vs {unshared_peak} B)"
+        );
+
+        // Lockstep decode: every session (shared and control) forces the
+        // same suffix stream; promotions push ring victims into global,
+        // which copy-on-writes each binder's partial shared tail.
+        let (kd, vd, gd) = decoded(&mut rng, d);
+        for step in 0..n_suffix as i64 {
+            let pos = n_pre as i64 + step;
+            for c in binders.iter_mut().chain(controls.iter_mut()) {
+                c.insert_decoded(&kd, &vd, &gd, pos, |_, _, _| true).unwrap();
+            }
+            let sh = shared_world(&store, &binders);
+            let un = unshared_world(&controls);
+            assert!(
+                sh < un,
+                "step {step}: shared world {sh} B must stay under unshared {un} B"
+            );
+            shared_peak = shared_peak.max(sh);
+            unshared_peak = unshared_peak.max(un);
+        }
+
+        let (hits, cows, saved) = store.counters().get();
+        assert_eq!(hits, n_sessions as u64, "every binder must count as a hit");
+        // 218 % 16 != 0: every (layer, head) has a partial shared tail, so
+        // each binder clones exactly once per head at divergence.
+        let heads = (d.n_layers * d.n_kv_heads) as u64;
+        assert!(cows >= 1, "divergence must trigger at least one COW clone");
+        assert_eq!(cows, n_sessions as u64 * heads, "one tail clone per bound head");
+        assert!(saved > 0, "binds must record avoided prefill KV bytes");
+        assert!(store.shared_pages() > 0, "the store must still pin the segment");
+        println!(
+            "prefix-share sim @N={}: {} hits, {} COW clones, {} B saved/bind-sum, \
+             shared peak {} B < unshared peak {} B ({} shared pages charged once)",
+            n_sessions, hits, cows, saved, shared_peak, unshared_peak,
+            store.shared_pages()
+        );
+        report.counter("prefix_hits", hits);
+        report.counter("shared_pages", store.shared_pages());
+        report.counter("cow_clones", cows);
+        report.counter("shared_bytes_saved", saved);
+        report.counter("prefix_shared_bytes_peak", shared_peak);
+        report.counter("prefix_unshared_bytes_peak", unshared_peak);
+        report.counter("prefix_share_ok", shared_peak < unshared_peak);
+    }
+
     // --- substrate: JSON codec + RNG (server protocol budget).
     {
         let payload = Json::obj()

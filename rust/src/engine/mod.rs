@@ -66,7 +66,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::admission::{AdmissionPolicy, PolicyKind};
 use crate::eviction::{EvictorSnapshot, SnapKvConfig, SnapKvEvictor};
-use crate::kvcache::{dual::CacheDims, CacheSnapshot, CacheStats, SequenceKvCache};
+use crate::kvcache::{
+    dual::CacheDims, CacheSnapshot, CacheStats, PrefixMatch, SequenceKvCache, SharedSegmentStore,
+};
 use crate::metrics::EngineMetrics;
 use crate::model::{ByteTokenizer, Sampler};
 use crate::runtime::device_cache::{DeviceExecView, DeviceViewPool, LaneId, TransferStats};
@@ -496,6 +498,11 @@ pub struct Engine {
     /// Shared staged execution buffers for batched decode; lanes are bound
     /// to sessions by [`Self::decode_batch`] and recycled across sessions.
     view_pool: DeviceViewPool,
+    /// Cross-session shared-prefix segment store (`--prefix-share`).
+    /// `None` keeps every session fully private; enabled, every unshared
+    /// prefill registers its admitted prefix and every new prompt is
+    /// probed for a registered prefix first ([`Self::prefill`]).
+    prefix: Option<SharedSegmentStore>,
 }
 
 impl Engine {
@@ -509,7 +516,58 @@ impl Engine {
             metrics: EngineMetrics::new(),
             cfg,
             view_pool: DeviceViewPool::new(),
+            prefix: None,
         })
+    }
+
+    /// Enable cross-session shared-prefix admission (the serve
+    /// `--prefix-share` flag): prompts of at least `min_prefix` tokens
+    /// register their admitted prefix after an unshared prefill, and new
+    /// prompts extending a registered prefix bind its pages read-only,
+    /// paying prefill compute and private pool bytes only for their
+    /// suffix. Sharing assumes a uniform admission policy across the
+    /// sessions that share (the registrant's admitted set is what
+    /// binders get); the store holds at most `max_segments` segments,
+    /// evicting binder-free ones FIFO.
+    pub fn enable_prefix_share(&mut self, min_prefix: usize, max_segments: usize) {
+        self.prefix = Some(SharedSegmentStore::new(min_prefix, max_segments));
+    }
+
+    /// Whether shared-prefix admission is on.
+    pub fn prefix_share_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Longest registered shared prefix of `prompt`, in tokens — 0 when
+    /// sharing is disabled or nothing matches. The scheduler's prefill
+    /// planner charges a matching session only for its private suffix.
+    pub fn prefix_match_len(&self, prompt: &[i32]) -> usize {
+        self.prefix
+            .as_ref()
+            .and_then(|s| s.match_prefix(prompt))
+            .map(|m| m.prefix_len())
+            .unwrap_or(0)
+    }
+
+    /// Physical K+V bytes the shared segment pool pins — charged against
+    /// the scheduler's KV byte budget exactly **once**, however many
+    /// sessions bind them (the paged-pool mirror of
+    /// [`Self::pooled_view_bytes`]).
+    pub fn shared_prefix_bytes(&self) -> usize {
+        self.prefix.as_ref().map(|s| s.shared_kv_bytes()).unwrap_or(0)
+    }
+
+    /// Mirror the shared-prefix counters into [`Self::metrics`] — cheap
+    /// relaxed loads, called by the scheduler at every tick end and by
+    /// stats surfacing before a metrics read.
+    pub fn mirror_prefix_metrics(&mut self) {
+        if let Some(store) = &self.prefix {
+            let (hits, cows, saved) = store.counters().get();
+            self.metrics.prefix_hits = hits;
+            self.metrics.cow_clones = cows;
+            self.metrics.shared_bytes_saved = saved;
+            self.metrics.shared_pages = store.shared_pages() as u64;
+        }
     }
 
     pub fn dims(&self) -> &ModelDims {
@@ -565,6 +623,14 @@ impl Engine {
     /// Run prefill for `tokens`, populating the session's dual cache and
     /// leaving next-token logits in `session.last_logits`.
     ///
+    /// With shared-prefix admission on ([`Self::enable_prefix_share`]),
+    /// the prompt is probed against the registered segments first: a
+    /// match binds the admitted shared pages read-only and teacher-forces
+    /// only the private suffix ([`Self::prefill_shared`] — zero prefill
+    /// compute and zero private pool bytes for the shared span); a miss
+    /// runs the unshared path and registers the freshly admitted prefix
+    /// for future sessions.
+    ///
     /// Prompts longer than the largest exported bucket are handled by
     /// *chunked prefill*: the first `max_bucket` tokens go through the
     /// parallel prefill executable, the remainder is teacher-forced through
@@ -572,6 +638,65 @@ impl Engine {
     /// admission) — exactly what a serving engine with admission does when
     /// a prompt outgrows its longest kernel.
     pub fn prefill(&mut self, sess: &mut Session, tokens: &[i32]) -> Result<()> {
+        if let Some(m) = self.prefix.as_ref().and_then(|s| s.match_prefix(tokens)) {
+            return self.prefill_shared(sess, tokens, &m);
+        }
+        self.prefill_unshared(sess, tokens)?;
+        if self.prefix.is_some() {
+            let cache = sess.cache.as_ref().expect("prefill left no cache");
+            self.prefix.as_mut().unwrap().register(tokens, cache)?;
+        }
+        Ok(())
+    }
+
+    /// Shared-prefix fast path: size a fresh cache for the segment, bind
+    /// its pages read-only ([`SequenceKvCache::bind_shared_prefix`]), then
+    /// teacher-force the private suffix through the decode path — exactly
+    /// how chunked-prefill tails are handled, so outputs are
+    /// token-identical to an unshared prefill of the whole prompt (the
+    /// match is a *strict* prefix, so at least one suffix token runs and
+    /// sets `last_logits`). Capacity grows organically through
+    /// [`Self::decode_step`] as suffix tokens are promoted.
+    fn prefill_shared(
+        &mut self,
+        sess: &mut Session,
+        tokens: &[i32],
+        m: &PrefixMatch,
+    ) -> Result<()> {
+        let n = tokens.len();
+        let p = m.prefix_len();
+        debug_assert!(p < n, "match_prefix guarantees a strict prefix");
+        let t0 = Instant::now();
+        let store = self.prefix.as_ref().unwrap();
+        let shared_slots = store.match_slots(m)?;
+        let d = self.cache_dims();
+        let required = shared_slots + 1 + d.w_local + self.cfg.capacity_headroom;
+        let cap = self
+            .runtime
+            .pick_decode_capacity(required)
+            .map_err(|e| anyhow!("KV OOM at shared-prefix bind: {e}"))?;
+        let mut cache = SequenceKvCache::new(d, cap)?;
+        let bound = store.bind(m, &mut cache)?;
+        debug_assert_eq!(bound, p);
+        sess.cache = Some(cache);
+        sess.pos = p;
+        // The shared span's gate statistics live with the registrant; the
+        // binder's Fig-13 analysis would need a private prefill anyway.
+        sess.prefill_gates = None;
+        for &t in &tokens[p..] {
+            self.decode_step(sess, t)?;
+        }
+        sess.prompt_len = n;
+        self.metrics.prefill.record(t0.elapsed());
+        // The suffix tokens were already counted by decode_step (the
+        // chunked-tail convention); account the shared span here.
+        self.metrics.prompt_tokens += p as u64;
+        Ok(())
+    }
+
+    /// The unshared prefill body (and the whole story when sharing is
+    /// off); see [`Self::prefill`] for the contract.
+    fn prefill_unshared(&mut self, sess: &mut Session, tokens: &[i32]) -> Result<()> {
         let n = tokens.len();
         if n == 0 {
             bail!("empty prompt");
@@ -579,7 +704,7 @@ impl Engine {
         let max_bucket = self.max_prompt_len();
         if n > max_bucket {
             let (head, tail) = tokens.split_at(max_bucket);
-            self.prefill(sess, head)?;
+            self.prefill_unshared(sess, head)?;
             for &t in tail {
                 self.decode_step(sess, t)?;
             }

@@ -32,22 +32,31 @@
 //! journal to stay in sync at O(dirty slots) per decode step instead of
 //! re-uploading the whole `[L, Hkv, cap, dh]` view.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, Result};
 
 use super::pool::{KvPool, PageId, PageTable};
+use super::prefix::{SharedCounters, SharedSegment};
 use crate::runtime::tensor::Tensor;
 
 /// Static dimensions of a cache instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheDims {
+    /// Transformer layers.
     pub n_layers: usize,
+    /// KV heads per layer.
     pub n_kv_heads: usize,
+    /// Per-head K/V vector width.
     pub d_head: usize,
+    /// Local ring window (the unconditional "grace period" slots).
     pub w_local: usize,
+    /// Token slots per physical pool page.
     pub page_size: usize,
 }
 
 impl CacheDims {
+    /// Total (layer, head) cache count, `n_layers * n_kv_heads`.
     pub fn n_heads_total(&self) -> usize {
         self.n_layers * self.n_kv_heads
     }
@@ -62,7 +71,15 @@ struct LocalEntry {
 
 /// One (layer, head)'s logical caches + Quest page metadata.
 struct HeadCache {
+    /// Private global pages (in `SequenceKvCache::pool`), logically
+    /// *after* the shared span.
     global: PageTable,
+    /// Read-only shared-prefix pages (in the engine-wide shared pool,
+    /// refcounted — see [`crate::kvcache::prefix`]) holding logical
+    /// global tokens `[0, shared_len)`. Empty for unshared sessions.
+    shared_pages: Vec<PageId>,
+    /// Logical global tokens resident in `shared_pages`.
+    shared_len: usize,
     /// Fixed pages backing the ring buffer (ceil(w_local / page_size)).
     local_pages: Vec<PageId>,
     local: Vec<LocalEntry>,
@@ -76,17 +93,23 @@ struct HeadCache {
 /// one V vector and one mask element.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DirtySpan {
+    /// Layer of the touched (layer, head) view plane.
     pub layer: u32,
+    /// KV head of the touched plane.
     pub head: u32,
+    /// First touched slot (inclusive).
     pub lo: u32,
+    /// One past the last touched slot.
     pub hi: u32,
 }
 
 impl DirtySpan {
+    /// Slots covered by the span.
     pub fn len(&self) -> usize {
         (self.hi - self.lo) as usize
     }
 
+    /// True when the span covers no slots.
     pub fn is_empty(&self) -> bool {
         self.hi == self.lo
     }
@@ -114,6 +137,7 @@ pub struct DirtyLog {
 }
 
 impl DirtyLog {
+    /// True when the log records no view mutations at all.
     pub fn is_empty(&self) -> bool {
         !self.full && self.spans.is_empty() && self.meta.is_empty()
     }
@@ -199,6 +223,17 @@ impl CacheSnapshot {
     /// exported decode executable).
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// Per-head logical contents (the shared-prefix store registers
+    /// segments from a snapshot rather than re-walking the live cache).
+    pub(crate) fn heads(&self) -> &[HeadSnapshot] {
+        &self.heads
+    }
+
+    /// Lifetime counters captured with the snapshot.
+    pub(crate) fn stats(&self) -> CacheStats {
+        self.stats
     }
 
     /// Resident tokens captured across all heads.
@@ -369,6 +404,15 @@ pub struct SequenceKvCache {
     /// Running count of resident tokens across all (layer, head) caches,
     /// updated on insert/promote/evict — O(1) for scheduler polls.
     resident: usize,
+    /// Engine-wide pool holding this session's read-only shared-prefix
+    /// pages. `None` for unshared sessions; set by
+    /// [`Self::bind_shared_prefix`] and kept until the last shared
+    /// reference is released (eviction un-share or drop).
+    shared_pool: Option<Arc<Mutex<KvPool>>>,
+    /// Cross-session sharing counters (COW clone events are recorded
+    /// here, at the layer where the divergence actually happens).
+    shared_counters: Option<Arc<SharedCounters>>,
+    /// Lifetime admission/promotion/eviction counters.
     pub stats: CacheStats,
 }
 
@@ -384,6 +428,8 @@ impl SequenceKvCache {
         let heads = (0..dims.n_heads_total())
             .map(|_| HeadCache {
                 global: PageTable::new(dims.page_size),
+                shared_pages: Vec::new(),
+                shared_len: 0,
                 local_pages: (0..local_page_count).map(|_| pool.alloc()).collect(),
                 local: vec![LocalEntry::default(); dims.w_local],
                 kmin: Vec::new(),
@@ -405,14 +451,18 @@ impl SequenceKvCache {
             journal: DirtyLog { full: true, ..DirtyLog::default() },
             epoch: 0,
             resident: 0,
+            shared_pool: None,
+            shared_counters: None,
             stats: CacheStats::default(),
         })
     }
 
+    /// Geometry the cache was created with.
     pub fn dims(&self) -> CacheDims {
         self.dims
     }
 
+    /// Execution-view capacity (slots per (layer, head) plane).
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -427,10 +477,20 @@ impl SequenceKvCache {
         self.cap - self.dims.w_local
     }
 
+    /// Logical Global Cache length at (l, h): shared-prefix span plus
+    /// the private region.
     pub fn global_len(&self, l: usize, h: usize) -> usize {
-        self.heads[self.head_idx(l, h)].global.len()
+        let hc = &self.heads[self.head_idx(l, h)];
+        hc.shared_len + hc.global.len()
     }
 
+    /// Logical global tokens at (l, h) still backed by read-only shared
+    /// pages (0 for unshared sessions, shrinks at the COW divergence).
+    pub fn shared_global_len(&self, l: usize, h: usize) -> usize {
+        self.heads[self.head_idx(l, h)].shared_len
+    }
+
+    /// Occupied ring slots at (l, h).
     pub fn local_len(&self, l: usize, h: usize) -> usize {
         self.heads[self.head_idx(l, h)]
             .local
@@ -482,19 +542,26 @@ impl SequenceKvCache {
         max_global + 1 + self.dims.w_local
     }
 
+    /// Execution-view K slots, `[L, Hkv, cap, dh]`.
     pub fn k_exec(&self) -> &Tensor {
         &self.k_exec
     }
 
+    /// Execution-view V slots, same shape as [`Self::k_exec`].
     pub fn v_exec(&self) -> &Tensor {
         &self.v_exec
     }
 
+    /// Execution-view slot validity mask, `[L, Hkv, cap]`.
     pub fn slot_mask(&self) -> &Tensor {
         &self.mask
     }
 
-    /// Physical KV bytes currently allocated in the paged pool.
+    /// Physical KV bytes currently allocated in this session's *private*
+    /// paged pool. Shared-prefix pages are deliberately excluded: they
+    /// live in the engine-wide shared pool and are charged once there
+    /// ([`crate::kvcache::prefix::SharedSegmentStore::shared_kv_bytes`]),
+    /// not per binder.
     pub fn allocated_kv_bytes(&self) -> usize {
         self.pool.allocated_kv_bytes()
     }
@@ -786,7 +853,10 @@ impl SequenceKvCache {
     // -- writes ----------------------------------------------------------------
 
     /// Append a token to (l, h)'s Global Cache: pool write, exec-view write,
-    /// Quest metadata update.
+    /// Quest metadata update. On a shared-prefix session this is the write
+    /// that triggers copy-on-write: the first private append lands in the
+    /// shared tail page when that page is partially filled, so the tail is
+    /// cloned into a private page before anything is written.
     fn global_append(
         &mut self,
         l: usize,
@@ -797,7 +867,12 @@ impl SequenceKvCache {
         pos: i64,
     ) -> Result<()> {
         let hi = self.head_idx(l, h);
-        let idx = self.heads[hi].global.len();
+        if self.heads[hi].global.is_empty()
+            && self.heads[hi].shared_len % self.dims.page_size != 0
+        {
+            self.cow_clone_shared_tail(hi);
+        }
+        let idx = self.heads[hi].shared_len + self.heads[hi].global.len();
         if idx >= self.n_global_slots() {
             bail!(
                 "global region overflow at (l={l}, h={h}): {idx} >= {} — \
@@ -811,6 +886,46 @@ impl SequenceKvCache {
         self.write_exec(l, h, idx, k, v);
         self.resident += 1;
         Ok(())
+    }
+
+    /// Copy-on-write divergence for one head: clone the shared tail page's
+    /// `shared_len % page_size` tokens into a fresh private page, adopt it
+    /// as the head's private table, shrink the shared span to the page
+    /// boundary and drop the reference on the shared tail page. Logical
+    /// content, exec view, Quest bounds and resident count are all
+    /// unchanged — only the physical backing of the tail tokens moves, so
+    /// no journal marks are needed.
+    fn cow_clone_shared_tail(&mut self, hi: usize) {
+        let ps = self.dims.page_size;
+        let tail_len = self.heads[hi].shared_len % ps;
+        debug_assert!(tail_len > 0 && self.heads[hi].global.is_empty());
+        let tail_page = *self.heads[hi].shared_pages.last().unwrap();
+        let shared = self
+            .shared_pool
+            .clone()
+            .expect("shared tail page without a shared pool");
+        let clone_page = self.pool.alloc();
+        {
+            let sp = shared.lock().unwrap();
+            for s in 0..tail_len {
+                self.pool.write_token(
+                    clone_page,
+                    s,
+                    sp.k_at(tail_page, s),
+                    sp.v_at(tail_page, s),
+                    sp.gate_at(tail_page, s),
+                    sp.pos_at(tail_page, s),
+                );
+            }
+        }
+        let hc = &mut self.heads[hi];
+        hc.global.adopt(clone_page, tail_len);
+        hc.shared_pages.pop();
+        hc.shared_len -= tail_len;
+        shared.lock().unwrap().release(tail_page);
+        if let Some(c) = &self.shared_counters {
+            c.cow_clones.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
     }
 
     /// Write a token into (l, h)'s ring slot (pool + exec view).
@@ -922,17 +1037,67 @@ impl SequenceKvCache {
 
     // -- eviction support --------------------------------------------------------
 
+    /// Read logical global token `i` at head index `hi` across the
+    /// shared/private boundary: owned `(k, v, gate, pos)`. Indices below
+    /// `shared_len` resolve into the engine-wide shared pool (taking its
+    /// lock), the rest into the private page table.
+    fn read_global_token(&self, hi: usize, i: usize) -> Result<(Vec<f32>, Vec<f32>, f32, i64)> {
+        let hc = &self.heads[hi];
+        if i < hc.shared_len {
+            let ps = self.dims.page_size;
+            let (page, slot) = (hc.shared_pages[i / ps], i % ps);
+            let pool = self
+                .shared_pool
+                .as_ref()
+                .expect("shared_len > 0 without a shared pool")
+                .lock()
+                .unwrap();
+            return Ok((
+                pool.k_at(page, slot).to_vec(),
+                pool.v_at(page, slot).to_vec(),
+                pool.gate_at(page, slot),
+                pool.pos_at(page, slot),
+            ));
+        }
+        let (page, slot) = hc.global.locate(i - hc.shared_len)?;
+        Ok((
+            self.pool.k_at(page, slot).to_vec(),
+            self.pool.v_at(page, slot).to_vec(),
+            self.pool.gate_at(page, slot),
+            self.pool.pos_at(page, slot),
+        ))
+    }
+
     /// Key vector of global token `i` at (l, h) (eviction scoring input).
+    /// Served from the execution view, which mirrors every pool write
+    /// bit-for-bit — this keeps the borrow shape of the pre-sharing API
+    /// (a shared-pool read would have to hand back an owned copy from
+    /// behind the lock).
     pub fn global_key(&self, l: usize, h: usize, i: usize) -> Result<&[f32]> {
-        let hi = self.head_idx(l, h);
-        let (page, slot) = self.heads[hi].global.locate(i)?;
-        Ok(self.pool.k_at(page, slot))
+        let len = self.global_len(l, h);
+        if i >= len {
+            bail!("logical index {i} out of range (len {len})");
+        }
+        let dh = self.dims.d_head;
+        Ok(&self.k_exec.slice_at(&[l, h])[i * dh..(i + 1) * dh])
     }
 
     /// Absolute position of global token `i` at (l, h).
     pub fn global_pos(&self, l: usize, h: usize, i: usize) -> Result<i64> {
         let hi = self.head_idx(l, h);
-        let (page, slot) = self.heads[hi].global.locate(i)?;
+        let hc = &self.heads[hi];
+        if i < hc.shared_len {
+            let ps = self.dims.page_size;
+            let (page, slot) = (hc.shared_pages[i / ps], i % ps);
+            let pool = self
+                .shared_pool
+                .as_ref()
+                .expect("shared_len > 0 without a shared pool")
+                .lock()
+                .unwrap();
+            return Ok(pool.pos_at(page, slot));
+        }
+        let (page, slot) = hc.global.locate(i - hc.shared_len)?;
         Ok(self.pool.pos_at(page, slot))
     }
 
@@ -941,26 +1106,34 @@ impl SequenceKvCache {
     /// exec view and Quest metadata for the head. Returns evicted count.
     pub fn evict_global(&mut self, l: usize, h: usize, keep: &[bool]) -> Result<usize> {
         let hi = self.head_idx(l, h);
-        let len = self.heads[hi].global.len();
+        let len = self.global_len(l, h);
         if keep.len() != len {
             bail!("keep mask length {} != global len {len}", keep.len());
         }
         let dh = self.dims.d_head;
-        // Snapshot survivors.
+        // Snapshot survivors (across the shared/private boundary).
         let mut survivors: Vec<(Vec<f32>, Vec<f32>, f32, i64)> = Vec::new();
         for (i, &kp) in keep.iter().enumerate() {
             if kp {
-                let (page, slot) = self.heads[hi].global.locate(i)?;
-                survivors.push((
-                    self.pool.k_at(page, slot).to_vec(),
-                    self.pool.v_at(page, slot).to_vec(),
-                    self.pool.gate_at(page, slot),
-                    self.pool.pos_at(page, slot),
-                ));
+                survivors.push(self.read_global_token(hi, i)?);
             }
         }
         let evicted = len - survivors.len();
-        // Reset the head's global region.
+        // Reset the head's global region. Eviction un-shares the head:
+        // the compacted region is rewritten privately below, so the
+        // shared-page references are dropped here (the shared pool
+        // recycles each page once its last binder lets go).
+        if self.heads[hi].shared_len > 0 {
+            let pool = self
+                .shared_pool
+                .clone()
+                .expect("shared_len > 0 without a shared pool");
+            let mut sp = pool.lock().unwrap();
+            for p in self.heads[hi].shared_pages.drain(..) {
+                sp.release(p);
+            }
+            self.heads[hi].shared_len = 0;
+        }
         {
             let hc = &mut self.heads[hi];
             hc.global.clear(&mut self.pool);
@@ -1024,7 +1197,7 @@ impl SequenceKvCache {
             for h in 0..d.n_kv_heads {
                 let hi = self.head_idx(l, h);
                 let hc = &self.heads[hi];
-                let g_len = hc.global.len();
+                let g_len = hc.shared_len + hc.global.len();
                 let mut hs = HeadSnapshot {
                     global_k: Vec::with_capacity(g_len * dh),
                     global_v: Vec::with_capacity(g_len * dh),
@@ -1036,12 +1209,14 @@ impl SequenceKvCache {
                     ring_gate: Vec::new(),
                     ring_pos: Vec::new(),
                 };
+                // Dispatching reads make the blob self-contained: a parked
+                // session never depends on its shared segment surviving.
                 for i in 0..g_len {
-                    let (page, slot) = hc.global.locate(i)?;
-                    hs.global_k.extend_from_slice(self.pool.k_at(page, slot));
-                    hs.global_v.extend_from_slice(self.pool.v_at(page, slot));
-                    hs.global_gate.push(self.pool.gate_at(page, slot));
-                    hs.global_pos.push(self.pool.pos_at(page, slot));
+                    let (k, v, gate, pos) = self.read_global_token(hi, i)?;
+                    hs.global_k.extend_from_slice(&k);
+                    hs.global_v.extend_from_slice(&v);
+                    hs.global_gate.push(gate);
+                    hs.global_pos.push(pos);
                 }
                 for r in 0..d.w_local {
                     if !hc.local[r].occupied {
@@ -1144,11 +1319,9 @@ impl SequenceKvCache {
         for li in 0..l {
             for hi_ in 0..h {
                 let hi = self.head_idx(li, hi_);
-                // Global region.
-                for i in 0..self.heads[hi].global.len() {
-                    let (page, slot) = self.heads[hi].global.locate(i)?;
-                    let k = self.pool.k_at(page, slot).to_vec();
-                    let v = self.pool.v_at(page, slot).to_vec();
+                // Global region (shared span + private, dispatched).
+                for i in 0..(self.heads[hi].shared_len + self.heads[hi].global.len()) {
+                    let (k, v, _, _) = self.read_global_token(hi, i)?;
                     self.write_exec(li, hi_, i, &k, &v);
                 }
                 // Ring region.
@@ -1165,6 +1338,107 @@ impl SequenceKvCache {
             }
         }
         Ok(())
+    }
+
+    // -- shared-prefix binding ---------------------------------------------------
+
+    /// Bind a registered shared-prefix segment into this (freshly created,
+    /// still empty) cache: every head's global span `[0, shared_len)` is
+    /// backed by read-only refcounted pages in the engine-wide shared
+    /// `pool`, the segment's ring window is replayed into the private
+    /// ring, and the execution view + Quest bounds are rebuilt from the
+    /// shared content. After this the cache is in the exact state an
+    /// unshared prefill of the segment's tokens would have produced (the
+    /// view is a pure function of logical content at a given capacity),
+    /// so the caller teacher-forces only its private suffix. The first
+    /// private global append triggers copy-on-write at the divergence
+    /// point; eviction, park and drop all release the shared references.
+    pub fn bind_shared_prefix(
+        &mut self,
+        seg: &SharedSegment,
+        pool: Arc<Mutex<KvPool>>,
+        counters: Arc<SharedCounters>,
+    ) -> Result<()> {
+        let d = self.dims;
+        if seg.dims != d {
+            bail!("segment dims {:?} != cache dims {:?}", seg.dims, d);
+        }
+        if self.resident != 0 || self.heads.iter().any(|hc| !hc.global.is_empty() || hc.shared_len > 0) {
+            bail!("bind_shared_prefix on a non-empty cache");
+        }
+        if seg.heads.len() != d.n_heads_total() {
+            bail!("segment has {} heads, dims imply {}", seg.heads.len(), d.n_heads_total());
+        }
+        let max_len = seg.heads.iter().map(|sh| sh.len).max().unwrap_or(0);
+        if max_len > self.n_global_slots() {
+            bail!(
+                "segment needs {max_len} global slots, capacity {} provides {}",
+                self.cap,
+                self.n_global_slots()
+            );
+        }
+        // Take the references first; everything after is infallible.
+        {
+            let mut sp = pool.lock().unwrap();
+            for sh in &seg.heads {
+                for &p in &sh.pages {
+                    sp.retain(p);
+                }
+            }
+        }
+        let ps = d.page_size;
+        let dh = d.d_head;
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                let hi = self.head_idx(l, h);
+                let sh = &seg.heads[hi];
+                // Copy the payloads out so the shared lock is not held
+                // across the &mut self exec-view writes.
+                let toks: Vec<(Vec<f32>, Vec<f32>)> = {
+                    let sp = pool.lock().unwrap();
+                    (0..sh.len)
+                        .map(|i| {
+                            let (pg, sl) = (sh.pages[i / ps], i % ps);
+                            (sp.k_at(pg, sl).to_vec(), sp.v_at(pg, sl).to_vec())
+                        })
+                        .collect()
+                };
+                debug_assert!(toks.iter().all(|(k, v)| k.len() == dh && v.len() == dh));
+                self.heads[hi].shared_pages = sh.pages.clone();
+                self.heads[hi].shared_len = sh.len;
+                for (i, (k, v)) in toks.iter().enumerate() {
+                    self.update_page_meta(l, h, i, k);
+                    self.write_exec(l, h, i, k, v);
+                }
+                self.resident += sh.len;
+                for rt in &sh.ring {
+                    self.local_write(l, h, rt.ring_idx, &rt.k, &rt.v, rt.gate, rt.pos);
+                }
+            }
+        }
+        self.stats = seg.stats;
+        self.shared_pool = Some(pool);
+        self.shared_counters = Some(counters);
+        Ok(())
+    }
+}
+
+impl Drop for SequenceKvCache {
+    /// Release this session's shared-prefix page references (park, retire
+    /// and plain drop all funnel through here) — the refcount contract
+    /// that no shared page outlives its binders by accident, nor is freed
+    /// while one survives.
+    fn drop(&mut self) {
+        if let Some(pool) = self.shared_pool.take() {
+            if let Ok(mut sp) = pool.lock() {
+                for hc in &mut self.heads {
+                    for p in hc.shared_pages.drain(..) {
+                        sp.release(p);
+                    }
+                    hc.shared_len = 0;
+                }
+            }
+        }
     }
 }
 

@@ -30,9 +30,18 @@
 //! ([`dual::DirtyLog`]), and the device-resident copy of the view
 //! ([`crate::runtime::device_cache::DeviceExecView`]) replays the journal
 //! each step — host↔device traffic is O(dirty slots), not O(capacity).
+//!
+//! Cross-session sharing rides the same split: [`prefix::SharedSegmentStore`]
+//! keys *admitted* prefixes by a rolling token-hash chain and lets sessions
+//! bind read-only refcounted pages from an engine-wide shared pool,
+//! copy-on-writing at the divergence point (docs/ARCHITECTURE.md Design 7).
+
+#![warn(missing_docs)]
 
 pub mod dual;
 pub mod pool;
+pub mod prefix;
 
 pub use dual::{CacheSnapshot, CacheStats, DirtyLog, DirtySpan, SequenceKvCache};
 pub use pool::{KvPool, PageId, PageTable, PoolStats};
+pub use prefix::{PrefixMatch, SharedCounters, SharedSegmentStore};

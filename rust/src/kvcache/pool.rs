@@ -5,6 +5,15 @@
 //! plus per-token admission gate and absolute position. Pages are recycled
 //! through a free list, so ragged per-head growth never fragments host
 //! memory and eviction returns pages for reuse.
+//!
+//! Pages are **refcounted**: [`KvPool::alloc`] hands out a page with one
+//! reference, [`KvPool::retain`] adds a co-owner (the shared-prefix tier
+//! binds read-only pages across sessions — [`crate::kvcache::prefix`]),
+//! and [`KvPool::release`] drops one reference. Only the *last* release
+//! recycles the page — and that is also the only point payloads are
+//! scrubbed, so a page can never be zeroed out from under a surviving
+//! binder (the scrub-on-alloc wart this replaced could not express
+//! co-ownership at all).
 
 use anyhow::{bail, Result};
 
@@ -15,7 +24,8 @@ pub struct PageId(pub u32);
 /// Aggregate pool occupancy counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PoolStats {
-    /// Pages currently allocated to some page table.
+    /// Pages currently live (refcount > 0) in some page table or shared
+    /// segment — each counted once however many references it has.
     pub allocated_pages: usize,
     /// Pages ever created (high-water mark).
     pub total_pages: usize,
@@ -35,11 +45,15 @@ pub struct KvPool {
     gates: Vec<f32>,
     /// Per token-slot absolute sequence position (-1 = empty).
     pos: Vec<i64>,
+    /// Per-page reference count (0 = on the free list or never allocated).
+    refcnt: Vec<u32>,
     free: Vec<PageId>,
     allocated: usize,
 }
 
 impl KvPool {
+    /// An empty pool handing out `page_size`-slot pages of `d_head`-dim
+    /// K/V vectors.
     pub fn new(page_size: usize, d_head: usize) -> Self {
         assert!(page_size > 0 && d_head > 0);
         Self {
@@ -49,15 +63,18 @@ impl KvPool {
             v: Vec::new(),
             gates: Vec::new(),
             pos: Vec::new(),
+            refcnt: Vec::new(),
             free: Vec::new(),
             allocated: 0,
         }
     }
 
+    /// Token slots per page.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
 
+    /// K/V vector width.
     pub fn d_head(&self) -> usize {
         self.d_head
     }
@@ -66,24 +83,19 @@ impl KvPool {
         self.gates.len() / self.page_size
     }
 
-    /// Allocate a page (recycled or fresh). Fresh and recycled pages are
-    /// both fully zeroed: a recycled page's stale K vectors would otherwise
-    /// leak a retired sequence's keys into the Quest `kmin`/`kmax` bounds
-    /// of whichever head re-populates the page (`update_page_meta` folds
-    /// the *written* key, but partially-filled pages expose the remnant
-    /// slots to `evict_global`'s wholesale snapshot and to debug dumps).
+    /// Allocate a page (recycled or fresh) with a reference count of one.
+    /// Every page handed out is fully zeroed: fresh pages by construction,
+    /// recycled ones by the scrub their last [`Self::release`] performed —
+    /// stale K vectors would otherwise leak a retired sequence's keys into
+    /// the Quest `kmin`/`kmax` bounds of whichever head re-populates the
+    /// page (`update_page_meta` folds the *written* key, but
+    /// partially-filled pages expose remnant slots to `evict_global`'s
+    /// wholesale snapshot and to debug dumps).
     pub fn alloc(&mut self) -> PageId {
         self.allocated += 1;
         if let Some(p) = self.free.pop() {
-            // Scrub recycled page payloads + metadata so stale K/V data and
-            // positions can't leak across sequences.
-            let base = p.0 as usize * self.page_size;
-            let kv_base = base * self.d_head;
-            let kv_len = self.page_size * self.d_head;
-            self.k[kv_base..kv_base + kv_len].fill(0.0);
-            self.v[kv_base..kv_base + kv_len].fill(0.0);
-            self.gates[base..base + self.page_size].fill(0.0);
-            self.pos[base..base + self.page_size].fill(-1);
+            debug_assert_eq!(self.refcnt[p.0 as usize], 0, "free page with live refs");
+            self.refcnt[p.0 as usize] = 1;
             return p;
         }
         let id = PageId(self.total_pages() as u32);
@@ -91,15 +103,49 @@ impl KvPool {
         self.v.extend(std::iter::repeat(0.0).take(self.page_size * self.d_head));
         self.gates.extend(std::iter::repeat(0.0).take(self.page_size));
         self.pos.extend(std::iter::repeat(-1).take(self.page_size));
+        self.refcnt.push(1);
         id
     }
 
-    /// Return a page to the free list.
-    pub fn free(&mut self, page: PageId) {
-        debug_assert!((page.0 as usize) < self.total_pages());
+    /// Add one reference to a live page — a co-owner binding it read-only
+    /// (shared-prefix sessions, segment stores). Every `retain` must be
+    /// paired with exactly one [`Self::release`].
+    pub fn retain(&mut self, page: PageId) {
+        let i = page.0 as usize;
+        debug_assert!(i < self.total_pages());
+        assert!(self.refcnt[i] > 0, "retain of unallocated page {page:?}");
+        self.refcnt[i] += 1;
+    }
+
+    /// Drop one reference. The page is recycled — payload and metadata
+    /// scrubbed, pushed to the free list — only when this was the *last*
+    /// reference; returns whether that happened. Scrubbing at
+    /// last-release (not at alloc) is what makes sharing sound: a page
+    /// with surviving binders is never zeroed out from under them.
+    pub fn release(&mut self, page: PageId) -> bool {
+        let i = page.0 as usize;
+        debug_assert!(i < self.total_pages());
+        assert!(self.refcnt[i] > 0, "release of unallocated page {page:?}");
+        self.refcnt[i] -= 1;
+        if self.refcnt[i] > 0 {
+            return false;
+        }
         debug_assert!(!self.free.contains(&page), "double free of {page:?}");
+        let base = i * self.page_size;
+        let kv_base = base * self.d_head;
+        let kv_len = self.page_size * self.d_head;
+        self.k[kv_base..kv_base + kv_len].fill(0.0);
+        self.v[kv_base..kv_base + kv_len].fill(0.0);
+        self.gates[base..base + self.page_size].fill(0.0);
+        self.pos[base..base + self.page_size].fill(-1);
         self.allocated -= 1;
         self.free.push(page);
+        true
+    }
+
+    /// Current reference count of a page (0 = free/never allocated).
+    pub fn refcount(&self, page: PageId) -> u32 {
+        self.refcnt.get(page.0 as usize).copied().unwrap_or(0)
     }
 
     fn kv_base(&self, page: PageId, slot: usize) -> usize {
@@ -131,24 +177,29 @@ impl KvPool {
         self.pos[m] = position;
     }
 
+    /// Key vector stored at a page slot.
     pub fn k_at(&self, page: PageId, slot: usize) -> &[f32] {
         let b = self.kv_base(page, slot);
         &self.k[b..b + self.d_head]
     }
 
+    /// Value vector stored at a page slot.
     pub fn v_at(&self, page: PageId, slot: usize) -> &[f32] {
         let b = self.kv_base(page, slot);
         &self.v[b..b + self.d_head]
     }
 
+    /// Admission gate stored at a page slot.
     pub fn gate_at(&self, page: PageId, slot: usize) -> f32 {
         self.gates[self.meta_base(page, slot)]
     }
 
+    /// Absolute sequence position stored at a page slot (-1 = empty).
     pub fn pos_at(&self, page: PageId, slot: usize) -> i64 {
         self.pos[self.meta_base(page, slot)]
     }
 
+    /// Aggregate occupancy counters.
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             allocated_pages: self.allocated,
@@ -158,7 +209,9 @@ impl KvPool {
     }
 
     /// Physical bytes held by allocated pages (K + V payloads only — what
-    /// the paper's Fig 8c memory axis counts).
+    /// the paper's Fig 8c memory axis counts). A shared page counts once,
+    /// however many references it has — the charged-once invariant the
+    /// scheduler's budget accounting leans on.
     pub fn allocated_kv_bytes(&self) -> usize {
         self.allocated * self.page_size * self.d_head * 2 * std::mem::size_of::<f32>()
     }
@@ -176,22 +229,27 @@ pub struct PageTable {
 }
 
 impl PageTable {
+    /// An empty table over pages of `page_size` slots.
     pub fn new(page_size: usize) -> Self {
         Self { pages: Vec::new(), len: 0, page_size }
     }
 
+    /// Number of valid tokens in the logical range.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the table maps no tokens.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Physical pages backing the range.
     pub fn num_pages(&self) -> usize {
         self.pages.len()
     }
 
+    /// The backing pages, in logical order.
     pub fn pages(&self) -> &[PageId] {
         &self.pages
     }
@@ -216,10 +274,24 @@ impl PageTable {
         (page, slot)
     }
 
-    /// Drop all pages back to the pool and reset.
+    /// Start an *empty* table with one pre-filled partial page: `page`
+    /// (whose reference the caller transfers to this table) already holds
+    /// `len` valid tokens. This is the copy-on-write landing pad — a
+    /// shared segment's partial tail page is cloned into a private page
+    /// and adopted here, so the session's subsequent appends continue in
+    /// the clone without touching the shared original.
+    pub fn adopt(&mut self, page: PageId, len: usize) {
+        debug_assert!(self.pages.is_empty() && self.len == 0, "adopt into non-empty table");
+        debug_assert!(len <= self.page_size);
+        self.pages.push(page);
+        self.len = len;
+    }
+
+    /// Drop one reference on every page (recycling each whose last
+    /// reference this was) and reset the table.
     pub fn clear(&mut self, pool: &mut KvPool) {
         for p in self.pages.drain(..) {
-            pool.free(p);
+            pool.release(p);
         }
         self.len = 0;
     }
@@ -235,12 +307,12 @@ mod tests {
     use super::*;
 
     #[test]
-    fn alloc_free_recycles() {
+    fn alloc_release_recycles() {
         let mut pool = KvPool::new(4, 2);
         let a = pool.alloc();
         let b = pool.alloc();
         assert_eq!(pool.stats().allocated_pages, 2);
-        pool.free(a);
+        assert!(pool.release(a), "sole reference must recycle");
         assert_eq!(pool.stats().free_pages, 1);
         let c = pool.alloc();
         assert_eq!(c, a, "free list must recycle");
@@ -248,12 +320,14 @@ mod tests {
         assert_eq!(pool.stats().total_pages, 2);
     }
 
+    /// Scrub happens at last-release recycle: a page that went through
+    /// release + alloc comes back fully zeroed.
     #[test]
     fn recycled_page_is_scrubbed() {
         let mut pool = KvPool::new(2, 2);
         let a = pool.alloc();
         pool.write_token(a, 1, &[1.0, 2.0], &[3.0, 4.0], 0.9, 42);
-        pool.free(a);
+        pool.release(a);
         let b = pool.alloc();
         assert_eq!(b, a);
         assert_eq!(pool.gate_at(b, 1), 0.0);
@@ -262,6 +336,33 @@ mod tests {
         // the next owner's Quest page bounds.
         assert_eq!(pool.k_at(b, 1), &[0.0, 0.0]);
         assert_eq!(pool.v_at(b, 1), &[0.0, 0.0]);
+    }
+
+    /// The scrub-on-alloc regression: a freshly-shared page must never be
+    /// scrubbed out from under a surviving binder. One of two co-owners
+    /// releasing leaves the payload intact and the page off the free
+    /// list; only the last release scrubs and recycles.
+    #[test]
+    fn shared_page_never_scrubbed_under_surviving_binder() {
+        let mut pool = KvPool::new(2, 2);
+        let p = pool.alloc();
+        pool.retain(p); // second binder
+        pool.write_token(p, 0, &[7.0, 8.0], &[9.0, 10.0], 0.5, 3);
+        assert_eq!(pool.refcount(p), 2);
+        assert!(!pool.release(p), "first release must not recycle");
+        assert_eq!(pool.refcount(p), 1);
+        assert_eq!(pool.stats().free_pages, 0);
+        assert_eq!(pool.stats().allocated_pages, 1, "shared page charged once");
+        // Surviving binder still reads the original payload.
+        assert_eq!(pool.k_at(p, 0), &[7.0, 8.0]);
+        assert_eq!(pool.v_at(p, 0), &[9.0, 10.0]);
+        assert_eq!(pool.gate_at(p, 0), 0.5);
+        assert_eq!(pool.pos_at(p, 0), 3);
+        // Last release scrubs and recycles.
+        assert!(pool.release(p));
+        assert_eq!(pool.refcount(p), 0);
+        assert_eq!(pool.stats().free_pages, 1);
+        assert_eq!(pool.k_at(p, 0), &[0.0, 0.0]);
     }
 
     #[test]
@@ -303,6 +404,46 @@ mod tests {
         assert_eq!(pool.stats().allocated_pages, 0);
         assert_eq!(pool.stats().free_pages, 3);
         assert!(pt.is_empty());
+    }
+
+    /// clear() drops one reference per page: pages a peer still holds
+    /// survive the table's teardown.
+    #[test]
+    fn page_table_clear_respects_shared_refs() {
+        let mut pool = KvPool::new(4, 2);
+        let mut pt = PageTable::new(4);
+        for i in 0..6 {
+            let (page, slot) = pt.append(&mut pool);
+            pool.write_token(page, slot, &[i as f32, 0.0], &[0.0, 0.0], 1.0, i as i64);
+        }
+        let shared = pt.pages()[0];
+        pool.retain(shared); // a binder holds the first page
+        pt.clear(&mut pool);
+        assert_eq!(pool.stats().allocated_pages, 1);
+        assert_eq!(pool.refcount(shared), 1);
+        assert_eq!(pool.k_at(shared, 0)[0], 0.0 + 0.0); // slot 0 wrote token 0
+        assert_eq!(pool.pos_at(shared, 3), 3, "binder's payload survives clear");
+        pool.release(shared);
+        assert_eq!(pool.stats().allocated_pages, 0);
+    }
+
+    #[test]
+    fn adopt_starts_table_with_partial_page() {
+        let mut pool = KvPool::new(4, 2);
+        let page = pool.alloc();
+        for s in 0..3 {
+            pool.write_token(page, s, &[s as f32, 0.0], &[0.0, 0.0], 1.0, s as i64);
+        }
+        let mut pt = PageTable::new(4);
+        pt.adopt(page, 3);
+        assert_eq!(pt.len(), 3);
+        assert_eq!(pt.num_pages(), 1);
+        let (p, s) = pt.locate(2).unwrap();
+        assert_eq!(pool.pos_at(p, s), 2);
+        // The next append lands in the adopted page's slot 3.
+        let (p, s) = pt.append(&mut pool);
+        assert_eq!((p, s), (page, 3));
+        assert_eq!(pool.stats().allocated_pages, 1);
     }
 
     #[test]

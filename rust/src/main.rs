@@ -29,6 +29,7 @@ USAGE:
                  [--spill-dir DIR] [--spill-byte-budget BYTES]
                  [--spill-after-ticks N] [--max-park-per-tick N]
                  [--failpoints SPEC] [--failpoint-seed S]
+                 [--prefix-share] [--prefix-min-tokens N] [--prefix-max-segments N]
   wgkv generate  [--artifacts DIR] --prompt TEXT [--max-new N] [--variant FILE] [POLICY]
   wgkv eval      [--artifacts DIR] [--instances N] [--seed S] [--variant FILE] [POLICY]
   wgkv costmodel [--model llama|qwen]
@@ -67,6 +68,15 @@ serve spill tier (disk, below the host tier):
                             e.g. 'spill.write.enospc=0.2,spill.read.err=0.1'
                             (testing only; also via WGKV_FAILPOINTS)
   --failpoint-seed S        RNG seed for --failpoints (default 0x5EED)
+
+serve prefix sharing (cross-session shared-prefix admission):
+  --prefix-share            admit prompts over refcounted copy-on-write
+                            KV pages shared with earlier sessions whose
+                            prompts start with the same admitted prefix
+  --prefix-min-tokens N     shortest prefix worth registering for reuse
+                            (default 32)
+  --prefix-max-segments N   segment-store capacity; unreferenced
+                            segments evict FIFO past this (default 64)
 ";
 
 fn policy_params(args: &Args, prompt: String, max_new: usize) -> Result<GenerateParams> {
@@ -133,8 +143,17 @@ fn serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    let prefix_share = args.bool("prefix-share")?;
+    let prefix_min = args.usize("prefix-min-tokens", 32)?;
+    let prefix_max = args.usize("prefix-max-segments", 64)?;
     let (cmds, _handle) = server::spawn_engine_thread_with_spill(
-        move || Engine::load(artifacts, EngineConfig::default()),
+        move || {
+            let mut engine = Engine::load(artifacts, EngineConfig::default())?;
+            if prefix_share {
+                engine.enable_prefix_share(prefix_min, prefix_max);
+            }
+            Ok(engine)
+        },
         cfg,
         spill,
     );

@@ -184,6 +184,18 @@ pub struct EngineMetrics {
     /// Blobs that failed checksum/format validation at promote and were
     /// quarantined (each surfaced exactly one per-session error).
     pub quarantined_sessions: u64,
+    /// Prompts that bound an already-admitted shared prefix instead of
+    /// prefilling it privately (`--prefix-share`).
+    pub prefix_hits: u64,
+    /// Pages live in the engine-wide shared-prefix pool — a gauge
+    /// mirrored from the segment store each tick.
+    pub shared_pages: u64,
+    /// Shared tail pages copy-on-write-cloned into private pages at a
+    /// session's divergence point.
+    pub cow_clones: u64,
+    /// Private paged-pool bytes binders avoided allocating (the K+V
+    /// payload of every shared global token, summed over binds).
+    pub shared_bytes_saved: u64,
 }
 
 impl EngineMetrics {
@@ -235,6 +247,10 @@ impl EngineMetrics {
             io_faults_injected: self.io_faults_injected,
             io_retries: self.io_retries,
             quarantined_sessions: self.quarantined_sessions,
+            prefix_hits: self.prefix_hits,
+            shared_pages: self.shared_pages,
+            cow_clones: self.cow_clones,
+            shared_bytes_saved: self.shared_bytes_saved,
         }
     }
 
@@ -292,6 +308,10 @@ pub struct MetricsSnapshot {
     pub io_faults_injected: u64,
     pub io_retries: u64,
     pub quarantined_sessions: u64,
+    pub prefix_hits: u64,
+    pub shared_pages: u64,
+    pub cow_clones: u64,
+    pub shared_bytes_saved: u64,
 }
 
 impl MetricsSnapshot {
@@ -329,6 +349,10 @@ impl MetricsSnapshot {
             .set("io_faults_injected", self.io_faults_injected)
             .set("io_retries", self.io_retries)
             .set("quarantined_sessions", self.quarantined_sessions)
+            .set("prefix_hits", self.prefix_hits)
+            .set("shared_pages", self.shared_pages)
+            .set("cow_clones", self.cow_clones)
+            .set("shared_bytes_saved", self.shared_bytes_saved)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -366,6 +390,10 @@ impl MetricsSnapshot {
             io_faults_injected: f("io_faults_injected") as u64,
             io_retries: f("io_retries") as u64,
             quarantined_sessions: f("quarantined_sessions") as u64,
+            prefix_hits: f("prefix_hits") as u64,
+            shared_pages: f("shared_pages") as u64,
+            cow_clones: f("cow_clones") as u64,
+            shared_bytes_saved: f("shared_bytes_saved") as u64,
         }
     }
 }
@@ -427,6 +455,10 @@ mod tests {
         m.io_faults_injected = 7;
         m.io_retries = 5;
         m.quarantined_sessions = 1;
+        m.prefix_hits = 6;
+        m.shared_pages = 9;
+        m.cow_clones = 2;
+        m.shared_bytes_saved = 8192;
         let s = m.snapshot();
         let j = s.to_json().dump();
         let back = MetricsSnapshot::from_json(&crate::util::json::Json::parse(&j).unwrap());

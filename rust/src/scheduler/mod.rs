@@ -378,7 +378,12 @@ pub fn plan_decode_batches(
 /// grows past its bucket's size, so the estimates must see the real
 /// prompt length ([`Engine::prefill_byte_estimate`] documents both
 /// terms). Prefill happens *before* admission gates can observe real
-/// occupancy, so the planner must bound the worst case. A request that
+/// occupancy, so the planner must bound the worst case. With shared-
+/// prefix admission on, [`Scheduler::step`]'s prefix-match pass feeds
+/// this planner bucket 0 and a suffix-only `est_paged` for a prompt
+/// extending a registered shared prefix: the shared span costs zero
+/// prefill compute (it binds, like a resume) and its pages are already
+/// charged once via the shared-pool headroom subtraction. A request that
 /// would push the modeled total past the headroom is deferred in place,
 /// without blocking smaller requests behind it (bounded by the aging
 /// rule in [`Scheduler::step`], so the bypass cannot starve the queue
@@ -918,13 +923,16 @@ impl Scheduler {
         // worst case) at zero prefill cost.
         let free_slots = self.cfg.max_active.saturating_sub(self.active.len());
         if free_slots > 0 && !self.queue.is_empty() {
-            // Headroom after the two non-pooled residency classes; the
-            // shared pool is modeled inside the planner (charged once),
-            // exactly like the decode planner below.
-            let headroom = self
-                .cfg
-                .kv_byte_budget
-                .saturating_sub(self.active_kv_bytes() + self.owned_view_bytes());
+            // Headroom after the non-pooled residency classes (plus the
+            // shared-prefix pool's pages, charged exactly once however
+            // many sessions bind them); the shared *view* pool is
+            // modeled inside the planner (charged once), exactly like
+            // the decode planner below.
+            let headroom = self.cfg.kv_byte_budget.saturating_sub(
+                self.active_kv_bytes()
+                    + self.owned_view_bytes()
+                    + engine.shared_prefix_bytes(),
+            );
             // Aging bound: bucket-grouped admission deliberately lets
             // later small requests pass a budget-deferred large queue
             // head, but a sustained small-request stream could then
@@ -951,8 +959,29 @@ impl Scheduler {
                 match entry.resume.as_deref() {
                     None => {
                         eligible.push(qi);
-                        buckets.push(engine.prefill_bucket_for(new_len));
-                        ests.push(engine.prefill_byte_estimate(new_len));
+                        // Prefix-match pass: a prompt extending an
+                        // already-admitted shared prefix binds it at zero
+                        // prefill compute (bucket 0, riding the
+                        // zero-cost-resume group) and is charged paged
+                        // bytes only for its private suffix — the shared
+                        // span's pages sit in the charged-once shared
+                        // pool, already inside the headroom subtraction.
+                        // The implied lane capacity stays keyed on the
+                        // full prompt: the execution view spans shared
+                        // and private tokens alike.
+                        let shared = entry
+                            .req
+                            .as_ref()
+                            .map(|r| engine.prefix_match_len(&r.prompt))
+                            .unwrap_or(0);
+                        if shared > 0 {
+                            buckets.push(0);
+                        } else {
+                            buckets.push(engine.prefill_bucket_for(new_len));
+                        }
+                        ests.push(
+                            engine.prefill_byte_estimate(new_len.saturating_sub(shared)),
+                        );
                         icaps.push(engine.prefill_implied_capacity(new_len));
                     }
                     Some(key) => {
@@ -1209,10 +1238,11 @@ impl Scheduler {
         let has_lane: Vec<bool> =
             self.active.iter().map(|a| a.sess.pool_lane().is_some()).collect();
         let lane_bytes = |cap: usize| engine.lane_view_bytes(cap);
-        let headroom = self
-            .cfg
-            .kv_byte_budget
-            .saturating_sub(self.active_kv_bytes() + self.owned_view_bytes());
+        // Shared-prefix pool pages join the headroom subtraction exactly
+        // once, like the paged and owned-view classes above.
+        let headroom = self.cfg.kv_byte_budget.saturating_sub(
+            self.active_kv_bytes() + self.owned_view_bytes() + engine.shared_prefix_bytes(),
+        );
         let snapshot = PoolSnapshot {
             allocated_lanes: engine.view_pool().lane_count(),
             bound_lanes: engine.view_pool().lanes_in_use(),
@@ -1373,6 +1403,7 @@ impl Scheduler {
             self.compact_boundary(engine);
         }
         engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
+        engine.mirror_prefix_metrics();
         if let Some(s) = &self.spill {
             engine.metrics.spilled_bytes = s.spilled_bytes() as u64;
             engine.metrics.spill_events = s.spill_events;

@@ -309,6 +309,14 @@ pub struct ServerStats {
     pub io_retries: u64,
     /// Blobs quarantined at promote by checksum/format validation (mirror).
     pub quarantined_sessions: u64,
+    /// Fresh prompts admitted over a registered shared prefix (mirror).
+    pub prefix_hits: u64,
+    /// Pool pages currently held by the shared-prefix segment store.
+    pub shared_pages: u64,
+    /// Copy-on-write clones taken at shared/private divergence (mirror).
+    pub cow_clones: u64,
+    /// Prefill KV bytes avoided by binding shared pages (mirror).
+    pub shared_bytes_saved: u64,
 }
 
 impl ServerStats {
@@ -338,6 +346,10 @@ impl ServerStats {
             .set("io_faults_injected", self.io_faults_injected)
             .set("io_retries", self.io_retries)
             .set("quarantined_sessions", self.quarantined_sessions)
+            .set("prefix_hits", self.prefix_hits)
+            .set("shared_pages", self.shared_pages)
+            .set("cow_clones", self.cow_clones)
+            .set("shared_bytes_saved", self.shared_bytes_saved)
     }
 }
 
@@ -515,6 +527,7 @@ where
                         }
                     }
                     Command::Stats(reply) => {
+                        engine.mirror_prefix_metrics();
                         let snapshot = engine.metrics.snapshot();
                         let _ = reply.send(ServerStats {
                             queued: sched.queued(),
@@ -541,6 +554,10 @@ where
                             io_faults_injected: snapshot.io_faults_injected,
                             io_retries: snapshot.io_retries,
                             quarantined_sessions: snapshot.quarantined_sessions,
+                            prefix_hits: snapshot.prefix_hits,
+                            shared_pages: snapshot.shared_pages,
+                            cow_clones: snapshot.cow_clones,
+                            shared_bytes_saved: snapshot.shared_bytes_saved,
                             engine: snapshot,
                         });
                     }
@@ -802,6 +819,10 @@ impl Client {
             io_faults_injected: f("io_faults_injected") as u64,
             io_retries: f("io_retries") as u64,
             quarantined_sessions: f("quarantined_sessions") as u64,
+            prefix_hits: f("prefix_hits") as u64,
+            shared_pages: f("shared_pages") as u64,
+            cow_clones: f("cow_clones") as u64,
+            shared_bytes_saved: f("shared_bytes_saved") as u64,
         })
     }
 
@@ -965,6 +986,10 @@ mod tests {
         engine.park_events = 3;
         engine.resume_events = 2;
         engine.parked_bytes = 1234;
+        engine.prefix_hits = 6;
+        engine.shared_pages = 9;
+        engine.cow_clones = 2;
+        engine.shared_bytes_saved = 8192;
         let s = ServerStats {
             engine,
             queued: 5,
@@ -988,6 +1013,10 @@ mod tests {
             io_faults_injected: 8,
             io_retries: 5,
             quarantined_sessions: 1,
+            prefix_hits: 6,
+            shared_pages: 9,
+            cow_clones: 2,
+            shared_bytes_saved: 8192,
         };
         let dumped = s.to_json().dump();
         let back = Client::stats_from_json(&Json::parse(&dumped).unwrap()).unwrap();
@@ -1010,6 +1039,10 @@ mod tests {
         assert_eq!(back.io_faults_injected, 8);
         assert_eq!(back.io_retries, 5);
         assert_eq!(back.quarantined_sessions, 1);
+        assert_eq!(back.prefix_hits, 6);
+        assert_eq!(back.shared_pages, 9);
+        assert_eq!(back.cow_clones, 2);
+        assert_eq!(back.shared_bytes_saved, 8192);
     }
 
     /// Every protocol error carries a stable machine-matchable code next

@@ -184,6 +184,12 @@ impl BenchReport {
 
     /// Attach a named counter (upload bytes, reduction ratios, config).
     /// Re-setting a key overwrites the previous value ([`Json::set`]).
+    ///
+    /// Counter keys form a cross-PR schema: `make bench` greps the
+    /// emitted `BENCH_<name>.json` for every tracked key (upload-delta,
+    /// prefill-batch, compaction, parking, spill-fault and shared-prefix
+    /// counters), so renaming or dropping one fails the bench target
+    /// instead of silently breaking a later PR's comparison.
     pub fn counter(&mut self, key: &str, v: impl Into<Json>) {
         let counters = std::mem::replace(&mut self.counters, Json::Null);
         self.counters = counters.set(key, v);

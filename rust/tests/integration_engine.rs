@@ -4,7 +4,7 @@
 //! otherwise, so `cargo test` stays green on a fresh checkout).
 
 use wgkv::admission::PolicyKind;
-use wgkv::engine::{Engine, EngineConfig, SessionOptions};
+use wgkv::engine::{Engine, EngineConfig, Session, SessionOptions};
 use wgkv::eviction::SnapKvConfig;
 use wgkv::model::Sampler;
 use wgkv::selection::QuestConfig;
@@ -244,6 +244,128 @@ fn prefill_gates_expose_per_head_structure() {
     assert_eq!(fr[0].len(), dims.n_kv_heads);
     let all: Vec<f64> = fr.iter().flatten().copied().collect();
     assert!(all.iter().all(|&x| (0.0..=1.0 + 1e-9).contains(&x)));
+}
+
+#[test]
+fn shared_prefix_sessions_match_unshared_controls_token_for_token() {
+    let mut engine = engine_or_skip!();
+    // A long shared system prompt (as tokens, so prefix identity does not
+    // depend on tokenizer merge behavior at the splice point) plus three
+    // divergent user turns.
+    let mut rng = Rng::new(21);
+    let mut text = String::new();
+    while text.len() < 400 {
+        text.push_str(workload::WORDS[rng.usize(0, workload::WORDS.len())]);
+        text.push(' ');
+    }
+    let mut base = engine.tokenizer.encode(&text);
+    base.truncate((engine.max_prompt_len() / 2).min(48));
+    assert!(base.len() >= 24, "system prompt too short to exercise sharing");
+    let suffixes: Vec<Vec<i32>> = ["alpha beta", "gamma delta", "epsilon zeta"]
+        .iter()
+        .map(|s| engine.tokenizer.encode(s))
+        .collect();
+    let prompts: Vec<Vec<i32>> = suffixes
+        .iter()
+        .map(|s| base.iter().chain(s.iter()).copied().collect())
+        .collect();
+    let opts = || SessionOptions::policy(PolicyKind::WriteGated);
+    const STEPS: usize = 12;
+    const PARK_AT: usize = 4;
+    const RESUME_AT: usize = 8;
+
+    // Unshared controls: same batched-prefill + batched-decode path,
+    // before prefix sharing is enabled on this engine.
+    let expected: Vec<Vec<i32>> = {
+        let mut c0 = engine.start_session(opts());
+        let mut c1 = engine.start_session(opts());
+        let mut c2 = engine.start_session(opts());
+        let mut group = [&mut c0, &mut c1, &mut c2];
+        let slices: Vec<&[i32]> = prompts.iter().map(Vec::as_slice).collect();
+        for r in engine.prefill_batch(&mut group, &slices) {
+            r.expect("control prefill failed");
+        }
+        let mut streams = vec![Vec::new(); 3];
+        for _ in 0..STEPS {
+            let toks: Vec<i32> = group
+                .iter()
+                .map(|s| wgkv::runtime::tensor::argmax(&s.last_logits) as i32)
+                .collect();
+            for (stream, &t) in streams.iter_mut().zip(&toks) {
+                stream.push(t);
+            }
+            engine.decode_batch(&mut group, &toks).expect("control decode failed");
+        }
+        streams
+    };
+
+    // Shared world: a warm-up request registers the bare system prompt;
+    // the three real sessions all bind it through one batched prefill.
+    engine.enable_prefix_share(8, 16);
+    let mut warm = engine.start_session(opts());
+    engine.prefill(&mut warm, &base).expect("warm-up prefill failed");
+    drop(warm);
+    assert_eq!(engine.prefix_match_len(&prompts[0]), base.len());
+
+    let mut s0 = engine.start_session(opts());
+    let mut s1 = engine.start_session(opts());
+    let mut s2 = engine.start_session(opts());
+    {
+        let mut group = [&mut s0, &mut s1, &mut s2];
+        let slices: Vec<&[i32]> = prompts.iter().map(Vec::as_slice).collect();
+        for r in engine.prefill_batch(&mut group, &slices) {
+            r.expect("shared prefill failed");
+        }
+    }
+    assert!(engine.shared_prefix_bytes() > 0, "shared span must pin store bytes");
+
+    // Decode with a mid-stream park/resume of the middle session: the
+    // parked snapshot is self-contained, so its stream must re-join
+    // bit-identically.
+    let mut streams = vec![Vec::new(); 3];
+    let mut parked = None;
+    for step in 0..STEPS {
+        if step == PARK_AT {
+            parked = Some(engine.park_session(&mut s1).expect("park failed"));
+        }
+        if step == RESUME_AT {
+            s1 = engine
+                .resume_session(parked.take().unwrap(), &[])
+                .expect("resume failed");
+        }
+        let away = step >= PARK_AT && step < RESUME_AT;
+        let mut group: Vec<&mut Session> = if away {
+            vec![&mut s0, &mut s2]
+        } else {
+            vec![&mut s0, &mut s1, &mut s2]
+        };
+        let toks: Vec<i32> = group
+            .iter()
+            .map(|s| wgkv::runtime::tensor::argmax(&s.last_logits) as i32)
+            .collect();
+        let lanes: Vec<usize> = if away { vec![0, 2] } else { vec![0, 1, 2] };
+        for (&lane, &t) in lanes.iter().zip(&toks) {
+            streams[lane].push(t);
+        }
+        engine.decode_batch(&mut group, &toks).expect("shared decode failed");
+    }
+    // The parked session decoded fewer steps; catch it up one-by-one.
+    while streams[1].len() < STEPS {
+        let t = wgkv::runtime::tensor::argmax(&s1.last_logits) as i32;
+        streams[1].push(t);
+        engine.decode_batch(&mut [&mut s1], &[t]).expect("catch-up decode failed");
+    }
+
+    for (i, (got, want)) in streams.iter().zip(&expected).enumerate() {
+        assert_eq!(got, want, "session {i}: shared-prefix stream diverged from control");
+    }
+    engine.mirror_prefix_metrics();
+    assert!(
+        engine.metrics.prefix_hits >= 3,
+        "three sessions must have bound the shared prefix (hits {})",
+        engine.metrics.prefix_hits
+    );
+    assert!(engine.metrics.shared_bytes_saved > 0, "binds must record saved bytes");
 }
 
 #[test]

@@ -1,0 +1,522 @@
+//! Property-based tests for cross-session shared-prefix admission
+//! (`SharedSegmentStore` + `SequenceKvCache::bind_shared_prefix`,
+//! docs/ARCHITECTURE.md Design 7).
+//!
+//! Four invariant families are swept over randomized cache geometries
+//! and prompt shapes:
+//!
+//! 1. **COW bit-identity** — a session bound to a shared prefix is
+//!    indistinguishable from an unshared control that prefilled the same
+//!    prefix privately: identical execution views at bind time, after
+//!    every teacher-forced suffix step (through the copy-on-write
+//!    divergence), and identical logical reads and stats at the end.
+//! 2. **Refcount soundness** — under random bind / retire / park
+//!    interleavings with segment-eviction pressure, no shared page is
+//!    freed while a binder lives (content fingerprints stay intact, and
+//!    a referenced segment is never evicted), and once the last binder
+//!    retires the store's pool holds exactly the live segments' pages —
+//!    no leak, checked against a freshly built oracle store.
+//! 3. **Charged-once accounting** — N sharers plus the store never pin
+//!    more pool bytes than N unshared copies at any tick, and strictly
+//!    fewer at bind time; the unshared baseline is the byte budget a
+//!    charged-once scheduler would meter against.
+//! 4. **Prefix-match safety** — matching returns the longest *verified*
+//!    strict prefix: partial matches admit only the shared span (the
+//!    suffix stays private), divergence before the shortest registered
+//!    prefix falls back to private admission, and a hash-collision-shaped
+//!    hit (spoofed key, mismatched tokens) is rejected outright.
+
+use wgkv::kvcache::dual::CacheDims;
+use wgkv::kvcache::prefix::chain_hash;
+use wgkv::kvcache::{SequenceKvCache, SharedSegmentStore};
+use wgkv::prop_assert;
+use wgkv::runtime::tensor::Tensor;
+use wgkv::util::codec::ByteWriter;
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 6),
+        page_size: rng.usize(2, 5),
+    }
+}
+
+/// Deterministic pseudo-prefill: K/V/gate derived from the token ids
+/// (gate 0.9 for multiples of three, 0.05 otherwise; admit at >= 0.5),
+/// mirroring what a real forward hands `populate_from_prefill`.
+fn prefill_from_tokens(cache: &mut SequenceKvCache, tokens: &[i32]) {
+    let d = cache.dims();
+    let n = tokens.len();
+    let sz = [d.n_layers, d.n_kv_heads, n, d.d_head];
+    let mut k = Tensor::zeros(&sz);
+    let mut v = Tensor::zeros(&sz);
+    let mut g = Tensor::zeros(&[d.n_layers, d.n_kv_heads, n]);
+    for l in 0..d.n_layers {
+        for h in 0..d.n_kv_heads {
+            for (t, &tok) in tokens.iter().enumerate() {
+                let base = tok as f32 + (l * 7 + h * 3) as f32 * 0.1;
+                for dd in 0..d.d_head {
+                    k.slice_at_mut(&[l, h])[t * d.d_head + dd] = base + dd as f32;
+                    v.slice_at_mut(&[l, h])[t * d.d_head + dd] = base - dd as f32;
+                }
+                g.slice_at_mut(&[l, h])[t] = if tok % 3 == 0 { 0.9 } else { 0.05 };
+            }
+        }
+    }
+    cache
+        .populate_from_prefill(&k, &v, &g, n, |_, _, _, gate| gate >= 0.5)
+        .unwrap();
+}
+
+/// Mixed-gate prompt (about a third of the tokens admit).
+fn prompt(n: usize, salt: i32) -> Vec<i32> {
+    (0..n as i32).map(|i| i * 5 + salt).collect()
+}
+
+/// All-admitted prompt (every token a multiple of three), so the per-head
+/// global span is exactly `n - w_local` — deep enough to pin full shared
+/// pages when `n >= w_local + page_size`.
+fn admitted_prompt(n: usize, salt: i32) -> Vec<i32> {
+    (0..n as i32).map(|i| 3 * (i + salt)).collect()
+}
+
+/// One teacher-forced decode step's inputs, derived from (pos, val) so a
+/// binder and its unshared control see bit-identical tensors.
+fn decoded(d: CacheDims, pos: i64, val: f32, gate: f32) -> (Tensor, Tensor, Tensor) {
+    let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], val + pos as f32 * 0.5);
+    let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], val - pos as f32 * 0.5);
+    let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+    (k, v, g)
+}
+
+/// Deep logical fingerprint: the encoded self-contained snapshot. The
+/// snapshot walk reads shared tokens *through the shared pool*, so a
+/// prematurely freed, scrubbed, or recycled shared page changes the
+/// bytes even when the private execution view still looks right.
+fn snapshot_bytes(c: &SequenceKvCache) -> Vec<u8> {
+    let snap = c.snapshot().unwrap();
+    let mut w = ByteWriter::new();
+    snap.encode_into(&mut w);
+    w.into_bytes()
+}
+
+// ---- 1. COW bit-identity -------------------------------------------------
+
+#[test]
+fn shared_bind_stays_bit_identical_to_an_unshared_control() {
+    forall(0x71, |rng| {
+        let d = dims(rng);
+        let min_prefix = 3;
+        let n_prefix = rng.usize(min_prefix + 1, min_prefix + 12);
+        let suffix = d.w_local + rng.usize(2, 6);
+        let cap = n_prefix + suffix + d.w_local + 4;
+        let toks = prompt(n_prefix, 0);
+        let mut src = SequenceKvCache::new(d, cap).unwrap();
+        prefill_from_tokens(&mut src, &toks);
+        let mut store = SharedSegmentStore::new(min_prefix, 4);
+        prop_assert!(store.register(&toks, &src).unwrap(), "register must accept");
+
+        // Unshared control: a private prefill of the same prefix.
+        let mut control = SequenceKvCache::new(d, cap).unwrap();
+        prefill_from_tokens(&mut control, &toks);
+
+        let mut probe = toks.clone();
+        probe.push(12345);
+        let m = store.match_prefix(&probe).expect("extension must match");
+        prop_assert!(m.prefix_len() == n_prefix, "match must cover the whole prefix");
+        let mut bound = SequenceKvCache::new(d, cap).unwrap();
+        store.bind(&m, &mut bound).unwrap();
+
+        // Identical before divergence...
+        prop_assert!(bound.k_exec() == control.k_exec(), "K exec differs at bind");
+        prop_assert!(bound.v_exec() == control.v_exec(), "V exec differs at bind");
+        prop_assert!(bound.slot_mask() == control.slot_mask(), "mask differs at bind");
+        prop_assert!(
+            bound.page_meta_tensors() == control.page_meta_tensors(),
+            "page metadata differs at bind"
+        );
+        prop_assert!(bound.stats == control.stats, "stats differ at bind");
+
+        // ...and after every teacher-forced suffix step, across the COW
+        // divergence (same random stream drives both caches).
+        for s in 0..suffix {
+            let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
+            let val = rng.usize(0, 50) as f32;
+            let pos = (n_prefix + s) as i64;
+            let (k, v, g) = decoded(d, pos, val, gate);
+            bound.insert_decoded(&k, &v, &g, pos, |_, _, vg| vg >= 0.5).unwrap();
+            control.insert_decoded(&k, &v, &g, pos, |_, _, vg| vg >= 0.5).unwrap();
+            prop_assert!(bound.k_exec() == control.k_exec(), "K exec diverged at step {s}");
+            prop_assert!(bound.v_exec() == control.v_exec(), "V exec diverged at step {s}");
+            prop_assert!(
+                bound.slot_mask() == control.slot_mask(),
+                "mask diverged at step {s}"
+            );
+        }
+        prop_assert!(bound.stats == control.stats, "stats diverged over the suffix");
+        prop_assert!(
+            bound.resident_tokens() == control.resident_tokens(),
+            "resident tokens diverged"
+        );
+        for l in 0..d.n_layers {
+            for h in 0..d.n_kv_heads {
+                prop_assert!(
+                    bound.global_len(l, h) == control.global_len(l, h),
+                    "global len diverged at ({l},{h})"
+                );
+                for i in 0..control.global_len(l, h) {
+                    prop_assert!(
+                        bound.global_pos(l, h, i).unwrap()
+                            == control.global_pos(l, h, i).unwrap(),
+                        "global pos diverged at ({l},{h},{i})"
+                    );
+                    prop_assert!(
+                        bound.global_key(l, h, i).unwrap()
+                            == control.global_key(l, h, i).unwrap(),
+                        "global key diverged at ({l},{h},{i})"
+                    );
+                }
+            }
+        }
+        // COW fires at most once per (layer, head) over a session's life.
+        let (hits, cows, _) = store.counters().get();
+        prop_assert!(hits == 1, "exactly one bind recorded");
+        prop_assert!(
+            cows as usize <= d.n_heads_total(),
+            "more COW clones ({cows}) than heads"
+        );
+        Ok(())
+    });
+}
+
+// ---- 2. refcount soundness under bind/retire/park interleavings ----------
+
+struct Binder {
+    salt: i32,
+    cache: SequenceKvCache,
+    print: Vec<u8>,
+    /// False once the cache went through a park round-trip (fully
+    /// private, holding no shared refs).
+    shared: bool,
+}
+
+#[test]
+fn refcounts_survive_random_bind_retire_park_interleavings() {
+    forall(0x72, |rng| {
+        let d = dims(rng);
+        let n_prefix = d.w_local + rng.usize(d.page_size, 2 * d.page_size + 1);
+        let cap = n_prefix + d.w_local + 4;
+        let mut store = SharedSegmentStore::new(3, 2);
+        let mut segs: Vec<(i32, Vec<i32>)> = Vec::new();
+        for salt in [0, 1000] {
+            let toks = admitted_prompt(n_prefix, salt);
+            let mut src = SequenceKvCache::new(d, cap).unwrap();
+            prefill_from_tokens(&mut src, &toks);
+            prop_assert!(store.register(&toks, &src).unwrap(), "seed register failed");
+            segs.push((salt, toks));
+        }
+        let mut binders: Vec<Binder> = Vec::new();
+        let mut dummy_salt = 2000;
+        for _ in 0..rng.usize(6, 18) {
+            match rng.usize(0, 4) {
+                // Bind a fresh session onto a random live segment.
+                0 => {
+                    let (salt, toks) = &segs[rng.usize(0, segs.len())];
+                    let mut probe = toks.clone();
+                    probe.push(1);
+                    let m = store.match_prefix(&probe).expect("live segment must match");
+                    prop_assert!(
+                        m.prefix_len() == toks.len(),
+                        "match must cover the registered prefix"
+                    );
+                    let mut cache = SequenceKvCache::new(d, cap).unwrap();
+                    store.bind(&m, &mut cache).unwrap();
+                    let print = snapshot_bytes(&cache);
+                    binders.push(Binder { salt: *salt, cache, print, shared: true });
+                }
+                // Retire a random binder (drops its shared refs).
+                1 if !binders.is_empty() => {
+                    binders.swap_remove(rng.usize(0, binders.len()));
+                }
+                // Park round-trip a random binder: snapshot while bound,
+                // restore fully private, bit-identical logical content.
+                2 if !binders.is_empty() => {
+                    let i = rng.usize(0, binders.len());
+                    let snap = binders[i].cache.snapshot().unwrap();
+                    let restored = SequenceKvCache::restore(&snap).unwrap();
+                    prop_assert!(
+                        snapshot_bytes(&restored) == binders[i].print,
+                        "park round-trip changed logical content"
+                    );
+                    for l in 0..d.n_layers {
+                        for h in 0..d.n_kv_heads {
+                            prop_assert!(
+                                restored.shared_global_len(l, h) == 0,
+                                "a restored cache must be fully private"
+                            );
+                        }
+                    }
+                    // The original's refs release here; the restored
+                    // session lives on without touching the store.
+                    binders[i].cache = restored;
+                    binders[i].shared = false;
+                }
+                // Register-pressure: a fresh segment at capacity must
+                // evict an unreferenced one — or fail if every segment
+                // has a live binder.
+                _ => {
+                    let toks = admitted_prompt(n_prefix, dummy_salt);
+                    dummy_salt += 1000;
+                    let mut src = SequenceKvCache::new(d, cap).unwrap();
+                    prefill_from_tokens(&mut src, &toks);
+                    let referenced: Vec<i32> = binders
+                        .iter()
+                        .filter(|b| b.shared)
+                        .map(|b| b.salt)
+                        .collect();
+                    let evictable =
+                        segs.iter().any(|(salt, _)| !referenced.contains(salt));
+                    let ok = store.register(&toks, &src).unwrap();
+                    prop_assert!(
+                        ok == evictable,
+                        "register at cap: got {ok}, evictable {evictable}"
+                    );
+                    if ok {
+                        // Exactly one unreferenced segment was evicted.
+                        let before = segs.len();
+                        segs.retain(|(salt, t)| {
+                            let mut probe = t.clone();
+                            probe.push(1);
+                            let live = store.match_prefix(&probe).is_some();
+                            if !live {
+                                prop_assert_no_ref(&referenced, *salt);
+                            }
+                            live
+                        });
+                        prop_assert!(
+                            segs.len() == before - 1,
+                            "exactly one segment must evict per register at cap"
+                        );
+                        segs.push((dummy_salt - 1000, toks));
+                    }
+                }
+            }
+            // Every surviving binder's content is intact — a freed or
+            // scrubbed shared page would corrupt the snapshot walk.
+            for b in &binders {
+                prop_assert!(
+                    snapshot_bytes(&b.cache) == b.print,
+                    "binder content changed under interleaving (salt {})",
+                    b.salt
+                );
+            }
+            // Every referenced segment is still matchable (not evicted).
+            for b in binders.iter().filter(|b| b.shared) {
+                let (_, toks) =
+                    segs.iter().find(|(s, _)| *s == b.salt).expect("referenced seg evicted");
+                let mut probe = toks.clone();
+                probe.push(1);
+                prop_assert!(
+                    store.match_prefix(&probe).is_some(),
+                    "referenced segment dropped from the index"
+                );
+            }
+        }
+        // Last-binder retire: drop everything, then compare the store's
+        // pool against an oracle holding exactly the live segments — any
+        // unreleased binder ref would leave extra pages behind.
+        binders.clear();
+        let mut oracle = SharedSegmentStore::new(3, 2);
+        for (_, toks) in &segs {
+            let mut src = SequenceKvCache::new(d, cap).unwrap();
+            prefill_from_tokens(&mut src, &toks);
+            prop_assert!(oracle.register(toks, &src).unwrap(), "oracle register failed");
+        }
+        prop_assert!(
+            store.shared_pages() == oracle.shared_pages(),
+            "page leak: store pins {} pages, oracle {}",
+            store.shared_pages(),
+            oracle.shared_pages()
+        );
+        prop_assert!(
+            store.shared_kv_bytes() == oracle.shared_kv_bytes(),
+            "byte leak: store pins {} bytes, oracle {}",
+            store.shared_kv_bytes(),
+            oracle.shared_kv_bytes()
+        );
+        Ok(())
+    });
+}
+
+/// Helper for the eviction check inside `retain` (which cannot early
+/// return a `Result` from the closure): panic with the same shape of
+/// message `forall` reports.
+fn prop_assert_no_ref(referenced: &[i32], salt: i32) {
+    assert!(
+        !referenced.contains(&salt),
+        "a segment with a live binder (salt {salt}) was evicted"
+    );
+}
+
+// ---- 3. charged-once byte accounting -------------------------------------
+
+#[test]
+fn n_sharers_stay_within_the_unshared_byte_baseline() {
+    forall(0x73, |rng| {
+        let d = dims(rng);
+        // Deep enough that every head pins at least one full shared page.
+        let n_prefix = d.w_local + d.page_size + rng.usize(0, 2 * d.page_size);
+        let n = rng.usize(2, 5);
+        let suffix = d.w_local + rng.usize(2, 6);
+        let cap = n_prefix + suffix + d.w_local + 4;
+        let toks = admitted_prompt(n_prefix, 0);
+        let mut src = SequenceKvCache::new(d, cap).unwrap();
+        prefill_from_tokens(&mut src, &toks);
+        let mut store = SharedSegmentStore::new(3, 4);
+        prop_assert!(store.register(&toks, &src).unwrap(), "register must accept");
+
+        // Per-sharer suffix streams drawn up front so the shared and
+        // unshared worlds replay identical inputs.
+        let streams: Vec<Vec<(f32, f32)>> = (0..n)
+            .map(|_| {
+                (0..suffix)
+                    .map(|_| {
+                        (rng.usize(0, 50) as f32, if rng.bool(0.5) { 0.9 } else { 0.1 })
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut binders = Vec::new();
+        let mut controls = Vec::new();
+        for _ in 0..n {
+            let mut probe = toks.clone();
+            probe.push(1);
+            let m = store.match_prefix(&probe).expect("probe must match");
+            let mut b = SequenceKvCache::new(d, cap).unwrap();
+            store.bind(&m, &mut b).unwrap();
+            binders.push(b);
+            let mut c = SequenceKvCache::new(d, cap).unwrap();
+            prefill_from_tokens(&mut c, &toks);
+            controls.push(c);
+        }
+        let total =
+            |cs: &[SequenceKvCache]| cs.iter().map(|c| c.allocated_kv_bytes()).sum::<usize>();
+
+        // At bind, sharing strictly beats N private copies.
+        prop_assert!(store.shared_kv_bytes() > 0, "prefix must pin shared pages");
+        prop_assert!(
+            store.shared_kv_bytes() + total(&binders) < total(&controls),
+            "sharing must strictly undercut {n} private copies at bind"
+        );
+
+        // The unshared world's byte curve is the budget a charged-once
+        // scheduler meters against: the shared world must stay at or
+        // under it at every tick, through COW divergence and suffix
+        // growth.
+        for s in 0..suffix {
+            for i in 0..n {
+                let (val, gate) = streams[i][s];
+                let pos = (n_prefix + s) as i64;
+                let (k, v, g) = decoded(d, pos, val, gate);
+                binders[i].insert_decoded(&k, &v, &g, pos, |_, _, vg| vg >= 0.5).unwrap();
+                controls[i].insert_decoded(&k, &v, &g, pos, |_, _, vg| vg >= 0.5).unwrap();
+            }
+            let shared_total = store.shared_kv_bytes() + total(&binders);
+            let unshared_total = total(&controls);
+            prop_assert!(
+                shared_total <= unshared_total,
+                "tick {s}: sharing pinned {shared_total} B, unshared baseline {unshared_total} B"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---- 4. prefix-match safety ----------------------------------------------
+
+#[test]
+fn matching_returns_the_longest_verified_prefix_or_falls_back_private() {
+    forall(0x74, |rng| {
+        let d = dims(rng);
+        let min_prefix = rng.usize(2, 5);
+        let n_long = min_prefix + rng.usize(2, 8);
+        let q = rng.usize(min_prefix, n_long); // shorter registered prefix
+        let cap = n_long + d.w_local + 4;
+        let p_toks = prompt(n_long, rng.usize(0, 4) as i32);
+        let mut store = SharedSegmentStore::new(min_prefix, 8);
+        let mut src_p = SequenceKvCache::new(d, cap).unwrap();
+        prefill_from_tokens(&mut src_p, &p_toks);
+        prop_assert!(store.register(&p_toks, &src_p).unwrap(), "long register failed");
+        let mut src_q = SequenceKvCache::new(d, cap).unwrap();
+        prefill_from_tokens(&mut src_q, &p_toks[..q]);
+        prop_assert!(
+            store.register(&p_toks[..q], &src_q).unwrap(),
+            "short register failed"
+        );
+
+        // An extension of P matches the longest registered prefix.
+        let mut ext = p_toks.clone();
+        ext.push(7777);
+        let m = store.match_prefix(&ext).expect("extension must match");
+        prop_assert!(m.prefix_len() == n_long, "longest prefix must win");
+
+        // The exact prompt P re-arriving matches only the *strict*
+        // shorter prefix (a full-prompt match would leave no suffix to
+        // decode).
+        let m_self = store.match_prefix(&p_toks).expect("strict sub-prefix must match");
+        prop_assert!(
+            m_self.prefix_len() == q,
+            "identical prompt must fall back to the strict prefix"
+        );
+
+        // Divergence at dpos in [q, n_long) falls back to the shorter
+        // registered prefix — only the verified span is admitted.
+        let dpos = rng.usize(q, n_long);
+        let mut div = p_toks[..dpos].to_vec();
+        div.push(p_toks[dpos] + 1);
+        let m_div = store.match_prefix(&div).expect("diverging probe must match short");
+        prop_assert!(
+            m_div.prefix_len() == q,
+            "partial match must admit exactly the verified {q} tokens"
+        );
+        let mut b = SequenceKvCache::new(d, cap).unwrap();
+        let bound_len = store.bind(&m_div, &mut b).unwrap();
+        prop_assert!(bound_len == q, "bind must cover exactly the matched span");
+        prop_assert!(
+            b.resident_tokens() == src_q.resident_tokens(),
+            "partial bind must reconstruct the short registrant's state"
+        );
+
+        // Divergence before the shortest registered prefix: private.
+        let dp2 = rng.usize(0, q);
+        let mut div2 = p_toks[..dp2].to_vec();
+        div2.push(p_toks[dp2] + 1);
+        while div2.len() <= min_prefix + 1 {
+            div2.push(9000 + div2.len() as i32);
+        }
+        prop_assert!(
+            store.match_prefix(&div2).is_none(),
+            "early divergence must fall back to private admission"
+        );
+
+        // A collision-shaped hash hit (forged key, mismatched tokens) is
+        // verified against the stored tokens and rejected.
+        let b_toks = prompt(n_long, 77);
+        let mut store2 = SharedSegmentStore::new(min_prefix, 4);
+        let mut s2 = SequenceKvCache::new(d, cap).unwrap();
+        prefill_from_tokens(&mut s2, &p_toks);
+        prop_assert!(store2.register(&p_toks, &s2).unwrap(), "collision register failed");
+        store2.spoof_segment_hash(0, chain_hash(&b_toks));
+        let mut be = b_toks.clone();
+        be.push(1);
+        prop_assert!(
+            store2.match_prefix(&be).is_none(),
+            "hash hit with mismatched tokens must be rejected"
+        );
+        Ok(())
+    });
+}
