@@ -29,7 +29,8 @@ test-fast:
 	cd $(RUST_DIR) && cargo test -q --lib \
 		--test prop_kvcache --test prop_policies \
 		--test prop_batching --test prop_prefill --test prop_pool \
-		--test prop_park --test prop_spill --test prop_prefix
+		--test prop_park --test prop_spill --test prop_prefix \
+		--test prop_stream
 
 # Fault drill: the whole fast tier re-run with the spill-I/O failpoint
 # matrix armed through the same env interface production honors
@@ -43,14 +44,16 @@ test-fault:
 		cargo test -q --lib \
 		--test prop_kvcache --test prop_policies \
 		--test prop_batching --test prop_prefill --test prop_pool \
-		--test prop_park --test prop_spill --test prop_prefix
+		--test prop_park --test prop_spill --test prop_prefix \
+		--test prop_stream
 
 # Coordinator perf snapshot: prints the hot-path rows and writes
 # rust/BENCH_coordinator.json — machine-readable results plus the
 # persistent-view full-vs-delta upload-bytes counters, the PR 3
 # prefill-batch / defrag counters, the PR 4 lane-compaction counters,
 # the PR 5 parking-tier counters, the PR 6 spill-tier fault-drill
-# counters, and the PR 7 shared-prefix counters, tracked across PRs. The greps
+# counters, the PR 7 shared-prefix counters, and the PR 8 serve-loop
+# counters (timer ticks / stream frames / sheds), tracked across PRs. The greps
 # keep the report's schema honest: a refactor that silently drops a
 # tracked counter fails the bench target, not a later PR's comparison.
 bench:
@@ -93,6 +96,12 @@ bench:
 		|| { echo "BENCH_coordinator.json: missing cow_clones"; exit 1; }
 	@grep -q '"shared_bytes_saved"' $(RUST_DIR)/BENCH_coordinator.json \
 		|| { echo "BENCH_coordinator.json: missing shared_bytes_saved"; exit 1; }
+	@grep -q '"ticks_idle"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing ticks_idle"; exit 1; }
+	@grep -q '"stream_frames"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing stream_frames"; exit 1; }
+	@grep -q '"shed_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing shed_events"; exit 1; }
 
 # AOT-lower the JAX model to HLO-text artifacts for the PJRT runtime.
 artifacts:

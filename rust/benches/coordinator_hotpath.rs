@@ -970,6 +970,96 @@ fn main() {
         report.counter("prefix_share_ok", shared_peak < unshared_peak);
     }
 
+    // --- serving loop: timer tick, stream framing, load shedding (Design 8).
+    {
+        use std::time::Duration;
+
+        use wgkv::model::ByteTokenizer;
+        use wgkv::scheduler::{stream_delta, stream_flush};
+        use wgkv::server::{command_channel, gather_commands, Command, SendRefusal};
+
+        // Timer tick: every quiet gather pass (idle scheduler, no inbound
+        // traffic, senders alive) must report a fired timer so the engine
+        // steps the scheduler anyway — the PR 8 starvation fix.
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        let mut ticks_idle = 0u64;
+        for _ in 0..32 {
+            let g =
+                gather_commands(&rx, true, Duration::from_micros(50), Duration::from_micros(50));
+            assert!(g.commands.is_empty() && !g.disconnected);
+            if g.timer_fired {
+                ticks_idle += 1;
+            }
+        }
+        drop(tx);
+        assert_eq!(ticks_idle, 32, "every quiet pass must be a timer tick");
+
+        // Stream framing: replay the engine's per-step emission schedule
+        // (delta after every token, flush at retire) over a byte stream
+        // whose multi-byte characters split across decode steps, and check
+        // the frames concatenate to the buffered decode.
+        let tk = ByteTokenizer::new(256, 257, 258);
+        let text = "wg-kv streams UTF-8 safely: é€中🙂 end";
+        let toks: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+        let mut emitted = 0usize;
+        let mut stream_frames = 0u64;
+        let mut concat = String::new();
+        for i in 1..=toks.len() {
+            let full = tk.decode(&toks[..i]);
+            if let Some((stable, piece)) = stream_delta(&full, emitted) {
+                concat.push_str(&piece);
+                emitted = stable;
+                stream_frames += 1;
+            }
+        }
+        let full = tk.decode(&toks);
+        if let Some(tail) = stream_flush(&full, emitted) {
+            concat.push_str(&tail);
+            stream_frames += 1;
+        }
+        assert_eq!(concat, full, "frames must concatenate to the buffered decode");
+
+        // The per-token framing cost on the decode critical path: one
+        // incremental decode + delta per generated token.
+        let mut i = 0usize;
+        let mut em = 0usize;
+        report.record(b.run("serve/decode-stream-delta", || {
+            i += 1;
+            if i > toks.len() {
+                i = 1;
+                em = 0;
+            }
+            let full = tk.decode(&toks[..i]);
+            if let Some((stable, piece)) = stream_delta(&full, em) {
+                em = stable;
+                std::hint::black_box(piece);
+            }
+        }));
+
+        // Load shedding: a bound-1 command channel refuses overflow with a
+        // structured Shed (no hang, no disconnect) and counts each refusal.
+        let (cmds, crx) = command_channel(1);
+        let (rtx, _rrx) = std::sync::mpsc::channel();
+        cmds.send(Command::Stats(rtx)).expect("first command fits the bound");
+        for _ in 0..3 {
+            let (rtx, _rrx) = std::sync::mpsc::channel();
+            assert!(matches!(cmds.send(Command::Stats(rtx)), Err(SendRefusal::Shed)));
+        }
+        assert_eq!(cmds.shed_count(), 3, "every refusal must be counted");
+        drop(crx);
+
+        println!(
+            "serving-loop sim: {ticks_idle} quiet timer ticks, {stream_frames} stream frames \
+             (identity ok, {} B), {} sheds at bound 1",
+            concat.len(),
+            cmds.shed_count()
+        );
+        report.counter("ticks_idle", ticks_idle);
+        report.counter("stream_frames", stream_frames);
+        report.counter("stream_identity_ok", concat == full);
+        report.counter("shed_events", cmds.shed_count());
+    }
+
     // --- substrate: JSON codec + RNG (server protocol budget).
     {
         let payload = Json::obj()

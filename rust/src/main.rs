@@ -25,6 +25,7 @@ wgkv — learned KV-cache admission for long-context serving
 USAGE:
   wgkv serve     [--artifacts DIR] [--addr HOST:PORT] [--max-active N] [--max-batch N]
                  [--max-prefill-batch N] [--kv-budget BYTES]
+                 [--tick-interval MS] [--max-pending N]
                  [--park-byte-budget BYTES] [--park-idle-ticks N]
                  [--spill-dir DIR] [--spill-byte-budget BYTES]
                  [--spill-after-ticks N] [--max-park-per-tick N]
@@ -34,7 +35,7 @@ USAGE:
   wgkv eval      [--artifacts DIR] [--instances N] [--seed S] [--variant FILE] [POLICY]
   wgkv costmodel [--model llama|qwen]
   wgkv info      [--artifacts DIR]
-  wgkv client    [--addr HOST:PORT] --prompt TEXT [--max-new N] [POLICY]
+  wgkv client    [--addr HOST:PORT] --prompt TEXT [--max-new N] [--stream] [POLICY]
 
 POLICY flags:
   --policy wg-kv|full|local|duo|random   (default wg-kv)
@@ -48,6 +49,20 @@ POLICY flags:
   --temperature F   sampling temperature (default greedy)
   --session-id S    multi-turn key (client): resume a retained session,
                     appending only the new turn's tokens
+
+serve loop (timer tick + backpressure):
+  --tick-interval MS        idle engine poll bound: the scheduler steps
+                            at least this often on a quiet server, so
+                            idle-aging, parking and spill demotion
+                            progress with zero traffic (default 10)
+  --max-pending N           command-channel bound; a full queue sheds
+                            requests with a structured 'shed' error
+                            instead of growing unboundedly (default 256)
+
+client streaming:
+  --stream                  print token frames as they arrive instead of
+                            waiting for the buffered completion (the
+                            frames concatenate to the identical text)
 
 serve parking tier:
   --park-byte-budget BYTES  host budget for parked session blobs
@@ -146,6 +161,10 @@ fn serve(args: &Args) -> Result<()> {
     let prefix_share = args.bool("prefix-share")?;
     let prefix_min = args.usize("prefix-min-tokens", 32)?;
     let prefix_max = args.usize("prefix-max-segments", 64)?;
+    let srv = server::ServerConfig {
+        tick_interval: std::time::Duration::from_millis(args.u64("tick-interval", 10)?),
+        max_pending_commands: args.usize("max-pending", 256)?,
+    };
     let (cmds, _handle) = server::spawn_engine_thread_with_spill(
         move || {
             let mut engine = Engine::load(artifacts, EngineConfig::default())?;
@@ -156,6 +175,7 @@ fn serve(args: &Args) -> Result<()> {
         },
         cfg,
         spill,
+        srv,
     );
     server::serve(&addr, cmds)
 }
@@ -282,8 +302,27 @@ fn client(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--prompt is required"))?;
     let params = policy_params(args, prompt, args.usize("max-new", 32)?)?;
     let mut client = server::Client::connect(&addr)?;
-    let c = client.generate(params)?;
-    println!("{}", c.text);
+    let c = if args.bool("stream")? {
+        // Print each frame as it lands; the final completion carries the
+        // full (identical) text plus the timing fields.
+        use std::io::Write as _;
+        let mut done = None;
+        for item in client.generate_stream(params)? {
+            match item? {
+                server::StreamItem::Token { text, .. } => {
+                    print!("{text}");
+                    std::io::stdout().flush()?;
+                }
+                server::StreamItem::Done(c) => done = Some(c),
+            }
+        }
+        println!();
+        done.ok_or_else(|| anyhow::anyhow!("stream ended without a completion"))?
+    } else {
+        let c = client.generate(params)?;
+        println!("{}", c.text);
+        c
+    };
     eprintln!(
         "[id {} | prefill {:.1} ms | decode {:.2} ms/tok | cache {:.1}%]",
         c.id,

@@ -196,6 +196,15 @@ pub struct EngineMetrics {
     /// Private paged-pool bytes binders avoided allocating (the K+V
     /// payload of every shared global token, summed over binds).
     pub shared_bytes_saved: u64,
+    /// Scheduler ticks fired by the server's timer alone (no inbound
+    /// command woke the engine thread) — the quiet-server heartbeat
+    /// that ages idle sessions into the park/spill tiers.
+    pub ticks_idle: u64,
+    /// Incremental token frames emitted to streaming reply channels.
+    pub stream_frames: u64,
+    /// Commands refused at the bounded command channel (load shedding);
+    /// each one became a structured `shed` error to the client.
+    pub shed_events: u64,
 }
 
 impl EngineMetrics {
@@ -251,6 +260,9 @@ impl EngineMetrics {
             shared_pages: self.shared_pages,
             cow_clones: self.cow_clones,
             shared_bytes_saved: self.shared_bytes_saved,
+            ticks_idle: self.ticks_idle,
+            stream_frames: self.stream_frames,
+            shed_events: self.shed_events,
         }
     }
 
@@ -312,6 +324,9 @@ pub struct MetricsSnapshot {
     pub shared_pages: u64,
     pub cow_clones: u64,
     pub shared_bytes_saved: u64,
+    pub ticks_idle: u64,
+    pub stream_frames: u64,
+    pub shed_events: u64,
 }
 
 impl MetricsSnapshot {
@@ -353,6 +368,9 @@ impl MetricsSnapshot {
             .set("shared_pages", self.shared_pages)
             .set("cow_clones", self.cow_clones)
             .set("shared_bytes_saved", self.shared_bytes_saved)
+            .set("ticks_idle", self.ticks_idle)
+            .set("stream_frames", self.stream_frames)
+            .set("shed_events", self.shed_events)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -394,6 +412,9 @@ impl MetricsSnapshot {
             shared_pages: f("shared_pages") as u64,
             cow_clones: f("cow_clones") as u64,
             shared_bytes_saved: f("shared_bytes_saved") as u64,
+            ticks_idle: f("ticks_idle") as u64,
+            stream_frames: f("stream_frames") as u64,
+            shed_events: f("shed_events") as u64,
         }
     }
 }
@@ -459,6 +480,9 @@ mod tests {
         m.shared_pages = 9;
         m.cow_clones = 2;
         m.shared_bytes_saved = 8192;
+        m.ticks_idle = 11;
+        m.stream_frames = 42;
+        m.shed_events = 3;
         let s = m.snapshot();
         let j = s.to_json().dump();
         let back = MetricsSnapshot::from_json(&crate::util::json::Json::parse(&j).unwrap());

@@ -4,4 +4,4 @@ pub mod sampling;
 pub mod tokenizer;
 
 pub use sampling::{Sampler, SamplerKind};
-pub use tokenizer::ByteTokenizer;
+pub use tokenizer::{stable_stream_prefix, ByteTokenizer};

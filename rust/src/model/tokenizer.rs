@@ -50,6 +50,33 @@ impl ByteTokenizer {
     }
 }
 
+/// Byte length of the *stream-stable* prefix of a lossily decoded
+/// string: everything up to (but excluding) any trailing run of
+/// U+FFFD replacement characters.
+///
+/// [`ByteTokenizer::decode`] runs `from_utf8_lossy` over the filtered
+/// byte stream, so a multi-byte UTF-8 sequence split across decode
+/// steps shows up as replacement characters until its continuation
+/// bytes arrive — and then *changes*. Every character before a trailing
+/// replacement run consumed complete bytes and can never be altered by
+/// appending more, so an incremental detokenizer that emits only up to
+/// this boundary (flushing the held-back tail once the stream ends)
+/// produces frames whose concatenation is bit-identical to decoding the
+/// whole token stream at once. A genuine invalid byte mid-stream also
+/// decodes to U+FFFD; holding it back until the next frame (or the
+/// final flush) is conservative and preserves the identity either way.
+pub fn stable_stream_prefix(s: &str) -> usize {
+    const REPLACEMENT: char = '\u{FFFD}';
+    let mut end = s.len();
+    while let Some(c) = s[..end].chars().next_back() {
+        if c != REPLACEMENT {
+            break;
+        }
+        end -= c.len_utf8();
+    }
+    end
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,5 +93,24 @@ mod tests {
     fn decode_skips_specials() {
         let tk = ByteTokenizer::new(256, 257, 258);
         assert_eq!(tk.decode(&[256, b'x' as i32, 258, 257]), "x");
+    }
+
+    #[test]
+    fn stable_prefix_holds_back_trailing_replacements() {
+        // Complete text is fully stable.
+        assert_eq!(stable_stream_prefix("abc"), 3);
+        assert_eq!(stable_stream_prefix(""), 0);
+        // A truncated '€' (e2 82 [ac]) decodes to one trailing U+FFFD:
+        // held back entirely.
+        let cut = String::from_utf8_lossy(&[b'a', 0xE2, 0x82]).into_owned();
+        assert_eq!(stable_stream_prefix(&cut), 1);
+        // Once the continuation byte lands, the prefix extends past it.
+        let full = String::from_utf8_lossy(&[b'a', 0xE2, 0x82, 0xAC]).into_owned();
+        assert_eq!(stable_stream_prefix(&full), full.len());
+        assert!(full[..1].eq(&cut[..stable_stream_prefix(&cut)]));
+        // Interior replacements are stable; only the trailing run holds.
+        let mid = String::from_utf8_lossy(&[0xFF, b'b', 0xFF]).into_owned();
+        let stable = stable_stream_prefix(&mid);
+        assert_eq!(&mid[..stable], "\u{FFFD}b");
     }
 }

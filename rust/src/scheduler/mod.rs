@@ -95,7 +95,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::engine::{Engine, Session, SessionOptions, SessionSnapshot};
-use crate::model::{Sampler, SamplerKind};
+use crate::model::{stable_stream_prefix, Sampler, SamplerKind};
 use crate::runtime::host_tier::ParkedStore;
 use crate::runtime::spill::{SpillConfig, SpillError, SpillEvent, SpillMeta, SpillStore};
 use crate::util::failpoint::Failpoints;
@@ -211,6 +211,48 @@ pub struct Completion {
     pub error: Option<String>,
 }
 
+/// One incremental streaming frame: a newly *stable* span of decoded
+/// text for an in-flight request, emitted by [`Scheduler::step_stream`]
+/// as decode ticks land. Frames for one request concatenate, in `index`
+/// order, to exactly the final [`Completion::text`] — the held-back
+/// (possibly mid-UTF-8) tail flushes as one last frame at retire.
+#[derive(Debug, Clone)]
+pub struct TokenEvent {
+    /// The request this frame belongs to ([`Request::id`]).
+    pub id: u64,
+    /// Zero-based frame sequence number within the request.
+    pub index: usize,
+    /// The newly stable decoded span (may cover several tokens — fused
+    /// batch ticks and multi-byte UTF-8 holdback both coalesce).
+    pub text: String,
+}
+
+/// Compute the next incremental stream frame: given the full decoded
+/// text so far and the byte length already emitted, return the updated
+/// emitted length plus the newly *stable* span (see
+/// [`stable_stream_prefix`] for why the trailing replacement run is
+/// held back), or `None` when nothing new stabilized this step.
+pub fn stream_delta(full: &str, emitted: usize) -> Option<(usize, String)> {
+    let stable = stable_stream_prefix(full);
+    if stable > emitted {
+        Some((stable, full[emitted..stable].to_string()))
+    } else {
+        None
+    }
+}
+
+/// The end-of-generation flush: everything past `emitted`, including
+/// the held-back (still-unstable) tail — `None` when the stream already
+/// emitted the full text. Emitting every [`stream_delta`] and then this
+/// flush reproduces the buffered text bit-for-bit.
+pub fn stream_flush(full: &str, emitted: usize) -> Option<String> {
+    if full.len() > emitted {
+        Some(full[emitted..].to_string())
+    } else {
+        None
+    }
+}
+
 struct Active {
     req: Request,
     sess: Session,
@@ -221,6 +263,11 @@ struct Active {
     /// Consecutive ticks the decode planner left this session
     /// unscheduled (budget-deferred) — the preemption LRU's coldness.
     idle_ticks: usize,
+    /// Bytes of decoded text already emitted as stream frames (always a
+    /// stable-prefix boundary of `decode(generated)`).
+    streamed: usize,
+    /// Stream frames emitted so far (the next frame's `index`).
+    frames: usize,
 }
 
 /// A multi-turn session between turns: generation finished, lane still
@@ -240,6 +287,12 @@ struct Continuation {
     sampler: Sampler,
     generated: Vec<i32>,
     prefill_us: f64,
+    /// Stream cursor carried through preemption: bytes already emitted
+    /// as frames, so the resumed generation continues the stream without
+    /// repeating (or skipping) text.
+    streamed: usize,
+    /// Stream frames already emitted (the next frame's `index`).
+    frames: usize,
 }
 
 /// What the parking tier stores per session.
@@ -800,6 +853,61 @@ impl Scheduler {
         self.queue.is_empty() && self.active.is_empty()
     }
 
+    /// True when a **timer tick** would still make progress even though
+    /// [`Scheduler::is_idle`] holds: idle multi-turn sessions aging
+    /// toward the park tier, write-behind demotions awaiting their
+    /// commit `poll()`, or host-parked blobs the spill tier could still
+    /// demote. The server's tick loop uses this to keep stepping a
+    /// quiet scheduler until the tier descent settles, then stop
+    /// burning no-op ticks.
+    pub fn has_tick_work(&self) -> bool {
+        if !self.is_idle() || !self.pending_demote.is_empty() {
+            return true;
+        }
+        if self.cfg.park_byte_budget == 0 {
+            // Parking disabled: idle sessions never age anywhere.
+            return false;
+        }
+        if !self.idle.is_empty() {
+            return true;
+        }
+        self.parked.len() > 0
+            && self
+                .spill
+                .as_ref()
+                .map(|s| s.spill_byte_budget() > 0)
+                .unwrap_or(false)
+    }
+
+    /// Remove a still-queued request by id — a disconnected client's
+    /// abandoned submission, reaped before it ever costs a prefill.
+    /// Preemption re-admission markers (`req: None`) never match. If the
+    /// entry was a resume, the queued-resume pin on the session's parked
+    /// and spilled blobs is released — unless another queue entry or an
+    /// in-flight demotion still needs it. Returns whether an entry was
+    /// removed (an already-admitted request is past cancellation).
+    pub fn cancel_queued(&mut self, id: u64) -> bool {
+        let Some(pos) = self
+            .queue
+            .iter()
+            .position(|e| e.req.as_ref().map(|r| r.id) == Some(id))
+        else {
+            return false;
+        };
+        let key = self.queue.remove(pos).and_then(|e| e.resume);
+        if let Some(key) = key {
+            if !self.has_queued_resume(&key)
+                && !self.pending_demote.iter().any(|k| k == &key)
+            {
+                self.parked.set_pinned(&key, false);
+                if let Some(s) = self.spill.as_mut() {
+                    s.set_pinned(&key, false);
+                }
+            }
+        }
+        true
+    }
+
     /// KV bytes currently pinned in the paged host pool by active *and*
     /// idle (between-turn) sequences — both charge the budget headroom.
     pub fn active_kv_bytes(&self) -> usize {
@@ -875,6 +983,22 @@ impl Scheduler {
     /// compact/trim the view pool at the boundary. Returns the
     /// completions that retired this tick.
     pub fn step(&mut self, engine: &mut Engine) -> Vec<Completion> {
+        self.step_stream(engine, &mut |_| {})
+    }
+
+    /// [`Scheduler::step`] with per-token streaming: `emit` receives a
+    /// [`TokenEvent`] for every span of newly *stable* decoded text —
+    /// after each decode tick (multi-byte UTF-8 sequences split across
+    /// ticks are held back until complete) and as a final tail flush at
+    /// retire, for clean and error retires alike — so a request's frames
+    /// concatenate bit-identically to its [`Completion::text`]. The
+    /// stream cursor travels through preemption parks, so a resumed
+    /// generation continues its stream without repeating text.
+    pub fn step_stream(
+        &mut self,
+        engine: &mut Engine,
+        emit: &mut dyn FnMut(TokenEvent),
+    ) -> Vec<Completion> {
         self.tick += 1;
         let mut done = Vec::new();
         let mut parked_this_tick = false;
@@ -1194,6 +1318,8 @@ impl Scheduler {
                                         prefill_us,
                                         decode_started: Instant::now(),
                                         idle_ticks: 0,
+                                        streamed: 0,
+                                        frames: 0,
                                     });
                                 }
                                 Err(e) => {
@@ -1205,6 +1331,8 @@ impl Scheduler {
                                         prefill_us: 0.0,
                                         decode_started: Instant::now(),
                                         idle_ticks: 0,
+                                        streamed: 0,
+                                        frames: 0,
                                     };
                                     done.push(self.finish(
                                         engine,
@@ -1281,6 +1409,7 @@ impl Scheduler {
         // their token limit.
         let eos = engine.dims().eos;
         let mut retire: BTreeMap<usize, Option<String>> = BTreeMap::new();
+        let mut pushed = vec![false; self.active.len()];
         for group in &plan {
             let mut scheduled: Vec<usize> = Vec::with_capacity(group.len());
             let mut toks: Vec<i32> = Vec::with_capacity(group.len());
@@ -1292,6 +1421,7 @@ impl Scheduler {
                     continue;
                 }
                 a.generated.push(tok);
+                pushed[i] = true;
                 scheduled.push(i);
                 toks.push(tok);
             }
@@ -1325,6 +1455,27 @@ impl Scheduler {
             }
         }
 
+        // --- Stream emission: every session that pushed a token this
+        // tick emits its newly stable decoded span (the trailing
+        // replacement-char run is held back — see [`stream_delta`]).
+        // This runs before the retire loop, so indices are still live;
+        // retiring sessions emit their remaining tail below.
+        let tk = engine.tokenizer;
+        for (i, &grew) in pushed.iter().enumerate() {
+            if !grew {
+                continue;
+            }
+            let a = &mut self.active[i];
+            let full = tk.decode(&a.generated);
+            if let Some((stable, text)) = stream_delta(&full, a.streamed) {
+                a.streamed = stable;
+                let index = a.frames;
+                a.frames += 1;
+                engine.metrics.stream_frames += 1;
+                emit(TokenEvent { id: a.req.id, index, text });
+            }
+        }
+
         // --- Retire in descending index order so swap_remove never
         // disturbs a pending index. A multi-turn session (session_id)
         // that finished its turn cleanly goes *idle* — lane kept bound,
@@ -1332,8 +1483,17 @@ impl Scheduler {
         // instead of tearing down; errors always tear down (the key is
         // forgotten and the next turn starts fresh).
         for (&i, err) in retire.iter().rev() {
-            let a = self.active.swap_remove(i);
+            let mut a = self.active.swap_remove(i);
             let text = engine.tokenizer.decode(&a.generated);
+            // Flush the held-back stream tail — clean *and* error
+            // retires — so concatenated frames equal `text` exactly.
+            if let Some(tail) = stream_flush(&text, a.streamed) {
+                a.streamed = text.len();
+                let index = a.frames;
+                a.frames += 1;
+                engine.metrics.stream_frames += 1;
+                emit(TokenEvent { id: a.req.id, index, text: tail });
+            }
             engine.metrics.requests_done += 1;
             match (&a.req.session_id, err) {
                 (Some(key), None) => {
@@ -1479,6 +1639,8 @@ impl Scheduler {
                                 prefill_us: t0.elapsed().as_secs_f64() * 1e6,
                                 decode_started: Instant::now(),
                                 idle_ticks: 0,
+                                streamed: 0,
+                                frames: 0,
                             });
                         }
                         Err(err) => {
@@ -1490,6 +1652,8 @@ impl Scheduler {
                                 prefill_us: 0.0,
                                 decode_started: Instant::now(),
                                 idle_ticks: 0,
+                                streamed: 0,
+                                frames: 0,
                             };
                             done.push(self.finish(
                                 engine,
@@ -1538,6 +1702,8 @@ impl Scheduler {
                                 prefill_us: cont.prefill_us,
                                 decode_started: Instant::now(),
                                 idle_ticks: 0,
+                                streamed: cont.streamed,
+                                frames: cont.frames,
                             }),
                             Err(err) => done.push(Self::error_completion(
                                 &cont.req,
@@ -1557,6 +1723,8 @@ impl Scheduler {
                                         prefill_us: t0.elapsed().as_secs_f64() * 1e6,
                                         decode_started: Instant::now(),
                                         idle_ticks: 0,
+                                        streamed: 0,
+                                        frames: 0,
                                     });
                                 }
                                 Err(err) => done.push(Self::error_completion(
@@ -1601,6 +1769,8 @@ impl Scheduler {
                                         prefill_us: t0.elapsed().as_secs_f64() * 1e6,
                                         decode_started: Instant::now(),
                                         idle_ticks: 0,
+                                        streamed: 0,
+                                        frames: 0,
                                     });
                                 }
                                 Err(err) => done.push(Self::error_completion(
@@ -1818,6 +1988,8 @@ impl Scheduler {
                     sampler: a.sampler,
                     generated: a.generated,
                     prefill_us: a.prefill_us,
+                    streamed: a.streamed,
+                    frames: a.frames,
                 };
                 match self.parked.insert(
                     &key,
@@ -1848,6 +2020,8 @@ impl Scheduler {
                                     prefill_us: cont.prefill_us,
                                     decode_started: Instant::now(),
                                     idle_ticks: 0,
+                                    streamed: cont.streamed,
+                                    frames: cont.frames,
                                 }),
                                 Err(err) => done.push(Self::error_completion(
                                     &cont.req,
@@ -2346,6 +2520,8 @@ mod tests {
             sampler: Sampler::greedy(),
             generated: Vec::new(),
             prefill_us: 0.0,
+            streamed: 0,
+            frames: 0,
         };
         let entry = ParkedEntry { snap: snap_for_tests(), cont: Some(cont) };
         assert!(s.parked.insert("preempted", entry, 64, false, 0).is_ok());
@@ -2397,5 +2573,112 @@ mod tests {
             "a tombstoned key routes as a stale resume, not fresh"
         );
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Emitting every per-step delta plus the final flush reproduces the
+    /// buffered decode exactly, even with a multi-byte UTF-8 sequence
+    /// (and a genuinely invalid byte) split across steps.
+    #[test]
+    fn stream_deltas_plus_flush_equal_buffered_decode() {
+        let tk = crate::model::ByteTokenizer::new(256, 257, 258);
+        // "a€" with the euro split across steps, then an invalid byte,
+        // then "z": [97, e2, 82, ac, ff, 7a] plus specials sprinkled in.
+        let tokens: Vec<i32> = vec![256, 97, 0xE2, 0x82, 258, 0xAC, 0xFF, 122, 257];
+        let mut emitted = 0usize;
+        let mut out = String::new();
+        let mut frames = 0usize;
+        for n in 1..=tokens.len() {
+            let full = tk.decode(&tokens[..n]);
+            if let Some((stable, text)) = stream_delta(&full, emitted) {
+                emitted = stable;
+                out.push_str(&text);
+                frames += 1;
+            }
+        }
+        let full = tk.decode(&tokens);
+        if let Some(tail) = stream_flush(&full, emitted) {
+            out.push_str(&tail);
+            frames += 1;
+        }
+        assert_eq!(out, full, "concatenated frames must equal the buffered text");
+        assert!(frames >= 2, "the split sequence must not collapse to one frame");
+        // The mid-sequence step held the truncated euro back entirely.
+        let cut = tk.decode(&tokens[..4]); // "a" + truncated e2 82
+        assert_eq!(stable_stream_prefix(&cut), 1);
+    }
+
+    /// A quiet scheduler reports tick work exactly while the tier
+    /// descent can still advance: queued/active always, idle sessions
+    /// only when parking is enabled, parked blobs only when a spill
+    /// tier with budget is attached, and in-flight demotions always.
+    #[test]
+    fn has_tick_work_tracks_the_tier_descent() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        assert!(!s.has_tick_work(), "empty scheduler has nothing to tick");
+        assert!(s.submit(req(0)));
+        assert!(s.has_tick_work(), "queued work always ticks");
+        s.queue.clear();
+        // A parked blob without a spill tier has nowhere to descend.
+        let entry = ParkedEntry { snap: snap_for_tests(), cont: None };
+        assert!(s.parked.insert("cold", entry, 64, false, 0).is_ok());
+        assert!(!s.has_tick_work());
+        s.attach_spill(tdir("tickwork"), Failpoints::disarmed()).unwrap();
+        assert!(
+            !s.has_tick_work(),
+            "spill tier attached but budget 0: no demotion possible"
+        );
+        let dir = s.spill().unwrap().dir().to_path_buf();
+        s.detach_spill();
+        s.evicted_keys.clear(); // detach tombstoned the key; irrelevant here
+        let mut s = Scheduler::new(SchedulerConfig {
+            spill_byte_budget: 1 << 20,
+            spill_after_ticks: 2,
+            ..Default::default()
+        });
+        s.attach_spill(tdir("tickwork2"), Failpoints::disarmed()).unwrap();
+        let entry = ParkedEntry { snap: snap_for_tests(), cont: None };
+        assert!(s.parked.insert("cold", entry, 64, false, 0).is_ok());
+        assert!(s.has_tick_work(), "a parked blob above a budgeted spill tier ticks");
+        s.tick = 10;
+        s.spill_demotions();
+        assert!(s.has_tick_work(), "in-flight demotion needs its commit poll");
+        s.flush_spill();
+        assert!(
+            !s.has_tick_work(),
+            "descent settled (blob on disk): the timer can go quiet"
+        );
+        let dir2 = s.spill().unwrap().dir().to_path_buf();
+        drop(s);
+        let _ = std::fs::remove_dir_all(dir);
+        let _ = std::fs::remove_dir_all(dir2);
+    }
+
+    /// Cancelling a queued request removes exactly that entry and
+    /// releases its resume pin — unless another queued turn for the same
+    /// session still holds the promise.
+    #[test]
+    fn cancel_queued_removes_entry_and_unpins_resume() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let entry = ParkedEntry { snap: snap_for_tests(), cont: None };
+        assert!(s.parked.insert("chat", entry, 64, false, 0).is_ok());
+        let r1 = Request { session_id: Some("chat".into()), ..req(1) };
+        let r2 = Request { session_id: Some("chat".into()), ..req(2) };
+        assert!(s.submit(r1));
+        assert!(s.submit(r2));
+        assert_eq!(s.parked.is_pinned("chat"), Some(true));
+        assert!(s.cancel_queued(1));
+        assert_eq!(
+            s.parked.is_pinned("chat"),
+            Some(true),
+            "the second queued turn still pins the blob"
+        );
+        assert!(s.cancel_queued(2));
+        assert_eq!(s.parked.is_pinned("chat"), Some(false), "last cancel unpins");
+        assert_eq!(s.queued(), 0);
+        assert!(!s.cancel_queued(2), "already removed");
+        // Preemption markers (req: None) are not cancellable by id.
+        s.queue.push_back(QueueEntry { req: None, resume: Some("chat".into()) });
+        assert!(!s.cancel_queued(7));
+        assert_eq!(s.queued(), 1);
     }
 }

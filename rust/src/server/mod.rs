@@ -1,22 +1,51 @@
 //! Serving front-end: a threaded TCP JSON-lines API over the engine thread.
 //!
 //! PJRT buffers are not `Send`, so the engine + scheduler live on one
-//! dedicated OS thread; connection handler threads talk to it through an
-//! mpsc command channel and receive replies over per-request channels.
-//! (The usual tokio stack is unavailable in this image — DESIGN.md §2 —
-//! so the server is thread-per-connection over `std::net`, which at this
-//! model scale is not the bottleneck: the engine thread serializes all
-//! PJRT work anyway.) Python is never involved: the engine thread only
-//! executes pre-compiled artifacts.
+//! dedicated OS thread; connection handler threads talk to it through a
+//! **bounded** mpsc command channel and receive replies over per-request
+//! channels. (The usual tokio stack is unavailable in this image —
+//! DESIGN.md §2 — so the server is thread-per-connection over
+//! `std::net`, which at this model scale is not the bottleneck: the
+//! engine thread serializes all PJRT work anyway.) Python is never
+//! involved: the engine thread only executes pre-compiled artifacts.
 //!
-//! The engine loop is a *batch feeder*: every tick it drains **all**
-//! pending commands — blocking only when the scheduler is idle, and then
-//! holding a short gather window so commands from concurrent clients
-//! land in the same admission pass — before stepping the continuous
-//! batcher once. Co-arriving requests therefore land in one **batched
-//! prefill pass** (the scheduler's phase-1 `plan_prefill_batch` tick,
-//! up to `max_prefill_batch` per tick) and then share the first fused
-//! decode batch, instead of being serialized one prefill apart.
+//! **Timer tick.** The engine loop is a command-channel *service*: when
+//! the scheduler is idle it polls the channel with a bounded
+//! `recv_timeout` ([`ServerConfig::tick_interval`], `--tick-interval`)
+//! instead of blocking forever, so `Scheduler::step` keeps firing on a
+//! quiet server and idle-aging, parking, preemption, spill
+//! demotion/`poll()` and tombstone sweeps all progress with **zero**
+//! inbound traffic. (The previous engine loop blocked on `recv()` when
+//! idle, so a gone-quiet session could never descend the idle → park →
+//! spill tiers until the next client nudged the channel.) Purely
+//! timer-driven passes that still had scheduler work to do are counted
+//! in the `ticks_idle` metric.
+//!
+//! The loop is still a *batch feeder*: every pass it drains **all**
+//! pending commands — holding a short gather window after the first
+//! idle arrival so commands from concurrent clients land in the same
+//! admission pass — before stepping the continuous batcher once.
+//! Co-arriving requests therefore land in one **batched prefill pass**
+//! and then share the first fused decode batch.
+//!
+//! **Streaming.** A `Command::Generate` reply is a channel of
+//! [`StreamEvent`]s: zero or more UTF-8-safe incremental `Token` frames
+//! (multi-byte sequences split across decode steps are held back until
+//! complete), then one final `Done` completion whose `text` is exactly
+//! the concatenation of the frames — bit-identical to the old buffered
+//! reply. The line protocol exposes this when a `generate` request sets
+//! `"stream": true`; without the flag the facade swallows the frames
+//! and returns only the final completion line, so existing clients are
+//! unchanged. [`Client::generate_stream`] irons the frames into an
+//! iterator.
+//!
+//! **Backpressure.** The command channel is bounded
+//! ([`ServerConfig::max_pending_commands`], `--max-pending`); a full
+//! queue sheds new commands with a structured `shed` error instead of
+//! growing without limit, and every shed bumps the `shed_events`
+//! counter. Waiters whose reply channel has closed (client gone before
+//! completion) are reaped at tick boundaries via a heartbeat probe, so
+//! a burst of abandoned requests cannot grow the waiter map unboundedly.
 //!
 //! Protocol (one JSON object per line):
 //!
@@ -24,19 +53,25 @@
 //! {"op": "generate", "prompt": "q: k07\na: ", "max_new": 16,
 //!  "policy": "wg-kv", "tau": 0.1, "quest_budget_tokens": 64,
 //!  "snapkv_budget": 128, "temperature": 0.0, "seed": 0}
-//! {"op": "generate", "prompt": "next turn", "session_id": "chat-1"}
+//! {"op": "generate", "prompt": "next turn", "session_id": "chat-1",
+//!  "stream": true}
 //! {"op": "park", "session_id": "chat-1"}
 //! {"op": "drop", "session_id": "chat-1"}
 //! {"op": "stats"}
+//! {"op": "subscribe_stats"}
 //! ```
 //!
-//! Responses are one JSON object per line: a completion (`"ok": true`), a
-//! stats snapshot (`"ok": "stats"`), or an error (`"ok": false`). Every
-//! error response carries a stable machine-matchable `"code"` field
-//! (see [`error_code`]) next to the human-readable `"error"` message,
-//! and an idle connection is closed after [`CONN_READ_TIMEOUT`] with a
-//! final `read_timeout` error line — a stuck client cannot pin a
-//! handler thread forever.
+//! Responses are one JSON object per line: a completion (`"ok": true`),
+//! an incremental token frame (`"ok": "token"`, streaming mode only), a
+//! stats snapshot (`"ok": "stats"`), or an error (`"ok": false`).
+//! `subscribe_stats` dedicates the connection: the server pushes a
+//! stats line every engine pass that did work, until either side
+//! disconnects — observers subscribe instead of polling. Every error
+//! response carries a stable machine-matchable `"code"` field (see
+//! [`error_code`]) next to the human-readable `"error"` message, and an
+//! idle connection is closed after [`CONN_READ_TIMEOUT`] with a final
+//! `read_timeout` error line — a stuck client cannot pin a handler
+//! thread forever.
 //!
 //! **Multi-turn sessions.** A `generate` carrying a `session_id` keeps
 //! the session's admitted KV after the turn completes (idle on-device,
@@ -48,10 +83,14 @@
 //! context.
 #![warn(missing_docs)]
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -82,8 +121,14 @@ pub mod error_code {
     pub const ENGINE_STOPPED: &str = "engine_stopped";
     /// The engine thread dropped this request's reply channel.
     pub const ENGINE_DROPPED: &str = "engine_dropped";
+    /// The engine failed to load; every command is refused with this
+    /// code until the process exits (no caller is left hanging).
+    pub const ENGINE_LOAD: &str = "engine_load";
     /// A session op (`park` / `drop`) was refused by the scheduler.
     pub const SESSION_OP_FAILED: &str = "session_op_failed";
+    /// The bounded command queue is full; the request was shed. Retry
+    /// after backoff.
+    pub const SHED: &str = "shed";
     /// The connection sat idle past the server's read timeout and is
     /// being closed.
     pub const READ_TIMEOUT: &str = "read_timeout";
@@ -92,7 +137,28 @@ pub mod error_code {
 /// Per-connection read timeout: an idle client may hold its socket (and
 /// its handler thread) this long between requests before the server
 /// sends a final `read_timeout` error line and closes the connection.
-pub const CONN_READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(300);
+pub const CONN_READ_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Serving-layer knobs: the quiet-server timer tick and the command
+/// channel bound (the shed ladder's first rung).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// How long an idle engine waits on the command channel before a
+    /// timer tick fires `Scheduler::step` anyway (`--tick-interval`).
+    /// The idle → park → spill descent advances at this cadence on a
+    /// quiet server.
+    pub tick_interval: Duration,
+    /// Command channel bound (`--max-pending`): a full queue sheds new
+    /// commands with a structured [`error_code::SHED`] error instead of
+    /// queueing without limit. Clamped to ≥ 1.
+    pub max_pending_commands: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { tick_interval: Duration::from_millis(10), max_pending_commands: 256 }
+    }
+}
 
 /// An `"ok": false` response with a stable code and a readable message.
 fn error_json(code: &str, msg: impl std::fmt::Display) -> Json {
@@ -317,6 +383,14 @@ pub struct ServerStats {
     pub cow_clones: u64,
     /// Prefill KV bytes avoided by binding shared pages (mirror).
     pub shared_bytes_saved: u64,
+    /// Engine passes driven purely by the timer tick that still had
+    /// scheduler work — the quiet-server descent heartbeat (mirror).
+    pub ticks_idle: u64,
+    /// Incremental token frames emitted by the streaming path (mirror).
+    pub stream_frames: u64,
+    /// Commands refused because the bounded command queue was full
+    /// (mirror).
+    pub shed_events: u64,
 }
 
 impl ServerStats {
@@ -350,6 +424,9 @@ impl ServerStats {
             .set("shared_pages", self.shared_pages)
             .set("cow_clones", self.cow_clones)
             .set("shared_bytes_saved", self.shared_bytes_saved)
+            .set("ticks_idle", self.ticks_idle)
+            .set("stream_frames", self.stream_frames)
+            .set("shed_events", self.shed_events)
     }
 }
 
@@ -391,17 +468,161 @@ pub fn completion_from_json(j: &Json) -> Completion {
     }
 }
 
+/// Structured failure sent by the engine thread for non-generate
+/// commands, so every caller gets a machine-matchable code instead of
+/// hanging on a dead reply channel.
+#[derive(Debug, Clone)]
+pub struct ServerError {
+    /// Stable code (see [`error_code`]).
+    pub code: &'static str,
+    /// Human-readable message.
+    pub msg: String,
+}
+
+/// One event on a `generate` reply channel. Frames arrive in `index`
+/// order; their `text` fields concatenate to exactly the final
+/// completion's `text` (bit-identical to the old buffered reply).
+pub enum StreamEvent {
+    /// One incremental UTF-8-safe text frame.
+    Token {
+        /// Request id the frame belongs to.
+        id: u64,
+        /// Frame sequence number, starting at 0.
+        index: usize,
+        /// Stable decoded text delta (never splits a multi-byte
+        /// character across frames).
+        text: String,
+    },
+    /// Terminal event: the full completion record (its `text` is the
+    /// whole output, not a delta).
+    Done(Completion),
+    /// Liveness probe the engine uses to reap waiters whose client is
+    /// gone; never surfaced in the line protocol.
+    Heartbeat,
+}
+
 /// Command sent to the engine thread.
 pub enum Command {
-    /// Submit a generation request; the completion arrives on the sender.
-    Generate(GenerateParams, mpsc::Sender<Completion>),
+    /// Submit a generation request; token frames and the final
+    /// completion arrive on the sender as [`StreamEvent`]s.
+    Generate(GenerateParams, mpsc::Sender<StreamEvent>),
     /// Snapshot server statistics.
-    Stats(mpsc::Sender<ServerStats>),
+    Stats(mpsc::Sender<std::result::Result<ServerStats, ServerError>>),
+    /// Subscribe to server statistics: the engine pushes a snapshot
+    /// after every pass that did work, until the receiver hangs up.
+    SubscribeStats(mpsc::Sender<std::result::Result<ServerStats, ServerError>>),
     /// Park an idle multi-turn session to the host tier now (or refresh
     /// a parked one); replies with the parked bytes.
-    Park(String, mpsc::Sender<Result<usize>>),
+    Park(String, mpsc::Sender<std::result::Result<usize, ServerError>>),
     /// Discard a session's retained context (idle tier or parked blob).
-    Drop(String, mpsc::Sender<Result<()>>),
+    Drop(String, mpsc::Sender<std::result::Result<(), ServerError>>),
+}
+
+/// Why [`CommandSender::send`] refused a command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendRefusal {
+    /// The bounded command queue is full — load was shed (the shared
+    /// shed counter was bumped).
+    Shed,
+    /// The engine thread has shut down.
+    Stopped,
+}
+
+/// Cloneable handle submitting [`Command`]s over the bounded command
+/// channel. A full channel **sheds** instead of blocking or growing:
+/// [`CommandSender::send`] returns [`SendRefusal::Shed`] and bumps a
+/// shared counter the engine mirrors into the `shed_events` metric.
+#[derive(Clone)]
+pub struct CommandSender {
+    tx: mpsc::SyncSender<Command>,
+    shed: Arc<AtomicU64>,
+}
+
+impl CommandSender {
+    /// Non-blocking submit: `Err(Shed)` when the bounded queue is full,
+    /// `Err(Stopped)` when the engine thread is gone.
+    pub fn send(&self, cmd: Command) -> std::result::Result<(), SendRefusal> {
+        match self.tx.try_send(cmd) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(SendRefusal::Shed)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SendRefusal::Stopped),
+        }
+    }
+
+    /// Commands shed so far because the queue was full.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+/// Build the bounded command channel (`bound` clamped to ≥ 1) and the
+/// sender half the facade hands to connection threads.
+pub fn command_channel(bound: usize) -> (CommandSender, mpsc::Receiver<Command>) {
+    let (tx, rx) = mpsc::sync_channel(bound.max(1));
+    (CommandSender { tx, shed: Arc::new(AtomicU64::new(0)) }, rx)
+}
+
+/// What one gather pass pulled off the command channel.
+#[derive(Debug)]
+pub struct Gather<T> {
+    /// Commands drained this pass, in arrival order.
+    pub commands: Vec<T>,
+    /// The bounded idle wait elapsed with nothing arriving — a pure
+    /// timer tick.
+    pub timer_fired: bool,
+    /// Every sender is gone; the serve loop should wind down once the
+    /// scheduler drains. Distinct from `timer_fired`: the old loop
+    /// conflated a mid-gather disconnect with an elapsed window.
+    pub disconnected: bool,
+}
+
+/// One command-gather pass. When `idle`, block up to `tick_interval`
+/// for the first command — a timeout is the quiet-server timer tick —
+/// then hold `gather_window` so co-arriving commands from concurrent
+/// clients land in the same admission pass. Always finish with a
+/// non-blocking drain so a busy engine never sleeps. `Timeout` and
+/// `Disconnected` are kept distinct throughout.
+pub fn gather_commands<T>(
+    rx: &mpsc::Receiver<T>,
+    idle: bool,
+    tick_interval: Duration,
+    gather_window: Duration,
+) -> Gather<T> {
+    let mut g = Gather { commands: Vec::new(), timer_fired: false, disconnected: false };
+    if idle {
+        match rx.recv_timeout(tick_interval) {
+            Ok(c) => {
+                g.commands.push(c);
+                let deadline = Instant::now() + gather_window;
+                while let Some(left) = deadline.checked_duration_since(Instant::now()) {
+                    match rx.recv_timeout(left) {
+                        Ok(c) => g.commands.push(c),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            g.disconnected = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => g.timer_fired = true,
+            Err(mpsc::RecvTimeoutError::Disconnected) => g.disconnected = true,
+        }
+    }
+    loop {
+        match rx.try_recv() {
+            Ok(c) => g.commands.push(c),
+            Err(mpsc::TryRecvError::Empty) => break,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                g.disconnected = true;
+                break;
+            }
+        }
+    }
+    g
 }
 
 /// Spawn the engine thread: builds the engine *inside* the thread (PJRT
@@ -420,40 +641,113 @@ pub struct SpillSetup {
     pub failpoints: Failpoints,
 }
 
+/// Build the stats snapshot the engine replies with (and broadcasts to
+/// `subscribe_stats` observers): the engine's metric snapshot plus the
+/// scheduler's live occupancy, with the dashboard counters mirrored to
+/// the top level.
+fn build_stats(sched: &Scheduler, engine: &mut Engine) -> ServerStats {
+    engine.mirror_prefix_metrics();
+    let snapshot = engine.metrics.snapshot();
+    ServerStats {
+        queued: sched.queued(),
+        active: sched.active(),
+        idle_sessions: sched.idle_sessions(),
+        rejected: sched.rejected(),
+        active_kv_bytes: sched.active_kv_bytes(),
+        // Owned views summed per session + the shared pool charged once
+        // (never per lane-holder).
+        active_view_bytes: sched.owned_view_bytes() + engine.pooled_view_bytes(),
+        compaction_events: snapshot.compaction_events,
+        lane_moves: snapshot.lane_moves,
+        lane_move_bytes: snapshot.lane_move_bytes,
+        park_events: snapshot.park_events,
+        resume_events: snapshot.resume_events,
+        parked_bytes: sched.parked_bytes(),
+        parked_sessions: sched.parked_sessions(),
+        spilled_sessions: sched.spilled_sessions(),
+        spilled_bytes: sched.spilled_bytes(),
+        spill_events: snapshot.spill_events,
+        promote_events: snapshot.promote_events,
+        spill_shed_events: snapshot.spill_shed_events,
+        io_faults_injected: snapshot.io_faults_injected,
+        io_retries: snapshot.io_retries,
+        quarantined_sessions: snapshot.quarantined_sessions,
+        prefix_hits: snapshot.prefix_hits,
+        shared_pages: snapshot.shared_pages,
+        cow_clones: snapshot.cow_clones,
+        shared_bytes_saved: snapshot.shared_bytes_saved,
+        ticks_idle: snapshot.ticks_idle,
+        stream_frames: snapshot.stream_frames,
+        shed_events: snapshot.shed_events,
+        engine: snapshot,
+    }
+}
+
+/// Refuse one command with a structured `engine_load` error, so no
+/// caller — not just `generate` — hangs until its read timeout when the
+/// engine never came up.
+fn fail_command(cmd: Command, msg: &str) {
+    let err = || ServerError { code: error_code::ENGINE_LOAD, msg: msg.to_string() };
+    match cmd {
+        Command::Generate(_, reply) => {
+            let _ = reply.send(StreamEvent::Done(error_completion(0, msg)));
+        }
+        Command::Stats(reply) | Command::SubscribeStats(reply) => {
+            let _ = reply.send(Err(err()));
+        }
+        Command::Park(_, reply) => {
+            let _ = reply.send(Err(err()));
+        }
+        Command::Drop(_, reply) => {
+            let _ = reply.send(Err(err()));
+        }
+    }
+}
+
+fn session_err(e: anyhow::Error) -> ServerError {
+    ServerError { code: error_code::SESSION_OP_FAILED, msg: format!("{e:#}") }
+}
+
 /// `make_engine` runs on the engine thread; a load failure is returned
 /// through the join handle after every pending command errors out.
+/// Serving knobs take [`ServerConfig::default`] — use
+/// [`spawn_engine_thread_with_spill`] to set them.
 pub fn spawn_engine_thread_with<F>(
     make_engine: F,
     cfg: SchedulerConfig,
-) -> (mpsc::Sender<Command>, JoinHandle<Result<()>>)
+) -> (CommandSender, JoinHandle<Result<()>>)
 where
     F: FnOnce() -> Result<Engine> + Send + 'static,
 {
-    spawn_engine_thread_with_spill(make_engine, cfg, None)
+    spawn_engine_thread_with_spill(make_engine, cfg, None, ServerConfig::default())
 }
 
-/// [`spawn_engine_thread_with`] plus an optional disk-spill tier. A
-/// spill directory that cannot be opened degrades gracefully: the
-/// server logs the failure and serves with the device + host tiers
-/// only, rather than refusing to boot.
+/// [`spawn_engine_thread_with`] plus an optional disk-spill tier and
+/// explicit serving knobs. A spill directory that cannot be opened
+/// degrades gracefully: the server logs the failure and serves with the
+/// device + host tiers only, rather than refusing to boot.
 pub fn spawn_engine_thread_with_spill<F>(
     make_engine: F,
     cfg: SchedulerConfig,
     spill: Option<SpillSetup>,
-) -> (mpsc::Sender<Command>, JoinHandle<Result<()>>)
+    srv: ServerConfig,
+) -> (CommandSender, JoinHandle<Result<()>>)
 where
     F: FnOnce() -> Result<Engine> + Send + 'static,
 {
-    let (tx, rx) = mpsc::channel::<Command>();
+    let (tx, rx) = command_channel(srv.max_pending_commands);
+    let shed = tx.shed.clone();
     let handle = std::thread::spawn(move || -> Result<()> {
         let mut engine = match make_engine() {
             Ok(e) => e,
             Err(e) => {
-                // Fail every request that arrives until the channel closes.
+                // Refuse every command kind that arrives until the
+                // channel closes — previously only Generate was
+                // answered and Stats/Park/Drop callers hung until
+                // their read timeout.
+                let msg = format!("engine load: {e:#}");
                 while let Ok(cmd) = rx.recv() {
-                    if let Command::Generate(_, reply) = cmd {
-                        let _ = reply.send(error_completion(0, &format!("engine load: {e:#}")));
-                    }
+                    fail_command(cmd, &msg);
                 }
                 return Err(e);
             }
@@ -468,38 +762,30 @@ where
             }
         }
         let mut next_id: u64 = 0;
-        let mut waiters: std::collections::HashMap<u64, mpsc::Sender<Completion>> =
-            std::collections::HashMap::new();
-        // How long an idle engine waits for co-arriving commands after the
-        // first one lands, so concurrent clients land in one batched
-        // prefill pass and share the first fused decode batch instead of
-        // being admitted one prefill apart.
-        const BATCH_GATHER: std::time::Duration = std::time::Duration::from_millis(2);
+        let mut waiters: HashMap<u64, mpsc::Sender<StreamEvent>> = HashMap::new();
+        let mut subscribers: Vec<mpsc::Sender<std::result::Result<ServerStats, ServerError>>> =
+            Vec::new();
+        let mut loops_since_reap: u32 = 0;
+        // How long an idle engine waits for co-arriving commands after
+        // the first one lands, so concurrent clients land in one
+        // batched prefill pass and share the first fused decode batch
+        // instead of being admitted one prefill apart.
+        const BATCH_GATHER: Duration = Duration::from_millis(2);
+        // Waiter-reap cadence in engine passes: each probe sends one
+        // heartbeat per in-flight request, so probing every pass would
+        // double reply traffic for nothing.
+        const REAP_EVERY: u32 = 32;
         loop {
-            // Block when idle; gather briefly after the first arrival;
-            // drain opportunistically when busy. Every pending command is
-            // consumed before the batcher steps, so one tick admits them
-            // all together.
-            let mut incoming: Vec<Command> = Vec::new();
-            if sched.is_idle() {
-                match rx.recv() {
-                    Ok(c) => incoming.push(c),
-                    Err(_) => break, // all senders dropped
-                }
-                let deadline = std::time::Instant::now() + BATCH_GATHER;
-                while let Some(left) =
-                    deadline.checked_duration_since(std::time::Instant::now())
-                {
-                    match rx.recv_timeout(left) {
-                        Ok(c) => incoming.push(c),
-                        Err(_) => break, // window elapsed or disconnected
-                    }
-                }
+            let g = gather_commands(&rx, sched.is_idle(), srv.tick_interval, BATCH_GATHER);
+            if g.disconnected && g.commands.is_empty() && sched.is_idle() {
+                // All senders gone and nothing left to decode: exit.
+                // Tier descent past this point serves nobody — the
+                // process is shutting down.
+                break;
             }
-            while let Ok(c) = rx.try_recv() {
-                incoming.push(c);
-            }
-            for cmd in incoming {
+            engine.metrics.shed_events = shed.load(Ordering::Relaxed);
+            let had_commands = !g.commands.is_empty();
+            for cmd in g.commands {
                 match cmd {
                     Command::Generate(p, reply) => {
                         let id = next_id;
@@ -507,7 +793,10 @@ where
                         let opts = match p.session_options(engine.dims()) {
                             Ok(o) => o,
                             Err(e) => {
-                                let _ = reply.send(error_completion(id, &format!("{e:#}")));
+                                let _ = reply.send(StreamEvent::Done(error_completion(
+                                    id,
+                                    &format!("{e:#}"),
+                                )));
                                 continue;
                             }
                         };
@@ -523,56 +812,72 @@ where
                         if sched.submit(req) {
                             waiters.insert(id, reply);
                         } else {
-                            let _ = reply.send(error_completion(id, "queue full"));
+                            let _ = reply
+                                .send(StreamEvent::Done(error_completion(id, "queue full")));
                         }
                     }
                     Command::Stats(reply) => {
-                        engine.mirror_prefix_metrics();
-                        let snapshot = engine.metrics.snapshot();
-                        let _ = reply.send(ServerStats {
-                            queued: sched.queued(),
-                            active: sched.active(),
-                            idle_sessions: sched.idle_sessions(),
-                            rejected: sched.rejected(),
-                            active_kv_bytes: sched.active_kv_bytes(),
-                            // Owned views summed per session + the shared
-                            // pool charged once (never per lane-holder).
-                            active_view_bytes: sched.owned_view_bytes()
-                                + engine.pooled_view_bytes(),
-                            compaction_events: snapshot.compaction_events,
-                            lane_moves: snapshot.lane_moves,
-                            lane_move_bytes: snapshot.lane_move_bytes,
-                            park_events: snapshot.park_events,
-                            resume_events: snapshot.resume_events,
-                            parked_bytes: sched.parked_bytes(),
-                            parked_sessions: sched.parked_sessions(),
-                            spilled_sessions: sched.spilled_sessions(),
-                            spilled_bytes: sched.spilled_bytes(),
-                            spill_events: snapshot.spill_events,
-                            promote_events: snapshot.promote_events,
-                            spill_shed_events: snapshot.spill_shed_events,
-                            io_faults_injected: snapshot.io_faults_injected,
-                            io_retries: snapshot.io_retries,
-                            quarantined_sessions: snapshot.quarantined_sessions,
-                            prefix_hits: snapshot.prefix_hits,
-                            shared_pages: snapshot.shared_pages,
-                            cow_clones: snapshot.cow_clones,
-                            shared_bytes_saved: snapshot.shared_bytes_saved,
-                            engine: snapshot,
-                        });
+                        let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
+                    }
+                    Command::SubscribeStats(reply) => {
+                        // Seed the subscription with a snapshot so an
+                        // observer on a fully quiet server sees one
+                        // line immediately.
+                        let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
+                        subscribers.push(reply);
                     }
                     Command::Park(key, reply) => {
-                        let _ = reply.send(sched.park_session_now(&mut engine, &key));
+                        let _ = reply
+                            .send(sched.park_session_now(&mut engine, &key).map_err(session_err));
                     }
                     Command::Drop(key, reply) => {
-                        let _ = reply.send(sched.drop_session(&mut engine, &key));
+                        let _ =
+                            reply.send(sched.drop_session(&mut engine, &key).map_err(session_err));
                     }
                 }
             }
-            for done in sched.step(&mut engine) {
-                if let Some(reply) = waiters.remove(&done.id) {
-                    let _ = reply.send(done);
+            // Reap waiters whose client hung up before completion: a
+            // failed heartbeat means the reply channel is closed, so
+            // drop the entry and pull the request back out of the
+            // admission queue if it never started.
+            loops_since_reap += 1;
+            if loops_since_reap >= REAP_EVERY {
+                loops_since_reap = 0;
+                let dead: Vec<u64> = waiters
+                    .iter()
+                    .filter(|(_, reply)| reply.send(StreamEvent::Heartbeat).is_err())
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in dead {
+                    waiters.remove(&id);
+                    sched.cancel_queued(id);
                 }
+            }
+            let step_now = !sched.is_idle() || sched.has_tick_work();
+            if step_now {
+                if g.timer_fired && !had_commands {
+                    // This pass exists only because the timer fired —
+                    // the quiet-server descent the old loop starved.
+                    engine.metrics.ticks_idle += 1;
+                }
+                let done = sched.step_stream(&mut engine, &mut |ev| {
+                    if let Some(reply) = waiters.get(&ev.id) {
+                        let _ = reply.send(StreamEvent::Token {
+                            id: ev.id,
+                            index: ev.index,
+                            text: ev.text,
+                        });
+                    }
+                });
+                for c in done {
+                    if let Some(reply) = waiters.remove(&c.id) {
+                        let _ = reply.send(StreamEvent::Done(c));
+                    }
+                }
+            }
+            if !subscribers.is_empty() && (step_now || had_commands || g.timer_fired) {
+                let stats = build_stats(&sched, &mut engine);
+                subscribers.retain(|s| s.send(Ok(stats.clone())).is_ok());
             }
         }
         Ok(())
@@ -585,7 +890,7 @@ pub fn spawn_engine_thread(
     artifacts: impl Into<std::path::PathBuf>,
     engine_cfg: crate::engine::EngineConfig,
     cfg: SchedulerConfig,
-) -> (mpsc::Sender<Command>, JoinHandle<Result<()>>) {
+) -> (CommandSender, JoinHandle<Result<()>>) {
     let dir = artifacts.into();
     spawn_engine_thread_with(move || Engine::load(dir, engine_cfg), cfg)
 }
@@ -606,78 +911,139 @@ fn error_completion(id: u64, msg: &str) -> Completion {
     }
 }
 
-fn respond(line: &str, cmds: &mpsc::Sender<Command>) -> Json {
+/// Render a send refusal as the matching protocol error line.
+fn refusal_json(r: SendRefusal) -> Json {
+    match r {
+        SendRefusal::Shed => error_json(
+            error_code::SHED,
+            "server overloaded: command queue full; retry later",
+        ),
+        SendRefusal::Stopped => error_json(error_code::ENGINE_STOPPED, "engine stopped"),
+    }
+}
+
+/// Handle one request line, emitting zero or more response lines
+/// through `emit` (the facade stays free of business logic — it only
+/// routes frames). A `generate` with `"stream": true` emits each token
+/// frame as it arrives plus the final completion; without the flag only
+/// the completion line is emitted, exactly as before streaming existed.
+/// `subscribe_stats` emits stats lines until either side disconnects.
+/// Returns `Err` only for I/O failures on `emit`.
+fn respond(
+    line: &str,
+    cmds: &CommandSender,
+    emit: &mut dyn FnMut(Json) -> std::io::Result<()>,
+) -> std::io::Result<()> {
     let parsed = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return error_json(error_code::BAD_JSON, format!("bad json: {e}")),
+        Err(e) => return emit(error_json(error_code::BAD_JSON, format!("bad json: {e}"))),
     };
+    let stream_mode = parsed.get("stream").and_then(Json::as_bool).unwrap_or(false);
     match parsed.get("op").and_then(Json::as_str) {
         Some("generate") => match GenerateParams::from_json(&parsed) {
             Ok(p) => {
                 let (tx, rx) = mpsc::channel();
-                if cmds.send(Command::Generate(p, tx)).is_err() {
-                    return error_json(error_code::ENGINE_STOPPED, "engine stopped");
+                if let Err(r) = cmds.send(Command::Generate(p, tx)) {
+                    return emit(refusal_json(r));
                 }
-                match rx.recv() {
-                    Ok(c) => completion_to_json(&c),
-                    Err(_) => {
-                        error_json(error_code::ENGINE_DROPPED, "engine dropped request")
+                loop {
+                    match rx.recv() {
+                        Ok(StreamEvent::Token { id, index, text }) => {
+                            if stream_mode {
+                                emit(Json::obj()
+                                    .set("ok", "token")
+                                    .set("id", id)
+                                    .set("index", index)
+                                    .set("text", text.as_str()))?;
+                            }
+                        }
+                        Ok(StreamEvent::Heartbeat) => {}
+                        Ok(StreamEvent::Done(c)) => return emit(completion_to_json(&c)),
+                        Err(_) => {
+                            return emit(error_json(
+                                error_code::ENGINE_DROPPED,
+                                "engine dropped request",
+                            ))
+                        }
                     }
                 }
             }
-            Err(e) => error_json(error_code::BAD_REQUEST, format!("bad request: {e:#}")),
+            Err(e) => emit(error_json(error_code::BAD_REQUEST, format!("bad request: {e:#}"))),
         },
         Some("stats") => {
             let (tx, rx) = mpsc::channel();
-            if cmds.send(Command::Stats(tx)).is_err() {
-                return error_json(error_code::ENGINE_STOPPED, "engine stopped");
+            if let Err(r) = cmds.send(Command::Stats(tx)) {
+                return emit(refusal_json(r));
             }
             match rx.recv() {
-                Ok(s) => s.to_json(),
-                Err(_) => error_json(error_code::ENGINE_DROPPED, "engine dropped request"),
+                Ok(Ok(s)) => emit(s.to_json()),
+                Ok(Err(se)) => emit(error_json(se.code, se.msg)),
+                Err(_) => {
+                    emit(error_json(error_code::ENGINE_DROPPED, "engine dropped request"))
+                }
+            }
+        }
+        Some("subscribe_stats") => {
+            let (tx, rx) = mpsc::channel();
+            if let Err(r) = cmds.send(Command::SubscribeStats(tx)) {
+                return emit(refusal_json(r));
+            }
+            loop {
+                match rx.recv() {
+                    Ok(Ok(s)) => emit(s.to_json())?,
+                    Ok(Err(se)) => return emit(error_json(se.code, se.msg)),
+                    Err(_) => {
+                        return emit(error_json(
+                            error_code::ENGINE_DROPPED,
+                            "stats subscription ended",
+                        ))
+                    }
+                }
             }
         }
         Some("park") => {
             let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
-                return error_json(error_code::BAD_REQUEST, "park: missing 'session_id'");
+                return emit(error_json(error_code::BAD_REQUEST, "park: missing 'session_id'"));
             };
             let (tx, rx) = mpsc::channel();
-            if cmds.send(Command::Park(key.to_string(), tx)).is_err() {
-                return error_json(error_code::ENGINE_STOPPED, "engine stopped");
+            if let Err(r) = cmds.send(Command::Park(key.to_string(), tx)) {
+                return emit(refusal_json(r));
             }
             match rx.recv() {
-                Ok(Ok(bytes)) => Json::obj()
-                    .set("ok", "parked")
-                    .set("session_id", key)
-                    .set("parked_bytes", bytes),
-                Ok(Err(e)) => {
-                    error_json(error_code::SESSION_OP_FAILED, format!("park: {e:#}"))
+                Ok(Ok(bytes)) => emit(
+                    Json::obj()
+                        .set("ok", "parked")
+                        .set("session_id", key)
+                        .set("parked_bytes", bytes),
+                ),
+                Ok(Err(se)) => emit(error_json(se.code, format!("park: {}", se.msg))),
+                Err(_) => {
+                    emit(error_json(error_code::ENGINE_DROPPED, "engine dropped request"))
                 }
-                Err(_) => error_json(error_code::ENGINE_DROPPED, "engine dropped request"),
             }
         }
         Some("drop") => {
             let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
-                return error_json(error_code::BAD_REQUEST, "drop: missing 'session_id'");
+                return emit(error_json(error_code::BAD_REQUEST, "drop: missing 'session_id'"));
             };
             let (tx, rx) = mpsc::channel();
-            if cmds.send(Command::Drop(key.to_string(), tx)).is_err() {
-                return error_json(error_code::ENGINE_STOPPED, "engine stopped");
+            if let Err(r) = cmds.send(Command::Drop(key.to_string(), tx)) {
+                return emit(refusal_json(r));
             }
             match rx.recv() {
-                Ok(Ok(())) => Json::obj().set("ok", "dropped").set("session_id", key),
-                Ok(Err(e)) => {
-                    error_json(error_code::SESSION_OP_FAILED, format!("drop: {e:#}"))
+                Ok(Ok(())) => emit(Json::obj().set("ok", "dropped").set("session_id", key)),
+                Ok(Err(se)) => emit(error_json(se.code, format!("drop: {}", se.msg))),
+                Err(_) => {
+                    emit(error_json(error_code::ENGINE_DROPPED, "engine dropped request"))
                 }
-                Err(_) => error_json(error_code::ENGINE_DROPPED, "engine dropped request"),
             }
         }
-        Some(op) => error_json(error_code::UNKNOWN_OP, format!("unknown op '{op}'")),
-        None => error_json(error_code::MISSING_OP, "missing 'op'"),
+        Some(op) => emit(error_json(error_code::UNKNOWN_OP, format!("unknown op '{op}'"))),
+        None => emit(error_json(error_code::MISSING_OP, "missing 'op'")),
     }
 }
 
-fn handle_conn(stream: TcpStream, cmds: mpsc::Sender<Command>) -> Result<()> {
+fn handle_conn(stream: TcpStream, cmds: CommandSender) -> Result<()> {
     // Bound how long an idle client can pin this handler thread: a
     // connection with no traffic for CONN_READ_TIMEOUT gets one final
     // structured error line, then the socket closes.
@@ -708,17 +1074,19 @@ fn handle_conn(stream: TcpStream, cmds: mpsc::Sender<Command>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = respond(&line, &cmds);
-        let mut out = resp.dump();
-        out.push('\n');
-        writer.write_all(out.as_bytes())?;
+        let mut emit = |j: Json| -> std::io::Result<()> {
+            let mut out = j.dump();
+            out.push('\n');
+            writer.write_all(out.as_bytes())
+        };
+        respond(&line, &cmds, &mut emit)?;
     }
     Ok(())
 }
 
 /// Serve forever on `addr`. The engine must already be wrapped by
 /// [`spawn_engine_thread`].
-pub fn serve(addr: &str, cmds: mpsc::Sender<Command>) -> Result<()> {
+pub fn serve(addr: &str, cmds: CommandSender) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("wgkv: serving on {addr}");
     for stream in listener.incoming() {
@@ -732,6 +1100,20 @@ pub fn serve(addr: &str, cmds: mpsc::Sender<Command>) -> Result<()> {
         });
     }
     Ok(())
+}
+
+/// One item from [`Client::generate_stream`].
+#[derive(Debug, Clone)]
+pub enum StreamItem {
+    /// One incremental text frame.
+    Token {
+        /// Frame sequence number, starting at 0.
+        index: usize,
+        /// Stable decoded text delta.
+        text: String,
+    },
+    /// Terminal item: the full completion record.
+    Done(Completion),
 }
 
 /// Minimal blocking client for examples and integration tests.
@@ -748,10 +1130,15 @@ impl Client {
         Ok(Self { stream, reader })
     }
 
-    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+    fn send_line(&mut self, req: Json) -> Result<()> {
         let mut line = req.dump();
         line.push('\n');
         self.stream.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        self.send_line(req)?;
         let mut resp = String::new();
         self.reader.read_line(&mut resp)?;
         Json::parse(&resp)
@@ -783,6 +1170,32 @@ impl Client {
         }
     }
 
+    /// Streaming `generate`: returns an iterator over token frames
+    /// ending with the final completion. The frames' text concatenates
+    /// to exactly the completion's `text`.
+    pub fn generate_stream(&mut self, params: GenerateParams) -> Result<TokenStream<'_>> {
+        self.send_line(params.to_json().set("stream", true))?;
+        Ok(TokenStream { client: self, done: false })
+    }
+
+    /// Convenience wrapper over [`Client::generate_stream`]: collects
+    /// the token frames and the final completion.
+    pub fn generate_streamed(
+        &mut self,
+        params: GenerateParams,
+    ) -> Result<(Vec<String>, Completion)> {
+        let mut frames = Vec::new();
+        let mut done = None;
+        for item in self.generate_stream(params)? {
+            match item? {
+                StreamItem::Token { text, .. } => frames.push(text),
+                StreamItem::Done(c) => done = Some(c),
+            }
+        }
+        done.map(|c| (frames, c))
+            .ok_or_else(|| anyhow!("stream ended without a completion"))
+    }
+
     /// Blocking `stats` round-trip.
     pub fn stats(&mut self) -> Result<ServerStats> {
         let j = self.roundtrip(Json::obj().set("op", "stats"))?;
@@ -790,6 +1203,14 @@ impl Client {
             bail!("unexpected stats response: {j}");
         }
         Self::stats_from_json(&j)
+    }
+
+    /// Subscribe to the server's stats broadcast. Dedicates this
+    /// connection: the server pushes a snapshot after every engine pass
+    /// that did work, so observers iterate instead of polling.
+    pub fn stats_stream(&mut self) -> Result<StatsStream<'_>> {
+        self.send_line(Json::obj().set("op", "subscribe_stats"))?;
+        Ok(StatsStream { client: self })
     }
 
     /// Parse a `stats` response object (the inverse of
@@ -823,6 +1244,9 @@ impl Client {
             shared_pages: f("shared_pages") as u64,
             cow_clones: f("cow_clones") as u64,
             shared_bytes_saved: f("shared_bytes_saved") as u64,
+            ticks_idle: f("ticks_idle") as u64,
+            stream_frames: f("stream_frames") as u64,
+            shed_events: f("shed_events") as u64,
         })
     }
 
@@ -845,6 +1269,85 @@ impl Client {
             bail!("drop failed: {}", Self::server_error(&j));
         }
         Ok(())
+    }
+}
+
+/// Iterator over one streaming `generate`'s response lines: token
+/// frames, then the final completion (after which it yields `None`).
+pub struct TokenStream<'a> {
+    client: &'a mut Client,
+    done: bool,
+}
+
+impl Iterator for TokenStream<'_> {
+    type Item = Result<StreamItem>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let mut resp = String::new();
+        match self.client.reader.read_line(&mut resp) {
+            Ok(0) => {
+                self.done = true;
+                return Some(Err(anyhow!("connection closed mid-stream")));
+            }
+            Ok(_) => {}
+            Err(e) => {
+                self.done = true;
+                return Some(Err(e.into()));
+            }
+        }
+        let j = match Json::parse(&resp) {
+            Ok(j) => j,
+            Err(e) => {
+                self.done = true;
+                return Some(Err(e));
+            }
+        };
+        if j.get("ok").and_then(Json::as_str) == Some("token") {
+            let index = j.get("index").and_then(Json::as_usize).unwrap_or(0);
+            let text = j.get("text").and_then(Json::as_str).unwrap_or("").to_string();
+            return Some(Ok(StreamItem::Token { index, text }));
+        }
+        self.done = true;
+        match j.get("ok") {
+            Some(Json::Bool(true)) => {
+                let c = completion_from_json(&j);
+                if let Some(e) = &c.error {
+                    return Some(Err(anyhow!("server error: {e}")));
+                }
+                Some(Ok(StreamItem::Done(c)))
+            }
+            _ => Some(Err(anyhow!("server error: {}", Client::server_error(&j)))),
+        }
+    }
+}
+
+/// Iterator over a `subscribe_stats` broadcast (one snapshot per engine
+/// pass that did work). Ends when the server closes the connection.
+pub struct StatsStream<'a> {
+    client: &'a mut Client,
+}
+
+impl Iterator for StatsStream<'_> {
+    type Item = Result<ServerStats>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let mut resp = String::new();
+        match self.client.reader.read_line(&mut resp) {
+            Ok(0) => return None,
+            Ok(_) => {}
+            Err(e) => return Some(Err(e.into())),
+        }
+        let j = match Json::parse(&resp) {
+            Ok(j) => j,
+            Err(e) => return Some(Err(e)),
+        };
+        if j.get("ok").and_then(Json::as_str) != Some("stats") {
+            return Some(Err(anyhow!("server error: {}", Client::server_error(&j))));
+        }
+        Some(Client::stats_from_json(&j))
     }
 }
 
@@ -872,6 +1375,17 @@ mod tests {
             pad: 258,
             gqa_group: 2,
         }
+    }
+
+    /// Run [`respond`] collecting every emitted line.
+    fn respond_collect(line: &str, cmds: &CommandSender) -> Vec<Json> {
+        let mut out = Vec::new();
+        respond(line, cmds, &mut |j| {
+            out.push(j);
+            Ok(())
+        })
+        .unwrap();
+        out
     }
 
     #[test]
@@ -945,18 +1459,18 @@ mod tests {
 
     #[test]
     fn respond_rejects_bad_input() {
-        let (tx, _rx) = mpsc::channel();
-        let j = respond("not json", &tx);
-        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
-        let j = respond(r#"{"op":"unknown"}"#, &tx);
-        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
-        let j = respond(r#"{"no_op": 1}"#, &tx);
-        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        let (cmds, _rx) = command_channel(8);
+        let not_ok = |line: &str| {
+            let out = respond_collect(line, &cmds);
+            assert_eq!(out.len(), 1, "{line}");
+            assert_eq!(out[0].get("ok").and_then(Json::as_bool), Some(false), "{line}");
+        };
+        not_ok("not json");
+        not_ok(r#"{"op":"unknown"}"#);
+        not_ok(r#"{"no_op": 1}"#);
         // Session ops require a session_id before touching the engine.
-        let j = respond(r#"{"op":"park"}"#, &tx);
-        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
-        let j = respond(r#"{"op":"drop"}"#, &tx);
-        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        not_ok(r#"{"op":"park"}"#);
+        not_ok(r#"{"op":"drop"}"#);
     }
 
     #[test]
@@ -976,7 +1490,9 @@ mod tests {
 
     /// Satellite for the open ROADMAP item: the compaction and parking
     /// counters must survive the server JSON boundary — both at the
-    /// dashboard top level and inside the nested engine snapshot.
+    /// dashboard top level and inside the nested engine snapshot. The
+    /// serving-layer counters (ticks/streaming/shed) ride the same
+    /// boundary.
     #[test]
     fn server_stats_json_roundtrips_compaction_and_park_counters() {
         let mut engine = MetricsSnapshot::default();
@@ -990,6 +1506,9 @@ mod tests {
         engine.shared_pages = 9;
         engine.cow_clones = 2;
         engine.shared_bytes_saved = 8192;
+        engine.ticks_idle = 11;
+        engine.stream_frames = 42;
+        engine.shed_events = 3;
         let s = ServerStats {
             engine,
             queued: 5,
@@ -1017,6 +1536,9 @@ mod tests {
             shared_pages: 9,
             cow_clones: 2,
             shared_bytes_saved: 8192,
+            ticks_idle: 11,
+            stream_frames: 42,
+            shed_events: 3,
         };
         let dumped = s.to_json().dump();
         let back = Client::stats_from_json(&Json::parse(&dumped).unwrap()).unwrap();
@@ -1043,17 +1565,21 @@ mod tests {
         assert_eq!(back.shared_pages, 9);
         assert_eq!(back.cow_clones, 2);
         assert_eq!(back.shared_bytes_saved, 8192);
+        assert_eq!(back.ticks_idle, 11);
+        assert_eq!(back.stream_frames, 42);
+        assert_eq!(back.shed_events, 3);
     }
 
     /// Every protocol error carries a stable machine-matchable code next
     /// to the readable message, and the client surfaces it.
     #[test]
     fn error_responses_carry_structured_codes() {
-        let (tx, _rx) = mpsc::channel();
+        let (cmds, _rx) = command_channel(8);
         let code_of = |line: &str| {
-            let j = respond(line, &tx);
-            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
-            j.get("code").and_then(Json::as_str).unwrap_or("").to_string()
+            let out = respond_collect(line, &cmds);
+            assert_eq!(out.len(), 1, "{line}");
+            assert_eq!(out[0].get("ok").and_then(Json::as_bool), Some(false), "{line}");
+            out[0].get("code").and_then(Json::as_str).unwrap_or("").to_string()
         };
         assert_eq!(code_of("not json"), error_code::BAD_JSON);
         assert_eq!(code_of(r#"{"op":"unknown"}"#), error_code::UNKNOWN_OP);
@@ -1062,15 +1588,100 @@ mod tests {
         assert_eq!(code_of(r#"{"op":"drop"}"#), error_code::BAD_REQUEST);
         assert_eq!(code_of(r#"{"op":"generate"}"#), error_code::BAD_REQUEST);
         // A closed engine channel is ENGINE_STOPPED, not "unknown".
-        let (dead_tx, dead_rx) = mpsc::channel::<Command>();
+        let (dead, dead_rx) = command_channel(8);
         drop(dead_rx);
-        let j = respond(r#"{"op":"stats"}"#, &dead_tx);
+        let out = respond_collect(r#"{"op":"stats"}"#, &dead);
         assert_eq!(
-            j.get("code").and_then(Json::as_str),
+            out[0].get("code").and_then(Json::as_str),
             Some(error_code::ENGINE_STOPPED)
         );
         // The client renders the code, never a blanket "unknown".
-        let rendered = Client::server_error(&j);
+        let rendered = Client::server_error(&out[0]);
         assert!(rendered.contains(error_code::ENGINE_STOPPED), "{rendered}");
+    }
+
+    /// A full command queue sheds with the structured `shed` code (and
+    /// counts the refusal) instead of queueing without bound.
+    #[test]
+    fn full_command_queue_sheds_with_structured_code() {
+        let (cmds, _rx) = command_channel(1);
+        // Fill the single slot directly; the receiver stays alive so
+        // the failure below is Full, not Disconnected.
+        let (tx, _keep) = mpsc::channel();
+        cmds.send(Command::Stats(tx)).unwrap();
+        let out = respond_collect(r#"{"op":"stats"}"#, &cmds);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(out[0].get("code").and_then(Json::as_str), Some(error_code::SHED));
+        assert_eq!(cmds.shed_count(), 1);
+        // Generate sheds through the same gate.
+        let out = respond_collect(r#"{"op":"generate","prompt":"x"}"#, &cmds);
+        assert_eq!(out[0].get("code").and_then(Json::as_str), Some(error_code::SHED));
+        assert_eq!(cmds.shed_count(), 2);
+    }
+
+    /// An engine that fails to load refuses *every* command kind with a
+    /// structured error — previously only `Generate` was answered and
+    /// `Stats`/`Park`/`Drop` callers hung until their read timeout.
+    #[test]
+    fn engine_load_failure_fails_every_command_kind() {
+        let (cmds, handle) =
+            spawn_engine_thread_with(|| Err(anyhow!("boom")), SchedulerConfig::default());
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::Generate(GenerateParams::prompt("x"), tx)).unwrap();
+        match rx.recv().unwrap() {
+            StreamEvent::Done(c) => {
+                assert!(c.error.unwrap().contains("engine load"));
+            }
+            _ => panic!("expected a Done event"),
+        }
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::Stats(tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::SubscribeStats(tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::Park("s".into(), tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::Drop("s".into(), tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        drop(cmds);
+        assert!(handle.join().unwrap().is_err());
+    }
+
+    /// The gather pass keeps `Timeout` and `Disconnected` distinct —
+    /// the old loop's `Err(_) => break` treated a mid-gather disconnect
+    /// as an elapsed window and span forever on a dead channel.
+    #[test]
+    fn gather_separates_timeout_from_disconnect() {
+        // Idle wait elapses with no traffic: a pure timer tick.
+        let (tx, rx) = mpsc::channel::<u32>();
+        let g =
+            gather_commands(&rx, true, Duration::from_millis(1), Duration::from_millis(1));
+        assert!(g.timer_fired && !g.disconnected && g.commands.is_empty());
+        drop(tx);
+        // Disconnect while idle is terminal, not a timer tick.
+        let g =
+            gather_commands(&rx, true, Duration::from_millis(1), Duration::from_millis(1));
+        assert!(g.disconnected && !g.timer_fired);
+        // Mid-gather disconnect: the queued command still arrives AND
+        // the hang-up is reported.
+        let (tx, rx) = mpsc::channel::<u32>();
+        tx.send(7).unwrap();
+        drop(tx);
+        let g =
+            gather_commands(&rx, true, Duration::from_millis(50), Duration::from_millis(50));
+        assert_eq!(g.commands, vec![7]);
+        assert!(g.disconnected);
+        // Busy mode never blocks: drain what's there and return.
+        let (tx, rx) = mpsc::channel::<u32>();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let g = gather_commands(&rx, false, Duration::from_secs(60), Duration::from_secs(60));
+        assert_eq!(g.commands, vec![1, 2]);
+        assert!(!g.timer_fired && !g.disconnected);
+        drop(tx);
     }
 }

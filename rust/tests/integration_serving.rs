@@ -8,7 +8,7 @@ use wgkv::admission::PolicyKind;
 use wgkv::engine::{Engine, EngineConfig, SessionOptions};
 use wgkv::model::SamplerKind;
 use wgkv::scheduler::{Request, Scheduler, SchedulerConfig};
-use wgkv::server::{self, Client, Command, GenerateParams};
+use wgkv::server::{self, Client, Command, CommandSender, GenerateParams, ServerConfig, StreamEvent};
 use wgkv::util::Rng;
 use wgkv::workload;
 
@@ -22,11 +22,31 @@ fn artifacts_dir() -> Option<String> {
     }
 }
 
-fn boot(dir: &str, max_active: usize) -> (mpsc::Sender<Command>, String) {
-    let (cmds, _h) = server::spawn_engine_thread(
-        dir.to_string(),
-        EngineConfig::default(),
-        SchedulerConfig { max_active, ..SchedulerConfig::default() },
+fn boot(dir: &str, max_active: usize) -> (CommandSender, String) {
+    // Idle-age parking effectively off: these tests exercise explicit
+    // ops and the request path, so the timer tick must not move
+    // sessions between tiers behind their back (the quiet-server
+    // regression test covers timer-driven descent with its own config).
+    boot_with(
+        dir,
+        SchedulerConfig { max_active, park_idle_ticks: 10_000, ..SchedulerConfig::default() },
+        None,
+        ServerConfig::default(),
+    )
+}
+
+fn boot_with(
+    dir: &str,
+    cfg: SchedulerConfig,
+    spill: Option<server::SpillSetup>,
+    srv: ServerConfig,
+) -> (CommandSender, String) {
+    let dir = dir.to_string();
+    let (cmds, _h) = server::spawn_engine_thread_with_spill(
+        move || Engine::load(dir, EngineConfig::default()),
+        cfg,
+        spill,
+        srv,
     );
     // Ephemeral port: bind on 0, read the actual addr back.
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
@@ -691,8 +711,137 @@ fn scheduler_respects_kv_budget_queueing() {
         replies.push(rx);
     }
     for rx in replies {
-        let c = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        // The reply channel now carries token frames (and heartbeat
+        // probes) before the terminal completion.
+        let c = loop {
+            match rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap() {
+                StreamEvent::Done(c) => break c,
+                StreamEvent::Token { .. } | StreamEvent::Heartbeat => {}
+            }
+        };
         assert!(c.error.is_none(), "error: {:?}", c.error);
         assert!(c.n_generated > 0);
     }
+}
+
+/// The PR 8 tentpole regression: with **zero** inbound commands after a
+/// multi-turn session's last turn, the timer tick alone must age it
+/// idle → park → disk. The pre-fix engine loop blocked on `recv()` when
+/// idle, so this descent never advanced on a quiet server.
+#[test]
+fn quiet_server_descends_the_tiers_from_the_timer_alone() {
+    let Some(dir) = artifacts_dir() else { return };
+    let spill_dir = std::env::temp_dir().join(format!("wgkv-quiet-{}", std::process::id()));
+    let tick = std::time::Duration::from_millis(5);
+    let (_cmds, addr) = boot_with(
+        &dir,
+        SchedulerConfig {
+            max_active: 2,
+            park_byte_budget: 64 << 20,
+            park_idle_ticks: 2,
+            spill_byte_budget: 1 << 30,
+            spill_after_ticks: 2,
+            ..SchedulerConfig::default()
+        },
+        Some(server::SpillSetup {
+            dir: spill_dir.clone(),
+            failpoints: Default::default(),
+        }),
+        ServerConfig { tick_interval: tick, max_pending_commands: 64 },
+    );
+    let mut client = Client::connect(&addr).expect("connect");
+    let mut rng = Rng::new(107);
+    let c = client
+        .generate(GenerateParams {
+            prompt: workload::gen_kv(&mut rng, 5, 4).prompt,
+            max_new: 4,
+            session_id: Some("quiet".into()),
+            ..GenerateParams::default()
+        })
+        .expect("turn 1");
+    assert!(c.error.is_none());
+
+    // Go completely quiet. The descent needs park_idle_ticks + the
+    // spill handoff + spill_after_ticks + async-write poll()s ≈ a
+    // handful of ticks; sleep two orders of magnitude past that so a
+    // loaded machine cannot flake the assertion.
+    std::thread::sleep(tick * 100);
+
+    // One stats call to observe. This single command is itself only one
+    // scheduler tick — far short of park_idle_ticks + spill_after_ticks
+    // — so everything asserted below must already have happened on
+    // timer ticks while no command was in flight.
+    let stats = client.stats().expect("stats");
+    assert!(
+        stats.park_events >= 1,
+        "quiet server never parked the idle session (park_events 0)"
+    );
+    assert!(
+        stats.spill_events >= 1,
+        "quiet server never demoted the parked session to disk (spill_events 0)"
+    );
+    assert_eq!(stats.spilled_sessions, 1, "the session must end disk-resident");
+    assert!(stats.ticks_idle >= 1, "timer-driven passes must be counted");
+
+    // The session is still resumable from disk: turn 2 promotes it.
+    let c2 = client
+        .generate(GenerateParams {
+            prompt: "\nq: again\na: ".into(),
+            max_new: 4,
+            session_id: Some("quiet".into()),
+            ..GenerateParams::default()
+        })
+        .expect("turn 2 from disk");
+    assert!(c2.error.is_none());
+    let stats = client.stats().expect("stats");
+    assert!(stats.promote_events >= 1);
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}
+
+/// The PR 8 streaming acceptance check: for the same greedy request,
+/// the streamed token frames concatenate **bit-identically** to the
+/// buffered completion, frame indices are gapless, and the final
+/// completion text matches a buffered control round-trip.
+#[test]
+fn streamed_frames_concatenate_to_the_buffered_completion() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_cmds, addr) = boot(&dir, 4);
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let mut rng = Rng::new(109);
+    let params = GenerateParams {
+        prompt: workload::gen_kv(&mut rng, 5, 4).prompt,
+        max_new: 8,
+        ..GenerateParams::default()
+    };
+
+    // Buffered control first, then the identical request streamed.
+    let buffered = client.generate(params.clone()).expect("buffered generate");
+    assert!(buffered.error.is_none());
+    let mut frames = Vec::new();
+    let mut done = None;
+    for item in client.generate_stream(params).expect("start stream") {
+        match item.expect("stream item") {
+            server::StreamItem::Token { index, text } => {
+                assert_eq!(index, frames.len(), "frame indices must be gapless");
+                assert!(!text.is_empty(), "no empty frames");
+                frames.push(text);
+            }
+            server::StreamItem::Done(c) => done = Some(c),
+        }
+    }
+    let streamed = done.expect("stream must end with a completion");
+    assert!(streamed.error.is_none());
+    assert!(!frames.is_empty(), "a generating request must stream frames");
+    assert_eq!(
+        frames.concat(),
+        streamed.text,
+        "frames must concatenate to the streamed completion"
+    );
+    assert_eq!(
+        streamed.text, buffered.text,
+        "streamed and buffered outputs must be token-identical"
+    );
+    let stats = client.stats().expect("stats");
+    assert!(stats.stream_frames >= frames.len() as u64);
 }

@@ -1,0 +1,139 @@
+//! Property-based tests for the per-token streaming substrate
+//! (`stable_stream_prefix` + `stream_delta`/`stream_flush`, Design 8)
+//! and the serve loop's command-gather pass.
+//!
+//! Invariant families, swept over randomized token streams that mix
+//! ASCII, multi-byte UTF-8 sequences emitted one byte per token (so
+//! they split across decode steps), special ids (BOS/EOS/PAD, dropped
+//! by decode), and genuinely invalid UTF-8 bytes:
+//!
+//! 1. **Frame identity** — replaying the engine's per-step emission
+//!    (delta at every token, flush at retire) produces frames whose
+//!    concatenation is bit-identical to decoding the whole stream at
+//!    once; every frame is non-empty and every cut lands on a char
+//!    boundary.
+//! 2. **Stable-prefix monotonicity** — the emitted prefix never changes
+//!    once sent: each step's stable prefix extends the previous one.
+//! 3. **Gather soundness** — `gather_commands` never drops or reorders
+//!    commands, reports disconnection iff every sender is gone, and
+//!    never claims a timer tick when commands were queued.
+
+use std::time::Duration;
+
+use wgkv::model::{stable_stream_prefix, ByteTokenizer};
+use wgkv::prop_assert;
+use wgkv::scheduler::{stream_delta, stream_flush};
+use wgkv::server::gather_commands;
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+/// Random token stream: ASCII, specials, invalid bytes, and multi-byte
+/// characters split one byte per token.
+fn tokens(rng: &mut Rng) -> Vec<i32> {
+    let n = rng.usize(0, 40);
+    let mut out = Vec::new();
+    while out.len() < n {
+        match rng.usize(0, 9) {
+            0 => out.push(*rng.choose(&[256, 257, 258])),
+            1 => out.push(*rng.choose(&[0xFF, 0xFE, 0x80, 0xC0])),
+            2..=4 => {
+                let c = *rng.choose(&['é', '€', '中', '🙂']);
+                let mut buf = [0u8; 4];
+                for b in c.encode_utf8(&mut buf).bytes() {
+                    out.push(b as i32);
+                }
+            }
+            _ => out.push(rng.usize(0x20, 0x7E) as i32),
+        }
+    }
+    out
+}
+
+#[test]
+fn stream_frames_concatenate_to_buffered_decode() {
+    forall(0x57EA, |rng| {
+        let tk = ByteTokenizer::new(256, 257, 258);
+        let toks = tokens(rng);
+        let mut emitted = 0usize;
+        let mut frames: Vec<String> = Vec::new();
+        let mut prev_stable = String::new();
+        // Replay the scheduler's emission schedule: one delta attempt
+        // after every generated token, one flush at retire.
+        for i in 1..=toks.len() {
+            let full = tk.decode(&toks[..i]);
+            if let Some((stable, text)) = stream_delta(&full, emitted) {
+                prop_assert!(stable > emitted, "a delta must advance the cursor");
+                prop_assert!(
+                    full.is_char_boundary(stable),
+                    "stable cut must land on a char boundary in {full:?}"
+                );
+                prop_assert!(!text.is_empty(), "no empty frames");
+                frames.push(text);
+                emitted = stable;
+            }
+            let stable_now = full[..stable_stream_prefix(&full)].to_string();
+            prop_assert!(
+                stable_now.starts_with(&prev_stable),
+                "emitted text changed after sending: {prev_stable:?} then {stable_now:?} \
+                 (tokens {toks:?})"
+            );
+            prev_stable = stable_now;
+        }
+        let full = tk.decode(&toks);
+        if let Some(tail) = stream_flush(&full, emitted) {
+            prop_assert!(!tail.is_empty(), "no empty flush frame");
+            frames.push(tail);
+        }
+        let concat: String = frames.concat();
+        prop_assert!(
+            concat == full,
+            "concat(frames) {concat:?} != buffered decode {full:?} (tokens {toks:?})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn gather_never_drops_or_reorders_and_reports_disconnect() {
+    forall(0x6A77, |rng| {
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        let n = rng.usize(0, 20) as u32;
+        for i in 0..n {
+            tx.send(i).unwrap();
+        }
+        let mut tx = Some(tx);
+        let dropped = rng.bool(0.5);
+        if dropped {
+            tx = None;
+        }
+        let idle = rng.bool(0.5);
+        let g = gather_commands(
+            &rx,
+            idle,
+            Duration::from_millis(1),
+            Duration::from_millis(1),
+        );
+        let expect: Vec<u32> = (0..n).collect();
+        prop_assert!(
+            g.commands == expect,
+            "dropped or reordered: got {:?}, want {expect:?} (idle {idle})",
+            g.commands
+        );
+        prop_assert!(
+            g.disconnected == dropped,
+            "disconnect misreported: got {} with senders {} (idle {idle})",
+            g.disconnected,
+            if dropped { "gone" } else { "alive" }
+        );
+        prop_assert!(
+            !(g.timer_fired && n > 0),
+            "a pass with queued commands is not a timer tick"
+        );
+        prop_assert!(
+            !(g.timer_fired && g.disconnected),
+            "timeout and disconnect are mutually exclusive"
+        );
+        drop(tx);
+        Ok(())
+    });
+}
