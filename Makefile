@@ -30,7 +30,7 @@ test-fast:
 		--test prop_kvcache --test prop_policies \
 		--test prop_batching --test prop_prefill --test prop_pool \
 		--test prop_park --test prop_spill --test prop_prefix \
-		--test prop_stream
+		--test prop_stream --test prop_router
 
 # Fault drill: the whole fast tier re-run with the spill-I/O failpoint
 # matrix armed through the same env interface production honors
@@ -45,7 +45,7 @@ test-fault:
 		--test prop_kvcache --test prop_policies \
 		--test prop_batching --test prop_prefill --test prop_pool \
 		--test prop_park --test prop_spill --test prop_prefix \
-		--test prop_stream
+		--test prop_stream --test prop_router
 
 # Coordinator perf snapshot: prints the hot-path rows and writes
 # rust/BENCH_coordinator.json — machine-readable results plus the
@@ -56,6 +56,13 @@ test-fault:
 # counters (timer ticks / stream frames / sheds), tracked across PRs. The greps
 # keep the report's schema honest: a refactor that silently drops a
 # tracked counter fails the bench target, not a later PR's comparison.
+#
+# The same bench binary also writes rust/BENCH_scenarios.json — the
+# PR 9 chat-storm scenario comparing --replicas 1 vs 2 under the same
+# total budget. The bench itself hard-asserts N=2 sustains strictly
+# more concurrent sessions than N=1 with >= 1 cross-replica migration
+# and zero lost requests (chat_storm_ok); the greps below pin the
+# routed/migration/cancel/resume-latency counter schema.
 bench:
 	cd $(RUST_DIR) && cargo bench --bench coordinator_hotpath
 	@grep -q '"prefill_batch_steps"' $(RUST_DIR)/BENCH_coordinator.json \
@@ -102,6 +109,20 @@ bench:
 		|| { echo "BENCH_coordinator.json: missing stream_frames"; exit 1; }
 	@grep -q '"shed_events"' $(RUST_DIR)/BENCH_coordinator.json \
 		|| { echo "BENCH_coordinator.json: missing shed_events"; exit 1; }
+	@grep -q '"routed_requests"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing routed_requests"; exit 1; }
+	@grep -q '"migrations"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing migrations"; exit 1; }
+	@grep -q '"cancel_events"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing cancel_events"; exit 1; }
+	@grep -q '"resume_p99_us"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing resume_p99_us"; exit 1; }
+	@grep -q '"replica0_peak_active"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing replica0_peak_active"; exit 1; }
+	@grep -q '"replica1_peak_active"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing replica1_peak_active"; exit 1; }
+	@grep -q '"chat_storm_ok"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing chat_storm_ok"; exit 1; }
 
 # AOT-lower the JAX model to HLO-text artifacts for the PJRT runtime.
 artifacts:

@@ -1081,6 +1081,270 @@ fn main() {
         }));
     }
 
+    // --- multi-replica chat storm (PR 9): the scenario suite, emitted as
+    // its own BENCH_scenarios.json. An engine-free simulation drives the
+    // *real* sharding primitives — `router::pick_replica` placement,
+    // per-session affinity pinning, `router::plan_migration` pressure
+    // detection, and token-identical `SessionSnapshot` blob migration —
+    // over a deterministic multi-turn chat storm. The structural claim
+    // under test: the engine thread is a serial resource (`max_active`
+    // lanes per scheduler), so two replicas with the *same total byte
+    // budget* (each slice halved) sustain strictly more concurrent
+    // sessions than one, while the rebalancer keeps park pressure under
+    // each replica's slice by live-migrating the coldest parked session
+    // (>=1 migration, zero lost requests). Per-resume promote latency
+    // (blob decode on the resume path) feeds resume_p99_us.
+    {
+        use std::collections::{HashMap, VecDeque};
+
+        use wgkv::engine::SessionSnapshot;
+        use wgkv::metrics::Histogram;
+        use wgkv::router::{pick_replica, plan_migration};
+
+        let mut scen = BenchReport::new("scenarios");
+        let mut rng = Rng::new(13);
+        let (k, v, g) = decoded(&mut rng, d);
+        // Real session blobs through the real codec: a long-context chat
+        // (heavily admitted) and a short one. Sizes differ, so balanced
+        // *lane* placement still skews *parked bytes* — exactly the
+        // pressure the rebalancer exists for.
+        let mk_blob = |n_tokens: usize| {
+            let mut c = SequenceKvCache::new(d, 256).unwrap();
+            for pos in 0..n_tokens as i64 {
+                c.insert_decoded(&k, &v, &g, pos, |_, _, _| true).unwrap();
+            }
+            SessionSnapshot::from_cache(c.snapshot().unwrap()).to_bytes()
+        };
+        let big = mk_blob(192);
+        let small = mk_blob(16);
+
+        const LANES_PER_REPLICA: usize = 4; // scheduler max_active per engine
+        const SESSIONS: usize = 24;
+        const TURNS: usize = 3;
+        const TURN_TICKS: usize = 4; // decode ticks per turn
+        const GAP_TICKS: usize = 6; // parked between turns
+        const MAX_TICKS: usize = 400;
+
+        #[derive(Clone, Copy)]
+        enum St {
+            /// Between turns (parked iff its blob is held) or pre-arrival.
+            Waiting { due: usize },
+            Queued,
+            Active { left: usize },
+            Done,
+            Cancelled,
+        }
+
+        struct Outcome {
+            peak_concurrent: usize,
+            peak_per_replica: Vec<usize>,
+            routed: u64,
+            migrations: u64,
+            cancels: u64,
+            lost: u64,
+            completions: u64,
+            resume: Histogram,
+        }
+
+        let run_storm = |n_replicas: usize| -> Outcome {
+            // Same TOTAL park budget either way; each replica gets a slice.
+            let total_park = 8 * big.len();
+            let slice = total_park / n_replicas;
+            let blob_of = |s: usize| if s % 2 == 0 { &big } else { &small };
+            let mut st = vec![St::Waiting { due: 0 }; SESSIONS];
+            // Staggered storm: two sessions (one big, one small) per tick.
+            for (s, slot) in st.iter_mut().enumerate() {
+                *slot = St::Waiting { due: s / 2 };
+            }
+            let mut turns_done = vec![0usize; SESSIONS];
+            let mut affinity: HashMap<usize, usize> = HashMap::new();
+            let mut parked_blob: Vec<Option<Vec<u8>>> = vec![None; SESSIONS];
+            let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_replicas];
+            let mut active: Vec<Vec<usize>> = vec![Vec::new(); n_replicas];
+            let mut parked_bytes = vec![0usize; n_replicas];
+            let mut o = Outcome {
+                peak_concurrent: 0,
+                peak_per_replica: vec![0; n_replicas],
+                routed: 0,
+                migrations: 0,
+                cancels: 0,
+                lost: 0,
+                completions: 0,
+                resume: Histogram::new(),
+            };
+            for t in 0..MAX_TICKS {
+                // Arrivals / due resumes route through the real placement
+                // function: first turn goes least-loaded (queued+active,
+                // the Occupancy::lanes() signal), later turns pin to the
+                // session's affinity replica.
+                for s in 0..SESSIONS {
+                    if let St::Waiting { due } = st[s] {
+                        if due <= t {
+                            let r = if turns_done[s] == 0 {
+                                let loads: Vec<usize> = (0..n_replicas)
+                                    .map(|r| queues[r].len() + active[r].len())
+                                    .collect();
+                                let r = pick_replica(&loads);
+                                affinity.insert(s, r);
+                                r
+                            } else {
+                                affinity[&s]
+                            };
+                            o.routed += 1;
+                            // A resume promotes the parked blob through
+                            // the real codec; the decode *is* the promote
+                            // cost the resume_p99_us counter tracks.
+                            if let Some(blob) = parked_blob[s].take() {
+                                let t0 = std::time::Instant::now();
+                                let back = SessionSnapshot::from_bytes(&blob)
+                                    .expect("parked blob must decode");
+                                o.resume.record(t0.elapsed());
+                                assert_eq!(
+                                    back.to_bytes(),
+                                    blob,
+                                    "resume must be token-identical"
+                                );
+                                parked_bytes[r] -= blob.len();
+                            }
+                            queues[r].push_back(s);
+                            st[s] = St::Queued;
+                        }
+                    }
+                }
+                // Admit queued sessions into free lanes.
+                for r in 0..n_replicas {
+                    while active[r].len() < LANES_PER_REPLICA {
+                        let Some(s) = queues[r].pop_front() else { break };
+                        st[s] = St::Active { left: TURN_TICKS };
+                        active[r].push(s);
+                    }
+                    o.peak_per_replica[r] = o.peak_per_replica[r].max(active[r].len());
+                }
+                let concurrent: usize = active.iter().map(Vec::len).sum();
+                o.peak_concurrent = o.peak_concurrent.max(concurrent);
+                // Decode one tick; finished turns park (or retire).
+                for r in 0..n_replicas {
+                    let mut still = Vec::new();
+                    for &s in &active[r] {
+                        let St::Active { left } = st[s] else { unreachable!() };
+                        if left > 1 {
+                            st[s] = St::Active { left: left - 1 };
+                            still.push(s);
+                            continue;
+                        }
+                        turns_done[s] += 1;
+                        o.completions += 1;
+                        if turns_done[s] == TURNS {
+                            st[s] = St::Done;
+                        } else if s % 7 == 3 {
+                            // A deterministic subset of clients abandons
+                            // the chat: cancel frees everything now.
+                            st[s] = St::Cancelled;
+                            o.cancels += 1;
+                        } else {
+                            parked_blob[s] = Some(blob_of(s).clone());
+                            parked_bytes[r] += blob_of(s).len();
+                            st[s] = St::Waiting { due: t + GAP_TICKS };
+                        }
+                    }
+                    active[r] = still;
+                }
+                // Rebalance: the real pressure test over real slices. The
+                // coldest parked session on the overloaded replica
+                // migrates by blob — decode at the destination must be
+                // byte-identical (the blob is replica-agnostic).
+                if let Some((src, dst)) = plan_migration(&parked_bytes, slice) {
+                    let victim = (0..SESSIONS)
+                        .filter(|&s| {
+                            parked_blob[s].is_some() && affinity.get(&s) == Some(&src)
+                        })
+                        .min_by_key(|&s| match st[s] {
+                            St::Waiting { due } => due,
+                            _ => usize::MAX,
+                        });
+                    if let Some(s) = victim {
+                        let blob = parked_blob[s].clone().unwrap();
+                        let back = SessionSnapshot::from_bytes(&blob)
+                            .expect("migrating blob must decode");
+                        assert_eq!(back.to_bytes(), blob, "migration must be lossless");
+                        parked_bytes[src] -= blob.len();
+                        parked_bytes[dst] += blob.len();
+                        affinity.insert(s, dst);
+                        o.migrations += 1;
+                    }
+                }
+                // Soft bound: migration drains one blob per tick, so a
+                // replica may overshoot its slice by at most the blobs
+                // parked while the rebalancer catches up.
+                for (r, &b) in parked_bytes.iter().enumerate() {
+                    assert!(
+                        b <= slice + 2 * big.len(),
+                        "tick {t}: replica {r} parked bytes {b} ran away from slice {slice}"
+                    );
+                }
+                if st.iter().all(|s| matches!(s, St::Done | St::Cancelled)) {
+                    break;
+                }
+            }
+            o.lost = st
+                .iter()
+                .filter(|s| !matches!(s, St::Done | St::Cancelled))
+                .count() as u64;
+            o
+        };
+
+        let n1 = run_storm(1);
+        let n2 = run_storm(2);
+        println!(
+            "chat storm @{} sessions x {} turns: N=1 peak {} concurrent | N=2 peak {} \
+             (replicas {:?}), {} routed, {} migrations, {} cancels, {} lost, \
+             resume p99 {:.0} us",
+            SESSIONS,
+            TURNS,
+            n1.peak_concurrent,
+            n2.peak_concurrent,
+            n2.peak_per_replica,
+            n2.routed,
+            n2.migrations,
+            n2.cancels,
+            n2.lost,
+            n2.resume.quantile_us(0.99),
+        );
+        assert!(
+            n2.peak_concurrent > n1.peak_concurrent,
+            "N=2 must sustain strictly more concurrent sessions than N=1 \
+             ({} vs {})",
+            n2.peak_concurrent,
+            n1.peak_concurrent
+        );
+        assert!(n2.migrations >= 1, "the storm must trigger >=1 cross-replica migration");
+        assert_eq!(n1.lost + n2.lost, 0, "no request may be lost in either run");
+        assert!(n1.migrations == 0, "a single replica has nowhere to migrate");
+        assert!(n2.cancels >= 1 && n1.cancels == n2.cancels, "cancel schedule is load-independent");
+        scen.counter("chat_storm_sessions", SESSIONS);
+        scen.counter("chat_storm_turns", TURNS);
+        scen.counter("lanes_per_replica", LANES_PER_REPLICA);
+        scen.counter("n1_peak_concurrent", n1.peak_concurrent);
+        scen.counter("n2_peak_concurrent", n2.peak_concurrent);
+        scen.counter("replica0_peak_active", n2.peak_per_replica[0]);
+        scen.counter("replica1_peak_active", n2.peak_per_replica[1]);
+        scen.counter("routed_requests", n2.routed);
+        scen.counter("migrations", n2.migrations);
+        scen.counter("cancel_events", n2.cancels);
+        scen.counter("lost_requests", n1.lost + n2.lost);
+        scen.counter("completions", n2.completions);
+        scen.counter("resume_p99_us", n2.resume.quantile_us(0.99));
+        scen.counter("resume_mean_us", n2.resume.mean_us());
+        scen.counter(
+            "chat_storm_ok",
+            n2.peak_concurrent > n1.peak_concurrent && n2.migrations >= 1 && n2.lost == 0,
+        );
+        match scen.write_default() {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write scenarios report: {e}"),
+        }
+    }
+
     match report.write_default() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write bench report: {e}"),

@@ -19,7 +19,9 @@
 //!   serving engine ([`engine`]), batched prefill admission and
 //!   continuous batched decode over a shared device-view pool plus a
 //!   preempt-to-host session parking tier with multi-turn resume
-//!   ([`scheduler`], [`runtime::host_tier`]), a threaded TCP JSON-lines
+//!   ([`scheduler`], [`runtime::host_tier`]), engine shards behind a
+//!   session-affinity router with spill-blob live migration
+//!   ([`replica`], [`router`]), a threaded TCP JSON-lines
 //!   server ([`server`]), workload generators ([`workload`]), and the
 //!   H200 analytic cost model used to reproduce the paper's latency/memory
 //!   figures ([`costmodel`]).
@@ -73,6 +75,8 @@ pub mod eviction;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod replica;
+pub mod router;
 pub mod runtime;
 pub mod scheduler;
 pub mod selection;

@@ -26,6 +26,7 @@ USAGE:
   wgkv serve     [--artifacts DIR] [--addr HOST:PORT] [--max-active N] [--max-batch N]
                  [--max-prefill-batch N] [--kv-budget BYTES]
                  [--tick-interval MS] [--max-pending N]
+                 [--replicas N] [--max-inflight-per-client N]
                  [--park-byte-budget BYTES] [--park-idle-ticks N]
                  [--spill-dir DIR] [--spill-byte-budget BYTES]
                  [--spill-after-ticks N] [--max-park-per-tick N]
@@ -55,9 +56,27 @@ serve loop (timer tick + backpressure):
                             at least this often on a quiet server, so
                             idle-aging, parking and spill demotion
                             progress with zero traffic (default 10)
-  --max-pending N           command-channel bound; a full queue sheds
-                            requests with a structured 'shed' error
-                            instead of growing unboundedly (default 256)
+  --max-pending N           command-channel bound (per replica); a full
+                            queue sheds requests with a structured 'shed'
+                            error instead of growing unboundedly
+                            (default 256)
+
+serve sharding (engine replicas behind an affinity router):
+  --replicas N              engine replicas, each its own thread +
+                            scheduler; new sessions route to the least
+                            loaded replica, multi-turn sessions pin to
+                            their replica, and a background rebalancer
+                            live-migrates the coldest parked session off
+                            a pressured replica (default 1 = the classic
+                            single-engine server, bit-identical)
+  --max-inflight-per-client N  per-client (peer IP) in-flight generate
+                            cap; a client at its cap is shed with the
+                            'client_shed' error and counted in
+                            client_shed_events (default 0 = unlimited)
+
+  With --replicas N the kv/park/spill byte budgets are each sliced N
+  ways (total footprint unchanged) and each replica spills under
+  SPILL_DIR/replica-{i}.
 
 client streaming:
   --stream                  print token frames as they arrive instead of
@@ -131,32 +150,44 @@ fn main() -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let artifacts = args.str("artifacts", "artifacts");
     let addr = args.str("addr", "127.0.0.1:7077");
+    let replicas = args.usize("replicas", 1)?.max(1);
+    let max_inflight = args.usize("max-inflight-per-client", 0)?;
+    // With N replicas every byte budget is sliced N ways so the *total*
+    // footprint matches the single-engine invocation of the same flags.
     let cfg = SchedulerConfig {
         max_active: args.usize("max-active", 8)?,
-        kv_byte_budget: args.usize("kv-budget", 256 << 20)?,
+        kv_byte_budget: args.usize("kv-budget", 256 << 20)? / replicas,
         max_decode_batch: args.usize("max-batch", 4)?,
         max_prefill_batch: args.usize("max-prefill-batch", 4)?,
-        park_byte_budget: args.usize("park-byte-budget", 256 << 20)?,
+        park_byte_budget: args.usize("park-byte-budget", 256 << 20)? / replicas,
         park_idle_ticks: args.usize("park-idle-ticks", 8)?,
-        spill_byte_budget: args.usize("spill-byte-budget", 1 << 30)?,
+        spill_byte_budget: args.usize("spill-byte-budget", 1 << 30)? / replicas,
         spill_after_ticks: args.usize("spill-after-ticks", 4)?,
         max_park_per_tick: args.usize("max-park-per-tick", 1)?,
         ..SchedulerConfig::default()
     };
-    let spill = match args.str_opt("spill-dir") {
-        Some(dir) => {
-            // An explicit --failpoints flag wins over the env spec; both
-            // default to disarmed, so production serves fault-free.
-            let failpoints = match args.str_opt("failpoints") {
-                Some(spec) => {
-                    Failpoints::parse(&spec, args.u64("failpoint-seed", 0x5EED)?)
-                        .map_err(|e| anyhow::anyhow!("--failpoints: {e}"))?
-                }
-                None => Failpoints::from_env(),
-            };
-            Some(server::SpillSetup { dir: dir.into(), failpoints })
-        }
+    // An explicit --failpoints flag wins over the env spec; both
+    // default to disarmed, so production serves fault-free.
+    let failpoints = match args.str_opt("failpoints") {
+        Some(spec) => Some(
+            Failpoints::parse(&spec, args.u64("failpoint-seed", 0x5EED)?)
+                .map_err(|e| anyhow::anyhow!("--failpoints: {e}"))?,
+        ),
         None => None,
+    };
+    let spill_dir = args.str_opt("spill-dir");
+    // Each replica spills under its own subdirectory so blob names never
+    // collide; `--replicas 1` keeps the flat directory, byte-identical
+    // to the pre-router layout.
+    let spill_for = |index: usize| -> Option<server::SpillSetup> {
+        let dir = spill_dir.as_ref()?;
+        let dir = if replicas == 1 {
+            std::path::PathBuf::from(dir)
+        } else {
+            std::path::Path::new(dir).join(format!("replica-{index}"))
+        };
+        let failpoints = failpoints.clone().unwrap_or_else(Failpoints::from_env);
+        Some(server::SpillSetup { dir, failpoints })
     };
     let prefix_share = args.bool("prefix-share")?;
     let prefix_min = args.usize("prefix-min-tokens", 32)?;
@@ -165,19 +196,56 @@ fn serve(args: &Args) -> Result<()> {
         tick_interval: std::time::Duration::from_millis(args.u64("tick-interval", 10)?),
         max_pending_commands: args.usize("max-pending", 256)?,
     };
-    let (cmds, _handle) = server::spawn_engine_thread_with_spill(
+    let make_engine = move |artifacts: String| {
         move || {
             let mut engine = Engine::load(artifacts, EngineConfig::default())?;
             if prefix_share {
                 engine.enable_prefix_share(prefix_min, prefix_max);
             }
             Ok(engine)
-        },
-        cfg,
-        spill,
-        srv,
-    );
-    server::serve(&addr, cmds)
+        }
+    };
+    if replicas == 1 {
+        // Single-replica path: exactly the pre-router server (one engine
+        // thread, no router, no rebalancer), with the optional gate.
+        let (cmds, _handle) = server::spawn_engine_thread_with_spill(
+            make_engine(artifacts),
+            cfg,
+            spill_for(0),
+            srv,
+        );
+        if max_inflight == 0 {
+            return server::serve(&addr, cmds);
+        }
+        let d = wgkv::router::Dispatcher::single_gated(cmds, max_inflight);
+        return server::serve_dispatcher(&addr, std::sync::Arc::new(d));
+    }
+    let park_slice = cfg.park_byte_budget;
+    let mut handles = Vec::with_capacity(replicas);
+    let mut replica_units = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        let r = wgkv::replica::EngineReplica::spawn(
+            i,
+            make_engine(artifacts.clone()),
+            cfg.clone(),
+            spill_for(i),
+            srv.clone(),
+        );
+        handles.push(wgkv::router::ReplicaHandle {
+            index: r.index,
+            cmds: r.cmds.clone(),
+            occupancy: r.occupancy.clone(),
+        });
+        replica_units.push(r);
+    }
+    let router = std::sync::Arc::new(wgkv::router::Router::new(handles, park_slice));
+    // The rebalancer runs for the life of the process; serve() never
+    // returns on the happy path so the stop flag stays false.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let _rebalancer = router.spawn_rebalancer(stop.clone());
+    eprintln!("wgkv: {replicas} replicas behind affinity router");
+    let d = wgkv::router::Dispatcher::sharded(router, max_inflight);
+    server::serve_dispatcher(&addr, std::sync::Arc::new(d))
 }
 
 fn generate(args: &Args) -> Result<()> {

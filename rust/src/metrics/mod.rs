@@ -205,6 +205,20 @@ pub struct EngineMetrics {
     /// Commands refused at the bounded command channel (load shedding);
     /// each one became a structured `shed` error to the client.
     pub shed_events: u64,
+    /// Per-resume promote latency: host-blob restores and disk-blob
+    /// promotes, measured from the resume admission to the restored
+    /// session (the spill tier's cost, surfaced as `resume_p99_us`).
+    pub resume_latency: Histogram,
+    /// Sessions cancelled through the first-class `cancel` op (queued,
+    /// mid-decode, idle, parked, or spilled — the lane and every tier
+    /// copy freed immediately, not at the next reap boundary).
+    pub cancel_events: u64,
+    /// Parked session blobs imported from another replica (the receive
+    /// side of a cross-replica live migration).
+    pub migrations_in: u64,
+    /// Parked session blobs exported to another replica (the send side
+    /// of a cross-replica live migration).
+    pub migrations_out: u64,
 }
 
 impl EngineMetrics {
@@ -263,6 +277,11 @@ impl EngineMetrics {
             ticks_idle: self.ticks_idle,
             stream_frames: self.stream_frames,
             shed_events: self.shed_events,
+            resume_mean_us: self.resume_latency.mean_us(),
+            resume_p99_us: self.resume_latency.quantile_us(0.99),
+            cancel_events: self.cancel_events,
+            migrations_in: self.migrations_in,
+            migrations_out: self.migrations_out,
         }
     }
 
@@ -327,9 +346,65 @@ pub struct MetricsSnapshot {
     pub ticks_idle: u64,
     pub stream_frames: u64,
     pub shed_events: u64,
+    pub resume_mean_us: f64,
+    pub resume_p99_us: f64,
+    pub cancel_events: u64,
+    pub migrations_in: u64,
+    pub migrations_out: u64,
 }
 
 impl MetricsSnapshot {
+    /// Fold another replica's snapshot into this one (the router's
+    /// aggregated `stats` view): counters and gauges are summed;
+    /// latency summaries (`*_us`, `decode_tok_per_s`) take the
+    /// element-wise max — a conservative cross-replica bound, since the
+    /// underlying histograms live on their replica threads.
+    pub fn absorb(&mut self, other: &MetricsSnapshot) {
+        self.requests_done += other.requests_done;
+        self.prompt_tokens += other.prompt_tokens;
+        self.generated_tokens += other.generated_tokens;
+        self.prefill_mean_us = self.prefill_mean_us.max(other.prefill_mean_us);
+        self.prefill_p90_us = self.prefill_p90_us.max(other.prefill_p90_us);
+        self.decode_mean_us = self.decode_mean_us.max(other.decode_mean_us);
+        self.decode_p90_us = self.decode_p90_us.max(other.decode_p90_us);
+        self.decode_tok_per_s = self.decode_tok_per_s.max(other.decode_tok_per_s);
+        self.cache_update_mean_us = self.cache_update_mean_us.max(other.cache_update_mean_us);
+        self.eviction_triggers += other.eviction_triggers;
+        self.upload_bytes += other.upload_bytes;
+        self.upload_full_equiv_bytes += other.upload_full_equiv_bytes;
+        self.view_delta_uploads += other.view_delta_uploads;
+        self.view_full_uploads += other.view_full_uploads;
+        self.batch_steps += other.batch_steps;
+        self.batch_lanes += other.batch_lanes;
+        self.prefill_batch_steps += other.prefill_batch_steps;
+        self.prefill_batch_lanes += other.prefill_batch_lanes;
+        self.defrag_events += other.defrag_events;
+        self.compaction_events += other.compaction_events;
+        self.lane_moves += other.lane_moves;
+        self.lane_move_bytes += other.lane_move_bytes;
+        self.park_events += other.park_events;
+        self.resume_events += other.resume_events;
+        self.parked_bytes += other.parked_bytes;
+        self.spill_events += other.spill_events;
+        self.promote_events += other.promote_events;
+        self.spilled_bytes += other.spilled_bytes;
+        self.spill_shed_events += other.spill_shed_events;
+        self.io_faults_injected += other.io_faults_injected;
+        self.io_retries += other.io_retries;
+        self.quarantined_sessions += other.quarantined_sessions;
+        self.prefix_hits += other.prefix_hits;
+        self.shared_pages += other.shared_pages;
+        self.cow_clones += other.cow_clones;
+        self.shared_bytes_saved += other.shared_bytes_saved;
+        self.ticks_idle += other.ticks_idle;
+        self.stream_frames += other.stream_frames;
+        self.shed_events += other.shed_events;
+        self.resume_mean_us = self.resume_mean_us.max(other.resume_mean_us);
+        self.resume_p99_us = self.resume_p99_us.max(other.resume_p99_us);
+        self.cancel_events += other.cancel_events;
+        self.migrations_in += other.migrations_in;
+        self.migrations_out += other.migrations_out;
+    }
     pub fn to_json(&self) -> crate::util::json::Json {
         crate::util::json::Json::obj()
             .set("requests_done", self.requests_done)
@@ -371,6 +446,11 @@ impl MetricsSnapshot {
             .set("ticks_idle", self.ticks_idle)
             .set("stream_frames", self.stream_frames)
             .set("shed_events", self.shed_events)
+            .set("resume_mean_us", self.resume_mean_us)
+            .set("resume_p99_us", self.resume_p99_us)
+            .set("cancel_events", self.cancel_events)
+            .set("migrations_in", self.migrations_in)
+            .set("migrations_out", self.migrations_out)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Self {
@@ -415,6 +495,11 @@ impl MetricsSnapshot {
             ticks_idle: f("ticks_idle") as u64,
             stream_frames: f("stream_frames") as u64,
             shed_events: f("shed_events") as u64,
+            resume_mean_us: f("resume_mean_us"),
+            resume_p99_us: f("resume_p99_us"),
+            cancel_events: f("cancel_events") as u64,
+            migrations_in: f("migrations_in") as u64,
+            migrations_out: f("migrations_out") as u64,
         }
     }
 }
@@ -483,10 +568,41 @@ mod tests {
         m.ticks_idle = 11;
         m.stream_frames = 42;
         m.shed_events = 3;
+        m.resume_latency.record_us(64.0);
+        m.cancel_events = 4;
+        m.migrations_in = 2;
+        m.migrations_out = 3;
         let s = m.snapshot();
+        assert!(s.resume_p99_us > 0.0);
         let j = s.to_json().dump();
         let back = MetricsSnapshot::from_json(&crate::util::json::Json::parse(&j).unwrap());
         assert_eq!(back, s);
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_maxes_latencies() {
+        let mut a = MetricsSnapshot::default();
+        a.requests_done = 3;
+        a.parked_bytes = 100;
+        a.cancel_events = 1;
+        a.migrations_out = 1;
+        a.decode_mean_us = 50.0;
+        a.resume_p99_us = 128.0;
+        let mut b = MetricsSnapshot::default();
+        b.requests_done = 4;
+        b.parked_bytes = 200;
+        b.cancel_events = 2;
+        b.migrations_in = 1;
+        b.decode_mean_us = 80.0;
+        b.resume_p99_us = 64.0;
+        a.absorb(&b);
+        assert_eq!(a.requests_done, 7);
+        assert_eq!(a.parked_bytes, 300);
+        assert_eq!(a.cancel_events, 3);
+        assert_eq!(a.migrations_in, 1);
+        assert_eq!(a.migrations_out, 1);
+        assert_eq!(a.decode_mean_us, 80.0);
+        assert_eq!(a.resume_p99_us, 128.0);
     }
 
     #[test]

@@ -1,0 +1,455 @@
+//! One engine shard: the engine, scheduler, bounded command channel,
+//! and quiet-server tick timer, extracted from the serving layer so N
+//! of them can run side by side behind the affinity router
+//! ([`crate::router`]).
+//!
+//! A replica is exactly what the single-engine serve loop used to own:
+//! PJRT buffers are not `Send`, so each replica pins its engine +
+//! scheduler to one dedicated OS thread (named `wgkv-replica-{i}`) and
+//! the outside world talks to it only through [`Command`]s over its
+//! bounded channel. Each replica gets its **own**
+//! `kv_byte_budget`/`park_byte_budget` slice ([`crate::scheduler::SchedulerConfig`]),
+//! its own spill directory, and its own metrics snapshot — there is no
+//! shared mutable state between replicas, which is what makes the
+//! router's rebalancing a pure message-passing protocol.
+//!
+//! **Migration surface.** Beyond the serving commands, a replica
+//! answers [`Command::ExportColdest`] (hand over the coldest migratable
+//! parked blob — continuation-free, unpinned, unpromised) and
+//! [`Command::Import`] (adopt a blob exported by a sibling). The blob
+//! is the same [`crate::engine::SessionSnapshot`] byte format the disk
+//! spill tier stores, so park-then-resume on a different replica is
+//! live migration for free: token-identical by construction.
+//!
+//! **Occupancy.** Every loop pass the replica publishes its scheduler
+//! occupancy (queued / active / idle / parked / spilled) into an
+//! [`Occupancy`] cell of atomics, so the router can pick the
+//! least-loaded replica without a blocking stats round trip.
+#![warn(missing_docs)]
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::scheduler::{Completion, Request, Scheduler, SchedulerConfig};
+use crate::server::{
+    command_channel, error_code, gather_commands, Command, CommandSender, ServerConfig,
+    ServerError, ServerStats, SpillSetup, StreamEvent,
+};
+
+/// Live scheduler occupancy one replica publishes each engine pass, so
+/// the router's load-based placement reads a few atomics instead of
+/// paying a blocking `stats` round trip per routed request. Values are
+/// refreshed with `Relaxed` stores — routing is a heuristic, and a
+/// snapshot one pass stale steers at most one request suboptimally.
+#[derive(Debug, Default)]
+pub struct Occupancy {
+    /// Requests waiting for admission.
+    queued: AtomicUsize,
+    /// Sequences currently decoding.
+    active: AtomicUsize,
+    /// Multi-turn sessions between turns, still device-resident.
+    idle_sessions: AtomicUsize,
+    /// Sessions parked in the host tier.
+    parked_sessions: AtomicUsize,
+    /// Host bytes pinned by parked session blobs.
+    parked_bytes: AtomicUsize,
+    /// Sessions resident in the disk spill tier.
+    spilled_sessions: AtomicUsize,
+}
+
+impl Occupancy {
+    /// Occupied-lane load the router balances on: queued work plus
+    /// everything holding (or about to hold) a device lane.
+    pub fn lanes(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+            + self.active.load(Ordering::Relaxed)
+            + self.idle_sessions.load(Ordering::Relaxed)
+    }
+
+    /// Requests waiting for admission.
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Sequences currently decoding.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Multi-turn sessions between turns, still device-resident.
+    pub fn idle_sessions(&self) -> usize {
+        self.idle_sessions.load(Ordering::Relaxed)
+    }
+
+    /// Sessions parked in the host tier.
+    pub fn parked_sessions(&self) -> usize {
+        self.parked_sessions.load(Ordering::Relaxed)
+    }
+
+    /// Host bytes pinned by parked session blobs — the park-pressure
+    /// signal [`crate::router::plan_migration`] balances on.
+    pub fn parked_bytes(&self) -> usize {
+        self.parked_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Sessions resident in the disk spill tier.
+    pub fn spilled_sessions(&self) -> usize {
+        self.spilled_sessions.load(Ordering::Relaxed)
+    }
+
+    /// Publish the scheduler's current occupancy (engine thread only).
+    fn refresh(&self, sched: &Scheduler) {
+        self.queued.store(sched.queued(), Ordering::Relaxed);
+        self.active.store(sched.active(), Ordering::Relaxed);
+        self.idle_sessions.store(sched.idle_sessions(), Ordering::Relaxed);
+        self.parked_sessions.store(sched.parked_sessions(), Ordering::Relaxed);
+        self.parked_bytes.store(sched.parked_bytes(), Ordering::Relaxed);
+        self.spilled_sessions.store(sched.spilled_sessions(), Ordering::Relaxed);
+    }
+}
+
+/// One spawned engine shard: the handle bundle the router (or the
+/// single-replica compatibility path) keeps per replica.
+pub struct EngineReplica {
+    /// Replica index (also the thread-name suffix, `wgkv-replica-{i}`).
+    pub index: usize,
+    /// Submits [`Command`]s over this replica's bounded channel.
+    pub cmds: CommandSender,
+    /// Occupancy the replica thread publishes each pass.
+    pub occupancy: Arc<Occupancy>,
+    /// Joins the replica thread; yields the engine-load error if the
+    /// replica never came up.
+    pub handle: JoinHandle<Result<()>>,
+}
+
+impl EngineReplica {
+    /// Spawn replica `index`: builds the engine *inside* the thread
+    /// (PJRT buffers are not `Send`), owns the scheduler, drains
+    /// commands, steps the batcher, and resolves completions. Dropping
+    /// `cmds` (all clones) shuts the thread down once it drains. A
+    /// spill directory that cannot be opened degrades gracefully to
+    /// device + host tiers only, exactly as the single-engine path did.
+    pub fn spawn<F>(
+        index: usize,
+        make_engine: F,
+        cfg: SchedulerConfig,
+        spill: Option<SpillSetup>,
+        srv: ServerConfig,
+    ) -> Self
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = command_channel(srv.max_pending_commands);
+        let shed = tx.shed_handle();
+        let occupancy = Arc::new(Occupancy::default());
+        let occ = occupancy.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("wgkv-replica-{index}"))
+            .spawn(move || run_engine_loop(make_engine, cfg, spill, srv, rx, shed, occ))
+            .expect("spawning a replica thread never fails on a healthy host");
+        Self { index, cmds: tx, occupancy, handle }
+    }
+}
+
+/// Build the stats snapshot a replica replies with (and broadcasts to
+/// `subscribe_stats` observers): the engine's metric snapshot plus the
+/// scheduler's live occupancy, with the dashboard counters mirrored to
+/// the top level. Router-level counters stay zero here — the router
+/// overlays them when it aggregates replicas.
+pub fn build_stats(sched: &Scheduler, engine: &mut Engine) -> ServerStats {
+    engine.mirror_prefix_metrics();
+    let snapshot = engine.metrics.snapshot();
+    ServerStats {
+        queued: sched.queued(),
+        active: sched.active(),
+        idle_sessions: sched.idle_sessions(),
+        rejected: sched.rejected(),
+        active_kv_bytes: sched.active_kv_bytes(),
+        // Owned views summed per session + the shared pool charged once
+        // (never per lane-holder).
+        active_view_bytes: sched.owned_view_bytes() + engine.pooled_view_bytes(),
+        compaction_events: snapshot.compaction_events,
+        lane_moves: snapshot.lane_moves,
+        lane_move_bytes: snapshot.lane_move_bytes,
+        park_events: snapshot.park_events,
+        resume_events: snapshot.resume_events,
+        parked_bytes: sched.parked_bytes(),
+        parked_sessions: sched.parked_sessions(),
+        spilled_sessions: sched.spilled_sessions(),
+        spilled_bytes: sched.spilled_bytes(),
+        spill_events: snapshot.spill_events,
+        promote_events: snapshot.promote_events,
+        spill_shed_events: snapshot.spill_shed_events,
+        io_faults_injected: snapshot.io_faults_injected,
+        io_retries: snapshot.io_retries,
+        quarantined_sessions: snapshot.quarantined_sessions,
+        prefix_hits: snapshot.prefix_hits,
+        shared_pages: snapshot.shared_pages,
+        cow_clones: snapshot.cow_clones,
+        shared_bytes_saved: snapshot.shared_bytes_saved,
+        ticks_idle: snapshot.ticks_idle,
+        stream_frames: snapshot.stream_frames,
+        shed_events: snapshot.shed_events,
+        cancel_events: snapshot.cancel_events,
+        resume_p99_us: snapshot.resume_p99_us,
+        routed_requests: 0,
+        migrations: 0,
+        client_shed_events: 0,
+        replicas: Vec::new(),
+        engine: snapshot,
+    }
+}
+
+/// Refuse one command with a structured `engine_load` error, so no
+/// caller — not just `generate` — hangs until its read timeout when the
+/// engine never came up.
+pub(crate) fn fail_command(cmd: Command, msg: &str) {
+    let err = || ServerError { code: error_code::ENGINE_LOAD, msg: msg.to_string() };
+    match cmd {
+        Command::Generate(_, reply) => {
+            let _ = reply.send(StreamEvent::Done(error_completion(0, msg)));
+        }
+        Command::Stats(reply) | Command::SubscribeStats(reply) => {
+            let _ = reply.send(Err(err()));
+        }
+        Command::Park(_, reply) => {
+            let _ = reply.send(Err(err()));
+        }
+        Command::Drop(_, reply) => {
+            let _ = reply.send(Err(err()));
+        }
+        Command::Cancel(_, reply) => {
+            let _ = reply.send(Err(err()));
+        }
+        Command::ExportColdest(reply) => {
+            let _ = reply.send(Err(err()));
+        }
+        Command::Import(_, _, reply) => {
+            let _ = reply.send(Err(err()));
+        }
+    }
+}
+
+fn session_err(e: anyhow::Error) -> ServerError {
+    ServerError { code: error_code::SESSION_OP_FAILED, msg: format!("{e:#}") }
+}
+
+pub(crate) fn error_completion(id: u64, msg: &str) -> Completion {
+    Completion {
+        id,
+        text: String::new(),
+        n_prompt: 0,
+        n_generated: 0,
+        prefill_us: 0.0,
+        decode_us_mean: 0.0,
+        cache_fraction: 0.0,
+        kv_bytes: 0,
+        eviction_triggers: 0,
+        upload_bytes: 0,
+        error: Some(msg.to_string()),
+    }
+}
+
+/// The replica thread body: the command-channel service loop that used
+/// to live inline in `server::spawn_engine_thread_with_spill`, moved
+/// here verbatim (plus the cancel/migration arms and the occupancy
+/// publish) so `--replicas 1` stays bit-identical to the old path.
+fn run_engine_loop<F>(
+    make_engine: F,
+    cfg: SchedulerConfig,
+    spill: Option<SpillSetup>,
+    srv: ServerConfig,
+    rx: mpsc::Receiver<Command>,
+    shed: Arc<AtomicU64>,
+    occ: Arc<Occupancy>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Engine>,
+{
+    let mut engine = match make_engine() {
+        Ok(e) => e,
+        Err(e) => {
+            // Refuse every command kind that arrives until the channel
+            // closes — no caller hangs until its read timeout when the
+            // engine never came up.
+            let msg = format!("engine load: {e:#}");
+            while let Ok(cmd) = rx.recv() {
+                fail_command(cmd, &msg);
+            }
+            return Err(e);
+        }
+    };
+    let mut sched = Scheduler::new(cfg);
+    if let Some(s) = spill {
+        if let Err(e) = sched.attach_spill(&s.dir, s.failpoints) {
+            eprintln!(
+                "wgkv: spill tier disabled ({}: {e}); serving with device + host tiers only",
+                s.dir.display()
+            );
+        }
+    }
+    let mut next_id: u64 = 0;
+    let mut waiters: HashMap<u64, mpsc::Sender<StreamEvent>> = HashMap::new();
+    let mut subscribers: Vec<mpsc::Sender<std::result::Result<ServerStats, ServerError>>> =
+        Vec::new();
+    let mut loops_since_reap: u32 = 0;
+    // How long an idle engine waits for co-arriving commands after the
+    // first one lands, so concurrent clients land in one batched
+    // prefill pass and share the first fused decode batch instead of
+    // being admitted one prefill apart.
+    const BATCH_GATHER: Duration = Duration::from_millis(2);
+    // Waiter-reap cadence in engine passes: each probe sends one
+    // heartbeat per in-flight request, so probing every pass would
+    // double reply traffic for nothing.
+    const REAP_EVERY: u32 = 32;
+    loop {
+        let g = gather_commands(&rx, sched.is_idle(), srv.tick_interval, BATCH_GATHER);
+        if g.disconnected && g.commands.is_empty() && sched.is_idle() {
+            // All senders gone and nothing left to decode: exit. Tier
+            // descent past this point serves nobody — the process is
+            // shutting down.
+            break;
+        }
+        engine.metrics.shed_events = shed.load(Ordering::Relaxed);
+        let had_commands = !g.commands.is_empty();
+        for cmd in g.commands {
+            match cmd {
+                Command::Generate(p, reply) => {
+                    let id = next_id;
+                    next_id += 1;
+                    let opts = match p.session_options(engine.dims()) {
+                        Ok(o) => o,
+                        Err(e) => {
+                            let _ = reply.send(StreamEvent::Done(error_completion(
+                                id,
+                                &format!("{e:#}"),
+                            )));
+                            continue;
+                        }
+                    };
+                    let req = Request {
+                        id,
+                        prompt: engine.tokenizer.encode(&p.prompt),
+                        max_new: p.max_new,
+                        opts,
+                        sampler: p.sampler_kind(),
+                        seed: p.seed,
+                        session_id: p.session_id.clone(),
+                    };
+                    if sched.submit(req) {
+                        waiters.insert(id, reply);
+                    } else {
+                        let _ =
+                            reply.send(StreamEvent::Done(error_completion(id, "queue full")));
+                    }
+                }
+                Command::Stats(reply) => {
+                    let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
+                }
+                Command::SubscribeStats(reply) => {
+                    // Seed the subscription with a snapshot so an
+                    // observer on a fully quiet server sees one line
+                    // immediately.
+                    let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
+                    subscribers.push(reply);
+                }
+                Command::Park(key, reply) => {
+                    let _ =
+                        reply.send(sched.park_session_now(&mut engine, &key).map_err(session_err));
+                }
+                Command::Drop(key, reply) => {
+                    let _ =
+                        reply.send(sched.drop_session(&mut engine, &key).map_err(session_err));
+                }
+                Command::Cancel(key, reply) => {
+                    // First-class cancel: the lane (and every tier copy)
+                    // is freed in THIS pass, and each cancelled
+                    // request's waiter resolves with a per-request
+                    // "cancelled" completion instead of waiting for the
+                    // tick-boundary dead-waiter reaper.
+                    match sched.cancel_session(&mut engine, &key) {
+                        Ok(done) => {
+                            let n = done.len();
+                            for c in done {
+                                if let Some(reply) = waiters.remove(&c.id) {
+                                    let _ = reply.send(StreamEvent::Done(c));
+                                }
+                            }
+                            let _ = reply.send(Ok(n));
+                        }
+                        Err(e) => {
+                            let _ = reply.send(Err(session_err(e)));
+                        }
+                    }
+                }
+                Command::ExportColdest(reply) => {
+                    let out = sched.export_coldest();
+                    if out.is_some() {
+                        engine.metrics.migrations_out += 1;
+                        engine.metrics.parked_bytes = sched.parked_bytes() as u64;
+                    }
+                    let _ = reply.send(Ok(out));
+                }
+                Command::Import(key, payload, reply) => {
+                    let r = sched.import_parked(&key, &payload).map_err(session_err);
+                    if r.is_ok() {
+                        engine.metrics.migrations_in += 1;
+                        engine.metrics.parked_bytes = sched.parked_bytes() as u64;
+                    }
+                    let _ = reply.send(r);
+                }
+            }
+        }
+        // Reap waiters whose client hung up before completion: a failed
+        // heartbeat means the reply channel is closed, so drop the
+        // entry and pull the request back out of the admission queue if
+        // it never started.
+        loops_since_reap += 1;
+        if loops_since_reap >= REAP_EVERY {
+            loops_since_reap = 0;
+            let dead: Vec<u64> = waiters
+                .iter()
+                .filter(|(_, reply)| reply.send(StreamEvent::Heartbeat).is_err())
+                .map(|(&id, _)| id)
+                .collect();
+            for id in dead {
+                waiters.remove(&id);
+                sched.cancel_queued(id);
+            }
+        }
+        let step_now = !sched.is_idle() || sched.has_tick_work();
+        if step_now {
+            if g.timer_fired && !had_commands {
+                // This pass exists only because the timer fired — the
+                // quiet-server descent the old loop starved.
+                engine.metrics.ticks_idle += 1;
+            }
+            let done = sched.step_stream(&mut engine, &mut |ev| {
+                if let Some(reply) = waiters.get(&ev.id) {
+                    let _ = reply.send(StreamEvent::Token {
+                        id: ev.id,
+                        index: ev.index,
+                        text: ev.text,
+                    });
+                }
+            });
+            for c in done {
+                if let Some(reply) = waiters.remove(&c.id) {
+                    let _ = reply.send(StreamEvent::Done(c));
+                }
+            }
+        }
+        occ.refresh(&sched);
+        if !subscribers.is_empty() && (step_now || had_commands || g.timer_fired) {
+            let stats = build_stats(&sched, &mut engine);
+            subscribers.retain(|s| s.send(Ok(stats.clone())).is_ok());
+        }
+    }
+    Ok(())
+}

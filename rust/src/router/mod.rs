@@ -1,0 +1,621 @@
+//! Affinity router: places sessions across N engine replicas
+//! ([`crate::replica::EngineReplica`]) and rebalances park pressure by
+//! live-migrating cold parked sessions between them.
+//!
+//! **Placement.** A fresh request (or the first turn of a new session)
+//! goes to the least-occupied replica — occupied lanes = queued +
+//! active + idle sessions, read from each replica's lock-free
+//! [`crate::replica::Occupancy`] cell. A turn for a known `session_id`
+//! is *pinned*: the affinity map remembers which replica holds the
+//! session's warm/parked state, and every later turn routes there —
+//! KV state never silently restarts on the wrong shard.
+//!
+//! **Migration.** When one replica's park tier is under pressure while
+//! a sibling has headroom ([`plan_migration`]), the router asks the hot
+//! replica for its coldest migratable parked blob
+//! ([`crate::server::Command::ExportColdest`]) and imports it on the
+//! cold one ([`crate::server::Command::Import`]). The blob is the same
+//! replica-agnostic [`crate::engine::SessionSnapshot`] byte format the
+//! disk spill tier stores, so the migrated session resumes
+//! token-identically. The whole export → import → re-point sequence
+//! runs under the affinity-map lock, so no turn can route to the source
+//! replica while its state is mid-flight; an import failure re-imports
+//! the blob at the source — a session is never lost to a failed
+//! rebalance.
+//!
+//! **Front-end.** The serving layer talks only to a [`Dispatcher`]: a
+//! single-replica dispatcher forwards straight to one command channel
+//! (bit-identical to the pre-router path), a sharded one routes through
+//! the [`Router`]. The dispatcher also owns the per-client admission
+//! gate ([`ClientGate`]) so one flooding client is shed by itself
+//! (`client_shed` errors) instead of exhausting the global
+//! `--max-pending` bound for everyone.
+#![warn(missing_docs)]
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::replica::Occupancy;
+use crate::server::{
+    error_code, Command, CommandSender, GenerateParams, ReplicaStat, SendRefusal, ServerError,
+    ServerStats, StreamEvent,
+};
+
+/// Pick the replica to place a fresh request on: the index with the
+/// smallest load (occupied lanes), lowest index winning ties so
+/// placement is deterministic. An empty slice returns 0 (the caller
+/// guarantees at least one replica).
+pub fn pick_replica(loads: &[usize]) -> usize {
+    let mut best = 0;
+    for (i, &l) in loads.iter().enumerate() {
+        if l < loads[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Decide one park-pressure rebalance step over per-replica parked
+/// bytes, where `slice` is each replica's `park_byte_budget`. Returns
+/// `(src, dst)` — migrate the coldest blob from `src` to `dst` — when
+/// the most-loaded replica is above ¾ of its slice, the least-loaded is
+/// below ½, and they differ; otherwise `None` (balanced enough, or a
+/// single replica). The importing scheduler's own budget check remains
+/// the hard bound; this is only the steering heuristic.
+pub fn plan_migration(parked: &[usize], slice: usize) -> Option<(usize, usize)> {
+    if parked.len() < 2 {
+        return None;
+    }
+    let mut src = 0;
+    let mut dst = 0;
+    for (i, &b) in parked.iter().enumerate() {
+        if b > parked[src] {
+            src = i;
+        }
+        if b < parked[dst] {
+            dst = i;
+        }
+    }
+    if src == dst || parked[src] <= slice.saturating_mul(3) / 4 || parked[dst] >= slice / 2 {
+        return None;
+    }
+    Some((src, dst))
+}
+
+/// The router's per-replica handle: command channel + published
+/// occupancy (the [`crate::replica::EngineReplica`] minus its join
+/// handle, which `main` keeps).
+pub struct ReplicaHandle {
+    /// Replica index.
+    pub index: usize,
+    /// Submits commands to the replica's bounded channel.
+    pub cmds: CommandSender,
+    /// Occupancy the replica publishes each engine pass.
+    pub occupancy: Arc<Occupancy>,
+}
+
+/// Map a send refusal to the structured error the old single-engine
+/// respond path produced for the same condition.
+fn refusal_err(r: SendRefusal) -> ServerError {
+    match r {
+        SendRefusal::Shed => ServerError {
+            code: error_code::SHED,
+            msg: "server overloaded: command queue full; retry later".into(),
+        },
+        SendRefusal::Stopped => {
+            ServerError { code: error_code::ENGINE_STOPPED, msg: "engine stopped".into() }
+        }
+    }
+}
+
+/// One blocking request/reply round trip over a command channel.
+fn roundtrip<T>(
+    cmds: &CommandSender,
+    make: impl FnOnce(mpsc::Sender<std::result::Result<T, ServerError>>) -> Command,
+) -> std::result::Result<T, ServerError> {
+    let (tx, rx) = mpsc::channel();
+    cmds.send(make(tx)).map_err(refusal_err)?;
+    rx.recv().map_err(|_| ServerError {
+        code: error_code::ENGINE_DROPPED,
+        msg: "engine dropped request".into(),
+    })?
+}
+
+/// Session-affinity router over N replicas.
+pub struct Router {
+    replicas: Vec<ReplicaHandle>,
+    /// `session_id` → replica index holding the session's state. Taken
+    /// for every routing decision and held across a whole migration, so
+    /// a turn can never race its session's state mid-flight.
+    affinity: Mutex<HashMap<String, usize>>,
+    /// Per-replica `park_byte_budget` slice (the migration heuristic's
+    /// pressure scale).
+    park_slice: usize,
+    routed_requests: AtomicU64,
+    migrations: AtomicU64,
+}
+
+/// Cadence of the aggregated `subscribe_stats` poll and the background
+/// rebalancer scan.
+const ROUTER_POLL: Duration = Duration::from_millis(200);
+
+impl Router {
+    /// Build a router over at least one replica handle; `park_slice` is
+    /// each replica's `park_byte_budget`.
+    pub fn new(replicas: Vec<ReplicaHandle>, park_slice: usize) -> Self {
+        assert!(!replicas.is_empty(), "a router needs at least one replica");
+        Self {
+            replicas,
+            affinity: Mutex::new(HashMap::new()),
+            park_slice,
+            routed_requests: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of replicas behind this router.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Requests routed so far (successful sends only).
+    pub fn routed_requests(&self) -> u64 {
+        self.routed_requests.load(Ordering::Relaxed)
+    }
+
+    /// Cross-replica migrations completed so far.
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    fn least_loaded(&self) -> usize {
+        let loads: Vec<usize> = self.replicas.iter().map(|r| r.occupancy.lanes()).collect();
+        pick_replica(&loads)
+    }
+
+    /// Route one `generate`: affinity hit pins the turn to the replica
+    /// holding the session's state; a fresh session (or one-shot
+    /// request) goes to the least-loaded replica. A brand-new session
+    /// whose send is refused leaves no affinity entry behind.
+    pub fn route_generate(
+        &self,
+        p: GenerateParams,
+        reply: mpsc::Sender<StreamEvent>,
+    ) -> std::result::Result<(), SendRefusal> {
+        let key = p.session_id.clone();
+        let r = match key {
+            Some(key) => {
+                let mut map = self.affinity.lock().unwrap();
+                match map.get(&key).copied() {
+                    Some(i) => self.replicas[i].cmds.send(Command::Generate(p, reply)),
+                    None => {
+                        let i = self.least_loaded();
+                        let r = self.replicas[i].cmds.send(Command::Generate(p, reply));
+                        if r.is_ok() {
+                            map.insert(key, i);
+                        }
+                        r
+                    }
+                }
+            }
+            None => {
+                let i = self.least_loaded();
+                self.replicas[i].cmds.send(Command::Generate(p, reply))
+            }
+        };
+        if r.is_ok() {
+            self.routed_requests.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// Replica index a session op must target, per the affinity map.
+    fn replica_of(&self, key: &str) -> std::result::Result<usize, ServerError> {
+        self.affinity.lock().unwrap().get(key).copied().ok_or_else(|| ServerError {
+            code: error_code::SESSION_OP_FAILED,
+            msg: format!("unknown session '{key}'"),
+        })
+    }
+
+    /// Park a session on the replica holding it.
+    pub fn park(&self, key: &str) -> std::result::Result<usize, ServerError> {
+        let i = self.replica_of(key)?;
+        roundtrip(&self.replicas[i].cmds, |tx| Command::Park(key.to_string(), tx))
+    }
+
+    /// Drop a session's retained context; success forgets its affinity.
+    pub fn drop_session(&self, key: &str) -> std::result::Result<(), ServerError> {
+        let i = self.replica_of(key)?;
+        let r = roundtrip(&self.replicas[i].cmds, |tx| Command::Drop(key.to_string(), tx));
+        if r.is_ok() {
+            self.affinity.lock().unwrap().remove(key);
+        }
+        r
+    }
+
+    /// Cancel a session's in-flight work on the replica holding it;
+    /// success forgets its affinity. Returns the number of requests
+    /// resolved with a `cancelled` completion.
+    pub fn cancel(&self, key: &str) -> std::result::Result<usize, ServerError> {
+        let i = self.replica_of(key)?;
+        let r = roundtrip(&self.replicas[i].cmds, |tx| Command::Cancel(key.to_string(), tx));
+        if r.is_ok() {
+            self.affinity.lock().unwrap().remove(key);
+        }
+        r
+    }
+
+    /// Aggregate a stats snapshot across every replica: engine counters
+    /// absorbed ([`crate::metrics::MetricsSnapshot::absorb`] — counters
+    /// summed, latency summaries element-wise max), occupancy summed,
+    /// and the per-replica breakdown attached. Degrades to the replicas
+    /// that answered; errs only when none did.
+    pub fn stats(&self) -> std::result::Result<ServerStats, ServerError> {
+        let mut agg: Option<ServerStats> = None;
+        let mut last_err = None;
+        for r in &self.replicas {
+            match roundtrip(&r.cmds, Command::Stats) {
+                Ok(s) => {
+                    let rs = ReplicaStat {
+                        index: r.index,
+                        queued: s.queued,
+                        active: s.active,
+                        idle_sessions: s.idle_sessions,
+                        parked_sessions: s.parked_sessions,
+                        parked_bytes: s.parked_bytes,
+                        spilled_sessions: s.spilled_sessions,
+                    };
+                    match agg.as_mut() {
+                        None => {
+                            let mut s = s;
+                            s.replicas.push(rs);
+                            agg = Some(s);
+                        }
+                        Some(a) => {
+                            a.engine.absorb(&s.engine);
+                            a.queued += s.queued;
+                            a.active += s.active;
+                            a.idle_sessions += s.idle_sessions;
+                            a.rejected += s.rejected;
+                            a.active_kv_bytes += s.active_kv_bytes;
+                            a.active_view_bytes += s.active_view_bytes;
+                            a.compaction_events += s.compaction_events;
+                            a.lane_moves += s.lane_moves;
+                            a.lane_move_bytes += s.lane_move_bytes;
+                            a.park_events += s.park_events;
+                            a.resume_events += s.resume_events;
+                            a.parked_bytes += s.parked_bytes;
+                            a.parked_sessions += s.parked_sessions;
+                            a.spilled_sessions += s.spilled_sessions;
+                            a.spilled_bytes += s.spilled_bytes;
+                            a.spill_events += s.spill_events;
+                            a.promote_events += s.promote_events;
+                            a.spill_shed_events += s.spill_shed_events;
+                            a.io_faults_injected += s.io_faults_injected;
+                            a.io_retries += s.io_retries;
+                            a.quarantined_sessions += s.quarantined_sessions;
+                            a.prefix_hits += s.prefix_hits;
+                            a.shared_pages += s.shared_pages;
+                            a.cow_clones += s.cow_clones;
+                            a.shared_bytes_saved += s.shared_bytes_saved;
+                            a.ticks_idle += s.ticks_idle;
+                            a.stream_frames += s.stream_frames;
+                            a.shed_events += s.shed_events;
+                            a.cancel_events += s.cancel_events;
+                            a.resume_p99_us = a.resume_p99_us.max(s.resume_p99_us);
+                            a.replicas.push(rs);
+                        }
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match agg {
+            Some(mut a) => {
+                a.routed_requests = self.routed_requests();
+                a.migrations = self.migrations();
+                Ok(a)
+            }
+            None => Err(last_err.unwrap_or_else(|| ServerError {
+                code: error_code::ENGINE_STOPPED,
+                msg: "no replica answered".into(),
+            })),
+        }
+    }
+
+    /// Aggregated `subscribe_stats`: a poll thread pushes a fleet-wide
+    /// snapshot every [`ROUTER_POLL`] until the subscriber hangs up
+    /// (per-replica push streams cannot be merged without a clock, so
+    /// the sharded path polls instead).
+    pub fn subscribe_stats(
+        self: &Arc<Self>,
+        reply: mpsc::Sender<std::result::Result<ServerStats, ServerError>>,
+    ) {
+        let router = Arc::clone(self);
+        std::thread::spawn(move || loop {
+            match router.stats() {
+                Ok(s) => {
+                    if reply.send(Ok(s)).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = reply.send(Err(e));
+                    break;
+                }
+            }
+            std::thread::sleep(ROUTER_POLL);
+        });
+    }
+
+    /// One rebalance step: if [`plan_migration`] finds a hot/cold pair,
+    /// migrate the hot replica's coldest migratable parked blob to the
+    /// cold one and re-point the session's affinity — all under the
+    /// affinity lock, so no turn routes at the half-migrated state. An
+    /// import failure re-imports at the source; only if even that fails
+    /// is the session lost (and logged). Returns the migrated session
+    /// key, if any.
+    pub fn rebalance_once(&self) -> Option<String> {
+        let parked: Vec<usize> =
+            self.replicas.iter().map(|r| r.occupancy.parked_bytes()).collect();
+        let (src, dst) = plan_migration(&parked, self.park_slice)?;
+        let mut map = self.affinity.lock().unwrap();
+        let (key, payload) =
+            roundtrip(&self.replicas[src].cmds, Command::ExportColdest).ok()??;
+        match roundtrip(&self.replicas[dst].cmds, |tx| {
+            Command::Import(key.clone(), payload.clone(), tx)
+        }) {
+            Ok(_) => {
+                map.insert(key.clone(), dst);
+                self.migrations.fetch_add(1, Ordering::Relaxed);
+                Some(key)
+            }
+            Err(e) => {
+                // Put the blob back where it came from — the source
+                // exported it a moment ago, so it fits there.
+                let back = roundtrip(&self.replicas[src].cmds, |tx| {
+                    Command::Import(key.clone(), payload.clone(), tx)
+                });
+                if let Err(b) = back {
+                    eprintln!(
+                        "wgkv: migration of '{key}' failed ({}) and re-import failed ({}); \
+                         session lost",
+                        e.msg, b.msg
+                    );
+                    map.remove(&key);
+                }
+                None
+            }
+        }
+    }
+
+    /// Spawn the background rebalancer: scans park pressure every
+    /// [`ROUTER_POLL`] and performs at most one migration per scan,
+    /// until `stop` is raised.
+    pub fn spawn_rebalancer(self: &Arc<Self>, stop: Arc<AtomicBool>) -> JoinHandle<()> {
+        let router = Arc::clone(self);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(ROUTER_POLL);
+                router.rebalance_once();
+            }
+        })
+    }
+}
+
+/// RAII in-flight permit handed out by [`ClientGate::admit`]; dropping
+/// it releases the slot.
+pub struct ClientPermit<'a> {
+    gate: &'a ClientGate,
+    client: Option<String>,
+}
+
+impl Drop for ClientPermit<'_> {
+    fn drop(&mut self) {
+        if let Some(client) = self.client.take() {
+            let mut m = self.gate.inflight.lock().unwrap();
+            if let Some(n) = m.get_mut(&client) {
+                *n -= 1;
+                if *n == 0 {
+                    m.remove(&client);
+                }
+            }
+        }
+    }
+}
+
+/// Per-client admission gate: bounds how many `generate` requests one
+/// client (keyed by peer IP, so extra connections don't evade it) may
+/// hold in flight. The global `--max-pending` bound sheds *everyone*
+/// when one client floods; this gate sheds the offender first, with the
+/// distinct [`error_code::CLIENT_SHED`] code. A limit of 0 disables the
+/// gate (the single-replica default, preserving today's behavior).
+pub struct ClientGate {
+    max_inflight: usize,
+    inflight: Mutex<HashMap<String, usize>>,
+    shed: AtomicU64,
+}
+
+impl ClientGate {
+    /// Gate admitting at most `max_inflight` concurrent `generate`s per
+    /// client; 0 = unlimited.
+    pub fn new(max_inflight: usize) -> Self {
+        Self { max_inflight, inflight: Mutex::new(HashMap::new()), shed: AtomicU64::new(0) }
+    }
+
+    /// Try to admit one request for `client`: `None` (and a bump of the
+    /// shed counter) when the client is already at its cap.
+    pub fn admit(&self, client: &str) -> Option<ClientPermit<'_>> {
+        if self.max_inflight == 0 {
+            return Some(ClientPermit { gate: self, client: None });
+        }
+        let mut m = self.inflight.lock().unwrap();
+        let n = m.entry(client.to_string()).or_insert(0);
+        if *n >= self.max_inflight {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        *n += 1;
+        Some(ClientPermit { gate: self, client: Some(client.to_string()) })
+    }
+
+    /// Requests refused because their client was at its in-flight cap.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+enum Backend {
+    /// One replica, no router: forwards to its command channel exactly
+    /// as the pre-sharding server did.
+    Single(CommandSender),
+    /// N replicas behind the affinity router.
+    Sharded(Arc<Router>),
+}
+
+/// What the serving layer holds instead of an engine handle: routes
+/// every op to the single replica or through the [`Router`], and owns
+/// the per-client gate.
+pub struct Dispatcher {
+    backend: Backend,
+    gate: ClientGate,
+}
+
+impl Dispatcher {
+    /// Single-replica dispatcher with the gate disabled — byte-for-byte
+    /// the pre-router serving behavior.
+    pub fn single(cmds: CommandSender) -> Self {
+        Self::single_gated(cmds, 0)
+    }
+
+    /// Single-replica dispatcher with a per-client in-flight cap.
+    pub fn single_gated(cmds: CommandSender, max_inflight_per_client: usize) -> Self {
+        Self { backend: Backend::Single(cmds), gate: ClientGate::new(max_inflight_per_client) }
+    }
+
+    /// Sharded dispatcher routing through `router`.
+    pub fn sharded(router: Arc<Router>, max_inflight_per_client: usize) -> Self {
+        Self { backend: Backend::Sharded(router), gate: ClientGate::new(max_inflight_per_client) }
+    }
+
+    /// The per-client admission gate (the facade takes a permit before
+    /// submitting a `generate`).
+    pub fn gate(&self) -> &ClientGate {
+        &self.gate
+    }
+
+    /// Submit a `generate`; frames and the completion arrive on `reply`.
+    pub fn generate(
+        &self,
+        p: GenerateParams,
+        reply: mpsc::Sender<StreamEvent>,
+    ) -> std::result::Result<(), SendRefusal> {
+        match &self.backend {
+            Backend::Single(cmds) => cmds.send(Command::Generate(p, reply)),
+            Backend::Sharded(router) => router.route_generate(p, reply),
+        }
+    }
+
+    /// Blocking stats snapshot (fleet-aggregated when sharded), with
+    /// this dispatcher's client-shed count overlaid.
+    pub fn stats(&self) -> std::result::Result<ServerStats, ServerError> {
+        let mut s = match &self.backend {
+            Backend::Single(cmds) => roundtrip(cmds, Command::Stats),
+            Backend::Sharded(router) => router.stats(),
+        }?;
+        s.client_shed_events = self.gate.shed_count();
+        Ok(s)
+    }
+
+    /// Subscribe to the stats broadcast: per-pass pushes from the
+    /// single replica, or the router's aggregated poll when sharded.
+    pub fn subscribe_stats(
+        &self,
+        reply: mpsc::Sender<std::result::Result<ServerStats, ServerError>>,
+    ) -> std::result::Result<(), SendRefusal> {
+        match &self.backend {
+            Backend::Single(cmds) => cmds.send(Command::SubscribeStats(reply)),
+            Backend::Sharded(router) => {
+                router.subscribe_stats(reply);
+                Ok(())
+            }
+        }
+    }
+
+    /// Blocking `park` of a session wherever it lives.
+    pub fn park(&self, key: &str) -> std::result::Result<usize, ServerError> {
+        match &self.backend {
+            Backend::Single(cmds) => roundtrip(cmds, |tx| Command::Park(key.to_string(), tx)),
+            Backend::Sharded(router) => router.park(key),
+        }
+    }
+
+    /// Blocking `drop` of a session's retained context.
+    pub fn drop_session(&self, key: &str) -> std::result::Result<(), ServerError> {
+        match &self.backend {
+            Backend::Single(cmds) => roundtrip(cmds, |tx| Command::Drop(key.to_string(), tx)),
+            Backend::Sharded(router) => router.drop_session(key),
+        }
+    }
+
+    /// Blocking `cancel`: frees the session's in-flight work now and
+    /// returns how many requests were resolved with a `cancelled`
+    /// completion.
+    pub fn cancel(&self, key: &str) -> std::result::Result<usize, ServerError> {
+        match &self.backend {
+            Backend::Single(cmds) => roundtrip(cmds, |tx| Command::Cancel(key.to_string(), tx)),
+            Backend::Sharded(router) => router.cancel(key),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_replica_is_argmin_with_deterministic_ties() {
+        assert_eq!(pick_replica(&[3, 1, 2]), 1);
+        assert_eq!(pick_replica(&[2, 1, 1]), 1, "ties break to the lowest index");
+        assert_eq!(pick_replica(&[0]), 0);
+        assert_eq!(pick_replica(&[]), 0);
+    }
+
+    #[test]
+    fn plan_migration_needs_pressure_and_headroom() {
+        // One replica never migrates.
+        assert_eq!(plan_migration(&[1000], 1000), None);
+        // Hot (above ¾ slice) + cold (below ½ slice): migrate hot→cold.
+        assert_eq!(plan_migration(&[900, 100], 1000), Some((0, 1)));
+        assert_eq!(plan_migration(&[100, 900], 1000), Some((1, 0)));
+        // No pressure: the max is under ¾ of the slice.
+        assert_eq!(plan_migration(&[700, 100], 1000), None);
+        // No headroom: the min is already at ½ the slice.
+        assert_eq!(plan_migration(&[900, 500], 1000), None);
+        // Balanced high load has pressure but no headroom.
+        assert_eq!(plan_migration(&[900, 900], 1000), None);
+    }
+
+    #[test]
+    fn client_gate_caps_per_client_and_counts_sheds() {
+        let gate = ClientGate::new(2);
+        let a1 = gate.admit("10.0.0.1").expect("first");
+        let _a2 = gate.admit("10.0.0.1").expect("second");
+        assert!(gate.admit("10.0.0.1").is_none(), "third in flight is shed");
+        assert_eq!(gate.shed_count(), 1);
+        // Another client is unaffected by the first one's cap.
+        let _b1 = gate.admit("10.0.0.2").expect("other client admits");
+        // Releasing a permit frees the slot.
+        drop(a1);
+        assert!(gate.admit("10.0.0.1").is_some());
+        // An unlimited gate never sheds.
+        let open = ClientGate::new(0);
+        for _ in 0..100 {
+            assert!(open.admit("flood").is_some());
+        }
+        assert_eq!(open.shed_count(), 0);
+    }
+}

@@ -1693,27 +1693,34 @@ impl Scheduler {
                         s.remove(&key);
                     }
                     match (entry.cont, e.req) {
-                        (Some(cont), _) => match engine.resume_session(entry.snap, &[]) {
-                            Ok(sess) => self.active.push(Active {
-                                req: cont.req,
-                                sess,
-                                sampler: cont.sampler,
-                                generated: cont.generated,
-                                prefill_us: cont.prefill_us,
-                                decode_started: Instant::now(),
-                                idle_ticks: 0,
-                                streamed: cont.streamed,
-                                frames: cont.frames,
-                            }),
-                            Err(err) => done.push(Self::error_completion(
-                                &cont.req,
-                                format!("resume: {err:#}"),
-                            )),
-                        },
+                        (Some(cont), _) => {
+                            let t0 = Instant::now();
+                            match engine.resume_session(entry.snap, &[]) {
+                                Ok(sess) => {
+                                    engine.metrics.resume_latency.record(t0.elapsed());
+                                    self.active.push(Active {
+                                        req: cont.req,
+                                        sess,
+                                        sampler: cont.sampler,
+                                        generated: cont.generated,
+                                        prefill_us: cont.prefill_us,
+                                        decode_started: Instant::now(),
+                                        idle_ticks: 0,
+                                        streamed: cont.streamed,
+                                        frames: cont.frames,
+                                    });
+                                }
+                                Err(err) => done.push(Self::error_completion(
+                                    &cont.req,
+                                    format!("resume: {err:#}"),
+                                )),
+                            }
+                        }
                         (None, Some(req)) => {
                             let t0 = Instant::now();
                             match engine.resume_session(entry.snap, &req.prompt) {
                                 Ok(sess) => {
+                                    engine.metrics.resume_latency.record(t0.elapsed());
                                     let sampler = Sampler::new(req.sampler, req.seed);
                                     self.active.push(Active {
                                         req,
@@ -1748,6 +1755,7 @@ impl Scheduler {
                         }
                         continue;
                     };
+                    let t_promote = Instant::now();
                     let promoted = match self.spill.as_mut() {
                         Some(s) => s.promote(&key),
                         None => Err(SpillError::Gone { key: key.clone() }),
@@ -1760,6 +1768,9 @@ impl Scheduler {
                                 .and_then(|snap| engine.resume_session(snap, &req.prompt));
                             match restored {
                                 Ok(sess) => {
+                                    // Promote latency spans the disk read
+                                    // too — that is the spill tier's cost.
+                                    engine.metrics.resume_latency.record(t_promote.elapsed());
                                     let sampler = Sampler::new(req.sampler, req.seed);
                                     self.active.push(Active {
                                         req,
@@ -2143,6 +2154,141 @@ impl Scheduler {
         }
     }
 
+    /// Server `cancel` op: free a session's in-flight work *now* — its
+    /// queued turns, its mid-decode lane, and every tier copy (idle /
+    /// parked / spilled) — instead of waiting for the tick-boundary
+    /// dead-waiter reaper. Each cancelled request becomes a per-request
+    /// "cancelled" error completion so its waiter resolves immediately,
+    /// and the freed lane re-enters the pool before the next admission
+    /// pass. Errs only when the key names nothing anywhere in the tier
+    /// ladder.
+    pub fn cancel_session(
+        &mut self,
+        engine: &mut Engine,
+        key: &str,
+    ) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+        let mut found = false;
+        // Queued turns and preemption/resume markers for the key.
+        let mut i = 0;
+        while i < self.queue.len() {
+            let hit = self.queue[i].resume.as_deref() == Some(key)
+                || self.queue[i].req.as_ref().and_then(|r| r.session_id.as_deref())
+                    == Some(key);
+            if !hit {
+                i += 1;
+                continue;
+            }
+            if let Some(e) = self.queue.remove(i) {
+                if let Some(req) = e.req {
+                    done.push(Self::error_completion(&req, "cancelled".to_string()));
+                }
+            }
+            found = true;
+        }
+        // The mid-decode lane: `finish` releases the owned view and the
+        // pool lane immediately.
+        while let Some(p) = self
+            .active
+            .iter()
+            .position(|a| a.req.session_id.as_deref() == Some(key))
+        {
+            let a = self.active.remove(p);
+            done.push(self.finish(engine, a, Some("cancelled".to_string()), String::new()));
+            found = true;
+        }
+        // Idle tier: release the warm lane.
+        if let Some(p) = self.idle.iter().position(|s| s.key == key) {
+            let mut s = self.idle.swap_remove(p);
+            self.view_bytes_released += s.sess.release_device_view() as u64;
+            engine.release_lane(&mut s.sess);
+            found = true;
+        }
+        // Parked blob: a preempted continuation's waiter resolves too,
+        // and any write-behind demotion racing the cancel is swept.
+        if let Some(entry) = self.parked.take(key) {
+            if let Some(cont) = entry.cont {
+                done.push(Self::error_completion(&cont.req, "cancelled".to_string()));
+            }
+            self.pending_demote.retain(|k| k != key);
+            engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
+            found = true;
+        }
+        // Spilled blob.
+        if let Some(s) = self.spill.as_mut() {
+            if s.contains(key) {
+                s.remove(key);
+                found = true;
+            }
+        }
+        if !found {
+            anyhow::bail!("unknown session '{key}'");
+        }
+        engine.metrics.cancel_events += 1;
+        self.compact_boundary(engine);
+        Ok(done)
+    }
+
+    /// Extract the coldest *migratable* parked blob for a cross-replica
+    /// migration: continuation-free (a preempted generation's live
+    /// sampler state does not serialize — the same constraint the spill
+    /// tier honors), unpinned, with no queued resume and no in-flight
+    /// demotion. The entry leaves this scheduler entirely (host copy
+    /// taken, spill copy removed, **no tombstone** — the session lives
+    /// on wherever the router imports the returned payload).
+    pub fn export_coldest(&mut self) -> Option<(String, Vec<u8>)> {
+        let scan = self.parked.len().max(1);
+        let candidates = self.parked.coldest_unpinned(self.tick, 0, scan);
+        for key in candidates {
+            let migratable = self
+                .parked
+                .get(&key)
+                .map(|e| e.cont.is_none())
+                .unwrap_or(false)
+                && !self.has_queued_resume(&key)
+                && !self.pending_demote.iter().any(|k| k == &key);
+            if !migratable {
+                continue;
+            }
+            let Some(entry) = self.parked.take(&key) else { continue };
+            if let Some(s) = self.spill.as_mut() {
+                s.remove(&key);
+            }
+            return Some((key, entry.snap.to_bytes()));
+        }
+        None
+    }
+
+    /// Receive a migrated session blob: decode, bound-check against the
+    /// park budget, and insert unpinned at current recency. The blob is
+    /// never half-adopted — a decode or fit failure leaves this
+    /// scheduler untouched, so the router can re-import the payload on
+    /// the source replica instead of losing the session.
+    pub fn import_parked(&mut self, key: &str, payload: &[u8]) -> Result<usize> {
+        let snap = SessionSnapshot::from_bytes(payload)
+            .map_err(|e| anyhow::anyhow!("import: {e}"))?;
+        let bytes = snap.parked_bytes();
+        if !self.parked.would_fit(bytes) {
+            anyhow::bail!(
+                "import: blob ({bytes} B) does not fit next to the park tier's pinned \
+                 bytes ({} B budget)",
+                self.parked.park_byte_budget()
+            );
+        }
+        // The session lives again here: clear any stale tombstone.
+        if let Some(p) = self.evicted_keys.iter().position(|k| k == key) {
+            self.evicted_keys.remove(p);
+        }
+        match self.parked.insert(key, ParkedEntry { snap, cont: None }, bytes, false, self.tick)
+        {
+            Ok(evicted) => {
+                self.note_evictions(evicted);
+                Ok(bytes)
+            }
+            Err(_) => anyhow::bail!("import: park store refused the blob"),
+        }
+    }
+
     /// Drive everything to completion (examples / benchmarks).
     pub fn run_to_completion(&mut self, engine: &mut Engine) -> Result<Vec<Completion>> {
         let mut all = Vec::new();
@@ -2270,6 +2416,70 @@ mod tests {
             s.queue.back().unwrap().resume.is_none(),
             "after the tombstone is consumed the key starts fresh"
         );
+    }
+
+    /// A continuation-free parked entry built from a minimal cache
+    /// snapshot — enough state for store-level migration tests.
+    fn mini_entry() -> ParkedEntry {
+        let d = crate::kvcache::dual::CacheDims {
+            n_layers: 1,
+            n_kv_heads: 1,
+            d_head: 2,
+            w_local: 2,
+            page_size: 2,
+        };
+        let cache = crate::kvcache::SequenceKvCache::new(d, 4).unwrap();
+        ParkedEntry {
+            snap: crate::engine::SessionSnapshot::for_tests(cache.snapshot().unwrap()),
+            cont: None,
+        }
+    }
+
+    /// `export_coldest` takes the least-recently-used migratable blob,
+    /// skips pinned entries (a queued resume is a promise the source
+    /// replica must keep), and leaves **no tombstone** — the session
+    /// lives on wherever the router imports the payload.
+    #[test]
+    fn export_coldest_skips_pinned_and_leaves_no_tombstone() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        assert!(s.parked.insert("cold", mini_entry(), 64, false, 0).is_ok());
+        assert!(s.parked.insert("warm", mini_entry(), 64, false, 3).is_ok());
+        assert!(s.parked.insert("promised", mini_entry(), 64, true, 1).is_ok());
+        s.tick = 5;
+        let (key, payload) = s.export_coldest().expect("a migratable blob exists");
+        assert_eq!(key, "cold");
+        assert!(crate::engine::SessionSnapshot::from_bytes(&payload).is_ok());
+        assert!(!s.parked.contains("cold"));
+        assert!(s.evicted_keys.is_empty(), "migration must not tombstone");
+        assert_eq!(s.export_coldest().map(|(k, _)| k), Some("warm".to_string()));
+        assert!(s.export_coldest().is_none(), "a pinned blob never migrates");
+        assert!(matches!(s.resume_state("cold"), ResumeState::Unknown));
+    }
+
+    /// `import_parked` adopts a blob whole or not at all: garbage is
+    /// refused with the store untouched, a fitting blob lands unpinned
+    /// and routes as `Parked`, and a stale tombstone for the key is
+    /// cleared so the session's next turn resumes instead of erroring.
+    #[test]
+    fn import_parked_is_atomic_and_clears_tombstones() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        assert!(s.import_parked("bad", b"not a snapshot").is_err());
+        assert_eq!(s.parked_sessions(), 0);
+        let payload = mini_entry().snap.to_bytes();
+        s.evicted_keys.push_back("mig".to_string());
+        let bytes = s.import_parked("mig", &payload).expect("blob fits the default budget");
+        assert!(bytes > 0);
+        assert!(s.parked.contains("mig"));
+        assert_eq!(s.parked.is_pinned("mig"), Some(false));
+        assert!(s.evicted_keys.is_empty(), "import revives a tombstoned key");
+        assert!(matches!(s.resume_state("mig"), ResumeState::Parked));
+        // A zero park budget refuses the blob outright: the importing
+        // replica never half-adopts, so the router can re-import at the
+        // source and the session is not lost.
+        let mut tiny =
+            Scheduler::new(SchedulerConfig { park_byte_budget: 0, ..Default::default() });
+        assert!(tiny.import_parked("mig", &payload).is_err());
+        assert_eq!(tiny.parked_sessions(), 0);
     }
 
     /// Planner over a fresh pool (nothing allocated or bound).

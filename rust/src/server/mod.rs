@@ -1,13 +1,24 @@
-//! Serving front-end: a threaded TCP JSON-lines API over the engine thread.
+//! Serving front-end: a threaded TCP JSON-lines API over engine
+//! replicas.
 //!
-//! PJRT buffers are not `Send`, so the engine + scheduler live on one
-//! dedicated OS thread; connection handler threads talk to it through a
-//! **bounded** mpsc command channel and receive replies over per-request
-//! channels. (The usual tokio stack is unavailable in this image —
-//! DESIGN.md §2 — so the server is thread-per-connection over
-//! `std::net`, which at this model scale is not the bottleneck: the
-//! engine thread serializes all PJRT work anyway.) Python is never
-//! involved: the engine thread only executes pre-compiled artifacts.
+//! PJRT buffers are not `Send`, so each engine + scheduler lives on one
+//! dedicated OS thread — an [`crate::replica::EngineReplica`];
+//! connection handler threads talk to it through a **bounded** mpsc
+//! command channel and receive replies over per-request channels. (The
+//! usual tokio stack is unavailable in this image — DESIGN.md §2 — so
+//! the server is thread-per-connection over `std::net`, which at this
+//! model scale is not the bottleneck: the engine threads serialize all
+//! PJRT work anyway.) Python is never involved: the engine threads only
+//! execute pre-compiled artifacts.
+//!
+//! Since the multi-replica refactor the facade holds **no engine
+//! handle** at all: every connection talks to a
+//! [`crate::router::Dispatcher`], which forwards to the single
+//! replica's channel (`--replicas 1`, bit-identical to the pre-router
+//! path) or routes through the session-affinity
+//! [`crate::router::Router`] (`--replicas N`). This module keeps the
+//! wire protocol, the command/channel types, and the client; the engine
+//! loop itself lives in [`crate::replica`].
 //!
 //! **Timer tick.** The engine loop is a command-channel *service*: when
 //! the scheduler is idle it polls the channel with a bounded
@@ -57,6 +68,7 @@
 //!  "stream": true}
 //! {"op": "park", "session_id": "chat-1"}
 //! {"op": "drop", "session_id": "chat-1"}
+//! {"op": "cancel", "session_id": "chat-1"}
 //! {"op": "stats"}
 //! {"op": "subscribe_stats"}
 //! ```
@@ -80,10 +92,19 @@
 //! the retained cache instead of re-prefilling the whole conversation.
 //! `park` pushes an idle session to the host tier immediately (or
 //! refreshes a parked one's LRU recency); `drop` discards the retained
-//! context.
+//! context; `cancel` frees the session's in-flight work immediately —
+//! queued turns and its mid-decode lane included — resolving each
+//! cancelled request with a per-request `cancelled` error completion
+//! instead of waiting for the tick-boundary dead-waiter reaper.
+//!
+//! **Per-client backpressure.** Besides the global `--max-pending`
+//! bound, the dispatcher can cap how many `generate`s one client (by
+//! peer IP, across all its connections) holds in flight
+//! (`--max-inflight-per-client`); a client at its cap is refused with
+//! the distinct [`error_code::CLIENT_SHED`] code, so a flooding client
+//! sheds itself instead of exhausting the global bound for everyone.
 #![warn(missing_docs)]
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -100,7 +121,7 @@ use crate::eviction::SnapKvConfig;
 use crate::metrics::MetricsSnapshot;
 use crate::model::SamplerKind;
 use crate::runtime::manifest::ModelDims;
-use crate::scheduler::{Completion, Request, Scheduler, SchedulerConfig};
+use crate::scheduler::{Completion, SchedulerConfig};
 use crate::selection::QuestConfig;
 use crate::util::failpoint::Failpoints;
 use crate::util::json::Json;
@@ -129,6 +150,10 @@ pub mod error_code {
     /// The bounded command queue is full; the request was shed. Retry
     /// after backoff.
     pub const SHED: &str = "shed";
+    /// This client is at its per-client in-flight cap
+    /// (`--max-inflight-per-client`); the request was shed without
+    /// touching the global queue. Retry after a completion.
+    pub const CLIENT_SHED: &str = "client_shed";
     /// The connection sat idle past the server's read timeout and is
     /// being closed.
     pub const READ_TIMEOUT: &str = "read_timeout";
@@ -391,6 +416,72 @@ pub struct ServerStats {
     /// Commands refused because the bounded command queue was full
     /// (mirror).
     pub shed_events: u64,
+    /// Sessions cancelled via the first-class `cancel` op (mirror).
+    pub cancel_events: u64,
+    /// p99 of per-resume promote latency (park/spill tier → device),
+    /// µs — the spill tier's cost surfaced at the top level (mirror of
+    /// the engine histogram summary).
+    pub resume_p99_us: f64,
+    /// Requests placed by the affinity router (0 on the single-replica
+    /// path, which routes nothing).
+    pub routed_requests: u64,
+    /// Parked sessions live-migrated between replicas by the router.
+    pub migrations: u64,
+    /// Requests refused at a per-client in-flight cap
+    /// (`--max-inflight-per-client`), attributed to the offender instead
+    /// of the global queue.
+    pub client_shed_events: u64,
+    /// Per-replica occupancy breakdown. Empty on a replica's own
+    /// snapshot; the router fills one entry per replica when it
+    /// aggregates.
+    pub replicas: Vec<ReplicaStat>,
+}
+
+/// One replica's occupancy inside an aggregated [`ServerStats`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaStat {
+    /// Replica index (`wgkv-replica-{i}`).
+    pub index: usize,
+    /// Requests waiting for admission on this replica.
+    pub queued: usize,
+    /// Sequences currently decoding on this replica.
+    pub active: usize,
+    /// Idle device-resident sessions on this replica.
+    pub idle_sessions: usize,
+    /// Sessions parked in this replica's host tier.
+    pub parked_sessions: usize,
+    /// Host bytes pinned by this replica's parked blobs.
+    pub parked_bytes: usize,
+    /// Sessions in this replica's disk spill tier.
+    pub spilled_sessions: usize,
+}
+
+impl ReplicaStat {
+    /// Serialize as one entry of the stats response's `replicas` array.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("index", self.index)
+            .set("queued", self.queued)
+            .set("active", self.active)
+            .set("idle_sessions", self.idle_sessions)
+            .set("parked_sessions", self.parked_sessions)
+            .set("parked_bytes", self.parked_bytes)
+            .set("spilled_sessions", self.spilled_sessions)
+    }
+
+    /// Parse one `replicas` array entry (absent fields read as 0).
+    pub fn from_json(j: &Json) -> Self {
+        let f = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Self {
+            index: f("index"),
+            queued: f("queued"),
+            active: f("active"),
+            idle_sessions: f("idle_sessions"),
+            parked_sessions: f("parked_sessions"),
+            parked_bytes: f("parked_bytes"),
+            spilled_sessions: f("spilled_sessions"),
+        }
+    }
 }
 
 impl ServerStats {
@@ -427,6 +518,15 @@ impl ServerStats {
             .set("ticks_idle", self.ticks_idle)
             .set("stream_frames", self.stream_frames)
             .set("shed_events", self.shed_events)
+            .set("cancel_events", self.cancel_events)
+            .set("resume_p99_us", self.resume_p99_us)
+            .set("routed_requests", self.routed_requests)
+            .set("migrations", self.migrations)
+            .set("client_shed_events", self.client_shed_events)
+            .set(
+                "replicas",
+                self.replicas.iter().map(ReplicaStat::to_json).collect::<Vec<_>>(),
+            )
     }
 }
 
@@ -516,6 +616,23 @@ pub enum Command {
     Park(String, mpsc::Sender<std::result::Result<usize, ServerError>>),
     /// Discard a session's retained context (idle tier or parked blob).
     Drop(String, mpsc::Sender<std::result::Result<(), ServerError>>),
+    /// Cancel a session's in-flight work *now*: queued turns, the
+    /// mid-decode lane, and every tier copy. Each cancelled request's
+    /// waiter resolves immediately with a `cancelled` completion;
+    /// replies with how many were resolved.
+    Cancel(String, mpsc::Sender<std::result::Result<usize, ServerError>>),
+    /// Router migration: hand over the coldest migratable parked blob
+    /// (continuation-free, unpinned, unpromised) as a replica-agnostic
+    /// snapshot payload, or `None` when nothing qualifies.
+    #[allow(clippy::type_complexity)]
+    ExportColdest(
+        mpsc::Sender<std::result::Result<Option<(String, Vec<u8>)>, ServerError>>,
+    ),
+    /// Router migration: adopt a snapshot blob exported by a sibling
+    /// replica under the given session key; replies with the parked
+    /// bytes charged. Refused whole (never half-adopted) on a decode or
+    /// budget failure.
+    Import(String, Vec<u8>, mpsc::Sender<std::result::Result<usize, ServerError>>),
 }
 
 /// Why [`CommandSender::send`] refused a command.
@@ -555,6 +672,12 @@ impl CommandSender {
     /// Commands shed so far because the queue was full.
     pub fn shed_count(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// The shared shed counter (the replica loop mirrors it into the
+    /// `shed_events` metric).
+    pub(crate) fn shed_handle(&self) -> Arc<AtomicU64> {
+        self.shed.clone()
     }
 }
 
@@ -641,73 +764,6 @@ pub struct SpillSetup {
     pub failpoints: Failpoints,
 }
 
-/// Build the stats snapshot the engine replies with (and broadcasts to
-/// `subscribe_stats` observers): the engine's metric snapshot plus the
-/// scheduler's live occupancy, with the dashboard counters mirrored to
-/// the top level.
-fn build_stats(sched: &Scheduler, engine: &mut Engine) -> ServerStats {
-    engine.mirror_prefix_metrics();
-    let snapshot = engine.metrics.snapshot();
-    ServerStats {
-        queued: sched.queued(),
-        active: sched.active(),
-        idle_sessions: sched.idle_sessions(),
-        rejected: sched.rejected(),
-        active_kv_bytes: sched.active_kv_bytes(),
-        // Owned views summed per session + the shared pool charged once
-        // (never per lane-holder).
-        active_view_bytes: sched.owned_view_bytes() + engine.pooled_view_bytes(),
-        compaction_events: snapshot.compaction_events,
-        lane_moves: snapshot.lane_moves,
-        lane_move_bytes: snapshot.lane_move_bytes,
-        park_events: snapshot.park_events,
-        resume_events: snapshot.resume_events,
-        parked_bytes: sched.parked_bytes(),
-        parked_sessions: sched.parked_sessions(),
-        spilled_sessions: sched.spilled_sessions(),
-        spilled_bytes: sched.spilled_bytes(),
-        spill_events: snapshot.spill_events,
-        promote_events: snapshot.promote_events,
-        spill_shed_events: snapshot.spill_shed_events,
-        io_faults_injected: snapshot.io_faults_injected,
-        io_retries: snapshot.io_retries,
-        quarantined_sessions: snapshot.quarantined_sessions,
-        prefix_hits: snapshot.prefix_hits,
-        shared_pages: snapshot.shared_pages,
-        cow_clones: snapshot.cow_clones,
-        shared_bytes_saved: snapshot.shared_bytes_saved,
-        ticks_idle: snapshot.ticks_idle,
-        stream_frames: snapshot.stream_frames,
-        shed_events: snapshot.shed_events,
-        engine: snapshot,
-    }
-}
-
-/// Refuse one command with a structured `engine_load` error, so no
-/// caller — not just `generate` — hangs until its read timeout when the
-/// engine never came up.
-fn fail_command(cmd: Command, msg: &str) {
-    let err = || ServerError { code: error_code::ENGINE_LOAD, msg: msg.to_string() };
-    match cmd {
-        Command::Generate(_, reply) => {
-            let _ = reply.send(StreamEvent::Done(error_completion(0, msg)));
-        }
-        Command::Stats(reply) | Command::SubscribeStats(reply) => {
-            let _ = reply.send(Err(err()));
-        }
-        Command::Park(_, reply) => {
-            let _ = reply.send(Err(err()));
-        }
-        Command::Drop(_, reply) => {
-            let _ = reply.send(Err(err()));
-        }
-    }
-}
-
-fn session_err(e: anyhow::Error) -> ServerError {
-    ServerError { code: error_code::SESSION_OP_FAILED, msg: format!("{e:#}") }
-}
-
 /// `make_engine` runs on the engine thread; a load failure is returned
 /// through the join handle after every pending command errors out.
 /// Serving knobs take [`ServerConfig::default`] — use
@@ -726,6 +782,11 @@ where
 /// explicit serving knobs. A spill directory that cannot be opened
 /// degrades gracefully: the server logs the failure and serves with the
 /// device + host tiers only, rather than refusing to boot.
+///
+/// Since the multi-replica refactor this is a thin wrapper spawning
+/// [`crate::replica::EngineReplica`] 0 — the loop itself lives in
+/// [`crate::replica`], and this path is exactly the `--replicas 1`
+/// special case.
 pub fn spawn_engine_thread_with_spill<F>(
     make_engine: F,
     cfg: SchedulerConfig,
@@ -735,154 +796,8 @@ pub fn spawn_engine_thread_with_spill<F>(
 where
     F: FnOnce() -> Result<Engine> + Send + 'static,
 {
-    let (tx, rx) = command_channel(srv.max_pending_commands);
-    let shed = tx.shed.clone();
-    let handle = std::thread::spawn(move || -> Result<()> {
-        let mut engine = match make_engine() {
-            Ok(e) => e,
-            Err(e) => {
-                // Refuse every command kind that arrives until the
-                // channel closes — previously only Generate was
-                // answered and Stats/Park/Drop callers hung until
-                // their read timeout.
-                let msg = format!("engine load: {e:#}");
-                while let Ok(cmd) = rx.recv() {
-                    fail_command(cmd, &msg);
-                }
-                return Err(e);
-            }
-        };
-        let mut sched = Scheduler::new(cfg);
-        if let Some(s) = spill {
-            if let Err(e) = sched.attach_spill(&s.dir, s.failpoints) {
-                eprintln!(
-                    "wgkv: spill tier disabled ({}: {e}); serving with device + host tiers only",
-                    s.dir.display()
-                );
-            }
-        }
-        let mut next_id: u64 = 0;
-        let mut waiters: HashMap<u64, mpsc::Sender<StreamEvent>> = HashMap::new();
-        let mut subscribers: Vec<mpsc::Sender<std::result::Result<ServerStats, ServerError>>> =
-            Vec::new();
-        let mut loops_since_reap: u32 = 0;
-        // How long an idle engine waits for co-arriving commands after
-        // the first one lands, so concurrent clients land in one
-        // batched prefill pass and share the first fused decode batch
-        // instead of being admitted one prefill apart.
-        const BATCH_GATHER: Duration = Duration::from_millis(2);
-        // Waiter-reap cadence in engine passes: each probe sends one
-        // heartbeat per in-flight request, so probing every pass would
-        // double reply traffic for nothing.
-        const REAP_EVERY: u32 = 32;
-        loop {
-            let g = gather_commands(&rx, sched.is_idle(), srv.tick_interval, BATCH_GATHER);
-            if g.disconnected && g.commands.is_empty() && sched.is_idle() {
-                // All senders gone and nothing left to decode: exit.
-                // Tier descent past this point serves nobody — the
-                // process is shutting down.
-                break;
-            }
-            engine.metrics.shed_events = shed.load(Ordering::Relaxed);
-            let had_commands = !g.commands.is_empty();
-            for cmd in g.commands {
-                match cmd {
-                    Command::Generate(p, reply) => {
-                        let id = next_id;
-                        next_id += 1;
-                        let opts = match p.session_options(engine.dims()) {
-                            Ok(o) => o,
-                            Err(e) => {
-                                let _ = reply.send(StreamEvent::Done(error_completion(
-                                    id,
-                                    &format!("{e:#}"),
-                                )));
-                                continue;
-                            }
-                        };
-                        let req = Request {
-                            id,
-                            prompt: engine.tokenizer.encode(&p.prompt),
-                            max_new: p.max_new,
-                            opts,
-                            sampler: p.sampler_kind(),
-                            seed: p.seed,
-                            session_id: p.session_id.clone(),
-                        };
-                        if sched.submit(req) {
-                            waiters.insert(id, reply);
-                        } else {
-                            let _ = reply
-                                .send(StreamEvent::Done(error_completion(id, "queue full")));
-                        }
-                    }
-                    Command::Stats(reply) => {
-                        let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
-                    }
-                    Command::SubscribeStats(reply) => {
-                        // Seed the subscription with a snapshot so an
-                        // observer on a fully quiet server sees one
-                        // line immediately.
-                        let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
-                        subscribers.push(reply);
-                    }
-                    Command::Park(key, reply) => {
-                        let _ = reply
-                            .send(sched.park_session_now(&mut engine, &key).map_err(session_err));
-                    }
-                    Command::Drop(key, reply) => {
-                        let _ =
-                            reply.send(sched.drop_session(&mut engine, &key).map_err(session_err));
-                    }
-                }
-            }
-            // Reap waiters whose client hung up before completion: a
-            // failed heartbeat means the reply channel is closed, so
-            // drop the entry and pull the request back out of the
-            // admission queue if it never started.
-            loops_since_reap += 1;
-            if loops_since_reap >= REAP_EVERY {
-                loops_since_reap = 0;
-                let dead: Vec<u64> = waiters
-                    .iter()
-                    .filter(|(_, reply)| reply.send(StreamEvent::Heartbeat).is_err())
-                    .map(|(&id, _)| id)
-                    .collect();
-                for id in dead {
-                    waiters.remove(&id);
-                    sched.cancel_queued(id);
-                }
-            }
-            let step_now = !sched.is_idle() || sched.has_tick_work();
-            if step_now {
-                if g.timer_fired && !had_commands {
-                    // This pass exists only because the timer fired —
-                    // the quiet-server descent the old loop starved.
-                    engine.metrics.ticks_idle += 1;
-                }
-                let done = sched.step_stream(&mut engine, &mut |ev| {
-                    if let Some(reply) = waiters.get(&ev.id) {
-                        let _ = reply.send(StreamEvent::Token {
-                            id: ev.id,
-                            index: ev.index,
-                            text: ev.text,
-                        });
-                    }
-                });
-                for c in done {
-                    if let Some(reply) = waiters.remove(&c.id) {
-                        let _ = reply.send(StreamEvent::Done(c));
-                    }
-                }
-            }
-            if !subscribers.is_empty() && (step_now || had_commands || g.timer_fired) {
-                let stats = build_stats(&sched, &mut engine);
-                subscribers.retain(|s| s.send(Ok(stats.clone())).is_ok());
-            }
-        }
-        Ok(())
-    });
-    (tx, handle)
+    let r = crate::replica::EngineReplica::spawn(0, make_engine, cfg, spill, srv);
+    (r.cmds, r.handle)
 }
 
 /// [`spawn_engine_thread_with`] loading artifacts from a directory.
@@ -893,22 +808,6 @@ pub fn spawn_engine_thread(
 ) -> (CommandSender, JoinHandle<Result<()>>) {
     let dir = artifacts.into();
     spawn_engine_thread_with(move || Engine::load(dir, engine_cfg), cfg)
-}
-
-fn error_completion(id: u64, msg: &str) -> Completion {
-    Completion {
-        id,
-        text: String::new(),
-        n_prompt: 0,
-        n_generated: 0,
-        prefill_us: 0.0,
-        decode_us_mean: 0.0,
-        cache_fraction: 0.0,
-        kv_bytes: 0,
-        eviction_triggers: 0,
-        upload_bytes: 0,
-        error: Some(msg.to_string()),
-    }
 }
 
 /// Render a send refusal as the matching protocol error line.
@@ -922,16 +821,34 @@ fn refusal_json(r: SendRefusal) -> Json {
     }
 }
 
+/// Emit a structured error, prefixing the session-op message with its
+/// op name exactly as the pre-dispatcher path did (shed / stopped /
+/// dropped errors keep their bare messages).
+fn session_op_error(
+    op: &str,
+    se: ServerError,
+    emit: &mut dyn FnMut(Json) -> std::io::Result<()>,
+) -> std::io::Result<()> {
+    if se.code == error_code::SESSION_OP_FAILED {
+        emit(error_json(se.code, format!("{op}: {}", se.msg)))
+    } else {
+        emit(error_json(se.code, se.msg))
+    }
+}
+
 /// Handle one request line, emitting zero or more response lines
 /// through `emit` (the facade stays free of business logic — it only
-/// routes frames). A `generate` with `"stream": true` emits each token
-/// frame as it arrives plus the final completion; without the flag only
-/// the completion line is emitted, exactly as before streaming existed.
-/// `subscribe_stats` emits stats lines until either side disconnects.
+/// routes frames through the dispatcher). A `generate` with
+/// `"stream": true` emits each token frame as it arrives plus the final
+/// completion; without the flag only the completion line is emitted,
+/// exactly as before streaming existed. `subscribe_stats` emits stats
+/// lines until either side disconnects. `client` keys the per-client
+/// in-flight gate (peer IP, so extra connections don't evade it).
 /// Returns `Err` only for I/O failures on `emit`.
 fn respond(
     line: &str,
-    cmds: &CommandSender,
+    d: &crate::router::Dispatcher,
+    client: &str,
     emit: &mut dyn FnMut(Json) -> std::io::Result<()>,
 ) -> std::io::Result<()> {
     let parsed = match Json::parse(line) {
@@ -942,8 +859,17 @@ fn respond(
     match parsed.get("op").and_then(Json::as_str) {
         Some("generate") => match GenerateParams::from_json(&parsed) {
             Ok(p) => {
+                // The permit spans the whole request: taken before the
+                // submit, released when the completion (or error) has
+                // been emitted.
+                let Some(_permit) = d.gate().admit(client) else {
+                    return emit(error_json(
+                        error_code::CLIENT_SHED,
+                        "client at its in-flight cap; retry after a completion",
+                    ));
+                };
                 let (tx, rx) = mpsc::channel();
-                if let Err(r) = cmds.send(Command::Generate(p, tx)) {
+                if let Err(r) = d.generate(p, tx) {
                     return emit(refusal_json(r));
                 }
                 loop {
@@ -970,22 +896,13 @@ fn respond(
             }
             Err(e) => emit(error_json(error_code::BAD_REQUEST, format!("bad request: {e:#}"))),
         },
-        Some("stats") => {
-            let (tx, rx) = mpsc::channel();
-            if let Err(r) = cmds.send(Command::Stats(tx)) {
-                return emit(refusal_json(r));
-            }
-            match rx.recv() {
-                Ok(Ok(s)) => emit(s.to_json()),
-                Ok(Err(se)) => emit(error_json(se.code, se.msg)),
-                Err(_) => {
-                    emit(error_json(error_code::ENGINE_DROPPED, "engine dropped request"))
-                }
-            }
-        }
+        Some("stats") => match d.stats() {
+            Ok(s) => emit(s.to_json()),
+            Err(se) => emit(error_json(se.code, se.msg)),
+        },
         Some("subscribe_stats") => {
             let (tx, rx) = mpsc::channel();
-            if let Err(r) = cmds.send(Command::SubscribeStats(tx)) {
+            if let Err(r) = d.subscribe_stats(tx) {
                 return emit(refusal_json(r));
             }
             loop {
@@ -1005,37 +922,40 @@ fn respond(
             let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
                 return emit(error_json(error_code::BAD_REQUEST, "park: missing 'session_id'"));
             };
-            let (tx, rx) = mpsc::channel();
-            if let Err(r) = cmds.send(Command::Park(key.to_string(), tx)) {
-                return emit(refusal_json(r));
-            }
-            match rx.recv() {
-                Ok(Ok(bytes)) => emit(
+            match d.park(key) {
+                Ok(bytes) => emit(
                     Json::obj()
                         .set("ok", "parked")
                         .set("session_id", key)
                         .set("parked_bytes", bytes),
                 ),
-                Ok(Err(se)) => emit(error_json(se.code, format!("park: {}", se.msg))),
-                Err(_) => {
-                    emit(error_json(error_code::ENGINE_DROPPED, "engine dropped request"))
-                }
+                Err(se) => session_op_error("park", se, emit),
             }
         }
         Some("drop") => {
             let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
                 return emit(error_json(error_code::BAD_REQUEST, "drop: missing 'session_id'"));
             };
-            let (tx, rx) = mpsc::channel();
-            if let Err(r) = cmds.send(Command::Drop(key.to_string(), tx)) {
-                return emit(refusal_json(r));
+            match d.drop_session(key) {
+                Ok(()) => emit(Json::obj().set("ok", "dropped").set("session_id", key)),
+                Err(se) => session_op_error("drop", se, emit),
             }
-            match rx.recv() {
-                Ok(Ok(())) => emit(Json::obj().set("ok", "dropped").set("session_id", key)),
-                Ok(Err(se)) => emit(error_json(se.code, format!("drop: {}", se.msg))),
-                Err(_) => {
-                    emit(error_json(error_code::ENGINE_DROPPED, "engine dropped request"))
-                }
+        }
+        Some("cancel") => {
+            let Some(key) = parsed.get("session_id").and_then(Json::as_str) else {
+                return emit(error_json(
+                    error_code::BAD_REQUEST,
+                    "cancel: missing 'session_id'",
+                ));
+            };
+            match d.cancel(key) {
+                Ok(n) => emit(
+                    Json::obj()
+                        .set("ok", "cancelled")
+                        .set("session_id", key)
+                        .set("cancelled", n),
+                ),
+                Err(se) => session_op_error("cancel", se, emit),
             }
         }
         Some(op) => emit(error_json(error_code::UNKNOWN_OP, format!("unknown op '{op}'"))),
@@ -1043,7 +963,11 @@ fn respond(
     }
 }
 
-fn handle_conn(stream: TcpStream, cmds: CommandSender) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    d: Arc<crate::router::Dispatcher>,
+    client: String,
+) -> Result<()> {
     // Bound how long an idle client can pin this handler thread: a
     // connection with no traffic for CONN_READ_TIMEOUT gets one final
     // structured error line, then the socket closes.
@@ -1079,23 +1003,35 @@ fn handle_conn(stream: TcpStream, cmds: CommandSender) -> Result<()> {
             out.push('\n');
             writer.write_all(out.as_bytes())
         };
-        respond(&line, &cmds, &mut emit)?;
+        respond(&line, &d, &client, &mut emit)?;
     }
     Ok(())
 }
 
-/// Serve forever on `addr`. The engine must already be wrapped by
-/// [`spawn_engine_thread`].
+/// Serve forever on `addr` over one engine replica (wrapped by
+/// [`spawn_engine_thread`] or [`spawn_engine_thread_with_spill`]) —
+/// the `--replicas 1` path, identical to the pre-router server.
 pub fn serve(addr: &str, cmds: CommandSender) -> Result<()> {
+    serve_dispatcher(addr, Arc::new(crate::router::Dispatcher::single(cmds)))
+}
+
+/// Serve forever on `addr` through a dispatcher (single replica or the
+/// sharded affinity router). Connection handler threads never see an
+/// engine handle; every op goes through `d`.
+pub fn serve_dispatcher(addr: &str, d: Arc<crate::router::Dispatcher>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("wgkv: serving on {addr}");
     for stream in listener.incoming() {
         let stream = stream?;
-        let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
-        let cmds = cmds.clone();
+        let peer = stream.peer_addr().ok();
+        let label = peer.map(|p| p.to_string()).unwrap_or_default();
+        // Gate key: the IP only — one client's flood of connections
+        // shares one in-flight budget.
+        let client = peer.map(|p| p.ip().to_string()).unwrap_or_default();
+        let d = d.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, cmds) {
-                eprintln!("wgkv: connection {peer}: {e:#}");
+            if let Err(e) = handle_conn(stream, d, client) {
+                eprintln!("wgkv: connection {label}: {e:#}");
             }
         });
     }
@@ -1247,6 +1183,16 @@ impl Client {
             ticks_idle: f("ticks_idle") as u64,
             stream_frames: f("stream_frames") as u64,
             shed_events: f("shed_events") as u64,
+            cancel_events: f("cancel_events") as u64,
+            resume_p99_us: f("resume_p99_us"),
+            routed_requests: f("routed_requests") as u64,
+            migrations: f("migrations") as u64,
+            client_shed_events: f("client_shed_events") as u64,
+            replicas: j
+                .get("replicas")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().map(ReplicaStat::from_json).collect())
+                .unwrap_or_default(),
         })
     }
 
@@ -1269,6 +1215,19 @@ impl Client {
             bail!("drop failed: {}", Self::server_error(&j));
         }
         Ok(())
+    }
+
+    /// Blocking `cancel` round-trip: abort a session wherever it lives —
+    /// queued, mid-decode, idle, parked, or spilled — freeing its lane and
+    /// bytes immediately. Returns how many in-flight requests were
+    /// terminated with a `"cancelled"` error completion.
+    pub fn cancel(&mut self, session_id: &str) -> Result<usize> {
+        let j = self
+            .roundtrip(Json::obj().set("op", "cancel").set("session_id", session_id))?;
+        if j.get("ok").and_then(Json::as_str) != Some("cancelled") {
+            bail!("cancel failed: {}", Self::server_error(&j));
+        }
+        Ok(j.get("cancelled").and_then(Json::as_usize).unwrap_or(0))
     }
 }
 
@@ -1377,10 +1336,12 @@ mod tests {
         }
     }
 
-    /// Run [`respond`] collecting every emitted line.
+    /// Run [`respond`] through a single-replica dispatcher, collecting
+    /// every emitted line.
     fn respond_collect(line: &str, cmds: &CommandSender) -> Vec<Json> {
+        let d = crate::router::Dispatcher::single(cmds.clone());
         let mut out = Vec::new();
-        respond(line, cmds, &mut |j| {
+        respond(line, &d, "test-client", &mut |j| {
             out.push(j);
             Ok(())
         })
@@ -1471,6 +1432,7 @@ mod tests {
         // Session ops require a session_id before touching the engine.
         not_ok(r#"{"op":"park"}"#);
         not_ok(r#"{"op":"drop"}"#);
+        not_ok(r#"{"op":"cancel"}"#);
     }
 
     #[test]
@@ -1539,6 +1501,31 @@ mod tests {
             ticks_idle: 11,
             stream_frames: 42,
             shed_events: 3,
+            cancel_events: 4,
+            resume_p99_us: 512.0,
+            routed_requests: 17,
+            migrations: 2,
+            client_shed_events: 5,
+            replicas: vec![
+                ReplicaStat {
+                    index: 0,
+                    queued: 1,
+                    active: 2,
+                    idle_sessions: 3,
+                    parked_sessions: 4,
+                    parked_bytes: 555,
+                    spilled_sessions: 6,
+                },
+                ReplicaStat {
+                    index: 1,
+                    queued: 0,
+                    active: 1,
+                    idle_sessions: 0,
+                    parked_sessions: 2,
+                    parked_bytes: 333,
+                    spilled_sessions: 0,
+                },
+            ],
         };
         let dumped = s.to_json().dump();
         let back = Client::stats_from_json(&Json::parse(&dumped).unwrap()).unwrap();
@@ -1568,6 +1555,12 @@ mod tests {
         assert_eq!(back.ticks_idle, 11);
         assert_eq!(back.stream_frames, 42);
         assert_eq!(back.shed_events, 3);
+        assert_eq!(back.cancel_events, 4);
+        assert_eq!(back.resume_p99_us, 512.0);
+        assert_eq!(back.routed_requests, 17);
+        assert_eq!(back.migrations, 2);
+        assert_eq!(back.client_shed_events, 5);
+        assert_eq!(back.replicas, s.replicas);
     }
 
     /// Every protocol error carries a stable machine-matchable code next
@@ -1586,6 +1579,7 @@ mod tests {
         assert_eq!(code_of(r#"{"no_op": 1}"#), error_code::MISSING_OP);
         assert_eq!(code_of(r#"{"op":"park"}"#), error_code::BAD_REQUEST);
         assert_eq!(code_of(r#"{"op":"drop"}"#), error_code::BAD_REQUEST);
+        assert_eq!(code_of(r#"{"op":"cancel"}"#), error_code::BAD_REQUEST);
         assert_eq!(code_of(r#"{"op":"generate"}"#), error_code::BAD_REQUEST);
         // A closed engine channel is ENGINE_STOPPED, not "unknown".
         let (dead, dead_rx) = command_channel(8);
@@ -1647,8 +1641,45 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         cmds.send(Command::Drop("s".into(), tx)).unwrap();
         assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::Cancel("s".into(), tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::ExportColdest(tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::Import("s".into(), vec![1, 2, 3], tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
         drop(cmds);
         assert!(handle.join().unwrap().is_err());
+    }
+
+    /// A client at its in-flight cap is shed with the dedicated
+    /// `client_shed` code *before* the command channel is touched, and
+    /// the refusal is attributed to it in `client_shed_events`.
+    #[test]
+    fn per_client_cap_sheds_with_client_shed_code() {
+        let (cmds, _rx) = command_channel(8);
+        let d = crate::router::Dispatcher::single_gated(cmds, 1);
+        // Hold one permit so "flood" is at its cap, then try another.
+        let _held = d.gate().admit("flood").expect("first request admitted");
+        let mut out = Vec::new();
+        respond(r#"{"op":"generate","prompt":"x"}"#, &d, "flood", &mut |j| {
+            out.push(j);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            out[0].get("code").and_then(Json::as_str),
+            Some(error_code::CLIENT_SHED)
+        );
+        assert_eq!(d.gate().shed_count(), 1);
+        // A different client is unaffected by the offender's cap: its
+        // request reaches the command channel (and then times out
+        // engine-less, which is fine — admission already happened).
+        assert!(d.gate().admit("polite").is_some());
     }
 
     /// The gather pass keeps `Timeout` and `Disconnected` distinct —

@@ -845,3 +845,180 @@ fn streamed_frames_concatenate_to_the_buffered_completion() {
     let stats = client.stats().expect("stats");
     assert!(stats.stream_frames >= frames.len() as u64);
 }
+
+/// PR 9 satellite: `cancel` frees a live multi-turn session immediately
+/// — its lane/idle view and retained context are gone, the op is
+/// counted in `cancel_events`, and later ops on the key are clean
+/// errors, not hangs.
+#[test]
+fn cancel_frees_the_session_and_counts_the_event() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_cmds, addr) = boot(&dir, 4);
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let mut rng = Rng::new(110);
+    let c1 = client
+        .generate(GenerateParams {
+            prompt: workload::gen_kv(&mut rng, 5, 4).prompt,
+            max_new: 4,
+            session_id: Some("doomed".into()),
+            ..GenerateParams::default()
+        })
+        .expect("turn 1");
+    assert!(c1.error.is_none());
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.idle_sessions, 1);
+
+    // Idle between turns: the cancel frees it with zero in-flight
+    // requests to terminate.
+    let n = client.cancel("doomed").expect("cancel op");
+    assert_eq!(n, 0, "an idle session has no in-flight requests");
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.idle_sessions, 0, "cancel must free the idle view");
+    assert_eq!(stats.cancel_events, 1);
+
+    // The key is gone everywhere: session ops error, a second cancel too.
+    assert!(client.park("doomed").is_err());
+    assert!(client.cancel("doomed").is_err(), "double cancel must error");
+
+    // A parked session cancels too, and counts separately.
+    let c2 = client
+        .generate(GenerateParams {
+            prompt: workload::gen_kv(&mut rng, 4, 4).prompt,
+            max_new: 4,
+            session_id: Some("parked".into()),
+            ..GenerateParams::default()
+        })
+        .expect("park-victim turn");
+    assert!(c2.error.is_none());
+    client.park("parked").expect("park op");
+    assert_eq!(client.cancel("parked").expect("cancel parked"), 0);
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.parked_sessions, 0, "cancel must free the parked blob");
+    assert_eq!(stats.cancel_events, 2);
+}
+
+/// PR 9 acceptance: the `--replicas 1` serve path (facade → Dispatcher
+/// → replica 0) is token-identical to driving the engine thread's
+/// command channel directly — the refactor moved the loop, not the
+/// math.
+#[test]
+fn single_replica_dispatcher_path_is_token_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(111);
+    let params = GenerateParams {
+        prompt: workload::gen_kv(&mut rng, 5, 4).prompt,
+        max_new: 8,
+        ..GenerateParams::default()
+    };
+
+    // Path A: the raw command channel, exactly the pre-router engine
+    // thread surface.
+    let (cmds, _h) = server::spawn_engine_thread(
+        dir.clone(),
+        EngineConfig::default(),
+        SchedulerConfig { max_active: 4, park_idle_ticks: 10_000, ..SchedulerConfig::default() },
+    );
+    let (tx, rx) = mpsc::channel();
+    cmds.send(Command::Generate(params.clone(), tx)).unwrap();
+    let direct = loop {
+        match rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap() {
+            StreamEvent::Done(c) => break c,
+            StreamEvent::Token { .. } | StreamEvent::Heartbeat => {}
+        }
+    };
+    assert!(direct.error.is_none());
+
+    // Path B: the full serve facade (TCP → Dispatcher::single → the
+    // same replica loop) on a fresh engine.
+    let (_cmds, addr) = boot(&dir, 4);
+    let mut client = Client::connect(&addr).expect("connect");
+    let served = client.generate(params).expect("served generate");
+    assert!(served.error.is_none());
+
+    assert_eq!(
+        served.text, direct.text,
+        "--replicas 1 must be bit-identical to the direct engine path"
+    );
+    assert_eq!(served.n_generated, direct.n_generated);
+    assert_eq!(served.n_prompt, direct.n_prompt);
+}
+
+/// PR 9 tentpole: two engine replicas behind the affinity router serve
+/// concurrent sessions — placement spreads load, multi-turn sessions
+/// pin to their replica, aggregated stats expose both shards, and
+/// `cancel` routes through the affinity map.
+#[test]
+fn sharded_two_replicas_route_pin_and_cancel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = SchedulerConfig { max_active: 2, park_idle_ticks: 10_000, ..SchedulerConfig::default() };
+    let mut handles = Vec::new();
+    for i in 0..2usize {
+        let dir = dir.clone();
+        let r = wgkv::replica::EngineReplica::spawn(
+            i,
+            move || Engine::load(dir, EngineConfig::default()),
+            cfg,
+            None,
+            ServerConfig::default(),
+        );
+        handles.push(wgkv::router::ReplicaHandle {
+            index: r.index,
+            cmds: r.cmds.clone(),
+            occupancy: r.occupancy.clone(),
+        });
+    }
+    let router = std::sync::Arc::new(wgkv::router::Router::new(handles, 64 << 20));
+    let d = std::sync::Arc::new(wgkv::router::Dispatcher::sharded(router.clone(), 0));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    {
+        let addr = addr.clone();
+        let d = d.clone();
+        std::thread::spawn(move || server::serve_dispatcher(&addr, d));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(400));
+
+    // Two keyed sessions: placement is least-loaded, then pinned.
+    let mut client = Client::connect(&addr).expect("connect");
+    let mut rng = Rng::new(112);
+    for key in ["conv-a", "conv-b"] {
+        let c = client
+            .generate(GenerateParams {
+                prompt: workload::gen_kv(&mut rng, 4, 4).prompt,
+                max_new: 4,
+                session_id: Some(key.into()),
+                ..GenerateParams::default()
+            })
+            .expect("turn 1");
+        assert!(c.error.is_none(), "{key}: {:?}", c.error);
+    }
+    // Second turns must land on the same replicas (affinity): both
+    // resume their retained context instead of erroring "unknown".
+    for key in ["conv-a", "conv-b"] {
+        let c = client
+            .generate(GenerateParams {
+                prompt: "\nq: again\na: ".into(),
+                max_new: 4,
+                session_id: Some(key.into()),
+                ..GenerateParams::default()
+            })
+            .expect("turn 2");
+        assert!(c.error.is_none(), "{key}: {:?}", c.error);
+    }
+
+    let stats = client.stats().expect("aggregated stats");
+    assert_eq!(stats.replicas.len(), 2, "stats must expose both shards");
+    assert_eq!(stats.routed_requests, 4);
+    assert_eq!(stats.engine.requests_done, 4, "absorbed engine counters sum across shards");
+    let idle_total: usize = stats.replicas.iter().map(|r| r.idle_sessions).sum();
+    assert_eq!(idle_total, 2, "each session idles on exactly one replica");
+
+    // Cancel routes through the affinity map to the owning replica.
+    assert_eq!(client.cancel("conv-a").expect("cancel"), 0);
+    let stats = client.stats().expect("stats after cancel");
+    assert_eq!(stats.cancel_events, 1);
+    assert!(client.cancel("conv-a").is_err(), "affinity entry must be gone");
+    assert_eq!(stats.migrations, 0, "no park pressure, no migration");
+}

@@ -1,0 +1,432 @@
+//! Property-based tests for the multi-replica router (Design 9): the
+//! placement and migration primitives, the session-affinity state
+//! machine, and the per-client admission gate.
+//!
+//! Five invariants are checked:
+//!
+//! 1. **Placement is sound** — [`pick_replica`] always returns a valid
+//!    argmin with deterministic (lowest-index) tie-breaking, and
+//!    [`plan_migration`] only proposes `(src, dst)` pairs with real
+//!    pressure (src above ¾ of its slice), real headroom (dst below ½),
+//!    and `src != dst`.
+//! 2. **No session is lost or duplicated** — under random interleavings
+//!    of route / park / resume / migrate / cancel against real
+//!    [`ParkedStore`]s, every session created is exactly one of live,
+//!    cancelled, or tombstone-evicted; a parked blob lives in exactly
+//!    one replica's store — the one its affinity entry names.
+//! 3. **The per-replica budget is a hard bound** — each replica's store
+//!    never exceeds its `park_byte_budget` slice, and a migration whose
+//!    import would not fit is refused and re-imported at the source
+//!    (never dropped).
+//! 4. **Migration is token-identical** — a [`SessionSnapshot`] blob
+//!    bounced through arbitrarily many store-to-store migrations
+//!    decodes, restores, and wholesale-syncs a pool lane bit-identical
+//!    to the pre-migration image (the blob is replica-agnostic).
+//! 5. **One replica is the identity** — with a single replica the
+//!    placement is constantly 0, the migration planner never fires, and
+//!    the disabled (`max = 0`) client gate never sheds; the gate at cap
+//!    `c` never admits a client past `c` concurrent permits.
+
+use std::collections::HashMap;
+
+use wgkv::engine::SessionSnapshot;
+use wgkv::kvcache::dual::CacheDims;
+use wgkv::kvcache::SequenceKvCache;
+use wgkv::prop_assert;
+use wgkv::router::{pick_replica, plan_migration, ClientGate, ClientPermit};
+use wgkv::runtime::device_cache::DeviceViewPool;
+use wgkv::runtime::host_tier::ParkedStore;
+use wgkv::runtime::tensor::Tensor;
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+#[test]
+fn pick_replica_is_a_sound_argmin() {
+    forall(0x901, |rng| {
+        let n = rng.usize(1, 9);
+        let loads: Vec<usize> = (0..n).map(|_| rng.usize(0, 100)).collect();
+        let r = pick_replica(&loads);
+        prop_assert!(r < n, "index {r} out of range {n}");
+        let min = *loads.iter().min().unwrap();
+        prop_assert!(loads[r] == min, "picked {r} ({}) but min is {min}", loads[r]);
+        let first_min = loads.iter().position(|&l| l == min).unwrap();
+        prop_assert!(r == first_min, "tie must break to the lowest index ({first_min}, got {r})");
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_migration_proposals_always_have_pressure_and_headroom() {
+    forall(0x902, |rng| {
+        let n = rng.usize(1, 6);
+        let slice = rng.usize(1, 10_000);
+        let parked: Vec<usize> = (0..n).map(|_| rng.usize(0, 2 * slice)).collect();
+        match plan_migration(&parked, slice) {
+            Some((src, dst)) => {
+                prop_assert!(n >= 2, "a single replica must never migrate");
+                prop_assert!(src != dst, "src and dst must differ");
+                prop_assert!(src < n && dst < n, "indices in range");
+                let max = *parked.iter().max().unwrap();
+                let min = *parked.iter().min().unwrap();
+                prop_assert!(parked[src] == max && parked[dst] == min);
+                prop_assert!(
+                    parked[src] > slice * 3 / 4,
+                    "src {} must be above 3/4 of slice {slice}",
+                    parked[src]
+                );
+                prop_assert!(
+                    parked[dst] < slice / 2,
+                    "dst {} must be below 1/2 of slice {slice}",
+                    parked[dst]
+                );
+            }
+            None => {
+                // The refusal must be justified: no (max, min) pair both
+                // pressured and with headroom.
+                if n >= 2 {
+                    let max = *parked.iter().max().unwrap();
+                    let min = *parked.iter().min().unwrap();
+                    let justified =
+                        max <= slice * 3 / 4 || min >= slice / 2 || max == min;
+                    prop_assert!(
+                        justified,
+                        "refused a migratable state: parked {parked:?}, slice {slice}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Where a session currently is, in the model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Sess {
+    /// Device-resident on its affinity replica (not in any store).
+    Idle,
+    /// Parked: its blob must live in exactly its affinity replica's store.
+    Parked { bytes: usize },
+    Cancelled,
+    /// LRU-evicted by an over-pressured store insert — the real
+    /// scheduler tombstones these for a clean error; they are accounted,
+    /// not lost.
+    Evicted,
+}
+
+#[test]
+fn affinity_state_machine_never_loses_or_duplicates_sessions() {
+    forall(0x903, |rng| {
+        let n = rng.usize(2, 5);
+        let slice = rng.usize(4, 12) * 100;
+        let mut stores: Vec<ParkedStore<Vec<u8>>> =
+            (0..n).map(|_| ParkedStore::new(slice)).collect();
+        let mut affinity: HashMap<usize, usize> = HashMap::new();
+        let mut state: Vec<Sess> = Vec::new();
+        let mut tick = 0u64;
+        let mut migrations = 0u64;
+
+        for _ in 0..rng.usize(20, 120) {
+            tick += 1;
+            match rng.usize(0, 5) {
+                // New session routes least-loaded (model load = live
+                // sessions homed on the replica).
+                0 => {
+                    let loads: Vec<usize> = (0..n)
+                        .map(|r| {
+                            affinity
+                                .iter()
+                                .filter(|&(&s, &home)| {
+                                    home == r
+                                        && matches!(
+                                            state[s],
+                                            Sess::Idle | Sess::Parked { .. }
+                                        )
+                                })
+                                .count()
+                        })
+                        .collect();
+                    let r = pick_replica(&loads);
+                    affinity.insert(state.len(), r);
+                    state.push(Sess::Idle);
+                }
+                // A turn for a random live session must find its state
+                // on the affinity replica; a parked one resumes (blob
+                // leaves the store).
+                1 => {
+                    if let Some(s) = pick_live(rng, &state) {
+                        let home = affinity[&s];
+                        if let Sess::Parked { bytes } = state[s] {
+                            let blob = stores[home]
+                                .take(&key(s))
+                                .ok_or_else(|| format!("parked '{s}' missing on its home {home}"))?;
+                            prop_assert!(blob.len() == bytes, "blob changed size while parked");
+                            state[s] = Sess::Idle;
+                        }
+                    }
+                }
+                // Park an idle session into its home store. A refused
+                // insert (budget) leaves it idle; an accepted one may
+                // LRU-evict colder unpinned blobs — those sessions are
+                // tombstoned (Evicted), never silently gone.
+                2 => {
+                    if let Some(s) = pick_live(rng, &state) {
+                        if state[s] == Sess::Idle {
+                            let home = affinity[&s];
+                            let bytes = rng.usize(50, 250);
+                            match stores[home].insert(
+                                &key(s),
+                                vec![s as u8; bytes],
+                                bytes,
+                                false,
+                                tick,
+                            ) {
+                                Ok(evicted) => {
+                                    state[s] = Sess::Parked { bytes };
+                                    for (k, _) in evicted {
+                                        let victim: usize = k.parse().unwrap();
+                                        prop_assert!(
+                                            victim != s,
+                                            "insert evicted the blob it admitted"
+                                        );
+                                        state[victim] = Sess::Evicted;
+                                        affinity.remove(&victim);
+                                    }
+                                }
+                                Err(_) => {} // stays device-resident
+                            }
+                        }
+                    }
+                }
+                // One rebalance step over the real stores.
+                3 => {
+                    let parked: Vec<usize> =
+                        stores.iter().map(ParkedStore::parked_bytes).collect();
+                    if let Some((src, dst)) = plan_migration(&parked, slice) {
+                        let cold = stores[src].coldest_unpinned(tick, 0, 1);
+                        if let Some(k) = cold.first() {
+                            let s: usize = k.parse().unwrap();
+                            let blob = stores[src].take(k).unwrap();
+                            let bytes = blob.len();
+                            if stores[dst].would_fit(bytes) {
+                                let evicted = stores[dst]
+                                    .insert(k, blob, bytes, false, tick)
+                                    .map_err(|_| "would_fit lied".to_string())?;
+                                for (k, _) in evicted {
+                                    let victim: usize = k.parse().unwrap();
+                                    state[victim] = Sess::Evicted;
+                                    affinity.remove(&victim);
+                                }
+                                affinity.insert(s, dst);
+                                migrations += 1;
+                            } else {
+                                // Refused import: the blob goes home —
+                                // it just came out, so it must fit.
+                                stores[src]
+                                    .insert(k, blob, bytes, false, tick)
+                                    .map_err(|_| "re-import at source failed".to_string())?;
+                            }
+                        }
+                    }
+                }
+                // Cancel frees the session everywhere, instantly.
+                _ => {
+                    if let Some(s) = pick_live(rng, &state) {
+                        let home = affinity[&s];
+                        if let Sess::Parked { .. } = state[s] {
+                            prop_assert!(
+                                stores[home].take(&key(s)).is_some(),
+                                "cancel found no blob on the home replica"
+                            );
+                        }
+                        state[s] = Sess::Cancelled;
+                        affinity.remove(&s);
+                    }
+                }
+            }
+
+            // Invariants, every step.
+            for (r, store) in stores.iter().enumerate() {
+                prop_assert!(
+                    store.parked_bytes() <= store.park_byte_budget(),
+                    "replica {r} store over budget"
+                );
+            }
+            for (s, st) in state.iter().enumerate() {
+                let holders: Vec<usize> =
+                    (0..n).filter(|&r| stores[r].contains(&key(s))).collect();
+                match st {
+                    Sess::Parked { .. } => {
+                        prop_assert!(
+                            holders.len() == 1,
+                            "parked '{s}' held by {holders:?} (must be exactly one)"
+                        );
+                        prop_assert!(
+                            holders[0] == affinity[&s],
+                            "parked '{s}' on {} but affinity says {}",
+                            holders[0],
+                            affinity[&s]
+                        );
+                    }
+                    _ => prop_assert!(
+                        holders.is_empty(),
+                        "non-parked '{s}' ({st:?}) still held by {holders:?}"
+                    ),
+                }
+                if matches!(st, Sess::Idle | Sess::Parked { .. }) {
+                    prop_assert!(affinity.contains_key(&s), "live '{s}' lost its affinity");
+                }
+            }
+        }
+        let _ = migrations;
+        Ok(())
+    });
+}
+
+fn key(s: usize) -> String {
+    s.to_string()
+}
+
+fn pick_live(rng: &mut Rng, state: &[Sess]) -> Option<usize> {
+    let live: Vec<usize> = state
+        .iter()
+        .enumerate()
+        .filter(|(_, st)| matches!(st, Sess::Idle | Sess::Parked { .. }))
+        .map(|(s, _)| s)
+        .collect();
+    if live.is_empty() {
+        None
+    } else {
+        Some(*rng.choose(&live))
+    }
+}
+
+fn dims(rng: &mut Rng) -> CacheDims {
+    CacheDims {
+        n_layers: rng.usize(1, 3),
+        n_kv_heads: rng.usize(1, 3),
+        d_head: 4,
+        w_local: rng.usize(2, 6),
+        page_size: rng.usize(2, 5),
+    }
+}
+
+/// Drive a cache through a random history: decode inserts with mixed
+/// promotion gates, occasional evictions, occasional capacity growth.
+fn random_history(rng: &mut Rng, d: CacheDims, cache: &mut SequenceKvCache, steps: usize) {
+    let mut pos = 0i64;
+    for _ in 0..steps {
+        if cache.required_slots() > cache.capacity() {
+            let grown = cache.capacity() + d.page_size * 2;
+            cache.ensure_capacity(grown).unwrap();
+        }
+        let gate = if rng.bool(0.5) { 0.9 } else { 0.1 };
+        let k = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 * 0.7 + gate);
+        let v = Tensor::full(&[d.n_layers, d.n_kv_heads, d.d_head], pos as f32 * 0.3 - gate);
+        let g = Tensor::full(&[d.n_layers, d.n_kv_heads], gate);
+        cache
+            .insert_decoded(&k, &v, &g, pos, |_, _, gg| gg >= 0.5)
+            .unwrap();
+        pos += 1;
+        if rng.bool(0.1) {
+            let l = rng.usize(0, d.n_layers);
+            let h = rng.usize(0, d.n_kv_heads);
+            let n = cache.global_len(l, h);
+            if n > 1 {
+                let keep: Vec<bool> = (0..n).map(|_| rng.bool(0.6)).collect();
+                cache.evict_global(l, h, &keep).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn migrated_blobs_resume_bit_identical() {
+    forall(0x904, |rng| {
+        let d = dims(rng);
+        let cap = d.w_local + d.page_size * rng.usize(1, 4);
+        let mut cache = SequenceKvCache::new(d, cap).unwrap();
+        random_history(rng, d, &mut cache, rng.usize(1, 30));
+        // Pre-migration lane image.
+        let mut pool = DeviceViewPool::new();
+        let lane = pool.checkout(d, cache.capacity());
+        pool.sync_lane(lane, &mut cache).unwrap();
+        let image: Vec<f32> = pool.lane_k(lane).to_vec();
+        pool.release(lane);
+
+        // Bounce the snapshot blob through 1..6 migrations (each hop is
+        // a byte move, exactly what Export/Import carry).
+        let blob = SessionSnapshot::from_cache(cache.snapshot().unwrap()).to_bytes();
+        let mut hop = blob.clone();
+        for _ in 0..rng.usize(1, 6) {
+            let back = SessionSnapshot::from_bytes(&hop)
+                .map_err(|e| format!("mid-migration decode failed: {e:?}"))?;
+            hop = back.to_bytes();
+            prop_assert!(hop == blob, "a migration hop changed the blob bytes");
+        }
+
+        // The migrated session resumes into a lane bit-identical to the
+        // pre-migration image.
+        let back = SessionSnapshot::from_bytes(&hop)
+            .map_err(|e| format!("final decode failed: {e:?}"))?;
+        let cs = back.into_cache();
+        let mut resumed = SequenceKvCache::restore(&cs)
+            .map_err(|e| format!("restore failed: {e:?}"))?;
+        let lane2 = pool.checkout(d, resumed.capacity());
+        let r = pool.sync_lane(lane2, &mut resumed).unwrap();
+        prop_assert!(r.full, "a resumed session re-enters through the wholesale sync");
+        prop_assert!(
+            pool.lane_k(lane2) == &image[..],
+            "migrated session's lane image diverged from the original"
+        );
+        pool.release(lane2);
+        Ok(())
+    });
+}
+
+#[test]
+fn single_replica_is_the_identity_and_the_gate_holds_its_cap() {
+    forall(0x905, |rng| {
+        // One replica: placement constant, planner inert.
+        let load = rng.usize(0, 1000);
+        prop_assert!(pick_replica(&[load]) == 0);
+        prop_assert!(plan_migration(&[load], rng.usize(1, 1000)).is_none());
+
+        // Gate at cap c: a client never holds more than c permits; the
+        // disabled gate never sheds.
+        let cap = rng.usize(1, 5);
+        let gate = ClientGate::new(cap);
+        let clients = ["a", "b", "c"];
+        let mut held: HashMap<&str, Vec<ClientPermit<'_>>> = HashMap::new();
+        let mut model_sheds = 0u64;
+        for _ in 0..rng.usize(10, 60) {
+            let c = *rng.choose(&clients);
+            if rng.bool(0.55) {
+                let n_held = held.get(c).map_or(0, Vec::len);
+                match gate.admit(c) {
+                    Some(p) => {
+                        prop_assert!(n_held < cap, "admitted '{c}' past its cap {cap}");
+                        held.entry(c).or_default().push(p);
+                    }
+                    None => {
+                        prop_assert!(n_held == cap, "shed '{c}' below its cap {cap}");
+                        model_sheds += 1;
+                    }
+                }
+            } else if let Some(v) = held.get_mut(c) {
+                v.pop(); // release one permit
+            }
+        }
+        prop_assert!(
+            gate.shed_count() == model_sheds,
+            "shed count {} != model {model_sheds}",
+            gate.shed_count()
+        );
+        drop(held);
+        let open = ClientGate::new(0);
+        for _ in 0..rng.usize(1, 20) {
+            prop_assert!(open.admit("flood").is_some(), "a disabled gate must never shed");
+        }
+        prop_assert!(open.shed_count() == 0);
+        Ok(())
+    });
+}
