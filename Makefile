@@ -30,7 +30,7 @@ test-fast:
 		--test prop_kvcache --test prop_policies \
 		--test prop_batching --test prop_prefill --test prop_pool \
 		--test prop_park --test prop_spill --test prop_prefix \
-		--test prop_stream --test prop_router
+		--test prop_stream --test prop_router --test prop_trace
 
 # Fault drill: the whole fast tier re-run with the spill-I/O failpoint
 # matrix armed through the same env interface production honors
@@ -45,15 +45,17 @@ test-fault:
 		--test prop_kvcache --test prop_policies \
 		--test prop_batching --test prop_prefill --test prop_pool \
 		--test prop_park --test prop_spill --test prop_prefix \
-		--test prop_stream --test prop_router
+		--test prop_stream --test prop_router --test prop_trace
 
 # Coordinator perf snapshot: prints the hot-path rows and writes
 # rust/BENCH_coordinator.json — machine-readable results plus the
 # persistent-view full-vs-delta upload-bytes counters, the PR 3
 # prefill-batch / defrag counters, the PR 4 lane-compaction counters,
 # the PR 5 parking-tier counters, the PR 6 spill-tier fault-drill
-# counters, the PR 7 shared-prefix counters, and the PR 8 serve-loop
-# counters (timer ticks / stream frames / sheds), tracked across PRs. The greps
+# counters, the PR 7 shared-prefix counters, the PR 8 serve-loop
+# counters (timer ticks / stream frames / sheds), and the PR 10 trace
+# counters (trace_events / dropped_events / tick-phase p90s / audit_ok),
+# tracked across PRs. The greps
 # keep the report's schema honest: a refactor that silently drops a
 # tracked counter fails the bench target, not a later PR's comparison.
 #
@@ -109,6 +111,20 @@ bench:
 		|| { echo "BENCH_coordinator.json: missing stream_frames"; exit 1; }
 	@grep -q '"shed_events"' $(RUST_DIR)/BENCH_coordinator.json \
 		|| { echo "BENCH_coordinator.json: missing shed_events"; exit 1; }
+	@grep -q '"trace_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing trace_events"; exit 1; }
+	@grep -q '"dropped_events"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing dropped_events"; exit 1; }
+	@grep -q '"tick_phase_gather_p90_us"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing tick_phase_gather_p90_us"; exit 1; }
+	@grep -q '"tick_phase_decode_p90_us"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing tick_phase_decode_p90_us"; exit 1; }
+	@grep -q '"audit_ok"' $(RUST_DIR)/BENCH_coordinator.json \
+		|| { echo "BENCH_coordinator.json: missing audit_ok"; exit 1; }
+	@grep -q '"audit_ok"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing audit_ok"; exit 1; }
+	@grep -q '"custody_violations"' $(RUST_DIR)/BENCH_scenarios.json \
+		|| { echo "BENCH_scenarios.json: missing custody_violations"; exit 1; }
 	@grep -q '"routed_requests"' $(RUST_DIR)/BENCH_scenarios.json \
 		|| { echo "BENCH_scenarios.json: missing routed_requests"; exit 1; }
 	@grep -q '"migrations"' $(RUST_DIR)/BENCH_scenarios.json \

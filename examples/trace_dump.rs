@@ -1,0 +1,172 @@
+//! Structured trace timeline dump (Design 10): boots N engine
+//! replicas behind the affinity router, drives keyed chats into park
+//! pressure until the rebalancer live-migrates a session, then pulls
+//! the fleet-merged event stream through the `trace` op and writes a
+//! Chrome trace-event JSON — load it at `ui.perfetto.dev` to see one
+//! track per replica and one async span per session, with the
+//! migrated session's span hopping tracks at the export/import pair.
+//!
+//! The same event stream replays through `TraceAudit`, which must
+//! prove — from events alone — that every session has one home at a
+//! time, every export matches an import byte-for-byte, and every
+//! resume returns exactly the bytes its park banked.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example trace_dump
+//! ```
+//!
+//! The served equivalent of the dump half is
+//! `wgkv client --dump-trace` against any running `wgkv serve`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use wgkv::engine::{Engine, EngineConfig};
+use wgkv::replica::EngineReplica;
+use wgkv::router::{Dispatcher, ReplicaHandle, Router};
+use wgkv::scheduler::SchedulerConfig;
+use wgkv::server::{self, Client, GenerateParams, ServerConfig};
+use wgkv::trace::{chrome_trace_json, TickPhase, TraceAudit, TraceKind, TraceQuery};
+use wgkv::util::{Args, Rng};
+use wgkv::workload;
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let dir = args.str("artifacts", "artifacts");
+    let addr = args.str("addr", "127.0.0.1:7417");
+    let replicas = args.usize("replicas", 2)?.max(1);
+    let sessions = args.usize("sessions", 6)?;
+    let max_new = args.usize("max-new", 6)?;
+    // Deliberately tiny park slice: with every first turn parked on
+    // replica 0 (see below), pressure over 3/4 of the slice plus an
+    // empty sibling forces >= 1 live migration.
+    let park_slice = args.usize("park-slice", 16 * 1024)?;
+    let out = args.str("out", "artifacts/trace_chat.json");
+
+    // Sessions park almost immediately between turns, so the lane
+    // signal the router places by returns to zero after each turn —
+    // every first turn lands on replica 0 and parks there.
+    let cfg = SchedulerConfig {
+        max_active: 2,
+        park_idle_ticks: 2,
+        ..SchedulerConfig::default()
+    };
+    let mut handles = Vec::new();
+    let mut units = Vec::new();
+    for i in 0..replicas {
+        let dir = dir.clone();
+        let r = EngineReplica::spawn(
+            i,
+            move || Engine::load(dir, EngineConfig::default()),
+            cfg,
+            None,
+            ServerConfig::default(),
+        );
+        handles.push(ReplicaHandle {
+            index: r.index,
+            cmds: r.cmds.clone(),
+            occupancy: r.occupancy.clone(),
+        });
+        units.push(r);
+    }
+    let router = Arc::new(Router::new(handles, park_slice));
+    let d = Arc::new(Dispatcher::sharded(router.clone(), 0));
+    {
+        let addr = addr.clone();
+        let d = d.clone();
+        std::thread::spawn(move || server::serve_dispatcher(&addr, d));
+    }
+    std::thread::sleep(Duration::from_millis(400));
+    let mut client = Client::connect(&addr)?;
+
+    // Turn 1 per session, pausing long enough for each to park before
+    // the next arrival routes.
+    let mut rng = Rng::new(41);
+    println!("# {replicas} replicas, {sessions} keyed sessions, park slice {park_slice} B");
+    for s in 0..sessions {
+        let key = format!("conv-{s}");
+        let c = client.generate(GenerateParams {
+            prompt: workload::gen_kv(&mut rng, 4, 3).prompt,
+            max_new,
+            session_id: Some(key.clone()),
+            ..GenerateParams::default()
+        })?;
+        anyhow::ensure!(c.error.is_none(), "{key}: {:?}", c.error);
+        std::thread::sleep(Duration::from_millis(80));
+    }
+
+    // Drain the park pressure by hand (the serve binary runs the same
+    // step on a poll thread): each call migrates at most one blob.
+    let mut migrated = Vec::new();
+    for _ in 0..sessions {
+        match router.rebalance_once() {
+            Some(key) => migrated.push(key),
+            None => break,
+        }
+    }
+    println!("  migrated: {migrated:?}");
+    assert!(
+        replicas < 2 || !migrated.is_empty(),
+        "park pressure must trigger >= 1 live migration"
+    );
+
+    // Turn 2 everywhere: migrated sessions resume on their new home.
+    for s in 0..sessions {
+        let key = format!("conv-{s}");
+        let c = client.generate(GenerateParams {
+            prompt: "\nq: again\na: ".into(),
+            max_new,
+            session_id: Some(key.clone()),
+            ..GenerateParams::default()
+        })?;
+        anyhow::ensure!(c.error.is_none(), "{key}: {:?}", c.error);
+    }
+
+    // Pull the fleet-merged timeline: every replica's ring, causally
+    // sorted, plus the bucket-merged tick-phase histograms.
+    let reply = client.trace(&TraceQuery { max: 65_536, ..TraceQuery::default() })?;
+    println!(
+        "\ntrace: {} events merged ({} recorded, {} dropped, next_seq {})",
+        reply.events.len(),
+        reply.trace_events,
+        reply.dropped_events,
+        reply.next_seq,
+    );
+    for k in TraceKind::ALL {
+        let n = reply.events.iter().filter(|e| e.kind == k).count();
+        if n > 0 {
+            println!("  {:>20} {n}", k.as_str());
+        }
+    }
+    println!(
+        "  tick phases: gather p90 {:.0} us | decode p90 {:.0} us | park p90 {:.0} us",
+        reply.phases.phase(TickPhase::Gather).quantile_us(0.9),
+        reply.phases.phase(TickPhase::Decode).quantile_us(0.9),
+        reply.phases.phase(TickPhase::Park).quantile_us(0.9),
+    );
+
+    // The custody audit re-derives session ownership from the events
+    // alone; any hole in the instrumentation shows up as a violation.
+    let audit = TraceAudit::replay(&reply.events);
+    assert!(audit.ok(), "custody audit failed: {:?}", audit.violations());
+    let exports =
+        reply.events.iter().filter(|e| e.kind == TraceKind::MigrateExport).count();
+    let imports =
+        reply.events.iter().filter(|e| e.kind == TraceKind::MigrateImport).count();
+    assert_eq!(exports, imports, "every export must pair with an import");
+    assert!(
+        exports >= migrated.len(),
+        "each live migration must leave an export/import span pair in the trace"
+    );
+    println!(
+        "  custody audit: ok over {} events, {exports} export/import pairs",
+        audit.events_seen()
+    );
+
+    let json = chrome_trace_json(&reply.events);
+    std::fs::write(&out, json.pretty())?;
+    println!("\nwrote {out} — open in ui.perfetto.dev");
+    drop(units);
+    Ok(())
+}

@@ -1081,6 +1081,75 @@ fn main() {
         }));
     }
 
+    // --- structured tracing (PR 10): the decode hot path pays one
+    // bounded-cost ring append per lifecycle edge — no per-event
+    // allocation beyond the ring (session ids are interned once), no
+    // locks. The row tracks that append; the counters pin the
+    // trace-report schema (`trace_events` / `dropped_events` /
+    // tick-phase p90s / `audit_ok`).
+    {
+        use wgkv::trace::{TickPhase, TickPhases, TraceAudit, TraceKind, TraceQuery, TraceRing};
+
+        let mut ring = TraceRing::new(8192);
+        let mut i = 0u64;
+        report.record(b.run("trace/ring-append", || {
+            // Alternate over a small session set: steady state hits the
+            // intern table, never grows it.
+            let sess = if i % 2 == 0 { "chat-a" } else { "chat-b" };
+            let seq = ring.record(TraceKind::DecodeJoin, sess, 0, i);
+            std::hint::black_box(seq);
+            i += 1;
+        }));
+        report.counter("trace_events", ring.total_events());
+        report.counter("dropped_events", ring.dropped_events());
+        assert_eq!(
+            ring.total_events(),
+            ring.dropped_events() + ring.len() as u64,
+            "ring accounting must balance"
+        );
+
+        // Tick-phase histograms: a shaped synthetic profile (decode
+        // dominates, gather second) exercises the same record/merge
+        // path the replica loop uses, and the p90s land in the report.
+        let mut phases = TickPhases::default();
+        let mut prng = Rng::new(17);
+        for _ in 0..4096 {
+            phases.record_us(TickPhase::Gather, 1.0 + f64::from(prng.f32()) * 40.0);
+            phases.record_us(TickPhase::PrefillPlan, f64::from(prng.f32()) * 8.0);
+            phases.record_us(TickPhase::Decode, 20.0 + f64::from(prng.f32()) * 200.0);
+            phases.record_us(TickPhase::Park, f64::from(prng.f32()) * 4.0);
+            phases.record_us(TickPhase::SpillPoll, f64::from(prng.f32()) * 2.0);
+            phases.record_us(TickPhase::Compact, f64::from(prng.f32()) * 6.0);
+        }
+        report.counter(
+            "tick_phase_gather_p90_us",
+            phases.phase(TickPhase::Gather).quantile_us(0.9),
+        );
+        report.counter(
+            "tick_phase_decode_p90_us",
+            phases.phase(TickPhase::Decode).quantile_us(0.9),
+        );
+
+        // Custody audit over a full recorded lifecycle (park/resume
+        // bytes balanced, one home throughout) plus the hot-path ring
+        // from above.
+        let mut lifecycle = TraceRing::new(256);
+        for (sess, bytes) in [("u-1", 4096u64), ("u-2", 1024)] {
+            lifecycle.record_at(0, TraceKind::Enqueue, sess, 0, 0);
+            lifecycle.record_at(1, TraceKind::Admit, sess, 0, 0);
+            lifecycle.record_at(2, TraceKind::DecodeJoin, sess, 0, 0);
+            lifecycle.record_at(3, TraceKind::Park, sess, bytes, 0);
+            lifecycle.record_at(4, TraceKind::Resume, sess, bytes, 12);
+            lifecycle.record_at(5, TraceKind::Retire, sess, 0, 0);
+        }
+        let wide = TraceQuery { max: usize::MAX, ..TraceQuery::default() };
+        let mut events = lifecycle.collect(&wide);
+        events.extend(ring.collect(&wide));
+        let audit = TraceAudit::replay(&events);
+        assert!(audit.ok(), "bench lifecycle must audit clean: {:?}", audit.violations());
+        report.counter("audit_ok", audit.ok());
+    }
+
     // --- multi-replica chat storm (PR 9): the scenario suite, emitted as
     // its own BENCH_scenarios.json. An engine-free simulation drives the
     // *real* sharding primitives — `router::pick_replica` placement,
@@ -1100,6 +1169,7 @@ fn main() {
         use wgkv::engine::SessionSnapshot;
         use wgkv::metrics::Histogram;
         use wgkv::router::{pick_replica, plan_migration};
+        use wgkv::trace::{TraceAudit, TraceKind, TraceQuery, TraceRing};
 
         let mut scen = BenchReport::new("scenarios");
         let mut rng = Rng::new(13);
@@ -1144,6 +1214,12 @@ fn main() {
             lost: u64,
             completions: u64,
             resume: Histogram,
+            /// PR 10: the storm's full event stream replayed through the
+            /// custody auditor — one home per session, matched
+            /// export/import pairs, park/resume byte balance.
+            audit_ok: bool,
+            custody_violations: u64,
+            trace_events: u64,
         }
 
         let run_storm = |n_replicas: usize| -> Outcome {
@@ -1162,6 +1238,14 @@ fn main() {
             let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_replicas];
             let mut active: Vec<Vec<usize>> = vec![Vec::new(); n_replicas];
             let mut parked_bytes = vec![0usize; n_replicas];
+            // Every lifecycle edge below mirrors into the trace ring
+            // exactly as the replica loop would emit it. Timestamps are
+            // tick * 10 + phase (arrival 0, admit 1, turn-end 5,
+            // rebalance 8) so replay sorting reconstructs the intra-tick
+            // order instead of collapsing a whole tick into one instant.
+            let mut ring = TraceRing::new(65_536);
+            let names: Vec<String> =
+                (0..SESSIONS).map(|s| format!("chat-{s}")).collect();
             let mut o = Outcome {
                 peak_concurrent: 0,
                 peak_per_replica: vec![0; n_replicas],
@@ -1171,6 +1255,9 @@ fn main() {
                 lost: 0,
                 completions: 0,
                 resume: Histogram::new(),
+                audit_ok: false,
+                custody_violations: 0,
+                trace_events: 0,
             };
             for t in 0..MAX_TICKS {
                 // Arrivals / due resumes route through the real placement
@@ -1194,18 +1281,28 @@ fn main() {
                             // A resume promotes the parked blob through
                             // the real codec; the decode *is* the promote
                             // cost the resume_p99_us counter tracks.
+                            ring.set_replica(r as u32);
                             if let Some(blob) = parked_blob[s].take() {
                                 let t0 = std::time::Instant::now();
                                 let back = SessionSnapshot::from_bytes(&blob)
                                     .expect("parked blob must decode");
-                                o.resume.record(t0.elapsed());
+                                let took = t0.elapsed();
+                                o.resume.record(took);
                                 assert_eq!(
                                     back.to_bytes(),
                                     blob,
                                     "resume must be token-identical"
                                 );
                                 parked_bytes[r] -= blob.len();
+                                ring.record_at(
+                                    t as u64 * 10,
+                                    TraceKind::Resume,
+                                    &names[s],
+                                    blob.len() as u64,
+                                    took.as_micros() as u64,
+                                );
                             }
+                            ring.record_at(t as u64 * 10, TraceKind::Enqueue, &names[s], 0, 0);
                             queues[r].push_back(s);
                             st[s] = St::Queued;
                         }
@@ -1216,6 +1313,8 @@ fn main() {
                     while active[r].len() < LANES_PER_REPLICA {
                         let Some(s) = queues[r].pop_front() else { break };
                         st[s] = St::Active { left: TURN_TICKS };
+                        ring.set_replica(r as u32);
+                        ring.record_at(t as u64 * 10 + 1, TraceKind::Admit, &names[s], 0, 0);
                         active[r].push(s);
                     }
                     o.peak_per_replica[r] = o.peak_per_replica[r].max(active[r].len());
@@ -1234,17 +1333,27 @@ fn main() {
                         }
                         turns_done[s] += 1;
                         o.completions += 1;
+                        ring.set_replica(r as u32);
                         if turns_done[s] == TURNS {
                             st[s] = St::Done;
+                            ring.record_at(t as u64 * 10 + 5, TraceKind::Retire, &names[s], 0, 0);
                         } else if s % 7 == 3 {
                             // A deterministic subset of clients abandons
                             // the chat: cancel frees everything now.
                             st[s] = St::Cancelled;
                             o.cancels += 1;
+                            ring.record_at(t as u64 * 10 + 5, TraceKind::Cancel, &names[s], 0, 0);
                         } else {
                             parked_blob[s] = Some(blob_of(s).clone());
                             parked_bytes[r] += blob_of(s).len();
                             st[s] = St::Waiting { due: t + GAP_TICKS };
+                            ring.record_at(
+                                t as u64 * 10 + 5,
+                                TraceKind::Park,
+                                &names[s],
+                                blob_of(s).len() as u64,
+                                0,
+                            );
                         }
                     }
                     active[r] = still;
@@ -1271,6 +1380,25 @@ fn main() {
                         parked_bytes[dst] += blob.len();
                         affinity.insert(s, dst);
                         o.migrations += 1;
+                        // The export/import pair is the cross-replica
+                        // custody handoff the auditor checks for byte
+                        // balance and causal order.
+                        ring.set_replica(src as u32);
+                        ring.record_at(
+                            t as u64 * 10 + 8,
+                            TraceKind::MigrateExport,
+                            &names[s],
+                            blob.len() as u64,
+                            0,
+                        );
+                        ring.set_replica(dst as u32);
+                        ring.record_at(
+                            t as u64 * 10 + 8,
+                            TraceKind::MigrateImport,
+                            &names[s],
+                            blob.len() as u64,
+                            0,
+                        );
                     }
                 }
                 // Soft bound: migration drains one blob per tick, so a
@@ -1290,6 +1418,16 @@ fn main() {
                 .iter()
                 .filter(|s| !matches!(s, St::Done | St::Cancelled))
                 .count() as u64;
+            // Replay the whole storm through the custody auditor. The
+            // ring must not have wrapped (a dropped event would blind
+            // the audit), and the event stream alone must prove one
+            // home per session, matched export/import bytes, and
+            // park/resume byte balance.
+            let wide = TraceQuery { max: usize::MAX, ..TraceQuery::default() };
+            let audit = TraceAudit::replay(&ring.collect(&wide));
+            o.audit_ok = audit.ok() && ring.dropped_events() == 0;
+            o.custody_violations = audit.violations().len() as u64;
+            o.trace_events = ring.total_events();
             o
         };
 
@@ -1321,6 +1459,13 @@ fn main() {
         assert_eq!(n1.lost + n2.lost, 0, "no request may be lost in either run");
         assert!(n1.migrations == 0, "a single replica has nowhere to migrate");
         assert!(n2.cancels >= 1 && n1.cancels == n2.cancels, "cancel schedule is load-independent");
+        assert!(
+            n1.audit_ok && n2.audit_ok,
+            "trace custody audit must pass for both runs \
+             (n1 violations {}, n2 violations {})",
+            n1.custody_violations,
+            n2.custody_violations
+        );
         scen.counter("chat_storm_sessions", SESSIONS);
         scen.counter("chat_storm_turns", TURNS);
         scen.counter("lanes_per_replica", LANES_PER_REPLICA);
@@ -1335,6 +1480,9 @@ fn main() {
         scen.counter("completions", n2.completions);
         scen.counter("resume_p99_us", n2.resume.quantile_us(0.99));
         scen.counter("resume_mean_us", n2.resume.mean_us());
+        scen.counter("trace_events", n2.trace_events);
+        scen.counter("audit_ok", n1.audit_ok && n2.audit_ok);
+        scen.counter("custody_violations", n1.custody_violations + n2.custody_violations);
         scen.counter(
             "chat_storm_ok",
             n2.peak_concurrent > n1.peak_concurrent && n2.migrations >= 1 && n2.lost == 0,

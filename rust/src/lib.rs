@@ -22,7 +22,9 @@
 //!   ([`scheduler`], [`runtime::host_tier`]), engine shards behind a
 //!   session-affinity router with spill-blob live migration
 //!   ([`replica`], [`router`]), a threaded TCP JSON-lines
-//!   server ([`server`]), workload generators ([`workload`]), and the
+//!   server ([`server`]), structured lifecycle tracing with tick-phase
+//!   profiling and a custody auditor ([`trace`]), workload generators
+//!   ([`workload`]), and the
 //!   H200 analytic cost model used to reproduce the paper's latency/memory
 //!   figures ([`costmodel`]).
 //!
@@ -81,6 +83,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod selection;
 pub mod server;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -37,6 +37,8 @@ USAGE:
   wgkv costmodel [--model llama|qwen]
   wgkv info      [--artifacts DIR]
   wgkv client    [--addr HOST:PORT] --prompt TEXT [--max-new N] [--stream] [POLICY]
+  wgkv client    [--addr HOST:PORT] --dump-trace [--since-seq N] [--trace-session S]
+                 [--trace-kind K] [--trace-max N]
 
 POLICY flags:
   --policy wg-kv|full|local|duo|random   (default wg-kv)
@@ -82,6 +84,20 @@ client streaming:
   --stream                  print token frames as they arrive instead of
                             waiting for the buffered completion (the
                             frames concatenate to the identical text)
+
+client tracing:
+  --dump-trace              fetch the server's lifecycle trace ring and
+                            print Chrome trace-event JSON on stdout
+                            (load into Perfetto / chrome://tracing: one
+                            track per replica, one async span per
+                            session lifetime, matched arrows per
+                            cross-replica migration)
+  --since-seq N             only events with seq >= N (resume a poll)
+  --trace-session S         only events for session S
+  --trace-kind K            only events of one kind (e.g. 'park',
+                            'migrate_export'; see docs/ARCHITECTURE.md
+                            for the taxonomy)
+  --trace-max N             reply bound (default 65536, server-clamped)
 
 serve parking tier:
   --park-byte-budget BYTES  host budget for parked session blobs
@@ -365,6 +381,9 @@ fn info(args: &Args) -> Result<()> {
 
 fn client(args: &Args) -> Result<()> {
     let addr = args.str("addr", "127.0.0.1:7077");
+    if args.bool("dump-trace")? {
+        return dump_trace(args, &addr);
+    }
     let prompt = args
         .str_opt("prompt")
         .ok_or_else(|| anyhow::anyhow!("--prompt is required"))?;
@@ -397,6 +416,36 @@ fn client(args: &Args) -> Result<()> {
         c.prefill_us / 1e3,
         c.decode_us_mean / 1e3,
         c.cache_fraction * 100.0
+    );
+    Ok(())
+}
+
+/// `wgkv client --dump-trace`: fetch the (fleet-merged, causally
+/// ordered) lifecycle trace ring from a running server and print Chrome
+/// trace-event JSON on stdout; counters go to stderr so the JSON pipes
+/// cleanly into a file or Perfetto.
+fn dump_trace(args: &Args, addr: &str) -> Result<()> {
+    let mut q = wgkv::trace::TraceQuery {
+        since_seq: args.u64("since-seq", 0)?,
+        session: args.str_opt("trace-session"),
+        kind: None,
+        max: args.usize("trace-max", 65_536)?,
+    };
+    if let Some(k) = args.str_opt("trace-kind") {
+        q.kind = Some(
+            wgkv::trace::TraceKind::parse(&k)
+                .ok_or_else(|| anyhow::anyhow!("--trace-kind: unknown kind '{k}'"))?,
+        );
+    }
+    let mut client = server::Client::connect(addr)?;
+    let reply = client.trace(&q)?;
+    println!("{}", wgkv::trace::chrome_trace_json(&reply.events).pretty());
+    eprintln!(
+        "[trace: {} events dumped | {} recorded | {} dropped | next_seq {}]",
+        reply.events.len(),
+        reply.trace_events,
+        reply.dropped_events,
+        reply.next_seq
     );
     Ok(())
 }

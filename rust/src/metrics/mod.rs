@@ -4,21 +4,37 @@
 //! `stats` op and every benchmark harness serialize a [`MetricsSnapshot`]
 //! as JSON. Histograms use log-spaced latency buckets so one layout covers
 //! microsecond cache ops and second-scale prefills.
+//!
+//! Snapshots carry the **raw histogram buckets**, not just their summary
+//! quantiles: the router's aggregated `stats` view merges per-replica
+//! snapshots bucket-wise ([`Histogram::merge`] inside
+//! [`MetricsSnapshot::absorb`]), so fleet-level `resume_p99_us` /
+//! `decode_p90_us` are true quantiles of the pooled distribution rather
+//! than an element-wise max of per-replica summaries (which over-reports
+//! whenever one small replica has a fat tail).
+#![warn(missing_docs)]
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 
 /// Log-spaced histogram: buckets at `1us * 2^i`, i in `0..=NUM_BUCKETS`.
 const NUM_BUCKETS: usize = 32;
 
 /// Latency histogram with streaming mean/min/max.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
-    /// Count per log bucket; index i covers `[2^i, 2^(i+1))` microseconds.
+    /// Count per log bucket; index 0 covers `[0, 2)` microseconds (all
+    /// sub-microsecond samples land here), index i ≥ 1 covers
+    /// `[2^i, 2^(i+1))` microseconds.
     pub buckets: Vec<u64>,
+    /// Samples recorded.
     pub count: u64,
+    /// Sum of all recorded samples, microseconds.
     pub sum_us: f64,
+    /// Smallest recorded sample (`f64::INFINITY` while empty).
     pub min_us: f64,
+    /// Largest recorded sample.
     pub max_us: f64,
 }
 
@@ -35,15 +51,18 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one duration sample.
     pub fn record(&mut self, d: Duration) {
         let us = d.as_secs_f64() * 1e6;
         self.record_us(us);
     }
 
+    /// Record one sample, in microseconds.
     pub fn record_us(&mut self, us: f64) {
         let idx = if us < 1.0 {
             0
@@ -57,6 +76,7 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Mean of all recorded samples (0 while empty).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -66,6 +86,11 @@ impl Histogram {
     }
 
     /// Approximate quantile from the log buckets (upper bucket edge).
+    ///
+    /// Bucket 0 absorbs every sample below 1 µs as well as `[1, 2)` µs,
+    /// so its reported edge is clamped to `1.0` — the bucket's nominal
+    /// upper power-of-two edge (`2.0`) would over-report a distribution
+    /// of sub-microsecond samples by an unbounded factor.
     pub fn quantile_us(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -75,14 +100,70 @@ impl Histogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return 2f64.powi(i as i32 + 1);
+                return if i == 0 { 1.0 } else { 2f64.powi(i as i32 + 1) };
             }
         }
         self.max_us
     }
 
+    /// True while no sample has been recorded.
     pub fn is_empty(&self) -> bool {
         self.count == 0
+    }
+
+    /// Fold another histogram into this one: buckets add element-wise,
+    /// `count`/`sum_us` add, `min_us`/`max_us` take the min/max. The
+    /// merged histogram answers quantile queries for the **pooled**
+    /// distribution — the basis of lossless cross-replica latency
+    /// aggregation.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, &b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Serialize for the snapshot wire format. `min_us` is emitted only
+    /// for a non-empty histogram (the empty sentinel is `f64::INFINITY`,
+    /// which JSON cannot carry); an empty histogram round-trips through
+    /// `count == 0` alone.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj()
+            .set("count", self.count)
+            .set("sum_us", self.sum_us)
+            .set("max_us", self.max_us)
+            .set(
+                "buckets",
+                self.buckets.iter().map(|&c| c as f64).collect::<Vec<f64>>(),
+            );
+        if self.count > 0 {
+            o = o.set("min_us", self.min_us);
+        }
+        o
+    }
+
+    /// Rebuild from [`Histogram::to_json`] output. A missing or
+    /// `count == 0` payload — including one from a pre-bucket snapshot —
+    /// decodes to the empty histogram.
+    pub fn from_json(j: &Json) -> Self {
+        let count = j.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if count == 0 {
+            return Self::default();
+        }
+        let mut h = Self::default();
+        h.count = count;
+        h.sum_us = j.get("sum_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        h.min_us = j.get("min_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        h.max_us = j.get("max_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if let Some(arr) = j.get("buckets").and_then(|v| v.as_arr()) {
+            for (slot, b) in h.buckets.iter_mut().zip(arr.iter()) {
+                *slot = b.as_f64().unwrap_or(0.0) as u64;
+            }
+        }
+        h
     }
 }
 
@@ -93,6 +174,7 @@ pub struct Timer<'a> {
 }
 
 impl<'a> Timer<'a> {
+    /// Start timing; the elapsed time lands in `hist` when this drops.
     pub fn new(hist: &'a mut Histogram) -> Self {
         Self { hist, start: Instant::now() }
     }
@@ -222,6 +304,7 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
+    /// Fresh all-zero metrics.
     pub fn new() -> Self {
         Self::default()
     }
@@ -236,6 +319,9 @@ impl EngineMetrics {
         }
     }
 
+    /// Flatten into the JSON-friendly snapshot the `stats` op serves.
+    /// The raw latency histograms ride along (cloned), so a downstream
+    /// aggregator can merge true distributions.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests_done: self.requests_done,
@@ -282,6 +368,10 @@ impl EngineMetrics {
             cancel_events: self.cancel_events,
             migrations_in: self.migrations_in,
             migrations_out: self.migrations_out,
+            prefill_hist: self.prefill.clone(),
+            decode_hist: self.decode_step.clone(),
+            cache_update_hist: self.cache_update.clone(),
+            resume_hist: self.resume_latency.clone(),
         }
     }
 
@@ -307,68 +397,117 @@ impl EngineMetrics {
 /// Flat, JSON-friendly view served by the `stats` API op.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests fully served.
     pub requests_done: u64,
+    /// Prompt tokens processed.
     pub prompt_tokens: u64,
+    /// Tokens generated.
     pub generated_tokens: u64,
+    /// Mean end-to-end prefill latency, µs.
     pub prefill_mean_us: f64,
+    /// p90 end-to-end prefill latency, µs.
     pub prefill_p90_us: f64,
+    /// Mean per-token decode-step latency, µs.
     pub decode_mean_us: f64,
+    /// p90 per-token decode-step latency, µs.
     pub decode_p90_us: f64,
+    /// Decode throughput implied by the decode histogram, tokens/s.
     pub decode_tok_per_s: f64,
+    /// Mean host-side cache-update latency inside a decode step, µs.
     pub cache_update_mean_us: f64,
+    /// Eviction triggers observed.
     pub eviction_triggers: u64,
+    /// Host→device bytes shipped by persistent-view syncs.
     pub upload_bytes: u64,
+    /// Wholesale-equivalent baseline bytes for the delta comparison.
     pub upload_full_equiv_bytes: u64,
+    /// Persistent-view delta syncs performed.
     pub view_delta_uploads: u64,
+    /// Persistent-view wholesale uploads.
     pub view_full_uploads: u64,
+    /// Fused batched-decode steps executed.
     pub batch_steps: u64,
+    /// Lanes decoded across all batched steps.
     pub batch_lanes: u64,
+    /// Batched prefill passes executed.
     pub prefill_batch_steps: u64,
+    /// Sessions prefilled across all batched passes.
     pub prefill_batch_lanes: u64,
+    /// Pool defrag events that reclaimed bytes.
     pub defrag_events: u64,
+    /// Pool compaction passes that moved lanes or reclaimed bytes.
     pub compaction_events: u64,
+    /// Bound lanes re-indexed into interior holes by compaction.
     pub lane_moves: u64,
+    /// Staged bytes copied lane-to-lane by compaction moves.
     pub lane_move_bytes: u64,
+    /// Sessions parked to the host tier.
     pub park_events: u64,
+    /// Sessions resumed from the host tier.
     pub resume_events: u64,
+    /// Host bytes currently pinned by parked session blobs.
     pub parked_bytes: u64,
+    /// Session blobs committed to the disk spill tier.
     pub spill_events: u64,
+    /// Session blobs promoted back from disk.
     pub promote_events: u64,
+    /// Disk bytes currently charged to the spill tier.
     pub spilled_bytes: u64,
+    /// Demotions shed by the spill tier.
     pub spill_shed_events: u64,
+    /// Faults fired by the armed failpoint plan.
     pub io_faults_injected: u64,
+    /// Transient spill I/O faults absorbed by bounded retry.
     pub io_retries: u64,
+    /// Blobs quarantined at promote.
     pub quarantined_sessions: u64,
+    /// Prompts that bound an already-admitted shared prefix.
     pub prefix_hits: u64,
+    /// Pages live in the engine-wide shared-prefix pool.
     pub shared_pages: u64,
+    /// Shared tail pages copy-on-write-cloned at divergence.
     pub cow_clones: u64,
+    /// Private paged-pool bytes binders avoided allocating.
     pub shared_bytes_saved: u64,
+    /// Scheduler ticks fired by the server's timer alone.
     pub ticks_idle: u64,
+    /// Incremental token frames emitted to streaming reply channels.
     pub stream_frames: u64,
+    /// Commands refused at the bounded command channel.
     pub shed_events: u64,
+    /// Mean per-resume promote latency, µs.
     pub resume_mean_us: f64,
+    /// p99 per-resume promote latency, µs.
     pub resume_p99_us: f64,
+    /// Sessions cancelled through the first-class `cancel` op.
     pub cancel_events: u64,
+    /// Parked session blobs imported from another replica.
     pub migrations_in: u64,
+    /// Parked session blobs exported to another replica.
     pub migrations_out: u64,
+    /// Raw prefill-latency histogram (merges bucket-wise in `absorb`).
+    pub prefill_hist: Histogram,
+    /// Raw per-token decode-step latency histogram.
+    pub decode_hist: Histogram,
+    /// Raw cache-update latency histogram.
+    pub cache_update_hist: Histogram,
+    /// Raw per-resume promote latency histogram.
+    pub resume_hist: Histogram,
 }
 
 impl MetricsSnapshot {
     /// Fold another replica's snapshot into this one (the router's
-    /// aggregated `stats` view): counters and gauges are summed;
-    /// latency summaries (`*_us`, `decode_tok_per_s`) take the
-    /// element-wise max — a conservative cross-replica bound, since the
-    /// underlying histograms live on their replica threads.
+    /// aggregated `stats` view): counters and gauges are summed, the raw
+    /// latency histograms merge **bucket-wise**, and the latency
+    /// summaries (`*_mean_us`, `*_p90_us`/`*_p99_us`,
+    /// `decode_tok_per_s`) are recomputed from the pooled distributions.
+    /// A legacy snapshot with no raw buckets (`count == 0` histograms,
+    /// e.g. parsed from a pre-bucket peer) degrades to the old
+    /// element-wise-max bound for the summaries instead.
     pub fn absorb(&mut self, other: &MetricsSnapshot) {
         self.requests_done += other.requests_done;
         self.prompt_tokens += other.prompt_tokens;
         self.generated_tokens += other.generated_tokens;
-        self.prefill_mean_us = self.prefill_mean_us.max(other.prefill_mean_us);
-        self.prefill_p90_us = self.prefill_p90_us.max(other.prefill_p90_us);
-        self.decode_mean_us = self.decode_mean_us.max(other.decode_mean_us);
-        self.decode_p90_us = self.decode_p90_us.max(other.decode_p90_us);
-        self.decode_tok_per_s = self.decode_tok_per_s.max(other.decode_tok_per_s);
-        self.cache_update_mean_us = self.cache_update_mean_us.max(other.cache_update_mean_us);
         self.eviction_triggers += other.eviction_triggers;
         self.upload_bytes += other.upload_bytes;
         self.upload_full_equiv_bytes += other.upload_full_equiv_bytes;
@@ -399,14 +538,49 @@ impl MetricsSnapshot {
         self.ticks_idle += other.ticks_idle;
         self.stream_frames += other.stream_frames;
         self.shed_events += other.shed_events;
-        self.resume_mean_us = self.resume_mean_us.max(other.resume_mean_us);
-        self.resume_p99_us = self.resume_p99_us.max(other.resume_p99_us);
         self.cancel_events += other.cancel_events;
         self.migrations_in += other.migrations_in;
         self.migrations_out += other.migrations_out;
+
+        self.prefill_hist.merge(&other.prefill_hist);
+        self.decode_hist.merge(&other.decode_hist);
+        self.cache_update_hist.merge(&other.cache_update_hist);
+        self.resume_hist.merge(&other.resume_hist);
+
+        if self.prefill_hist.count > 0 {
+            self.prefill_mean_us = self.prefill_hist.mean_us();
+            self.prefill_p90_us = self.prefill_hist.quantile_us(0.9);
+        } else {
+            self.prefill_mean_us = self.prefill_mean_us.max(other.prefill_mean_us);
+            self.prefill_p90_us = self.prefill_p90_us.max(other.prefill_p90_us);
+        }
+        if self.decode_hist.count > 0 {
+            self.decode_mean_us = self.decode_hist.mean_us();
+            self.decode_p90_us = self.decode_hist.quantile_us(0.9);
+            self.decode_tok_per_s = 1e6 / self.decode_hist.mean_us();
+        } else {
+            self.decode_mean_us = self.decode_mean_us.max(other.decode_mean_us);
+            self.decode_p90_us = self.decode_p90_us.max(other.decode_p90_us);
+            self.decode_tok_per_s = self.decode_tok_per_s.max(other.decode_tok_per_s);
+        }
+        if self.cache_update_hist.count > 0 {
+            self.cache_update_mean_us = self.cache_update_hist.mean_us();
+        } else {
+            self.cache_update_mean_us =
+                self.cache_update_mean_us.max(other.cache_update_mean_us);
+        }
+        if self.resume_hist.count > 0 {
+            self.resume_mean_us = self.resume_hist.mean_us();
+            self.resume_p99_us = self.resume_hist.quantile_us(0.99);
+        } else {
+            self.resume_mean_us = self.resume_mean_us.max(other.resume_mean_us);
+            self.resume_p99_us = self.resume_p99_us.max(other.resume_p99_us);
+        }
     }
-    pub fn to_json(&self) -> crate::util::json::Json {
-        crate::util::json::Json::obj()
+
+    /// Serialize for the `stats` wire reply (raw buckets included).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
             .set("requests_done", self.requests_done)
             .set("prompt_tokens", self.prompt_tokens)
             .set("generated_tokens", self.generated_tokens)
@@ -451,10 +625,19 @@ impl MetricsSnapshot {
             .set("cancel_events", self.cancel_events)
             .set("migrations_in", self.migrations_in)
             .set("migrations_out", self.migrations_out)
+            .set("prefill_hist", self.prefill_hist.to_json())
+            .set("decode_hist", self.decode_hist.to_json())
+            .set("cache_update_hist", self.cache_update_hist.to_json())
+            .set("resume_hist", self.resume_hist.to_json())
     }
 
-    pub fn from_json(j: &crate::util::json::Json) -> Self {
+    /// Rebuild from [`MetricsSnapshot::to_json`] output. Histogram
+    /// payloads are optional: a legacy snapshot without them decodes
+    /// with empty histograms (and `absorb` then falls back to the
+    /// element-wise-max summary bound).
+    pub fn from_json(j: &Json) -> Self {
         let f = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let h = |k: &str| j.get(k).map(Histogram::from_json).unwrap_or_default();
         Self {
             requests_done: f("requests_done") as u64,
             prompt_tokens: f("prompt_tokens") as u64,
@@ -500,6 +683,10 @@ impl MetricsSnapshot {
             cancel_events: f("cancel_events") as u64,
             migrations_in: f("migrations_in") as u64,
             migrations_out: f("migrations_out") as u64,
+            prefill_hist: h("prefill_hist"),
+            decode_hist: h("decode_hist"),
+            cache_update_hist: h("cache_update_hist"),
+            resume_hist: h("resume_hist"),
         }
     }
 }
@@ -541,12 +728,75 @@ mod tests {
     }
 
     #[test]
+    fn sub_microsecond_quantile_clamps_to_one_us() {
+        // Regression: bucket 0 absorbs `us < 1.0` samples, but the
+        // reported quantile edge used to be the nominal power-of-two
+        // edge 2.0 — a 10x+ over-report for a ring-append-scale
+        // distribution. The edge is clamped to 1.0.
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record_us(0.05);
+        }
+        assert_eq!(h.quantile_us(0.5), 1.0);
+        assert_eq!(h.quantile_us(0.99), 1.0);
+        // Samples past bucket 0 keep their power-of-two upper edge.
+        let mut mixed = Histogram::new();
+        mixed.record_us(0.5);
+        mixed.record_us(3.0);
+        assert_eq!(mixed.quantile_us(0.25), 1.0);
+        assert_eq!(mixed.quantile_us(1.0), 4.0);
+    }
+
+    #[test]
     fn timer_records_on_drop() {
         let mut h = Histogram::new();
         {
             let _t = Timer::new(&mut h);
         }
         assert_eq!(h.count, 1);
+    }
+
+    #[test]
+    fn histogram_merge_pools_the_distribution() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut pooled = Histogram::new();
+        for i in 0..200 {
+            let us = 10.0 + i as f64;
+            a.record_us(us);
+            pooled.record_us(us);
+        }
+        for i in 0..20 {
+            let us = 5000.0 + i as f64;
+            b.record_us(us);
+            pooled.record_us(us);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count, pooled.count);
+        assert_eq!(merged.buckets, pooled.buckets);
+        assert!((merged.sum_us - pooled.sum_us).abs() < 1e-6);
+        assert_eq!(merged.min_us, pooled.min_us);
+        assert_eq!(merged.max_us, pooled.max_us);
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(merged.quantile_us(q), pooled.quantile_us(q));
+        }
+    }
+
+    #[test]
+    fn histogram_json_roundtrips_including_empty() {
+        let mut h = Histogram::new();
+        h.record_us(0.3);
+        h.record_us(17.0);
+        h.record_us(90_000.0);
+        let back = Histogram::from_json(&Json::parse(&h.to_json().dump()).unwrap());
+        assert_eq!(back, h);
+        // Empty: min_us is the INFINITY sentinel, which JSON cannot
+        // carry — the round trip must rebuild the canonical empty.
+        let empty = Histogram::new();
+        let back = Histogram::from_json(&Json::parse(&empty.to_json().dump()).unwrap());
+        assert_eq!(back, empty);
+        assert!(back.min_us.is_infinite());
     }
 
     #[test]
@@ -568,19 +818,24 @@ mod tests {
         m.ticks_idle = 11;
         m.stream_frames = 42;
         m.shed_events = 3;
+        m.prefill.record_us(900.0);
+        m.cache_update.record_us(7.5);
         m.resume_latency.record_us(64.0);
         m.cancel_events = 4;
         m.migrations_in = 2;
         m.migrations_out = 3;
         let s = m.snapshot();
         assert!(s.resume_p99_us > 0.0);
+        assert_eq!(s.decode_hist.count, 1, "raw buckets must ride the snapshot");
         let j = s.to_json().dump();
-        let back = MetricsSnapshot::from_json(&crate::util::json::Json::parse(&j).unwrap());
+        let back = MetricsSnapshot::from_json(&Json::parse(&j).unwrap());
         assert_eq!(back, s);
     }
 
     #[test]
-    fn absorb_sums_counters_and_maxes_latencies() {
+    fn absorb_sums_counters_and_falls_back_to_max_without_buckets() {
+        // Legacy peers (no raw buckets) keep the conservative
+        // element-wise-max summary bound.
         let mut a = MetricsSnapshot::default();
         a.requests_done = 3;
         a.parked_bytes = 100;
@@ -603,6 +858,46 @@ mod tests {
         assert_eq!(a.migrations_out, 1);
         assert_eq!(a.decode_mean_us, 80.0);
         assert_eq!(a.resume_p99_us, 128.0);
+    }
+
+    #[test]
+    fn absorb_merges_buckets_into_pooled_quantiles() {
+        // Replica A: 1000 fast resumes (~100 µs). Replica B: 10 slow
+        // ones (~1000 µs). The pooled p99 over 1010 samples falls in
+        // A's bucket (128 µs edge); the old max-of-per-replica-p99s
+        // reported B's 1024 µs edge — an 8x over-report driven by a
+        // replica holding 1% of the traffic.
+        let mut ma = EngineMetrics::new();
+        for _ in 0..1000 {
+            ma.resume_latency.record_us(100.0);
+            ma.decode_step.record_us(100.0);
+        }
+        let mut mb = EngineMetrics::new();
+        for _ in 0..10 {
+            mb.resume_latency.record_us(1000.0);
+            mb.decode_step.record_us(1000.0);
+        }
+        let mut a = ma.snapshot();
+        let b = mb.snapshot();
+        let naive_max = a.resume_p99_us.max(b.resume_p99_us);
+        a.absorb(&b);
+        let mut pooled = ma.resume_latency.clone();
+        pooled.merge(&mb.resume_latency);
+        assert_eq!(a.resume_p99_us, pooled.quantile_us(0.99));
+        assert_eq!(a.resume_p99_us, 128.0);
+        assert!(a.resume_p99_us < naive_max, "pooled p99 must undercut max-of-p99s");
+        // The merged summaries survive a wire round trip (the router
+        // aggregates snapshots parsed from replica JSON).
+        let back = MetricsSnapshot::from_json(&Json::parse(&a.to_json().dump()).unwrap());
+        assert_eq!(back, a);
+        assert!((a.decode_mean_us - pooled_mean(&ma, &mb)).abs() < 1e-9);
+        assert!((a.decode_tok_per_s - 1e6 / a.decode_mean_us).abs() < 1e-9);
+    }
+
+    fn pooled_mean(a: &EngineMetrics, b: &EngineMetrics) -> f64 {
+        let mut h = a.decode_step.clone();
+        h.merge(&b.decode_step);
+        h.mean_us()
     }
 
     #[test]

@@ -31,12 +31,13 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::engine::Engine;
 use crate::scheduler::{Completion, Request, Scheduler, SchedulerConfig};
+use crate::trace::{TickPhase, TraceKind};
 use crate::server::{
     command_channel, error_code, gather_commands, Command, CommandSender, ServerConfig,
     ServerError, ServerStats, SpillSetup, StreamEvent,
@@ -151,7 +152,7 @@ impl EngineReplica {
         let occ = occupancy.clone();
         let handle = std::thread::Builder::new()
             .name(format!("wgkv-replica-{index}"))
-            .spawn(move || run_engine_loop(make_engine, cfg, spill, srv, rx, shed, occ))
+            .spawn(move || run_engine_loop(index, make_engine, cfg, spill, srv, rx, shed, occ))
             .expect("spawning a replica thread never fails on a healthy host");
         Self { index, cmds: tx, occupancy, handle }
     }
@@ -201,6 +202,9 @@ pub fn build_stats(sched: &Scheduler, engine: &mut Engine) -> ServerStats {
         routed_requests: 0,
         migrations: 0,
         client_shed_events: 0,
+        // Stamped by the replica loop before every send; `build_stats`
+        // itself has no access to the broadcast counter.
+        seq: 0,
         replicas: Vec::new(),
         engine: snapshot,
     }
@@ -233,6 +237,9 @@ pub(crate) fn fail_command(cmd: Command, msg: &str) {
         Command::Import(_, _, reply) => {
             let _ = reply.send(Err(err()));
         }
+        Command::Trace(_, reply) => {
+            let _ = reply.send(Err(err()));
+        }
     }
 }
 
@@ -260,7 +267,9 @@ pub(crate) fn error_completion(id: u64, msg: &str) -> Completion {
 /// to live inline in `server::spawn_engine_thread_with_spill`, moved
 /// here verbatim (plus the cancel/migration arms and the occupancy
 /// publish) so `--replicas 1` stays bit-identical to the old path.
+#[allow(clippy::too_many_arguments)]
 fn run_engine_loop<F>(
+    index: usize,
     make_engine: F,
     cfg: SchedulerConfig,
     spill: Option<SpillSetup>,
@@ -286,6 +295,7 @@ where
         }
     };
     let mut sched = Scheduler::new(cfg);
+    sched.trace_mut().set_replica(index as u32);
     if let Some(s) = spill {
         if let Err(e) = sched.attach_spill(&s.dir, s.failpoints) {
             eprintln!(
@@ -308,15 +318,35 @@ where
     // heartbeat per in-flight request, so probing every pass would
     // double reply traffic for nothing.
     const REAP_EVERY: u32 = 32;
+    // Broadcast sequence: incremented once per `subscribe_stats` fanout
+    // so an observer that sees seq jump by more than one knows exactly
+    // how many snapshots it missed (bounded channel drops, slow reader).
+    let mut broadcast_seq: u64 = 0;
+    // Last channel-shed count folded into the trace, so each pass emits
+    // one Shed event carrying only the delta.
+    let mut last_shed: u64 = 0;
     loop {
+        // Gather is a real scheduler phase: on a loaded replica it is
+        // pure channel drain, on a quiet one it includes the idle wait
+        // for the tick timer — both belong in the tick breakdown.
+        let t_gather = Instant::now();
         let g = gather_commands(&rx, sched.is_idle(), srv.tick_interval, BATCH_GATHER);
+        sched.record_phase_us(TickPhase::Gather, t_gather.elapsed().as_secs_f64() * 1e6);
         if g.disconnected && g.commands.is_empty() && sched.is_idle() {
             // All senders gone and nothing left to decode: exit. Tier
             // descent past this point serves nobody — the process is
             // shutting down.
             break;
         }
-        engine.metrics.shed_events = shed.load(Ordering::Relaxed);
+        let shed_now = shed.load(Ordering::Relaxed);
+        engine.metrics.shed_events = shed_now;
+        if shed_now > last_shed {
+            // Channel-level sheds happen on the sender side where no
+            // session key exists yet; one anonymous event per pass
+            // carries the count in the bytes slot.
+            sched.trace_mut().record(TraceKind::Shed, "", shed_now - last_shed, 0);
+            last_shed = shed_now;
+        }
         let had_commands = !g.commands.is_empty();
         for cmd in g.commands {
             match cmd {
@@ -350,14 +380,23 @@ where
                     }
                 }
                 Command::Stats(reply) => {
-                    let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
+                    let mut s = build_stats(&sched, &mut engine);
+                    s.seq = broadcast_seq;
+                    let _ = reply.send(Ok(s));
                 }
                 Command::SubscribeStats(reply) => {
                     // Seed the subscription with a snapshot so an
                     // observer on a fully quiet server sees one line
-                    // immediately.
-                    let _ = reply.send(Ok(build_stats(&sched, &mut engine)));
+                    // immediately. The seed carries the current
+                    // broadcast seq, so the very first pushed snapshot
+                    // (seq + 1) already gap-checks cleanly.
+                    let mut s = build_stats(&sched, &mut engine);
+                    s.seq = broadcast_seq;
+                    let _ = reply.send(Ok(s));
                     subscribers.push(reply);
+                }
+                Command::Trace(q, reply) => {
+                    let _ = reply.send(Ok(sched.trace_query(&q)));
                 }
                 Command::Park(key, reply) => {
                     let _ =
@@ -447,7 +486,9 @@ where
         }
         occ.refresh(&sched);
         if !subscribers.is_empty() && (step_now || had_commands || g.timer_fired) {
-            let stats = build_stats(&sched, &mut engine);
+            broadcast_seq += 1;
+            let mut stats = build_stats(&sched, &mut engine);
+            stats.seq = broadcast_seq;
             subscribers.retain(|s| s.send(Ok(stats.clone())).is_ok());
         }
     }

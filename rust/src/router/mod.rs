@@ -43,6 +43,7 @@ use crate::server::{
     error_code, Command, CommandSender, GenerateParams, ReplicaStat, SendRefusal, ServerError,
     ServerStats, StreamEvent,
 };
+use crate::trace::{sort_for_replay, TraceQuery, TraceReply};
 
 /// Pick the replica to place a fresh request on: the index with the
 /// smallest load (occupied lanes), lowest index winning ties so
@@ -305,7 +306,12 @@ impl Router {
                             a.stream_frames += s.stream_frames;
                             a.shed_events += s.shed_events;
                             a.cancel_events += s.cancel_events;
-                            a.resume_p99_us = a.resume_p99_us.max(s.resume_p99_us);
+                            // `absorb` above pooled the raw resume
+                            // histogram buckets, so the aggregated p99
+                            // is a true fleet-wide quantile — mirror
+                            // it, don't max per-replica summaries.
+                            a.resume_p99_us = a.engine.resume_p99_us;
+                            a.seq = a.seq.max(s.seq);
                             a.replicas.push(rs);
                         }
                     }
@@ -326,18 +332,59 @@ impl Router {
         }
     }
 
+    /// Fleet-wide trace snapshot: every replica answers the same query,
+    /// the event streams are concatenated and re-sorted into causal
+    /// replay order ([`sort_for_replay`]), drop/total counters are
+    /// summed, and the tick-phase histograms are merged bucket-wise so
+    /// cross-replica phase quantiles are pooled distributions. Degrades
+    /// to the replicas that answered; errs only when none did.
+    pub fn trace(&self, q: &TraceQuery) -> std::result::Result<TraceReply, ServerError> {
+        let mut agg: Option<TraceReply> = None;
+        let mut last_err = None;
+        for r in &self.replicas {
+            match roundtrip(&r.cmds, |tx| Command::Trace(q.clone(), tx)) {
+                Ok(rep) => match agg.as_mut() {
+                    None => agg = Some(rep),
+                    Some(a) => {
+                        a.next_seq = a.next_seq.max(rep.next_seq);
+                        a.dropped_events += rep.dropped_events;
+                        a.trace_events += rep.trace_events;
+                        a.events.extend(rep.events);
+                        a.phases.merge(&rep.phases);
+                    }
+                },
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match agg {
+            Some(mut a) => {
+                sort_for_replay(&mut a.events);
+                Ok(a)
+            }
+            None => Err(last_err.unwrap_or_else(|| ServerError {
+                code: error_code::ENGINE_STOPPED,
+                msg: "no replica answered".into(),
+            })),
+        }
+    }
+
     /// Aggregated `subscribe_stats`: a poll thread pushes a fleet-wide
     /// snapshot every [`ROUTER_POLL`] until the subscriber hangs up
     /// (per-replica push streams cannot be merged without a clock, so
-    /// the sharded path polls instead).
+    /// the sharded path polls instead). Each push re-stamps `seq` from
+    /// the poll thread's own counter — the per-replica broadcast seqs
+    /// don't compose into one stream, but the poll loop's do.
     pub fn subscribe_stats(
         self: &Arc<Self>,
         reply: mpsc::Sender<std::result::Result<ServerStats, ServerError>>,
     ) {
         let router = Arc::clone(self);
+        let mut poll_seq: u64 = 0;
         std::thread::spawn(move || loop {
             match router.stats() {
-                Ok(s) => {
+                Ok(mut s) => {
+                    poll_seq += 1;
+                    s.seq = poll_seq;
                     if reply.send(Ok(s)).is_err() {
                         break;
                     }
@@ -568,6 +615,15 @@ impl Dispatcher {
         match &self.backend {
             Backend::Single(cmds) => roundtrip(cmds, |tx| Command::Cancel(key.to_string(), tx)),
             Backend::Sharded(router) => router.cancel(key),
+        }
+    }
+
+    /// Blocking `trace` query: one replica's ring verbatim, or the
+    /// fleet-merged causal stream when sharded.
+    pub fn trace(&self, q: &TraceQuery) -> std::result::Result<TraceReply, ServerError> {
+        match &self.backend {
+            Backend::Single(cmds) => roundtrip(cmds, |tx| Command::Trace(q.clone(), tx)),
+            Backend::Sharded(router) => router.trace(q),
         }
     }
 }

@@ -98,6 +98,7 @@ use crate::engine::{Engine, Session, SessionOptions, SessionSnapshot};
 use crate::model::{stable_stream_prefix, Sampler, SamplerKind};
 use crate::runtime::host_tier::ParkedStore;
 use crate::runtime::spill::{SpillConfig, SpillError, SpillEvent, SpillMeta, SpillStore};
+use crate::trace::{TickPhase, TickPhases, TraceKind, TraceQuery, TraceReply, TraceRing};
 use crate::util::failpoint::Failpoints;
 
 /// Scheduler limits.
@@ -268,6 +269,10 @@ struct Active {
     streamed: usize,
     /// Stream frames emitted so far (the next frame's `index`).
     frames: usize,
+    /// Whether the decode planner had this session in a fused batch on
+    /// the previous tick — the edge detector behind the
+    /// `decode_join`/`decode_leave` trace events.
+    in_batch: bool,
 }
 
 /// A multi-turn session between turns: generation finished, lane still
@@ -518,6 +523,11 @@ const HEAD_MAX_BYPASS: usize = 16;
 /// never to an error).
 const TOMBSTONE_MAX: usize = 256;
 
+/// Capacity of the per-replica lifecycle trace ring ([`TraceRing`]):
+/// a full ring drops its oldest event (counted exactly) rather than
+/// growing or blocking the tick.
+const TRACE_RING_CAP: usize = 8192;
+
 /// Continuous batcher over one [`Engine`]. See the module docs.
 pub struct Scheduler {
     /// Limits this scheduler was built with.
@@ -556,6 +566,14 @@ pub struct Scheduler {
     /// Consecutive admission ticks in which requests were admitted past a
     /// still-queued head (see [`HEAD_MAX_BYPASS`]).
     head_bypass_ticks: usize,
+    /// Bounded per-replica lifecycle event ring (Design 10). Lives
+    /// inside the single-threaded scheduler, so appends take no lock
+    /// and allocate nothing beyond the interned session id.
+    trace: TraceRing,
+    /// Per-tick scheduler phase timings. The scheduler records five of
+    /// the six phases; `gather` is recorded by the replica loop around
+    /// its command-channel drain ([`Scheduler::record_phase_us`]).
+    phases: TickPhases,
 }
 
 impl Scheduler {
@@ -575,6 +593,38 @@ impl Scheduler {
             rejected: 0,
             view_bytes_released: 0,
             head_bypass_ticks: 0,
+            trace: TraceRing::new(TRACE_RING_CAP),
+            phases: TickPhases::default(),
+        }
+    }
+
+    /// Read handle on the lifecycle trace ring.
+    pub fn trace(&self) -> &TraceRing {
+        &self.trace
+    }
+
+    /// Mutable handle on the trace ring — the replica loop uses this to
+    /// stamp its replica index ([`TraceRing::set_replica`]) and to
+    /// record channel-level `shed` events.
+    pub fn trace_mut(&mut self) -> &mut TraceRing {
+        &mut self.trace
+    }
+
+    /// Record one tick-phase timing measured *outside* the scheduler
+    /// (the replica loop's command gather).
+    pub fn record_phase_us(&mut self, phase: TickPhase, us: f64) {
+        self.phases.record_us(phase, us);
+    }
+
+    /// Build the `trace` op reply: the ring's window filtered by `q`,
+    /// the exact drop counter, and the tick-phase profile.
+    pub fn trace_query(&self, q: &TraceQuery) -> TraceReply {
+        TraceReply {
+            next_seq: self.trace.total_events(),
+            dropped_events: self.trace.dropped_events(),
+            trace_events: self.trace.total_events(),
+            events: self.trace.collect(q),
+            phases: self.phases.clone(),
         }
     }
 
@@ -647,6 +697,7 @@ impl Scheduler {
         for ev in events {
             match ev {
                 SpillEvent::Committed { key } => {
+                    self.trace.record(TraceKind::SpillCommit, &key, 0, 0);
                     self.pending_demote.retain(|k| k != &key);
                     if self.has_queued_resume(&key) {
                         // A turn queued against the session while the
@@ -700,6 +751,7 @@ impl Scheduler {
                 continue;
             }
             let payload = entry.snap.to_bytes();
+            let payload_len = payload.len() as u64;
             let meta = SpillMeta {
                 paged_kv_bytes: entry.snap.paged_kv_bytes(),
                 capacity: entry.snap.capacity(),
@@ -716,6 +768,7 @@ impl Scheduler {
                         self.push_tombstone(k);
                     }
                     self.parked.set_pinned(&key, true);
+                    self.trace.record(TraceKind::SpillDemote, &key, payload_len, 0);
                     self.pending_demote.push(key);
                 }
                 Err(_refused) => {
@@ -768,6 +821,10 @@ impl Scheduler {
     /// their next turn errors cleanly instead of silently losing context.
     fn note_evictions(&mut self, evicted: Vec<(String, ParkedEntry)>) {
         for (key, _) in evicted {
+            // The evicted session's context is gone: custody ends here
+            // (its next turn will error on the tombstone and start a
+            // fresh incarnation).
+            self.trace.record(TraceKind::Retire, &key, 0, 0);
             self.push_tombstone(key);
         }
     }
@@ -781,10 +838,13 @@ impl Scheduler {
     /// so LRU eviction can never drop a session the scheduler has
     /// promised to continue.
     pub fn submit(&mut self, req: Request) -> bool {
+        let key = req.session_id.clone().unwrap_or_default();
         if self.queue.len() >= self.cfg.max_queue {
             self.rejected += 1;
+            self.trace.record(TraceKind::Shed, &key, 0, 0);
             return false;
         }
+        self.trace.record(TraceKind::Enqueue, &key, 0, 0);
         let resume = match &req.session_id {
             Some(key) => match self.resume_state(key) {
                 ResumeState::Unknown => {
@@ -1006,10 +1066,12 @@ impl Scheduler {
         // --- Spill upkeep: drain write-behind completions first, so
         // park bytes freed by committed demotions are visible to this
         // tick's parking and admission decisions.
+        let t_phase = Instant::now();
         if self.spill.is_some() {
             let events = self.spill.as_mut().map(|s| s.poll()).unwrap_or_default();
             self.apply_spill_events(events);
         }
+        let mut ph_spill_us = t_phase.elapsed().as_secs_f64() * 1e6;
 
         // --- Phase 0, idle-limit parking: a multi-turn session that sat
         // between turns for park_idle_ticks gives up its device residency
@@ -1017,6 +1079,7 @@ impl Scheduler {
         // park_byte_budget and the freed lane is compacted at this tick's
         // boundary. A session whose next turn is already queued stays
         // resident — it resumes this very tick.
+        let t_phase = Instant::now();
         if self.cfg.park_byte_budget > 0 {
             let mut i = 0;
             while i < self.idle.len() {
@@ -1032,10 +1095,15 @@ impl Scheduler {
             }
         }
 
+        let mut ph_park_us = t_phase.elapsed().as_secs_f64() * 1e6;
+
         // --- Phase 0b, tier descent: offer the coldest parked blobs to
         // the disk spill tier (write-behind; the host copy stays pinned
         // until the checksummed blob commits).
+        let t_phase = Instant::now();
         self.spill_demotions();
+        ph_spill_us += t_phase.elapsed().as_secs_f64() * 1e6;
+        let t_phase = Instant::now();
 
         // --- Phase 1, admission: plan a prefill batch over the queue.
         // The budget covers the paged pool, owned views, and the shared
@@ -1310,6 +1378,15 @@ impl Scheduler {
                             match res {
                                 Ok(prefill_us) => {
                                     let sampler = Sampler::new(req.sampler, req.seed);
+                                    let skey =
+                                        req.session_id.clone().unwrap_or_default();
+                                    self.trace.record(TraceKind::Admit, &skey, 0, 0);
+                                    self.trace.record(
+                                        TraceKind::Prefill,
+                                        &skey,
+                                        0,
+                                        prefill_us as u64,
+                                    );
                                     self.active.push(Active {
                                         req,
                                         sess,
@@ -1320,6 +1397,7 @@ impl Scheduler {
                                         idle_ticks: 0,
                                         streamed: 0,
                                         frames: 0,
+                                        in_batch: false,
                                     });
                                 }
                                 Err(e) => {
@@ -1333,7 +1411,10 @@ impl Scheduler {
                                         idle_ticks: 0,
                                         streamed: 0,
                                         frames: 0,
+                                        in_batch: false,
                                     };
+                                    let skey = a.req.session_id.clone().unwrap_or_default();
+                                    self.trace.record(TraceKind::Retire, &skey, 0, 0);
                                     done.push(self.finish(
                                         engine,
                                         a,
@@ -1353,6 +1434,8 @@ impl Scheduler {
         // preemption phase and the end-of-tick pool compaction (a pinned
         // grown capacity must not starve the queue).
         let admission_blocked = self.admission_blocked();
+        let ph_plan_us = t_phase.elapsed().as_secs_f64() * 1e6;
+        let t_phase = Instant::now();
 
         // --- Batch planning: group by capacity bucket, bound by
         // max_decode_batch lanes and the pooled-byte budget. The pool's
@@ -1398,8 +1481,18 @@ impl Scheduler {
             for (i, a) in self.active.iter_mut().enumerate() {
                 if planned[i] {
                     a.idle_ticks = 0;
+                    if !a.in_batch {
+                        a.in_batch = true;
+                        let key = a.req.session_id.as_deref().unwrap_or("");
+                        self.trace.record(TraceKind::DecodeJoin, key, 0, 0);
+                    }
                 } else {
                     a.idle_ticks += 1;
+                    if a.in_batch {
+                        a.in_batch = false;
+                        let key = a.req.session_id.as_deref().unwrap_or("");
+                        self.trace.record(TraceKind::DecodeLeave, key, 0, 0);
+                    }
                 }
             }
         }
@@ -1495,14 +1588,25 @@ impl Scheduler {
                 emit(TokenEvent { id: a.req.id, index, text: tail });
             }
             engine.metrics.requests_done += 1;
+            let skey = a.req.session_id.clone().unwrap_or_default();
+            if a.in_batch {
+                a.in_batch = false;
+                self.trace.record(TraceKind::DecodeLeave, &skey, 0, 0);
+            }
             match (&a.req.session_id, err) {
                 (Some(key), None) => {
                     let key = key.clone();
+                    self.trace.record(TraceKind::Idle, &skey, 0, 0);
                     done.push(self.retire_to_idle(engine, a, key, text));
                 }
-                _ => done.push(self.finish(engine, a, err.clone(), text)),
+                _ => {
+                    self.trace.record(TraceKind::Retire, &skey, 0, 0);
+                    done.push(self.finish(engine, a, err.clone(), text));
+                }
             }
         }
+        let ph_decode_us = t_phase.elapsed().as_secs_f64() * 1e6;
+        let t_phase = Instant::now();
 
         // --- Phase 3, preempt-to-host: when the budget deferred
         // admissible work, park the coldest session (idle-ticks LRU —
@@ -1526,6 +1630,8 @@ impl Scheduler {
                 parked_this_tick = true;
             }
         }
+        ph_park_us += t_phase.elapsed().as_secs_f64() * 1e6;
+        let t_phase = Instant::now();
 
         // Bound the forced-first hold-back: a blocked tick with an empty
         // active set in which no park landed must not repeat silently —
@@ -1573,6 +1679,12 @@ impl Scheduler {
             engine.metrics.io_retries = s.io_retries;
             engine.metrics.quarantined_sessions = s.quarantined;
         }
+        self.phases.record_us(TickPhase::SpillPoll, ph_spill_us);
+        self.phases.record_us(TickPhase::Park, ph_park_us);
+        self.phases.record_us(TickPhase::PrefillPlan, ph_plan_us);
+        self.phases.record_us(TickPhase::Decode, ph_decode_us);
+        self.phases
+            .record_us(TickPhase::Compact, t_phase.elapsed().as_secs_f64() * 1e6);
         done
     }
 
@@ -1631,16 +1743,20 @@ impl Scheduler {
                     match engine.append_turn(&mut s.sess, &req.prompt) {
                         Ok(()) => {
                             let sampler = Sampler::new(req.sampler, req.seed);
+                            let us = t0.elapsed().as_secs_f64() * 1e6;
+                            // Device-resident resume: no parked bytes move.
+                            self.trace.record(TraceKind::Resume, &key, 0, us as u64);
                             self.active.push(Active {
                                 req,
                                 sess: s.sess,
                                 sampler,
                                 generated: Vec::new(),
-                                prefill_us: t0.elapsed().as_secs_f64() * 1e6,
+                                prefill_us: us,
                                 decode_started: Instant::now(),
                                 idle_ticks: 0,
                                 streamed: 0,
                                 frames: 0,
+                                in_batch: false,
                             });
                         }
                         Err(err) => {
@@ -1654,7 +1770,9 @@ impl Scheduler {
                                 idle_ticks: 0,
                                 streamed: 0,
                                 frames: 0,
+                                in_batch: false,
                             };
+                            self.trace.record(TraceKind::Retire, &key, 0, 0);
                             done.push(self.finish(
                                 engine,
                                 a,
@@ -1692,12 +1810,19 @@ impl Scheduler {
                     if let Some(s) = self.spill.as_mut() {
                         s.remove(&key);
                     }
+                    let blob_bytes = entry.snap.parked_bytes() as u64;
                     match (entry.cont, e.req) {
                         (Some(cont), _) => {
                             let t0 = Instant::now();
                             match engine.resume_session(entry.snap, &[]) {
                                 Ok(sess) => {
                                     engine.metrics.resume_latency.record(t0.elapsed());
+                                    self.trace.record(
+                                        TraceKind::Resume,
+                                        &key,
+                                        blob_bytes,
+                                        (t0.elapsed().as_secs_f64() * 1e6) as u64,
+                                    );
                                     self.active.push(Active {
                                         req: cont.req,
                                         sess,
@@ -1708,12 +1833,16 @@ impl Scheduler {
                                         idle_ticks: 0,
                                         streamed: cont.streamed,
                                         frames: cont.frames,
+                                        in_batch: false,
                                     });
                                 }
-                                Err(err) => done.push(Self::error_completion(
-                                    &cont.req,
-                                    format!("resume: {err:#}"),
-                                )),
+                                Err(err) => {
+                                    self.trace.record(TraceKind::Retire, &key, 0, 0);
+                                    done.push(Self::error_completion(
+                                        &cont.req,
+                                        format!("resume: {err:#}"),
+                                    ));
+                                }
                             }
                         }
                         (None, Some(req)) => {
@@ -1721,6 +1850,12 @@ impl Scheduler {
                             match engine.resume_session(entry.snap, &req.prompt) {
                                 Ok(sess) => {
                                     engine.metrics.resume_latency.record(t0.elapsed());
+                                    self.trace.record(
+                                        TraceKind::Resume,
+                                        &key,
+                                        blob_bytes,
+                                        (t0.elapsed().as_secs_f64() * 1e6) as u64,
+                                    );
                                     let sampler = Sampler::new(req.sampler, req.seed);
                                     self.active.push(Active {
                                         req,
@@ -1732,15 +1867,23 @@ impl Scheduler {
                                         idle_ticks: 0,
                                         streamed: 0,
                                         frames: 0,
+                                        in_batch: false,
                                     });
                                 }
-                                Err(err) => done.push(Self::error_completion(
-                                    &req,
-                                    format!("resume: {err:#}"),
-                                )),
+                                Err(err) => {
+                                    self.trace.record(TraceKind::Retire, &key, 0, 0);
+                                    done.push(Self::error_completion(
+                                        &req,
+                                        format!("resume: {err:#}"),
+                                    ));
+                                }
                             }
                         }
-                        (None, None) => {}
+                        (None, None) => {
+                            // A stray marker consumed an idle parked blob
+                            // with no turn to run: the context is gone.
+                            self.trace.record(TraceKind::Retire, &key, 0, 0);
+                        }
                     }
                 }
                 ResumeState::Spilled => {
@@ -1762,15 +1905,31 @@ impl Scheduler {
                     };
                     match promoted {
                         Ok(payload) => {
+                            self.trace.record(
+                                TraceKind::Promote,
+                                &key,
+                                payload.len() as u64,
+                                (t_promote.elapsed().as_secs_f64() * 1e6) as u64,
+                            );
                             let t0 = Instant::now();
+                            let mut blob_bytes = 0u64;
                             let restored = SessionSnapshot::from_bytes(&payload)
                                 .map_err(|e| anyhow::anyhow!("{e}"))
-                                .and_then(|snap| engine.resume_session(snap, &req.prompt));
+                                .and_then(|snap| {
+                                    blob_bytes = snap.parked_bytes() as u64;
+                                    engine.resume_session(snap, &req.prompt)
+                                });
                             match restored {
                                 Ok(sess) => {
                                     // Promote latency spans the disk read
                                     // too — that is the spill tier's cost.
                                     engine.metrics.resume_latency.record(t_promote.elapsed());
+                                    self.trace.record(
+                                        TraceKind::Resume,
+                                        &key,
+                                        blob_bytes,
+                                        (t_promote.elapsed().as_secs_f64() * 1e6) as u64,
+                                    );
                                     let sampler = Sampler::new(req.sampler, req.seed);
                                     self.active.push(Active {
                                         req,
@@ -1782,12 +1941,18 @@ impl Scheduler {
                                         idle_ticks: 0,
                                         streamed: 0,
                                         frames: 0,
+                                        in_batch: false,
                                     });
                                 }
-                                Err(err) => done.push(Self::error_completion(
-                                    &req,
-                                    format!("resume: {err:#}"),
-                                )),
+                                Err(err) => {
+                                    // The blob left the spill store but
+                                    // could not be restored: session lost.
+                                    self.trace.record(TraceKind::Retire, &key, 0, 0);
+                                    done.push(Self::error_completion(
+                                        &req,
+                                        format!("resume: {err:#}"),
+                                    ));
+                                }
                             }
                         }
                         Err(err @ SpillError::Io { .. }) => {
@@ -1808,6 +1973,10 @@ impl Scheduler {
                             // the session is lost — exactly one clean
                             // per-session error, and the client's retry
                             // starts fresh.
+                            if matches!(err, SpillError::Corrupt { .. }) {
+                                self.trace.record(TraceKind::Quarantine, &key, 0, 0);
+                            }
+                            self.trace.record(TraceKind::Retire, &key, 0, 0);
                             done.push(Self::error_completion(
                                 &req,
                                 format!("resume: {err}"),
@@ -1919,6 +2088,7 @@ impl Scheduler {
                 ) {
                     Ok(evicted) => {
                         self.note_evictions(evicted);
+                        self.trace.record(TraceKind::Park, &s.key, bytes as u64, 0);
                         true
                     }
                     Err(entry) => {
@@ -2011,6 +2181,7 @@ impl Scheduler {
                 ) {
                     Ok(evicted) => {
                         self.note_evictions(evicted);
+                        self.trace.record(TraceKind::Park, &key, bytes as u64, 0);
                         self.queue.push_back(QueueEntry { req: None, resume: Some(key) });
                         true
                     }
@@ -2033,6 +2204,7 @@ impl Scheduler {
                                     idle_ticks: 0,
                                     streamed: cont.streamed,
                                     frames: cont.frames,
+                                    in_batch: false,
                                 }),
                                 Err(err) => done.push(Self::error_completion(
                                     &cont.req,
@@ -2130,6 +2302,7 @@ impl Scheduler {
                 let mut s = self.idle.swap_remove(i);
                 self.view_bytes_released += s.sess.release_device_view() as u64;
                 engine.release_lane(&mut s.sess);
+                self.trace.record(TraceKind::Retire, key, 0, 0);
                 self.compact_boundary(engine);
                 Ok(())
             }
@@ -2142,12 +2315,14 @@ impl Scheduler {
                     s.remove(key);
                 }
                 engine.metrics.parked_bytes = self.parked.parked_bytes() as u64;
+                self.trace.record(TraceKind::Retire, key, 0, 0);
                 Ok(())
             }
             ResumeState::Spilled => {
                 if let Some(s) = self.spill.as_mut() {
                     s.remove(key);
                 }
+                self.trace.record(TraceKind::Retire, key, 0, 0);
                 Ok(())
             }
             ResumeState::Unknown => anyhow::bail!("unknown session '{key}'"),
@@ -2225,6 +2400,7 @@ impl Scheduler {
             anyhow::bail!("unknown session '{key}'");
         }
         engine.metrics.cancel_events += 1;
+        self.trace.record(TraceKind::Cancel, key, 0, 0);
         self.compact_boundary(engine);
         Ok(done)
     }
@@ -2254,7 +2430,9 @@ impl Scheduler {
             if let Some(s) = self.spill.as_mut() {
                 s.remove(&key);
             }
-            return Some((key, entry.snap.to_bytes()));
+            let payload = entry.snap.to_bytes();
+            self.trace.record(TraceKind::MigrateExport, &key, payload.len() as u64, 0);
+            return Some((key, payload));
         }
         None
     }
@@ -2283,6 +2461,7 @@ impl Scheduler {
         {
             Ok(evicted) => {
                 self.note_evictions(evicted);
+                self.trace.record(TraceKind::MigrateImport, key, payload.len() as u64, 0);
                 Ok(bytes)
             }
             Err(_) => anyhow::bail!("import: park store refused the blob"),

@@ -71,6 +71,8 @@
 //! {"op": "cancel", "session_id": "chat-1"}
 //! {"op": "stats"}
 //! {"op": "subscribe_stats"}
+//! {"op": "trace", "since_seq": 0, "session": "chat-1", "kind": "park",
+//!  "max": 1024}
 //! ```
 //!
 //! Responses are one JSON object per line: a completion (`"ok": true`),
@@ -123,6 +125,7 @@ use crate::model::SamplerKind;
 use crate::runtime::manifest::ModelDims;
 use crate::scheduler::{Completion, SchedulerConfig};
 use crate::selection::QuestConfig;
+use crate::trace::{TraceQuery, TraceReply};
 use crate::util::failpoint::Failpoints;
 use crate::util::json::Json;
 
@@ -435,6 +438,12 @@ pub struct ServerStats {
     /// snapshot; the router fills one entry per replica when it
     /// aggregates.
     pub replicas: Vec<ReplicaStat>,
+    /// Broadcast sequence number: the replica loop stamps every
+    /// `subscribe_stats` snapshot with a monotonically increasing value,
+    /// so an observer that sees consecutive lines whose `seq` gap is
+    /// greater than one knows it missed snapshots in between. One-shot
+    /// `stats` replies carry the current counter.
+    pub seq: u64,
 }
 
 /// One replica's occupancy inside an aggregated [`ServerStats`].
@@ -523,6 +532,7 @@ impl ServerStats {
             .set("routed_requests", self.routed_requests)
             .set("migrations", self.migrations)
             .set("client_shed_events", self.client_shed_events)
+            .set("seq", self.seq)
             .set(
                 "replicas",
                 self.replicas.iter().map(ReplicaStat::to_json).collect::<Vec<_>>(),
@@ -633,6 +643,10 @@ pub enum Command {
     /// bytes charged. Refused whole (never half-adopted) on a decode or
     /// budget failure.
     Import(String, Vec<u8>, mpsc::Sender<std::result::Result<usize, ServerError>>),
+    /// Snapshot the replica's lifecycle trace ring, filtered by the
+    /// query: replies with the bounded event window, the exact
+    /// drop-oldest counter, and the tick-phase profile.
+    Trace(TraceQuery, mpsc::Sender<std::result::Result<TraceReply, ServerError>>),
 }
 
 /// Why [`CommandSender::send`] refused a command.
@@ -958,6 +972,13 @@ fn respond(
                 Err(se) => session_op_error("cancel", se, emit),
             }
         }
+        Some("trace") => match TraceQuery::from_json(&parsed) {
+            Ok(q) => match d.trace(&q) {
+                Ok(r) => emit(r.to_json().set("ok", "trace")),
+                Err(se) => emit(error_json(se.code, se.msg)),
+            },
+            Err(e) => emit(error_json(error_code::BAD_REQUEST, format!("bad request: {e:#}"))),
+        },
         Some(op) => emit(error_json(error_code::UNKNOWN_OP, format!("unknown op '{op}'"))),
         None => emit(error_json(error_code::MISSING_OP, "missing 'op'")),
     }
@@ -1188,6 +1209,7 @@ impl Client {
             routed_requests: f("routed_requests") as u64,
             migrations: f("migrations") as u64,
             client_shed_events: f("client_shed_events") as u64,
+            seq: f("seq") as u64,
             replicas: j
                 .get("replicas")
                 .and_then(Json::as_arr)
@@ -1215,6 +1237,18 @@ impl Client {
             bail!("drop failed: {}", Self::server_error(&j));
         }
         Ok(())
+    }
+
+    /// Blocking `trace` round-trip: fetch the server's lifecycle event
+    /// window and tick-phase profile (merged across replicas on the
+    /// sharded path). Poll again with `since_seq = reply.next_seq` for
+    /// a gap-free follow-up.
+    pub fn trace(&mut self, q: &TraceQuery) -> Result<TraceReply> {
+        let j = self.roundtrip(q.to_json().set("op", "trace"))?;
+        if j.get("ok").and_then(Json::as_str) != Some("trace") {
+            bail!("trace failed: {}", Self::server_error(&j));
+        }
+        TraceReply::from_json(&j)
     }
 
     /// Blocking `cancel` round-trip: abort a session wherever it lives —
@@ -1506,6 +1540,7 @@ mod tests {
             routed_requests: 17,
             migrations: 2,
             client_shed_events: 5,
+            seq: 41,
             replicas: vec![
                 ReplicaStat {
                     index: 0,
@@ -1560,6 +1595,7 @@ mod tests {
         assert_eq!(back.routed_requests, 17);
         assert_eq!(back.migrations, 2);
         assert_eq!(back.client_shed_events, 5);
+        assert_eq!(back.seq, 41);
         assert_eq!(back.replicas, s.replicas);
     }
 
@@ -1649,6 +1685,9 @@ mod tests {
         assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
         let (tx, rx) = mpsc::channel();
         cmds.send(Command::Import("s".into(), vec![1, 2, 3], tx)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
+        let (tx, rx) = mpsc::channel();
+        cmds.send(Command::Trace(TraceQuery::default(), tx)).unwrap();
         assert_eq!(rx.recv().unwrap().unwrap_err().code, error_code::ENGINE_LOAD);
         drop(cmds);
         assert!(handle.join().unwrap().is_err());

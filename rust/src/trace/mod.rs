@@ -1,0 +1,1169 @@
+//! Structured event tracing: per-session lifecycle timelines, per-tick
+//! scheduler phase profiling, and a custody auditor (Design 10).
+//!
+//! Every lifecycle edge a session crosses — enqueue, admit, prefill,
+//! decode-batch join/leave, idle, park, spill demote/commit, promote,
+//! resume, migrate export/import, cancel, shed, quarantine, retire —
+//! lands in a bounded per-replica [`TraceRing`] as a [`TraceEvent`]
+//! (monotonic per-replica `seq`, shared-epoch microsecond timestamp,
+//! replica id, session id, byte/latency payload). The ring is
+//! **lock-light by construction**: it lives inside each replica's
+//! single-threaded scheduler, appends are a `VecDeque` push with an
+//! interned `Arc<str>` session id (one allocation per session, not per
+//! event), and a full ring drops its *oldest* event while counting the
+//! drop exactly ([`TraceRing::dropped_events`]) so a reader always knows
+//! how much history it lost.
+//!
+//! Three consumers sit on top:
+//!
+//! * the `trace` server op ships a [`TraceReply`] — events filtered by
+//!   a [`TraceQuery`] (since-seq / session / kind, bounded `max`) plus
+//!   the replica's [`TickPhases`] tick-breakdown histograms;
+//! * [`chrome_trace_json`] converts any merged event stream to Chrome
+//!   trace-event JSON loadable in Perfetto: one track per replica,
+//!   one async span per session lifetime, one cross-track span per
+//!   migration (`wgkv client --dump-trace`);
+//! * [`TraceAudit`] replays a stream and checks custody invariants from
+//!   the events alone: every session has exactly one home replica at
+//!   all times, every export is matched by an import (re-import at the
+//!   source included), and park/resume byte payloads balance. It runs
+//!   as an oracle inside `prop_router`/`prop_park` and over the full
+//!   chat-storm bench scenario.
+#![warn(missing_docs)]
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::metrics::Histogram;
+use crate::util::json::Json;
+
+/// Default cap on events returned by one `trace` op reply.
+pub const DEFAULT_TRACE_MAX: usize = 4096;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since the process-wide trace epoch (the first call in
+/// this process pins it). Every replica stamps events off the same
+/// epoch, so cross-replica streams merge on a shared time axis.
+pub fn now_us() -> u64 {
+    let e = EPOCH.get_or_init(Instant::now);
+    e.elapsed().as_micros() as u64
+}
+
+/// The lifecycle edge an event records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    /// Request accepted into the scheduler queue.
+    Enqueue,
+    /// Queued request admitted onto a device lane.
+    Admit,
+    /// Prompt prefill completed (`latency_us` = prefill time).
+    Prefill,
+    /// Session joined the fused decode batch.
+    DecodeJoin,
+    /// Session left the fused decode batch.
+    DecodeLeave,
+    /// Retired to the on-device idle tier, lane retained.
+    Idle,
+    /// Snapshot parked to the host tier (`bytes` = blob size).
+    Park,
+    /// Cold parked blob demoted toward the disk spill tier.
+    SpillDemote,
+    /// Write-behind demotion committed to its checksummed blob file.
+    SpillCommit,
+    /// Spilled blob promoted back from disk to the host tier.
+    Promote,
+    /// Session restored onto a device lane (`bytes` = blob size,
+    /// `latency_us` = restore latency).
+    Resume,
+    /// Parked blob exported to another replica (migration send side).
+    MigrateExport,
+    /// Parked blob imported from another replica (migration receive
+    /// side; a re-import at the source is the failure-path rollback).
+    MigrateImport,
+    /// Session cancelled; every tier copy freed.
+    Cancel,
+    /// Command refused at the bounded channel (load shedding; carries
+    /// no session).
+    Shed,
+    /// Blob failed validation at promote and was quarantined.
+    Quarantine,
+    /// Session finished and fully released.
+    Retire,
+}
+
+impl TraceKind {
+    /// Every kind, in taxonomy order.
+    pub const ALL: [TraceKind; 17] = [
+        TraceKind::Enqueue,
+        TraceKind::Admit,
+        TraceKind::Prefill,
+        TraceKind::DecodeJoin,
+        TraceKind::DecodeLeave,
+        TraceKind::Idle,
+        TraceKind::Park,
+        TraceKind::SpillDemote,
+        TraceKind::SpillCommit,
+        TraceKind::Promote,
+        TraceKind::Resume,
+        TraceKind::MigrateExport,
+        TraceKind::MigrateImport,
+        TraceKind::Cancel,
+        TraceKind::Shed,
+        TraceKind::Quarantine,
+        TraceKind::Retire,
+    ];
+
+    /// Stable wire name (snake_case).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceKind::Enqueue => "enqueue",
+            TraceKind::Admit => "admit",
+            TraceKind::Prefill => "prefill",
+            TraceKind::DecodeJoin => "decode_join",
+            TraceKind::DecodeLeave => "decode_leave",
+            TraceKind::Idle => "idle",
+            TraceKind::Park => "park",
+            TraceKind::SpillDemote => "spill_demote",
+            TraceKind::SpillCommit => "spill_commit",
+            TraceKind::Promote => "promote",
+            TraceKind::Resume => "resume",
+            TraceKind::MigrateExport => "migrate_export",
+            TraceKind::MigrateImport => "migrate_import",
+            TraceKind::Cancel => "cancel",
+            TraceKind::Shed => "shed",
+            TraceKind::Quarantine => "quarantine",
+            TraceKind::Retire => "retire",
+        }
+    }
+
+    /// Parse a wire name back to a kind.
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        TraceKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// One structured lifecycle event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Monotonic per-replica sequence number (never reused, gaps only
+    /// where the query's `since_seq` filter cut, not from the ring —
+    /// drops shrink the window but the retained suffix is contiguous).
+    pub seq: u64,
+    /// Microseconds since the process trace epoch ([`now_us`]).
+    pub at_us: u64,
+    /// Replica that emitted the event.
+    pub replica: u32,
+    /// Lifecycle edge.
+    pub kind: TraceKind,
+    /// Session id; empty for replica-scoped events (e.g. `shed`).
+    pub session: Arc<str>,
+    /// Byte payload (blob size for park/spill/migrate/resume; 0 where
+    /// not meaningful).
+    pub bytes: u64,
+    /// Latency payload in microseconds (prefill/resume; 0 elsewhere).
+    pub latency_us: u64,
+}
+
+impl TraceEvent {
+    /// Serialize for the `trace` op wire reply.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seq", self.seq)
+            .set("at_us", self.at_us)
+            .set("replica", self.replica as u64)
+            .set("kind", self.kind.as_str())
+            .set("session", self.session.as_ref())
+            .set("bytes", self.bytes)
+            .set("latency_us", self.latency_us)
+    }
+
+    /// Rebuild from [`TraceEvent::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<TraceEvent> {
+        let kind_s = j.req("kind")?.as_str().ok_or_else(|| anyhow!("trace event: kind must be a string"))?;
+        let kind = match TraceKind::parse(kind_s) {
+            Some(k) => k,
+            None => bail!("trace event: unknown kind {kind_s:?}"),
+        };
+        let u = |k: &str| -> u64 {
+            j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64
+        };
+        Ok(TraceEvent {
+            seq: u("seq"),
+            at_us: u("at_us"),
+            replica: u("replica") as u32,
+            kind,
+            session: Arc::from(j.get("session").and_then(|v| v.as_str()).unwrap_or("")),
+            bytes: u("bytes"),
+            latency_us: u("latency_us"),
+        })
+    }
+}
+
+/// Bounded drop-oldest ring of [`TraceEvent`]s, one per replica.
+///
+/// Lives inside the replica's single-threaded scheduler: no locks, and
+/// the hot-path append cost is a `VecDeque` push plus an `Arc` clone of
+/// the interned session id (the intern table allocates once per session,
+/// not per event, and is pruned of dead sessions when it outgrows the
+/// ring).
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: VecDeque<TraceEvent>,
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+    replica: u32,
+    intern: HashMap<String, Arc<str>>,
+    empty: Arc<str>,
+}
+
+impl TraceRing {
+    /// Ring holding at most `cap` events (cap is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+            next_seq: 0,
+            dropped: 0,
+            replica: 0,
+            intern: HashMap::new(),
+            empty: Arc::from(""),
+        }
+    }
+
+    /// Stamp subsequent events with this replica index.
+    pub fn set_replica(&mut self, replica: u32) {
+        self.replica = replica;
+    }
+
+    /// Replica index stamped on events.
+    pub fn replica(&self) -> u32 {
+        self.replica
+    }
+
+    /// Record an event timestamped [`now_us`]; returns its seq.
+    pub fn record(&mut self, kind: TraceKind, session: &str, bytes: u64, latency_us: u64) -> u64 {
+        self.record_at(now_us(), kind, session, bytes, latency_us)
+    }
+
+    /// Record an event with an explicit timestamp (deterministic tests
+    /// and simulations); returns its seq.
+    pub fn record_at(
+        &mut self,
+        at_us: u64,
+        kind: TraceKind,
+        session: &str,
+        bytes: u64,
+        latency_us: u64,
+    ) -> u64 {
+        let session = if session.is_empty() {
+            self.empty.clone()
+        } else if let Some(s) = self.intern.get(session) {
+            s.clone()
+        } else {
+            let s: Arc<str> = Arc::from(session);
+            self.intern.insert(session.to_string(), s.clone());
+            if self.intern.len() > self.cap * 4 + 16 {
+                // Only ids still referenced by a live ring event (or an
+                // outstanding reader clone) survive the prune.
+                self.intern.retain(|_, v| Arc::strong_count(v) > 1);
+            }
+            s
+        };
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.buf.push_back(TraceEvent {
+            seq,
+            at_us,
+            replica: self.replica,
+            kind,
+            session,
+            bytes,
+            latency_us,
+        });
+        seq
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True while no event is held.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded (== the next seq to be issued).
+    pub fn total_events(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Events evicted by drop-oldest since construction.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Snapshot the events matching `q`, oldest first, at most `q.max`.
+    pub fn collect(&self, q: &TraceQuery) -> Vec<TraceEvent> {
+        self.buf
+            .iter()
+            .filter(|e| e.seq >= q.since_seq)
+            .filter(|e| q.session.as_deref().map_or(true, |s| e.session.as_ref() == s))
+            .filter(|e| q.kind.map_or(true, |k| e.kind == k))
+            .take(q.max)
+            .cloned()
+            .collect()
+    }
+}
+
+/// One phase of the scheduler tick, for the tick-breakdown profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickPhase {
+    /// Draining the bounded command channel (replica loop).
+    Gather,
+    /// Admission: prefill planning, batched prefill, resume admission.
+    PrefillPlan,
+    /// Batch planning, fused decode, stream emission, retirement.
+    Decode,
+    /// Idle-aging parks and budget preemption.
+    Park,
+    /// Spill-event polling and write-behind demotion upkeep.
+    SpillPoll,
+    /// Boundary lane trim and pool compaction.
+    Compact,
+}
+
+impl TickPhase {
+    /// Every phase, in tick order.
+    pub const ALL: [TickPhase; 6] = [
+        TickPhase::Gather,
+        TickPhase::PrefillPlan,
+        TickPhase::Decode,
+        TickPhase::Park,
+        TickPhase::SpillPoll,
+        TickPhase::Compact,
+    ];
+
+    /// Stable wire name (snake_case).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TickPhase::Gather => "gather",
+            TickPhase::PrefillPlan => "prefill_plan",
+            TickPhase::Decode => "decode",
+            TickPhase::Park => "park",
+            TickPhase::SpillPoll => "spill_poll",
+            TickPhase::Compact => "compact",
+        }
+    }
+}
+
+/// Per-tick scheduler phase timings as one histogram per phase.
+/// Merges bucket-wise across replicas like any [`Histogram`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TickPhases {
+    /// Command-gather time per tick.
+    pub gather: Histogram,
+    /// Admission (prefill-plan + batched prefill + resumes) per tick.
+    pub prefill_plan: Histogram,
+    /// Decode (plan + fused step + streaming + retire) per tick.
+    pub decode: Histogram,
+    /// Park (idle-aging + preemption) per tick.
+    pub park: Histogram,
+    /// Spill upkeep (event poll + demotions) per tick.
+    pub spill_poll: Histogram,
+    /// Boundary trim/compaction per tick.
+    pub compact: Histogram,
+}
+
+impl TickPhases {
+    /// The histogram for one phase.
+    pub fn phase(&self, p: TickPhase) -> &Histogram {
+        match p {
+            TickPhase::Gather => &self.gather,
+            TickPhase::PrefillPlan => &self.prefill_plan,
+            TickPhase::Decode => &self.decode,
+            TickPhase::Park => &self.park,
+            TickPhase::SpillPoll => &self.spill_poll,
+            TickPhase::Compact => &self.compact,
+        }
+    }
+
+    /// Record one phase timing, microseconds.
+    pub fn record_us(&mut self, p: TickPhase, us: f64) {
+        let h = match p {
+            TickPhase::Gather => &mut self.gather,
+            TickPhase::PrefillPlan => &mut self.prefill_plan,
+            TickPhase::Decode => &mut self.decode,
+            TickPhase::Park => &mut self.park,
+            TickPhase::SpillPoll => &mut self.spill_poll,
+            TickPhase::Compact => &mut self.compact,
+        };
+        h.record_us(us);
+    }
+
+    /// Fold another replica's phase profile into this one (bucket-wise).
+    pub fn merge(&mut self, other: &TickPhases) {
+        self.gather.merge(&other.gather);
+        self.prefill_plan.merge(&other.prefill_plan);
+        self.decode.merge(&other.decode);
+        self.park.merge(&other.park);
+        self.spill_poll.merge(&other.spill_poll);
+        self.compact.merge(&other.compact);
+    }
+
+    /// Serialize as one histogram object per phase.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for p in TickPhase::ALL {
+            o = o.set(p.as_str(), self.phase(p).to_json());
+        }
+        o
+    }
+
+    /// Rebuild from [`TickPhases::to_json`] output (missing phases
+    /// decode empty).
+    pub fn from_json(j: &Json) -> TickPhases {
+        let h = |k: &str| j.get(k).map(Histogram::from_json).unwrap_or_default();
+        TickPhases {
+            gather: h("gather"),
+            prefill_plan: h("prefill_plan"),
+            decode: h("decode"),
+            park: h("park"),
+            spill_poll: h("spill_poll"),
+            compact: h("compact"),
+        }
+    }
+}
+
+/// Filter for the `trace` server op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceQuery {
+    /// Only events with `seq >= since_seq` (resume point for pollers).
+    pub since_seq: u64,
+    /// Only events for this session id, when set.
+    pub session: Option<String>,
+    /// Only events of this kind, when set.
+    pub kind: Option<TraceKind>,
+    /// Reply bound: at most this many events ship.
+    pub max: usize,
+}
+
+impl Default for TraceQuery {
+    fn default() -> Self {
+        Self { since_seq: 0, session: None, kind: None, max: DEFAULT_TRACE_MAX }
+    }
+}
+
+impl TraceQuery {
+    /// Serialize for the wire request.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj().set("since_seq", self.since_seq).set("max", self.max);
+        if let Some(s) = &self.session {
+            o = o.set("session", s.as_str());
+        }
+        if let Some(k) = self.kind {
+            o = o.set("kind", k.as_str());
+        }
+        o
+    }
+
+    /// Rebuild from [`TraceQuery::to_json`] output; absent fields take
+    /// the defaults, an unknown `kind` is an error.
+    pub fn from_json(j: &Json) -> Result<TraceQuery> {
+        let mut q = TraceQuery::default();
+        if let Some(v) = j.get("since_seq").and_then(|v| v.as_f64()) {
+            q.since_seq = v as u64;
+        }
+        if let Some(v) = j.get("max").and_then(|v| v.as_usize()) {
+            q.max = v.min(DEFAULT_TRACE_MAX * 16).max(1);
+        }
+        if let Some(s) = j.get("session").and_then(|v| v.as_str()) {
+            q.session = Some(s.to_string());
+        }
+        if let Some(s) = j.get("kind").and_then(|v| v.as_str()) {
+            q.kind = Some(
+                TraceKind::parse(s).ok_or_else(|| anyhow!("trace query: unknown kind {s:?}"))?,
+            );
+        }
+        Ok(q)
+    }
+}
+
+/// Reply to the `trace` server op: the filtered event window plus the
+/// emitting replica's (or, router-merged, the fleet's) tick profile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceReply {
+    /// Next seq the replica will issue — poll again with
+    /// `since_seq = next_seq` for a gap-free follow-up (per replica;
+    /// a router-merged reply reports the max across replicas).
+    pub next_seq: u64,
+    /// Events evicted by drop-oldest since the ring was built (summed
+    /// across replicas in a merged reply).
+    pub dropped_events: u64,
+    /// Total events ever recorded (summed across replicas).
+    pub trace_events: u64,
+    /// The filtered window, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Tick-phase breakdown histograms.
+    pub phases: TickPhases,
+}
+
+impl TraceReply {
+    /// Serialize for the wire reply.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("next_seq", self.next_seq)
+            .set("dropped_events", self.dropped_events)
+            .set("trace_events", self.trace_events)
+            .set(
+                "events",
+                self.events.iter().map(|e| e.to_json()).collect::<Vec<Json>>(),
+            )
+            .set("phases", self.phases.to_json())
+    }
+
+    /// Rebuild from [`TraceReply::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<TraceReply> {
+        let mut events = Vec::new();
+        if let Some(arr) = j.get("events").and_then(|v| v.as_arr()) {
+            for e in arr {
+                events.push(TraceEvent::from_json(e)?);
+            }
+        }
+        let u = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        Ok(TraceReply {
+            next_seq: u("next_seq"),
+            dropped_events: u("dropped_events"),
+            trace_events: u("trace_events"),
+            events,
+            phases: j.get("phases").map(TickPhases::from_json).unwrap_or_default(),
+        })
+    }
+}
+
+/// Causality rank for same-microsecond cross-replica ties: an export
+/// sorts before unrelated events, an import after them, so a matched
+/// migration pair never inverts on a tie.
+fn causal_rank(k: TraceKind) -> u8 {
+    match k {
+        TraceKind::MigrateExport => 0,
+        TraceKind::MigrateImport => 2,
+        _ => 1,
+    }
+}
+
+/// Sort a merged multi-replica stream into replay order:
+/// `(at_us, causal rank, replica, seq)`. Within a replica the monotonic
+/// clock makes `at_us` non-decreasing in `seq`, so per-replica order is
+/// preserved up to same-microsecond migration ties.
+pub fn sort_for_replay(events: &mut [TraceEvent]) {
+    events.sort_by(|a, b| {
+        (a.at_us, causal_rank(a.kind), a.replica, a.seq)
+            .cmp(&(b.at_us, causal_rank(b.kind), b.replica, b.seq))
+    });
+}
+
+/// Convert a merged event stream to Chrome trace-event JSON
+/// (`{"traceEvents": [...]}`), loadable in Perfetto / `chrome://tracing`:
+///
+/// * one process track per replica (`pid` = replica index, named via a
+///   `process_name` metadata record);
+/// * every event as an instant (`ph: "i"`, cat `lifecycle`) on its
+///   replica's track with session/seq/bytes/latency args;
+/// * one async span (`ph: "b"`/`"e"`, cat `session`, id
+///   `<session>#<incarnation>`) per session lifetime — born at its
+///   first event, closed at `retire`/`cancel` (or at the stream's last
+///   timestamp if still live);
+/// * one async span (cat `migration`, id `<session>@<export seq>`) per
+///   migration — begun at `migrate_export` on the source track, ended
+///   at the matching `migrate_import` on the destination track
+///   (unmatched exports close at the last timestamp with `lost: true`).
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut evs = events.to_vec();
+    sort_for_replay(&mut evs);
+    let last_ts = evs.last().map(|e| e.at_us).unwrap_or(0);
+    let mut out: Vec<Json> = Vec::new();
+
+    let mut replicas: Vec<u32> = evs.iter().map(|e| e.replica).collect();
+    replicas.sort_unstable();
+    replicas.dedup();
+    for r in &replicas {
+        out.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("pid", *r as u64)
+                .set("name", "process_name")
+                .set("args", Json::obj().set("name", format!("replica-{r}"))),
+        );
+    }
+
+    let span = |ph: &str, cat: &str, id: &str, name: &str, pid: u32, ts: u64| {
+        Json::obj()
+            .set("ph", ph)
+            .set("cat", cat)
+            .set("id", id)
+            .set("name", name)
+            .set("pid", pid as u64)
+            .set("tid", 0u64)
+            .set("ts", ts)
+    };
+
+    let mut incarnation: HashMap<String, u64> = HashMap::new();
+    // session -> (span id, pid of last event)
+    let mut open: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    // session -> (migration span id, export bytes)
+    let mut open_mig: BTreeMap<String, (String, u64)> = BTreeMap::new();
+
+    for e in &evs {
+        out.push(
+            Json::obj()
+                .set("ph", "i")
+                .set("cat", "lifecycle")
+                .set("name", e.kind.as_str())
+                .set("pid", e.replica as u64)
+                .set("tid", 0u64)
+                .set("ts", e.at_us)
+                .set("s", "t")
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("session", e.session.as_ref())
+                        .set("seq", e.seq)
+                        .set("bytes", e.bytes)
+                        .set("latency_us", e.latency_us),
+                ),
+        );
+        let sess = e.session.as_ref();
+        if sess.is_empty() {
+            continue;
+        }
+        if !open.contains_key(sess) {
+            let k = incarnation.entry(sess.to_string()).or_insert(0);
+            *k += 1;
+            let id = format!("{sess}#{k}");
+            out.push(span("b", "session", &id, sess, e.replica, e.at_us));
+            open.insert(sess.to_string(), (id, e.replica));
+        } else if let Some(slot) = open.get_mut(sess) {
+            slot.1 = e.replica;
+        }
+        match e.kind {
+            TraceKind::Retire | TraceKind::Cancel => {
+                if let Some((id, _)) = open.remove(sess) {
+                    out.push(span("e", "session", &id, sess, e.replica, e.at_us));
+                }
+            }
+            TraceKind::MigrateExport => {
+                let id = format!("{sess}@{}", e.seq);
+                out.push(span("b", "migration", &id, "migrate", e.replica, e.at_us));
+                open_mig.insert(sess.to_string(), (id, e.bytes));
+            }
+            TraceKind::MigrateImport => {
+                if let Some((id, _)) = open_mig.remove(sess) {
+                    out.push(span("e", "migration", &id, "migrate", e.replica, e.at_us));
+                }
+            }
+            _ => {}
+        }
+    }
+    for (sess, (id, pid)) in open {
+        out.push(span("e", "session", &id, &sess, pid, last_ts));
+    }
+    for (sess, (id, _)) in open_mig {
+        let _ = sess;
+        let mut j = span("e", "migration", &id, "migrate", 0, last_ts);
+        j = j.set("args", Json::obj().set("lost", true));
+        out.push(j);
+    }
+    Json::obj().set("traceEvents", out)
+}
+
+/// Where a session's KV custody sits during replay.
+#[derive(Debug, Clone, PartialEq)]
+enum Custody {
+    /// Exactly one replica owns the session.
+    Home(u32),
+    /// Exported, not yet imported anywhere.
+    InFlight { from: u32, bytes: u64 },
+    /// Retired or cancelled; a later event is a new incarnation.
+    Ended,
+}
+
+/// Replays an event stream and checks custody invariants from the
+/// events alone:
+///
+/// 1. **one home** — every session-scoped event lands on the replica
+///    that currently owns the session; ownership moves only through a
+///    `migrate_export` → `migrate_import` pair;
+/// 2. **matched migrations** — every export is resolved by exactly one
+///    import (at the destination, or back at the source on the
+///    failure-path rollback) with the same byte payload, and no stream
+///    ends with an export still in flight;
+/// 3. **park/resume balance** — a resume that follows a park carries
+///    the parked blob's byte size (parks may be replaced; a parked
+///    session evicted and never resumed owes nothing).
+///
+/// Violations are collected, not panicked, so property tests can assert
+/// both acceptance of legal interleavings and rejection of mutants.
+#[derive(Debug, Default)]
+pub struct TraceAudit {
+    custody: BTreeMap<String, Custody>,
+    parked: BTreeMap<String, u64>,
+    violations: Vec<String>,
+    events_seen: u64,
+    finished: bool,
+}
+
+impl TraceAudit {
+    /// Fresh auditor.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sort a stream into replay order, push every event, and finish.
+    pub fn replay(events: &[TraceEvent]) -> TraceAudit {
+        let mut evs = events.to_vec();
+        sort_for_replay(&mut evs);
+        let mut a = TraceAudit::new();
+        for e in &evs {
+            a.push(e);
+        }
+        a.finish();
+        a
+    }
+
+    /// Feed one event (stream must already be in replay order when
+    /// pushing incrementally — use [`sort_for_replay`]).
+    pub fn push(&mut self, e: &TraceEvent) {
+        self.events_seen += 1;
+        let sess = e.session.as_ref();
+        if sess.is_empty() {
+            return; // replica-scoped events (shed) carry no custody
+        }
+        let cur = self.custody.get(sess).cloned();
+        let next = match cur {
+            None | Some(Custody::Ended) => {
+                if e.kind == TraceKind::MigrateImport {
+                    self.violations.push(format!(
+                        "{sess}: import at replica {} without a matching export (seq {})",
+                        e.replica, e.seq
+                    ));
+                }
+                self.birth(sess, e)
+            }
+            Some(Custody::Home(h)) => {
+                if e.replica != h {
+                    self.violations.push(format!(
+                        "{sess}: {} at replica {} while homed at replica {h} (seq {})",
+                        e.kind.as_str(),
+                        e.replica,
+                        e.seq
+                    ));
+                }
+                self.step_homed(sess, e)
+            }
+            Some(Custody::InFlight { from, bytes }) => match e.kind {
+                TraceKind::MigrateImport => {
+                    if e.bytes != bytes {
+                        self.violations.push(format!(
+                            "{sess}: import of {} bytes at replica {} does not match the \
+                             {bytes}-byte export from replica {from} (seq {})",
+                            e.bytes, e.replica, e.seq
+                        ));
+                    }
+                    Custody::Home(e.replica)
+                }
+                TraceKind::MigrateExport => {
+                    self.violations.push(format!(
+                        "{sess}: re-export at replica {} while already in flight from \
+                         replica {from} (seq {})",
+                        e.replica, e.seq
+                    ));
+                    Custody::InFlight { from: e.replica, bytes: e.bytes }
+                }
+                _ => {
+                    self.violations.push(format!(
+                        "{sess}: {} at replica {} while in flight from replica {from} (seq {})",
+                        e.kind.as_str(),
+                        e.replica,
+                        e.seq
+                    ));
+                    self.step_homed(sess, e)
+                }
+            },
+        };
+        self.custody.insert(sess.to_string(), next);
+    }
+
+    /// First event of a (re-)incarnation establishes custody.
+    fn birth(&mut self, sess: &str, e: &TraceEvent) -> Custody {
+        match e.kind {
+            TraceKind::Retire | TraceKind::Cancel => {
+                self.parked.remove(sess);
+                Custody::Ended
+            }
+            TraceKind::MigrateExport => Custody::InFlight { from: e.replica, bytes: e.bytes },
+            TraceKind::Park => {
+                self.parked.insert(sess.to_string(), e.bytes);
+                Custody::Home(e.replica)
+            }
+            TraceKind::Resume => {
+                self.check_resume(sess, e);
+                Custody::Home(e.replica)
+            }
+            _ => Custody::Home(e.replica),
+        }
+    }
+
+    /// Per-kind custody step for a homed session (home already checked).
+    fn step_homed(&mut self, sess: &str, e: &TraceEvent) -> Custody {
+        match e.kind {
+            TraceKind::MigrateExport => Custody::InFlight { from: e.replica, bytes: e.bytes },
+            TraceKind::Retire | TraceKind::Cancel => {
+                self.parked.remove(sess);
+                Custody::Ended
+            }
+            TraceKind::Park => {
+                // Replace semantics: a re-park overwrites the ledger.
+                self.parked.insert(sess.to_string(), e.bytes);
+                Custody::Home(e.replica)
+            }
+            TraceKind::Resume => {
+                self.check_resume(sess, e);
+                Custody::Home(e.replica)
+            }
+            TraceKind::MigrateImport => {
+                self.violations.push(format!(
+                    "{sess}: import at replica {} without a matching export (seq {})",
+                    e.replica, e.seq
+                ));
+                Custody::Home(e.replica)
+            }
+            _ => Custody::Home(e.replica),
+        }
+    }
+
+    /// A resume following a park must carry the parked byte size; a
+    /// resume with no pending park (idle-tier restore) owes nothing.
+    fn check_resume(&mut self, sess: &str, e: &TraceEvent) {
+        if let Some(expected) = self.parked.remove(sess) {
+            if e.bytes != expected {
+                self.violations.push(format!(
+                    "{sess}: resume of {} bytes does not balance the {expected}-byte park \
+                     (seq {})",
+                    e.bytes, e.seq
+                ));
+            }
+        }
+    }
+
+    /// Close the stream: any export still in flight is a violation.
+    pub fn finish(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        for (sess, c) in &self.custody {
+            if let Custody::InFlight { from, .. } = c {
+                self.violations
+                    .push(format!("{sess}: export from replica {from} never imported"));
+            }
+        }
+    }
+
+    /// True when no invariant was violated.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Every violation found, in replay order.
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    /// Events replayed.
+    pub fn events_seen(&self) -> u64 {
+        self.events_seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64, at: u64, replica: u32, kind: TraceKind, sess: &str, bytes: u64) -> TraceEvent {
+        TraceEvent {
+            seq,
+            at_us: at,
+            replica,
+            kind,
+            session: Arc::from(sess),
+            bytes,
+            latency_us: 0,
+        }
+    }
+
+    #[test]
+    fn ring_issues_contiguous_seqs_and_drops_oldest_exactly() {
+        let mut r = TraceRing::new(4);
+        for i in 0..10u64 {
+            let seq = r.record_at(i, TraceKind::Enqueue, "s", 0, 0);
+            assert_eq!(seq, i);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped_events(), 6);
+        assert_eq!(r.total_events(), 10);
+        let got = r.collect(&TraceQuery::default());
+        let seqs: Vec<u64> = got.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "newest window, oldest first");
+    }
+
+    #[test]
+    fn ring_interns_session_ids() {
+        let mut r = TraceRing::new(8);
+        r.record_at(0, TraceKind::Enqueue, "sess-a", 0, 0);
+        r.record_at(1, TraceKind::Admit, "sess-a", 0, 0);
+        let got = r.collect(&TraceQuery::default());
+        assert!(Arc::ptr_eq(&got[0].session, &got[1].session));
+    }
+
+    #[test]
+    fn query_filters_by_seq_session_and_kind() {
+        let mut r = TraceRing::new(16);
+        r.record_at(0, TraceKind::Enqueue, "a", 0, 0);
+        r.record_at(1, TraceKind::Park, "a", 64, 0);
+        r.record_at(2, TraceKind::Enqueue, "b", 0, 0);
+        r.record_at(3, TraceKind::Park, "b", 96, 0);
+        let q = TraceQuery { session: Some("b".into()), ..Default::default() };
+        assert_eq!(r.collect(&q).len(), 2);
+        let q = TraceQuery { kind: Some(TraceKind::Park), ..Default::default() };
+        assert_eq!(r.collect(&q).len(), 2);
+        let q = TraceQuery { since_seq: 2, ..Default::default() };
+        assert_eq!(r.collect(&q).iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 3]);
+        let q = TraceQuery { max: 1, ..Default::default() };
+        assert_eq!(r.collect(&q).len(), 1);
+    }
+
+    #[test]
+    fn event_query_reply_json_roundtrip() {
+        let e = ev(7, 123, 1, TraceKind::MigrateExport, "s9", 4096);
+        let back = TraceEvent::from_json(&Json::parse(&e.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, e);
+
+        let q = TraceQuery {
+            since_seq: 5,
+            session: Some("s9".into()),
+            kind: Some(TraceKind::Park),
+            max: 100,
+        };
+        let back = TraceQuery::from_json(&Json::parse(&q.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, q);
+
+        let mut phases = TickPhases::default();
+        phases.record_us(TickPhase::Decode, 250.0);
+        phases.record_us(TickPhase::Gather, 3.0);
+        let reply = TraceReply {
+            next_seq: 8,
+            dropped_events: 2,
+            trace_events: 10,
+            events: vec![e],
+            phases,
+        };
+        let back = TraceReply::from_json(&Json::parse(&reply.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, reply);
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in TraceKind::ALL {
+            assert_eq!(TraceKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(TraceKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn tick_phases_merge_bucketwise() {
+        let mut a = TickPhases::default();
+        let mut b = TickPhases::default();
+        a.record_us(TickPhase::Decode, 100.0);
+        b.record_us(TickPhase::Decode, 5000.0);
+        a.merge(&b);
+        assert_eq!(a.decode.count, 2);
+        assert_eq!(a.phase(TickPhase::Decode).count, 2);
+        let back = TickPhases::from_json(&Json::parse(&a.to_json().dump()).unwrap());
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn audit_accepts_a_full_legal_lifecycle() {
+        let events = vec![
+            ev(0, 0, 0, TraceKind::Enqueue, "s", 0),
+            ev(1, 1, 0, TraceKind::Admit, "s", 0),
+            ev(2, 2, 0, TraceKind::Prefill, "s", 0),
+            ev(3, 3, 0, TraceKind::DecodeJoin, "s", 0),
+            ev(4, 4, 0, TraceKind::DecodeLeave, "s", 0),
+            ev(5, 5, 0, TraceKind::Idle, "s", 0),
+            ev(6, 6, 0, TraceKind::Park, "s", 128),
+            ev(7, 7, 0, TraceKind::SpillDemote, "s", 128),
+            ev(8, 8, 0, TraceKind::SpillCommit, "s", 128),
+            ev(9, 9, 0, TraceKind::MigrateExport, "s", 128),
+            ev(0, 10, 1, TraceKind::MigrateImport, "s", 128),
+            ev(1, 11, 1, TraceKind::Promote, "s", 128),
+            ev(2, 12, 1, TraceKind::Resume, "s", 128),
+            ev(3, 13, 1, TraceKind::Retire, "s", 0),
+        ];
+        let a = TraceAudit::replay(&events);
+        assert!(a.ok(), "violations: {:?}", a.violations());
+    }
+
+    #[test]
+    fn audit_rejects_double_home() {
+        let events = vec![
+            ev(0, 0, 0, TraceKind::Admit, "s", 0),
+            ev(0, 1, 1, TraceKind::DecodeJoin, "s", 0),
+        ];
+        let a = TraceAudit::replay(&events);
+        assert!(!a.ok());
+        assert!(a.violations()[0].contains("while homed"));
+    }
+
+    #[test]
+    fn audit_rejects_unmatched_export_and_import() {
+        let a = TraceAudit::replay(&[ev(0, 0, 0, TraceKind::MigrateExport, "s", 64)]);
+        assert!(!a.ok());
+        assert!(a.violations()[0].contains("never imported"));
+
+        let a = TraceAudit::replay(&[ev(0, 0, 1, TraceKind::MigrateImport, "s", 64)]);
+        assert!(!a.ok());
+        assert!(a.violations()[0].contains("without a matching export"));
+    }
+
+    #[test]
+    fn audit_rejects_park_resume_imbalance_but_allows_idle_resume() {
+        let bad = vec![
+            ev(0, 0, 0, TraceKind::Park, "s", 100),
+            ev(1, 1, 0, TraceKind::Resume, "s", 64),
+        ];
+        let a = TraceAudit::replay(&bad);
+        assert!(!a.ok());
+        assert!(a.violations()[0].contains("does not balance"));
+
+        let idle = vec![
+            ev(0, 0, 0, TraceKind::Idle, "s", 0),
+            ev(1, 1, 0, TraceKind::Resume, "s", 0),
+            ev(2, 2, 0, TraceKind::Retire, "s", 0),
+        ];
+        assert!(TraceAudit::replay(&idle).ok());
+    }
+
+    #[test]
+    fn audit_allows_reimport_at_source_and_rebirth_after_retire() {
+        let events = vec![
+            ev(0, 0, 0, TraceKind::Park, "s", 100),
+            ev(1, 1, 0, TraceKind::MigrateExport, "s", 100),
+            ev(2, 2, 0, TraceKind::MigrateImport, "s", 100), // rollback
+            ev(3, 3, 0, TraceKind::Resume, "s", 100),
+            ev(4, 4, 0, TraceKind::Retire, "s", 0),
+            ev(5, 5, 1, TraceKind::Enqueue, "s", 0), // new incarnation, new home
+            ev(6, 6, 1, TraceKind::Retire, "s", 0),
+        ];
+        let a = TraceAudit::replay(&events);
+        assert!(a.ok(), "violations: {:?}", a.violations());
+    }
+
+    #[test]
+    fn replay_order_pairs_same_microsecond_migrations() {
+        // Import recorded "before" the export in the raw stream, same
+        // microsecond: replay order must still see export first.
+        let events = vec![
+            ev(0, 5, 1, TraceKind::MigrateImport, "s", 64),
+            ev(0, 5, 2, TraceKind::MigrateExport, "s", 64),
+        ];
+        let a = TraceAudit::replay(&events);
+        assert!(a.ok(), "violations: {:?}", a.violations());
+    }
+
+    #[test]
+    fn chrome_trace_has_tracks_spans_and_migration_pairs() {
+        let events = vec![
+            ev(0, 0, 0, TraceKind::Enqueue, "s", 0),
+            ev(1, 2, 0, TraceKind::Park, "s", 64),
+            ev(2, 3, 0, TraceKind::MigrateExport, "s", 64),
+            ev(0, 4, 1, TraceKind::MigrateImport, "s", 64),
+            ev(1, 5, 1, TraceKind::Resume, "s", 64),
+            ev(2, 6, 1, TraceKind::Retire, "s", 0),
+        ];
+        let j = chrome_trace_json(&events);
+        let arr = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let ph = |p: &str| {
+            arr.iter()
+                .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some(p))
+                .count()
+        };
+        assert_eq!(ph("M"), 2, "one process_name record per replica");
+        assert_eq!(ph("i"), events.len(), "every event an instant");
+        // session span b/e + migration span b/e
+        assert_eq!(ph("b"), 2);
+        assert_eq!(ph("e"), 2);
+        let mig_b = arr
+            .iter()
+            .find(|e| {
+                e.get("cat").and_then(|v| v.as_str()) == Some("migration")
+                    && e.get("ph").and_then(|v| v.as_str()) == Some("b")
+            })
+            .unwrap();
+        let mig_e = arr
+            .iter()
+            .find(|e| {
+                e.get("cat").and_then(|v| v.as_str()) == Some("migration")
+                    && e.get("ph").and_then(|v| v.as_str()) == Some("e")
+            })
+            .unwrap();
+        assert_eq!(mig_b.get("id").unwrap().as_str(), mig_e.get("id").unwrap().as_str());
+        assert_eq!(mig_b.get("pid").unwrap().as_f64(), Some(0.0));
+        assert_eq!(mig_e.get("pid").unwrap().as_f64(), Some(1.0));
+        // Round-trips as JSON text.
+        assert!(Json::parse(&j.dump()).is_ok());
+    }
+
+    #[test]
+    fn unclosed_spans_close_at_last_timestamp() {
+        let events = vec![
+            ev(0, 0, 0, TraceKind::Admit, "live", 0),
+            ev(1, 9, 0, TraceKind::MigrateExport, "live", 32),
+        ];
+        let j = chrome_trace_json(&events);
+        let arr = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let ends: Vec<_> = arr
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("e"))
+            .collect();
+        assert_eq!(ends.len(), 2);
+        for e in ends {
+            assert_eq!(e.get("ts").unwrap().as_f64(), Some(9.0));
+        }
+        let lost = arr.iter().any(|e| {
+            e.get("args")
+                .and_then(|a| a.get("lost"))
+                .and_then(|v| v.as_bool())
+                == Some(true)
+        });
+        assert!(lost, "unmatched export marked lost");
+    }
+
+    #[test]
+    fn now_us_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

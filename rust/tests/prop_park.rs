@@ -19,9 +19,14 @@
 //! 3. **The budget is a hard bound and pinned blobs survive** — under
 //!    random insert/take/touch/pin traffic, `parked_bytes` never
 //!    exceeds `park_byte_budget` and a pinned (queued-resume) blob is
-//!    never evicted.
+//!    never evicted. The same traffic is mirrored into a trace-event
+//!    stream (park / resume / retire) and replayed through
+//!    [`TraceAudit`] as an oracle: the byte ledger must balance with
+//!    zero custody violations.
 //! 4. **Stale resumes are rejected cleanly** — a second take, or a take
 //!    after eviction/drop, returns `None` (no panic, nothing clobbered).
+
+use std::sync::Arc;
 
 use wgkv::kvcache::dual::CacheDims;
 use wgkv::kvcache::{CacheSnapshot, SequenceKvCache};
@@ -29,8 +34,14 @@ use wgkv::prop_assert;
 use wgkv::runtime::device_cache::DeviceViewPool;
 use wgkv::runtime::host_tier::ParkedStore;
 use wgkv::runtime::tensor::Tensor;
+use wgkv::trace::{TraceAudit, TraceEvent, TraceKind};
 use wgkv::util::prop::forall;
 use wgkv::util::rng::Rng;
+
+/// One single-replica trace event for the audit oracle.
+fn trace_ev(seq: u64, at: u64, kind: TraceKind, sess: &str, bytes: u64) -> TraceEvent {
+    TraceEvent { seq, at_us: at, replica: 0, kind, session: Arc::from(sess), bytes, latency_us: 0 }
+}
 
 fn dims(rng: &mut Rng) -> CacheDims {
     CacheDims {
@@ -190,13 +201,22 @@ fn park_budget_is_hard_and_pinned_blobs_survive() {
         let budget = rng.usize(64, 512);
         let mut store: ParkedStore<usize> = ParkedStore::new(budget);
         let mut pinned_alive: Vec<String> = Vec::new();
+        // Trace-event mirror of the store traffic, audited at the end.
+        let mut events: Vec<TraceEvent> = Vec::new();
         for t in 0..rng.usize(4, 40) as u64 {
             match rng.usize(0, 4) {
                 0 | 1 => {
                     let key = format!("s{}", rng.usize(0, 12));
                     let bytes = rng.usize(1, budget / 2 + 2);
                     let pin = rng.bool(0.3);
-                    if store.insert(&key, bytes, bytes, pin, t).is_ok() {
+                    if let Ok(evicted) = store.insert(&key, bytes, bytes, pin, t) {
+                        let seq = events.len() as u64;
+                        events.push(trace_ev(seq, t, TraceKind::Park, &key, bytes as u64));
+                        for (k, _) in evicted {
+                            // An LRU-evicted blob's custody ends here.
+                            let seq = events.len() as u64;
+                            events.push(trace_ev(seq, t, TraceKind::Retire, &k, 0));
+                        }
                         pinned_alive.retain(|k| k != &key);
                         if pin {
                             pinned_alive.push(key);
@@ -205,7 +225,9 @@ fn park_budget_is_hard_and_pinned_blobs_survive() {
                 }
                 2 => {
                     let key = format!("s{}", rng.usize(0, 12));
-                    if store.take(&key).is_some() {
+                    if let Some(b) = store.take(&key) {
+                        let seq = events.len() as u64;
+                        events.push(trace_ev(seq, t, TraceKind::Resume, &key, b as u64));
                         pinned_alive.retain(|k| k != &key);
                     }
                     // A second take of the same key is always a clean None.
@@ -229,6 +251,15 @@ fn park_budget_is_hard_and_pinned_blobs_survive() {
                 );
             }
         }
+        // Oracle: the mirrored event stream must replay with zero
+        // custody violations — every resume balances its park's bytes,
+        // every evicted blob's custody ends at its retire.
+        let audit = TraceAudit::replay(&events);
+        prop_assert!(
+            audit.ok(),
+            "trace audit rejected the store history: {:?}",
+            audit.violations()
+        );
         Ok(())
     });
 }

@@ -13,7 +13,10 @@
 //!    of route / park / resume / migrate / cancel against real
 //!    [`ParkedStore`]s, every session created is exactly one of live,
 //!    cancelled, or tombstone-evicted; a parked blob lives in exactly
-//!    one replica's store — the one its affinity entry names.
+//!    one replica's store — the one its affinity entry names. The same
+//!    run is mirrored into a trace-event stream and replayed through
+//!    [`TraceAudit`] as an oracle: one home per session at all times,
+//!    matched export/import pairs, balanced park/resume bytes.
 //! 3. **The per-replica budget is a hard bound** — each replica's store
 //!    never exceeds its `park_byte_budget` slice, and a migration whose
 //!    import would not fit is refused and re-imported at the source
@@ -28,6 +31,7 @@
 //!    `c` never admits a client past `c` concurrent permits.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use wgkv::engine::SessionSnapshot;
 use wgkv::kvcache::dual::CacheDims;
@@ -37,8 +41,29 @@ use wgkv::router::{pick_replica, plan_migration, ClientGate, ClientPermit};
 use wgkv::runtime::device_cache::DeviceViewPool;
 use wgkv::runtime::host_tier::ParkedStore;
 use wgkv::runtime::tensor::Tensor;
+use wgkv::trace::{TraceAudit, TraceEvent, TraceKind};
 use wgkv::util::prop::forall;
 use wgkv::util::rng::Rng;
+
+/// One trace event for the audit oracle mirroring the model run.
+fn trace_ev(
+    seq: u64,
+    at: u64,
+    replica: usize,
+    kind: TraceKind,
+    sess: &str,
+    bytes: u64,
+) -> TraceEvent {
+    TraceEvent {
+        seq,
+        at_us: at,
+        replica: replica as u32,
+        kind,
+        session: Arc::from(sess),
+        bytes,
+        latency_us: 0,
+    }
+}
 
 #[test]
 fn pick_replica_is_a_sound_argmin() {
@@ -124,6 +149,9 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
         let mut state: Vec<Sess> = Vec::new();
         let mut tick = 0u64;
         let mut migrations = 0u64;
+        // Trace-event mirror of the run, replayed through the custody
+        // auditor at the end.
+        let mut events: Vec<TraceEvent> = Vec::new();
 
         for _ in 0..rng.usize(20, 120) {
             tick += 1;
@@ -146,7 +174,10 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
                         })
                         .collect();
                     let r = pick_replica(&loads);
-                    affinity.insert(state.len(), r);
+                    let s = state.len();
+                    let seq = events.len() as u64;
+                    events.push(trace_ev(seq, tick, r, TraceKind::Admit, &key(s), 0));
+                    affinity.insert(s, r);
                     state.push(Sess::Idle);
                 }
                 // A turn for a random live session must find its state
@@ -155,12 +186,23 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
                 1 => {
                     if let Some(s) = pick_live(rng, &state) {
                         let home = affinity[&s];
+                        let seq = events.len() as u64;
                         if let Sess::Parked { bytes } = state[s] {
                             let blob = stores[home]
                                 .take(&key(s))
                                 .ok_or_else(|| format!("parked '{s}' missing on its home {home}"))?;
                             prop_assert!(blob.len() == bytes, "blob changed size while parked");
+                            events.push(trace_ev(
+                                seq,
+                                tick,
+                                home,
+                                TraceKind::Resume,
+                                &key(s),
+                                bytes as u64,
+                            ));
                             state[s] = Sess::Idle;
+                        } else {
+                            events.push(trace_ev(seq, tick, home, TraceKind::DecodeJoin, &key(s), 0));
                         }
                     }
                 }
@@ -181,6 +223,15 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
                                 tick,
                             ) {
                                 Ok(evicted) => {
+                                    let seq = events.len() as u64;
+                                    events.push(trace_ev(
+                                        seq,
+                                        tick,
+                                        home,
+                                        TraceKind::Park,
+                                        &key(s),
+                                        bytes as u64,
+                                    ));
                                     state[s] = Sess::Parked { bytes };
                                     for (k, _) in evicted {
                                         let victim: usize = k.parse().unwrap();
@@ -188,6 +239,17 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
                                             victim != s,
                                             "insert evicted the blob it admitted"
                                         );
+                                        // The victim's custody ends at
+                                        // its LRU eviction.
+                                        let seq = events.len() as u64;
+                                        events.push(trace_ev(
+                                            seq,
+                                            tick,
+                                            home,
+                                            TraceKind::Retire,
+                                            &k,
+                                            0,
+                                        ));
                                         state[victim] = Sess::Evicted;
                                         affinity.remove(&victim);
                                     }
@@ -207,15 +269,42 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
                             let s: usize = k.parse().unwrap();
                             let blob = stores[src].take(k).unwrap();
                             let bytes = blob.len();
+                            let seq = events.len() as u64;
+                            events.push(trace_ev(
+                                seq,
+                                tick,
+                                src,
+                                TraceKind::MigrateExport,
+                                k,
+                                bytes as u64,
+                            ));
                             if stores[dst].would_fit(bytes) {
                                 let evicted = stores[dst]
                                     .insert(k, blob, bytes, false, tick)
                                     .map_err(|_| "would_fit lied".to_string())?;
-                                for (k, _) in evicted {
-                                    let victim: usize = k.parse().unwrap();
+                                for (vk, _) in evicted {
+                                    let victim: usize = vk.parse().unwrap();
+                                    let seq = events.len() as u64;
+                                    events.push(trace_ev(
+                                        seq,
+                                        tick,
+                                        dst,
+                                        TraceKind::Retire,
+                                        &vk,
+                                        0,
+                                    ));
                                     state[victim] = Sess::Evicted;
                                     affinity.remove(&victim);
                                 }
+                                let seq = events.len() as u64;
+                                events.push(trace_ev(
+                                    seq,
+                                    tick,
+                                    dst,
+                                    TraceKind::MigrateImport,
+                                    k,
+                                    bytes as u64,
+                                ));
                                 affinity.insert(s, dst);
                                 migrations += 1;
                             } else {
@@ -224,6 +313,17 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
                                 stores[src]
                                     .insert(k, blob, bytes, false, tick)
                                     .map_err(|_| "re-import at source failed".to_string())?;
+                                // The rollback is a re-import at the
+                                // source, exactly as the router does it.
+                                let seq = events.len() as u64;
+                                events.push(trace_ev(
+                                    seq,
+                                    tick,
+                                    src,
+                                    TraceKind::MigrateImport,
+                                    k,
+                                    bytes as u64,
+                                ));
                             }
                         }
                     }
@@ -238,6 +338,8 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
                                 "cancel found no blob on the home replica"
                             );
                         }
+                        let seq = events.len() as u64;
+                        events.push(trace_ev(seq, tick, home, TraceKind::Cancel, &key(s), 0));
                         state[s] = Sess::Cancelled;
                         affinity.remove(&s);
                     }
@@ -278,6 +380,17 @@ fn affinity_state_machine_never_loses_or_duplicates_sessions() {
             }
         }
         let _ = migrations;
+        // Oracle: the mirrored trace stream must replay with zero
+        // custody violations — one home per session at every point,
+        // every export matched by exactly one import with the same
+        // bytes, every resume balancing its park.
+        let audit = TraceAudit::replay(&events);
+        prop_assert!(
+            audit.ok(),
+            "trace audit rejected the router run: {:?}",
+            audit.violations()
+        );
+        prop_assert!(audit.events_seen() == events.len() as u64);
         Ok(())
     });
 }

@@ -1,0 +1,322 @@
+//! Property-based tests for the structured trace subsystem (Design 10):
+//! the bounded drop-oldest [`TraceRing`], the `trace`-op query filters,
+//! and the [`TraceAudit`] custody replayer.
+//!
+//! Four invariants are checked:
+//!
+//! 1. **The ring never reorders or duplicates** — seqs are issued
+//!    densely, the retained window is a contiguous suffix ending at the
+//!    newest event, and `dropped_events` counts exactly the evicted
+//!    prefix (drop-oldest keeps the newest `cap` events, always).
+//! 2. **Queries filter soundly** — `collect` returns exactly the model
+//!    filter (window ∩ since-seq ∩ session ∩ kind, truncated to `max`)
+//!    applied to everything ever recorded, oldest first.
+//! 3. **Legal lifecycles audit clean** — every random legal
+//!    interleaving of enqueue/admit/park/resume/migrate/retire across
+//!    replicas and sessions — even shuffled before replay, to prove
+//!    [`sort_for_replay`] restores causal order — produces zero custody
+//!    violations.
+//! 4. **Single-edge mutations are rejected** — deleting one migration
+//!    import (lost session), flipping one homed event's replica
+//!    (double home), corrupting one import's bytes, or injecting an
+//!    import with no export each make the audit fail.
+
+use std::sync::Arc;
+
+use wgkv::prop_assert;
+use wgkv::trace::{sort_for_replay, TraceAudit, TraceEvent, TraceKind, TraceQuery, TraceRing};
+use wgkv::util::prop::forall;
+use wgkv::util::rng::Rng;
+
+fn ev(seq: u64, at: u64, replica: u32, kind: TraceKind, sess: &str, bytes: u64) -> TraceEvent {
+    TraceEvent { seq, at_us: at, replica, kind, session: Arc::from(sess), bytes, latency_us: 0 }
+}
+
+#[test]
+fn ring_is_monotone_contiguous_and_drop_exact() {
+    forall(0xA01, |rng| {
+        let cap = rng.usize(1, 64);
+        let mut ring = TraceRing::new(cap);
+        ring.set_replica(rng.usize(0, 4) as u32);
+        let total = rng.usize(0, 300);
+        let mut at = 0u64;
+        for i in 0..total {
+            at += rng.usize(0, 3) as u64;
+            let kind = *rng.choose(&TraceKind::ALL);
+            let sess = format!("s{}", rng.usize(0, 6));
+            // Stash the issue index in the bytes payload so any
+            // duplication or corruption is visible below.
+            let seq = ring.record_at(at, kind, &sess, i as u64, 0);
+            prop_assert!(seq == i as u64, "seq issued sparsely: {seq} for event {i}");
+        }
+        prop_assert!(ring.total_events() == total as u64);
+        prop_assert!(ring.len() == total.min(cap), "ring holds {} of cap {cap}", ring.len());
+        prop_assert!(
+            ring.dropped_events() == total.saturating_sub(cap) as u64,
+            "dropped {} but evicted prefix is {}",
+            ring.dropped_events(),
+            total.saturating_sub(cap)
+        );
+        let q = TraceQuery { since_seq: 0, session: None, kind: None, max: total + 1 };
+        let events = ring.collect(&q);
+        prop_assert!(events.len() == total.min(cap));
+        for w in events.windows(2) {
+            prop_assert!(
+                w[1].seq == w[0].seq + 1,
+                "ring reordered or duplicated: {} then {}",
+                w[0].seq,
+                w[1].seq
+            );
+            prop_assert!(w[1].at_us >= w[0].at_us, "timestamps ran backwards");
+        }
+        if total > 0 {
+            prop_assert!(
+                events.last().unwrap().seq == total as u64 - 1,
+                "drop-oldest lost the newest event"
+            );
+            prop_assert!(
+                events[0].seq == total.saturating_sub(cap) as u64,
+                "retained window must start right after the dropped prefix"
+            );
+        }
+        for e in &events {
+            prop_assert!(e.bytes == e.seq, "payload corrupted for seq {}", e.seq);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ring_queries_filter_soundly() {
+    forall(0xA02, |rng| {
+        let cap = rng.usize(4, 128);
+        let mut ring = TraceRing::new(cap);
+        let sessions = ["", "a", "b", "c"];
+        // Shadow model of everything ever recorded: (seq, kind, session).
+        let mut shadow: Vec<(u64, TraceKind, String)> = Vec::new();
+        let n = rng.usize(0, 200);
+        for _ in 0..n {
+            let kind = *rng.choose(&TraceKind::ALL);
+            let sess = *rng.choose(&sessions);
+            let seq = ring.record(kind, sess, 0, 0);
+            shadow.push((seq, kind, sess.to_string()));
+        }
+        let q = TraceQuery {
+            since_seq: rng.usize(0, n + 2) as u64,
+            session: if rng.bool(0.5) {
+                Some((*rng.choose(&sessions)).to_string())
+            } else {
+                None
+            },
+            kind: if rng.bool(0.5) { Some(*rng.choose(&TraceKind::ALL)) } else { None },
+            max: rng.usize(1, 64),
+        };
+        let got: Vec<u64> = ring.collect(&q).iter().map(|e| e.seq).collect();
+        let window_start = n.saturating_sub(cap) as u64;
+        let expect: Vec<u64> = shadow
+            .iter()
+            .filter(|(s, _, _)| *s >= window_start && *s >= q.since_seq)
+            .filter(|(_, k, _)| q.kind.map_or(true, |qk| qk == *k))
+            .filter(|(_, _, ss)| q.session.as_deref().map_or(true, |qs| qs == ss))
+            .map(|(s, _, _)| *s)
+            .take(q.max)
+            .collect();
+        prop_assert!(got == expect, "query {q:?}: got {got:?}, model says {expect:?}");
+        Ok(())
+    });
+}
+
+/// Where a session sits in the generator's custody model.
+#[derive(Debug, Clone)]
+enum Model {
+    /// Not yet born, or its last incarnation retired/cancelled.
+    Ended,
+    /// Owned by one replica; `parked` is the pending park blob size.
+    Homed { home: u32, parked: Option<u64> },
+    /// Exported with `bytes`, import pending.
+    InFlight { from: u32, bytes: u64, parked: Option<u64> },
+}
+
+/// Generate one random *legal* lifecycle interleaving: every event is
+/// emitted on the session's current home, ownership moves only through
+/// export→import pairs, and every resume after a park carries the
+/// parked byte size. Returns the stream plus the mutation surfaces the
+/// rejection test attacks: indices of imports and of non-birth homed
+/// events.
+fn legal_stream(rng: &mut Rng) -> (Vec<TraceEvent>, Vec<usize>, Vec<usize>) {
+    let n_replicas = rng.usize(1, 4) as u32;
+    let n_sessions = rng.usize(1, 6);
+    let mut state: Vec<Model> = vec![Model::Ended; n_sessions];
+    let mut events: Vec<TraceEvent> = Vec::new();
+    let mut imports: Vec<usize> = Vec::new();
+    let mut homed_events: Vec<usize> = Vec::new();
+    let mut seq = 0u64;
+    let mut at = 0u64;
+    for _ in 0..rng.usize(10, 150) {
+        at += 1;
+        let s = rng.usize(0, n_sessions);
+        let key = format!("sess-{s}");
+        match state[s].clone() {
+            Model::Ended => {
+                let home = rng.usize(0, n_replicas as usize) as u32;
+                events.push(ev(seq, at, home, TraceKind::Enqueue, &key, 0));
+                seq += 1;
+                events.push(ev(seq, at, home, TraceKind::Admit, &key, 0));
+                seq += 1;
+                state[s] = Model::Homed { home, parked: None };
+            }
+            Model::Homed { home, parked } => match rng.usize(0, 6) {
+                0 => {
+                    let k = *rng.choose(&[
+                        TraceKind::Prefill,
+                        TraceKind::DecodeJoin,
+                        TraceKind::DecodeLeave,
+                        TraceKind::Idle,
+                        TraceKind::SpillDemote,
+                        TraceKind::SpillCommit,
+                        TraceKind::Promote,
+                    ]);
+                    homed_events.push(events.len());
+                    events.push(ev(seq, at, home, k, &key, 0));
+                    seq += 1;
+                }
+                1 => {
+                    let b = rng.usize(1, 1000) as u64;
+                    homed_events.push(events.len());
+                    events.push(ev(seq, at, home, TraceKind::Park, &key, b));
+                    seq += 1;
+                    state[s] = Model::Homed { home, parked: Some(b) };
+                }
+                2 => {
+                    // Balances the pending park; an idle-tier resume
+                    // (no park pending) owes nothing.
+                    let b = parked.unwrap_or(0);
+                    homed_events.push(events.len());
+                    events.push(ev(seq, at, home, TraceKind::Resume, &key, b));
+                    seq += 1;
+                    state[s] = Model::Homed { home, parked: None };
+                }
+                3 => {
+                    let b = rng.usize(1, 1000) as u64;
+                    homed_events.push(events.len());
+                    events.push(ev(seq, at, home, TraceKind::MigrateExport, &key, b));
+                    seq += 1;
+                    state[s] = Model::InFlight { from: home, bytes: b, parked };
+                }
+                _ => {
+                    let k = if rng.bool(0.5) { TraceKind::Retire } else { TraceKind::Cancel };
+                    homed_events.push(events.len());
+                    events.push(ev(seq, at, home, k, &key, 0));
+                    seq += 1;
+                    state[s] = Model::Ended;
+                }
+            },
+            Model::InFlight { from, bytes, parked } => {
+                // Import at a random destination — or back at the
+                // source, the failure-path rollback.
+                let dst = if rng.bool(0.2) {
+                    from
+                } else {
+                    rng.usize(0, n_replicas as usize) as u32
+                };
+                imports.push(events.len());
+                events.push(ev(seq, at, dst, TraceKind::MigrateImport, &key, bytes));
+                seq += 1;
+                state[s] = Model::Homed { home: dst, parked };
+            }
+        }
+        // Replica-scoped load shedding carries no session and no custody.
+        if rng.bool(0.1) {
+            let r = rng.usize(0, n_replicas as usize) as u32;
+            events.push(ev(seq, at, r, TraceKind::Shed, "", rng.usize(0, 5) as u64));
+            seq += 1;
+        }
+    }
+    // Resolve any export still in flight so the stream is legal end to
+    // end (finish() flags unresolved exports by design).
+    for (s, st) in state.iter().enumerate() {
+        if let Model::InFlight { from, bytes, .. } = st {
+            at += 1;
+            imports.push(events.len());
+            events.push(ev(seq, at, *from, TraceKind::MigrateImport, &format!("sess-{s}"), *bytes));
+            seq += 1;
+        }
+    }
+    (events, imports, homed_events)
+}
+
+#[test]
+fn audit_accepts_legal_lifecycle_interleavings() {
+    forall(0xA03, |rng| {
+        let (events, _, _) = legal_stream(rng);
+        // Shuffle before replay: the audit must reconstruct causal
+        // order from (at_us, rank, replica, seq) alone.
+        let mut shuffled = events.clone();
+        rng.shuffle(&mut shuffled);
+        let audit = TraceAudit::replay(&shuffled);
+        prop_assert!(
+            audit.ok(),
+            "legal interleaving rejected: {:?} (stream of {} events)",
+            audit.violations(),
+            events.len()
+        );
+        prop_assert!(audit.events_seen() == events.len() as u64);
+        // Sorting an already-sorted stream is the identity.
+        let mut sorted = events.clone();
+        sort_for_replay(&mut sorted);
+        sort_for_replay(&mut shuffled);
+        prop_assert!(shuffled == sorted, "replay order is not canonical");
+        Ok(())
+    });
+}
+
+#[test]
+fn audit_rejects_single_edge_mutations() {
+    forall(0xA04, |rng| {
+        let (events, imports, homed) = legal_stream(rng);
+        let mut mutated = events.clone();
+        // Pick one applicable single-edge mutation.
+        let mut choices: Vec<u8> = vec![3]; // injecting an orphan import always applies
+        if !imports.is_empty() {
+            choices.push(0); // lost session: delete an import
+            choices.push(1); // bytes corruption on an import
+        }
+        if !homed.is_empty() {
+            choices.push(2); // double home: flip a homed event's replica
+        }
+        let what = *rng.choose(&choices);
+        let desc = match what {
+            0 => {
+                let i = *rng.choose(&imports);
+                mutated.remove(i);
+                "deleted import (session lost in flight)"
+            }
+            1 => {
+                let i = *rng.choose(&imports);
+                mutated[i].bytes += 1;
+                "import bytes corrupted"
+            }
+            2 => {
+                let i = *rng.choose(&homed);
+                mutated[i].replica += 1;
+                "homed event flipped to a foreign replica (double home)"
+            }
+            _ => {
+                let at = mutated.last().map_or(1, |e| e.at_us + 1);
+                let seq = mutated.len() as u64;
+                mutated.push(ev(seq, at, 0, TraceKind::MigrateImport, "orphan", 7));
+                "import with no matching export"
+            }
+        };
+        let audit = TraceAudit::replay(&mutated);
+        prop_assert!(
+            !audit.ok(),
+            "mutation accepted: {desc} ({} events, {} imports, {} homed)",
+            events.len(),
+            imports.len(),
+            homed.len()
+        );
+        prop_assert!(!audit.violations().is_empty());
+        Ok(())
+    });
+}
